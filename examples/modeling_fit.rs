@@ -1,0 +1,77 @@
+//! Modeling walkthrough: collect measurements with the serving engine,
+//! fit the Alg. 1 analytic model, and use it to *explain* a speedup —
+//! decomposing the Eq. 4 terms the way §3.3 promises ("transparent and
+//! explainable").
+//!
+//! Run: `cargo run --release --example modeling_fit`
+
+use moesd::arch::presets;
+use moesd::experiments::{run_pair, RunOpts};
+use moesd::fit::fit_perfmodel;
+use moesd::hardware::platform_2x_gpu_a;
+use moesd::perfmodel::{Measurement, ParamBounds, PerfModel, PerfParams};
+use moesd::theory;
+
+fn main() -> anyhow::Result<()> {
+    let target = presets::qwen2_57b_a14b();
+    let draft = presets::qwen2_0_5b();
+    let platform = platform_2x_gpu_a();
+    let opts = RunOpts::default();
+    let alpha = 0.9;
+
+    // 1. Collect 24 measurements across (γ, B) like the paper's profiling.
+    println!("collecting measurements from the serving engine...");
+    let mut measurements = Vec::new();
+    for &gamma in &[2usize, 4] {
+        for &b in &[1usize, 2, 4, 8, 16, 24, 32, 40, 48, 56, 80, 100] {
+            let s = run_pair(&target, &draft, &platform, alpha, gamma, b, &opts)?;
+            measurements.push(Measurement {
+                batch: b,
+                gamma,
+                k: 8,
+                e: 64,
+                sigma: s.sigma,
+                speedup: s.speedup,
+            });
+        }
+    }
+
+    // 2. Fit the 10 relaxation parameters (Alg. 1 line 13).
+    let model = PerfModel::new(&platform);
+    let bounds = ParamBounds::for_setup(&target, &draft, &platform, 1e-3);
+    let t0 = std::time::Instant::now();
+    let (params, mse) = fit_perfmodel(&model, &measurements, &bounds, 42);
+    println!(
+        "fit {} measurements in {:.3}s — MSE {:.4} (paper: ~0.1s, MSE ~1.5)\n",
+        measurements.len(),
+        t0.elapsed().as_secs_f64(),
+        mse
+    );
+    for (name, v) in PerfParams::names().iter().zip(params.to_vec()) {
+        println!("  {name:12} = {v:.6e}");
+    }
+
+    // 3. Explain one operating point with the fitted model.
+    let (b, gamma) = (24usize, 4usize);
+    let t1 = model.t_target(&params, b, 1, 8, 64);
+    let tg = model.t_target(&params, b, gamma + 1, 8, 64);
+    let td = model.t_draft(&params, b);
+    let tr = model.t_reject(&params, b, gamma);
+    let sigma = theory::sigma_from_alpha(alpha, gamma);
+    let terms = theory::speedup_decomposition(t1, tg, td, tr, sigma, gamma);
+    println!("\ndecomposition at B={b}, γ={gamma} (Eq. 4):");
+    println!("  T_T(B,1)      = {:.2} ms", t1 * 1e3);
+    println!("  T_T(B,γ+1)    = {:.2} ms  → target efficiency {:.3}", tg * 1e3, t1 / tg);
+    println!("  γ·T_D/T_T     = {:.3}", terms.draft_term);
+    println!("  T_verify/T_T  = {:.3}", terms.verify_term);
+    println!("  T_rej/T_T     = {:.4}", terms.reject_term);
+    println!("  S/R = σ(γ+1)  = {:.3}", terms.round_len);
+    println!("  ⇒ modeled speedup {:.2}x", terms.speedup());
+    let measured = measurements
+        .iter()
+        .find(|m| m.batch == b && m.gamma == gamma)
+        .unwrap()
+        .speedup;
+    println!("  measured        {measured:.2}x");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Sparsity sweep: how MoE sparsity ρ = K/E shifts the SD sweet spot —
+//! the paper's §4.2 experiment as a library-API walkthrough.
+//!
+//! Run: `cargo run --release --example sparsity_sweep`
+
+use moesd::arch::presets;
+use moesd::experiments::{paper_batch_grid, peak_speedup, run_pair, RunOpts};
+use moesd::hardware::platform_2x_gpu_a;
+use moesd::theory;
+use moesd::util::table::{f2, MdTable};
+
+fn main() -> anyhow::Result<()> {
+    let base = presets::qwen2_57b_a14b();
+    let draft = presets::qwen2_0_5b();
+    let platform = platform_2x_gpu_a();
+    let opts = RunOpts::default();
+    let gamma = 4;
+    let alpha = 0.88;
+
+    let mut table = MdTable::new(&[
+        "K", "ρ", "T_thres(τ=.95)", "peak x", "peak B", "x/√2 width",
+    ]);
+    for k in [1usize, 2, 4, 8, 16, 32] {
+        let target = base.with_topk(k);
+        let rho = target.rho();
+        let stats: Vec<_> = paper_batch_grid()
+            .into_iter()
+            .map(|b| run_pair(&target, &draft, &platform, alpha, gamma, b, &opts))
+            .collect::<anyhow::Result<_>>()?;
+        let peak = peak_speedup(&stats);
+        let width = stats
+            .iter()
+            .filter(|s| s.speedup >= peak.speedup / std::f64::consts::SQRT_2)
+            .count();
+        table.push(vec![
+            k.to_string(),
+            format!("{rho:.3}"),
+            theory::token_threshold(rho, 0.95).to_string(),
+            f2(peak.speedup),
+            peak.batch.to_string(),
+            width.to_string(),
+        ]);
+    }
+    println!("SD speedup vs sparsity (Qwen2-57B variants, 2×GPU-A, γ={gamma}, α={alpha}):\n");
+    println!("{}", table.render());
+    println!("Sparser MoEs (small ρ) need more tokens to saturate experts");
+    println!("(T_thres ↑) but then stay memory-bound longer: the peak batch");
+    println!("moves right and the useful range (x/√2 width) widens — §4.2.");
+    Ok(())
+}

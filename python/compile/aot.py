@@ -1,0 +1,164 @@
+"""AOT export: lower the L2 models to HLO text + pack weights for Rust.
+
+Interchange contract with `rust/src/runtime/`:
+
+- **HLO text** (not serialized protos — xla_extension 0.5.1 rejects jax≥0.5
+  64-bit instruction ids; the text parser reassigns ids). One file per
+  (model, batch-bucket B, step-size S):  `{model}_b{B}_s{S}.hlo.txt`.
+  Signature: params... , tokens[B,S] i32, k[L,B,Smax,H,Dh] f32,
+  v[...] f32, lens[B] i32  →  tuple(logits[B,S,V], new_k, new_v).
+- **weights.bin**: magic `MOESDW01`, then per tensor: u32 name_len, name,
+  u32 ndim, u32 dims…, f32 raw data (little-endian), in `param_specs`
+  order, target model first then draft.
+- **manifest.json**: configs, bucket/step lists, artifact names, parameter
+  table, and a numerics test vector (tokens + expected logits slice) the
+  Rust integration test replays through PJRT.
+
+Step sizes: S ∈ {1..γ_max+1} covers AR decode (S=1) and SD verify
+(S=γ+1 ≤ 5); S=PREFILL covers padded prompt ingestion. The draft only
+proposes token-by-token (plus a ≤2-token backlog), so it gets S ∈ {1,2}.
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .train import load_params
+
+BUCKETS = [1, 2, 4, 8]
+TARGET_STEPS = [1, 2, 3, 4, 5]
+DRAFT_STEPS = [1, 2]
+PREFILL_S = 32
+GAMMA_MAX = 4
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(cfg, b, s):
+    """Lower one (B, S) forward variant to HLO text."""
+
+    def fn(params, tokens, k_cache, v_cache, lens):
+        return model.forward(params, cfg, tokens, k_cache, v_cache, lens, use_pallas=True)
+
+    kv_shape = (cfg["layers"], b, cfg["kv_max"], cfg["heads"], cfg["head_dim"])
+    specs = (
+        [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in model.param_specs(cfg)],
+        jax.ShapeDtypeStruct((b, s), jnp.int32),
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+    )
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def write_weights_bin(path, models):
+    """models: list of (prefix, cfg, params)."""
+    with open(path, "wb") as f:
+        f.write(b"MOESDW01")
+        total = sum(len(model.param_specs(cfg)) for _, cfg, _ in models)
+        f.write(struct.pack("<I", total))
+        for prefix, cfg, params in models:
+            for (name, shape), p in zip(model.param_specs(cfg), params):
+                arr = np.asarray(p, dtype=np.float32)
+                assert arr.shape == tuple(shape), (name, arr.shape, shape)
+                full = f"{prefix}.{name}".encode()
+                f.write(struct.pack("<I", len(full)))
+                f.write(full)
+                f.write(struct.pack("<I", arr.ndim))
+                for dim in arr.shape:
+                    f.write(struct.pack("<I", dim))
+                f.write(arr.astype("<f4").tobytes())
+
+
+def numerics_vector(cfg, params):
+    """A replayable test case: fixed tokens through the pallas path."""
+    b, s = 1, 2
+    tokens = jnp.asarray([[65, 66]], jnp.int32)
+    k0, v0 = model.empty_cache(cfg, b)
+    lens = jnp.zeros((b,), jnp.int32)
+    logits, _, _ = model.forward(params, cfg, tokens, k0, v0, lens, use_pallas=True)
+    return {
+        "tokens": [65, 66],
+        "logits_row0_first8": [float(x) for x in np.asarray(logits)[0, 0, :8]],
+        "logits_row1_first8": [float(x) for x in np.asarray(logits)[0, 1, :8]],
+        "argmax_row1": int(np.asarray(logits)[0, 1].argmax()),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    tcfg, dcfg = model.target_config(), model.draft_config()
+    target = load_params(os.path.join(args.out_dir, "target_weights.npz"), tcfg)
+    draft = load_params(os.path.join(args.out_dir, "draft_weights.npz"), dcfg)
+
+    artifacts = {}
+    jobs = []
+    for b in BUCKETS:
+        for s in TARGET_STEPS + [PREFILL_S]:
+            jobs.append(("target", tcfg, b, s))
+        for s in DRAFT_STEPS + [PREFILL_S]:
+            jobs.append(("draft", dcfg, b, s))
+    for name, cfg, b, s in jobs:
+        key = f"{name}_b{b}_s{s}"
+        fname = f"{key}.hlo.txt"
+        text = lower_variant(cfg, b, s)
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        artifacts[key] = fname
+        print(f"lowered {key}: {len(text)} chars", flush=True)
+
+    write_weights_bin(
+        os.path.join(args.out_dir, "weights.bin"),
+        [("target", tcfg, target), ("draft", dcfg, draft)],
+    )
+
+    def cfg_json(cfg):
+        return {k: v for k, v in cfg.items()}
+
+    def param_table(prefix, cfg):
+        return [
+            {"name": f"{prefix}.{name}", "shape": list(shape)}
+            for name, shape in model.param_specs(cfg)
+        ]
+
+    manifest = {
+        "format": 1,
+        "buckets": BUCKETS,
+        "target_steps": TARGET_STEPS,
+        "draft_steps": DRAFT_STEPS,
+        "prefill_s": PREFILL_S,
+        "gamma_max": GAMMA_MAX,
+        "target": cfg_json(tcfg),
+        "draft": cfg_json(dcfg),
+        "artifacts": artifacts,
+        "params": param_table("target", tcfg) + param_table("draft", dcfg),
+        "numerics": {
+            "target": numerics_vector(tcfg, target),
+            "draft": numerics_vector(dcfg, draft),
+        },
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(artifacts)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

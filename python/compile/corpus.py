@@ -1,0 +1,84 @@
+"""Synthetic training corpus for the tiny real model.
+
+The paper evaluates on code (HumanEval) and conversation (MT-Bench); the
+relevant property for speculative decoding is *predictability* — code-like
+text has structure a small draft model can learn. This corpus generates
+templated "service log" lines: highly regular (so the 2-layer dense draft
+reaches a useful acceptance rate against the 4-layer MoE target) but with
+enough variation that the models must actually learn.
+
+Byte-level tokens (ids = byte values); ids 0 (EOS) and 1 (BOS) are reserved
+and never appear in content (ASCII only). Must agree with
+rust/src/tokenizer/mod.rs.
+"""
+
+import numpy as np
+
+BOS = 1
+EOS = 0
+VOCAB = 256
+
+_METHODS = ["GET", "PUT", "POST", "HEAD"]
+_PATHS = ["/api/v1/users", "/api/v1/items", "/metrics", "/health", "/api/v2/orders"]
+_STATUS = ["200 OK", "201 CREATED", "404 NOT_FOUND", "500 ERROR"]
+_LEVELS = ["INFO", "WARN", "DEBUG"]
+
+
+def make_line(rng: np.random.Generator) -> str:
+    """One structured log line."""
+    kind = rng.integers(0, 3)
+    if kind == 0:
+        return "{} {} {} {} in {}ms".format(
+            _LEVELS[rng.integers(0, len(_LEVELS))],
+            _METHODS[rng.integers(0, len(_METHODS))],
+            _PATHS[rng.integers(0, len(_PATHS))],
+            _STATUS[rng.integers(0, len(_STATUS))],
+            rng.integers(1, 500),
+        )
+    if kind == 1:
+        return "INFO worker={} queue={} batch={} tokens={}".format(
+            rng.integers(0, 8),
+            rng.integers(0, 64),
+            rng.integers(1, 33),
+            rng.integers(1, 2048),
+        )
+    return "DEBUG expert[{}] load={} activated={} total={}".format(
+        rng.integers(0, 8),
+        rng.integers(0, 100),
+        rng.integers(1, 9),
+        rng.integers(1, 65),
+    )
+
+
+def make_corpus(n_lines: int, seed: int = 0) -> np.ndarray:
+    """Token stream: BOS line EOS BOS line EOS ..."""
+    rng = np.random.default_rng(seed)
+    toks = []
+    for _ in range(n_lines):
+        toks.append(BOS)
+        toks.extend(make_line(rng).encode("ascii"))
+        toks.append(EOS)
+    return np.array(toks, dtype=np.int32)
+
+
+def batches(corpus: np.ndarray, batch: int, seqlen: int, steps: int, seed: int = 0):
+    """Yield (inputs, targets) next-token training batches."""
+    rng = np.random.default_rng(seed + 1)
+    n = len(corpus) - seqlen - 1
+    for _ in range(steps):
+        starts = rng.integers(0, n, size=batch)
+        x = np.stack([corpus[s : s + seqlen] for s in starts])
+        y = np.stack([corpus[s + 1 : s + seqlen + 1] for s in starts])
+        yield x, y
+
+
+def sample_prompts(n: int, min_len: int = 8, seed: int = 123) -> list:
+    """Prompt prefixes for serving demos: the first `min_len`+ bytes of a
+    fresh line, BOS-prefixed (what rust's tokenizer::encode produces)."""
+    rng = np.random.default_rng(seed)
+    prompts = []
+    for _ in range(n):
+        line = make_line(rng).encode("ascii")
+        cut = max(min_len, len(line) // 2)
+        prompts.append([BOS] + list(line[:cut]))
+    return prompts

@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: decode attention over a padded KV cache.
+
+Grid iterates over (batch, head): each step loads one sequence's KV slab
+for one head into VMEM and computes all S query positions against it —
+the decode-side analogue of a flash-attention threadblock, re-expressed
+as a BlockSpec HBM→VMEM schedule. `interpret=True` (see moe_ffn.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref):
+    """Block shapes (one batch element b, one head h per grid step):
+    q_ref:   [S, Dh]
+    k_ref:   [Smax, Dh]
+    v_ref:   [Smax, Dh]
+    pos_ref: [S]      absolute positions of the queries
+    o_ref:   [S, Dh]
+    """
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    pos = pos_ref[...]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [S, Smax]
+    j = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    mask = j <= pos[:, None]
+    scores = jnp.where(mask, scores, -1e30)
+    # Numerically-stable softmax.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def decode_attention(q, k_cache, v_cache, q_pos):
+    """Pallas decode attention. Shapes as in ref.decode_attention_ref:
+    q [B,S,H,Dh], k_cache/v_cache [B,Smax,H,Dh], q_pos [B,S] (int32).
+    Returns [B,S,H,Dh].
+    """
+    b, s, h, dh = q.shape
+    smax = k_cache.shape[1]
+    assert k_cache.shape == (b, smax, h, dh)
+    assert v_cache.shape == (b, smax, h, dh)
+    assert q_pos.shape == (b, s)
+    grid = (b, h)
+    return pl.pallas_call(
+        _attn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, s, None, dh), lambda b_, h_: (b_, 0, h_, 0)),
+            pl.BlockSpec((None, smax, None, dh), lambda b_, h_: (b_, 0, h_, 0)),
+            pl.BlockSpec((None, smax, None, dh), lambda b_, h_: (b_, 0, h_, 0)),
+            pl.BlockSpec((None, s), lambda b_, h_: (b_, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, s, None, dh), lambda b_, h_: (b_, 0, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, dh), jnp.float32),
+        interpret=True,
+    )(q, k_cache, v_cache, q_pos)

@@ -1,0 +1,116 @@
+"""L1 Pallas kernel: the routed MoE FFN — the paper's compute hot spot.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's GPUs run
+the MoE FFN as a CUTLASS grouped GEMM where each threadblock keeps one
+expert's weight tile in SMEM. On TPU the scarce fast memory is VMEM, so the
+Pallas grid iterates over *experts* — each grid step holds exactly one
+expert's W1/W2 resident (the BlockSpec index maps select expert `e`) while
+the token block streams through the MXU. This expresses the paper's core
+quantity directly: per-parameter-load token work = T̄_exp (Eq. 10); when
+few tokens route to an expert the step is memory-bound, which is the entire
+§3.2 argument.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO for both pytest and the
+Rust runtime. Real-TPU tiling estimates are documented in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _moe_kernel(x_ref, w1_ref, w2_ref, rw_ref, o_ref):
+    """One grid step = one expert.
+
+    Block shapes (leading expert axis squeezed by the BlockSpec):
+      x_ref:  [T, D]  — all tokens (tiny model: whole batch fits in VMEM)
+      w1_ref: [D, F]  — this expert's up-projection
+      w2_ref: [F, D]  — this expert's down-projection
+      rw_ref: [T, 1]  — this expert's routing weight per token
+      o_ref:  [T, D]  — accumulated output
+    """
+    e = pl.program_id(0)
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    h = jnp.maximum(jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32), 0.0)
+    y = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    # Weighted combine; tokens not routed to this expert have weight 0, so
+    # their contribution vanishes (compute is wasted for them — exactly the
+    # "expert loaded but under-utilized" regime the paper analyzes).
+    o_ref[...] += rw_ref[...] * y
+
+
+@functools.partial(jax.jit, static_argnames=())
+def moe_ffn(x, w1, w2, route_w):
+    """Pallas routed MoE FFN. Shapes as in ref.moe_ffn_ref."""
+    t, d = x.shape
+    e, _, f = w1.shape
+    assert w2.shape == (e, f, d), (w2.shape, (e, f, d))
+    assert route_w.shape == (t, e)
+    grid = (e,)
+    return pl.pallas_call(
+        _moe_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, d), lambda e_: (0, 0)),  # x: full, every step
+            pl.BlockSpec((None, d, f), lambda e_: (e_, 0, 0)),  # w1[e]
+            pl.BlockSpec((None, f, d), lambda e_: (e_, 0, 0)),  # w2[e]
+            pl.BlockSpec((t, 1), lambda e_: (0, e_)),  # route_w[:, e]
+        ],
+        out_specs=pl.BlockSpec((t, d), lambda e_: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=True,
+    )(x, w1, w2, route_w)
+
+
+def _moe_kernel_blocked(x_ref, w1_ref, w2_ref, rw_ref, o_ref, *, tile_t):
+    """Token-tiled variant: grid (E, ceil(T/tile_t)). Each step computes one
+    (expert, token-tile) pair — the shape a real-TPU schedule would use to
+    bound VMEM by tile_t·D + D·F + F·D."""
+    e = pl.program_id(0)
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    h = jnp.maximum(jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32), 0.0)
+    y = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] += rw_ref[...] * y
+
+
+def moe_ffn_blocked(x, w1, w2, route_w, tile_t=8):
+    """Token-tiled Pallas MoE FFN (used by the kernel test sweep to check
+    the tiled schedule agrees with the monolithic one)."""
+    t, d = x.shape
+    e, _, f = w1.shape
+    tile_t = min(tile_t, t)
+    assert t % tile_t == 0, "token count must divide the tile for this variant"
+    grid = (e, t // tile_t)
+    kernel = functools.partial(_moe_kernel_blocked, tile_t=tile_t)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_t, d), lambda e_, i: (i, 0)),
+            pl.BlockSpec((None, d, f), lambda e_, i: (e_, 0, 0)),
+            pl.BlockSpec((None, f, d), lambda e_, i: (e_, 0, 0)),
+            pl.BlockSpec((tile_t, 1), lambda e_, i: (i, e_)),
+        ],
+        out_specs=pl.BlockSpec((tile_t, d), lambda e_, i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=True,
+    )(x, w1, w2, route_w)
+
+
+def vmem_bytes_per_step(t, d, f, dtype_bytes=4):
+    """Analytic VMEM footprint of one grid step of `moe_ffn` (DESIGN.md
+    §Perf): token block + one expert's W1/W2 + routing column + output."""
+    return dtype_bytes * (t * d + d * f + f * d + t + t * d)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+These are the L1 reference implementations: simple, obviously-correct jnp
+code. pytest/hypothesis sweeps assert the Pallas kernels match these to
+float tolerance; the training loop also uses them (interpret-mode Pallas
+would be needlessly slow under autodiff).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_ffn_ref(x, w1, w2, route_w):
+    """Routed MoE FFN, dense-einsum reference.
+
+    Args:
+      x:       [T, D]   token activations.
+      w1:      [E, D, F] expert up-projections.
+      w2:      [E, F, D] expert down-projections.
+      route_w: [T, E]   routing weights (0 for inactive experts; already
+               softmax-normalized over the top-K selection).
+
+    Returns: [T, D].
+    """
+    # h[e, t, f] = relu(x @ w1[e])
+    h = jnp.maximum(jnp.einsum("td,edf->etf", x, w1), 0.0)
+    # y[e, t, d] = h @ w2[e]
+    y = jnp.einsum("etf,efd->etd", h, w2)
+    # combine: sum_e route_w[t, e] * y[e, t, :]
+    return jnp.einsum("te,etd->td", route_w, y)
+
+
+def dense_ffn_ref(x, w1, w2):
+    """Plain dense FFN: relu(x @ w1) @ w2. x: [T, D], w1: [D, F], w2: [F, D]."""
+    return jnp.maximum(x @ w1, 0.0) @ w2
+
+
+def decode_attention_ref(q, k_cache, v_cache, q_pos):
+    """Decode attention over a padded KV cache.
+
+    Args:
+      q:       [B, S, H, Dh] new-token queries.
+      k_cache: [B, Smax, H, Dh] keys (garbage beyond each seq's length).
+      v_cache: [B, Smax, H, Dh] values.
+      q_pos:   [B, S] absolute position of each query token (the cache is
+               assumed to already hold the new tokens at those positions).
+
+    Causal rule: the query at absolute position p attends to cache
+    positions j <= p. Returns [B, S, H, Dh].
+    """
+    scale = (1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))).astype(q.dtype)
+    scores = jnp.einsum("bshd,bjhd->bhsj", q, k_cache) * scale
+    smax = k_cache.shape[1]
+    j = jnp.arange(smax)[None, None, :]  # [1, 1, Smax]
+    allowed = j <= q_pos[:, :, None]  # [B, S, Smax]
+    scores = jnp.where(allowed[:, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhsj,bjhd->bshd", probs, v_cache)

@@ -1,0 +1,286 @@
+"""L2: the JAX models — `MoesdNet` (tiny MoE target) and a dense draft.
+
+Dims must agree with `rust/src/arch/presets.rs::{moesd_tiny, moesd_tiny_draft}`:
+
+  target: hidden 128, layers 4, heads 4 (head_dim 32), vocab 256,
+          MoE FFN: E=8 experts, top-2, expert_inter 256, no shared expert.
+  draft:  hidden 128, layers 2, dense FFN inter 256.
+
+The forward function is *the* serving step: it consumes `S` new tokens per
+sequence against an explicit padded KV cache and returns logits for every
+new position plus the updated cache. Prefill, AR decode and SD verify are
+all the same function at different `S` — which is exactly what makes the
+T_T(B, s) accounting of the paper well-defined on the real system.
+
+Parameters are a flat *list* of arrays in a fixed documented order
+(`param_specs`), so the AOT artifacts and the Rust weight loader agree
+without pytree metadata. `use_pallas=True` routes the MoE FFN and
+attention through the L1 Pallas kernels (the export path); `False` uses
+the jnp references (the training path). Both are verified equal in tests.
+"""
+
+import math
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import attention as attn_k
+from .kernels import moe_ffn as moe_k
+from .kernels import ref
+
+# ---- configuration ---------------------------------------------------------
+
+VOCAB = 256
+HIDDEN = 128
+HEADS = 4
+HEAD_DIM = 32
+KV_MAX = 160  # padded KV length; prompts ≤ 32, generation ≤ 96
+
+TARGET_LAYERS = 4
+TARGET_EXPERTS = 8
+TARGET_TOPK = 2
+TARGET_INTER = 256
+
+DRAFT_LAYERS = 2
+DRAFT_INTER = 256
+
+ROPE_BASE = 10000.0
+
+
+def target_config():
+    return dict(
+        vocab=VOCAB,
+        hidden=HIDDEN,
+        heads=HEADS,
+        head_dim=HEAD_DIM,
+        layers=TARGET_LAYERS,
+        experts=TARGET_EXPERTS,
+        topk=TARGET_TOPK,
+        inter=TARGET_INTER,
+        kv_max=KV_MAX,
+        moe=True,
+    )
+
+
+def draft_config():
+    return dict(
+        vocab=VOCAB,
+        hidden=HIDDEN,
+        heads=HEADS,
+        head_dim=HEAD_DIM,
+        layers=DRAFT_LAYERS,
+        experts=0,
+        topk=0,
+        inter=DRAFT_INTER,
+        kv_max=KV_MAX,
+        moe=False,
+    )
+
+
+def param_specs(cfg) -> List[tuple]:
+    """(name, shape) list in the exact flat order used everywhere."""
+    d, h = cfg["hidden"], cfg["heads"] * cfg["head_dim"]
+    specs = [("embed", (cfg["vocab"], d))]
+    for i in range(cfg["layers"]):
+        specs += [
+            (f"l{i}.ln1", (d,)),
+            (f"l{i}.wq", (d, h)),
+            (f"l{i}.wk", (d, h)),
+            (f"l{i}.wv", (d, h)),
+            (f"l{i}.wo", (h, d)),
+            (f"l{i}.ln2", (d,)),
+        ]
+        if cfg["moe"]:
+            specs += [
+                (f"l{i}.gate", (d, cfg["experts"])),
+                (f"l{i}.w1", (cfg["experts"], d, cfg["inter"])),
+                (f"l{i}.w2", (cfg["experts"], cfg["inter"], d)),
+            ]
+        else:
+            specs += [
+                (f"l{i}.w1", (d, cfg["inter"])),
+                (f"l{i}.w2", (cfg["inter"], d)),
+            ]
+    specs.append(("ln_f", (d,)))
+    return specs
+
+
+def init_params(cfg, seed: int) -> List[jnp.ndarray]:
+    """He-style initialization in the flat param order."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        if name.endswith((".ln1", ".ln2")) or name == "ln_f":
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+            std = 1.0 / math.sqrt(fan_in)
+            params.append(
+                jnp.asarray(rng.normal(0.0, std, size=shape), jnp.float32)
+            )
+    return params
+
+
+# ---- building blocks --------------------------------------------------------
+
+
+def rms_norm(x, w):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * w
+
+
+def rope(x, pos):
+    """Rotary embedding. x: [B, S, H, Dh], pos: [B, S] absolute positions."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = ROPE_BASE ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = pos[:, :, None].astype(jnp.float32) * freqs[None, None, :]  # [B,S,half]
+    cos = jnp.cos(angles)[:, :, None, :]  # [B,S,1,half]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def top_k_route(gate_logits, topk):
+    """Routing weights [T, E]: softmax over the per-token top-K logits,
+    zero elsewhere. Differentiable w.r.t. the selected logits (standard
+    top-k gating).
+
+    Implemented as K iterative argmax passes rather than `jax.lax.top_k`:
+    jax ≥0.5 lowers top_k to the `topk(..., largest=true)` HLO op, which
+    the xla_extension 0.5.1 text parser used by the Rust runtime rejects.
+    argmax + one_hot lower to plain reduce/iota/select ops that round-trip
+    cleanly (same selection semantics; ties break toward the lower index
+    in both formulations).
+    """
+    _, e = gate_logits.shape
+    masked = gate_logits
+    onehots = []
+    for _ in range(topk):
+        idx = jnp.argmax(masked, axis=-1)  # [T]
+        oh = jax.nn.one_hot(idx, e, dtype=gate_logits.dtype)  # [T, E]
+        onehots.append(oh)
+        masked = jnp.where(oh > 0, -1e30, masked)
+    sel = jnp.stack(onehots, axis=1)  # [T, K, E]
+    vals = jnp.einsum("tke,te->tk", sel, gate_logits)  # [T, K]
+    w = jax.nn.softmax(vals, axis=-1)
+    return jnp.einsum("tk,tke->te", w, sel)
+
+
+# ---- the forward step --------------------------------------------------------
+
+
+def forward(params, cfg, tokens, k_cache, v_cache, lens, use_pallas):
+    """Process S new tokens per sequence.
+
+    Args:
+      params:  flat list per `param_specs(cfg)`.
+      tokens:  [B, S] int32 new tokens.
+      k_cache: [L, B, Smax, H, Dh] keys (updated copy returned).
+      v_cache: [L, B, Smax, H, Dh] values.
+      lens:    [B] int32 context lengths before these tokens.
+      use_pallas: route hot ops through the L1 kernels.
+
+    Returns (logits [B, S, V], new_k, new_v). New tokens are written at
+    positions lens..lens+S-1; positions ≥ lens+S keep stale data that the
+    causal mask makes unreadable.
+    """
+    b, s = tokens.shape
+    d = cfg["hidden"]
+    heads, dh = cfg["heads"], cfg["head_dim"]
+    it = iter(params)
+    nxt = lambda: next(it)
+
+    embed = nxt()
+    x = embed[tokens]  # [B, S, D]
+    pos = lens[:, None] + jnp.arange(s)[None, :]  # [B, S]
+
+    new_k, new_v = [], []
+    for li in range(cfg["layers"]):
+        ln1 = nxt()
+        wq, wk, wv, wo = nxt(), nxt(), nxt(), nxt()
+        ln2 = nxt()
+
+        h = rms_norm(x, ln1)
+        q = (h @ wq).reshape(b, s, heads, dh)
+        k = (h @ wk).reshape(b, s, heads, dh)
+        v = (h @ wv).reshape(b, s, heads, dh)
+        q = rope(q, pos)
+        k = rope(k, pos)
+
+        # Scatter new K/V into the cache at per-sequence offsets.
+        def scatter(cache, new):
+            def one(c, n, off):
+                return jax.lax.dynamic_update_slice(c, n, (off, 0, 0))
+
+            return jax.vmap(one)(cache, new, lens)
+
+        kc = scatter(k_cache[li], k)
+        vc = scatter(v_cache[li], v)
+        new_k.append(kc)
+        new_v.append(vc)
+
+        if use_pallas:
+            attn = attn_k.decode_attention(q, kc, vc, pos)
+        else:
+            attn = ref.decode_attention_ref(q, kc, vc, pos)
+        x = x + attn.reshape(b, s, heads * dh) @ wo
+
+        h2 = rms_norm(x, ln2)
+        flat = h2.reshape(b * s, d)
+        if cfg["moe"]:
+            gate, w1, w2 = nxt(), nxt(), nxt()
+            route = top_k_route(flat @ gate, cfg["topk"])
+            if use_pallas:
+                y = moe_k.moe_ffn(flat, w1, w2, route)
+            else:
+                y = ref.moe_ffn_ref(flat, w1, w2, route)
+        else:
+            w1, w2 = nxt(), nxt()
+            y = ref.dense_ffn_ref(flat, w1, w2)
+        x = x + y.reshape(b, s, d)
+
+    ln_f = nxt()
+    x = rms_norm(x, ln_f)
+    logits = x @ embed.T  # tied embeddings
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def empty_cache(cfg, batch):
+    shape = (cfg["layers"], batch, cfg["kv_max"], cfg["heads"], cfg["head_dim"])
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+# ---- training-side helpers ---------------------------------------------------
+
+
+def train_loss(params, cfg, x, y):
+    """Next-token cross-entropy over a [B, S] batch (no cache reuse —
+    training always starts at position 0)."""
+    b, s = x.shape
+    k0, v0 = empty_cache(cfg, b)
+    lens = jnp.zeros((b,), jnp.int32)
+    logits, _, _ = forward(params, cfg, x, k0, v0, lens, use_pallas=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, y[:, :, None], axis=-1)[..., 0]
+    return -jnp.mean(picked)
+
+
+def expert_activation_counts(params, cfg, tokens, lens, k_cache, v_cache):
+    """Instrumentation for Fig. 1-style measurements on the real model:
+    number of distinct experts activated in layer 0 for this batch."""
+    it = iter(params)
+    embed = next(it)
+    x = embed[tokens]
+    ln1 = next(it)
+    for _ in range(4):
+        next(it)  # wq wk wv wo
+    ln2 = next(it)
+    gate = next(it)
+    del k_cache, v_cache
+    h2 = rms_norm(x, ln2)  # layer-0 pre-FFN (attention skipped: gate stats only)
+    flat = h2.reshape(-1, cfg["hidden"])
+    route = top_k_route(flat @ gate, cfg["topk"])
+    return (route.sum(axis=0) > 0).sum()

@@ -1,0 +1,106 @@
+# pytest: AOT artifact contract — manifest consistency, weights.bin
+# binary format, and HLO text properties the Rust loader depends on.
+import json
+import struct
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ARTIFACTS = Path(__file__).resolve().parents[2] / "artifacts"
+
+needs_artifacts = pytest.mark.skipif(
+    not (ARTIFACTS / "manifest.json").exists(),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+def test_manifest_is_complete():
+    m = json.loads((ARTIFACTS / "manifest.json").read_text())
+    assert m["format"] == 1
+    assert m["buckets"] == aot.BUCKETS
+    # Every advertised artifact file exists and is parseable-looking HLO.
+    for key, fname in m["artifacts"].items():
+        path = ARTIFACTS / fname
+        assert path.exists(), f"missing {fname}"
+        head = path.read_text()[:200]
+        assert "HloModule" in head, f"{fname} does not look like HLO text"
+    # All (bucket, step) combinations are present.
+    for b in m["buckets"]:
+        for s in m["target_steps"] + [m["prefill_s"]]:
+            assert f"target_b{b}_s{s}" in m["artifacts"]
+        for s in m["draft_steps"] + [m["prefill_s"]]:
+            assert f"draft_b{b}_s{s}" in m["artifacts"]
+
+
+@needs_artifacts
+def test_weights_bin_roundtrip():
+    m = json.loads((ARTIFACTS / "manifest.json").read_text())
+    blob = (ARTIFACTS / "weights.bin").read_bytes()
+    assert blob[:8] == b"MOESDW01"
+    (count,) = struct.unpack_from("<I", blob, 8)
+    assert count == len(m["params"])
+    off = 12
+    for entry in m["params"]:
+        (nlen,) = struct.unpack_from("<I", blob, off)
+        off += 4
+        name = blob[off : off + nlen].decode()
+        off += nlen
+        assert name == entry["name"]
+        (ndim,) = struct.unpack_from("<I", blob, off)
+        off += 4
+        dims = struct.unpack_from(f"<{ndim}I", blob, off)
+        off += 4 * ndim
+        assert list(dims) == entry["shape"], name
+        n = int(np.prod(dims))
+        vals = np.frombuffer(blob, dtype="<f4", count=n, offset=off)
+        assert np.isfinite(vals).all(), f"{name} has non-finite weights"
+        off += 4 * n
+    assert off == len(blob), "trailing bytes in weights.bin"
+
+
+@needs_artifacts
+def test_numerics_vector_replays():
+    """The manifest's expected logits must match a fresh forward through
+    the pallas path with the saved weights — this is the same check the
+    Rust integration test performs through PJRT."""
+    from compile.train import load_params
+
+    m = json.loads((ARTIFACTS / "manifest.json").read_text())
+    cfg = model.target_config()
+    params = load_params(str(ARTIFACTS / "target_weights.npz"), cfg)
+    vec = m["numerics"]["target"]
+    got = aot.numerics_vector(cfg, params)
+    np.testing.assert_allclose(
+        got["logits_row1_first8"], vec["logits_row1_first8"], rtol=1e-5
+    )
+    assert got["argmax_row1"] == vec["argmax_row1"]
+
+
+@needs_artifacts
+def test_hlo_has_expected_parameter_count():
+    """Target HLO entry takes |params| + tokens + k + v + lens arguments."""
+    m = json.loads((ARTIFACTS / "manifest.json").read_text())
+    n_target_params = sum(1 for p in m["params"] if p["name"].startswith("target."))
+    text = (ARTIFACTS / m["artifacts"]["target_b1_s1"]).read_text()
+    # Parse the ENTRY computation body (up to its closing brace) and count
+    # distinct parameter indices.
+    entry = text[text.index("ENTRY") :]
+    body = entry[: entry.index("\n}")]
+    import re
+
+    indices = {int(i) for i in re.findall(r"parameter\((\d+)\)", body)}
+    assert len(indices) == n_target_params + 4, (len(indices), n_target_params)
+
+
+def test_lower_variant_smoke():
+    """Lowering works from a clean state (no artifacts needed)."""
+    text = aot.lower_variant(model.draft_config(), b=1, s=1)
+    assert "HloModule" in text
+    assert "mosaic" not in text.lower()

@@ -1,0 +1,62 @@
+//! Bench: ablations beyond the paper's main grid (§3.4 extended
+//! configurations + the limitation section): expert parallelism, routing
+//! imbalance, and the KV-dominant (MagicDec) regime.
+
+use moesd::benchlib::{banner, write_report, ShapeChecks};
+use moesd::experiments::ablations;
+use moesd::util::csv::CsvTable;
+
+fn main() {
+    banner("ablations", "§3.4 extended configs + §5 limitation");
+    let mut checks = ShapeChecks::new();
+
+    // --- EP scaling ---------------------------------------------------------
+    let ep = ablations::ep_scaling(&[2, 4, 8, 16], 4);
+    let mut csv = CsvTable::new(&["n_gpus", "teff_b1", "teff_b32"]);
+    println!("expert parallelism (γ=4):");
+    for (n, t1, t32) in &ep {
+        println!("  {n:>2} GPUs: teff(B=1) {t1:.3}  teff(B=32) {t32:.3}");
+        csv.push_nums(&[*n as f64, *t1, *t32]);
+    }
+    write_report("ablation_ep_scaling.csv", &csv.to_string()).unwrap();
+    checks.check(
+        "EP lifts small-batch target efficiency (the §3.4 'vanishing inefficiency')",
+        ep.last().unwrap().1 > ep.first().unwrap().1 + 0.02,
+    );
+
+    // --- routing imbalance ---------------------------------------------------
+    let imb = ablations::imbalance_activation(&[0.05, 0.5, 10.0], &[8, 32, 128], 7);
+    write_report("ablation_imbalance.csv", &imb.to_string()).unwrap();
+    let skew = imb.column_f64("n_skewed").unwrap();
+    let bal = imb.column_f64("n_balanced").unwrap();
+    println!("\nrouting imbalance (E=64, K=8): Dirichlet α → N(32) skewed vs Eq.8");
+    for row in &imb.rows {
+        println!("  α={:<5} t={:<4} balanced {:<6} skewed {}", row[0], row[1], row[2], row[3]);
+    }
+    // Heavy skew at t=32 is the second row of the α=0.05 block (index 1).
+    checks.check(
+        "heavy imbalance under-activates experts vs Eq. 8",
+        skew[1] < bal[1] - 4.0,
+    );
+    let n = skew.len();
+    checks.check(
+        "near-uniform router matches Eq. 8 (±10%)",
+        (skew[n - 2] - bal[n - 2]).abs() / bal[n - 2] < 0.1,
+    );
+
+    // --- KV-dominant regime ---------------------------------------------------
+    let kv = ablations::kv_dominant_regime(&[512, 2048, 8192, 32768, 131072], 256, 4);
+    let mut csv = CsvTable::new(&["ctx", "teff_b256"]);
+    println!("\nKV-dominant regime (B=256, γ=4):");
+    for (ctx, teff) in &kv {
+        println!("  ctx {ctx:>7}: teff {teff:.3}");
+        csv.push_nums(&[*ctx as f64, *teff]);
+    }
+    write_report("ablation_kv_dominant.csv", &csv.to_string()).unwrap();
+    checks.check(
+        "long context restores target efficiency at large batch (MagicDec handoff)",
+        kv.last().unwrap().1 > kv.first().unwrap().1 + 0.1,
+    );
+
+    checks.finish("ablations");
+}

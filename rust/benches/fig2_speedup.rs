@@ -1,0 +1,56 @@
+//! Bench: regenerate Fig. 2 — SD speedup (and target efficiency) vs batch
+//! size across platform/model panels, measured by the serving engine on
+//! the roofline-simulated virtual clock.
+
+use moesd::benchlib::{banner, write_report, ShapeChecks};
+use moesd::experiments::fig2::{check_shape, default_panels, panel_csv, sweep_panel};
+use moesd::experiments::peak_speedup;
+
+fn main() {
+    banner("fig2_speedup", "Fig. 2");
+    let mut checks = ShapeChecks::new();
+    let mut all_csv = String::new();
+    for (i, panel) in default_panels().iter().enumerate() {
+        let stats = sweep_panel(panel, 42 + i as u64).unwrap();
+        let csv = panel_csv(panel, &stats);
+        if i == 0 {
+            all_csv.push_str(&csv.to_string());
+        } else {
+            // Skip repeated header.
+            let s = csv.to_string();
+            all_csv.push_str(s.split_once('\n').unwrap().1);
+        }
+        let peak = peak_speedup(&stats);
+        println!(
+            "panel {} [{} on {} / {} T={} γ={}]: peak x={:.2} at B={} (teff {:.2})",
+            i,
+            panel.model,
+            panel.platform,
+            panel.dataset.name(),
+            panel.temp,
+            panel.gamma,
+            peak.speedup,
+            peak.batch,
+            peak.target_efficiency
+        );
+        for s in &stats {
+            println!(
+                "  B={:>3}  speedup={:.3}  target_eff={:.3}  σ={:.3}",
+                s.batch, s.speedup, s.target_efficiency, s.sigma
+            );
+        }
+        match check_shape(&stats) {
+            Ok(()) => checks.check(&format!("panel {i}: rise-then-fall + teff tracks"), true),
+            Err(e) => {
+                println!("  shape error: {e}");
+                checks.check(&format!("panel {i}: rise-then-fall + teff tracks"), false);
+            }
+        }
+        checks.check(
+            &format!("panel {i}: peak at moderate batch"),
+            peak.batch >= 4 && peak.batch <= 80,
+        );
+    }
+    write_report("fig2_speedup.csv", &all_csv).unwrap();
+    checks.finish("fig2_speedup");
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Fig. 3 — target efficiency comparison MoE vs dense.
+
+use moesd::benchlib::{banner, write_report, ShapeChecks};
+use moesd::experiments::fig3;
+
+fn main() {
+    banner("fig3_target_efficiency", "Fig. 3");
+    let out = fig3::run(3);
+    print!("{}", out.table.to_string());
+    write_report("fig3_target_efficiency.csv", &out.table.to_string()).unwrap();
+
+    let mut checks = ShapeChecks::new();
+    match fig3::check_shape(&out) {
+        Ok(()) => checks.check("MoE rises-then-falls; dense only falls; crossover", true),
+        Err(e) => {
+            println!("shape error: {e}");
+            checks.check("MoE rises-then-falls; dense only falls; crossover", false);
+        }
+    }
+    checks.finish("fig3_target_efficiency");
+}

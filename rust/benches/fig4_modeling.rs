@@ -1,0 +1,81 @@
+//! Bench: regenerate Fig. 4 — analytic model vs measurement across MoE
+//! sparsity K ∈ {1,2,4,8,16,32} and γ ∈ {2,4}, fit on the paper's m=21
+//! stride-11 subsample, plus the peak-shift / plateau-width claims.
+
+use moesd::benchlib::{banner, write_report, ShapeChecks};
+use moesd::experiments::fig4;
+use moesd::perfmodel::PerfParams;
+
+fn main() {
+    banner("fig4_modeling", "Fig. 4 (+ Alg. 1 fit)");
+    let t0 = std::time::Instant::now();
+    let out = fig4::run(0.88, 7).unwrap();
+    println!(
+        "fit on {} measurements: fit MSE {:.4}, full-grid MSE {:.4} ({} points) in {:.2}s",
+        out.fit_count,
+        out.fit_mse,
+        out.full_mse,
+        out.points.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    let names = PerfParams::names();
+    for (name, v) in names.iter().zip(out.params.to_vec()) {
+        println!("  {name:12} = {v:.6e}");
+    }
+    write_report("fig4_model_vs_measured.csv", &fig4::to_csv(&out).to_string()).unwrap();
+
+    let mut checks = ShapeChecks::new();
+    checks.check(
+        &format!("228-point grid (got {})", out.points.len()),
+        out.points.len() == 228,
+    );
+    checks.check(&format!("m=21 fit (got {})", out.fit_count), out.fit_count == 21);
+    checks.check(
+        &format!("model tracks measurement (full MSE {:.4})", out.full_mse),
+        out.full_mse < 0.15,
+    );
+
+    // §4.2 observations: for the FFN-dominated variants (K ≥ 4), sparser
+    // (smaller K) peaks at a larger batch and holds a wider x/√2 plateau;
+    // the artificially attention-dominated K=1 variant instead decays
+    // (the paper's Amdahl anomaly).
+    for gamma in fig4::GAMMAS {
+        let p8 = fig4::peak_batch(&out.points, 8, gamma);
+        let p4 = fig4::peak_batch(&out.points, 4, gamma);
+        println!("γ={gamma}: peak batch K=8 → {p8}, K=4 → {p4}");
+        checks.check(
+            &format!("γ={gamma}: sparser peaks later (K4 {p4} ≥ K8 {p8})"),
+            p4 >= p8,
+        );
+        let w8 = fig4::plateau_width(&out.points, 8, gamma);
+        let w4 = fig4::plateau_width(&out.points, 4, gamma);
+        println!("γ={gamma}: x/√2 plateau width K=8 → {w8}, K=4 → {w4}");
+        checks.check(
+            &format!("γ={gamma}: sparser plateau wider (K4 {w4} ≥ K8 {w8})"),
+            w4 >= w8,
+        );
+        // K=1 anomaly: the peak sits at a small batch (≤ 8) because the
+        // MoE FFN no longer dominates (Amdahl's law, §4.2).
+        let p1 = fig4::peak_batch(&out.points, 1, gamma);
+        checks.check(
+            &format!("γ={gamma}: K=1 anomaly — early peak at B={p1} ≤ 8"),
+            p1 <= 8,
+        );
+    }
+
+    // Per-(K, γ) correlation between modeled and measured series.
+    for &k in &fig4::K_VALUES {
+        for gamma in fig4::GAMMAS {
+            let series: Vec<&fig4::GridPoint> = out
+                .points
+                .iter()
+                .filter(|p| p.k == k && p.gamma == gamma)
+                .collect();
+            let measured: Vec<f64> = series.iter().map(|p| p.measured).collect();
+            let modeled: Vec<f64> = series.iter().map(|p| p.modeled).collect();
+            let r = moesd::util::stats::pearson(&measured, &modeled);
+            checks.check(&format!("K={k} γ={gamma}: model/measured r={r:.3} > 0.8"), r > 0.8);
+        }
+    }
+    checks.finish("fig4_modeling");
+}

@@ -1,0 +1,38 @@
+//! Bench: regenerate Fig. 5 — speedup trends across more settings with 5
+//! individual noisy runs + mean (incl. the tile-quantization sawtooth).
+
+use moesd::benchlib::{banner, write_report, ShapeChecks};
+use moesd::experiments::fig5;
+use moesd::workload::Dataset;
+
+fn main() {
+    banner("fig5_trends", "Fig. 5 / App. A.1");
+    let mut checks = ShapeChecks::new();
+    let settings = [
+        ("qwen2", "2xGPU-A", Dataset::HumanEval, 1.0, 4),
+        ("qwen2", "2xGPU-B", Dataset::MtBench, 0.0, 3),
+        ("mixtral", "2xGPU-A", Dataset::HumanEval, 0.0, 2),
+        ("mixtral", "2xGPU-A", Dataset::MtBench, 1.0, 3),
+    ];
+    for (i, (model, platform, ds, temp, gamma)) in settings.iter().enumerate() {
+        let out = fig5::run(model, platform, *ds, *temp, *gamma, 5).unwrap();
+        println!(
+            "panel {i} [{model} {platform} {} T={temp} γ={gamma}]: mean peak {:.2}, run σ {:.4}",
+            ds.name(),
+            out.mean_speedups
+                .iter()
+                .cloned()
+                .fold(f64::NEG_INFINITY, f64::max),
+            out.run_stddev
+        );
+        write_report(&format!("fig5_panel{i}.csv"), &out.table.to_string()).unwrap();
+        match fig5::check_shape(&out) {
+            Ok(()) => checks.check(&format!("panel {i}: shape + low run variance"), true),
+            Err(e) => {
+                println!("  shape error: {e}");
+                checks.check(&format!("panel {i}: shape + low run variance"), false);
+            }
+        }
+    }
+    checks.finish("fig5_trends");
+}

@@ -1,0 +1,57 @@
+//! Bench: regenerate Fig. 6 — end-to-end SD speedup, MoE vs dense, across
+//! dataset × temperature panels (App. A.2).
+
+use moesd::benchlib::{banner, write_report, ShapeChecks};
+use moesd::experiments::fig6;
+use moesd::workload::Dataset;
+
+fn main() {
+    banner("fig6_moe_vs_dense", "Fig. 6 / App. A.2");
+    let mut checks = ShapeChecks::new();
+    let mut panels = Vec::new();
+    for ds in [Dataset::HumanEval, Dataset::MtBench] {
+        for temp in [0.0, 1.0] {
+            panels.push((ds, temp));
+        }
+    }
+    let mut relative_gain_t0 = 0.0;
+    let mut relative_gain_t1 = 0.0;
+    for (i, (ds, temp)) in panels.iter().enumerate() {
+        let out = fig6::run(*ds, *temp, 3, 21 + i as u64).unwrap();
+        write_report(
+            &format!("fig6_{}_t{}.csv", ds.name(), *temp as u32),
+            &out.table.to_string(),
+        )
+        .unwrap();
+        let moe_peak = out.moe.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let dense_peak = out.dense.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        println!(
+            "panel [{} T={temp}]: MoE peak {moe_peak:.2} vs dense peak {dense_peak:.2}",
+            ds.name()
+        );
+        match fig6::check_shape(&out) {
+            Ok(()) => checks.check(
+                &format!("{} T={temp}: MoE rise/fall, dense decay, MoE wins B≥16", ds.name()),
+                true,
+            ),
+            Err(e) => {
+                println!("  shape error: {e}");
+                checks.check(&format!("{} T={temp}: shape", ds.name()), false);
+            }
+        }
+        // Track the relative MoE advantage per temperature (App. A.2's
+        // second observation).
+        let adv = moe_peak / dense_peak;
+        if *ds == Dataset::HumanEval {
+            if *temp == 0.0 {
+                relative_gain_t0 = adv;
+            } else {
+                relative_gain_t1 = adv;
+            }
+        }
+    }
+    println!(
+        "MoE/dense peak-speedup ratio (humaneval): T=0 {relative_gain_t0:.2}, T=1 {relative_gain_t1:.2}"
+    );
+    checks.finish("fig6_moe_vs_dense");
+}

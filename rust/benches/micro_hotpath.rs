@@ -1,0 +1,173 @@
+//! Micro-benchmarks of the L3 coordinator hot paths (the §Perf targets):
+//! KV-manager ops, rejection sampling, engine step overhead at B=32, and
+//! the perf-model fit time (paper: ~0.1 s for 21 points).
+
+use moesd::arch::presets;
+use moesd::batching::{Request, SamplingParams};
+use moesd::benchlib::{banner, summarize, time_reps, write_report};
+use moesd::engine::{Engine, EngineConfig};
+use moesd::hardware::platform_2x_gpu_a;
+use moesd::kvcache::{KvConfig, KvManager};
+use moesd::sampling::verify_chain;
+use moesd::scheduler::SchedulerConfig;
+use moesd::simulator::ExecSim;
+use moesd::spec::synthetic::SyntheticLm;
+use moesd::util::rng::Rng;
+
+fn main() {
+    banner("micro_hotpath", "§Perf L3 targets");
+    let mut lines = Vec::new();
+
+    // --- KV manager: allocate/append/truncate/release cycle ----------------
+    {
+        let mut kv = KvManager::new(KvConfig {
+            num_blocks: 4096,
+            block_size: 16,
+        });
+        let mut id = 0u64;
+        let secs = time_reps(
+            || {
+                kv.allocate(id, 64).unwrap();
+                kv.append(id, 5).unwrap();
+                kv.truncate(id, 66);
+                kv.release(id);
+                id += 1;
+            },
+            1000,
+            20_000,
+        );
+        lines.push(summarize("kv_alloc_append_truncate_release", &secs));
+    }
+
+    // --- rejection sampling: one γ=4 chain over vocab 64 --------------------
+    {
+        let mut rng = Rng::seeded(1);
+        let dist: Vec<f64> = (0..64).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let sum: f64 = dist.iter().sum();
+        let dist: Vec<f64> = dist.iter().map(|v| v / sum).collect();
+        let draft_probs = vec![dist.clone(); 4];
+        let target_probs = vec![dist.clone(); 5];
+        let tokens = [1u32, 2, 3, 4];
+        let secs = time_reps(
+            || {
+                let out = verify_chain(&tokens, &draft_probs, &target_probs, &mut rng);
+                std::hint::black_box(out);
+            },
+            1000,
+            50_000,
+        );
+        lines.push(summarize("verify_chain_gamma4_vocab64", &secs));
+    }
+
+    // --- engine step overhead at B=32 ---------------------------------------
+    // The §Perf criterion: coordinator overhead per step must be well
+    // under the simulated model time (tens of ms at this scale).
+    {
+        let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+        let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+        let backend = SyntheticLm::new(target, draft, 0.9, 3);
+        let mut engine = Engine::new(
+            EngineConfig {
+                gamma: 4,
+                kv: KvConfig {
+                    num_blocks: 1 << 14,
+                    block_size: 16,
+                },
+                scheduler: SchedulerConfig {
+                    max_batch: 32,
+                    admit_reserve_tokens: 1 << 12,
+                    tpot_slo: None,
+                },
+                ..Default::default()
+            },
+            backend,
+        );
+        for id in 0..32u64 {
+            engine.submit(Request {
+                id,
+                prompt: (0..16u32).collect(),
+                params: SamplingParams {
+                    temperature: 0.0,
+                    max_new_tokens: 1 << 20, // never finishes during bench
+                    eos_token: None,
+                },
+                arrival: 0.0,
+            });
+        }
+        engine.step().unwrap(); // prefill + first round
+        let secs = time_reps(
+            || {
+                engine.step().unwrap();
+            },
+            20,
+            300,
+        );
+        lines.push(summarize("engine_step_b32_gamma4 (wall)", &secs));
+        let sim_step = engine.metrics.decode_time() / engine.metrics.rounds as f64;
+        let wall_mean = moesd::util::stats::mean(&secs);
+        let ratio = wall_mean / sim_step;
+        lines.push(format!(
+            "  simulated model step = {:.3}ms; coordinator wall/step = {:.3}ms ({:.1}% of model time)",
+            sim_step * 1e3,
+            wall_mean * 1e3,
+            ratio * 100.0
+        ));
+        // §Perf target: < 5% of the simulated step at B=32.
+        assert!(
+            ratio < 0.05,
+            "L3 overhead {:.2}% exceeds the 5% §Perf budget",
+            ratio * 100.0
+        );
+    }
+
+    // --- perf-model fit time -------------------------------------------------
+    {
+        use moesd::fit::fit_perfmodel;
+        use moesd::perfmodel::*;
+        let model = PerfModel::with_ridge_point(150.0);
+        let truth = PerfParams {
+            bias: 0.02,
+            k1: 3e-5,
+            k2: 2.5e-4,
+            k3: 2e-4,
+            draft_bias: 0.0015,
+            draft_k: 1e-5,
+            reject_bias: 2e-4,
+            reject_k: 1e-7,
+            lambda: 0.55,
+            s: 1.03,
+        };
+        let ms: Vec<Measurement> = (0..21)
+            .map(|i| {
+                let mut m = Measurement {
+                    batch: 1 + 5 * i,
+                    gamma: 2 + (i % 2) * 2,
+                    k: [2, 4, 8][i % 3],
+                    e: 64,
+                    sigma: 0.88,
+                    speedup: 0.0,
+                };
+                m.speedup = model.compute_speedup(&truth, &m);
+                m
+            })
+            .collect();
+        let bounds = ParamBounds {
+            lo: [1e-3, 0.0, 1e-6, 0.0, 1e-5, 0.0, 0.0, 0.0, 0.2, 1.0 + 1e-9],
+            hi: [0.1, 1.0, 1e-2, 1.0, 0.01, 1.0, 1e-2, 1e-4, 1.0, 2.0],
+        };
+        let secs = time_reps(
+            || {
+                let (p, _) = fit_perfmodel(&model, &ms, &bounds, 3);
+                std::hint::black_box(p);
+            },
+            1,
+            5,
+        );
+        lines.push(summarize("perfmodel_fit_21_measurements", &secs));
+    }
+
+    let report = lines.join("\n");
+    println!("{report}");
+    write_report("micro_hotpath.txt", &report).unwrap();
+    println!("micro_hotpath: done");
+}

@@ -1,0 +1,41 @@
+//! Bench: regenerate Table 1 — peak SD speedup (x) with T_AR/T_SD/σ for
+//! Qwen2 + Mixtral across datasets, temperatures and γ on 2×GPU-A.
+
+use moesd::benchlib::{banner, write_report, ShapeChecks};
+use moesd::experiments::tables;
+
+fn main() {
+    banner("table1_peak_speedup", "Table 1");
+    let rows = tables::table1(42).unwrap();
+    let md = tables::render_markdown(&rows);
+    println!("{md}");
+    write_report("table1_peak_speedup.md", &md).unwrap();
+    write_report("table1_peak_speedup.csv", &tables::to_csv(&rows).to_string()).unwrap();
+
+    let mut checks = ShapeChecks::new();
+    match tables::check_table1(&rows) {
+        Ok(()) => checks.check("table-1 orderings (γ↑, code>chat, x>1, moderate B)", true),
+        Err(e) => {
+            println!("shape error: {e}");
+            checks.check("table-1 orderings", false);
+        }
+    }
+    // Paper headline: Qwen2 humaneval T=0 γ=4 peaks at 2.18x on 2×GPU-A —
+    // our simulated testbed should land in the same band.
+    let headline = rows
+        .iter()
+        .find(|r| {
+            r.model == "qwen2"
+                && r.dataset == moesd::workload::Dataset::HumanEval
+                && r.temp == 0.0
+        })
+        .unwrap()
+        .cells[2]
+        .speedup;
+    println!("headline (qwen2/humaneval/T0/γ4): {headline:.2}x (paper: 2.18x)");
+    checks.check(
+        &format!("headline in band 1.6–3.6 ({headline:.2})"),
+        headline > 1.6 && headline < 3.6,
+    );
+    checks.finish("table1_peak_speedup");
+}

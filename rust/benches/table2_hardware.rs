@@ -1,0 +1,46 @@
+//! Bench: regenerate Table 2 — peak SD speedup for Qwen2 across hardware
+//! platforms (2×GPU-B, 4×GPU-A, 4×GPU-C), plus the two §4.1 observations.
+
+use moesd::benchlib::{banner, write_report, ShapeChecks};
+use moesd::experiments::tables;
+use moesd::workload::Dataset;
+
+fn main() {
+    banner("table2_hardware", "Table 2");
+    let t1 = tables::table1(42).unwrap();
+    let rows = tables::table2(42).unwrap();
+    let md = tables::render_markdown(&rows);
+    println!("{md}");
+    write_report("table2_hardware.md", &md).unwrap();
+    write_report("table2_hardware.csv", &tables::to_csv(&rows).to_string()).unwrap();
+
+    let mut checks = ShapeChecks::new();
+    match tables::check_table2(&t1, &rows) {
+        Ok(()) => checks.check("obs (1): higher-RP GPU-B beats GPU-A", true),
+        Err(e) => {
+            println!("shape error: {e}");
+            checks.check("obs (1): higher-RP GPU-B beats GPU-A", false);
+        }
+    }
+    // Observation (2): 4×GPU-A reduces absolute times vs 2×GPU-A but the
+    // speedup slightly degrades (draft stays single-GPU).
+    let r2 = t1
+        .iter()
+        .find(|r| r.model == "qwen2" && r.dataset == Dataset::HumanEval && r.temp == 0.0)
+        .unwrap();
+    let r4 = rows
+        .iter()
+        .find(|r| r.device == "4xGPU-A" && r.dataset == Dataset::HumanEval && r.temp == 0.0)
+        .unwrap();
+    let (t2ar, x2) = (r2.cells[2].t_ar, r2.cells[2].speedup);
+    let (t4ar, x4) = (r4.cells[2].t_ar, r4.cells[2].speedup);
+    println!("2xGPU-A: T_AR {t2ar:.3} x {x2:.2} | 4xGPU-A: T_AR {t4ar:.3} x {x4:.2}");
+    checks.check("obs (2a): 4×GPU-A reduces absolute T_AR", t4ar < t2ar);
+    checks.check("obs (2b): 4×GPU-A speedup degrades slightly", x4 < x2);
+    // Every config still peaks above 1.0 on every platform.
+    checks.check(
+        "all configs have x > 1",
+        rows.iter().all(|r| r.cells.iter().all(|c| c.speedup > 1.0)),
+    );
+    checks.finish("table2_hardware");
+}

@@ -1,0 +1,347 @@
+//! Model architecture descriptions: dimensions, parameter counts, and
+//! per-operator FLOP / memory-traffic accounting for dense and MoE
+//! transformers. The roofline simulator and the analytic perf model both
+//! consume these (the paper's "target model architecture" axis).
+
+pub mod presets;
+
+/// Feed-forward block kind.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Ffn {
+    /// Standard dense (gated) FFN with the given intermediate size.
+    Dense { inter: usize },
+    /// Sparse MoE FFN: `experts` routed experts with `topk` activated per
+    /// token, each with intermediate size `expert_inter`, plus an optional
+    /// always-on shared expert (`shared_inter` = 0 to disable, as in
+    /// Mixtral).
+    Moe {
+        experts: usize,
+        topk: usize,
+        expert_inter: usize,
+        shared_inter: usize,
+    },
+}
+
+/// A transformer architecture, parameterized the way the paper's analysis
+/// needs: enough to count parameters, FLOPs and bytes for every operator
+/// on the decode path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelArch {
+    pub name: String,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    /// KV heads (grouped-query attention); equals `heads` for MHA.
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub ffn: Ffn,
+    /// Bytes per weight element (2.0 for bf16/f16 serving).
+    pub dtype_bytes: f64,
+    /// Whether input/output embeddings are tied.
+    pub tied_embeddings: bool,
+}
+
+impl ModelArch {
+    /// MoE sparsity ρ = K / E (ρ = 1 for dense models; §3.2).
+    pub fn rho(&self) -> f64 {
+        match &self.ffn {
+            Ffn::Dense { .. } => 1.0,
+            Ffn::Moe { experts, topk, .. } => *topk as f64 / *experts as f64,
+        }
+    }
+
+    pub fn is_moe(&self) -> bool {
+        matches!(self.ffn, Ffn::Moe { .. })
+    }
+
+    pub fn experts(&self) -> usize {
+        match &self.ffn {
+            Ffn::Dense { .. } => 1,
+            Ffn::Moe { experts, .. } => *experts,
+        }
+    }
+
+    pub fn topk(&self) -> usize {
+        match &self.ffn {
+            Ffn::Dense { .. } => 1,
+            Ffn::Moe { topk, .. } => *topk,
+        }
+    }
+
+    /// Clone with a different number of activated experts per token — the
+    /// paper's Fig. 4 experiment ("we modify num_experts_per_token in the
+    /// model's config.json").
+    pub fn with_topk(&self, new_topk: usize) -> ModelArch {
+        let mut arch = self.clone();
+        if let Ffn::Moe { experts, topk, .. } = &mut arch.ffn {
+            assert!(new_topk >= 1 && new_topk <= *experts, "topk out of range");
+            *topk = new_topk;
+            arch.name = format!("{}-k{}", self.name, new_topk);
+        } else {
+            panic!("with_topk on a dense model");
+        }
+        arch
+    }
+
+    // ---- parameter counts (elements, not bytes) ---------------------------
+
+    /// Q/K/V/O projections per layer (GQA-aware, no biases).
+    pub fn attn_params_per_layer(&self) -> usize {
+        let q = self.hidden * self.heads * self.head_dim;
+        let kv = 2 * self.hidden * self.kv_heads * self.head_dim;
+        let o = self.heads * self.head_dim * self.hidden;
+        q + kv + o
+    }
+
+    /// One routed expert (gated FFN: up + gate + down).
+    pub fn params_per_expert(&self) -> usize {
+        match &self.ffn {
+            Ffn::Dense { inter } => 3 * self.hidden * inter,
+            Ffn::Moe { expert_inter, .. } => 3 * self.hidden * expert_inter,
+        }
+    }
+
+    /// All FFN parameters in one layer (experts + shared + router gate).
+    pub fn ffn_params_per_layer(&self) -> usize {
+        match &self.ffn {
+            Ffn::Dense { inter } => 3 * self.hidden * inter,
+            Ffn::Moe {
+                experts,
+                expert_inter,
+                shared_inter,
+                ..
+            } => {
+                experts * 3 * self.hidden * expert_inter
+                    + 3 * self.hidden * shared_inter
+                    + self.hidden * experts // router
+            }
+        }
+    }
+
+    pub fn embed_params(&self) -> usize {
+        let factor = if self.tied_embeddings { 1 } else { 2 };
+        factor * self.vocab * self.hidden
+    }
+
+    /// Total parameters (attention + FFN + embeddings; norms are negligible
+    /// and omitted, as in the paper's accounting).
+    pub fn total_params(&self) -> usize {
+        self.layers * (self.attn_params_per_layer() + self.ffn_params_per_layer())
+            + self.embed_params()
+    }
+
+    /// Parameters touched by a single token (the "A14B" in Qwen2-57B-A14B):
+    /// attention + top-K experts + shared expert + router + embeddings.
+    pub fn active_params(&self) -> usize {
+        let ffn_active = match &self.ffn {
+            Ffn::Dense { inter } => 3 * self.hidden * inter,
+            Ffn::Moe {
+                topk,
+                expert_inter,
+                shared_inter,
+                experts,
+            } => topk * 3 * self.hidden * expert_inter
+                + 3 * self.hidden * shared_inter
+                + self.hidden * experts,
+        };
+        self.layers * (self.attn_params_per_layer() + ffn_active) + self.embed_params()
+    }
+
+    /// Non-FFN ("dense path") parameters: attention + embeddings + shared
+    /// expert + router. This is the `V_dense` used for the perf-model `bias`
+    /// bound (Appendix C.2).
+    pub fn dense_path_params(&self) -> usize {
+        let shared = match &self.ffn {
+            Ffn::Dense { .. } => 0,
+            Ffn::Moe {
+                shared_inter,
+                experts,
+                ..
+            } => 3 * self.hidden * shared_inter + self.hidden * experts,
+        };
+        self.layers * (self.attn_params_per_layer() + shared) + self.embed_params()
+    }
+
+    // ---- bytes -------------------------------------------------------------
+
+    pub fn bytes_per_expert(&self) -> f64 {
+        self.params_per_expert() as f64 * self.dtype_bytes
+    }
+
+    pub fn dense_path_bytes(&self) -> f64 {
+        self.dense_path_params() as f64 * self.dtype_bytes
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.total_params() as f64 * self.dtype_bytes
+    }
+
+    /// KV-cache bytes per token across all layers.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        (2 * self.layers * self.kv_heads * self.head_dim) as f64 * self.dtype_bytes
+    }
+
+    // ---- FLOPs -------------------------------------------------------------
+
+    /// Attention projection + score FLOPs for one token at context length
+    /// `ctx` (one layer): 2·params for the GEMMs plus 4·heads·head_dim·ctx
+    /// for QK^T and PV.
+    pub fn attn_flops_per_token(&self, ctx: usize) -> f64 {
+        let proj = 2.0 * self.attn_params_per_layer() as f64;
+        let scores = 4.0 * (self.heads * self.head_dim * ctx) as f64;
+        proj + scores
+    }
+
+    /// FFN FLOPs for one token in one layer (active path only).
+    pub fn ffn_flops_per_token(&self) -> f64 {
+        match &self.ffn {
+            Ffn::Dense { inter } => 2.0 * 3.0 * (self.hidden * inter) as f64,
+            Ffn::Moe {
+                topk,
+                expert_inter,
+                shared_inter,
+                experts,
+            } => {
+                2.0 * 3.0 * (*topk * self.hidden * expert_inter) as f64
+                    + 2.0 * 3.0 * (self.hidden * shared_inter) as f64
+                    + 2.0 * (self.hidden * experts) as f64
+            }
+        }
+    }
+
+    /// End-to-end FLOPs per generated token (all layers + LM head).
+    pub fn flops_per_token(&self, ctx: usize) -> f64 {
+        self.layers as f64 * (self.attn_flops_per_token(ctx) + self.ffn_flops_per_token())
+            + 2.0 * (self.vocab * self.hidden) as f64
+    }
+
+    /// Fraction of total parameters living in routed experts — governs how
+    /// strongly MoE memory-boundness shows up end-to-end (the Amdahl
+    /// argument for the K=1,2 anomaly in §4.2).
+    pub fn expert_param_fraction(&self) -> f64 {
+        match &self.ffn {
+            Ffn::Dense { .. } => 0.0,
+            Ffn::Moe { experts, .. } => {
+                let expert_total = self.layers * experts * self.params_per_expert();
+                expert_total as f64 / self.total_params() as f64
+            }
+        }
+    }
+
+    /// Sanity-check invariants; called by config loading.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.hidden > 0 && self.layers > 0 && self.vocab > 0);
+        anyhow::ensure!(self.heads > 0 && self.kv_heads > 0 && self.head_dim > 0);
+        anyhow::ensure!(
+            self.heads % self.kv_heads == 0,
+            "heads must be divisible by kv_heads"
+        );
+        if let Ffn::Moe { experts, topk, .. } = &self.ffn {
+            anyhow::ensure!(*topk >= 1 && topk <= experts, "invalid topk");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::presets;
+
+    #[test]
+    fn qwen2_moe_totals_are_plausible() {
+        let m = presets::qwen2_57b_a14b();
+        let total = m.total_params() as f64 / 1e9;
+        let active = m.active_params() as f64 / 1e9;
+        // Paper model: 57B total, 14B active. Our accounting (no norms,
+        // approximate shared-expert size) should land within ~10%.
+        assert!((total - 57.0).abs() < 6.0, "total={total}B");
+        assert!((active - 14.0).abs() < 2.0, "active={active}B");
+        assert!((m.rho() - 8.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixtral_totals() {
+        let m = presets::mixtral_8x7b();
+        let total = m.total_params() as f64 / 1e9;
+        let active = m.active_params() as f64 / 1e9;
+        assert!((total - 46.7).abs() < 3.0, "total={total}B");
+        assert!((active - 12.9).abs() < 2.0, "active={active}B");
+        assert_eq!(m.experts(), 8);
+        assert_eq!(m.topk(), 2);
+    }
+
+    #[test]
+    fn opt30b_dense_totals() {
+        let m = presets::opt_30b();
+        let total = m.total_params() as f64 / 1e9;
+        assert!((total - 30.0).abs() < 3.0, "total={total}B");
+        assert_eq!(m.rho(), 1.0);
+        assert!(!m.is_moe());
+        assert_eq!(m.expert_param_fraction(), 0.0);
+    }
+
+    #[test]
+    fn with_topk_rescales_sparsity() {
+        let m = presets::qwen2_57b_a14b();
+        let m2 = m.with_topk(2);
+        assert_eq!(m2.topk(), 2);
+        assert!((m2.rho() - 2.0 / 64.0).abs() < 1e-12);
+        // Total params unchanged; active params shrink.
+        assert_eq!(m.total_params(), m2.total_params());
+        assert!(m2.active_params() < m.active_params());
+    }
+
+    #[test]
+    #[should_panic(expected = "with_topk on a dense model")]
+    fn with_topk_rejects_dense() {
+        presets::opt_30b().with_topk(2);
+    }
+
+    #[test]
+    fn active_leq_total() {
+        for m in presets::all() {
+            assert!(
+                m.active_params() <= m.total_params(),
+                "{}: active > total",
+                m.name
+            );
+            m.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn flops_scale_with_context() {
+        let m = presets::qwen2_57b_a14b();
+        assert!(m.flops_per_token(4096) > m.flops_per_token(128));
+    }
+
+    #[test]
+    fn expert_fraction_dominates_for_sparse_moe() {
+        // The paper's §4.2 Amdahl argument: Qwen2-57B is expert-dominated.
+        let m = presets::qwen2_57b_a14b();
+        assert!(m.expert_param_fraction() > 0.7, "{}", m.expert_param_fraction());
+    }
+
+    #[test]
+    fn kv_bytes_positive_and_gqa_smaller() {
+        let qwen = presets::qwen2_57b_a14b(); // GQA, 4 kv heads
+        let mixtral = presets::mixtral_8x7b(); // GQA, 8 kv heads
+        assert!(qwen.kv_bytes_per_token() > 0.0);
+        assert!(mixtral.kv_bytes_per_token() > 0.0);
+    }
+
+    #[test]
+    fn tiny_model_matches_python_side() {
+        // These dims must agree with python/compile/model.py (AOT side).
+        let t = presets::moesd_tiny();
+        assert_eq!(t.hidden, 128);
+        assert_eq!(t.layers, 4);
+        assert_eq!(t.experts(), 8);
+        assert_eq!(t.topk(), 2);
+        assert_eq!(t.vocab, 256);
+        let d = presets::moesd_tiny_draft();
+        assert_eq!(d.layers, 2);
+        assert!(!d.is_moe());
+    }
+}

@@ -1,0 +1,260 @@
+//! Architecture presets for every model the paper evaluates or references,
+//! plus the tiny real model this repo serves end-to-end.
+//!
+//! Dimensions follow the models' published configs. Where the paper's text
+//! disagrees with a public config (e.g. it describes DeepSeek-V2-Lite as
+//! ρ = 6/62), we match the *paper*, since its figures are what we reproduce.
+
+use super::{Ffn, ModelArch};
+
+/// Qwen2-57B-A14B-Instruct: 64 routed experts, top-8, with a large shared
+/// expert. The paper's primary target model (Tables 1–2, Figs. 2–5).
+pub fn qwen2_57b_a14b() -> ModelArch {
+    ModelArch {
+        name: "qwen2-57b-a14b".into(),
+        hidden: 3584,
+        layers: 28,
+        heads: 28,
+        kv_heads: 4,
+        head_dim: 128,
+        vocab: 151_936,
+        ffn: Ffn::Moe {
+            experts: 64,
+            topk: 8,
+            expert_inter: 2560,
+            shared_inter: 20_480,
+        },
+        dtype_bytes: 2.0,
+        tied_embeddings: false,
+    }
+}
+
+/// Qwen2-0.5B-Instruct — the standalone draft model paired with Qwen2-57B.
+pub fn qwen2_0_5b() -> ModelArch {
+    ModelArch {
+        name: "qwen2-0.5b".into(),
+        hidden: 896,
+        layers: 24,
+        heads: 14,
+        kv_heads: 2,
+        head_dim: 64,
+        vocab: 151_936,
+        ffn: Ffn::Dense { inter: 4864 },
+        dtype_bytes: 2.0,
+        tied_embeddings: true,
+    }
+}
+
+/// Mixtral-8x7B-Instruct v0.1: 8 experts, top-2, no shared expert.
+pub fn mixtral_8x7b() -> ModelArch {
+    ModelArch {
+        name: "mixtral-8x7b".into(),
+        hidden: 4096,
+        layers: 32,
+        heads: 32,
+        kv_heads: 8,
+        head_dim: 128,
+        vocab: 32_000,
+        ffn: Ffn::Moe {
+            experts: 8,
+            topk: 2,
+            expert_inter: 14_336,
+            shared_inter: 0,
+        },
+        dtype_bytes: 2.0,
+        tied_embeddings: false,
+    }
+}
+
+/// EAGLE speculation head for Mixtral: a single decoder layer + fc head.
+/// Modeled as a one-layer dense model (its cost profile on the draft path).
+pub fn eagle_head_mixtral() -> ModelArch {
+    ModelArch {
+        name: "eagle-head-mixtral".into(),
+        hidden: 4096,
+        layers: 1,
+        heads: 32,
+        kv_heads: 8,
+        head_dim: 128,
+        vocab: 32_000,
+        ffn: Ffn::Dense { inter: 14_336 },
+        dtype_bytes: 2.0,
+        tied_embeddings: true,
+    }
+}
+
+/// Qwen1.5-MoE-A2.7B-Chat (paper Fig. 1b: ρ = 4/60).
+pub fn qwen15_moe() -> ModelArch {
+    ModelArch {
+        name: "qwen1.5-moe-a2.7b".into(),
+        hidden: 2048,
+        layers: 24,
+        heads: 16,
+        kv_heads: 16,
+        head_dim: 128,
+        vocab: 151_936,
+        ffn: Ffn::Moe {
+            experts: 60,
+            topk: 4,
+            expert_inter: 1408,
+            shared_inter: 5632,
+        },
+        dtype_bytes: 2.0,
+        tied_embeddings: false,
+    }
+}
+
+/// DeepSeek-V2-Lite-Chat as described by the paper (Fig. 1a: ρ = 6/62).
+pub fn deepseek_v2_lite() -> ModelArch {
+    ModelArch {
+        name: "deepseek-v2-lite".into(),
+        hidden: 2048,
+        layers: 27,
+        heads: 16,
+        kv_heads: 16,
+        head_dim: 128,
+        vocab: 102_400,
+        ffn: Ffn::Moe {
+            experts: 62,
+            topk: 6,
+            expert_inter: 1408,
+            shared_inter: 2816,
+        },
+        dtype_bytes: 2.0,
+        tied_embeddings: false,
+    }
+}
+
+/// OPT-30B — the dense comparison target (Figs. 3, 6).
+pub fn opt_30b() -> ModelArch {
+    ModelArch {
+        name: "opt-30b".into(),
+        hidden: 7168,
+        layers: 48,
+        heads: 56,
+        kv_heads: 56,
+        head_dim: 128,
+        vocab: 50_272,
+        // OPT uses a plain (non-gated) 4x FFN: 2 matrices of size h×4h.
+        // Our accounting assumes 3 gated matrices, so use inter = 8/3·h to
+        // match OPT's true 2·h·4h FFN parameter count.
+        ffn: Ffn::Dense { inter: 19_114 },
+        dtype_bytes: 2.0,
+        tied_embeddings: true,
+    }
+}
+
+/// OPT-350M — draft for OPT-30B.
+pub fn opt_350m() -> ModelArch {
+    ModelArch {
+        name: "opt-350m".into(),
+        hidden: 1024,
+        layers: 24,
+        heads: 16,
+        kv_heads: 16,
+        head_dim: 64,
+        vocab: 50_272,
+        ffn: Ffn::Dense { inter: 2731 },
+        dtype_bytes: 2.0,
+        tied_embeddings: true,
+    }
+}
+
+/// The tiny MoE model this repository actually trains, AOT-compiles and
+/// serves end-to-end (dims must match `python/compile/model.py`).
+pub fn moesd_tiny() -> ModelArch {
+    ModelArch {
+        name: "moesd-tiny".into(),
+        hidden: 128,
+        layers: 4,
+        heads: 4,
+        kv_heads: 4,
+        head_dim: 32,
+        vocab: 256,
+        ffn: Ffn::Moe {
+            experts: 8,
+            topk: 2,
+            expert_inter: 256,
+            shared_inter: 0,
+        },
+        dtype_bytes: 4.0, // served in f32 on the CPU PJRT backend
+        tied_embeddings: true,
+    }
+}
+
+/// Dense draft for the tiny model (dims must match `python/compile/model.py`).
+pub fn moesd_tiny_draft() -> ModelArch {
+    ModelArch {
+        name: "moesd-tiny-draft".into(),
+        hidden: 128,
+        layers: 2,
+        heads: 4,
+        kv_heads: 4,
+        head_dim: 32,
+        vocab: 256,
+        ffn: Ffn::Dense { inter: 256 },
+        dtype_bytes: 4.0,
+        tied_embeddings: true,
+    }
+}
+
+/// All presets (used by validation tests and the CLI `list-models`).
+pub fn all() -> Vec<ModelArch> {
+    vec![
+        qwen2_57b_a14b(),
+        qwen2_0_5b(),
+        mixtral_8x7b(),
+        eagle_head_mixtral(),
+        qwen15_moe(),
+        deepseek_v2_lite(),
+        opt_30b(),
+        opt_350m(),
+        moesd_tiny(),
+        moesd_tiny_draft(),
+    ]
+}
+
+/// Look up a preset by name.
+pub fn by_name(name: &str) -> anyhow::Result<ModelArch> {
+    all()
+        .into_iter()
+        .find(|m| m.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model preset `{name}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_unique_and_resolvable() {
+        let models = all();
+        let mut names: Vec<&str> = models.iter().map(|m| m.name.as_str()).collect();
+        names.sort_unstable();
+        let len_before = names.len();
+        names.dedup();
+        assert_eq!(names.len(), len_before, "duplicate preset names");
+        for m in &models {
+            assert_eq!(by_name(&m.name).unwrap(), *m);
+        }
+        assert!(by_name("nope").is_err());
+    }
+
+    #[test]
+    fn paper_sparsities() {
+        assert!((deepseek_v2_lite().rho() - 6.0 / 62.0).abs() < 1e-12);
+        assert!((qwen15_moe().rho() - 4.0 / 60.0).abs() < 1e-12);
+        assert!((mixtral_8x7b().rho() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn draft_is_much_smaller_than_target() {
+        // §3.1: T_D/T_T is kept small, "usually less than 1/10"; at equal
+        // bandwidth the params ratio bounds the time ratio.
+        let ratio = qwen2_0_5b().total_params() as f64 / qwen2_57b_a14b().total_params() as f64;
+        assert!(ratio < 0.1, "draft/target param ratio {ratio}");
+        let tiny_ratio =
+            moesd_tiny_draft().total_params() as f64 / moesd_tiny().total_params() as f64;
+        assert!(tiny_ratio < 0.55, "tiny draft ratio {tiny_ratio}");
+    }
+}

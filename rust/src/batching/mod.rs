@@ -1,0 +1,237 @@
+//! Request types and the continuous-batching queue.
+//!
+//! Requests arrive asynchronously; the batcher keeps a FIFO waiting queue
+//! and a running set, and exposes shape *buckets* — the fixed batch sizes
+//! the AOT-compiled HLO executables exist for. The scheduler admits
+//! waiting requests whenever (a) a bucket has headroom and (b) the KV
+//! manager can hold the prompt.
+
+use crate::kvcache::SeqId;
+use std::collections::VecDeque;
+
+/// Sampling configuration for a request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    pub temperature: f64,
+    /// Stop after this many generated tokens.
+    pub max_new_tokens: usize,
+    /// Optional stop token.
+    pub eos_token: Option<u32>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            temperature: 0.0,
+            max_new_tokens: 64,
+            eos_token: None,
+        }
+    }
+}
+
+/// An inference request as submitted by a client.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: SeqId,
+    pub prompt: Vec<u32>,
+    pub params: SamplingParams,
+    /// Arrival time on the engine clock (seconds).
+    pub arrival: f64,
+}
+
+/// A finished request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: SeqId,
+    pub tokens: Vec<u32>,
+    /// Engine-clock timestamps for SLO accounting.
+    pub arrival: f64,
+    pub first_token_at: f64,
+    pub finished_at: f64,
+    /// SD rounds this sequence participated in.
+    pub rounds: u64,
+}
+
+impl Completion {
+    pub fn ttft(&self) -> f64 {
+        self.first_token_at - self.arrival
+    }
+
+    pub fn tpot(&self) -> f64 {
+        if self.tokens.len() <= 1 {
+            return 0.0;
+        }
+        (self.finished_at - self.first_token_at) / (self.tokens.len() - 1) as f64
+    }
+}
+
+/// The waiting queue plus admission bookkeeping.
+#[derive(Debug, Default)]
+pub struct RequestQueue {
+    waiting: VecDeque<Request>,
+    /// Total requests ever enqueued (id uniqueness checks).
+    submitted: u64,
+}
+
+impl RequestQueue {
+    pub fn new() -> RequestQueue {
+        RequestQueue::default()
+    }
+
+    pub fn push(&mut self, req: Request) {
+        assert!(!req.prompt.is_empty(), "empty prompt");
+        self.waiting.push_back(req);
+        self.submitted += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.waiting.is_empty()
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+
+    /// Peek at the head without removing (admission checks capacity first).
+    pub fn peek(&self) -> Option<&Request> {
+        self.waiting.front()
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.waiting.pop_front()
+    }
+
+    /// Requeue at the *front* (preemption putback keeps FIFO fairness).
+    pub fn push_front(&mut self, req: Request) {
+        self.waiting.push_front(req);
+    }
+}
+
+/// Shape buckets: batch sizes with compiled executables. Decode batches are
+/// padded up to the nearest bucket (smaller buckets waste less compute but
+/// cost more compilations).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Buckets {
+    sizes: Vec<usize>,
+}
+
+impl Buckets {
+    pub fn new(mut sizes: Vec<usize>) -> Buckets {
+        assert!(!sizes.is_empty(), "need at least one bucket");
+        sizes.sort_unstable();
+        sizes.dedup();
+        assert!(sizes[0] >= 1);
+        Buckets { sizes }
+    }
+
+    /// Powers of two up to `max`.
+    pub fn pow2_up_to(max: usize) -> Buckets {
+        let mut sizes = Vec::new();
+        let mut b = 1;
+        while b <= max {
+            sizes.push(b);
+            b *= 2;
+        }
+        Buckets::new(sizes)
+    }
+
+    pub fn max(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// Smallest bucket that fits `n` sequences, or the largest bucket if
+    /// none does (caller must then split the batch).
+    pub fn fit(&self, n: usize) -> usize {
+        for &s in &self.sizes {
+            if s >= n {
+                return s;
+            }
+        }
+        self.max()
+    }
+
+    /// Padding waste for batching `n` sequences into the fitted bucket.
+    pub fn waste(&self, n: usize) -> usize {
+        self.fit(n).saturating_sub(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: SeqId) -> Request {
+        Request {
+            id,
+            prompt: vec![1, 2, 3],
+            params: SamplingParams::default(),
+            arrival: 0.0,
+        }
+    }
+
+    #[test]
+    fn queue_fifo_and_putback() {
+        let mut q = RequestQueue::new();
+        q.push(req(1));
+        q.push(req(2));
+        assert_eq!(q.len(), 2);
+        let r = q.pop().unwrap();
+        assert_eq!(r.id, 1);
+        q.push_front(r); // preemption
+        assert_eq!(q.peek().unwrap().id, 1);
+        assert_eq!(q.submitted(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prompt")]
+    fn empty_prompt_rejected() {
+        let mut q = RequestQueue::new();
+        q.push(Request {
+            id: 1,
+            prompt: vec![],
+            params: SamplingParams::default(),
+            arrival: 0.0,
+        });
+    }
+
+    #[test]
+    fn buckets_fit_and_waste() {
+        let b = Buckets::pow2_up_to(16);
+        assert_eq!(b.sizes(), &[1, 2, 4, 8, 16]);
+        assert_eq!(b.fit(1), 1);
+        assert_eq!(b.fit(3), 4);
+        assert_eq!(b.fit(16), 16);
+        assert_eq!(b.fit(20), 16); // overflow → caller splits
+        assert_eq!(b.waste(5), 3);
+        assert_eq!(b.waste(8), 0);
+    }
+
+    #[test]
+    fn buckets_dedupe_and_sort() {
+        let b = Buckets::new(vec![8, 2, 2, 4]);
+        assert_eq!(b.sizes(), &[2, 4, 8]);
+        assert_eq!(b.max(), 8);
+    }
+
+    #[test]
+    fn completion_slo_math() {
+        let c = Completion {
+            id: 1,
+            tokens: vec![1, 2, 3, 4, 5],
+            arrival: 10.0,
+            first_token_at: 10.5,
+            finished_at: 12.5,
+            rounds: 2,
+        };
+        assert!((c.ttft() - 0.5).abs() < 1e-12);
+        assert!((c.tpot() - 0.5).abs() < 1e-12);
+    }
+}

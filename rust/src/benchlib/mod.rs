@@ -1,0 +1,165 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Two kinds of bench targets use this:
+//! - **paper benches** (`fig*`, `table*`): run an experiment from
+//!   [`crate::experiments`], print the paper-style table/series, write
+//!   CSV + markdown under `results/`, and assert the qualitative shape
+//!   claims so `cargo bench` doubles as a regression gate;
+//! - **micro benches** (`micro_hotpath`): wall-clock timing of L3 hot
+//!   paths with warmup and repetition statistics.
+
+use crate::util::stats;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Where bench outputs land.
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var("MOESD_RESULTS_DIR").unwrap_or_else(|_| "results".to_string());
+    PathBuf::from(dir)
+}
+
+/// Write a text report file under results/ (creating directories).
+pub fn write_report(name: &str, contents: &str) -> anyhow::Result<PathBuf> {
+    let path = results_dir().join(name);
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&path, contents)?;
+    Ok(path)
+}
+
+/// Micro-benchmark a closure: `warmup` unmeasured runs, then `reps`
+/// measured runs. Returns per-rep seconds.
+pub fn time_reps<F: FnMut()>(mut f: F, warmup: usize, reps: usize) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// Format a micro-bench summary line.
+pub fn summarize(name: &str, secs: &[f64]) -> String {
+    format!(
+        "{name:40} mean={:>10.3}µs  p50={:>10.3}µs  min={:>10.3}µs  n={}",
+        stats::mean(secs) * 1e6,
+        stats::median(secs) * 1e6,
+        stats::min(secs) * 1e6,
+        secs.len()
+    )
+}
+
+/// A tiny assertion helper for bench shape checks: prints PASS/FAIL and
+/// tracks overall status so the bench binary can exit nonzero.
+pub struct ShapeChecks {
+    failures: Vec<String>,
+}
+
+impl ShapeChecks {
+    pub fn new() -> ShapeChecks {
+        ShapeChecks {
+            failures: Vec::new(),
+        }
+    }
+
+    pub fn check(&mut self, label: &str, ok: bool) {
+        if ok {
+            println!("  shape-check PASS: {label}");
+        } else {
+            println!("  shape-check FAIL: {label}");
+            self.failures.push(label.to_string());
+        }
+    }
+
+    /// Exit-code aware finish: panics (bench failure) listing any failed
+    /// shape checks.
+    pub fn finish(self, bench_name: &str) {
+        if !self.failures.is_empty() {
+            panic!(
+                "{bench_name}: {} shape check(s) failed: {:?}",
+                self.failures.len(),
+                self.failures
+            );
+        }
+        println!("{bench_name}: all shape checks passed");
+    }
+}
+
+impl Default for ShapeChecks {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Standard bench banner.
+pub fn banner(name: &str, paper_ref: &str) {
+    println!("\n=== {name} — reproduces {paper_ref} ===");
+}
+
+/// Resolve a path relative to the repo root (benches run from the package
+/// root already, but examples may be invoked elsewhere).
+pub fn repo_path(rel: &str) -> PathBuf {
+    let p = Path::new(rel);
+    if p.exists() || p.is_absolute() {
+        return p.to_path_buf();
+    }
+    // Fall back to CARGO_MANIFEST_DIR when running from another cwd.
+    if let Ok(dir) = std::env::var("CARGO_MANIFEST_DIR") {
+        let candidate = Path::new(&dir).join(rel);
+        if candidate.exists() {
+            return candidate;
+        }
+    }
+    p.to_path_buf()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_reps_counts() {
+        let mut n = 0;
+        let secs = time_reps(|| n += 1, 2, 5);
+        assert_eq!(secs.len(), 5);
+        assert_eq!(n, 7);
+        assert!(secs.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn summarize_renders() {
+        let s = summarize("kv_alloc", &[1e-6, 2e-6]);
+        assert!(s.contains("kv_alloc"));
+        assert!(s.contains("n=2"));
+    }
+
+    #[test]
+    fn shape_checks_pass_path() {
+        let mut c = ShapeChecks::new();
+        c.check("ok", true);
+        c.finish("test"); // must not panic
+    }
+
+    #[test]
+    #[should_panic(expected = "shape check")]
+    fn shape_checks_fail_path() {
+        let mut c = ShapeChecks::new();
+        c.check("bad", false);
+        c.finish("test");
+    }
+
+    #[test]
+    fn write_report_creates_dirs() {
+        let dir = std::env::temp_dir().join("moesd_benchlib_test");
+        std::env::set_var("MOESD_RESULTS_DIR", &dir);
+        let p = write_report("sub/report.txt", "hello").unwrap();
+        assert!(p.exists());
+        std::fs::remove_dir_all(&dir).ok();
+        std::env::remove_var("MOESD_RESULTS_DIR");
+    }
+}

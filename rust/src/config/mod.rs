@@ -1,0 +1,224 @@
+//! Launcher configuration: a JSON file describing what to serve/simulate.
+//!
+//! Example (`examples/configs/private_serving.json`):
+//! ```json
+//! {
+//!   "mode": "synthetic",
+//!   "model": "qwen2-57b-a14b",
+//!   "draft": "qwen2-0.5b",
+//!   "platform": "2xGPU-A",
+//!   "gamma": 4,
+//!   "dataset": "humaneval",
+//!   "temperature": 0.0,
+//!   "max_batch": 32,
+//!   "max_new_tokens": 128,
+//!   "kv_blocks": 4096,
+//!   "kv_block_size": 16,
+//!   "seed": 0
+//! }
+//! ```
+
+use crate::batching::Buckets;
+use crate::engine::EngineConfig;
+use crate::kvcache::KvConfig;
+use crate::scheduler::SchedulerConfig;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Which backend the launcher builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Paper-scale roofline-simulated serving.
+    Synthetic,
+    /// The tiny real model via PJRT artifacts.
+    Hlo,
+}
+
+/// Full launcher configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub mode: Mode,
+    pub model: String,
+    pub draft: String,
+    pub platform: String,
+    pub gamma: usize,
+    pub dataset: String,
+    pub temperature: f64,
+    pub max_batch: usize,
+    pub max_new_tokens: usize,
+    pub kv_blocks: usize,
+    pub kv_block_size: usize,
+    pub seed: u64,
+    /// Artifacts directory (HLO mode).
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            mode: Mode::Synthetic,
+            model: "qwen2-57b-a14b".into(),
+            draft: "qwen2-0.5b".into(),
+            platform: "2xGPU-A".into(),
+            gamma: 4,
+            dataset: "humaneval".into(),
+            temperature: 0.0,
+            max_batch: 32,
+            max_new_tokens: 128,
+            kv_blocks: 4096,
+            kv_block_size: 16,
+            seed: 0,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl Config {
+    pub fn from_json(j: &Json) -> anyhow::Result<Config> {
+        let d = Config::default();
+        let str_or = |key: &str, default: &str| -> String {
+            j.get(key)
+                .and_then(Json::as_str)
+                .unwrap_or(default)
+                .to_string()
+        };
+        let usize_or =
+            |key: &str, default: usize| j.get(key).and_then(Json::as_usize).unwrap_or(default);
+        let mode = match str_or("mode", "synthetic").as_str() {
+            "synthetic" => Mode::Synthetic,
+            "hlo" => Mode::Hlo,
+            other => anyhow::bail!("unknown mode `{other}` (want synthetic|hlo)"),
+        };
+        let cfg = Config {
+            mode,
+            model: str_or("model", &d.model),
+            draft: str_or("draft", &d.draft),
+            platform: str_or("platform", &d.platform),
+            gamma: usize_or("gamma", d.gamma),
+            dataset: str_or("dataset", &d.dataset),
+            temperature: j.get("temperature").and_then(Json::as_f64).unwrap_or(0.0),
+            max_batch: usize_or("max_batch", d.max_batch),
+            max_new_tokens: usize_or("max_new_tokens", d.max_new_tokens),
+            kv_blocks: usize_or("kv_blocks", d.kv_blocks),
+            kv_block_size: usize_or("kv_block_size", d.kv_block_size),
+            seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
+            artifacts_dir: str_or("artifacts_dir", &d.artifacts_dir),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Config> {
+        Config::from_json(&Json::parse_file(path)?)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.gamma <= 16, "gamma {} unreasonably large", self.gamma);
+        anyhow::ensure!(self.max_batch >= 1, "max_batch must be >= 1");
+        anyhow::ensure!(
+            self.kv_blocks >= 1 && self.kv_block_size >= 1,
+            "invalid KV geometry"
+        );
+        anyhow::ensure!(
+            (0.0..=2.0).contains(&self.temperature),
+            "temperature out of range"
+        );
+        if self.mode == Mode::Synthetic {
+            crate::arch::presets::by_name(&self.model)?;
+            crate::arch::presets::by_name(&self.draft)?;
+            crate::hardware::platform_by_name(&self.platform)?;
+        }
+        Ok(())
+    }
+
+    /// Derive the engine configuration.
+    pub fn engine_config(&self) -> EngineConfig {
+        EngineConfig {
+            gamma: self.gamma,
+            kv: KvConfig {
+                num_blocks: self.kv_blocks,
+                block_size: self.kv_block_size,
+            },
+            scheduler: SchedulerConfig {
+                max_batch: self.max_batch,
+                admit_reserve_tokens: self.max_new_tokens.min(64),
+                tpot_slo: None,
+            },
+            buckets: Buckets::pow2_up_to(self.max_batch.max(1)),
+            seed: self.seed,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            (
+                "mode",
+                match self.mode {
+                    Mode::Synthetic => "synthetic".into(),
+                    Mode::Hlo => "hlo".into(),
+                },
+            ),
+            ("model", self.model.as_str().into()),
+            ("draft", self.draft.as_str().into()),
+            ("platform", self.platform.as_str().into()),
+            ("gamma", self.gamma.into()),
+            ("dataset", self.dataset.as_str().into()),
+            ("temperature", self.temperature.into()),
+            ("max_batch", self.max_batch.into()),
+            ("max_new_tokens", self.max_new_tokens.into()),
+            ("kv_blocks", self.kv_blocks.into()),
+            ("kv_block_size", self.kv_block_size.into()),
+            ("seed", self.seed.into()),
+            ("artifacts_dir", self.artifacts_dir.as_str().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_via_json() {
+        let c = Config::default();
+        let j = c.to_json();
+        let c2 = Config::from_json(&j).unwrap();
+        assert_eq!(c2.model, c.model);
+        assert_eq!(c2.gamma, c.gamma);
+        assert_eq!(c2.mode, Mode::Synthetic);
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let j = Json::parse(r#"{"gamma": 2}"#).unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.gamma, 2);
+        assert_eq!(c.model, "qwen2-57b-a14b");
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        for bad in [
+            r#"{"mode": "quantum"}"#,
+            r#"{"gamma": 99}"#,
+            r#"{"model": "not-a-model"}"#,
+            r#"{"platform": "9xGPU-Z"}"#,
+            r#"{"temperature": 7}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(Config::from_json(&j).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn engine_config_derivation() {
+        let c = Config {
+            max_batch: 20,
+            ..Default::default()
+        };
+        let e = c.engine_config();
+        assert_eq!(e.scheduler.max_batch, 20);
+        assert_eq!(e.buckets.max(), 16); // pow2 ≤ 20
+        assert_eq!(e.gamma, c.gamma);
+    }
+}

@@ -1,0 +1,637 @@
+//! The serving engine — the L3 coordinator's core loop.
+//!
+//! One `Engine` owns a model-pair backend ([`crate::spec::SdBackend`]), the
+//! paged KV accounting, the admission scheduler and the metrics registry,
+//! and drives batched speculative decoding:
+//!
+//! ```text
+//! step(): admit → (propose γ) → verify → rejection-sample → commit/rollback
+//! ```
+//!
+//! The engine clock is *whatever the backend's costs are denominated in*:
+//! the synthetic backend returns roofline-simulated seconds (virtual
+//! clock, used for all paper-scale experiments), the HLO backend returns
+//! measured wall seconds. Coordinator-side overhead is measured with a
+//! monotonic timer separately (`metrics.time_overhead`) so the §Perf pass
+//! can verify L3 is not the bottleneck.
+//!
+//! γ = 0 turns the same loop into plain autoregressive decoding — that's
+//! how every T_AR baseline in the experiments is measured, guaranteeing
+//! AR and SD share scheduler/batcher/sampler code paths.
+
+use crate::batching::{Buckets, Completion, Request, RequestQueue, SamplingParams};
+use crate::kvcache::{KvConfig, KvManager, SeqId};
+use crate::metrics::{Counters, EngineMetrics};
+use crate::sampling::verify_chain;
+use crate::scheduler::{Scheduler, SchedulerConfig};
+use crate::spec::SdBackend;
+use crate::util::rng::Rng;
+
+/// Engine configuration (the "launcher config" surface).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Draft length γ; 0 = autoregressive baseline.
+    pub gamma: usize,
+    pub kv: KvConfig,
+    pub scheduler: SchedulerConfig,
+    /// Compiled batch-shape buckets (informational for the synthetic
+    /// backend; binding for the HLO backend, which pads to these).
+    pub buckets: Buckets,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            gamma: 3,
+            kv: KvConfig {
+                num_blocks: 4096,
+                block_size: 16,
+            },
+            scheduler: SchedulerConfig::default(),
+            buckets: Buckets::pow2_up_to(64),
+            seed: 0,
+        }
+    }
+}
+
+/// A sequence currently in the running batch.
+#[derive(Debug, Clone)]
+struct RunningSeq {
+    id: SeqId,
+    /// prompt ++ emitted tokens.
+    stream: Vec<u32>,
+    prompt_len: usize,
+    /// Committed target-KV length; `stream[base]` is the next feed token.
+    base: usize,
+    params: SamplingParams,
+    arrival: f64,
+    first_token_at: Option<f64>,
+    rounds: u64,
+}
+
+impl RunningSeq {
+    fn generated(&self) -> usize {
+        self.stream.len() - self.prompt_len
+    }
+}
+
+/// The coordinator.
+pub struct Engine<B: SdBackend> {
+    pub config: EngineConfig,
+    backend: B,
+    kv: KvManager,
+    queue: RequestQueue,
+    scheduler: Scheduler,
+    running: Vec<RunningSeq>,
+    pub metrics: EngineMetrics,
+    pub counters: Counters,
+    clock: f64,
+    rng: Rng,
+    round_counter: u64,
+}
+
+impl<B: SdBackend> Engine<B> {
+    pub fn new(config: EngineConfig, backend: B) -> Engine<B> {
+        let kv = KvManager::new(config.kv);
+        let scheduler = Scheduler::new(config.scheduler.clone());
+        let rng = Rng::new(config.seed, 0x5d);
+        let queue = RequestQueue::new();
+        Engine {
+            config,
+            backend,
+            kv,
+            queue,
+            scheduler,
+            running: Vec::new(),
+            metrics: EngineMetrics::default(),
+            counters: Counters::default(),
+            clock: 0.0,
+            rng,
+            round_counter: 0,
+        }
+    }
+
+    /// Submit a request (requests must be pushed in arrival order).
+    pub fn submit(&mut self, req: Request) {
+        self.metrics.requests_submitted += 1;
+        self.queue.push(req);
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    pub fn num_running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn num_waiting(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn kv(&self) -> &KvManager {
+        &self.kv
+    }
+
+    /// Whether any work remains.
+    pub fn is_idle(&self) -> bool {
+        self.running.is_empty() && self.queue.is_empty()
+    }
+
+    /// One scheduling + decode round. Returns completions finished in it.
+    pub fn step(&mut self) -> anyhow::Result<Vec<Completion>> {
+        let t0 = std::time::Instant::now();
+        let mut completions = Vec::new();
+
+        // Fast-forward the clock to the next arrival if the engine is idle
+        // but requests exist in the future.
+        if self.running.is_empty() {
+            if let Some(head) = self.queue.peek() {
+                if head.arrival > self.clock {
+                    self.clock = head.arrival;
+                }
+            }
+        }
+
+        self.admit()?;
+
+        if self.running.is_empty() {
+            self.metrics.time_overhead += t0.elapsed().as_secs_f64();
+            return Ok(completions);
+        }
+
+        let gamma = self.config.gamma;
+
+        // --- capacity reservation: γ+1 tokens per sequence ------------------
+        // Sequences that don't fit are preempted (released + requeued) so the
+        // batch call below operates on a consistent survivor set.
+        let mut i = 0;
+        while i < self.running.len() {
+            let id = self.running[i].id;
+            if self.kv.append(id, gamma + 1).is_some() {
+                i += 1;
+            } else {
+                self.preempt(i);
+            }
+        }
+        if self.running.is_empty() {
+            self.metrics.time_overhead += t0.elapsed().as_secs_f64();
+            return Ok(completions);
+        }
+
+        let b = self.running.len();
+        self.metrics.rounds += 1;
+        self.metrics.batch_size_sum += b as u64;
+        self.round_counter += 1;
+
+        let seq_ids: Vec<SeqId> = self.running.iter().map(|s| s.id).collect();
+        let temps: Vec<f64> = self
+            .running
+            .iter()
+            .map(|s| s.params.temperature)
+            .collect();
+        let feeds: Vec<u32> = self.running.iter().map(|s| s.stream[s.base]).collect();
+
+        // Stages ① and ② run as a transaction: on a backend error, roll
+        // every sequence's model state and KV reservation back to its
+        // committed prefix so the caller can retry the round (exercised by
+        // the failure-injection integration test).
+        // --- stage ①: draft propose ----------------------------------------
+        let propose_result = if gamma > 0 {
+            let pending: Vec<Vec<u32>> = self
+                .running
+                .iter()
+                .map(|s| {
+                    let dlen = self.backend.draft_len(s.id);
+                    s.stream[dlen..=s.base].to_vec()
+                })
+                .collect();
+            self.backend
+                .propose(&seq_ids, &pending, gamma, &temps, self.round_counter)
+                .map(Some)
+        } else {
+            Ok(None)
+        };
+        let (draft_tokens, draft_probs) = match propose_result {
+            Ok(Some(out)) => {
+                self.clock += out.cost;
+                self.metrics.time_draft += out.cost;
+                self.metrics.draft_tokens_proposed += (b * gamma) as u64;
+                (out.tokens, out.probs)
+            }
+            Ok(None) => (vec![Vec::new(); b], vec![Vec::new(); b]),
+            Err(e) => {
+                self.abort_round();
+                return Err(e.context("draft propose failed (round rolled back)"));
+            }
+        };
+
+        // --- stage ②: target verify ----------------------------------------
+        let verify = match self.backend.verify(&seq_ids, &feeds, &draft_tokens, &temps) {
+            Ok(v) => v,
+            Err(e) => {
+                self.abort_round();
+                return Err(e.context("target verify failed (round rolled back)"));
+            }
+        };
+        self.clock += verify.cost;
+        self.metrics.time_verify += verify.cost;
+
+        // --- stage ③: rejection sampling ------------------------------------
+        let rcost = self.backend.reject_cost(b, gamma);
+        self.clock += rcost;
+        self.metrics.time_reject += rcost;
+
+        let mut finished_idx: Vec<usize> = Vec::new();
+        for (i, seq) in self.running.iter_mut().enumerate() {
+            let outcome = verify_chain(
+                &draft_tokens[i],
+                &draft_probs[i],
+                &verify.probs[i],
+                &mut self.rng,
+            );
+            self.metrics.draft_tokens_accepted += outcome.accepted as u64;
+            seq.rounds += 1;
+
+            if seq.first_token_at.is_none() {
+                seq.first_token_at = Some(self.clock);
+            }
+
+            // Commit the emitted tokens.
+            seq.stream.extend_from_slice(&outcome.tokens);
+            seq.base += 1 + outcome.accepted;
+            self.metrics.tokens_generated += outcome.tokens.len() as u64;
+
+            // Roll both models back to the committed prefix; the fresh
+            // token (last emitted) is fed next round.
+            self.backend.rollback_target(seq.id, seq.base);
+            self.backend.rollback_draft(seq.id, seq.base);
+            self.kv.truncate(seq.id, seq.stream.len());
+
+            // Completion checks: EOS in the emitted tokens, or budget.
+            // Tokens cut by truncation are removed from the generated-token
+            // count again so σ reflects *kept* tokens only.
+            let len_with_emitted = seq.stream.len();
+            let mut done = false;
+            if let Some(eos) = seq.params.eos_token {
+                if let Some(pos) = outcome.tokens.iter().position(|&t| t == eos) {
+                    let cut = seq.stream.len() - outcome.tokens.len() + pos + 1;
+                    seq.stream.truncate(cut);
+                    done = true;
+                }
+            }
+            if seq.generated() >= seq.params.max_new_tokens {
+                seq.stream
+                    .truncate(seq.prompt_len + seq.params.max_new_tokens);
+                done = true;
+            }
+            let discarded = len_with_emitted - seq.stream.len();
+            self.metrics.tokens_generated -= discarded as u64;
+            if done {
+                finished_idx.push(i);
+            }
+        }
+
+        // Retire finished sequences (descending index for stable removal).
+        for &i in finished_idx.iter().rev() {
+            let seq = self.running.remove(i);
+            self.backend.release(seq.id);
+            self.kv.release(seq.id);
+            self.metrics.requests_completed += 1;
+            let completion = Completion {
+                id: seq.id,
+                tokens: seq.stream[seq.prompt_len..].to_vec(),
+                arrival: seq.arrival,
+                first_token_at: seq.first_token_at.unwrap_or(self.clock),
+                finished_at: self.clock,
+                rounds: seq.rounds,
+            };
+            self.metrics.ttft.0.record(completion.ttft());
+            self.metrics.tpot.0.record(completion.tpot());
+            self.metrics
+                .e2e_latency
+                .0
+                .record(completion.finished_at - completion.arrival);
+            completions.push(completion);
+        }
+
+        self.metrics.time_overhead += t0.elapsed().as_secs_f64();
+        Ok(completions)
+    }
+
+    /// Roll every running sequence back to its committed prefix after a
+    /// mid-round backend failure: draft/target model state and the KV
+    /// reservation all return to `base`/`stream.len()`. The round's
+    /// requests stay running and the next `step()` retries cleanly.
+    fn abort_round(&mut self) {
+        for seq in &self.running {
+            self.backend.rollback_target(seq.id, seq.base);
+            self.backend.rollback_draft(seq.id, seq.base);
+            self.kv.truncate(seq.id, seq.stream.len());
+        }
+        self.counters.inc("round_failures");
+    }
+
+    /// Admit waiting requests whose arrival time has come.
+    fn admit(&mut self) -> anyhow::Result<()> {
+        // SLO-aware batch ceiling (§3.4 latency-critical serving): estimate
+        // TPOT(b) from observed round economics, assuming round time scales
+        // linearly with batch size in the compute-bound direction.
+        let ceiling = match self.scheduler.config.tpot_slo {
+            // No round economics observed yet: admit a small pilot batch
+            // so the estimator has data before committing to a large one.
+            Some(_) if self.metrics.rounds == 0 => 4.min(self.scheduler.config.max_batch),
+            Some(_) if self.metrics.tokens_generated > 0 => {
+                let per_round = self.metrics.decode_time() / self.metrics.rounds as f64;
+                let mean_b = self.metrics.mean_batch().max(1.0);
+                let tokens_per_seq_round = self.metrics.tokens_generated as f64
+                    / self.metrics.batch_size_sum.max(1) as f64;
+                self.scheduler.batch_ceiling(|b| {
+                    per_round * (b as f64 / mean_b) / tokens_per_seq_round.max(1e-9)
+                })
+            }
+            _ => self.scheduler.config.max_batch,
+        };
+        let admitted = self.scheduler.admit(
+            &mut self.queue,
+            &self.kv,
+            self.running.len(),
+            ceiling,
+            self.clock,
+        );
+        if admitted.is_empty() {
+            return Ok(());
+        }
+
+        let mut prefill_batch = Vec::with_capacity(admitted.len());
+        for req in &admitted {
+            // Reserve the prompt; the scheduler pre-checked capacity.
+            if self.kv.allocate(req.id, req.prompt.len()).is_none() {
+                anyhow::bail!("KV allocation failed after admission check");
+            }
+            prefill_batch.push((req.id, req.prompt.clone()));
+        }
+        let cost = self.backend.prefill(&prefill_batch)?;
+        self.clock += cost;
+        self.metrics.time_prefill += cost;
+        for req in admitted {
+            let prompt_len = req.prompt.len();
+            self.running.push(RunningSeq {
+                id: req.id,
+                stream: req.prompt,
+                prompt_len,
+                base: prompt_len - 1,
+                params: req.params,
+                arrival: req.arrival,
+                first_token_at: None,
+                rounds: 0,
+            });
+        }
+        Ok(())
+    }
+
+    /// Preempt the running sequence at index `i`: drop its progress,
+    /// release all state, and requeue the original request at the front.
+    fn preempt(&mut self, i: usize) {
+        let seq = self.running.remove(i);
+        self.backend.release(seq.id);
+        self.kv.release(seq.id);
+        self.counters.inc("preemptions");
+        self.queue.push_front(Request {
+            id: seq.id,
+            prompt: seq.stream[..seq.prompt_len].to_vec(),
+            params: seq.params,
+            arrival: seq.arrival,
+        });
+    }
+
+    /// Drive the engine until every submitted request completes (or the
+    /// step budget is exhausted — a safety net for tests).
+    pub fn run_to_completion(&mut self, max_steps: usize) -> anyhow::Result<Vec<Completion>> {
+        let mut all = Vec::new();
+        for _ in 0..max_steps {
+            if self.is_idle() {
+                return Ok(all);
+            }
+            all.extend(self.step()?);
+        }
+        anyhow::bail!(
+            "run_to_completion: {} sequences still active after {max_steps} steps",
+            self.running.len() + self.queue.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::hardware::platform_2x_gpu_a;
+    use crate::simulator::ExecSim;
+    use crate::spec::synthetic::SyntheticLm;
+
+    fn synthetic(alpha: f64, seed: u64) -> SyntheticLm {
+        let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+        let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+        SyntheticLm::new(target, draft, alpha, seed)
+    }
+
+    fn engine(gamma: usize, alpha: f64) -> Engine<SyntheticLm> {
+        let config = EngineConfig {
+            gamma,
+            ..Default::default()
+        };
+        Engine::new(config, synthetic(alpha, 99))
+    }
+
+    fn req(id: u64, prompt_len: usize, max_new: usize, arrival: f64) -> Request {
+        Request {
+            id,
+            prompt: (0..prompt_len as u32).collect(),
+            params: SamplingParams {
+                temperature: 0.0,
+                max_new_tokens: max_new,
+                eos_token: None,
+            },
+            arrival,
+        }
+    }
+
+    #[test]
+    fn single_request_alpha1_emits_exact_chain() {
+        let mut e = engine(4, 1.0);
+        e.submit(req(1, 8, 20, 0.0));
+        let done = e.run_to_completion(100).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens.len(), 20);
+        let expected = e.backend().expected_chain(1, 8, 20);
+        assert_eq!(done[0].tokens, expected);
+        // α=1 ⇒ every draft accepted ⇒ σ = 1 and minimal rounds.
+        assert!((e.metrics.sigma(4) - 1.0).abs() < 1e-9);
+        assert_eq!(e.metrics.rounds, 4); // 20 tokens / 5 per round
+    }
+
+    #[test]
+    fn sd_output_equals_ar_output_any_alpha() {
+        // Losslessness end-to-end: SD (γ=3, α=0.6) and AR (γ=0) emit the
+        // same tokens for the same requests.
+        let run = |gamma: usize| -> Vec<Vec<u32>> {
+            let mut e = engine(gamma, 0.6);
+            for id in 0..5 {
+                e.submit(req(id, 6, 25, 0.0));
+            }
+            let mut done = e.run_to_completion(300).unwrap();
+            done.sort_by_key(|c| c.id);
+            done.into_iter().map(|c| c.tokens).collect()
+        };
+        assert_eq!(run(3), run(0));
+    }
+
+    #[test]
+    fn ar_mode_gamma0_works() {
+        let mut e = engine(0, 0.5);
+        e.submit(req(1, 4, 10, 0.0));
+        let done = e.run_to_completion(100).unwrap();
+        assert_eq!(done[0].tokens, e.backend().expected_chain(1, 4, 10));
+        assert_eq!(e.metrics.rounds, 10); // one token per round
+        assert_eq!(e.metrics.time_draft, 0.0);
+    }
+
+    #[test]
+    fn sd_beats_ar_at_moderate_batch_on_virtual_clock() {
+        let batch = 32;
+        let run = |gamma: usize| -> f64 {
+            let mut e = engine(gamma, 0.9);
+            for id in 0..batch {
+                e.submit(req(id, 8, 32, 0.0));
+            }
+            e.run_to_completion(1000).unwrap();
+            e.metrics.decode_time()
+        };
+        let t_ar = run(0);
+        let t_sd = run(3);
+        let speedup = t_ar / t_sd;
+        assert!(
+            speedup > 1.3,
+            "SD should beat AR at B={batch}: speedup={speedup}"
+        );
+    }
+
+    #[test]
+    fn sigma_matches_eq5_prediction() {
+        let alpha = 0.8;
+        let gamma = 3;
+        let mut e = engine(gamma, alpha);
+        for id in 0..64 {
+            e.submit(req(id, 4, 40, 0.0));
+        }
+        e.run_to_completion(2000).unwrap();
+        let sigma_measured = e.metrics.sigma(gamma);
+        let sigma_theory = crate::theory::sigma_from_alpha(alpha, gamma);
+        assert!(
+            (sigma_measured - sigma_theory).abs() < 0.05,
+            "σ measured {sigma_measured} vs Eq.5 {sigma_theory}"
+        );
+        // Empirical accepted/proposed ratio: chain truncation means the
+        // expectation is α(1−α^γ)/((1−α)γ), not α itself.
+        let expect_ratio =
+            alpha * (1.0 - alpha.powi(gamma as i32)) / ((1.0 - alpha) * gamma as f64);
+        assert!(
+            (e.metrics.acceptance_rate() - expect_ratio).abs() < 0.05,
+            "accept ratio {} vs expected {expect_ratio}",
+            e.metrics.acceptance_rate()
+        );
+    }
+
+    #[test]
+    fn capacity_pressure_triggers_preemption_and_recovers() {
+        let config = EngineConfig {
+            gamma: 3,
+            kv: KvConfig {
+                num_blocks: 12,
+                block_size: 4,
+            },
+            scheduler: SchedulerConfig {
+                max_batch: 8,
+                admit_reserve_tokens: 4,
+                tpot_slo: None,
+            },
+            ..Default::default()
+        };
+        let mut e = Engine::new(config, synthetic(0.9, 7));
+        for id in 0..6 {
+            e.submit(req(id, 6, 24, 0.0));
+        }
+        let done = e.run_to_completion(5000).unwrap();
+        assert_eq!(done.len(), 6, "all requests should eventually finish");
+        assert!(
+            e.counters.get("preemptions") > 0,
+            "tiny cache should force preemptions"
+        );
+        // Every sequence still got the right tokens despite preemption.
+        for c in &done {
+            assert_eq!(c.tokens, e.backend().expected_chain(c.id, 6, 24));
+        }
+        e.kv().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eos_stops_generation() {
+        let mut e = engine(2, 1.0);
+        // Find what token the chain emits at position 8+2, use it as EOS.
+        let chain = e.backend().expected_chain(1, 8, 10);
+        let eos = chain[2];
+        let mut r = req(1, 8, 100, 0.0);
+        r.params.eos_token = Some(eos);
+        e.submit(r);
+        let done = e.run_to_completion(200).unwrap();
+        assert!(done[0].tokens.len() <= 4, "stopped at eos: {:?}", done[0].tokens);
+        assert_eq!(*done[0].tokens.last().unwrap(), eos);
+    }
+
+    #[test]
+    fn arrivals_respected_and_clock_fast_forwards() {
+        let mut e = engine(2, 0.9);
+        e.submit(req(1, 4, 8, 5.0)); // arrives at t=5 virtual seconds
+        let done = e.run_to_completion(100).unwrap();
+        assert!(e.clock() >= 5.0);
+        assert!(done[0].first_token_at >= 5.0);
+        assert!(done[0].ttft() > 0.0);
+    }
+
+    #[test]
+    fn continuous_batching_admits_midstream() {
+        let mut e = engine(2, 0.9);
+        e.submit(req(1, 4, 60, 0.0));
+        // Second request arrives while the first is mid-generation.
+        e.step().unwrap();
+        let mid_clock = e.clock();
+        e.submit(req(2, 4, 10, mid_clock));
+        let done = e.run_to_completion(500).unwrap();
+        assert_eq!(done.len(), 2);
+        // Request 2 must have joined the running batch (batch of 2 seen).
+        assert!(e.metrics.mean_batch() > 1.0);
+    }
+
+    #[test]
+    fn overhead_is_measured_but_not_on_virtual_clock() {
+        let mut e = engine(3, 0.9);
+        e.submit(req(1, 4, 16, 0.0));
+        e.run_to_completion(100).unwrap();
+        assert!(e.metrics.time_overhead > 0.0);
+        // Virtual decode time is orders of magnitude above wall overhead in
+        // this tiny run only if sim times are large; just check accounting
+        // separation: decode_time excludes overhead.
+        let total = e.metrics.total_time();
+        assert!(
+            (total - (e.metrics.decode_time() + e.metrics.time_prefill + e.metrics.time_overhead))
+                .abs()
+                < 1e-12
+        );
+    }
+}

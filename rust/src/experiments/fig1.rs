@@ -1,0 +1,123 @@
+//! Fig. 1 — expert activation statistics.
+//!
+//! (a)/(b): theoretical N(t) (Eq. 8) vs empirically sampled routing for
+//! DeepSeek-V2-Lite (ρ=6/62) and Qwen1.5-MoE (ρ=4/60).
+//! (c): normalized per-expert load T̄_exp(T; ρ) vs sparsity ρ.
+
+use crate::arch::{presets, ModelArch};
+use crate::simulator::routing::Router;
+use crate::theory;
+use crate::util::csv::CsvTable;
+use crate::util::rng::Rng;
+
+/// One activation-curve sample.
+#[derive(Debug, Clone, Copy)]
+pub struct ActivationPoint {
+    pub tokens: u64,
+    pub theory: f64,
+    pub empirical: f64,
+}
+
+/// Theoretical vs empirical N(t) for a model (Fig. 1a/b).
+pub fn activation_curve(
+    model: &ModelArch,
+    token_counts: &[u64],
+    trials: usize,
+    seed: u64,
+) -> Vec<ActivationPoint> {
+    let e = model.experts();
+    let k = model.topk();
+    let router = Router::balanced(e, k);
+    let mut rng = Rng::seeded(seed);
+    token_counts
+        .iter()
+        .map(|&t| ActivationPoint {
+            tokens: t,
+            theory: theory::expected_active_experts(e, k, t),
+            empirical: router.empirical_activation(t, trials, &mut rng),
+        })
+        .collect()
+}
+
+/// T̄_exp(T; ρ)/T vs ρ for several T (Fig. 1c: normalized per-expert load).
+pub fn expert_load_curve(rhos: &[f64], token_counts: &[f64]) -> CsvTable {
+    let mut header = vec!["rho".to_string()];
+    for &t in token_counts {
+        header.push(format!("texp_norm_T{}", t as u64));
+    }
+    let mut table = CsvTable {
+        header,
+        rows: Vec::new(),
+    };
+    for &rho in rhos {
+        let mut row = vec![crate::util::csv::format_num(rho)];
+        for &t in token_counts {
+            row.push(crate::util::csv::format_num(theory::expert_load(t, rho) / t));
+        }
+        table.rows.push(row);
+    }
+    table
+}
+
+/// The full Fig. 1 experiment: returns (fig1a, fig1b, fig1c) tables.
+pub fn run(trials: usize, seed: u64) -> (CsvTable, CsvTable, CsvTable) {
+    let ts: Vec<u64> = (0..10).map(|i| 1u64 << i).collect();
+    let mk = |model: &ModelArch| -> CsvTable {
+        let mut t = CsvTable::new(&["tokens", "theory", "empirical"]);
+        for p in activation_curve(model, &ts, trials, seed) {
+            t.push_nums(&[p.tokens as f64, p.theory, p.empirical]);
+        }
+        t
+    };
+    let fig1a = mk(&presets::deepseek_v2_lite());
+    let fig1b = mk(&presets::qwen15_moe());
+    let rhos: Vec<f64> = (1..=40).map(|i| i as f64 * 0.025).collect();
+    let fig1c = expert_load_curve(&rhos, &[8.0, 32.0, 128.0]);
+    (fig1a, fig1b, fig1c)
+}
+
+/// Shape claims for the bench gate.
+pub fn max_rel_error(points: &[ActivationPoint]) -> f64 {
+    points
+        .iter()
+        .map(|p| (p.theory - p.empirical).abs() / p.theory.max(1.0))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theory_matches_sampled_routing() {
+        // The Fig. 1a/b claim: the i.i.d. derivation matches real routing.
+        for model in [presets::deepseek_v2_lite(), presets::qwen15_moe()] {
+            let pts = activation_curve(&model, &[1, 8, 64, 256], 300, 1);
+            assert!(
+                max_rel_error(&pts) < 0.05,
+                "{}: rel err {}",
+                model.name,
+                max_rel_error(&pts)
+            );
+        }
+    }
+
+    #[test]
+    fn load_curve_monotone_in_rho() {
+        let t = expert_load_curve(&[0.05, 0.2, 0.5, 1.0], &[32.0]);
+        let col = t.column_f64("texp_norm_T32").unwrap();
+        for w in col.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12, "not monotone: {col:?}");
+        }
+        // Dense endpoint: T̄_exp/T = 1.
+        assert!((col.last().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_produces_full_tables() {
+        let (a, b, c) = run(50, 2);
+        assert_eq!(a.rows.len(), 10);
+        assert_eq!(b.rows.len(), 10);
+        assert_eq!(c.rows.len(), 40);
+    }
+}

@@ -1,0 +1,216 @@
+//! Fig. 4 — analytic modeling vs measurement across MoE sparsity.
+//!
+//! The paper varies K (activated experts/token) of Qwen2-57B over
+//! {1, 2, 4, 8, 16, 32} and γ over {2, 4}, measures SD speedup on 19
+//! batch sizes (228 points), fits the Alg. 1 model on a 21-point
+//! stride-11 subsample, and overlays model vs measurement. We reproduce
+//! the full pipeline against the roofline simulator.
+
+use super::{paper_batch_grid, run_pair, RunOpts};
+use crate::arch::presets;
+use crate::fit::fit_perfmodel;
+use crate::hardware::platform_2x_gpu_a;
+use crate::perfmodel::{Measurement, ParamBounds, PerfModel, PerfParams};
+use crate::util::csv::CsvTable;
+
+pub const K_VALUES: [usize; 6] = [1, 2, 4, 8, 16, 32];
+pub const GAMMAS: [usize; 2] = [2, 4];
+
+/// One grid point with both measured and modeled speedups.
+#[derive(Debug, Clone, Copy)]
+pub struct GridPoint {
+    pub k: usize,
+    pub gamma: usize,
+    pub batch: usize,
+    pub sigma: f64,
+    pub measured: f64,
+    pub modeled: f64,
+}
+
+pub struct Fig4Output {
+    pub points: Vec<GridPoint>,
+    pub params: PerfParams,
+    pub fit_mse: f64,
+    pub full_mse: f64,
+    pub fit_count: usize,
+}
+
+/// Generate the full 228-point measurement grid (sorted by K, γ, B —
+/// the paper's dataframe ordering, which Table 3's stride sampling
+/// depends on).
+pub fn measure_grid(alpha: f64, seed: u64) -> anyhow::Result<Vec<Measurement>> {
+    let draft = presets::qwen2_0_5b();
+    let platform = platform_2x_gpu_a();
+    let base = presets::qwen2_57b_a14b();
+    let opts = RunOpts {
+        max_new_tokens: 24,
+        seed,
+        ..Default::default()
+    };
+    let mut out = Vec::new();
+    for &k in &K_VALUES {
+        let target = base.with_topk(k);
+        for &gamma in &GAMMAS {
+            for &b in &paper_batch_grid() {
+                let s = run_pair(&target, &draft, &platform, alpha, gamma, b, &opts)?;
+                out.push(Measurement {
+                    batch: b,
+                    gamma,
+                    k,
+                    e: base.experts(),
+                    sigma: s.sigma,
+                    speedup: s.speedup,
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Stride-subsample the sorted grid (`df[begin:end:stride]`, App. C.2).
+pub fn stride_sample(grid: &[Measurement], stride: usize) -> Vec<Measurement> {
+    grid.iter().step_by(stride).copied().collect()
+}
+
+/// Fit on a subsample, evaluate on the full grid.
+pub fn fit_and_eval(
+    grid: &[Measurement],
+    fit_set: &[Measurement],
+    seed: u64,
+) -> (PerfParams, f64, f64) {
+    let platform = platform_2x_gpu_a();
+    let model = PerfModel::new(&platform);
+    let t_rej_max = 1e-3;
+    let bounds = ParamBounds::for_setup(
+        &presets::qwen2_57b_a14b(),
+        &presets::qwen2_0_5b(),
+        &platform,
+        t_rej_max,
+    );
+    let (params, fit_mse) = fit_perfmodel(&model, fit_set, &bounds, seed);
+    let full_mse = model.mse(&params, grid);
+    (params, fit_mse, full_mse)
+}
+
+/// The full Fig. 4 pipeline with the paper's m=21 (stride 11) selection.
+pub fn run(alpha: f64, seed: u64) -> anyhow::Result<Fig4Output> {
+    let grid = measure_grid(alpha, seed)?;
+    let fit_set = stride_sample(&grid, 11);
+    let (params, fit_mse, full_mse) = fit_and_eval(&grid, &fit_set, seed);
+    let platform = platform_2x_gpu_a();
+    let model = PerfModel::new(&platform);
+    let points = grid
+        .iter()
+        .map(|m| GridPoint {
+            k: m.k,
+            gamma: m.gamma,
+            batch: m.batch,
+            sigma: m.sigma,
+            measured: m.speedup,
+            modeled: model.compute_speedup(&params, m),
+        })
+        .collect();
+    Ok(Fig4Output {
+        points,
+        params,
+        fit_mse,
+        full_mse,
+        fit_count: fit_set.len(),
+    })
+}
+
+pub fn to_csv(out: &Fig4Output) -> CsvTable {
+    let mut t = CsvTable::new(&["k", "gamma", "batch", "sigma", "measured", "modeled"]);
+    for p in &out.points {
+        t.push_nums(&[
+            p.k as f64,
+            p.gamma as f64,
+            p.batch as f64,
+            p.sigma,
+            p.measured,
+            p.modeled,
+        ]);
+    }
+    t
+}
+
+/// Peak batch size for a (K, γ) series.
+pub fn peak_batch(points: &[GridPoint], k: usize, gamma: usize) -> usize {
+    let series: Vec<&GridPoint> = points
+        .iter()
+        .filter(|p| p.k == k && p.gamma == gamma)
+        .collect();
+    let speeds: Vec<f64> = series.iter().map(|p| p.measured).collect();
+    series[crate::util::stats::argmax(&speeds)].batch
+}
+
+/// Width of the batch range maintaining speedup ≥ peak/√2 (the brown
+/// dashed annotation in the paper's Fig. 4).
+pub fn plateau_width(points: &[GridPoint], k: usize, gamma: usize) -> usize {
+    let series: Vec<&GridPoint> = points
+        .iter()
+        .filter(|p| p.k == k && p.gamma == gamma)
+        .collect();
+    let peak = series
+        .iter()
+        .map(|p| p.measured)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let threshold = peak / std::f64::consts::SQRT_2;
+    series.iter().filter(|p| p.measured >= threshold).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One smaller-grid test keeps unit runtime bounded; the full 228-point
+    // pipeline runs in the fig4 bench and integration tests.
+    #[test]
+    fn fit_tracks_simulated_measurements() {
+        let draft = presets::qwen2_0_5b();
+        let platform = platform_2x_gpu_a();
+        let base = presets::qwen2_57b_a14b();
+        let opts = RunOpts {
+            max_new_tokens: 16,
+            ..Default::default()
+        };
+        let mut grid = Vec::new();
+        for &k in &[2usize, 8] {
+            let target = base.with_topk(k);
+            for &b in &[1usize, 4, 8, 16, 32, 64, 100] {
+                let s = run_pair(&target, &draft, &platform, 0.85, 3, b, &opts).unwrap();
+                grid.push(Measurement {
+                    batch: b,
+                    gamma: 3,
+                    k,
+                    e: 64,
+                    sigma: s.sigma,
+                    speedup: s.speedup,
+                });
+            }
+        }
+        let (_, fit_mse, full_mse) = fit_and_eval(&grid, &grid, 5);
+        // Engine measurements carry stochastic σ noise; the paper's own
+        // Table 3 reports MSE ≈ 1.5 on speedups of O(1–2.5). We demand an
+        // order of magnitude better on the simulator.
+        assert!(fit_mse < 0.12, "fit MSE {fit_mse}");
+        assert!(full_mse < 0.12, "full MSE {full_mse}");
+    }
+
+    #[test]
+    fn stride_sampling_counts() {
+        let grid: Vec<Measurement> = (0..228)
+            .map(|i| Measurement {
+                batch: i + 1,
+                gamma: 2,
+                k: 8,
+                e: 64,
+                sigma: 0.9,
+                speedup: 1.0,
+            })
+            .collect();
+        assert_eq!(stride_sample(&grid, 11).len(), 21);
+        assert_eq!(stride_sample(&grid, 25).len(), 10);
+        assert_eq!(stride_sample(&grid, 1).len(), 228);
+    }
+}

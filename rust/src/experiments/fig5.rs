@@ -1,0 +1,109 @@
+//! Fig. 5 — SD speedup trends across more settings, with 5 individual
+//! runs + their mean, including the tile-quantization sawtooth (App. A.1).
+
+use super::{paper_batch_grid, run_pair, RunOpts};
+use crate::arch::presets;
+use crate::hardware::platform_by_name;
+use crate::util::csv::CsvTable;
+use crate::workload::{calibrated_alpha, Dataset};
+
+pub struct Fig5Output {
+    /// rows: batch × runs (run0..run4, mean).
+    pub table: CsvTable,
+    pub mean_speedups: Vec<f64>,
+    pub run_stddev: f64,
+}
+
+/// One Fig. 5 panel: `runs` independent noisy runs of a batch sweep.
+pub fn run(
+    model: &str,
+    platform: &str,
+    dataset: Dataset,
+    temp: f64,
+    gamma: usize,
+    runs: usize,
+) -> anyhow::Result<Fig5Output> {
+    let (target, draft) = match model {
+        "qwen2" => (presets::qwen2_57b_a14b(), presets::qwen2_0_5b()),
+        "mixtral" => (presets::mixtral_8x7b(), presets::eagle_head_mixtral()),
+        other => anyhow::bail!("unknown model {other}"),
+    };
+    let platform = platform_by_name(platform)?;
+    let alpha = calibrated_alpha(model, dataset, temp, gamma);
+    let batches = paper_batch_grid();
+
+    let mut per_run: Vec<Vec<f64>> = Vec::with_capacity(runs);
+    for r in 0..runs {
+        let opts = RunOpts {
+            seed: 1000 + r as u64,
+            noise: true,
+            tile_effects: true,
+            max_new_tokens: 24,
+            ..Default::default()
+        };
+        let sweep: Vec<f64> = batches
+            .iter()
+            .map(|&b| {
+                run_pair(&target, &draft, &platform, alpha, gamma, b, &opts)
+                    .map(|s| s.speedup)
+            })
+            .collect::<anyhow::Result<_>>()?;
+        per_run.push(sweep);
+    }
+
+    let mut header = vec!["batch".to_string()];
+    for r in 0..runs {
+        header.push(format!("run{r}"));
+    }
+    header.push("mean".into());
+    let mut table = CsvTable {
+        header,
+        rows: Vec::new(),
+    };
+    let mut mean_speedups = Vec::with_capacity(batches.len());
+    let mut devs = Vec::new();
+    for (i, &b) in batches.iter().enumerate() {
+        let vals: Vec<f64> = per_run.iter().map(|r| r[i]).collect();
+        let mean = crate::util::stats::mean(&vals);
+        devs.push(crate::util::stats::stddev(&vals));
+        mean_speedups.push(mean);
+        let mut row = vec![b as f64];
+        row.extend(&vals);
+        row.push(mean);
+        table.push_nums(&row);
+    }
+    Ok(Fig5Output {
+        table,
+        mean_speedups,
+        run_stddev: crate::util::stats::mean(&devs),
+    })
+}
+
+/// Shape checks: rise-then-fall of the mean, and small run-to-run
+/// variance (App. A.1: "the variance across different runs is minimal").
+pub fn check_shape(out: &Fig5Output) -> Result<(), String> {
+    let peak = crate::util::stats::argmax(&out.mean_speedups);
+    if peak == 0 || peak == out.mean_speedups.len() - 1 {
+        return Err(format!("mean speedup peak not interior: {:?}", out.mean_speedups));
+    }
+    let peak_val = out.mean_speedups[peak];
+    if out.run_stddev > 0.15 * peak_val {
+        return Err(format!(
+            "run-to-run stddev too large: {} vs peak {peak_val}",
+            out.run_stddev
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noisy_runs_have_small_variance_and_paper_shape() {
+        let out = run("qwen2", "2xGPU-A", Dataset::HumanEval, 0.0, 3, 3).unwrap();
+        check_shape(&out).unwrap();
+        assert!(out.run_stddev > 0.0, "noise should produce some variance");
+    }
+}

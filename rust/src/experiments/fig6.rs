@@ -1,0 +1,83 @@
+//! Fig. 6 — end-to-end SD speedup: MoE vs dense models across datasets
+//! and temperatures (App. A.2).
+
+use super::{paper_batch_grid, run_pair, RunOpts};
+use crate::arch::presets;
+use crate::hardware::platform_2x_gpu_a;
+use crate::util::csv::CsvTable;
+use crate::workload::{calibrated_alpha, Dataset};
+
+pub struct Fig6Output {
+    pub table: CsvTable,
+    pub moe: Vec<f64>,
+    pub dense: Vec<f64>,
+    pub batches: Vec<usize>,
+}
+
+pub fn run(dataset: Dataset, temp: f64, gamma: usize, seed: u64) -> anyhow::Result<Fig6Output> {
+    let platform = platform_2x_gpu_a();
+    let batches = paper_batch_grid();
+    let opts = RunOpts {
+        seed,
+        max_new_tokens: 24,
+        ..Default::default()
+    };
+
+    let moe_alpha = calibrated_alpha("qwen2", dataset, temp, gamma);
+    let dense_alpha = calibrated_alpha("opt", dataset, temp, gamma);
+    let (moe_t, moe_d) = (presets::qwen2_57b_a14b(), presets::qwen2_0_5b());
+    let (opt_t, opt_d) = (presets::opt_30b(), presets::opt_350m());
+
+    let mut table = CsvTable::new(&["batch", "moe_speedup", "dense_speedup"]);
+    let mut moe = Vec::new();
+    let mut dense = Vec::new();
+    for &b in &batches {
+        let m = run_pair(&moe_t, &moe_d, &platform, moe_alpha, gamma, b, &opts)?;
+        let d = run_pair(&opt_t, &opt_d, &platform, dense_alpha, gamma, b, &opts)?;
+        moe.push(m.speedup);
+        dense.push(d.speedup);
+        table.push_nums(&[b as f64, m.speedup, d.speedup]);
+    }
+    Ok(Fig6Output {
+        table,
+        moe,
+        dense,
+        batches,
+    })
+}
+
+/// Fig. 6's two observations: MoE rises-then-falls while dense only falls,
+/// and MoE wins at moderate batch (B ≥ 16).
+pub fn check_shape(out: &Fig6Output) -> Result<(), String> {
+    let peak = crate::util::stats::argmax(&out.moe);
+    if peak == 0 {
+        return Err(format!("MoE speedup should rise first: {:?}", out.moe));
+    }
+    // Dense: overall decreasing (allow small local noise).
+    let d0 = out.dense[0];
+    let dlast = *out.dense.last().unwrap();
+    if dlast >= d0 {
+        return Err(format!("dense speedup should decay: {d0} → {dlast}"));
+    }
+    let mid = out.batches.iter().position(|&b| b >= 16).unwrap();
+    for i in mid..out.batches.len() {
+        if out.moe[i] <= out.dense[i] {
+            return Err(format!(
+                "MoE should beat dense at B={}: {} vs {}",
+                out.batches[i], out.moe[i], out.dense[i]
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moe_beats_dense_past_b16() {
+        let out = run(Dataset::HumanEval, 0.0, 3, 11).unwrap();
+        check_shape(&out).unwrap();
+    }
+}

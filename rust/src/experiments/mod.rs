@@ -1,0 +1,260 @@
+//! Experiment implementations — one module per paper table/figure.
+//!
+//! Each `figN`/`tableN` module exposes a `run(...)` returning structured
+//! results; the matching `rust/benches/*` target prints the paper-style
+//! rows, writes CSV/markdown under `results/`, and asserts the paper's
+//! qualitative *shape* claims (who wins, where peaks fall). The CLI
+//! (`moesd bench <id>`) calls the same code.
+//!
+//! Shared machinery here: [`run_pair`] measures one (platform, model,
+//! α, γ, B) point by driving the *actual serving engine* twice — once
+//! speculative, once autoregressive — on the synthetic backend's virtual
+//! clock, exactly how the paper measures T_AR / T_SD on vLLM.
+
+pub mod ablations;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod table3;
+pub mod tables;
+
+use crate::arch::ModelArch;
+use crate::batching::{Buckets, Request, SamplingParams};
+use crate::engine::{Engine, EngineConfig};
+use crate::hardware::Platform;
+use crate::kvcache::KvConfig;
+use crate::scheduler::SchedulerConfig;
+use crate::simulator::ExecSim;
+use crate::spec::synthetic::SyntheticLm;
+use crate::theory;
+
+/// One measured operating point.
+#[derive(Debug, Clone, Copy)]
+pub struct PairStats {
+    pub batch: usize,
+    pub gamma: usize,
+    /// Total decode time, autoregressive baseline.
+    pub t_ar: f64,
+    /// Total decode time, speculative.
+    pub t_sd: f64,
+    /// Measured σ (accepted fraction of γ+1).
+    pub sigma: f64,
+    /// End-to-end SD speedup T_AR / T_SD.
+    pub speedup: f64,
+    /// Target efficiency T_T(B,1)/T_T(B,γ+1) from the simulator.
+    pub target_efficiency: f64,
+}
+
+/// Options for a measurement run.
+#[derive(Debug, Clone)]
+pub struct RunOpts {
+    pub max_new_tokens: usize,
+    pub prompt_len: usize,
+    pub seed: u64,
+    /// Sampled expert activation + per-run noise (Fig. 5 individual runs).
+    pub noise: bool,
+    /// GEMM tile quantization (Fig. 5 sawtooth).
+    pub tile_effects: bool,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            max_new_tokens: 32,
+            prompt_len: 16,
+            seed: 0,
+            noise: false,
+            tile_effects: false,
+        }
+    }
+}
+
+fn build_engine(
+    target: &ModelArch,
+    draft: &ModelArch,
+    platform: &Platform,
+    alpha: f64,
+    gamma: usize,
+    batch: usize,
+    opts: &RunOpts,
+) -> Engine<SyntheticLm> {
+    let mut tsim = ExecSim::new(target.clone(), platform.clone());
+    tsim = tsim.with_tile_effects(opts.tile_effects);
+    // The draft runs on a single device of the platform (the paper notes
+    // the small draft model stays single-GPU while the target shards).
+    let draft_platform = Platform::new(platform.gpu.clone(), 1, platform.interconnect_bw);
+    let dsim = ExecSim::new(draft.clone(), draft_platform);
+    let mut backend = SyntheticLm::new(tsim, dsim, alpha, opts.seed);
+    if opts.noise {
+        backend = backend.with_noise(opts.seed ^ 0xabcd);
+    }
+    let config = EngineConfig {
+        gamma,
+        kv: KvConfig {
+            num_blocks: 1 << 16,
+            block_size: 16,
+        },
+        scheduler: SchedulerConfig {
+            max_batch: batch,
+            admit_reserve_tokens: opts.max_new_tokens,
+            tpot_slo: None,
+        },
+        buckets: Buckets::pow2_up_to(batch.max(1)),
+        seed: opts.seed,
+    };
+    Engine::new(config, backend)
+}
+
+fn run_one(
+    target: &ModelArch,
+    draft: &ModelArch,
+    platform: &Platform,
+    alpha: f64,
+    gamma: usize,
+    batch: usize,
+    opts: &RunOpts,
+) -> anyhow::Result<(f64, f64)> {
+    let mut engine = build_engine(target, draft, platform, alpha, gamma, batch, opts);
+    for id in 0..batch as u64 {
+        engine.submit(Request {
+            id,
+            prompt: (0..opts.prompt_len as u32).collect(),
+            params: SamplingParams {
+                temperature: 0.0,
+                max_new_tokens: opts.max_new_tokens,
+                eos_token: None,
+            },
+            arrival: 0.0,
+        });
+    }
+    engine.run_to_completion(100_000)?;
+    let sigma = engine.metrics.sigma(gamma.max(1));
+    Ok((engine.metrics.decode_time(), sigma))
+}
+
+/// Measure SD vs AR at one operating point (the paper's basic unit).
+pub fn run_pair(
+    target: &ModelArch,
+    draft: &ModelArch,
+    platform: &Platform,
+    alpha: f64,
+    gamma: usize,
+    batch: usize,
+    opts: &RunOpts,
+) -> anyhow::Result<PairStats> {
+    assert!(gamma >= 1, "run_pair needs a speculative γ");
+    let (t_sd, sigma) = run_one(target, draft, platform, alpha, gamma, batch, opts)?;
+    let (t_ar, _) = run_one(target, draft, platform, alpha, 0, batch, opts)?;
+    let sim = ExecSim::new(target.clone(), platform.clone());
+    let teff = sim.target_efficiency(batch, gamma, 512);
+    Ok(PairStats {
+        batch,
+        gamma,
+        t_ar,
+        t_sd,
+        sigma,
+        speedup: t_ar / t_sd,
+        target_efficiency: teff,
+    })
+}
+
+/// The batch-size sweep used across Figs. 2/4/5/6 and the peak-speedup
+/// tables (mirrors the paper's 19-point grid).
+pub fn paper_batch_grid() -> Vec<usize> {
+    vec![1, 2, 4, 8, 12, 16, 20, 24, 28, 32, 36, 40, 44, 48, 52, 56, 60, 80, 100]
+}
+
+/// Find the peak speedup across a batch sweep (the paper's `x`).
+pub fn peak_speedup(stats: &[PairStats]) -> &PairStats {
+    stats
+        .iter()
+        .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
+        .expect("empty sweep")
+}
+
+/// σ-adjustment of Fig. 4: raw speedups at modified K are scaled by
+/// σ_{K=8}/σ_K to remove the acceptance-rate confound (our synthetic
+/// backend holds α constant across K, so the factor is ≈1; kept for
+/// fidelity with the paper's method and exercised in tests).
+pub fn sigma_adjust(raw_speedup: f64, sigma_k: f64, sigma_ref: f64) -> f64 {
+    raw_speedup * sigma_ref / sigma_k
+}
+
+/// Eq. 5 σ for the calibrated α at this γ (the expectation the measured
+/// σ should track).
+pub fn expected_sigma(alpha: f64, gamma: usize) -> f64 {
+    theory::sigma_from_alpha(alpha, gamma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::hardware::platform_2x_gpu_a;
+
+    #[test]
+    fn run_pair_produces_consistent_stats() {
+        let target = presets::qwen2_57b_a14b();
+        let draft = presets::qwen2_0_5b();
+        let p = platform_2x_gpu_a();
+        let opts = RunOpts {
+            max_new_tokens: 16,
+            ..Default::default()
+        };
+        let s = run_pair(&target, &draft, &p, 0.9, 3, 8, &opts).unwrap();
+        assert!(s.t_ar > 0.0 && s.t_sd > 0.0);
+        assert!((s.speedup - s.t_ar / s.t_sd).abs() < 1e-12);
+        assert!(s.sigma > 0.5 && s.sigma <= 1.0);
+        assert!(s.target_efficiency > 0.0 && s.target_efficiency <= 1.0);
+    }
+
+    #[test]
+    fn moderate_batch_beats_batch_one() {
+        // The headline claim, as measured end-to-end by the engine.
+        let target = presets::qwen2_57b_a14b();
+        let draft = presets::qwen2_0_5b();
+        let p = platform_2x_gpu_a();
+        let opts = RunOpts::default();
+        let s1 = run_pair(&target, &draft, &p, 0.9, 4, 1, &opts).unwrap();
+        let s32 = run_pair(&target, &draft, &p, 0.9, 4, 32, &opts).unwrap();
+        assert!(
+            s32.speedup > s1.speedup,
+            "B=32 {} should beat B=1 {}",
+            s32.speedup,
+            s1.speedup
+        );
+        assert!(s32.speedup > 1.3, "moderate-batch SD should win: {}", s32.speedup);
+    }
+
+    #[test]
+    fn sigma_tracks_eq5() {
+        let target = presets::qwen2_57b_a14b();
+        let draft = presets::qwen2_0_5b();
+        let p = platform_2x_gpu_a();
+        let opts = RunOpts {
+            max_new_tokens: 48,
+            ..Default::default()
+        };
+        let alpha = 0.8;
+        let s = run_pair(&target, &draft, &p, alpha, 3, 16, &opts).unwrap();
+        let want = expected_sigma(alpha, 3);
+        assert!((s.sigma - want).abs() < 0.08, "σ {} vs Eq.5 {want}", s.sigma);
+    }
+
+    #[test]
+    fn sigma_adjust_identity_when_equal() {
+        assert_eq!(sigma_adjust(2.0, 0.9, 0.9), 2.0);
+        assert!((sigma_adjust(2.0, 0.45, 0.9) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_grid_matches_paper_table3() {
+        let g = paper_batch_grid();
+        assert_eq!(g.len(), 19);
+        assert_eq!(g[0], 1);
+        assert_eq!(*g.last().unwrap(), 100);
+    }
+}

@@ -1,0 +1,176 @@
+//! Table 3 (+ Figs. 8–28) — modeling robustness vs measurement count m.
+//!
+//! The paper fits the Alg. 1 model on stride-subsampled measurement sets
+//! (`df[begin:end:stride]`, m = ceil(228/stride)) and reports the MSE for
+//! m from 10 to 228, observing that biased selections (m = 12, 13: batch
+//! coverage gaps) fit worse than smaller-but-uniform ones (m = 11).
+
+use super::fig4;
+use crate::perfmodel::Measurement;
+use crate::util::csv::CsvTable;
+
+/// The paper's stride list (Table 3 rows).
+pub const STRIDES: [usize; 21] = [
+    25, 22, 20, 18, 17, 16, 15, 14, 13, 12, 11, 10, 9, 8, 7, 6, 5, 4, 3, 2, 1,
+];
+
+#[derive(Debug, Clone)]
+pub struct MseRow {
+    pub m: usize,
+    pub stride: usize,
+    /// MSE of the fit evaluated on the FULL 228-point grid.
+    pub mse: f64,
+    /// Distinct batch sizes covered by the selection.
+    pub batch_coverage: Vec<usize>,
+}
+
+pub struct Table3Output {
+    pub rows: Vec<MseRow>,
+}
+
+pub fn run(alpha: f64, seed: u64) -> anyhow::Result<Table3Output> {
+    let grid = fig4::measure_grid(alpha, seed)?;
+    Ok(run_on_grid(&grid, seed))
+}
+
+/// Separate entry so tests can reuse a precomputed grid.
+pub fn run_on_grid(grid: &[Measurement], seed: u64) -> Table3Output {
+    let mut rows = Vec::new();
+    for &stride in &STRIDES {
+        let fit_set = fig4::stride_sample(grid, stride);
+        if fit_set.len() < crate::perfmodel::N_PARAMS {
+            continue;
+        }
+        let (_, _, full_mse) = fig4::fit_and_eval(grid, &fit_set, seed);
+        let mut coverage: Vec<usize> = fit_set.iter().map(|m| m.batch).collect();
+        coverage.sort_unstable();
+        coverage.dedup();
+        rows.push(MseRow {
+            m: fit_set.len(),
+            stride,
+            mse: full_mse,
+            batch_coverage: coverage,
+        });
+    }
+    Table3Output { rows }
+}
+
+pub fn to_csv(out: &Table3Output) -> CsvTable {
+    let mut t = CsvTable::new(&["m", "stride", "mse", "batch_sizes_covered"]);
+    for r in &out.rows {
+        t.push_row(vec![
+            format!("{}", r.m),
+            format!("{}", r.stride),
+            format!("{:.4}", r.mse),
+            format!(
+                "{}",
+                r.batch_coverage
+                    .iter()
+                    .map(|b| b.to_string())
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            ),
+        ]);
+    }
+    t
+}
+
+/// Table 3's qualitative claims:
+/// - with uniform coverage and m ≥ ~15, the fit is stable (MSE within a
+///   small factor of the best),
+/// - the large-m fits are at least as good as the tiny-m ones.
+pub fn check_shape(out: &Table3Output) -> Result<(), String> {
+    let best = out
+        .rows
+        .iter()
+        .map(|r| r.mse)
+        .fold(f64::INFINITY, f64::min);
+    let m228 = out
+        .rows
+        .iter()
+        .find(|r| r.stride == 1)
+        .ok_or("missing m=228 row")?;
+    if m228.mse > 4.0 * best + 1e-6 {
+        return Err(format!("full-grid fit unstable: {} vs best {best}", m228.mse));
+    }
+    // The paper's own Table 3 has ~40% MSE spread across uniform m ≥ 14
+    // selections, with m = 10/12/13 notably worse. We require the m ≥ 21
+    // fits (the paper's chosen operating point and denser) to stay within
+    // an absolute band — 10-parameter LM from random starts occasionally
+    // lands in a mild local minimum at very small m, as scipy TRR does.
+    let stable: Vec<&MseRow> = out.rows.iter().filter(|r| r.m >= 21).collect();
+    for r in &stable {
+        if r.mse > (20.0 * best).max(5e-2) {
+            return Err(format!("m={} fit degraded: {} vs best {best}", r.m, r.mse));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::{Measurement, PerfModel, PerfParams};
+
+    /// Synthetic grid with known ground truth keeps this unit test fast;
+    /// the measured-grid version runs in the table3 bench.
+    #[test]
+    fn stride_sweep_on_synthetic_grid() {
+        let model = PerfModel::with_ridge_point(150.0);
+        let truth = PerfParams {
+            bias: 0.02,
+            k1: 3e-5,
+            k2: 2.5e-4,
+            k3: 2e-4,
+            draft_bias: 0.0015,
+            draft_k: 1e-5,
+            reject_bias: 2e-4,
+            reject_k: 1e-7,
+            lambda: 0.55,
+            s: 1.03,
+        };
+        let mut grid = Vec::new();
+        for &k in &fig4::K_VALUES {
+            for &gamma in &fig4::GAMMAS {
+                for &b in &super::super::paper_batch_grid() {
+                    let mut m = Measurement {
+                        batch: b,
+                        gamma,
+                        k,
+                        e: 64,
+                        sigma: 0.88,
+                        speedup: 0.0,
+                    };
+                    m.speedup = model.compute_speedup(&truth, &m);
+                    grid.push(m);
+                }
+            }
+        }
+        assert_eq!(grid.len(), 228);
+        let out = run_on_grid(&grid, 3);
+        assert!(out.rows.len() >= 20);
+        check_shape(&out).unwrap();
+        // With noise-free synthetic data the large-m fit is near-perfect.
+        let m228 = out.rows.iter().find(|r| r.stride == 1).unwrap();
+        assert!(m228.mse < 5e-3, "mse={}", m228.mse);
+    }
+
+    #[test]
+    fn coverage_gaps_reported() {
+        let grid: Vec<Measurement> = (0..228)
+            .map(|i| Measurement {
+                batch: super::super::paper_batch_grid()[i % 19],
+                gamma: 2,
+                k: 8,
+                e: 64,
+                sigma: 0.9,
+                speedup: 1.5,
+            })
+            .collect();
+        let sel = fig4::stride_sample(&grid, 20); // m=12
+        let mut cov: Vec<usize> = sel.iter().map(|m| m.batch).collect();
+        cov.sort_unstable();
+        cov.dedup();
+        assert!(cov.len() < 19, "stride selection should lose coverage");
+    }
+}

@@ -1,0 +1,260 @@
+//! Tables 1 & 2 — peak SD speedup (x) across datasets, temperatures, γ,
+//! models (Table 1: Qwen2 + Mixtral on 2×GPU-A) and hardware platforms
+//! (Table 2: Qwen2 on 2×GPU-B / 4×GPU-A / 4×GPU-C). Each cell reports
+//! T_AR, T_SD, σ and x at the batch size maximizing x — the paper's exact
+//! reporting format.
+
+use super::{paper_batch_grid, peak_speedup, run_pair, PairStats, RunOpts};
+use crate::arch::presets;
+use crate::hardware::platform_by_name;
+use crate::util::csv::CsvTable;
+use crate::util::table::{f2, MdTable};
+use crate::workload::{calibrated_alpha, Dataset};
+
+/// One table row (one dataset × temperature, three γ columns).
+#[derive(Debug, Clone)]
+pub struct TableRow {
+    pub device: String,
+    pub model: String,
+    pub dataset: Dataset,
+    pub temp: f64,
+    /// Indexed by γ−2 (γ ∈ {2, 3, 4}).
+    pub cells: Vec<PairStats>,
+}
+
+pub const GAMMAS: [usize; 3] = [2, 3, 4];
+
+fn archs_for(model: &str) -> (crate::arch::ModelArch, crate::arch::ModelArch) {
+    match model {
+        "qwen2" => (presets::qwen2_57b_a14b(), presets::qwen2_0_5b()),
+        "mixtral" => (presets::mixtral_8x7b(), presets::eagle_head_mixtral()),
+        other => panic!("unknown model {other}"),
+    }
+}
+
+/// Compute one row: for each γ, sweep batches and keep the peak-x point.
+pub fn compute_row(
+    device: &str,
+    model: &str,
+    dataset: Dataset,
+    temp: f64,
+    seed: u64,
+) -> anyhow::Result<TableRow> {
+    let (target, draft) = archs_for(model);
+    let platform = platform_by_name(device)?;
+    let opts = RunOpts {
+        seed,
+        // Long enough that final-round truncation doesn't bias σ down
+        // (the paper decodes long windows; see EngineMetrics::sigma).
+        max_new_tokens: 64,
+        ..Default::default()
+    };
+    let mut cells = Vec::new();
+    for &gamma in &GAMMAS {
+        let alpha = calibrated_alpha(model, dataset, temp, gamma);
+        let sweep: Vec<PairStats> = paper_batch_grid()
+            .into_iter()
+            .map(|b| run_pair(&target, &draft, &platform, alpha, gamma, b, &opts))
+            .collect::<anyhow::Result<_>>()?;
+        cells.push(*peak_speedup(&sweep));
+    }
+    Ok(TableRow {
+        device: device.into(),
+        model: model.into(),
+        dataset,
+        temp,
+        cells,
+    })
+}
+
+/// Table 1: Qwen2 + Mixtral on 2×GPU-A.
+pub fn table1(seed: u64) -> anyhow::Result<Vec<TableRow>> {
+    let mut rows = Vec::new();
+    for model in ["qwen2", "mixtral"] {
+        for dataset in [Dataset::HumanEval, Dataset::MtBench] {
+            for temp in [0.0, 1.0] {
+                rows.push(compute_row("2xGPU-A", model, dataset, temp, seed)?);
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Table 2: Qwen2 across the other platforms.
+pub fn table2(seed: u64) -> anyhow::Result<Vec<TableRow>> {
+    let mut rows = Vec::new();
+    for device in ["2xGPU-B", "4xGPU-A", "4xGPU-C"] {
+        for dataset in [Dataset::HumanEval, Dataset::MtBench] {
+            for temp in [0.0, 1.0] {
+                rows.push(compute_row(device, "qwen2", dataset, temp, seed)?);
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Render rows in the paper's layout.
+pub fn render_markdown(rows: &[TableRow]) -> String {
+    let mut t = MdTable::new(&[
+        "device", "model", "dataset", "temp", "γ=2 T_AR", "T_SD", "σ", "x", "γ=3 T_AR", "T_SD",
+        "σ", "x", "γ=4 T_AR", "T_SD", "σ", "x",
+    ]);
+    for r in rows {
+        let mut cells = vec![
+            r.device.clone(),
+            r.model.clone(),
+            r.dataset.name().to_string(),
+            format!("{:.1}", r.temp),
+        ];
+        for c in &r.cells {
+            cells.push(f2(c.t_ar));
+            cells.push(f2(c.t_sd));
+            cells.push(f2(c.sigma));
+            cells.push(f2(c.speedup));
+        }
+        t.push(cells);
+    }
+    t.render()
+}
+
+pub fn to_csv(rows: &[TableRow]) -> CsvTable {
+    let mut t = CsvTable::new(&[
+        "device", "model", "dataset", "temp", "gamma", "peak_batch", "t_ar", "t_sd", "sigma",
+        "x",
+    ]);
+    for r in rows {
+        for (gi, c) in r.cells.iter().enumerate() {
+            t.push_row(vec![
+                r.device.clone(),
+                r.model.clone(),
+                r.dataset.name().into(),
+                format!("{}", r.temp),
+                format!("{}", GAMMAS[gi]),
+                format!("{}", c.batch),
+                format!("{:.4}", c.t_ar),
+                format!("{:.4}", c.t_sd),
+                format!("{:.4}", c.sigma),
+                format!("{:.4}", c.speedup),
+            ]);
+        }
+    }
+    t
+}
+
+/// Shape claims shared by the two table benches.
+pub fn check_table1(rows: &[TableRow]) -> Result<(), String> {
+    let find = |model: &str, ds: Dataset, temp: f64| -> &TableRow {
+        rows.iter()
+            .find(|r| r.model == model && r.dataset == ds && r.temp == temp)
+            .expect("row missing")
+    };
+    // 1. Every peak beats 1.0 (SD wins somewhere for every config).
+    for r in rows {
+        for c in &r.cells {
+            if c.speedup <= 1.0 {
+                return Err(format!(
+                    "{} {} T={} γ={}: no speedup ({})",
+                    r.model,
+                    r.dataset.name(),
+                    r.temp,
+                    c.gamma,
+                    c.speedup
+                ));
+            }
+        }
+    }
+    // 2. Code at temp 0 (most predictable) beats chat at temp 1 for the
+    //    same model and γ=4 (paper: 2.18 vs 1.20 for Qwen2).
+    let code = find("qwen2", Dataset::HumanEval, 0.0).cells[2].speedup;
+    let chat = find("qwen2", Dataset::MtBench, 1.0).cells[2].speedup;
+    if code <= chat {
+        return Err(format!("humaneval T0 ({code}) should beat mtbench T1 ({chat})"));
+    }
+    // 3. Qwen2 humaneval-T0 speedup grows with γ (1.63 → 1.96 → 2.18).
+    let r = find("qwen2", Dataset::HumanEval, 0.0);
+    if !(r.cells[0].speedup < r.cells[1].speedup && r.cells[1].speedup < r.cells[2].speedup) {
+        return Err(format!(
+            "γ ordering broken: {:?}",
+            r.cells.iter().map(|c| c.speedup).collect::<Vec<_>>()
+        ));
+    }
+    // 4. Peaks occur at moderate batch sizes.
+    for r in rows {
+        for c in &r.cells {
+            if c.batch < 4 || c.batch > 80 {
+                return Err(format!("peak at extreme batch {}", c.batch));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Table 2's observation (1): GPU-B (higher ridge point) peaks above
+/// 2×GPU-A for the matching config.
+pub fn check_table2(table1_rows: &[TableRow], table2_rows: &[TableRow]) -> Result<(), String> {
+    let t1 = table1_rows
+        .iter()
+        .find(|r| r.model == "qwen2" && r.dataset == Dataset::HumanEval && r.temp == 0.0)
+        .expect("table1 row");
+    let t2 = table2_rows
+        .iter()
+        .find(|r| {
+            r.device == "2xGPU-B" && r.dataset == Dataset::HumanEval && r.temp == 0.0
+        })
+        .expect("table2 row");
+    // The paper's own margin is small (2.29 vs 2.18, ~5%); our measured
+    // peaks carry sampling noise of the same order, so allow a 3% band on
+    // the measured comparison…
+    let a = t1.cells[2].speedup; // γ=4
+    let b = t2.cells[2].speedup;
+    if b <= 0.97 * a {
+        return Err(format!(
+            "higher-RP GPU-B ({b}) should beat GPU-A ({a}) at γ=4"
+        ));
+    }
+    // …and additionally assert the *deterministic* mechanism behind the
+    // observation: GPU-B's higher ridge point keeps target efficiency
+    // above GPU-A's at and beyond the peak region.
+    use crate::arch::presets as ps;
+    use crate::simulator::ExecSim;
+    let sim_a = ExecSim::new(ps::qwen2_57b_a14b(), crate::hardware::platform_2x_gpu_a());
+    let sim_b = ExecSim::new(ps::qwen2_57b_a14b(), crate::hardware::platform_2x_gpu_b());
+    for batch in [32usize, 64, 100] {
+        let ea = sim_a.target_efficiency(batch, 4, 512);
+        let eb = sim_b.target_efficiency(batch, 4, 512);
+        if eb <= ea {
+            return Err(format!(
+                "GPU-B target efficiency should exceed GPU-A at B={batch}: {eb} vs {ea}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_row_computes_with_paper_like_magnitudes() {
+        let r = compute_row("2xGPU-A", "qwen2", Dataset::HumanEval, 0.0, 1).unwrap();
+        assert_eq!(r.cells.len(), 3);
+        // γ=4 peak in the paper is 2.18x on this platform; accept a band.
+        // Our idealized simulator overshoots vLLM's absolute peak by
+        // ~30-45% (no framework stalls); the band reflects that and is
+        // discussed in EXPERIMENTS.md.
+        let x = r.cells[2].speedup;
+        assert!(x > 1.6 && x < 3.6, "γ=4 peak {x}");
+        // σ close to the calibration target 0.91.
+        assert!((r.cells[2].sigma - 0.91).abs() < 0.08, "σ {}", r.cells[2].sigma);
+    }
+
+    #[test]
+    fn markdown_and_csv_render() {
+        let r = compute_row("2xGPU-A", "mixtral", Dataset::MtBench, 1.0, 2).unwrap();
+        let md = render_markdown(&[r.clone()]);
+        assert!(md.contains("mixtral"));
+        let csv = to_csv(&[r]);
+        assert_eq!(csv.rows.len(), 3);
+    }
+}

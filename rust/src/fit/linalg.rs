@@ -1,0 +1,200 @@
+//! Small dense linear algebra for the least-squares optimizer: row-major
+//! matrices, matrix products, and an LDLᵀ solver with diagonal-damping
+//! fallback (all the LM normal equations need at n ≈ 10).
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map_or(0, Vec::len);
+        assert!(rows.iter().all(|row| row.len() == c), "ragged rows");
+        Mat {
+            rows: r,
+            cols: c,
+            data: rows.into_iter().flatten().collect(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// AᵀA (the Gauss–Newton normal matrix).
+    pub fn gram(&self) -> Mat {
+        let n = self.cols;
+        let mut out = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let mut acc = 0.0;
+                for r in 0..self.rows {
+                    acc += self.get(r, i) * self.get(r, j);
+                }
+                out.set(i, j, acc);
+                out.set(j, i, acc);
+            }
+        }
+        out
+    }
+
+    /// Aᵀb.
+    pub fn t_mul_vec(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.rows);
+        let mut out = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            let br = b[r];
+            for c in 0..self.cols {
+                out[c] += self.get(r, c) * br;
+            }
+        }
+        out
+    }
+
+    /// A·x.
+    pub fn mul_vec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|r| (0..self.cols).map(|c| self.get(r, c) * x[c]).sum())
+            .collect()
+    }
+}
+
+/// Solve the symmetric system `A x = b` via LDLᵀ factorization; `A` must be
+/// symmetric. Returns `None` if the factorization encounters a (near-)zero
+/// pivot — callers add Levenberg damping and retry.
+pub fn solve_symmetric(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let n = a.rows;
+    assert_eq!(a.cols, n);
+    assert_eq!(b.len(), n);
+    // LDLᵀ: A = L D Lᵀ with unit lower-triangular L.
+    let mut l = Mat::zeros(n, n);
+    let mut d = vec![0.0; n];
+    for j in 0..n {
+        let mut dj = a.get(j, j);
+        for k in 0..j {
+            dj -= l.get(j, k) * l.get(j, k) * d[k];
+        }
+        if dj.abs() < 1e-300 || !dj.is_finite() {
+            return None;
+        }
+        d[j] = dj;
+        l.set(j, j, 1.0);
+        for i in (j + 1)..n {
+            let mut v = a.get(i, j);
+            for k in 0..j {
+                v -= l.get(i, k) * l.get(j, k) * d[k];
+            }
+            l.set(i, j, v / dj);
+        }
+    }
+    // Forward solve L y = b.
+    let mut y = b.to_vec();
+    for i in 0..n {
+        for k in 0..i {
+            let lik = l.get(i, k);
+            y[i] -= lik * y[k];
+        }
+    }
+    // Diagonal.
+    for i in 0..n {
+        y[i] /= d[i];
+    }
+    // Back solve Lᵀ x = y.
+    for i in (0..n).rev() {
+        for k in (i + 1)..n {
+            let lki = l.get(k, i);
+            y[i] -= lki * y[k];
+        }
+    }
+    if y.iter().all(|v| v.is_finite()) {
+        Some(y)
+    } else {
+        None
+    }
+}
+
+/// Euclidean norm.
+pub fn norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gram_and_mul() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let g = a.gram();
+        assert_eq!(g.get(0, 0), 35.0);
+        assert_eq!(g.get(0, 1), 44.0);
+        assert_eq!(g.get(1, 1), 56.0);
+        assert_eq!(a.t_mul_vec(&[1.0, 1.0, 1.0]), vec![9.0, 12.0]);
+        assert_eq!(a.mul_vec(&[1.0, 1.0]), vec![3.0, 7.0, 11.0]);
+    }
+
+    #[test]
+    fn solve_spd_system() {
+        // A = [[4,1],[1,3]], b = [1,2] → x = [1/11, 7/11].
+        let a = Mat::from_rows(vec![vec![4.0, 1.0], vec![1.0, 3.0]]);
+        let x = solve_symmetric(&a, &[1.0, 2.0]).unwrap();
+        assert!((x[0] - 1.0 / 11.0).abs() < 1e-12);
+        assert!((x[1] - 7.0 / 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_recovers_random_solutions() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seeded(42);
+        for n in [1usize, 3, 6, 10] {
+            // Build SPD A = MᵀM + I.
+            let m = Mat::from_rows(
+                (0..n)
+                    .map(|_| (0..n).map(|_| rng.normal()).collect())
+                    .collect(),
+            );
+            let mut a = m.gram();
+            for i in 0..n {
+                a.set(i, i, a.get(i, i) + 1.0);
+            }
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.mul_vec(&x_true);
+            let x = solve_symmetric(&a, &b).unwrap();
+            for i in 0..n {
+                assert!((x[i] - x_true[i]).abs() < 1e-8, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn singular_returns_none() {
+        let a = Mat::from_rows(vec![vec![1.0, 1.0], vec![1.0, 1.0]]);
+        assert!(solve_symmetric(&a, &[1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_rows_panic() {
+        Mat::from_rows(vec![vec![1.0], vec![1.0, 2.0]]);
+    }
+}

@@ -1,0 +1,331 @@
+//! Paged KV-cache management (vLLM-style PagedAttention bookkeeping).
+//!
+//! The coordinator tracks cache capacity in fixed-size token blocks; each
+//! sequence owns a block table. Speculative decoding adds one wrinkle over
+//! plain paged serving: a verify step appends up to γ+1 tokens and then
+//! *rolls back* the rejected suffix, so the manager supports `truncate`.
+//! Allocation failures surface as `None` so the scheduler can pause
+//! admission (capacity backpressure) instead of crashing.
+
+use std::collections::HashMap;
+
+/// Opaque sequence handle.
+pub type SeqId = u64;
+
+/// Block index into the (conceptual) physical KV pool.
+pub type BlockId = u32;
+
+/// Static cache geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvConfig {
+    /// Total physical blocks available.
+    pub num_blocks: usize,
+    /// Tokens per block.
+    pub block_size: usize,
+}
+
+impl KvConfig {
+    pub fn total_tokens(&self) -> usize {
+        self.num_blocks * self.block_size
+    }
+}
+
+/// Per-sequence cache state.
+#[derive(Debug, Clone, Default)]
+struct SeqState {
+    block_table: Vec<BlockId>,
+    len_tokens: usize,
+}
+
+/// The paged allocator + per-sequence block tables.
+#[derive(Debug)]
+pub struct KvManager {
+    config: KvConfig,
+    free: Vec<BlockId>,
+    seqs: HashMap<SeqId, SeqState>,
+    /// High-water mark of simultaneously allocated blocks (capacity
+    /// planning metric).
+    peak_used: usize,
+}
+
+impl KvManager {
+    pub fn new(config: KvConfig) -> KvManager {
+        assert!(config.num_blocks > 0 && config.block_size > 0);
+        KvManager {
+            config,
+            free: (0..config.num_blocks as BlockId).rev().collect(),
+            seqs: HashMap::new(),
+            peak_used: 0,
+        }
+    }
+
+    pub fn config(&self) -> KvConfig {
+        self.config
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.config.num_blocks - self.free.len()
+    }
+
+    pub fn peak_used_blocks(&self) -> usize {
+        self.peak_used
+    }
+
+    pub fn num_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn seq_len(&self, seq: SeqId) -> Option<usize> {
+        self.seqs.get(&seq).map(|s| s.len_tokens)
+    }
+
+    /// Blocks needed to extend a sequence of `cur` tokens by `extra`.
+    fn blocks_needed(&self, cur: usize, extra: usize) -> usize {
+        let bs = self.config.block_size;
+        let have = cur.div_ceil(bs);
+        let want = (cur + extra).div_ceil(bs);
+        want - have
+    }
+
+    /// Can `extra` tokens be appended to `seq` (or a new seq) right now?
+    pub fn can_append(&self, seq: SeqId, extra: usize) -> bool {
+        let cur = self.seqs.get(&seq).map_or(0, |s| s.len_tokens);
+        self.blocks_needed(cur, extra) <= self.free.len()
+    }
+
+    /// Register a new sequence and reserve capacity for its prompt.
+    /// Returns `None` (no state change) if capacity is insufficient.
+    pub fn allocate(&mut self, seq: SeqId, prompt_tokens: usize) -> Option<()> {
+        assert!(
+            !self.seqs.contains_key(&seq),
+            "sequence {seq} already allocated"
+        );
+        let needed = self.blocks_needed(0, prompt_tokens);
+        if needed > self.free.len() {
+            return None;
+        }
+        let mut state = SeqState::default();
+        for _ in 0..needed {
+            state.block_table.push(self.free.pop().unwrap());
+        }
+        state.len_tokens = prompt_tokens;
+        self.seqs.insert(seq, state);
+        self.peak_used = self.peak_used.max(self.used_blocks());
+        Some(())
+    }
+
+    /// Append `extra` tokens to an existing sequence, growing its block
+    /// table. Returns `None` (no state change) on capacity exhaustion.
+    pub fn append(&mut self, seq: SeqId, extra: usize) -> Option<()> {
+        let cur = self.seqs.get(&seq).expect("unknown sequence").len_tokens;
+        let needed = self.blocks_needed(cur, extra);
+        if needed > self.free.len() {
+            return None;
+        }
+        let state = self.seqs.get_mut(&seq).unwrap();
+        for _ in 0..needed {
+            state.block_table.push(self.free.pop().unwrap());
+        }
+        state.len_tokens += extra;
+        self.peak_used = self.peak_used.max(self.used_blocks());
+        Some(())
+    }
+
+    /// Shrink a sequence to `new_len` tokens (SD rollback of rejected
+    /// draft tokens), returning now-unused blocks to the pool.
+    pub fn truncate(&mut self, seq: SeqId, new_len: usize) {
+        let bs = self.config.block_size;
+        let state = self.seqs.get_mut(&seq).expect("unknown sequence");
+        assert!(
+            new_len <= state.len_tokens,
+            "truncate {new_len} > current {}",
+            state.len_tokens
+        );
+        let keep_blocks = new_len.div_ceil(bs);
+        while state.block_table.len() > keep_blocks {
+            self.free.push(state.block_table.pop().unwrap());
+        }
+        state.len_tokens = new_len;
+    }
+
+    /// Release a sequence entirely.
+    pub fn release(&mut self, seq: SeqId) {
+        if let Some(state) = self.seqs.remove(&seq) {
+            self.free.extend(state.block_table);
+        }
+    }
+
+    /// The sequence's block table (for handing to an attention kernel).
+    pub fn block_table(&self, seq: SeqId) -> Option<&[BlockId]> {
+        self.seqs.get(&seq).map(|s| s.block_table.as_slice())
+    }
+
+    /// Internal invariant checker used by property tests: every block is
+    /// either free or owned by exactly one sequence.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.config.num_blocks];
+        for &b in &self.free {
+            let i = b as usize;
+            if seen[i] {
+                return Err(format!("block {b} duplicated in free list"));
+            }
+            seen[i] = true;
+        }
+        for (seq, state) in &self.seqs {
+            let max_tokens = state.block_table.len() * self.config.block_size;
+            if state.len_tokens > max_tokens {
+                return Err(format!(
+                    "seq {seq}: {} tokens in {} blocks",
+                    state.len_tokens,
+                    state.block_table.len()
+                ));
+            }
+            // No over-allocation beyond one block of slack.
+            if state.len_tokens + self.config.block_size <= max_tokens
+                && !state.block_table.is_empty()
+            {
+                return Err(format!("seq {seq}: over-allocated blocks"));
+            }
+            for &b in &state.block_table {
+                let i = b as usize;
+                if seen[i] {
+                    return Err(format!("block {b} double-owned"));
+                }
+                seen[i] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("leaked blocks (neither free nor owned)".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{ensure, Runner};
+    use crate::util::rng::Rng;
+
+    fn mgr(blocks: usize, bs: usize) -> KvManager {
+        KvManager::new(KvConfig {
+            num_blocks: blocks,
+            block_size: bs,
+        })
+    }
+
+    #[test]
+    fn allocate_append_release_cycle() {
+        let mut kv = mgr(10, 16);
+        kv.allocate(1, 20).unwrap(); // 2 blocks
+        assert_eq!(kv.used_blocks(), 2);
+        assert_eq!(kv.seq_len(1), Some(20));
+        kv.append(1, 12).unwrap(); // 32 tokens → still 2 blocks
+        assert_eq!(kv.used_blocks(), 2);
+        kv.append(1, 1).unwrap(); // 33 tokens → 3 blocks
+        assert_eq!(kv.used_blocks(), 3);
+        kv.release(1);
+        assert_eq!(kv.used_blocks(), 0);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn capacity_exhaustion_returns_none_without_state_change() {
+        let mut kv = mgr(2, 16);
+        kv.allocate(1, 30).unwrap(); // uses both blocks
+        assert!(kv.allocate(2, 1).is_none());
+        assert_eq!(kv.num_seqs(), 1);
+        assert!(kv.append(1, 10).is_none()); // would need a third block
+        assert_eq!(kv.seq_len(1), Some(30));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn truncate_rolls_back_blocks() {
+        let mut kv = mgr(8, 4);
+        kv.allocate(7, 4).unwrap(); // 1 block
+        kv.append(7, 5).unwrap(); // 9 tokens → 3 blocks
+        assert_eq!(kv.used_blocks(), 3);
+        // SD rollback: verify appended γ+1=5, only 1 accepted → back to 5.
+        kv.truncate(7, 5);
+        assert_eq!(kv.seq_len(7), Some(5));
+        assert_eq!(kv.used_blocks(), 2);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn can_append_is_accurate() {
+        let mut kv = mgr(3, 4);
+        kv.allocate(1, 4).unwrap();
+        assert!(kv.can_append(1, 8)); // two more blocks available
+        assert!(!kv.can_append(1, 9)); // would need three
+    }
+
+    #[test]
+    #[should_panic(expected = "already allocated")]
+    fn double_allocate_panics() {
+        let mut kv = mgr(4, 4);
+        kv.allocate(1, 1).unwrap();
+        kv.allocate(1, 1).unwrap();
+    }
+
+    #[test]
+    fn peak_usage_tracked() {
+        let mut kv = mgr(4, 4);
+        kv.allocate(1, 16).unwrap();
+        kv.release(1);
+        assert_eq!(kv.used_blocks(), 0);
+        assert_eq!(kv.peak_used_blocks(), 4);
+    }
+
+    /// Property: a random sequence of operations never violates block
+    /// conservation, regardless of interleaving or capacity pressure.
+    #[test]
+    fn prop_random_ops_preserve_invariants() {
+        let mut runner = Runner::new("kv_invariants");
+        runner.run(60, |g| {
+            let blocks = g.usize_in(1, 24);
+            let bs = g.usize_in(1, 8);
+            let mut kv = mgr(blocks, bs);
+            let mut rng = Rng::seeded(g.u64_in(0, 1 << 30));
+            let mut live: Vec<SeqId> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..120 {
+                match rng.below(4) {
+                    0 => {
+                        let len = rng.range_inclusive(1, 20) as usize;
+                        if kv.allocate(next_id, len).is_some() {
+                            live.push(next_id);
+                        }
+                        next_id += 1;
+                    }
+                    1 if !live.is_empty() => {
+                        let seq = live[rng.below(live.len() as u64) as usize];
+                        let _ = kv.append(seq, rng.range_inclusive(1, 6) as usize);
+                    }
+                    2 if !live.is_empty() => {
+                        let idx = rng.below(live.len() as u64) as usize;
+                        let seq = live.swap_remove(idx);
+                        kv.release(seq);
+                    }
+                    3 if !live.is_empty() => {
+                        let seq = live[rng.below(live.len() as u64) as usize];
+                        let len = kv.seq_len(seq).unwrap();
+                        if len > 0 {
+                            kv.truncate(seq, rng.below(len as u64 + 1) as usize);
+                        }
+                    }
+                    _ => {}
+                }
+                if let Err(e) = kv.check_invariants() {
+                    return Err(format!("invariant violated: {e}"));
+                }
+            }
+            ensure(true, "")
+        });
+    }
+}

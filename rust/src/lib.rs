@@ -1,0 +1,45 @@
+//! # MoESD — speculative decoding for sparse Mixture-of-Experts serving
+//!
+//! A from-scratch reproduction of *"MoESD: Unveil Speculative Decoding's
+//! Potential for Accelerating Sparse MoE"* (2025) as a three-layer
+//! Rust + JAX + Pallas serving stack.
+//!
+//! The crate is organized as a library (this file) plus a launcher binary
+//! (`moesd`), runnable examples, and one benchmark target per table/figure
+//! of the paper's evaluation. See `DESIGN.md` for the full system inventory
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! Layer map:
+//! - **L3 (this crate)** — request router, continuous batcher, paged KV cache,
+//!   speculative-decoding scheduler, metrics, the roofline GPU simulator and
+//!   the paper's analytic speedup model + fitting.
+//! - **L2 (python/compile/model.py)** — the JAX MoE transformer, AOT-lowered
+//!   to HLO text loaded by [`runtime`].
+//! - **L1 (python/compile/kernels/)** — Pallas MoE-FFN / decode-attention
+//!   kernels lowered into the same HLO.
+
+pub mod arch;
+pub mod batching;
+pub mod benchlib;
+pub mod config;
+pub mod engine;
+pub mod experiments;
+pub mod fit;
+pub mod hardware;
+pub mod kvcache;
+pub mod metrics;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sampling;
+pub mod scheduler;
+pub mod server;
+pub mod simulator;
+pub mod spec;
+pub mod testkit;
+pub mod theory;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,262 @@
+//! `moesd` — the launcher binary (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   serve       start the TCP front-end (synthetic or real-HLO backend)
+//!   bench       run a paper experiment (fig1|fig2|fig3|fig4|fig5|fig6|
+//!               table1|table2|table3) and write results/
+//!   fit         collect measurements and fit the Alg. 1 model
+//!   selfcheck   verify artifacts: PJRT compile + numerics vs python
+//!   list        list model presets and platforms
+//!
+//! Examples:
+//!   moesd serve --mode hlo --port 7433 --gamma 3
+//!   moesd bench fig2
+//!   moesd selfcheck --artifacts artifacts
+
+use moesd::arch::presets;
+use moesd::config::{Config, Mode};
+use moesd::hardware;
+use moesd::simulator::ExecSim;
+use moesd::spec::synthetic::SyntheticLm;
+use moesd::util::cli::Args;
+use moesd::util::logging;
+use moesd::workload::{calibrated_alpha, Dataset};
+use std::path::Path;
+
+fn main() {
+    let args = Args::from_env(&["verbose", "help"]);
+    if args.flag("verbose") {
+        logging::set_level(logging::Level::Debug);
+    }
+    let result = match args.subcommand.as_deref() {
+        Some("serve") => serve(&args),
+        Some("bench") => bench(&args),
+        Some("fit") => fit(&args),
+        Some("selfcheck") => selfcheck(&args),
+        Some("list") => list(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "moesd — speculative decoding for sparse MoE serving\n\
+         \n\
+         USAGE: moesd <serve|bench|fit|selfcheck|list> [options]\n\
+         \n\
+         serve     --mode synthetic|hlo --port N --gamma N [--config file.json]\n\
+         bench     <fig1|fig2|fig3|fig4|fig5|fig6|table1|table2|table3>\n\
+         fit       --gamma N --alpha X\n\
+         selfcheck --artifacts DIR\n\
+         list"
+    );
+}
+
+fn load_config(args: &Args) -> anyhow::Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::load(Path::new(path))?,
+        None => Config::default(),
+    };
+    if let Some(mode) = args.get("mode") {
+        cfg.mode = match mode {
+            "synthetic" => Mode::Synthetic,
+            "hlo" => Mode::Hlo,
+            other => anyhow::bail!("unknown mode {other}"),
+        };
+    }
+    cfg.gamma = args.usize_or("gamma", cfg.gamma)?;
+    cfg.max_batch = args.usize_or("max-batch", cfg.max_batch)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let port = args.usize_or("port", 7433)?;
+    let bind = format!("127.0.0.1:{port}");
+    let engine_cfg = cfg.engine_config();
+    println!("starting moesd server on {bind} (mode {:?}, γ={})", cfg.mode, cfg.gamma);
+    let server = match cfg.mode {
+        Mode::Hlo => {
+            let dir = cfg.artifacts_dir.clone();
+            // The PJRT backend holds non-Send XLA handles: build it on the
+            // engine thread via the factory entry point.
+            moesd::server::Server::start_with(&bind, engine_cfg, move || {
+                moesd::runtime::hlo_model::HloBackend::new(Path::new(&dir))
+            })?
+        }
+        Mode::Synthetic => {
+            let target = presets::by_name(&cfg.model)?;
+            let draft = presets::by_name(&cfg.draft)?;
+            let platform = hardware::platform_by_name(&cfg.platform)?;
+            let alpha = calibrated_alpha(
+                if cfg.model.starts_with("qwen2") { "qwen2" } else { "mixtral" },
+                Dataset::by_name(&cfg.dataset)?,
+                cfg.temperature,
+                cfg.gamma.clamp(2, 4),
+            );
+            let tsim = ExecSim::new(target, platform.clone());
+            let dsim = ExecSim::new(draft, platform);
+            let backend = SyntheticLm::new(tsim, dsim, alpha, cfg.seed);
+            moesd::server::Server::start(&bind, engine_cfg, backend)?
+        }
+    };
+    println!("listening on {} — newline-delimited JSON; Ctrl-C to stop", server.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn bench(args: &Args) -> anyhow::Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("bench needs an experiment id (fig1..fig6, table1..3)"))?;
+    use moesd::experiments::*;
+    match which {
+        "fig1" => {
+            let (a, b, c) = fig1::run(400, 42);
+            println!("{}", a.to_string());
+            println!("{}", b.to_string());
+            moesd::benchlib::write_report("fig1a_activation.csv", &a.to_string())?;
+            moesd::benchlib::write_report("fig1b_activation.csv", &b.to_string())?;
+            moesd::benchlib::write_report("fig1c_expert_load.csv", &c.to_string())?;
+        }
+        "fig2" => {
+            for (i, panel) in fig2::default_panels().iter().enumerate() {
+                let stats = fig2::sweep_panel(panel, 42 + i as u64)?;
+                let peak = peak_speedup(&stats);
+                println!(
+                    "{} on {}: peak {:.2}x at B={}",
+                    panel.model, panel.platform, peak.speedup, peak.batch
+                );
+                moesd::benchlib::write_report(
+                    &format!("fig2_panel{i}.csv"),
+                    &fig2::panel_csv(panel, &stats).to_string(),
+                )?;
+            }
+        }
+        "fig3" => {
+            let out = fig3::run(3);
+            println!("{}", out.table.to_string());
+            moesd::benchlib::write_report("fig3_target_efficiency.csv", &out.table.to_string())?;
+        }
+        "fig4" => {
+            let out = fig4::run(0.88, 7)?;
+            println!(
+                "fit MSE {:.4}, full MSE {:.4} over {} points",
+                out.fit_mse,
+                out.full_mse,
+                out.points.len()
+            );
+            moesd::benchlib::write_report(
+                "fig4_model_vs_measured.csv",
+                &fig4::to_csv(&out).to_string(),
+            )?;
+        }
+        "fig5" => {
+            let out = fig5::run("qwen2", "2xGPU-A", Dataset::HumanEval, 0.0, 3, 5)?;
+            println!("{}", out.table.to_string());
+            moesd::benchlib::write_report("fig5_panel0.csv", &out.table.to_string())?;
+        }
+        "fig6" => {
+            let out = fig6::run(Dataset::HumanEval, 0.0, 3, 21)?;
+            println!("{}", out.table.to_string());
+            moesd::benchlib::write_report("fig6_humaneval_t0.csv", &out.table.to_string())?;
+        }
+        "table1" => {
+            let rows = tables::table1(42)?;
+            println!("{}", tables::render_markdown(&rows));
+            moesd::benchlib::write_report("table1_peak_speedup.md", &tables::render_markdown(&rows))?;
+        }
+        "table2" => {
+            let rows = tables::table2(42)?;
+            println!("{}", tables::render_markdown(&rows));
+            moesd::benchlib::write_report("table2_hardware.md", &tables::render_markdown(&rows))?;
+        }
+        "table3" => {
+            let out = table3::run(0.88, 7)?;
+            for r in &out.rows {
+                println!("m={:3} stride={:3} MSE={:.4}", r.m, r.stride, r.mse);
+            }
+            moesd::benchlib::write_report("table3_fit_mse.csv", &table3::to_csv(&out).to_string())?;
+        }
+        other => anyhow::bail!("unknown experiment `{other}`"),
+    }
+    Ok(())
+}
+
+fn fit(args: &Args) -> anyhow::Result<()> {
+    use moesd::experiments::{run_pair, RunOpts};
+    use moesd::fit::fit_perfmodel;
+    use moesd::perfmodel::*;
+    let gamma = args.usize_or("gamma", 4)?;
+    let alpha = args.f64_or("alpha", 0.9)?;
+    let target = presets::qwen2_57b_a14b();
+    let draft = presets::qwen2_0_5b();
+    let platform = hardware::platform_2x_gpu_a();
+    let opts = RunOpts::default();
+    let mut ms = Vec::new();
+    for &b in &moesd::experiments::paper_batch_grid() {
+        let s = run_pair(&target, &draft, &platform, alpha, gamma, b, &opts)?;
+        ms.push(Measurement {
+            batch: b,
+            gamma,
+            k: 8,
+            e: 64,
+            sigma: s.sigma,
+            speedup: s.speedup,
+        });
+        println!("B={b:3}: speedup {:.3} σ {:.3}", s.speedup, s.sigma);
+    }
+    let model = PerfModel::new(&platform);
+    let bounds = ParamBounds::for_setup(&target, &draft, &platform, 1e-3);
+    let (params, mse) = fit_perfmodel(&model, &ms, &bounds, 42);
+    println!("\nfitted parameters (MSE {mse:.4}):");
+    for (name, v) in PerfParams::names().iter().zip(params.to_vec()) {
+        println!("  {name:12} = {v:.6e}");
+    }
+    Ok(())
+}
+
+fn selfcheck(args: &Args) -> anyhow::Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let mut backend = moesd::runtime::hlo_model::HloBackend::new(Path::new(dir))?;
+    println!("manifest OK: {} artifacts", backend.manifest().artifacts.len());
+    backend.warmup(1)?;
+    println!("warmup compile OK");
+    backend.self_check()?;
+    println!("numerics OK: rust PJRT logits match python reference");
+    Ok(())
+}
+
+fn list() -> anyhow::Result<()> {
+    println!("model presets:");
+    for m in presets::all() {
+        println!(
+            "  {:22} {:>7.2}B total / {:>6.2}B active  ρ={:.3}",
+            m.name,
+            m.total_params() as f64 / 1e9,
+            m.active_params() as f64 / 1e9,
+            m.rho()
+        );
+    }
+    println!("\nplatforms: 2xGPU-A, 2xGPU-B, 4xGPU-A, 4xGPU-C");
+    for name in ["2xGPU-A", "2xGPU-B", "4xGPU-A", "4xGPU-C"] {
+        let p = hardware::platform_by_name(name)?;
+        println!(
+            "  {name}: ridge point {:.0} tokens, {:.0} GB/s aggregate HBM",
+            p.ridge_point(),
+            p.total_mem_bw() / 1e9
+        );
+    }
+    Ok(())
+}

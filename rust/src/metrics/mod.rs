@@ -1,0 +1,280 @@
+//! Serving metrics: counters, log-bucketed latency histograms, and the
+//! derived quantities the paper reports (T_AR, T_SD, σ, speedup, target
+//! efficiency, TTFT/TPOT SLOs from §3.4).
+
+use crate::util::stats::Running;
+use std::collections::BTreeMap;
+
+/// Log-bucketed histogram for latencies spanning µs..minutes.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Bucket upper bounds (seconds), geometric ladder.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    summary: Running,
+}
+
+impl Histogram {
+    /// Buckets from 1 µs to ~1000 s, ×2 per step.
+    pub fn new() -> Histogram {
+        let mut bounds = Vec::new();
+        let mut b = 1e-6;
+        while b < 1e3 {
+            bounds.push(b);
+            b *= 2.0;
+        }
+        let n = bounds.len();
+        Histogram {
+            bounds,
+            counts: vec![0; n + 1],
+            summary: Running::new(),
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.summary.push(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.summary.count()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.summary.mean()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.summary.max()
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket containing the q-quantile observation).
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        let total = self.summary.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    self.summary.max()
+                };
+            }
+        }
+        self.summary.max()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Everything the engine records while serving, mirroring the quantities
+/// the paper pulls from vLLM runtime logs (§4: T_D, T_T, T_reject, σ).
+#[derive(Debug, Clone, Default)]
+pub struct EngineMetrics {
+    // --- request-level -----------------------------------------------------
+    pub requests_submitted: u64,
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub ttft: Histogram2,
+    pub tpot: Histogram2,
+    pub e2e_latency: Histogram2,
+
+    // --- SD round-level ----------------------------------------------------
+    pub rounds: u64,
+    pub draft_tokens_proposed: u64,
+    pub draft_tokens_accepted: u64,
+    /// Accumulated time per stage (the virtual or wall clock).
+    pub time_draft: f64,
+    pub time_verify: f64,
+    pub time_reject: f64,
+    pub time_prefill: f64,
+    /// Coordinator-side overhead (scheduling, sampling, bookkeeping).
+    pub time_overhead: f64,
+    /// Sum over rounds of the decode batch size (for mean batch size).
+    pub batch_size_sum: u64,
+}
+
+/// Small wrapper so EngineMetrics can derive Default cheaply.
+#[derive(Debug, Clone)]
+pub struct Histogram2(pub Histogram);
+
+impl Default for Histogram2 {
+    fn default() -> Self {
+        Histogram2(Histogram::new())
+    }
+}
+
+impl EngineMetrics {
+    /// σ as measured: generated tokens per sequence-round over the γ+1
+    /// maximum (each of the `batch_size_sum` sequence-rounds could emit at
+    /// most γ+1 tokens).
+    pub fn sigma(&self, gamma: usize) -> f64 {
+        if self.batch_size_sum == 0 || gamma == 0 {
+            return 1.0;
+        }
+        let generated = self.tokens_generated as f64;
+        generated / (self.batch_size_sum as f64 * (gamma + 1) as f64)
+    }
+
+    /// Empirical per-token acceptance rate α.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.draft_tokens_proposed == 0 {
+            return 0.0;
+        }
+        self.draft_tokens_accepted as f64 / self.draft_tokens_proposed as f64
+    }
+
+    /// Total decode-path time (the paper's T_SD when γ>0, T_AR when γ=0).
+    pub fn decode_time(&self) -> f64 {
+        self.time_draft + self.time_verify + self.time_reject
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.decode_time() + self.time_prefill + self.time_overhead
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.batch_size_sum as f64 / self.rounds as f64
+        }
+    }
+
+    /// Decode throughput in tokens/second of (virtual or wall) clock.
+    pub fn tokens_per_second(&self) -> f64 {
+        let t = self.decode_time();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / t
+        }
+    }
+
+    /// Render a compact report block.
+    pub fn report(&self, label: &str, gamma: usize) -> String {
+        format!(
+            "[{label}] requests={} tokens={} rounds={} σ={:.3} α={:.3} \
+             mean_batch={:.1} decode={:.3}s (draft {:.3} verify {:.3} reject {:.3}) \
+             prefill={:.3}s overhead={:.4}s throughput={:.1} tok/s\n\
+             TTFT mean={:.4}s p99≈{:.4}s | TPOT mean={:.5}s p99≈{:.5}s",
+            self.requests_completed,
+            self.tokens_generated,
+            self.rounds,
+            self.sigma(gamma),
+            self.acceptance_rate(),
+            self.mean_batch(),
+            self.decode_time(),
+            self.time_draft,
+            self.time_verify,
+            self.time_reject,
+            self.time_prefill,
+            self.time_overhead,
+            self.tokens_per_second(),
+            self.ttft.0.mean(),
+            self.ttft.0.quantile(0.99),
+            self.tpot.0.mean(),
+            self.tpot.0.quantile(0.99),
+        )
+    }
+}
+
+/// Named counters for ad-hoc instrumentation (failure injection tests use
+/// these to observe retry/preemption paths).
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    map: BTreeMap<String, u64>,
+}
+
+impl Counters {
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.map.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.map.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.map.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_quantiles() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 0.0505).abs() < 1e-9);
+        let p50 = h.quantile(0.5);
+        assert!(p50 >= 0.045 && p50 <= 0.07, "p50={p50}");
+        assert!(h.quantile(1.0) >= 0.1);
+        assert_eq!(Histogram::new().quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn sigma_and_alpha() {
+        let mut m = EngineMetrics::default();
+        m.rounds = 10;
+        m.batch_size_sum = 10; // batch of 1 per round
+        m.tokens_generated = 36; // 3.6 per seq-round at γ=3 → σ=0.9
+        m.draft_tokens_proposed = 30;
+        m.draft_tokens_accepted = 26;
+        assert!((m.sigma(3) - 0.9).abs() < 1e-12);
+        assert!((m.acceptance_rate() - 26.0 / 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_and_batch() {
+        let mut m = EngineMetrics::default();
+        m.tokens_generated = 100;
+        m.time_verify = 2.0;
+        m.rounds = 4;
+        m.batch_size_sum = 32;
+        assert!((m.tokens_per_second() - 50.0).abs() < 1e-9);
+        assert!((m.mean_batch() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn counters() {
+        let mut c = Counters::default();
+        c.inc("preemptions");
+        c.add("preemptions", 2);
+        assert_eq!(c.get("preemptions"), 3);
+        assert_eq!(c.get("missing"), 0);
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = EngineMetrics::default();
+        let r = m.report("test", 3);
+        assert!(r.contains("[test]"));
+        assert!(r.contains("tok/s"));
+    }
+}

@@ -1,0 +1,408 @@
+//! The paper's analytic SD-speedup model (Algorithm 1).
+//!
+//! `ComputeSpeedup(params, B, γ, K, E, σ)` combines the three §3.3 factors:
+//!
+//! ```text
+//! T_T(B, s) = bias + k1·G(B·s; λRP, s̄) + k2·N(B·s) + k3·G(T̄_exp(B·s; ρ); λRP, s̄)
+//! T_D(B)    = draft_bias + draft_k·G(B; λRP, s̄)
+//! T_rej(B,γ)= reject_bias + reject_k·B·(γ+1)
+//! Speedup   = σ·(γ+1) · T_T(B,1) / (γ·T_D(B) + T_T(B,γ+?) + T_rej)
+//! ```
+//!
+//! The 10 relaxation parameters carry the physical meanings and search
+//! bounds of Appendix C.2; [`ParamBounds::for_setup`] derives them from the
+//! architecture + platform exactly as the appendix prescribes.
+
+use crate::arch::ModelArch;
+use crate::hardware::Platform;
+use crate::theory;
+
+/// The 10 fitted relaxation parameters (Appendix C.2 order).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PerfParams {
+    /// Fixed (dense-path) parameter loading time, seconds.
+    pub bias: f64,
+    /// Roofline-ramp intensity of the dense components.
+    pub k1: f64,
+    /// Loading time per activated expert, seconds.
+    pub k2: f64,
+    /// Roofline-ramp intensity of the sparse (expert) components.
+    pub k3: f64,
+    /// Draft model fixed loading time.
+    pub draft_bias: f64,
+    /// Draft model roofline intensity.
+    pub draft_k: f64,
+    /// Fixed rejection-sampling overhead.
+    pub reject_bias: f64,
+    /// Incremental rejection cost per verified token.
+    pub reject_k: f64,
+    /// Empirical/theoretical ridge-point ratio, λ ∈ [0.2, 1].
+    pub lambda: f64,
+    /// Roofline growth base, s ∈ [1, 2].
+    pub s: f64,
+}
+
+pub const N_PARAMS: usize = 10;
+
+impl PerfParams {
+    pub fn to_vec(&self) -> [f64; N_PARAMS] {
+        [
+            self.bias,
+            self.k1,
+            self.k2,
+            self.k3,
+            self.draft_bias,
+            self.draft_k,
+            self.reject_bias,
+            self.reject_k,
+            self.lambda,
+            self.s,
+        ]
+    }
+
+    pub fn from_slice(v: &[f64]) -> PerfParams {
+        assert_eq!(v.len(), N_PARAMS);
+        PerfParams {
+            bias: v[0],
+            k1: v[1],
+            k2: v[2],
+            k3: v[3],
+            draft_bias: v[4],
+            draft_k: v[5],
+            reject_bias: v[6],
+            reject_k: v[7],
+            lambda: v[8],
+            s: v[9],
+        }
+    }
+
+    pub fn names() -> [&'static str; N_PARAMS] {
+        [
+            "bias", "k1", "k2", "k3", "draft_bias", "draft_k", "reject_bias", "reject_k",
+            "lambda", "s",
+        ]
+    }
+}
+
+/// Physically-derived search bounds (Appendix C.2).
+#[derive(Debug, Clone)]
+pub struct ParamBounds {
+    pub lo: [f64; N_PARAMS],
+    pub hi: [f64; N_PARAMS],
+}
+
+impl ParamBounds {
+    /// Derive bounds from the target/draft architectures and the platform:
+    /// `bias ∈ [V_dense·bytes/BW, 5×]`, `k2 ∈ [V_exp·bytes/BW, 5×]`,
+    /// `draft_bias ∈ [V_draft·bytes/BW, 5×]`, intensities `∈ [0, cap]`,
+    /// reject terms `∈ [0, T_rej_max]`, `λ ∈ [0.2, 1]`, `s ∈ [1, 2]`.
+    pub fn for_setup(
+        target: &ModelArch,
+        draft: &ModelArch,
+        platform: &Platform,
+        t_rej_max: f64,
+    ) -> ParamBounds {
+        let bw = platform.total_mem_bw();
+        let bias_min = target.dense_path_bytes() / bw;
+        let k2_min = target.bytes_per_expert() * target.layers as f64 / bw;
+        let draft_min = draft.total_bytes() / bw;
+        // Intensity caps: generous multiples of the fixed-load scales; the
+        // appendix leaves these unbounded, but the bounded optimizer wants
+        // finite boxes. Fits land far from the caps (asserted in tests).
+        let cap = (bias_min * 2000.0).max(1.0);
+        ParamBounds {
+            lo: [
+                bias_min,
+                0.0,
+                k2_min,
+                0.0,
+                draft_min,
+                0.0,
+                0.0,
+                0.0,
+                0.2,
+                1.0 + 1e-9,
+            ],
+            hi: [
+                5.0 * bias_min,
+                cap,
+                5.0 * k2_min,
+                cap,
+                5.0 * draft_min,
+                cap,
+                t_rej_max.max(1e-6),
+                t_rej_max.max(1e-6),
+                1.0,
+                2.0,
+            ],
+        }
+    }
+
+    /// Midpoint of the box — the default optimizer start.
+    pub fn midpoint(&self) -> [f64; N_PARAMS] {
+        let mut x = [0.0; N_PARAMS];
+        for i in 0..N_PARAMS {
+            x[i] = 0.5 * (self.lo[i] + self.hi[i]);
+        }
+        // s near 1 is the physical regime; starting at 1.5 makes G explode.
+        x[N_PARAMS - 1] = 1.02;
+        x
+    }
+}
+
+/// One measurement row for fitting (Alg. 1's `M_i`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measurement {
+    pub batch: usize,
+    pub gamma: usize,
+    /// Activated experts per token (K) of the measured model variant.
+    pub k: usize,
+    /// Total expert count (E).
+    pub e: usize,
+    /// Measured σ (accepted fraction of the γ+1 maximum).
+    pub sigma: f64,
+    /// Measured end-to-end SD speedup (the fitting target).
+    pub speedup: f64,
+}
+
+/// The analytic model, bound to a platform ridge point.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    /// Theoretical ridge point of the platform (tokens at the roofline
+    /// crossover); λ scales it to the empirical transition.
+    pub ridge_point: f64,
+}
+
+impl PerfModel {
+    pub fn new(platform: &Platform) -> PerfModel {
+        PerfModel {
+            ridge_point: platform.ridge_point(),
+        }
+    }
+
+    pub fn with_ridge_point(rp: f64) -> PerfModel {
+        PerfModel { ridge_point: rp }
+    }
+
+    /// The roofline ramp with its constant removed: Ĝ(t) = G(t) − 1 ≥ 0.
+    ///
+    /// Deviation from the paper's literal Alg. 1 (which uses k·G(t)): as
+    /// s → 1, G(t) → 1 and k1·G degenerates into a second additive
+    /// constant that aliases `bias` and lets the optimizer zero out the
+    /// expert-activation term while still reaching a low MSE. Subtracting
+    /// the constant makes `bias` the unique intercept and forces the
+    /// token-dependent structure through Ĝ and N(t); the model family is
+    /// otherwise identical (the paper's k·G = k·1 + k·Ĝ).
+    fn ramp(&self, p: &PerfParams, t: f64) -> f64 {
+        theory::roofline_g(t, p.lambda * self.ridge_point, p.s) - 1.0
+    }
+
+    /// Target forward time for `b·s` tokens (Alg. 1 lines 6–8).
+    pub fn t_target(&self, p: &PerfParams, b: usize, s: usize, k: usize, e: usize) -> f64 {
+        let t = (b * s) as f64;
+        let rho = k as f64 / e as f64;
+        let n = theory::expected_active_experts(e, k, (b * s) as u64);
+        let load = theory::expert_load(t, rho);
+        p.bias + p.k1 * self.ramp(p, t) + p.k2 * n + p.k3 * self.ramp(p, load)
+    }
+
+    /// Dense-target variant (factor (1) only; Alg. 1 line 9 shape).
+    pub fn t_target_dense(&self, p: &PerfParams, b: usize, s: usize) -> f64 {
+        let t = (b * s) as f64;
+        p.bias + p.k1 * self.ramp(p, t)
+    }
+
+    /// Draft forward time (Alg. 1 line 9).
+    pub fn t_draft(&self, p: &PerfParams, b: usize) -> f64 {
+        p.draft_bias + p.draft_k * self.ramp(p, b as f64)
+    }
+
+    /// Rejection-sampling time.
+    pub fn t_reject(&self, p: &PerfParams, b: usize, gamma: usize) -> f64 {
+        p.reject_bias + p.reject_k * (b * (gamma + 1)) as f64
+    }
+
+    /// Alg. 1 line 3: the full speedup expression.
+    pub fn compute_speedup(&self, p: &PerfParams, m: &Measurement) -> f64 {
+        let t_ar = self.t_target(p, m.batch, 1, m.k, m.e);
+        let t_verify = self.t_target(p, m.batch, m.gamma + 1, m.k, m.e);
+        let t_draft = self.t_draft(p, m.batch);
+        let t_rej = self.t_reject(p, m.batch, m.gamma);
+        let round_len = m.sigma * (m.gamma + 1) as f64;
+        round_len * t_ar / (m.gamma as f64 * t_draft + t_verify + t_rej)
+    }
+
+    /// Model-side target efficiency (for Fig. 2/3-style decompositions).
+    pub fn target_efficiency(&self, p: &PerfParams, m: &Measurement) -> f64 {
+        self.t_target(p, m.batch, 1, m.k, m.e)
+            / self.t_target(p, m.batch, m.gamma + 1, m.k, m.e)
+    }
+
+    /// Residual vector for the Alg. 1 line-13 least-squares objective.
+    pub fn residuals(&self, p: &PerfParams, ms: &[Measurement]) -> Vec<f64> {
+        ms.iter()
+            .map(|m| self.compute_speedup(p, m) - m.speedup)
+            .collect()
+    }
+
+    /// Mean squared error over a measurement set (the Table 3 column).
+    pub fn mse(&self, p: &PerfParams, ms: &[Measurement]) -> f64 {
+        let r = self.residuals(p, ms);
+        r.iter().map(|x| x * x).sum::<f64>() / r.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::hardware::platform_2x_gpu_a;
+
+    fn demo_params() -> PerfParams {
+        PerfParams {
+            bias: 0.02,
+            k1: 1e-4,
+            k2: 2e-4,
+            k3: 5e-4,
+            draft_bias: 0.001,
+            draft_k: 1e-5,
+            reject_bias: 1e-4,
+            reject_k: 1e-7,
+            lambda: 0.5,
+            s: 1.02,
+        }
+    }
+
+    fn model() -> PerfModel {
+        PerfModel::new(&platform_2x_gpu_a())
+    }
+
+    #[test]
+    fn roundtrip_params_vec() {
+        let p = demo_params();
+        let p2 = PerfParams::from_slice(&p.to_vec());
+        assert_eq!(p, p2);
+    }
+
+    #[test]
+    fn t_target_monotone_in_tokens() {
+        let m = model();
+        let p = demo_params();
+        let mut prev = 0.0;
+        for b in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+            let t = m.t_target(&p, b, 1, 8, 64);
+            assert!(t > prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn verify_overhead_shrinks_at_moderate_batch() {
+        let m = model();
+        let p = demo_params();
+        let overhead = |b: usize| {
+            m.t_target(&p, b, 4, 8, 64) / m.t_target(&p, b, 1, 8, 64)
+        };
+        // The relative cost of processing 4× tokens should dip between B=1
+        // (expert loading penalty) and saturation (compute-bound).
+        let small = overhead(1);
+        let moderate = overhead(24);
+        assert!(
+            moderate < small,
+            "verify overhead should shrink: B=1 {small} vs B=24 {moderate}"
+        );
+    }
+
+    #[test]
+    fn speedup_shape_first_up_then_down() {
+        let m = model();
+        let p = demo_params();
+        let batches = [1usize, 2, 4, 8, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512];
+        let speedups: Vec<f64> = batches
+            .iter()
+            .map(|&b| {
+                m.compute_speedup(
+                    &p,
+                    &Measurement {
+                        batch: b,
+                        gamma: 3,
+                        k: 8,
+                        e: 64,
+                        sigma: 0.9,
+                        speedup: 0.0,
+                    },
+                )
+            })
+            .collect();
+        let peak = crate::util::stats::argmax(&speedups);
+        assert!(peak > 0 && peak < batches.len() - 1, "{speedups:?}");
+        assert!(speedups[peak] > speedups[0]);
+        assert!(speedups[peak] > *speedups.last().unwrap());
+    }
+
+    #[test]
+    fn sigma_scales_speedup_linearly() {
+        let m = model();
+        let p = demo_params();
+        let mk = |sigma: f64| Measurement {
+            batch: 16,
+            gamma: 3,
+            k: 8,
+            e: 64,
+            sigma,
+            speedup: 0.0,
+        };
+        let s1 = m.compute_speedup(&p, &mk(0.5));
+        let s2 = m.compute_speedup(&p, &mk(1.0));
+        assert!((s2 / s1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bounds_are_physical() {
+        let target = presets::qwen2_57b_a14b();
+        let draft = presets::qwen2_0_5b();
+        let b = ParamBounds::for_setup(&target, &draft, &platform_2x_gpu_a(), 1e-3);
+        // bias_min: dense-path bytes over aggregate bandwidth — order ms.
+        assert!(b.lo[0] > 1e-4 && b.lo[0] < 0.2, "bias_min={}", b.lo[0]);
+        assert!((b.hi[0] / b.lo[0] - 5.0).abs() < 1e-9);
+        // k2: one expert across all layers — much smaller than bias.
+        assert!(b.lo[2] < b.lo[0]);
+        // λ and s boxes.
+        assert_eq!(b.lo[8], 0.2);
+        assert_eq!(b.hi[8], 1.0);
+        assert!(b.hi[9] <= 2.0);
+        // Midpoint inside the box.
+        let mid = b.midpoint();
+        for i in 0..N_PARAMS {
+            assert!(mid[i] >= b.lo[i] && mid[i] <= b.hi[i], "param {i}");
+        }
+    }
+
+    #[test]
+    fn residuals_and_mse() {
+        let m = model();
+        let p = demo_params();
+        let meas = Measurement {
+            batch: 16,
+            gamma: 3,
+            k: 8,
+            e: 64,
+            sigma: 0.9,
+            speedup: 1.5,
+        };
+        let pred = m.compute_speedup(&p, &meas);
+        let r = m.residuals(&p, &[meas]);
+        assert!((r[0] - (pred - 1.5)).abs() < 1e-12);
+        assert!((m.mse(&p, &[meas]) - r[0] * r[0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_variant_has_no_expert_terms() {
+        let m = model();
+        let mut p = demo_params();
+        p.k2 = 1.0; // would dominate if (wrongly) applied
+        p.k3 = 1.0;
+        let td = m.t_target_dense(&p, 8, 1);
+        assert!(td < p.bias + p.k1 * 1e4);
+    }
+}

@@ -1,0 +1,249 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the
+//! CPU client from the L3 hot path. Python never runs at serve time.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO **text** is the interchange format
+//! (xla_extension 0.5.1 rejects jax≥0.5 serialized protos).
+
+pub mod hlo_model;
+pub mod weights;
+
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Model dims as recorded in the artifact manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub layers: usize,
+    pub kv_max: usize,
+    pub moe: bool,
+}
+
+impl ModelDims {
+    fn from_json(j: &Json) -> anyhow::Result<ModelDims> {
+        Ok(ModelDims {
+            vocab: j.req_usize("vocab")?,
+            hidden: j.req_usize("hidden")?,
+            heads: j.req_usize("heads")?,
+            head_dim: j.req_usize("head_dim")?,
+            layers: j.req_usize("layers")?,
+            kv_max: j.req_usize("kv_max")?,
+            moe: j.get("moe").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+
+    /// Elements in one sequence's per-layer KV slab [Smax, H, Dh].
+    pub fn kv_slab_elems(&self) -> usize {
+        self.kv_max * self.heads * self.head_dim
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub buckets: Vec<usize>,
+    pub target_steps: Vec<usize>,
+    pub draft_steps: Vec<usize>,
+    pub prefill_s: usize,
+    pub gamma_max: usize,
+    pub target: ModelDims,
+    pub draft: ModelDims,
+    /// key (e.g. "target_b4_s2") → file name.
+    pub artifacts: HashMap<String, String>,
+    /// Expected logits for the numerics self-check.
+    pub numerics_tokens: Vec<u32>,
+    pub numerics_logits_row1: Vec<f64>,
+    pub numerics_argmax_row1: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        let usize_list = |key: &str| -> anyhow::Result<Vec<usize>> {
+            Ok(j.req_arr(key)?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect())
+        };
+        let mut artifacts = HashMap::new();
+        if let Some(obj) = j.get("artifacts").and_then(Json::as_obj) {
+            for (k, v) in obj.iter() {
+                artifacts.insert(
+                    k.to_string(),
+                    v.as_str()
+                        .ok_or_else(|| anyhow::anyhow!("bad artifact entry {k}"))?
+                        .to_string(),
+                );
+            }
+        }
+        let numerics = j
+            .get("numerics")
+            .and_then(|n| n.get("target"))
+            .ok_or_else(|| anyhow::anyhow!("manifest missing numerics.target"))?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            buckets: usize_list("buckets")?,
+            target_steps: usize_list("target_steps")?,
+            draft_steps: usize_list("draft_steps")?,
+            prefill_s: j.req_usize("prefill_s")?,
+            gamma_max: j.req_usize("gamma_max")?,
+            target: ModelDims::from_json(
+                j.get("target").ok_or_else(|| anyhow::anyhow!("no target"))?,
+            )?,
+            draft: ModelDims::from_json(
+                j.get("draft").ok_or_else(|| anyhow::anyhow!("no draft"))?,
+            )?,
+            artifacts,
+            numerics_tokens: numerics
+                .req_arr("tokens")?
+                .iter()
+                .filter_map(|t| t.as_usize().map(|v| v as u32))
+                .collect(),
+            numerics_logits_row1: numerics
+                .req_arr("logits_row1_first8")?
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect(),
+            numerics_argmax_row1: numerics.req_usize("argmax_row1")?,
+        })
+    }
+
+    /// Smallest bucket ≥ n (the batch padding target).
+    pub fn bucket_for(&self, n: usize) -> anyhow::Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or_else(|| {
+                anyhow::anyhow!("batch {n} exceeds largest compiled bucket {:?}", self.buckets)
+            })
+    }
+
+    pub fn artifact_path(&self, model: &str, b: usize, s: usize) -> anyhow::Result<PathBuf> {
+        let key = format!("{model}_b{b}_s{s}");
+        let fname = self
+            .artifacts
+            .get(&key)
+            .ok_or_else(|| anyhow::anyhow!("no artifact `{key}` in manifest"))?;
+        Ok(self.dir.join(fname))
+    }
+}
+
+/// A compiled-executable cache over the PJRT CPU client.
+pub struct PjrtEngine {
+    pub client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<(String, usize, usize), xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtEngine {
+    pub fn new(artifacts_dir: &Path) -> anyhow::Result<PjrtEngine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Get (compiling on first use) the executable for (model, B, S).
+    pub fn executable(
+        &mut self,
+        model: &str,
+        b: usize,
+        s: usize,
+    ) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        let key = (model.to_string(), b, s);
+        if !self.executables.contains_key(&key) {
+            let path = self.manifest.artifact_path(model, b, s)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {model}_b{b}_s{s}: {e:?}"))?;
+            self.executables.insert(key.clone(), exe);
+        }
+        Ok(self.executables.get(&key).unwrap())
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.executables.len()
+    }
+}
+
+/// Build an f32 literal of the given logical dims.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> anyhow::Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal size mismatch");
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal of the given logical dims.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> anyhow::Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal size mismatch");
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let p = PathBuf::from("artifacts");
+        if p.join("manifest.json").exists() {
+            Some(p)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn manifest_parses_if_present() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.target.vocab, 256);
+        assert_eq!(m.target.layers, 4);
+        assert!(m.target.moe);
+        assert!(!m.draft.moe);
+        assert_eq!(m.bucket_for(3).unwrap(), 4);
+        assert_eq!(m.bucket_for(1).unwrap(), 1);
+        assert!(m.bucket_for(100).is_err());
+        assert!(m.artifact_path("target", 1, 1).unwrap().exists());
+        assert!(m.artifact_path("target", 3, 1).is_err());
+        assert_eq!(m.numerics_logits_row1.len(), 8);
+    }
+
+    #[test]
+    fn literal_builders() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(literal_f32(&[1.0], &[2]).is_err());
+        let i = literal_i32(&[5, 6], &[2]).unwrap();
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![5, 6]);
+    }
+}

@@ -1,0 +1,179 @@
+//! Loader for `artifacts/weights.bin` (format written by
+//! `python/compile/aot.py::write_weights_bin`):
+//!
+//! ```text
+//! magic "MOESDW01" | u32 tensor_count | tensor*
+//! tensor: u32 name_len | name bytes | u32 ndim | u32 dims[ndim] | f32 data
+//! ```
+//! All integers little-endian; data is row-major f32.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One named tensor.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// The full weight set, preserving file order (= `param_specs` order).
+#[derive(Debug, Default)]
+pub struct Weights {
+    pub tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl Weights {
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Tensors whose name starts with `prefix.`, in file order.
+    pub fn with_prefix(&self, prefix: &str) -> Vec<&Tensor> {
+        let pat = format!("{prefix}.");
+        self.tensors
+            .iter()
+            .filter(|t| t.name.starts_with(&pat))
+            .collect()
+    }
+
+    pub fn parse(bytes: &[u8]) -> anyhow::Result<Weights> {
+        anyhow::ensure!(bytes.len() >= 12, "weights.bin truncated");
+        anyhow::ensure!(&bytes[..8] == b"MOESDW01", "bad magic in weights.bin");
+        let mut off = 8usize;
+        let read_u32 = |off: &mut usize| -> anyhow::Result<u32> {
+            anyhow::ensure!(*off + 4 <= bytes.len(), "truncated at {off}");
+            let v = u32::from_le_bytes(bytes[*off..*off + 4].try_into().unwrap());
+            *off += 4;
+            Ok(v)
+        };
+        let count = read_u32(&mut off)? as usize;
+        anyhow::ensure!(count < 100_000, "implausible tensor count {count}");
+        let mut w = Weights::default();
+        for _ in 0..count {
+            let name_len = read_u32(&mut off)? as usize;
+            anyhow::ensure!(off + name_len <= bytes.len(), "truncated name");
+            let name = std::str::from_utf8(&bytes[off..off + name_len])?.to_string();
+            off += name_len;
+            let ndim = read_u32(&mut off)? as usize;
+            anyhow::ensure!(ndim <= 8, "implausible rank {ndim} for {name}");
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(&mut off)? as usize);
+            }
+            let n: usize = dims.iter().product();
+            anyhow::ensure!(
+                off + 4 * n <= bytes.len(),
+                "truncated data for {name}: need {n} f32s"
+            );
+            let mut data = vec![0f32; n];
+            for (i, chunk) in bytes[off..off + 4 * n].chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            off += 4 * n;
+            anyhow::ensure!(
+                !w.index.contains_key(&name),
+                "duplicate tensor `{name}`"
+            );
+            w.index.insert(name.clone(), w.tensors.len());
+            w.tensors.push(Tensor { name, dims, data });
+        }
+        anyhow::ensure!(off == bytes.len(), "trailing bytes in weights.bin");
+        Ok(w)
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Weights> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Weights::parse(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(tensors: &[(&str, &[usize], &[f32])]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"MOESDW01");
+        out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for (name, dims, data) in tensors {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+            for &d in *dims {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &v in *data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let bytes = encode(&[
+            ("target.embed", &[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            ("draft.ln_f", &[4], &[1.0, 1.0, 1.0, 1.0]),
+        ]);
+        let w = Weights::parse(&bytes).unwrap();
+        assert_eq!(w.len(), 2);
+        let t = w.get("target.embed").unwrap();
+        assert_eq!(t.dims, vec![2, 3]);
+        assert_eq!(t.data[4], 5.0);
+        assert_eq!(w.with_prefix("target").len(), 1);
+        assert_eq!(w.with_prefix("draft").len(), 1);
+        assert!(w.get("missing").is_none());
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let good = encode(&[("a", &[1], &[1.0])]);
+        assert!(Weights::parse(&good[..4]).is_err()); // truncated magic
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        assert!(Weights::parse(&bad_magic).is_err());
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(Weights::parse(&trailing).is_err());
+        let truncated = &good[..good.len() - 2];
+        assert!(Weights::parse(truncated).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        let bytes = encode(&[("a", &[1], &[1.0]), ("a", &[1], &[2.0])]);
+        assert!(Weights::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifact_if_present() {
+        let path = std::path::Path::new("artifacts/weights.bin");
+        if !path.exists() {
+            return; // `make artifacts` not run yet — covered in integration
+        }
+        let w = Weights::load(path).unwrap();
+        assert!(w.get("target.embed").is_some());
+        assert!(w.get("draft.embed").is_some());
+        let embed = w.get("target.embed").unwrap();
+        assert_eq!(embed.dims, vec![256, 128]);
+        assert!(embed.data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,315 @@
+//! Token sampling and the speculative-decoding rejection sampler
+//! (§3.1 stage ③; Leviathan et al. 2023, Chen et al. 2023).
+//!
+//! The rejection sampler is the losslessness-critical piece: accepted
+//! tokens must be distributed exactly as if the target model had sampled
+//! them autoregressively. `verify_chain` implements the published
+//! algorithm; the χ²-based distribution test in this module's tests and
+//! `rust/tests/prop_invariants.rs` guard it.
+
+use crate::util::rng::Rng;
+
+/// Convert logits to a probability distribution at the given temperature.
+/// `temperature == 0` produces the greedy one-hot distribution.
+pub fn softmax_with_temperature(logits: &[f32], temperature: f64) -> Vec<f64> {
+    assert!(!logits.is_empty());
+    if temperature <= 0.0 {
+        let mut out = vec![0.0; logits.len()];
+        out[argmax_f32(logits)] = 1.0;
+        return out;
+    }
+    let inv_t = 1.0 / temperature;
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let mut out: Vec<f64> = logits
+        .iter()
+        .map(|&l| ((l as f64 - max) * inv_t).exp())
+        .collect();
+    let sum: f64 = out.iter().sum();
+    for v in &mut out {
+        *v /= sum;
+    }
+    out
+}
+
+/// Index of the largest logit, breaking ties toward the lower index
+/// (deterministic greedy decoding).
+pub fn argmax_f32(logits: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &l) in logits.iter().enumerate() {
+        if l > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Draw a token from a probability distribution.
+pub fn sample(probs: &[f64], rng: &mut Rng) -> usize {
+    rng.categorical(probs)
+}
+
+/// Keep only the top-k probabilities (renormalized); `k == 0` disables.
+pub fn top_k_filter(probs: &[f64], k: usize) -> Vec<f64> {
+    if k == 0 || k >= probs.len() {
+        return probs.to_vec();
+    }
+    let mut idx: Vec<usize> = (0..probs.len()).collect();
+    idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+    let keep: std::collections::HashSet<usize> = idx[..k].iter().copied().collect();
+    let mut out: Vec<f64> = probs
+        .iter()
+        .enumerate()
+        .map(|(i, &p)| if keep.contains(&i) { p } else { 0.0 })
+        .collect();
+    let sum: f64 = out.iter().sum();
+    if sum > 0.0 {
+        for v in &mut out {
+            *v /= sum;
+        }
+    }
+    out
+}
+
+/// Outcome of verifying one sequence's draft chain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VerifyOutcome {
+    /// Tokens emitted this round: accepted draft prefix plus exactly one
+    /// extra token (resample-on-reject or bonus-on-full-accept).
+    pub tokens: Vec<u32>,
+    /// How many of the γ draft tokens were accepted.
+    pub accepted: usize,
+}
+
+/// Speculative rejection sampling over a draft chain (chain speculation,
+/// the paper's setting).
+///
+/// Inputs:
+/// - `draft_tokens[i]`   — the i-th proposed token,
+/// - `draft_probs[i]`    — the draft distribution it was sampled from,
+/// - `target_probs[i]`   — the target distribution at the same position,
+///   with one extra row at the end (`target_probs.len() == γ + 1`) for the
+///   bonus token.
+///
+/// For each position: accept token x with probability
+/// `min(1, p_target(x) / p_draft(x))`; on rejection, sample from
+/// `norm(max(0, p_target − p_draft))` and stop. If every draft token is
+/// accepted, sample the bonus token from the final target row.
+///
+/// Guarantees exactly one "fresh" target-distributed token per round, so
+/// output length is `accepted + 1 ∈ [1, γ+1]`.
+pub fn verify_chain(
+    draft_tokens: &[u32],
+    draft_probs: &[Vec<f64>],
+    target_probs: &[Vec<f64>],
+    rng: &mut Rng,
+) -> VerifyOutcome {
+    let gamma = draft_tokens.len();
+    assert_eq!(draft_probs.len(), gamma, "draft probs length mismatch");
+    assert_eq!(
+        target_probs.len(),
+        gamma + 1,
+        "target probs must include the bonus row"
+    );
+    let mut tokens = Vec::with_capacity(gamma + 1);
+    for i in 0..gamma {
+        let x = draft_tokens[i] as usize;
+        let p_t = target_probs[i][x];
+        let p_d = draft_probs[i][x];
+        let accept_prob = if p_d <= 0.0 {
+            // The draft proposed a token it assigned zero probability —
+            // only possible with inconsistent inputs; treat as reject.
+            0.0
+        } else {
+            (p_t / p_d).min(1.0)
+        };
+        if rng.f64() < accept_prob {
+            tokens.push(draft_tokens[i]);
+            continue;
+        }
+        // Reject: resample from the residual distribution.
+        let residual: Vec<f64> = target_probs[i]
+            .iter()
+            .zip(&draft_probs[i])
+            .map(|(&t, &d)| (t - d).max(0.0))
+            .collect();
+        let sum: f64 = residual.iter().sum();
+        let tok = if sum > 1e-300 {
+            rng.categorical(&residual) as u32
+        } else {
+            // Distributions identical ⇒ residual empty; sample target.
+            rng.categorical(&target_probs[i]) as u32
+        };
+        tokens.push(tok);
+        return VerifyOutcome {
+            accepted: i,
+            tokens,
+        };
+    }
+    // All γ accepted: bonus token from the last target row.
+    tokens.push(rng.categorical(&target_probs[gamma]) as u32);
+    VerifyOutcome {
+        accepted: gamma,
+        tokens,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::chi_square;
+
+    #[test]
+    fn softmax_basics() {
+        let p = softmax_with_temperature(&[1.0, 2.0, 3.0], 1.0);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+        // Temperature 0 → one-hot at the argmax.
+        let g = softmax_with_temperature(&[1.0, 5.0, 3.0], 0.0);
+        assert_eq!(g, vec![0.0, 1.0, 0.0]);
+        // High temperature flattens.
+        let flat = softmax_with_temperature(&[1.0, 2.0, 3.0], 100.0);
+        assert!(flat.iter().all(|&v| (v - 1.0 / 3.0).abs() < 0.01));
+    }
+
+    #[test]
+    fn top_k_keeps_largest() {
+        let p = vec![0.1, 0.4, 0.2, 0.3];
+        let f = top_k_filter(&p, 2);
+        assert_eq!(f[0], 0.0);
+        assert_eq!(f[2], 0.0);
+        assert!((f[1] + f[3] - 1.0).abs() < 1e-12);
+        assert_eq!(top_k_filter(&p, 0), p);
+    }
+
+    #[test]
+    fn verify_identical_distributions_accepts_everything() {
+        let mut rng = Rng::seeded(1);
+        let dist = vec![0.25; 4];
+        let out = verify_chain(
+            &[0, 1, 2],
+            &vec![dist.clone(); 3],
+            &vec![dist.clone(); 4],
+            &mut rng,
+        );
+        assert_eq!(out.accepted, 3);
+        assert_eq!(out.tokens.len(), 4);
+        assert_eq!(&out.tokens[..3], &[0, 1, 2]);
+    }
+
+    #[test]
+    fn verify_disjoint_distributions_rejects_immediately() {
+        let mut rng = Rng::seeded(2);
+        let draft = vec![vec![1.0, 0.0]];
+        let target = vec![vec![0.0, 1.0], vec![0.0, 1.0]];
+        let out = verify_chain(&[0], &draft, &target, &mut rng);
+        assert_eq!(out.accepted, 0);
+        assert_eq!(out.tokens, vec![1]); // residual forces token 1
+    }
+
+    #[test]
+    fn output_length_always_accepted_plus_one() {
+        let mut rng = Rng::seeded(3);
+        for trial in 0..200u64 {
+            let gamma = 1 + (trial % 4) as usize;
+            let vocab = 8;
+            let mk_dist = |seed: u64| -> Vec<f64> {
+                let mut r = Rng::seeded(seed);
+                let v: Vec<f64> = (0..vocab).map(|_| r.f64() + 0.01).collect();
+                let s: f64 = v.iter().sum();
+                v.into_iter().map(|x| x / s).collect()
+            };
+            let draft_probs: Vec<Vec<f64>> =
+                (0..gamma).map(|i| mk_dist(trial * 10 + i as u64)).collect();
+            let target_probs: Vec<Vec<f64>> = (0..=gamma)
+                .map(|i| mk_dist(trial * 17 + i as u64 + 1000))
+                .collect();
+            let draft_tokens: Vec<u32> = draft_probs
+                .iter()
+                .map(|d| rng.categorical(d) as u32)
+                .collect();
+            let out = verify_chain(&draft_tokens, &draft_probs, &target_probs, &mut rng);
+            assert_eq!(out.tokens.len(), out.accepted + 1);
+            assert!(out.accepted <= gamma);
+        }
+    }
+
+    /// The losslessness property (Leviathan Thm. 1): the marginal of the
+    /// first emitted token equals the target distribution, regardless of
+    /// the draft distribution.
+    #[test]
+    fn first_token_is_target_distributed() {
+        let mut rng = Rng::seeded(4);
+        let target = vec![0.5, 0.3, 0.15, 0.05];
+        let draft = vec![0.1, 0.2, 0.3, 0.4]; // deliberately very different
+        let n = 200_000;
+        let mut counts = vec![0.0; 4];
+        for _ in 0..n {
+            let d_tok = rng.categorical(&draft) as u32;
+            let out = verify_chain(
+                &[d_tok],
+                &[draft.clone()],
+                &[target.clone(), target.clone()],
+                &mut rng,
+            );
+            counts[out.tokens[0] as usize] += 1.0;
+        }
+        let expected: Vec<f64> = target.iter().map(|p| p * n as f64).collect();
+        let chi2 = chi_square(&counts, &expected);
+        // 3 dof, p=0.001 critical value ≈ 16.27.
+        assert!(chi2 < 16.27, "χ²={chi2}, counts={counts:?}");
+    }
+
+    /// Acceptance rate for identical-support distributions equals
+    /// Σ min(p_t, p_d) (the standard SD acceptance formula).
+    #[test]
+    fn acceptance_rate_matches_overlap() {
+        let mut rng = Rng::seeded(5);
+        let target: Vec<f64> = vec![0.6, 0.3, 0.1];
+        let draft: Vec<f64> = vec![0.3, 0.5, 0.2];
+        let overlap: f64 = target.iter().zip(&draft).map(|(&t, &d)| t.min(d)).sum();
+        let n = 100_000;
+        let mut accepted = 0;
+        for _ in 0..n {
+            let d_tok = rng.categorical(&draft) as u32;
+            let out = verify_chain(
+                &[d_tok],
+                &[draft.clone()],
+                &[target.clone(), target.clone()],
+                &mut rng,
+            );
+            accepted += out.accepted;
+        }
+        let rate = accepted as f64 / n as f64;
+        assert!(
+            (rate - overlap).abs() < 0.01,
+            "rate={rate} overlap={overlap}"
+        );
+    }
+
+    #[test]
+    fn greedy_one_hot_accepts_iff_match() {
+        let mut rng = Rng::seeded(6);
+        let one_hot = |i: usize, v: usize| -> Vec<f64> {
+            let mut p = vec![0.0; v];
+            p[i] = 1.0;
+            p
+        };
+        // Draft proposes token 2, target wants token 2 → accept + bonus.
+        let out = verify_chain(
+            &[2],
+            &[one_hot(2, 4)],
+            &[one_hot(2, 4), one_hot(1, 4)],
+            &mut rng,
+        );
+        assert_eq!(out.tokens, vec![2, 1]);
+        // Target wants token 3 → reject, emit 3.
+        let out = verify_chain(
+            &[2],
+            &[one_hot(2, 4)],
+            &[one_hot(3, 4), one_hot(0, 4)],
+            &mut rng,
+        );
+        assert_eq!(out.tokens, vec![3]);
+        assert_eq!(out.accepted, 0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Admission scheduling: decides which waiting requests join the running
+//! batch, respecting (a) the configured batch ceiling, (b) KV-cache
+//! capacity with a per-sequence growth reservation, and (c) an optional
+//! TPOT-derived batch cap (the §3.4 latency-SLO scenario where "large
+//! batch sizes are often not feasible").
+
+use crate::batching::{Request, RequestQueue};
+use crate::kvcache::KvManager;
+
+/// Scheduler policy knobs.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Hard ceiling on concurrently running sequences.
+    pub max_batch: usize,
+    /// Tokens reserved per admitted sequence beyond the prompt, so decode
+    /// progress can't immediately deadlock on capacity (preemption still
+    /// covers the tail case).
+    pub admit_reserve_tokens: usize,
+    /// If set, keep the running batch at or below the largest size whose
+    /// estimated TPOT meets this bound (seconds/token).
+    pub tpot_slo: Option<f64>,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_batch: 64,
+            admit_reserve_tokens: 16,
+            tpot_slo: None,
+        }
+    }
+}
+
+/// The admission scheduler (stateless policy over queue + cache state).
+#[derive(Debug, Clone)]
+pub struct Scheduler {
+    pub config: SchedulerConfig,
+}
+
+impl Scheduler {
+    pub fn new(config: SchedulerConfig) -> Scheduler {
+        Scheduler { config }
+    }
+
+    /// Effective batch ceiling given the SLO estimator: `est_tpot(b)`
+    /// returns estimated seconds/token at batch size b.
+    pub fn batch_ceiling<F: Fn(usize) -> f64>(&self, est_tpot: F) -> usize {
+        match self.config.tpot_slo {
+            None => self.config.max_batch,
+            Some(slo) => {
+                let mut best = 1;
+                for b in 1..=self.config.max_batch {
+                    if est_tpot(b) <= slo {
+                        best = b;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Pull admissible requests off the queue. FIFO order; stops at the
+    /// first request that doesn't fit (no head-of-line bypass — keeps
+    /// latency fairness, same default as vLLM). Requests with
+    /// `arrival > now` are not admitted (the queue is arrival-sorted).
+    pub fn admit(
+        &self,
+        queue: &mut RequestQueue,
+        kv: &KvManager,
+        running: usize,
+        ceiling: usize,
+        now: f64,
+    ) -> Vec<Request> {
+        let mut admitted = Vec::new();
+        let mut virtual_free = kv.free_blocks();
+        let bs = kv.config().block_size;
+        while running + admitted.len() < ceiling.min(self.config.max_batch) {
+            let Some(head) = queue.peek() else { break };
+            if head.arrival > now {
+                break;
+            }
+            let need_tokens = head.prompt.len() + self.config.admit_reserve_tokens;
+            let need_blocks = need_tokens.div_ceil(bs);
+            if need_blocks > virtual_free {
+                break;
+            }
+            virtual_free -= need_blocks;
+            admitted.push(queue.pop().unwrap());
+        }
+        admitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::SamplingParams;
+    use crate::kvcache::{KvConfig, KvManager};
+
+    fn req(id: u64, prompt_len: usize) -> Request {
+        Request {
+            id,
+            prompt: vec![1; prompt_len],
+            params: SamplingParams::default(),
+            arrival: 0.0,
+        }
+    }
+
+    fn kv(blocks: usize) -> KvManager {
+        KvManager::new(KvConfig {
+            num_blocks: blocks,
+            block_size: 16,
+        })
+    }
+
+    #[test]
+    fn admits_up_to_batch_ceiling() {
+        let s = Scheduler::new(SchedulerConfig {
+            max_batch: 2,
+            admit_reserve_tokens: 0,
+            tpot_slo: None,
+        });
+        let mut q = RequestQueue::new();
+        for i in 0..5 {
+            q.push(req(i, 8));
+        }
+        let admitted = s.admit(&mut q, &kv(100), 0, usize::MAX, 0.0);
+        assert_eq!(admitted.len(), 2);
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn respects_kv_capacity_with_reservation() {
+        let s = Scheduler::new(SchedulerConfig {
+            max_batch: 64,
+            admit_reserve_tokens: 16,
+            tpot_slo: None,
+        });
+        let mut q = RequestQueue::new();
+        // Each request: 16-token prompt + 16 reserve = 2 blocks; 3 blocks
+        // total → only one admission.
+        q.push(req(1, 16));
+        q.push(req(2, 16));
+        let admitted = s.admit(&mut q, &kv(3), 0, usize::MAX, 0.0);
+        assert_eq!(admitted.len(), 1);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn fifo_no_bypass() {
+        let s = Scheduler::new(SchedulerConfig {
+            max_batch: 8,
+            admit_reserve_tokens: 0,
+            tpot_slo: None,
+        });
+        let mut q = RequestQueue::new();
+        q.push(req(1, 1000)); // cannot fit in 4 blocks of 16
+        q.push(req(2, 4)); // would fit, but must not bypass
+        let admitted = s.admit(&mut q, &kv(4), 0, usize::MAX, 0.0);
+        assert!(admitted.is_empty());
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn slo_caps_batch() {
+        let s = Scheduler::new(SchedulerConfig {
+            max_batch: 64,
+            admit_reserve_tokens: 0,
+            tpot_slo: Some(0.05),
+        });
+        // TPOT grows linearly: 0.01·b seconds/token → ceiling 5.
+        let ceil = s.batch_ceiling(|b| 0.01 * b as f64);
+        assert_eq!(ceil, 5);
+        // No SLO → max batch.
+        let s2 = Scheduler::new(SchedulerConfig::default());
+        assert_eq!(s2.batch_ceiling(|_| 1.0), 64);
+    }
+
+    #[test]
+    fn running_counts_against_ceiling() {
+        let s = Scheduler::new(SchedulerConfig {
+            max_batch: 4,
+            admit_reserve_tokens: 0,
+            tpot_slo: None,
+        });
+        let mut q = RequestQueue::new();
+        for i in 0..4 {
+            q.push(req(i, 4));
+        }
+        let admitted = s.admit(&mut q, &kv(100), 3, usize::MAX, 0.0);
+        assert_eq!(admitted.len(), 1);
+    }
+}

@@ -1,0 +1,312 @@
+//! TCP front-end: the private-serving deployment surface.
+//!
+//! Protocol: newline-delimited JSON. One request object per line:
+//! `{"id": 7, "prompt": "text", "max_new_tokens": 32, "temperature": 0.0}`
+//! answered by
+//! `{"id": 7, "text": "...", "n_tokens": 32, "ttft": 0.01, "latency": 0.2}`.
+//!
+//! Architecture (std-threads; tokio is unavailable offline):
+//! - an **engine thread** owns the [`Engine`] and loops
+//!   `drain submissions → step → dispatch completions`;
+//! - the **accept loop** spawns one lightweight connection thread per
+//!   client; connection threads submit into an mpsc channel and park on a
+//!   per-request response channel.
+//!
+//! Tokens go over the wire as text through [`crate::tokenizer`] (byte
+//! vocab), so the server is only meaningful for the tiny-real-model and
+//! synthetic backends — which is exactly the repo's serving scope.
+
+use crate::batching::{Completion, Request, SamplingParams};
+use crate::engine::{Engine, EngineConfig};
+use crate::spec::SdBackend;
+use crate::tokenizer;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// A submitted job: the request plus where to send the completion.
+struct Job {
+    request: Request,
+    respond: Sender<Completion>,
+}
+
+/// Server handle: join/shutdown control.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    engine_thread: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start serving on `bind_addr` (use port 0 for an ephemeral port)
+    /// with a ready backend (must be `Send`; used by the synthetic mode).
+    pub fn start<B: SdBackend + Send + 'static>(
+        bind_addr: &str,
+        config: EngineConfig,
+        backend: B,
+    ) -> anyhow::Result<Server> {
+        Self::start_with(bind_addr, config, move || Ok(backend))
+    }
+
+    /// Start serving with a backend *factory* that runs on the engine
+    /// thread. This is how non-`Send` backends (the PJRT-backed
+    /// [`crate::runtime::hlo_model::HloBackend`] holds `Rc` XLA handles)
+    /// are hosted: the backend never crosses a thread boundary.
+    pub fn start_with<B, F>(
+        bind_addr: &str,
+        config: EngineConfig,
+        make_backend: F,
+    ) -> anyhow::Result<Server>
+    where
+        B: SdBackend + 'static,
+        F: FnOnce() -> anyhow::Result<B> + Send + 'static,
+    {
+        let listener = TcpListener::bind(bind_addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (job_tx, job_rx) = channel::<Job>();
+
+        let engine_thread = {
+            let shutdown = shutdown.clone();
+            std::thread::Builder::new()
+                .name("moesd-engine".into())
+                .spawn(move || {
+                    let backend = match make_backend() {
+                        Ok(b) => b,
+                        Err(e) => {
+                            crate::util::logging::log(
+                                crate::util::logging::Level::Error,
+                                "server",
+                                &format!("backend construction failed: {e:#}"),
+                            );
+                            return;
+                        }
+                    };
+                    engine_loop(config, backend, job_rx, shutdown)
+                })?
+        };
+
+        let accept_thread = {
+            let shutdown = shutdown.clone();
+            std::thread::Builder::new()
+                .name("moesd-accept".into())
+                .spawn(move || accept_loop(listener, job_tx, shutdown))?
+        };
+
+        Ok(Server {
+            addr,
+            shutdown,
+            accept_thread: Some(accept_thread),
+            engine_thread: Some(engine_thread),
+        })
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.engine_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.engine_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn engine_loop<B: SdBackend>(
+    config: EngineConfig,
+    backend: B,
+    jobs: Receiver<Job>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut engine = Engine::new(config, backend);
+    let mut pending: HashMap<u64, Sender<Completion>> = HashMap::new();
+    while !shutdown.load(Ordering::SeqCst) {
+        // Drain new submissions.
+        let mut got_work = false;
+        while let Ok(job) = jobs.try_recv() {
+            pending.insert(job.request.id, job.respond);
+            engine.submit(job.request);
+            got_work = true;
+        }
+        if engine.is_idle() {
+            if !got_work {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            continue;
+        }
+        match engine.step() {
+            Ok(completions) => {
+                for c in completions {
+                    if let Some(tx) = pending.remove(&c.id) {
+                        let _ = tx.send(c);
+                    }
+                }
+            }
+            Err(e) => {
+                crate::util::logging::log(
+                    crate::util::logging::Level::Error,
+                    "server",
+                    &format!("engine step failed: {e}"),
+                );
+            }
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, jobs: Sender<Job>, shutdown: Arc<AtomicBool>) {
+    let next_id = Arc::new(AtomicU64::new(1));
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let jobs = jobs.clone();
+                let next_id = next_id.clone();
+                let _ = std::thread::Builder::new()
+                    .name("moesd-conn".into())
+                    .spawn(move || {
+                        let _ = handle_connection(stream, jobs, next_id);
+                    });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    jobs: Sender<Job>,
+    next_id: Arc<AtomicU64>,
+) -> anyhow::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match serve_one(&line, &jobs, &next_id) {
+            Ok(resp) => resp,
+            Err(e) => Json::from_pairs(vec![("error", format!("{e}").into())]),
+        };
+        writer.write_all(response.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+fn serve_one(line: &str, jobs: &Sender<Job>, next_id: &AtomicU64) -> anyhow::Result<Json> {
+    let j = Json::parse(line)?;
+    let prompt_text = j.req_str("prompt")?;
+    anyhow::ensure!(!prompt_text.is_empty(), "empty prompt");
+    let client_id = j.get("id").and_then(Json::as_i64).unwrap_or(-1);
+    let id = next_id.fetch_add(1, Ordering::SeqCst);
+    let request = Request {
+        id,
+        prompt: tokenizer::encode(prompt_text, true),
+        params: SamplingParams {
+            temperature: j.get("temperature").and_then(Json::as_f64).unwrap_or(0.0),
+            max_new_tokens: j
+                .get("max_new_tokens")
+                .and_then(Json::as_usize)
+                .unwrap_or(32),
+            eos_token: Some(tokenizer::EOS),
+        },
+        arrival: 0.0,
+    };
+    let (tx, rx) = channel();
+    jobs.send(Job {
+        request,
+        respond: tx,
+    })
+    .map_err(|_| anyhow::anyhow!("engine stopped"))?;
+    let completion = rx
+        .recv_timeout(std::time::Duration::from_secs(120))
+        .map_err(|_| anyhow::anyhow!("request timed out"))?;
+    Ok(Json::from_pairs(vec![
+        (
+            "id",
+            if client_id >= 0 {
+                client_id.into()
+            } else {
+                (id as i64).into()
+            },
+        ),
+        ("text", tokenizer::decode(&completion.tokens).into()),
+        ("n_tokens", completion.tokens.len().into()),
+        ("ttft", completion.ttft().into()),
+        (
+            "latency",
+            (completion.finished_at - completion.arrival).into(),
+        ),
+        ("rounds", (completion.rounds as usize).into()),
+    ]))
+}
+
+/// Blocking client for tests/examples.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> anyhow::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    /// Send one request line and block for its response.
+    pub fn generate(
+        &mut self,
+        prompt: &str,
+        max_new_tokens: usize,
+        temperature: f64,
+    ) -> anyhow::Result<Json> {
+        let req = Json::from_pairs(vec![
+            ("prompt", prompt.into()),
+            ("max_new_tokens", max_new_tokens.into()),
+            ("temperature", temperature.into()),
+        ]);
+        self.stream.write_all(req.to_string().as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        self.stream.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let resp = Json::parse(&line)?;
+        if let Some(err) = resp.get("error") {
+            anyhow::bail!("server error: {err}");
+        }
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // End-to-end server tests live in rust/tests/integration_server.rs
+    // (they spin up real TCP listeners).
+}

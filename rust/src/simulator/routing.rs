@@ -1,0 +1,178 @@
+//! Expert-routing simulation.
+//!
+//! The paper derives N(t) (Eq. 8) under i.i.d. uniform routing and verifies
+//! it against real gate traces (Fig. 1a/b). We reproduce the "actual" side
+//! by sampling token→expert assignments from a router distribution that can
+//! be uniform (well-balanced, the paper's assumption for modern MoEs) or
+//! skewed via a Dirichlet prior (to study imbalance, which the paper notes
+//! breaks the derivation).
+
+use crate::util::rng::Rng;
+
+/// A sampled routing outcome for a batch of tokens through one MoE gate.
+#[derive(Debug, Clone)]
+pub struct RoutingOutcome {
+    /// Tokens assigned to each expert (length E); sums to t·K.
+    pub tokens_per_expert: Vec<u64>,
+    /// Number of experts with at least one token.
+    pub activated: usize,
+}
+
+impl RoutingOutcome {
+    /// Average tokens per *activated* expert — the empirical T̄_exp.
+    pub fn mean_load(&self) -> f64 {
+        if self.activated == 0 {
+            return 0.0;
+        }
+        let total: u64 = self.tokens_per_expert.iter().sum();
+        total as f64 / self.activated as f64
+    }
+
+    /// Max tokens on any expert (the straggler that sets MoE GEMM time when
+    /// experts execute as a grouped GEMM).
+    pub fn max_load(&self) -> u64 {
+        self.tokens_per_expert.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Router model: per-expert selection propensities.
+#[derive(Debug, Clone)]
+pub struct Router {
+    /// Unnormalized expert weights (length E). Uniform ⇒ balanced routing.
+    weights: Vec<f64>,
+    topk: usize,
+}
+
+impl Router {
+    /// Perfectly balanced router (the paper's modeling assumption for
+    /// well-trained MoEs with aux-loss balancing).
+    pub fn balanced(experts: usize, topk: usize) -> Router {
+        assert!(topk >= 1 && topk <= experts);
+        Router {
+            weights: vec![1.0; experts],
+            topk,
+        }
+    }
+
+    /// Imbalanced router: propensities drawn from a symmetric
+    /// Dirichlet(alpha). Small alpha ⇒ heavy skew (routing collapse regime).
+    pub fn imbalanced(experts: usize, topk: usize, alpha: f64, rng: &mut Rng) -> Router {
+        assert!(topk >= 1 && topk <= experts);
+        Router {
+            weights: rng.dirichlet(alpha, experts),
+            topk,
+        }
+    }
+
+    pub fn experts(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn topk(&self) -> usize {
+        self.topk
+    }
+
+    /// Route `t` tokens; each token picks `topk` distinct experts.
+    pub fn route(&self, t: u64, rng: &mut Rng) -> RoutingOutcome {
+        let mut tokens_per_expert = vec![0u64; self.weights.len()];
+        for _ in 0..t {
+            for idx in rng.categorical_k(&self.weights, self.topk) {
+                tokens_per_expert[idx] += 1;
+            }
+        }
+        let activated = tokens_per_expert.iter().filter(|&&c| c > 0).count();
+        RoutingOutcome {
+            tokens_per_expert,
+            activated,
+        }
+    }
+
+    /// Monte-Carlo estimate of E[N(t)] with `trials` independent batches —
+    /// the "actual" curve of Fig. 1a/b.
+    pub fn empirical_activation(&self, t: u64, trials: usize, rng: &mut Rng) -> f64 {
+        let mut total = 0usize;
+        for _ in 0..trials {
+            total += self.route(t, rng).activated;
+        }
+        total as f64 / trials as f64
+    }
+
+    /// Empirical mean tokens per activated expert over `trials`.
+    pub fn empirical_load(&self, t: u64, trials: usize, rng: &mut Rng) -> f64 {
+        let mut total = 0.0;
+        for _ in 0..trials {
+            total += self.route(t, rng).mean_load();
+        }
+        total / trials as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::theory::{expected_active_experts, expert_load};
+
+    #[test]
+    fn route_conserves_token_assignments() {
+        let mut rng = Rng::seeded(1);
+        let r = Router::balanced(16, 3);
+        let out = r.route(50, &mut rng);
+        let total: u64 = out.tokens_per_expert.iter().sum();
+        assert_eq!(total, 150);
+        assert!(out.activated <= 16);
+        assert!(out.activated >= 3);
+    }
+
+    #[test]
+    fn balanced_routing_matches_eq8() {
+        // Fig. 1a/b's claim: the i.i.d. derivation matches sampled routing.
+        let mut rng = Rng::seeded(2);
+        let r = Router::balanced(62, 6);
+        for &t in &[1u64, 4, 16, 64, 128] {
+            let emp = r.empirical_activation(t, 400, &mut rng);
+            let theory = expected_active_experts(62, 6, t);
+            assert!(
+                (emp - theory).abs() < 0.05 * 62.0,
+                "t={t}: empirical {emp} vs theory {theory}"
+            );
+        }
+    }
+
+    #[test]
+    fn topk_distinctness_bounds_single_token() {
+        let mut rng = Rng::seeded(3);
+        let r = Router::balanced(8, 8);
+        let out = r.route(1, &mut rng);
+        assert_eq!(out.activated, 8); // K = E activates everything.
+    }
+
+    #[test]
+    fn empirical_load_matches_eq10() {
+        let mut rng = Rng::seeded(4);
+        let r = Router::balanced(60, 4);
+        for &t in &[2u64, 8, 32, 128] {
+            let emp = r.empirical_load(t, 400, &mut rng);
+            let theory = expert_load(t as f64, 4.0 / 60.0);
+            // Eq. 10 uses E[sum]/E[count]; the per-trial ratio mean is close
+            // but not identical — allow a modest tolerance.
+            assert!(
+                (emp - theory).abs() / theory < 0.08,
+                "t={t}: empirical {emp} vs theory {theory}"
+            );
+        }
+    }
+
+    #[test]
+    fn imbalanced_router_activates_fewer_experts() {
+        let mut rng = Rng::seeded(5);
+        let balanced = Router::balanced(64, 8);
+        let skewed = Router::imbalanced(64, 8, 0.05, &mut rng);
+        let t = 24;
+        let nb = balanced.empirical_activation(t, 300, &mut rng);
+        let ns = skewed.empirical_activation(t, 300, &mut rng);
+        assert!(
+            ns < nb - 2.0,
+            "skewed routing should activate fewer experts: {ns} vs {nb}"
+        );
+    }
+}

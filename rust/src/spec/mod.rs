@@ -1,0 +1,123 @@
+//! Speculative-decoding backend abstraction.
+//!
+//! The engine (L3 coordinator) drives a [`SdBackend`] through the SD round
+//! protocol and owns rejection sampling itself, so losslessness logic lives
+//! in exactly one place ([`crate::sampling::verify_chain`]). Two backends
+//! implement the trait:
+//!
+//! - [`synthetic::SyntheticLm`] — paper-scale experiments: token chains are
+//!   deterministic hash sequences, draft accuracy is the calibrated α, and
+//!   step costs come from the roofline simulator (virtual clock).
+//! - [`crate::runtime::hlo_model::HloBackend`] — the real tiny MoE model
+//!   executed through PJRT (wall clock).
+//!
+//! ## Round protocol (chain speculation, uniform shapes)
+//!
+//! Let `S` be a sequence's token stream (prompt ++ emitted tokens), and
+//! `base` the number of tokens committed to the target KV. The *feed*
+//! token `S[base]` is known but not yet processed. Each round:
+//!
+//! 1. `propose(pending)` — the draft catches up on its `pending` token
+//!    backlog (`S[draft_len .. base+1]`, usually just the feed) and samples
+//!    γ tokens autoregressively: γ forwards, ≈ γ·T_D(B,1).
+//! 2. `verify(feed, drafts)` — the target runs **one** forward over the
+//!    γ+1 tokens `[feed, d1, …, dγ]`, returning γ+1 next-token
+//!    distributions (≈ T_T(B, γ+1) — the paper's verification step).
+//! 3. The engine rejection-samples ([`crate::sampling::verify_chain`]),
+//!    emits `accepted + 1` tokens, rolls both models back to the accepted
+//!    prefix, and the fresh token becomes the next round's feed.
+//!
+//! With γ = 0 the same protocol is plain autoregressive decoding (the
+//! baseline T_AR measurement): verify forwards just the feed token and the
+//! engine samples from the single returned row.
+
+pub mod synthetic;
+
+use crate::kvcache::SeqId;
+
+/// A next-token probability distribution.
+pub type ProbRow = Vec<f64>;
+
+/// Output of a draft propose step.
+#[derive(Debug, Clone)]
+pub struct ProposeOut {
+    /// Proposed tokens per sequence: `tokens[i].len() == gamma`.
+    pub tokens: Vec<Vec<u32>>,
+    /// Draft distributions the tokens were sampled from (same shape),
+    /// already temperature-adjusted.
+    pub probs: Vec<Vec<ProbRow>>,
+    /// Cost in seconds (simulated or measured, per the backend's clock).
+    pub cost: f64,
+}
+
+/// Output of a target verify step.
+#[derive(Debug, Clone)]
+pub struct VerifyOut {
+    /// Target distributions per sequence: `probs[i].len() == gamma + 1`
+    /// (one row to verify each draft token, plus the bonus row), already
+    /// temperature-adjusted.
+    pub probs: Vec<Vec<ProbRow>>,
+    /// Cost in seconds.
+    pub cost: f64,
+}
+
+/// The model-pair backend the coordinator schedules against.
+pub trait SdBackend {
+    fn vocab(&self) -> usize;
+
+    /// Register sequences and process their prompts *minus the final
+    /// token* on both models. Fails if backend capacity is exhausted —
+    /// the scheduler treats that as admission backpressure.
+    fn prefill(&mut self, batch: &[(SeqId, Vec<u32>)]) -> anyhow::Result<f64>;
+
+    /// Draft-propose `gamma` tokens per sequence. `pending[i]` is the
+    /// token backlog to feed into the draft context first (last prompt
+    /// token, previous fresh token, and — after a fully-accepted round —
+    /// the final draft token it never consumed). `temps[i]` controls the
+    /// per-sequence sampling temperature.
+    fn propose(
+        &mut self,
+        seqs: &[SeqId],
+        pending: &[Vec<u32>],
+        gamma: usize,
+        temps: &[f64],
+        seed: u64,
+    ) -> anyhow::Result<ProposeOut>;
+
+    /// Target-verify: one forward over `[feed[i], drafts[i]...]` per
+    /// sequence, returning `gamma + 1` distribution rows each.
+    fn verify(
+        &mut self,
+        seqs: &[SeqId],
+        feed: &[u32],
+        drafts: &[Vec<u32>],
+        temps: &[f64],
+    ) -> anyhow::Result<VerifyOut>;
+
+    /// Roll the target KV back to `len` tokens (drop rejected drafts).
+    fn rollback_target(&mut self, seq: SeqId, len: usize);
+
+    /// Roll the draft KV back to `len` tokens. `len` larger than the
+    /// current draft length is a no-op (the draft may legitimately lag the
+    /// committed stream after a fully-accepted round).
+    fn rollback_draft(&mut self, seq: SeqId, len: usize);
+
+    /// Current target-context length in tokens.
+    fn target_len(&self, seq: SeqId) -> usize;
+
+    /// Current draft-context length in tokens.
+    fn draft_len(&self, seq: SeqId) -> usize;
+
+    /// Release all state for a finished sequence.
+    fn release(&mut self, seq: SeqId);
+
+    /// Rejection-sampling stage cost for a batch (backends price this from
+    /// their simulator or measure it; the engine adds it to the clock).
+    fn reject_cost(&self, batch: usize, gamma: usize) -> f64;
+}
+
+#[cfg(test)]
+mod tests {
+    // The trait itself is exercised end-to-end via `synthetic` and the
+    // engine integration tests; shape conventions are asserted there.
+}

@@ -1,0 +1,399 @@
+//! Synthetic SD backend for paper-scale experiments.
+//!
+//! The paper's measurements need Qwen2-57B on multi-GPU nodes; this backend
+//! substitutes (per DESIGN.md) a deterministic token oracle plus the
+//! roofline simulator for timing:
+//!
+//! - The **target model** is a deterministic chain: the "correct" token at
+//!   position `p` of sequence `s` is `hash(stream, s, p)`. Target
+//!   distributions are one-hot at the correct token (greedy target), so the
+//!   emitted text is exactly the chain — which makes losslessness trivially
+//!   auditable in tests.
+//! - The **draft model** proposes the correct token with probability α
+//!   (the calibrated acceptance rate; see
+//!   [`crate::theory::alpha_from_sigma`]) and a deliberately-wrong token
+//!   otherwise. With one-hot target rows, rejection sampling accepts
+//!   exactly the correct proposals: chain acceptance is Bernoulli(α), the
+//!   regime Eq. 5 models.
+//! - **Costs** come from two [`ExecSim`] instances (target + draft model on
+//!   the platform under study), giving the virtual clock the same roofline
+//!   / expert-activation behavior the paper measures on GPUs.
+
+use std::collections::HashMap;
+
+use super::{ProbRow, ProposeOut, SdBackend, VerifyOut};
+use crate::kvcache::SeqId;
+use crate::simulator::ExecSim;
+use crate::util::rng::Rng;
+
+/// Deterministic "correct token" oracle (splitmix64 finalizer).
+fn chain_token(stream: u64, seq: SeqId, pos: usize, vocab: usize) -> u32 {
+    let mut h = stream
+        .wrapping_mul(0x9e3779b97f4a7c15)
+        .wrapping_add(seq.wrapping_mul(0xd1b54a32d192ed03))
+        .wrapping_add(pos as u64);
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58476d1ce4e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d049bb133111eb);
+    h ^= h >> 31;
+    (h % vocab as u64) as u32
+}
+
+#[derive(Debug, Clone, Default)]
+struct SeqState {
+    target_len: usize,
+    draft_len: usize,
+}
+
+/// The synthetic backend.
+pub struct SyntheticLm {
+    target_sim: ExecSim,
+    draft_sim: ExecSim,
+    /// Probability that the draft proposes the correct chain token.
+    pub alpha: f64,
+    vocab: usize,
+    stream: u64,
+    seqs: HashMap<SeqId, SeqState>,
+    /// Context length used when pricing forwards (the paper works at
+    /// typical sequence lengths where KV impact is limited; footnote 2).
+    pub ctx_for_pricing: usize,
+    /// Use sampled (noisy) expert activation when pricing — run-to-run
+    /// variation for Fig. 5's individual-run curves.
+    noise_rng: Option<Rng>,
+}
+
+impl SyntheticLm {
+    pub fn new(target_sim: ExecSim, draft_sim: ExecSim, alpha: f64, seed: u64) -> SyntheticLm {
+        assert!((0.0..=1.0).contains(&alpha));
+        SyntheticLm {
+            target_sim,
+            draft_sim,
+            alpha,
+            vocab: 64,
+            stream: seed,
+            seqs: HashMap::new(),
+            ctx_for_pricing: 512,
+            noise_rng: None,
+        }
+    }
+
+    /// Enable run-to-run pricing noise (sampled expert activation).
+    pub fn with_noise(mut self, seed: u64) -> Self {
+        self.noise_rng = Some(Rng::new(seed, 3));
+        self
+    }
+
+    /// The ground-truth continuation this backend will deterministically
+    /// emit for a sequence (test hook for losslessness assertions).
+    pub fn expected_chain(&self, seq: SeqId, start_pos: usize, n: usize) -> Vec<u32> {
+        (0..n)
+            .map(|i| chain_token(self.stream, seq, start_pos + i, self.vocab))
+            .collect()
+    }
+
+    pub fn target_sim(&self) -> &ExecSim {
+        &self.target_sim
+    }
+
+    fn one_hot(&self, tok: u32) -> ProbRow {
+        let mut row = vec![0.0; self.vocab];
+        row[tok as usize] = 1.0;
+        row
+    }
+
+    fn state(&self, seq: SeqId) -> &SeqState {
+        self.seqs.get(&seq).expect("unknown sequence")
+    }
+
+    fn price_target(&mut self, b: usize, s: usize) -> f64 {
+        let ctx = self.ctx_for_pricing;
+        match &mut self.noise_rng {
+            Some(rng) => self
+                .target_sim
+                .clone()
+                .with_activation(crate::simulator::ActivationMode::Sampled)
+                .forward_time(b, s, ctx, Some(rng))
+                .total(),
+            None => self.target_sim.t_forward(b, s, ctx),
+        }
+    }
+}
+
+impl SdBackend for SyntheticLm {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn prefill(&mut self, batch: &[(SeqId, Vec<u32>)]) -> anyhow::Result<f64> {
+        let mut max_prompt = 0usize;
+        for (seq, prompt) in batch {
+            anyhow::ensure!(!prompt.is_empty(), "empty prompt for seq {seq}");
+            anyhow::ensure!(
+                !self.seqs.contains_key(seq),
+                "sequence {seq} already prefilled"
+            );
+            let processed = prompt.len() - 1;
+            self.seqs.insert(
+                *seq,
+                SeqState {
+                    target_len: processed,
+                    draft_len: processed,
+                },
+            );
+            max_prompt = max_prompt.max(processed);
+        }
+        if max_prompt == 0 {
+            return Ok(0.0);
+        }
+        let b = batch.len();
+        Ok(self.target_sim.t_forward(b, max_prompt, max_prompt)
+            + self.draft_sim.t_forward(b, max_prompt, max_prompt))
+    }
+
+    fn propose(
+        &mut self,
+        seqs: &[SeqId],
+        pending: &[Vec<u32>],
+        gamma: usize,
+        temps: &[f64],
+        seed: u64,
+    ) -> anyhow::Result<ProposeOut> {
+        anyhow::ensure!(seqs.len() == pending.len() && seqs.len() == temps.len());
+        let mut rng = Rng::new(self.stream ^ seed, 13);
+        let mut tokens = Vec::with_capacity(seqs.len());
+        let mut probs = Vec::with_capacity(seqs.len());
+        for (i, &seq) in seqs.iter().enumerate() {
+            anyhow::ensure!(!pending[i].is_empty() || gamma == 0, "no pending feed");
+            let base = self.state(seq).target_len; // committed stream length
+            let mut toks = Vec::with_capacity(gamma);
+            let mut rows = Vec::with_capacity(gamma);
+            for g in 0..gamma {
+                // Stream position of this proposal: base is the feed token's
+                // index, proposals continue at base+1+g.
+                let correct = chain_token(self.stream, seq, base + 1 + g, self.vocab);
+                let tok = if rng.bernoulli(self.alpha) {
+                    correct
+                } else {
+                    let mut t = rng.below(self.vocab as u64 - 1) as u32;
+                    if t >= correct {
+                        t += 1;
+                    }
+                    t
+                };
+                rows.push(self.one_hot(tok));
+                toks.push(tok);
+            }
+            if gamma > 0 {
+                let st = self.seqs.get_mut(&seq).unwrap();
+                // Fed the pending backlog plus γ−1 of its own proposals.
+                st.draft_len += pending[i].len() + gamma - 1;
+            }
+            tokens.push(toks);
+            probs.push(rows);
+        }
+        let b = seqs.len();
+        let cost = if gamma == 0 {
+            0.0
+        } else {
+            // γ sequential draft forwards (the first consumes the pending
+            // backlog; backlog is ≤ 2 tokens so single-token pricing holds).
+            gamma as f64 * self.draft_sim.t_forward(b, 1, self.ctx_for_pricing)
+        };
+        Ok(ProposeOut {
+            tokens,
+            probs,
+            cost,
+        })
+    }
+
+    fn verify(
+        &mut self,
+        seqs: &[SeqId],
+        feed: &[u32],
+        drafts: &[Vec<u32>],
+        temps: &[f64],
+    ) -> anyhow::Result<VerifyOut> {
+        anyhow::ensure!(seqs.len() == feed.len() && seqs.len() == drafts.len());
+        anyhow::ensure!(seqs.len() == temps.len());
+        let gamma = drafts.first().map_or(0, Vec::len);
+        let mut probs = Vec::with_capacity(seqs.len());
+        for (i, &seq) in seqs.iter().enumerate() {
+            anyhow::ensure!(drafts[i].len() == gamma, "ragged draft lengths");
+            let base = self.state(seq).target_len;
+            // Row g is the target's next-token distribution after
+            // [.., feed, d1..dg] — one-hot at the chain token (the chain
+            // defines the target's behavior regardless of draft content).
+            let rows: Vec<ProbRow> = (0..=gamma)
+                .map(|g| self.one_hot(chain_token(self.stream, seq, base + 1 + g, self.vocab)))
+                .collect();
+            let st = self.seqs.get_mut(&seq).unwrap();
+            st.target_len += gamma + 1; // consumed [feed, d1..dγ]
+            probs.push(rows);
+        }
+        let b = seqs.len();
+        let cost = self.price_target(b, gamma + 1);
+        Ok(VerifyOut { probs, cost })
+    }
+
+    fn rollback_target(&mut self, seq: SeqId, len: usize) {
+        let st = self.seqs.get_mut(&seq).expect("unknown sequence");
+        assert!(len <= st.target_len, "target rollback beyond context");
+        st.target_len = len;
+    }
+
+    fn rollback_draft(&mut self, seq: SeqId, len: usize) {
+        let st = self.seqs.get_mut(&seq).expect("unknown sequence");
+        st.draft_len = st.draft_len.min(len);
+    }
+
+    fn target_len(&self, seq: SeqId) -> usize {
+        self.state(seq).target_len
+    }
+
+    fn draft_len(&self, seq: SeqId) -> usize {
+        self.state(seq).draft_len
+    }
+
+    fn release(&mut self, seq: SeqId) {
+        self.seqs.remove(&seq);
+    }
+
+    fn reject_cost(&self, batch: usize, gamma: usize) -> f64 {
+        self.target_sim.t_reject(batch, gamma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::hardware::platform_2x_gpu_a;
+
+    fn backend(alpha: f64) -> SyntheticLm {
+        let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+        let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+        SyntheticLm::new(target, draft, alpha, 42)
+    }
+
+    #[test]
+    fn chain_is_deterministic() {
+        let b = backend(0.8);
+        assert_eq!(b.expected_chain(1, 0, 5), b.expected_chain(1, 0, 5));
+        assert_ne!(b.expected_chain(1, 0, 8), b.expected_chain(2, 0, 8));
+    }
+
+    #[test]
+    fn prefill_then_propose_verify_shapes() {
+        let mut b = backend(1.0);
+        let prompt = vec![1u32, 2, 3, 4];
+        b.prefill(&[(7, prompt.clone())]).unwrap();
+        assert_eq!(b.target_len(7), 3);
+        let p = b.propose(&[7], &[vec![4]], 3, &[0.0], 1).unwrap();
+        assert_eq!(p.tokens[0].len(), 3);
+        assert_eq!(p.probs[0].len(), 3);
+        assert!(p.cost > 0.0);
+        assert_eq!(b.draft_len(7), 6); // 3 + pending(1) + γ−1
+        let v = b
+            .verify(&[7], &[4], &[p.tokens[0].clone()], &[0.0])
+            .unwrap();
+        assert_eq!(v.probs[0].len(), 4);
+        assert!(v.cost > 0.0);
+        assert_eq!(b.target_len(7), 7); // 3 + (γ+1)
+    }
+
+    #[test]
+    fn alpha_one_draft_always_matches_target() {
+        let mut b = backend(1.0);
+        b.prefill(&[(1, vec![5, 6])]).unwrap();
+        let p = b.propose(&[1], &[vec![6]], 4, &[0.0], 3).unwrap();
+        let expected = b.expected_chain(1, 2, 4);
+        assert_eq!(p.tokens[0], expected);
+    }
+
+    #[test]
+    fn alpha_zero_draft_never_matches_target() {
+        let mut b = backend(0.0);
+        b.prefill(&[(1, vec![5, 6])]).unwrap();
+        let p = b.propose(&[1], &[vec![6]], 4, &[0.0], 3).unwrap();
+        let expected = b.expected_chain(1, 2, 4);
+        for (got, want) in p.tokens[0].iter().zip(&expected) {
+            assert_ne!(got, want);
+        }
+    }
+
+    #[test]
+    fn empirical_match_rate_tracks_alpha() {
+        let alpha = 0.7;
+        let mut b = backend(alpha);
+        let mut matches = 0;
+        let mut total = 0;
+        for s in 0..200u64 {
+            b.prefill(&[(s, vec![1, 2])]).unwrap();
+            let p = b.propose(&[s], &[vec![2]], 1, &[0.0], s).unwrap();
+            let expected = b.expected_chain(s, 2, 1);
+            if p.tokens[0][0] == expected[0] {
+                matches += 1;
+            }
+            total += 1;
+            b.release(s);
+        }
+        let rate = matches as f64 / total as f64;
+        assert!((rate - alpha).abs() < 0.12, "rate={rate}");
+    }
+
+    #[test]
+    fn verify_cost_exceeds_single_token_cost_at_small_batch() {
+        let mut b = backend(0.8);
+        b.prefill(&[(1, vec![1, 2])]).unwrap();
+        let v4 = b.verify(&[1], &[2], &[vec![0, 0, 0]], &[0.0]).unwrap().cost;
+        b.rollback_target(1, 1);
+        let v1 = b.verify(&[1], &[2], &[vec![]], &[0.0]).unwrap().cost;
+        assert!(v4 > v1, "γ=3 verify {v4} should cost more than γ=0 {v1}");
+    }
+
+    #[test]
+    fn rollback_semantics() {
+        let mut b = backend(0.5);
+        b.prefill(&[(9, vec![1, 2, 3])]).unwrap();
+        b.rollback_target(9, 1);
+        assert_eq!(b.target_len(9), 1);
+        // Draft rollback past current length is a clamp-style no-op.
+        b.rollback_draft(9, 100);
+        assert_eq!(b.draft_len(9), 2);
+        b.rollback_draft(9, 1);
+        assert_eq!(b.draft_len(9), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "rollback beyond context")]
+    fn target_rollback_forward_panics() {
+        let mut b = backend(0.5);
+        b.prefill(&[(9, vec![1, 2, 3])]).unwrap();
+        b.rollback_target(9, 10);
+    }
+
+    #[test]
+    fn duplicate_prefill_rejected() {
+        let mut b = backend(0.5);
+        b.prefill(&[(1, vec![1, 2])]).unwrap();
+        assert!(b.prefill(&[(1, vec![1, 2])]).is_err());
+    }
+
+    #[test]
+    fn noisy_pricing_varies_but_tracks_expectation() {
+        let mut quiet = backend(0.9);
+        let mut noisy = backend(0.9).with_noise(5);
+        quiet.prefill(&[(1, vec![1, 2])]).unwrap();
+        noisy.prefill(&[(1, vec![1, 2])]).unwrap();
+        let qc = quiet.verify(&[1], &[2], &[vec![0, 0]], &[0.0]).unwrap().cost;
+        let mut costs = Vec::new();
+        for _ in 0..20 {
+            noisy.rollback_target(1, 1);
+            costs.push(noisy.verify(&[1], &[2], &[vec![0, 0]], &[0.0]).unwrap().cost);
+        }
+        let mean = crate::util::stats::mean(&costs);
+        assert!((mean - qc).abs() / qc < 0.15, "mean {mean} vs {qc}");
+        assert!(crate::util::stats::stddev(&costs) > 0.0);
+    }
+}

@@ -1,0 +1,57 @@
+//! Byte-level tokenizer for the tiny real model.
+//!
+//! The AOT-compiled `MoesdNet` uses a 256-entry vocabulary: token id =
+//! byte value. Ids 0 and 1 are reserved by the training corpus generator
+//! as BOS/EOS (the corpus is ASCII text, so bytes 0/1 never occur in
+//! content). Must agree with `python/compile/corpus.py`.
+
+pub const VOCAB: usize = 256;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 0;
+
+/// Encode text to token ids (bytes), with optional BOS prefix.
+pub fn encode(text: &str, add_bos: bool) -> Vec<u32> {
+    let mut out = Vec::with_capacity(text.len() + 1);
+    if add_bos {
+        out.push(BOS);
+    }
+    out.extend(text.bytes().map(|b| b as u32));
+    out
+}
+
+/// Decode token ids back to text; control tokens and non-UTF8 bytes are
+/// rendered as escapes (lossy but total).
+pub fn decode(tokens: &[u32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| t != BOS && t != EOS)
+        .map(|&t| (t & 0xff) as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let text = "GET /metrics 200 17ms";
+        let toks = encode(text, true);
+        assert_eq!(toks[0], BOS);
+        assert_eq!(toks.len(), text.len() + 1);
+        assert_eq!(decode(&toks), text);
+    }
+
+    #[test]
+    fn tokens_fit_vocab() {
+        for t in encode("hello \x7f", false) {
+            assert!((t as usize) < VOCAB);
+        }
+    }
+
+    #[test]
+    fn decode_skips_specials() {
+        assert_eq!(decode(&[BOS, 104, 105, EOS]), "hi");
+    }
+}

@@ -1,0 +1,163 @@
+//! Tiny declarative CLI parser for the `moesd` launcher.
+//!
+//! Supports `moesd <subcommand> [--flag] [--key value] [--key=value]
+//! [positional...]`. Typed accessors produce readable errors. Kept
+//! dependency-free (clap is not available in this build environment).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, key/value options, boolean flags and
+/// positional arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    /// `known_flags` lists options that take *no* value, so that
+    /// `--verbose out.csv` parses `out.csv` as positional.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, known_flags: &[&str]) -> Args {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&rest) {
+                    args.flags.push(rest.to_string());
+                } else if let Some(next) = iter.peek() {
+                    if next.starts_with("--") {
+                        args.flags.push(rest.to_string());
+                    } else {
+                        let v = iter.next().unwrap();
+                        args.options.insert(rest.to_string(), v);
+                    }
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}: expected integer, got `{v}` ({e})")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}: expected integer, got `{v}` ({e})")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}: expected number, got `{v}` ({e})")),
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--batches 1,2,4,8`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--{name}: bad element `{s}` ({e})"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> anyhow::Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string()), &["verbose", "json"])
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["serve", "--port", "8080", "--model=tiny", "extra"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn known_flags_do_not_consume_values() {
+        let a = parse(&["bench", "--verbose", "fig2"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["fig2"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["bench", "--trailing-unknown"]);
+        assert!(a.flag("trailing-unknown"));
+    }
+
+    #[test]
+    fn unknown_flag_followed_by_flag_is_boolean() {
+        let a = parse(&["x", "--a", "--b", "v"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["x", "--n", "12", "--rate", "0.5", "--list", "1,2,3"]);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 12);
+        assert_eq!(a.f64_or("rate", 0.0).unwrap(), 0.5);
+        assert_eq!(a.usize_list_or("list", &[]).unwrap(), vec![1, 2, 3]);
+        assert_eq!(a.usize_or("absent", 7).unwrap(), 7);
+        assert!(a.usize_or("rate", 0).is_err());
+        assert!(a.require("absent").is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! CSV emission/parsing for experiment results (`results/*.csv`).
+//!
+//! Every bench target writes its series here so figures can be re-plotted
+//! outside the repo; the integration tests parse the files back to check
+//! the shape claims.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A rectangular CSV table with a header row.
+#[derive(Debug, Clone, Default)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new(header: &[&str]) -> Self {
+        CsvTable {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Push a row of display-able cells; panics on width mismatch (a bug in
+    /// the bench code, not a runtime condition).
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "CSV row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+    }
+
+    /// Convenience for numeric rows.
+    pub fn push_nums(&mut self, cells: &[f64]) {
+        self.push_row(cells.iter().map(|v| format_num(*v)).collect());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        writeln!(out, "{}", join_escaped(&self.header)).unwrap();
+        for row in &self.rows {
+            writeln!(out, "{}", join_escaped(row)).unwrap();
+        }
+        out
+    }
+
+    pub fn write_file(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_string())?;
+        Ok(())
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<CsvTable> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = split_row(
+            lines
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("empty CSV"))?,
+        );
+        let mut rows = Vec::new();
+        for line in lines {
+            let row = split_row(line);
+            if row.len() != header.len() {
+                anyhow::bail!(
+                    "CSV row width {} != header width {}: {line}",
+                    row.len(),
+                    header.len()
+                );
+            }
+            rows.push(row);
+        }
+        Ok(CsvTable { header, rows })
+    }
+
+    pub fn read_file(path: &Path) -> anyhow::Result<CsvTable> {
+        CsvTable::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Extract a named column as f64s.
+    pub fn column_f64(&self, name: &str) -> anyhow::Result<Vec<f64>> {
+        let idx = self
+            .header
+            .iter()
+            .position(|h| h == name)
+            .ok_or_else(|| anyhow::anyhow!("no column `{name}`"))?;
+        self.rows
+            .iter()
+            .map(|r| {
+                r[idx]
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad number in `{name}`: {e}"))
+            })
+            .collect()
+    }
+
+    pub fn column_str(&self, name: &str) -> anyhow::Result<Vec<String>> {
+        let idx = self
+            .header
+            .iter()
+            .position(|h| h == name)
+            .ok_or_else(|| anyhow::anyhow!("no column `{name}`"))?;
+        Ok(self.rows.iter().map(|r| r[idx].clone()).collect())
+    }
+}
+
+/// Render a float compactly: integers without a decimal point, otherwise up
+/// to 6 significant decimals with trailing zeros trimmed.
+pub fn format_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        let s = format!("{v:.6}");
+        let s = s.trim_end_matches('0').trim_end_matches('.');
+        s.to_string()
+    }
+}
+
+fn join_escaped(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn split_row(line: &str) -> Vec<String> {
+    let mut cells = Vec::new();
+    let mut cur = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    cur.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' => in_quotes = true,
+            ',' if !in_quotes => {
+                cells.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    cells.push(cur);
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut t = CsvTable::new(&["batch", "speedup", "note"]);
+        t.push_row(vec!["8".into(), "1.63".into(), "hello, \"world\"".into()]);
+        t.push_nums(&[16.0, 2.29, 0.0]);
+        let parsed = CsvTable::parse(&t.to_string()).unwrap();
+        assert_eq!(parsed.header, t.header);
+        assert_eq!(parsed.rows, t.rows);
+    }
+
+    #[test]
+    fn column_extraction() {
+        let t = CsvTable::parse("a,b\n1,x\n2,y\n").unwrap();
+        assert_eq!(t.column_f64("a").unwrap(), vec![1.0, 2.0]);
+        assert_eq!(t.column_str("b").unwrap(), vec!["x", "y"]);
+        assert!(t.column_f64("b").is_err());
+        assert!(t.column_f64("missing").is_err());
+    }
+
+    #[test]
+    fn width_mismatch_detected() {
+        assert!(CsvTable::parse("a,b\n1\n").is_err());
+    }
+
+    #[test]
+    fn format_num_trims() {
+        assert_eq!(format_num(2.0), "2");
+        assert_eq!(format_num(2.5), "2.5");
+        assert_eq!(format_num(2.290000), "2.29");
+    }
+}

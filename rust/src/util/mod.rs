@@ -1,0 +1,54 @@
+//! Small self-contained substrates the rest of the crate builds on.
+//!
+//! The build environment has no network access and only the `xla` crate's
+//! vendored dependency closure, so the usual ecosystem crates (serde, clap,
+//! rand, criterion, ...) are re-implemented here at the scale this project
+//! needs: a JSON parser/writer, a CLI parser, a PCG-based RNG with the
+//! distributions the simulator needs, descriptive statistics, and CSV /
+//! markdown table emitters.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Clamp helper used across fitting and simulation code.
+#[inline]
+pub fn clampf(x: f64, lo: f64, hi: f64) -> f64 {
+    if x < lo {
+        lo
+    } else if x > hi {
+        hi
+    } else {
+        x
+    }
+}
+
+/// Approximate float equality with both absolute and relative tolerance,
+/// mirroring `numpy.allclose` semantics (used heavily in tests).
+#[inline]
+pub fn approx_eq(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clampf_bounds() {
+        assert_eq!(clampf(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clampf(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clampf(0.5, 0.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn approx_eq_tolerances() {
+        assert!(approx_eq(1.0, 1.0 + 1e-9, 1e-6, 1e-8));
+        assert!(!approx_eq(1.0, 1.1, 1e-6, 1e-8));
+        assert!(approx_eq(0.0, 1e-9, 0.0, 1e-8));
+    }
+}

@@ -1,0 +1,125 @@
+//! Markdown table rendering for console reports and EXPERIMENTS.md blocks.
+//! Benches print the same rows the paper's tables report via this module.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A markdown table builder with padded, aligned output.
+#[derive(Debug, Clone)]
+pub struct MdTable {
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl MdTable {
+    pub fn new(header: &[&str]) -> Self {
+        MdTable {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            aligns: header.iter().map(|_| Align::Right).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn align(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.header.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn push(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "table row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn push_display(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.push(cells.iter().map(|c| c.to_string()).collect());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&self.render_row(&self.header, &widths));
+        out.push('\n');
+        let sep: Vec<String> = widths
+            .iter()
+            .zip(&self.aligns)
+            .map(|(w, a)| match a {
+                Align::Left => format!(":{}", "-".repeat(w.max(&2) - 1)),
+                Align::Right => format!("{}:", "-".repeat(w.max(&2) - 1)),
+            })
+            .collect();
+        out.push_str(&format!("| {} |", sep.join(" | ")));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&self.render_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    fn render_row(&self, cells: &[String], widths: &[usize]) -> String {
+        let padded: Vec<String> = cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| match self.aligns[i] {
+                Align::Left => format!("{:<width$}", c, width = widths[i]),
+                Align::Right => format!("{:>width$}", c, width = widths[i]),
+            })
+            .collect();
+        format!("| {} |", padded.join(" | "))
+    }
+}
+
+/// Shorthand float formatting used across reports (2 decimals, like the
+/// paper's tables).
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+/// 3-decimal formatting for σ-like columns.
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = MdTable::new(&["name", "x"]).align(&[Align::Left, Align::Right]);
+        t.push(vec!["qwen2".into(), "2.29".into()]);
+        t.push(vec!["mixtral-long-name".into(), "1.79".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        assert!(lines[1].contains(":-"));
+        assert!(lines[2].ends_with("|"));
+        // All lines have equal width.
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut t = MdTable::new(&["a", "b"]);
+        t.push(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f2(2.294), "2.29");
+        assert_eq!(f3(0.9456), "0.946");
+    }
+}

@@ -1,0 +1,219 @@
+//! Workload generation: synthetic stand-ins for the paper's HumanEval and
+//! MT-Bench evaluations (see DESIGN.md §Substitutions).
+//!
+//! SD performance depends on the workload only through (a) prompt/output
+//! length distributions and (b) the draft acceptance behavior. Both are
+//! parameterized directly from the paper:
+//!
+//! - prompt lengths: tokenized prompts span 38–391 tokens for HumanEval and
+//!   5–356 for MT-Bench (§4 "Models and datasets");
+//! - acceptance: σ per (dataset, temperature, γ) from Tables 1–2, inverted
+//!   through Eq. 5 to the α that drives the synthetic backend. Code at
+//!   temperature 0 is most predictable (σ up to 0.95), conversation at
+//!   temperature 1 least (σ down to 0.35) — exactly the paper's spread.
+
+use crate::batching::{Request, SamplingParams};
+use crate::theory;
+use crate::util::rng::Rng;
+
+/// The two evaluation datasets the paper uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataset {
+    HumanEval,
+    MtBench,
+}
+
+impl Dataset {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::HumanEval => "humaneval",
+            Dataset::MtBench => "mtbench",
+        }
+    }
+
+    pub fn by_name(name: &str) -> anyhow::Result<Dataset> {
+        match name {
+            "humaneval" => Ok(Dataset::HumanEval),
+            "mtbench" => Ok(Dataset::MtBench),
+            other => anyhow::bail!("unknown dataset `{other}`"),
+        }
+    }
+
+    /// Tokenized-prompt length range reported by the paper.
+    pub fn prompt_range(&self) -> (usize, usize) {
+        match self {
+            Dataset::HumanEval => (38, 391),
+            Dataset::MtBench => (5, 356),
+        }
+    }
+}
+
+/// σ values per (model, dataset, temperature, γ) transcribed from the
+/// paper's Table 1 (2×GPU-A, the calibration platform). γ is indexed 2..4.
+pub fn paper_sigma(model: &str, dataset: Dataset, temp: f64, gamma: usize) -> f64 {
+    let hot = temp < 0.5;
+    let idx = gamma.clamp(2, 4) - 2;
+    // Rows: [γ=2, γ=3, γ=4].
+    let table: [f64; 3] = match (model, dataset, hot) {
+        ("qwen2", Dataset::HumanEval, true) => [0.94, 0.93, 0.91],
+        ("qwen2", Dataset::HumanEval, false) => [0.83, 0.73, 0.67],
+        ("qwen2", Dataset::MtBench, true) => [0.71, 0.62, 0.55],
+        ("qwen2", Dataset::MtBench, false) => [0.68, 0.57, 0.48],
+        ("mixtral", Dataset::HumanEval, true) => [0.78, 0.66, 0.58],
+        ("mixtral", Dataset::HumanEval, false) => [0.61, 0.46, 0.39],
+        ("mixtral", Dataset::MtBench, true) => [0.61, 0.46, 0.39],
+        ("mixtral", Dataset::MtBench, false) => [0.53, 0.43, 0.35],
+        // Dense comparison (OPT-30B with OPT-350M): mid-range acceptance.
+        ("opt", Dataset::HumanEval, true) => [0.85, 0.80, 0.75],
+        ("opt", Dataset::HumanEval, false) => [0.70, 0.62, 0.55],
+        ("opt", Dataset::MtBench, true) => [0.68, 0.60, 0.52],
+        ("opt", Dataset::MtBench, false) => [0.60, 0.50, 0.44],
+        _ => [0.75, 0.65, 0.55],
+    };
+    table[idx]
+}
+
+/// α calibrated so Eq. 5 reproduces the paper's σ at the given γ.
+pub fn calibrated_alpha(model: &str, dataset: Dataset, temp: f64, gamma: usize) -> f64 {
+    let sigma = paper_sigma(model, dataset, temp, gamma);
+    theory::alpha_from_sigma(sigma, gamma.clamp(2, 4))
+}
+
+/// A workload profile: how requests look and arrive.
+#[derive(Debug, Clone)]
+pub struct WorkloadProfile {
+    pub dataset: Dataset,
+    pub temperature: f64,
+    /// Output budget per request (the paper decodes fixed-length windows).
+    pub max_new_tokens: usize,
+    /// Mean arrival rate (requests/second); `None` = all at t=0 (the
+    /// paper's batch experiments).
+    pub arrival_rate: Option<f64>,
+}
+
+impl WorkloadProfile {
+    pub fn batch(dataset: Dataset, temperature: f64, max_new_tokens: usize) -> WorkloadProfile {
+        WorkloadProfile {
+            dataset,
+            temperature,
+            max_new_tokens,
+            arrival_rate: None,
+        }
+    }
+
+    /// Draw one prompt length: log-normal shaped into the dataset's range
+    /// (long-tailed, as real prompt-length histograms are).
+    pub fn sample_prompt_len(&self, rng: &mut Rng) -> usize {
+        let (lo, hi) = self.dataset.prompt_range();
+        let mid = ((lo + hi) / 2) as f64;
+        let raw = rng.lognormal(mid.ln() * 0.92, 0.45);
+        (raw as usize).clamp(lo, hi)
+    }
+
+    /// Generate `n` requests with ids `id0..id0+n`, sorted by arrival.
+    pub fn generate(&self, n: usize, id0: u64, seed: u64) -> Vec<Request> {
+        let mut rng = Rng::new(seed, 0x77);
+        let mut t = 0.0f64;
+        (0..n)
+            .map(|i| {
+                let arrival = match self.arrival_rate {
+                    None => 0.0,
+                    Some(rate) => {
+                        t += rng.exponential(rate);
+                        t
+                    }
+                };
+                let len = self.sample_prompt_len(&mut rng);
+                Request {
+                    id: id0 + i as u64,
+                    prompt: (0..len as u32).map(|p| p % 251).collect(),
+                    params: SamplingParams {
+                        temperature: self.temperature,
+                        max_new_tokens: self.max_new_tokens,
+                        eos_token: None,
+                    },
+                    arrival,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompt_lengths_in_paper_ranges() {
+        let mut rng = Rng::seeded(1);
+        for ds in [Dataset::HumanEval, Dataset::MtBench] {
+            let p = WorkloadProfile::batch(ds, 0.0, 32);
+            let (lo, hi) = ds.prompt_range();
+            for _ in 0..500 {
+                let l = p.sample_prompt_len(&mut rng);
+                assert!(l >= lo && l <= hi, "{}: {l} outside [{lo},{hi}]", ds.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sigma_table_monotonicities() {
+        // σ decreases with γ (harder to keep a long chain accepted)…
+        for &gamma in &[2usize, 3] {
+            assert!(
+                paper_sigma("qwen2", Dataset::HumanEval, 0.0, gamma)
+                    >= paper_sigma("qwen2", Dataset::HumanEval, 0.0, gamma + 1)
+            );
+        }
+        // …and with temperature (more randomness), and from code → chat.
+        assert!(
+            paper_sigma("qwen2", Dataset::HumanEval, 0.0, 3)
+                > paper_sigma("qwen2", Dataset::HumanEval, 1.0, 3)
+        );
+        assert!(
+            paper_sigma("qwen2", Dataset::HumanEval, 0.0, 3)
+                > paper_sigma("qwen2", Dataset::MtBench, 0.0, 3)
+        );
+    }
+
+    #[test]
+    fn calibrated_alpha_reproduces_sigma() {
+        for &gamma in &[2usize, 3, 4] {
+            for ds in [Dataset::HumanEval, Dataset::MtBench] {
+                for &temp in &[0.0, 1.0] {
+                    let alpha = calibrated_alpha("qwen2", ds, temp, gamma);
+                    let sigma_back = theory::sigma_from_alpha(alpha, gamma);
+                    let sigma_want = paper_sigma("qwen2", ds, temp, gamma);
+                    assert!(
+                        (sigma_back - sigma_want).abs() < 1e-6,
+                        "γ={gamma} {}: {sigma_back} vs {sigma_want}",
+                        ds.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_sorted() {
+        let p = WorkloadProfile {
+            dataset: Dataset::MtBench,
+            temperature: 1.0,
+            max_new_tokens: 64,
+            arrival_rate: Some(4.0),
+        };
+        let a = p.generate(50, 0, 9);
+        let b = p.generate(50, 0, 9);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.arrival, y.arrival);
+        }
+        for w in a.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        // Batch profile arrives at t=0.
+        let batch = WorkloadProfile::batch(Dataset::HumanEval, 0.0, 8).generate(10, 0, 1);
+        assert!(batch.iter().all(|r| r.arrival == 0.0));
+    }
+}

@@ -1,0 +1,392 @@
+//! Cross-module integration: engine + scheduler + KV + synthetic backend
+//! under realistic workloads (arrival processes, mixed lengths, SLOs).
+
+use moesd::arch::presets;
+use moesd::batching::Buckets;
+use moesd::engine::{Engine, EngineConfig};
+use moesd::hardware::{platform_2x_gpu_a, platform_by_name};
+use moesd::kvcache::KvConfig;
+use moesd::scheduler::SchedulerConfig;
+use moesd::simulator::ExecSim;
+use moesd::spec::synthetic::SyntheticLm;
+use moesd::theory;
+use moesd::workload::{calibrated_alpha, Dataset, WorkloadProfile};
+
+fn engine_with(alpha: f64, gamma: usize, max_batch: usize, seed: u64) -> Engine<SyntheticLm> {
+    let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+    let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+    let backend = SyntheticLm::new(target, draft, alpha, seed);
+    Engine::new(
+        EngineConfig {
+            gamma,
+            kv: KvConfig {
+                num_blocks: 1 << 15,
+                block_size: 16,
+            },
+            scheduler: SchedulerConfig {
+                max_batch,
+                admit_reserve_tokens: 64,
+                tpot_slo: None,
+            },
+            buckets: Buckets::pow2_up_to(max_batch),
+            seed,
+        },
+        backend,
+    )
+}
+
+#[test]
+fn open_loop_workload_completes_with_sane_slos() {
+    // Poisson arrivals at a private-serving rate; all requests complete,
+    // TTFT/TPOT are finite and ordered sensibly.
+    let profile = WorkloadProfile {
+        dataset: Dataset::MtBench,
+        temperature: 0.0,
+        max_new_tokens: 32,
+        arrival_rate: Some(50.0),
+    };
+    let reqs = profile.generate(60, 0, 7);
+    let mut engine = engine_with(0.8, 3, 16, 3);
+    for r in reqs {
+        engine.submit(r);
+    }
+    let done = engine.run_to_completion(50_000).unwrap();
+    assert_eq!(done.len(), 60);
+    for c in &done {
+        assert!(c.first_token_at >= c.arrival);
+        assert!(c.finished_at >= c.first_token_at);
+        assert_eq!(c.tokens.len(), 32);
+    }
+    // Batching happened (mean decode batch above 1).
+    assert!(engine.metrics.mean_batch() > 1.5);
+    engine.kv().check_invariants().unwrap();
+}
+
+#[test]
+fn speedup_peaks_at_moderate_batch_through_the_full_stack() {
+    // The paper's core claim measured through the *entire* coordinator:
+    // sweep max_batch, compare SD vs AR decode times.
+    let alpha = calibrated_alpha("qwen2", Dataset::HumanEval, 0.0, 4);
+    let mut speedups = Vec::new();
+    let batches = [1usize, 8, 32, 512];
+    for &b in &batches {
+        let mut times = Vec::new();
+        for gamma in [4usize, 0] {
+            let mut engine = engine_with(alpha, gamma, b, 5);
+            let profile = WorkloadProfile::batch(Dataset::HumanEval, 0.0, 24);
+            for mut r in profile.generate(b, 0, 11) {
+                // Cap prompts so B=512 fits comfortably in the cache.
+                r.prompt.truncate(64.min(r.prompt.len()).max(2));
+                engine.submit(r);
+            }
+            engine.run_to_completion(200_000).unwrap();
+            times.push(engine.metrics.decode_time());
+        }
+        speedups.push(times[1] / times[0]);
+    }
+    // Moderate (32) beats tiny (1) and huge (512).
+    assert!(
+        speedups[2] > speedups[0],
+        "B=32 {} should beat B=1 {}",
+        speedups[2],
+        speedups[0]
+    );
+    assert!(
+        speedups[2] > speedups[3],
+        "B=32 {} should beat B=512 {}",
+        speedups[2],
+        speedups[3]
+    );
+    assert!(speedups[2] > 1.5, "peak speedup {}", speedups[2]);
+}
+
+#[test]
+fn offload_platform_widens_sd_win() {
+    // §3.4: CPU-offloaded experts make the system so memory-bound that SD
+    // keeps winning even at large batch.
+    let alpha = 0.85;
+    let gamma = 4;
+    let b = 256;
+    let run = |offload: bool| -> f64 {
+        let platform = if offload {
+            platform_2x_gpu_a().with_offload(30e9)
+        } else {
+            platform_2x_gpu_a()
+        };
+        let mut times = Vec::new();
+        for g in [gamma, 0] {
+            let target = ExecSim::new(presets::qwen2_57b_a14b(), platform.clone());
+            let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+            let backend = SyntheticLm::new(target, draft, alpha, 9);
+            let mut engine = Engine::new(
+                EngineConfig {
+                    gamma: g,
+                    kv: KvConfig {
+                        num_blocks: 1 << 15,
+                        block_size: 16,
+                    },
+                    scheduler: SchedulerConfig {
+                        max_batch: b,
+                        admit_reserve_tokens: 16,
+                        tpot_slo: None,
+                    },
+                    ..Default::default()
+                },
+                backend,
+            );
+            let profile = WorkloadProfile::batch(Dataset::HumanEval, 0.0, 12);
+            for mut r in profile.generate(b, 0, 13) {
+                r.prompt.truncate(16);
+                engine.submit(r);
+            }
+            engine.run_to_completion(100_000).unwrap();
+            times.push(engine.metrics.decode_time());
+        }
+        times[1] / times[0]
+    };
+    let normal = run(false);
+    let offloaded = run(true);
+    assert!(
+        offloaded > normal,
+        "offloading should improve SD speedup at B={b}: {offloaded} vs {normal}"
+    );
+    assert!(offloaded > 1.5, "offloaded speedup {offloaded}");
+}
+
+#[test]
+fn different_platforms_reproduce_table2_ordering() {
+    let alpha = calibrated_alpha("qwen2", Dataset::HumanEval, 0.0, 4);
+    let run = |platform_name: &str| -> f64 {
+        let platform = platform_by_name(platform_name).unwrap();
+        let mut times = Vec::new();
+        for g in [4usize, 0] {
+            let target = ExecSim::new(presets::qwen2_57b_a14b(), platform.clone());
+            let draft = ExecSim::new(
+                presets::qwen2_0_5b(),
+                moesd::hardware::Platform::new(platform.gpu.clone(), 1, platform.interconnect_bw),
+            );
+            let backend = SyntheticLm::new(target, draft, alpha, 17);
+            let mut engine = Engine::new(
+                EngineConfig {
+                    gamma: g,
+                    scheduler: SchedulerConfig {
+                        max_batch: 32,
+                        admit_reserve_tokens: 32,
+                        tpot_slo: None,
+                    },
+                    ..Default::default()
+                },
+                backend,
+            );
+            let profile = WorkloadProfile::batch(Dataset::HumanEval, 0.0, 24);
+            for mut r in profile.generate(32, 0, 19) {
+                r.prompt.truncate(32);
+                engine.submit(r);
+            }
+            engine.run_to_completion(100_000).unwrap();
+            times.push(engine.metrics.decode_time());
+        }
+        times[1] / times[0]
+    };
+    let a = run("2xGPU-A");
+    let b = run("2xGPU-B");
+    assert!(b > a, "higher-ridge-point GPU-B should win: {b} vs {a}");
+}
+
+#[test]
+fn sigma_invariant_to_batch_size() {
+    // §4.1: "the acceptance rate across batch sizes merely fluctuates
+    // within a small range" — acceptance is an algorithmic property.
+    let alpha = 0.8;
+    let gamma = 3;
+    let mut sigmas = Vec::new();
+    for &b in &[1usize, 8, 64] {
+        let mut engine = engine_with(alpha, gamma, b, 23);
+        // Long generations keep the per-point sampling error small (a
+        // single 40-token sequence has ~±0.09 σ noise).
+        let profile = WorkloadProfile::batch(Dataset::HumanEval, 0.0, 400);
+        for mut r in profile.generate(b, 0, 29) {
+            r.prompt.truncate(16);
+            engine.submit(r);
+        }
+        engine.run_to_completion(100_000).unwrap();
+        sigmas.push(engine.metrics.sigma(gamma));
+    }
+    let expect = theory::sigma_from_alpha(alpha, gamma);
+    for (i, s) in sigmas.iter().enumerate() {
+        assert!(
+            (s - expect).abs() < 0.08,
+            "σ at batch index {i}: {s} vs {expect}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection: a backend wrapper that errors on chosen verify calls.
+// The engine must roll the round back and retry to a correct completion.
+// ---------------------------------------------------------------------------
+
+struct Flaky<B: moesd::spec::SdBackend> {
+    inner: B,
+    verify_calls: std::cell::Cell<u64>,
+    fail_every: u64,
+}
+
+impl<B: moesd::spec::SdBackend> moesd::spec::SdBackend for Flaky<B> {
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+    fn prefill(&mut self, batch: &[(u64, Vec<u32>)]) -> anyhow::Result<f64> {
+        self.inner.prefill(batch)
+    }
+    fn propose(
+        &mut self,
+        seqs: &[u64],
+        pending: &[Vec<u32>],
+        gamma: usize,
+        temps: &[f64],
+        seed: u64,
+    ) -> anyhow::Result<moesd::spec::ProposeOut> {
+        self.inner.propose(seqs, pending, gamma, temps, seed)
+    }
+    fn verify(
+        &mut self,
+        seqs: &[u64],
+        feed: &[u32],
+        drafts: &[Vec<u32>],
+        temps: &[f64],
+    ) -> anyhow::Result<moesd::spec::VerifyOut> {
+        let n = self.verify_calls.get() + 1;
+        self.verify_calls.set(n);
+        if n % self.fail_every == 0 {
+            anyhow::bail!("injected verify failure #{n}");
+        }
+        self.inner.verify(seqs, feed, drafts, temps)
+    }
+    fn rollback_target(&mut self, seq: u64, len: usize) {
+        self.inner.rollback_target(seq, len)
+    }
+    fn rollback_draft(&mut self, seq: u64, len: usize) {
+        self.inner.rollback_draft(seq, len)
+    }
+    fn target_len(&self, seq: u64) -> usize {
+        self.inner.target_len(seq)
+    }
+    fn draft_len(&self, seq: u64) -> usize {
+        self.inner.draft_len(seq)
+    }
+    fn release(&mut self, seq: u64) {
+        self.inner.release(seq)
+    }
+    fn reject_cost(&self, batch: usize, gamma: usize) -> f64 {
+        self.inner.reject_cost(batch, gamma)
+    }
+}
+
+#[test]
+fn injected_failures_roll_back_and_retry_losslessly() {
+    use moesd::batching::{Request, SamplingParams};
+    let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+    let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+    let inner = SyntheticLm::new(target, draft, 0.8, 31);
+    let expected: Vec<Vec<u32>> = (0..4u64).map(|id| inner.expected_chain(id, 6, 20)).collect();
+    let flaky = Flaky {
+        inner,
+        verify_calls: std::cell::Cell::new(0),
+        fail_every: 3, // every third verify call explodes
+    };
+    let mut engine = Engine::new(
+        EngineConfig {
+            gamma: 3,
+            ..Default::default()
+        },
+        flaky,
+    );
+    for id in 0..4u64 {
+        engine.submit(Request {
+            id,
+            prompt: (0..6u32).collect(),
+            params: SamplingParams {
+                temperature: 0.0,
+                max_new_tokens: 20,
+                eos_token: None,
+            },
+            arrival: 0.0,
+        });
+    }
+    // Drive manually, tolerating the injected errors.
+    let mut done = Vec::new();
+    let mut failures = 0;
+    for _ in 0..10_000 {
+        if engine.is_idle() {
+            break;
+        }
+        match engine.step() {
+            Ok(c) => done.extend(c),
+            Err(e) => {
+                assert!(format!("{e:#}").contains("injected"), "unexpected error: {e:#}");
+                failures += 1;
+            }
+        }
+    }
+    assert!(failures >= 2, "injection should have fired (got {failures})");
+    assert_eq!(engine.counters.get("round_failures"), failures);
+    assert_eq!(done.len(), 4);
+    done.sort_by_key(|c| c.id);
+    for (c, want) in done.iter().zip(&expected) {
+        assert_eq!(&c.tokens, want, "losslessness after retries (seq {})", c.id);
+    }
+    engine.kv().check_invariants().unwrap();
+}
+
+#[test]
+fn tpot_slo_caps_batch_size() {
+    use moesd::batching::{Request, SamplingParams};
+    // Same workload, with and without a tight TPOT SLO: the SLO run must
+    // keep the decode batch smaller and achieve a lower mean TPOT.
+    let run = |slo: Option<f64>| -> (f64, f64) {
+        let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+        let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+        let backend = SyntheticLm::new(target, draft, 0.85, 41);
+        let mut engine = Engine::new(
+            EngineConfig {
+                gamma: 3,
+                scheduler: SchedulerConfig {
+                    max_batch: 64,
+                    admit_reserve_tokens: 64,
+                    tpot_slo: slo,
+                },
+                ..Default::default()
+            },
+            backend,
+        );
+        for id in 0..64u64 {
+            engine.submit(Request {
+                id,
+                prompt: (0..8u32).collect(),
+                params: SamplingParams {
+                    temperature: 0.0,
+                    max_new_tokens: 48,
+                    eos_token: None,
+                },
+                arrival: 0.0,
+            });
+        }
+        let done = engine.run_to_completion(100_000).unwrap();
+        assert_eq!(done.len(), 64);
+        let mean_tpot =
+            done.iter().map(|c| c.tpot()).sum::<f64>() / done.len() as f64;
+        (engine.metrics.mean_batch(), mean_tpot)
+    };
+    let (batch_free, tpot_free) = run(None);
+    // SLO chosen tighter than the free-running TPOT.
+    let (batch_slo, tpot_slo) = run(Some(tpot_free * 0.6));
+    assert!(
+        batch_slo < batch_free,
+        "SLO should shrink the batch: {batch_slo} vs {batch_free}"
+    );
+    assert!(
+        tpot_slo < tpot_free,
+        "SLO run should improve TPOT: {tpot_slo} vs {tpot_free}"
+    );
+}

@@ -1,0 +1,59 @@
+//! Integration over the experiments layer: cheap versions of the figure
+//! pipelines (the full grids run in `cargo bench`).
+
+use moesd::experiments::*;
+use moesd::workload::Dataset;
+
+#[test]
+fn fig2_first_panel_shape() {
+    let panel = &fig2::default_panels()[0];
+    let stats = fig2::sweep_panel(panel, 1).unwrap();
+    fig2::check_shape(&stats).unwrap();
+}
+
+#[test]
+fn fig3_shape() {
+    let out = fig3::run(3);
+    fig3::check_shape(&out).unwrap();
+}
+
+#[test]
+fn fig6_mtbench_t1_shape() {
+    // The hardest panel (lowest α): MoE should still show the pattern.
+    let out = fig6::run(Dataset::MtBench, 1.0, 3, 5).unwrap();
+    fig6::check_shape(&out).unwrap();
+}
+
+#[test]
+fn peak_speedup_helper() {
+    let stats = vec![
+        PairStats {
+            batch: 1,
+            gamma: 2,
+            t_ar: 1.0,
+            t_sd: 1.0,
+            sigma: 0.9,
+            speedup: 1.0,
+            target_efficiency: 0.5,
+        },
+        PairStats {
+            batch: 16,
+            gamma: 2,
+            t_ar: 2.0,
+            t_sd: 1.0,
+            sigma: 0.9,
+            speedup: 2.0,
+            target_efficiency: 0.9,
+        },
+    ];
+    assert_eq!(peak_speedup(&stats).batch, 16);
+}
+
+#[test]
+fn table1_single_cell_sanity() {
+    let row = tables::compute_row("2xGPU-A", "qwen2", Dataset::HumanEval, 0.0, 9).unwrap();
+    // γ ordering on the most predictable workload.
+    assert!(row.cells[0].speedup < row.cells[2].speedup);
+    // The γ=4 σ calibration matches Table 1's 0.91.
+    assert!((row.cells[2].sigma - 0.91).abs() < 0.08);
+}

@@ -1,0 +1,109 @@
+//! TCP front-end integration: spin up the server on an ephemeral port with
+//! the synthetic backend, drive it with concurrent clients.
+
+use moesd::batching::Buckets;
+use moesd::engine::EngineConfig;
+use moesd::hardware::platform_2x_gpu_a;
+use moesd::kvcache::KvConfig;
+use moesd::scheduler::SchedulerConfig;
+use moesd::server::{Client, Server};
+use moesd::simulator::ExecSim;
+use moesd::spec::synthetic::SyntheticLm;
+
+fn tiny_platform_backend(seed: u64) -> SyntheticLm {
+    // Use the tiny arch in the simulator so simulated times are micro-scale
+    // and the test completes instantly on the virtual clock.
+    let target = ExecSim::new(
+        moesd::arch::presets::moesd_tiny(),
+        platform_2x_gpu_a(),
+    );
+    let draft = ExecSim::new(
+        moesd::arch::presets::moesd_tiny_draft(),
+        platform_2x_gpu_a(),
+    );
+    SyntheticLm::new(target, draft, 0.9, seed)
+}
+
+fn config() -> EngineConfig {
+    EngineConfig {
+        gamma: 3,
+        kv: KvConfig {
+            num_blocks: 1024,
+            block_size: 16,
+        },
+        scheduler: SchedulerConfig {
+            max_batch: 16,
+            admit_reserve_tokens: 64,
+            tpot_slo: None,
+        },
+        buckets: Buckets::pow2_up_to(16),
+        seed: 1,
+    }
+}
+
+#[test]
+fn serve_one_request() {
+    let server = Server::start("127.0.0.1:0", config(), tiny_platform_backend(5)).unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+    let resp = client.generate("INFO GET /api", 16, 0.0).unwrap();
+    // The synthetic chain may emit the EOS byte and stop early.
+    let n = resp.get("n_tokens").unwrap().as_usize().unwrap();
+    assert!((1..=16).contains(&n), "n_tokens={n}");
+    assert!(resp.get("latency").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(resp.get("rounds").unwrap().as_usize().unwrap() >= 1);
+    server.stop();
+}
+
+#[test]
+fn serves_concurrent_clients_batched() {
+    let server = Server::start("127.0.0.1:0", config(), tiny_platform_backend(6)).unwrap();
+    let addr = server.addr;
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                let resp = client
+                    .generate(&format!("DEBUG expert[{i}] load="), 12, 0.0)
+                    .unwrap();
+                resp.get("n_tokens").unwrap().as_usize().unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let n = h.join().unwrap();
+        assert!((1..=12).contains(&n), "n_tokens={n}");
+    }
+    server.stop();
+}
+
+#[test]
+fn sequential_requests_on_one_connection() {
+    let server = Server::start("127.0.0.1:0", config(), tiny_platform_backend(7)).unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+    for _ in 0..3 {
+        let resp = client.generate("INFO worker=1 ", 8, 0.0).unwrap();
+        let n = resp.get("n_tokens").unwrap().as_usize().unwrap();
+        assert!((1..=8).contains(&n), "n_tokens={n}");
+    }
+    server.stop();
+}
+
+#[test]
+fn malformed_requests_get_error_responses() {
+    let server = Server::start("127.0.0.1:0", config(), tiny_platform_backend(8)).unwrap();
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    for bad in ["not json", "{\"no_prompt\": 1}", "{\"prompt\": \"\"}"] {
+        stream.write_all(bad.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = moesd::util::json::Json::parse(&line).unwrap();
+        assert!(resp.get("error").is_some(), "expected error for {bad}: {line}");
+    }
+    // The connection (and server) still works after errors.
+    let mut client = Client::connect(server.addr).unwrap();
+    assert!(client.generate("INFO ", 4, 0.0).is_ok());
+    server.stop();
+}

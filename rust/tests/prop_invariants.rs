@@ -1,0 +1,216 @@
+//! Cross-module property tests on the coordinator's invariants (the
+//! "proptest on coordinator invariants: routing, batching, state" suite).
+
+use moesd::arch::presets;
+use moesd::batching::{Request, SamplingParams};
+use moesd::engine::{Engine, EngineConfig};
+use moesd::hardware::platform_2x_gpu_a;
+use moesd::kvcache::KvConfig;
+use moesd::sampling::verify_chain;
+use moesd::scheduler::SchedulerConfig;
+use moesd::simulator::routing::Router;
+use moesd::simulator::ExecSim;
+use moesd::spec::synthetic::SyntheticLm;
+use moesd::testkit::{ensure, Runner};
+use moesd::theory;
+use moesd::util::rng::Rng;
+
+fn mk_engine(alpha: f64, gamma: usize, max_batch: usize, blocks: usize, seed: u64)
+    -> Engine<SyntheticLm> {
+    let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+    let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+    Engine::new(
+        EngineConfig {
+            gamma,
+            kv: KvConfig {
+                num_blocks: blocks,
+                block_size: 8,
+            },
+            scheduler: SchedulerConfig {
+                max_batch,
+                admit_reserve_tokens: 8,
+                tpot_slo: None,
+            },
+            seed,
+            ..Default::default()
+        },
+        SyntheticLm::new(target, draft, alpha, seed),
+    )
+}
+
+/// Every engine run — any α, γ, batch limit, cache size — terminates with
+/// all requests complete, the exact deterministic chain emitted, and KV
+/// block conservation intact.
+#[test]
+fn prop_engine_always_completes_correctly() {
+    let mut runner = Runner::new("engine_completes");
+    runner.run(25, |g| {
+        let alpha = g.f64_in(0.0, 1.0);
+        let gamma = g.usize_in(0, 5);
+        let max_batch = g.usize_in(1, 12);
+        let blocks = g.usize_in(40, 400);
+        let n_reqs = g.usize_in(1, 10);
+        let seed = g.u64_in(0, 1 << 20);
+        let mut engine = mk_engine(alpha, gamma, max_batch, blocks, seed);
+        let mut specs = Vec::new();
+        for id in 0..n_reqs as u64 {
+            let prompt_len = g.usize_in(2, 24);
+            let max_new = g.usize_in(1, 24);
+            specs.push((id, prompt_len, max_new));
+            engine.submit(Request {
+                id,
+                prompt: (0..prompt_len as u32).collect(),
+                params: SamplingParams {
+                    temperature: 0.0,
+                    max_new_tokens: max_new,
+                    eos_token: None,
+                },
+                arrival: 0.0,
+            });
+        }
+        let done = match engine.run_to_completion(200_000) {
+            Ok(d) => d,
+            Err(e) => return Err(format!("did not complete: {e}")),
+        };
+        if done.len() != n_reqs {
+            return Err(format!("{} of {n_reqs} completed", done.len()));
+        }
+        for c in &done {
+            let (_, prompt_len, max_new) =
+                specs.iter().find(|(id, _, _)| *id == c.id).unwrap();
+            if c.tokens.len() != *max_new {
+                return Err(format!("seq {}: {} tokens != {max_new}", c.id, c.tokens.len()));
+            }
+            let expect = engine.backend().expected_chain(c.id, *prompt_len, *max_new);
+            if c.tokens != expect {
+                return Err(format!("seq {}: wrong tokens (losslessness broken)", c.id));
+            }
+        }
+        if let Err(e) = engine.kv().check_invariants() {
+            return Err(format!("KV invariant: {e}"));
+        }
+        ensure(true, "")
+    });
+}
+
+/// Rejection sampling never emits more than accepted+1 tokens, and with
+/// identical target/draft distributions accepts everything.
+#[test]
+fn prop_verify_chain_length_and_identity() {
+    let mut runner = Runner::new("verify_chain");
+    runner.run(300, |g| {
+        let vocab = g.usize_in(2, 32);
+        let gamma = g.usize_in(0, 6);
+        let mut rng = Rng::seeded(g.u64_in(0, 1 << 30));
+        let mk = |rng: &mut Rng| -> Vec<f64> {
+            let v: Vec<f64> = (0..vocab).map(|_| rng.f64() + 0.01).collect();
+            let s: f64 = v.iter().sum();
+            v.into_iter().map(|x| x / s).collect()
+        };
+        let draft_probs: Vec<Vec<f64>> = (0..gamma).map(|_| mk(&mut rng)).collect();
+        let target_probs: Vec<Vec<f64>> = (0..=gamma).map(|_| mk(&mut rng)).collect();
+        let draft_tokens: Vec<u32> = draft_probs
+            .iter()
+            .map(|d| rng.categorical(d) as u32)
+            .collect();
+        let out = verify_chain(&draft_tokens, &draft_probs, &target_probs, &mut rng);
+        if out.tokens.len() != out.accepted + 1 || out.accepted > gamma {
+            return Err(format!(
+                "bad outcome: {} tokens, {} accepted, γ={gamma}",
+                out.tokens.len(),
+                out.accepted
+            ));
+        }
+        // Identity case: draft == target ⇒ full acceptance.
+        let same = verify_chain(&draft_tokens, &draft_probs,
+            &{
+                let mut t = draft_probs.clone();
+                t.push(mk(&mut rng));
+                t
+            }, &mut rng);
+        if same.accepted != gamma {
+            return Err("identical distributions must fully accept".into());
+        }
+        ensure(true, "")
+    });
+}
+
+/// Routing conservation: every token lands on exactly K distinct experts,
+/// and the empirical activation stays within the binomial envelope of the
+/// Eq. 8 expectation.
+#[test]
+fn prop_routing_conservation_and_mean() {
+    let mut runner = Runner::new("routing");
+    runner.run(40, |g| {
+        let e = g.usize_in(2, 64);
+        let k = g.usize_in(1, e);
+        let t = g.u64_in(1, 128);
+        let mut rng = Rng::seeded(g.u64_in(0, 1 << 30));
+        let router = Router::balanced(e, k);
+        let out = router.route(t, &mut rng);
+        let total: u64 = out.tokens_per_expert.iter().sum();
+        if total != t * k as u64 {
+            return Err(format!("token-assignment conservation: {total} != {}", t * k as u64));
+        }
+        let emp = router.empirical_activation(t, 200, &mut rng);
+        let expect = theory::expected_active_experts(e, k, t);
+        // 200-trial mean within a generous CLT band.
+        if (emp - expect).abs() > 0.15 * e as f64 {
+            return Err(format!("N(t): empirical {emp} vs theory {expect} (E={e},K={k},t={t})"));
+        }
+        ensure(true, "")
+    });
+}
+
+/// Eq. 4 sanity: modeled speedup is continuous and bounded by σ(γ+1)
+/// (perfect verification/draft can't beat the round length).
+#[test]
+fn prop_speedup_bounded_by_round_length() {
+    let mut runner = Runner::new("speedup_bound");
+    runner.run(300, |g| {
+        let t1 = g.f64_in(1e-3, 1.0);
+        let tg = t1 * g.f64_in(1.0, 8.0);
+        let td = t1 * g.f64_in(0.0, 0.5);
+        let tr = t1 * g.f64_in(0.0, 0.1);
+        let sigma = g.f64_in(0.2, 1.0);
+        let gamma = g.usize_in(1, 6);
+        let s = theory::speedup_decomposition(t1, tg, td, tr, sigma, gamma).speedup();
+        let bound = sigma * (gamma + 1) as f64;
+        ensure(
+            s > 0.0 && s <= bound + 1e-9,
+            format!("speedup {s} outside (0, {bound}]"),
+        )
+    });
+}
+
+/// The engine's measured σ always lies in Eq. 5's attainable range.
+#[test]
+fn prop_measured_sigma_in_eq5_range() {
+    let mut runner = Runner::new("sigma_range");
+    runner.run(12, |g| {
+        let alpha = g.f64_in(0.05, 0.95);
+        let gamma = g.usize_in(1, 5);
+        let mut engine = mk_engine(alpha, gamma, 8, 2000, g.u64_in(0, 999));
+        for id in 0..6u64 {
+            engine.submit(Request {
+                id,
+                prompt: (0..8u32).collect(),
+                params: SamplingParams {
+                    temperature: 0.0,
+                    max_new_tokens: 30,
+                    eos_token: None,
+                },
+                arrival: 0.0,
+            });
+        }
+        engine
+            .run_to_completion(100_000)
+            .map_err(|e| format!("{e}"))?;
+        let sigma = engine.metrics.sigma(gamma);
+        let lo = 1.0 / (gamma + 1) as f64;
+        ensure(
+            sigma >= lo - 1e-9 && sigma <= 1.0 + 1e-9,
+            format!("σ {sigma} outside [{lo}, 1] (α={alpha}, γ={gamma})"),
+        )
+    });
+}
