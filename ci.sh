@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# One-command gate for this repo. Future PRs run this before merging.
+#
+#   ./ci.sh          # fmt + clippy + tier-1 (build + tests)
+#   ./ci.sh --fast   # tier-1 only
+#
+# Clippy policy: correctness/suspicious/complexity/perf lints are hard
+# errors; the style group stays advisory so the gate tracks real defects
+# rather than idiom churn.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+FAST=0
+[[ "${1:-}" == "--fast" ]] && FAST=1
+
+if [[ $FAST -eq 0 ]]; then
+    echo "== cargo fmt --check"
+    cargo fmt --check
+
+    echo "== cargo clippy (lib + bins, -D warnings, style advisory)"
+    cargo clippy --lib --bins -- -D warnings -A clippy::style
+fi
+
+echo "== tier-1: cargo build --release && cargo test -q"
+cargo build --release
+cargo test -q
+
+echo "CI gate passed."

@@ -19,9 +19,11 @@
 //! ```
 
 use crate::batching::Buckets;
+use crate::control::{ControlConfig, CostModelSpec};
 use crate::engine::EngineConfig;
 use crate::kvcache::KvConfig;
 use crate::scheduler::SchedulerConfig;
+use crate::simulator::ExecSim;
 use crate::util::json::Json;
 use std::path::Path;
 
@@ -51,6 +53,9 @@ pub struct Config {
     pub seed: u64,
     /// Artifacts directory (HLO mode).
     pub artifacts_dir: String,
+    /// Enable the adaptive speculation control plane (synthetic mode):
+    /// online model-guided γ/batch co-tuning instead of the fixed γ.
+    pub adaptive: bool,
 }
 
 impl Default for Config {
@@ -69,6 +74,7 @@ impl Default for Config {
             kv_block_size: 16,
             seed: 0,
             artifacts_dir: "artifacts".into(),
+            adaptive: false,
         }
     }
 }
@@ -103,6 +109,7 @@ impl Config {
             kv_block_size: usize_or("kv_block_size", d.kv_block_size),
             seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
             artifacts_dir: str_or("artifacts_dir", &d.artifacts_dir),
+            adaptive: j.get("adaptive").and_then(Json::as_bool).unwrap_or(false),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -128,12 +135,51 @@ impl Config {
             crate::arch::presets::by_name(&self.draft)?;
             crate::hardware::platform_by_name(&self.platform)?;
         }
+        anyhow::ensure!(
+            !(self.adaptive && self.mode == Mode::Hlo),
+            "adaptive control requires synthetic mode (no calibrated cost model for \
+             the HLO backend yet)"
+        );
         Ok(())
     }
 
-    /// Derive the engine configuration.
-    pub fn engine_config(&self) -> EngineConfig {
-        EngineConfig {
+    /// The adaptive controller configuration this config implies:
+    /// model-guided over the roofline simulator of the configured
+    /// (model, draft, platform), with the workload-calibrated α as prior.
+    /// `None` when `adaptive` is off.
+    pub fn control_config(&self) -> anyhow::Result<Option<ControlConfig>> {
+        if !self.adaptive {
+            return Ok(None);
+        }
+        anyhow::ensure!(
+            self.mode == Mode::Synthetic,
+            "adaptive control requires synthetic mode"
+        );
+        let target = crate::arch::presets::by_name(&self.model)?;
+        let draft = crate::arch::presets::by_name(&self.draft)?;
+        let platform = crate::hardware::platform_by_name(&self.platform)?;
+        let alpha = crate::workload::calibrated_alpha(
+            crate::workload::model_family(&self.model),
+            crate::workload::Dataset::by_name(&self.dataset)?,
+            self.temperature,
+            self.gamma.clamp(2, 4),
+        );
+        // Oracle matches the serve backend exactly: both the target and
+        // the draft are priced on the full deployment platform (the same
+        // ExecSim construction `serve` uses for the synthetic backend).
+        let tsim = ExecSim::new(target, platform.clone());
+        let dsim = ExecSim::new(draft, platform);
+        Ok(Some(ControlConfig {
+            alpha_prior: alpha,
+            ..ControlConfig::model_guided(CostModelSpec::roofline(tsim, dsim))
+        }))
+    }
+
+    /// Derive the engine configuration (including the adaptive controller
+    /// when `adaptive` is set — the flag is honored here, not just by the
+    /// serve binary).
+    pub fn engine_config(&self) -> anyhow::Result<EngineConfig> {
+        Ok(EngineConfig {
             gamma: self.gamma,
             kv: KvConfig {
                 num_blocks: self.kv_blocks,
@@ -146,7 +192,8 @@ impl Config {
             },
             buckets: Buckets::pow2_up_to(self.max_batch.max(1)),
             seed: self.seed,
-        }
+            control: self.control_config()?,
+        })
     }
 
     pub fn to_json(&self) -> Json {
@@ -170,6 +217,7 @@ impl Config {
             ("kv_block_size", self.kv_block_size.into()),
             ("seed", self.seed.into()),
             ("artifacts_dir", self.artifacts_dir.as_str().into()),
+            ("adaptive", self.adaptive.into()),
         ])
     }
 }
@@ -180,12 +228,17 @@ mod tests {
 
     #[test]
     fn roundtrip_via_json() {
-        let c = Config::default();
+        let c = Config {
+            adaptive: true,
+            ..Config::default()
+        };
         let j = c.to_json();
         let c2 = Config::from_json(&j).unwrap();
         assert_eq!(c2.model, c.model);
         assert_eq!(c2.gamma, c.gamma);
         assert_eq!(c2.mode, Mode::Synthetic);
+        assert!(c2.adaptive);
+        assert!(!Config::default().adaptive);
     }
 
     #[test]
@@ -216,9 +269,34 @@ mod tests {
             max_batch: 20,
             ..Default::default()
         };
-        let e = c.engine_config();
+        let e = c.engine_config().unwrap();
         assert_eq!(e.scheduler.max_batch, 20);
         assert_eq!(e.buckets.max(), 16); // pow2 ≤ 20
         assert_eq!(e.gamma, c.gamma);
+        assert!(e.control.is_none());
+    }
+
+    #[test]
+    fn adaptive_flag_is_honored_by_engine_config() {
+        let c = Config {
+            adaptive: true,
+            ..Default::default()
+        };
+        let e = c.engine_config().unwrap();
+        let ctl = e.control.expect("adaptive must yield a controller config");
+        assert!(matches!(
+            ctl.policy,
+            crate::control::PolicyKind::ModelGuided { .. }
+        ));
+        // α prior comes from the calibrated workload table.
+        assert!(ctl.alpha_prior > 0.5 && ctl.alpha_prior < 1.0);
+        // Adaptive + HLO is rejected outright.
+        let bad = Config {
+            adaptive: true,
+            mode: Mode::Hlo,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        assert!(bad.engine_config().is_err());
     }
 }

@@ -1,0 +1,959 @@
+//! Adaptive speculation control plane (the online §3 loop).
+//!
+//! The paper's central observation is that SD speedup for sparse MoE is a
+//! *moving target*: it depends jointly on batch size B, acceptance σ(α, γ)
+//! (Eq. 5) and target efficiency T_T(B,1)/T_T(B,γ+1) (§3.1), so a draft
+//! length γ that wins at B=32 can lose outright at B=256. The offline
+//! layers (`theory`, `perfmodel`, `simulator`) can evaluate those
+//! trade-offs ahead of time; this module closes the loop **online**:
+//!
+//! ```text
+//!             ┌────────────────────────────────────────────┐
+//!             │                 Engine::step               │
+//!             │   propose(γ) → verify → reject-sample      │
+//!             └──────┬─────────────────────────▲───────────┘
+//!     RoundObservation│                        │ γ, batch ceiling
+//!             ┌──────▼─────────────────────────┴───────────┐
+//!             │              SpecController                │
+//!             │  · windowed α̂/σ̂ (Eq. 5 inverse)           │
+//!             │  · measured cost table per (B-bucket, s)   │
+//!             │    → online target-efficiency estimates    │
+//!             │  · GammaPolicy (static / model-guided)     │
+//!             └────────────────────────────────────────────┘
+//! ```
+//!
+//! Every decode round the engine reports what it measured — batch size,
+//! accepted/proposed draft tokens, and the per-stage clock costs the paper
+//! calls T_D, T_T and T_reject. The controller maintains:
+//!
+//! 1. **Acceptance estimates**: per control interval, the mean accepted
+//!    chain length inverts through Eq. 5 ([`crate::theory::alpha_from_sigma`])
+//!    to an α̂ that is EWMA-smoothed across intervals.
+//! 2. **A measured cost table** keyed by (power-of-two batch bucket,
+//!    verify width s = γ+1). Where both an s=1 and an s>1 entry exist for a
+//!    bucket this yields a *measured* target efficiency — the paper's §3.1
+//!    quantity observed in production rather than simulated.
+//! 3. **A policy decision** each `interval_rounds` rounds: a
+//!    [`GammaPolicy`] maps the estimates to the γ for the next interval.
+//!    [`StaticPolicy`] pins γ (the baseline); [`ModelGuidedPolicy`] plugs
+//!    α̂ into the Eq. 4 speedup decomposition over an analytic cost model
+//!    ([`CostModelSpec`]: Alg. 1 relaxation or the roofline simulator),
+//!    rescaled by the measured costs, and picks the argmax γ — including
+//!    γ = 0, the autoregressive fallback for when target efficiency
+//!    collapses at large B. Hysteresis and a dwell time keep γ from
+//!    thrashing on noisy α̂, and periodic probes keep α̂ fresh while in
+//!    the AR fallback.
+//!
+//! The controller also co-tunes the scheduler's batch ceiling: with a TPOT
+//! SLO configured it converts the measured round economics into an
+//! est-TPOT(B) curve and asks [`crate::scheduler::Scheduler::batch_ceiling`]
+//! for the largest compliant batch (§3.4's latency-critical scenario).
+
+pub mod policy;
+
+pub use policy::{
+    DecisionKind, Estimates, GammaDecision, GammaPolicy, ModelGuidedPolicy, StaticPolicy,
+};
+
+use crate::perfmodel::{PerfModel, PerfParams};
+use crate::scheduler::Scheduler;
+use crate::simulator::ExecSim;
+use crate::theory;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Analytic cost oracle the model-guided policy extrapolates with.
+///
+/// Only *relative* costs matter to the argmax over γ, so any consistent
+/// scale works; measured entries from the [`CostTable`] re-anchor the
+/// absolute level where observations exist.
+pub trait CostModel: Send {
+    /// Target forward time for `b` sequences × `s` tokens each.
+    fn t_target(&self, b: usize, s: usize) -> f64;
+    /// Draft forward time for one token across `b` sequences.
+    fn t_draft(&self, b: usize) -> f64;
+    /// Rejection-sampling stage time.
+    fn t_reject(&self, b: usize, gamma: usize) -> f64;
+}
+
+/// Plain-data cost model description (keeps [`ControlConfig`] `Clone`).
+#[derive(Debug, Clone)]
+pub enum CostModelSpec {
+    /// The paper's Alg. 1 relaxation model with explicit parameters.
+    Perf {
+        ridge_point: f64,
+        params: PerfParams,
+        /// Activated experts per token (K) of the target.
+        k: usize,
+        /// Total expert count (E) of the target.
+        e: usize,
+    },
+    /// The roofline simulator pair — the same oracle the synthetic
+    /// backend prices rounds with.
+    Roofline {
+        target: ExecSim,
+        draft: ExecSim,
+        /// Context length used when pricing forwards.
+        ctx: usize,
+    },
+}
+
+impl CostModelSpec {
+    /// Roofline spec at the synthetic backend's default pricing context.
+    pub fn roofline(target: ExecSim, draft: ExecSim) -> CostModelSpec {
+        CostModelSpec::Roofline {
+            target,
+            draft,
+            ctx: 512,
+        }
+    }
+
+    /// Alg. 1 spec from fitted (or physically-derived) parameters.
+    pub fn perf(ridge_point: f64, params: PerfParams, k: usize, e: usize) -> CostModelSpec {
+        CostModelSpec::Perf {
+            ridge_point,
+            params,
+            k,
+            e,
+        }
+    }
+}
+
+impl CostModel for CostModelSpec {
+    fn t_target(&self, b: usize, s: usize) -> f64 {
+        match self {
+            CostModelSpec::Perf {
+                ridge_point,
+                params,
+                k,
+                e,
+            } => PerfModel::with_ridge_point(*ridge_point).t_target(params, b, s, *k, *e),
+            CostModelSpec::Roofline { target, ctx, .. } => target.t_forward(b, s, *ctx),
+        }
+    }
+
+    fn t_draft(&self, b: usize) -> f64 {
+        match self {
+            CostModelSpec::Perf {
+                ridge_point,
+                params,
+                ..
+            } => PerfModel::with_ridge_point(*ridge_point).t_draft(params, b),
+            CostModelSpec::Roofline { draft, ctx, .. } => draft.t_forward(b, 1, *ctx),
+        }
+    }
+
+    fn t_reject(&self, b: usize, gamma: usize) -> f64 {
+        match self {
+            CostModelSpec::Perf {
+                ridge_point,
+                params,
+                ..
+            } => PerfModel::with_ridge_point(*ridge_point).t_reject(params, b, gamma),
+            CostModelSpec::Roofline { target, .. } => target.t_reject(b, gamma),
+        }
+    }
+}
+
+/// Which policy the controller runs.
+#[derive(Debug, Clone)]
+pub enum PolicyKind {
+    /// Fixed γ; the controller still maintains estimates (observability).
+    Static { gamma: usize },
+    /// Eq. 4 argmax-γ with measured α̂ and AR fallback.
+    ModelGuided { cost: CostModelSpec },
+}
+
+/// Controller configuration — plain data so [`crate::engine::EngineConfig`]
+/// stays `Clone + Debug + Send`.
+#[derive(Debug, Clone)]
+pub struct ControlConfig {
+    pub policy: PolicyKind,
+    /// Sequence-rounds (batch × rounds) per control interval. Closing on
+    /// accumulated *samples* rather than rounds keeps the α̂ estimator
+    /// quality independent of batch size: at B=1 an interval spans many
+    /// rounds, at B=512 a single round already carries 512 samples.
+    pub interval_seq_rounds: usize,
+    /// Largest γ the policy may select.
+    pub gamma_max: usize,
+    /// Relative predicted improvement required to switch γ (0.05 = 5%).
+    pub hysteresis: f64,
+    /// Minimum control intervals between γ switches.
+    pub min_dwell_intervals: usize,
+    /// While in the γ=0 fallback, probe a speculative γ for one interval
+    /// after this many intervals (0 disables probing).
+    pub probe_every_intervals: usize,
+    /// α̂ prior used before any speculative rounds have been observed.
+    pub alpha_prior: f64,
+    /// EWMA weight of the newest interval estimate, in (0, 1].
+    pub alpha_smoothing: f64,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            policy: PolicyKind::Static { gamma: 3 },
+            interval_seq_rounds: 64,
+            gamma_max: 8,
+            hysteresis: 0.05,
+            min_dwell_intervals: 2,
+            probe_every_intervals: 8,
+            alpha_prior: 0.8,
+            alpha_smoothing: 0.4,
+        }
+    }
+}
+
+impl ControlConfig {
+    pub fn static_gamma(gamma: usize) -> ControlConfig {
+        ControlConfig {
+            policy: PolicyKind::Static { gamma },
+            ..ControlConfig::default()
+        }
+    }
+
+    pub fn model_guided(cost: CostModelSpec) -> ControlConfig {
+        ControlConfig {
+            policy: PolicyKind::ModelGuided { cost },
+            ..ControlConfig::default()
+        }
+    }
+
+    /// Check the knobs for validity. Surfaces configuration errors at API
+    /// boundaries (e.g. [`crate::server::Server::start_with`]) instead of
+    /// panicking on the engine thread.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.interval_seq_rounds >= 1,
+            "interval_seq_rounds must be >= 1"
+        );
+        anyhow::ensure!(self.gamma_max >= 1, "gamma_max must be >= 1");
+        anyhow::ensure!(self.hysteresis >= 0.0, "hysteresis must be non-negative");
+        anyhow::ensure!(
+            self.alpha_smoothing > 0.0 && self.alpha_smoothing <= 1.0,
+            "alpha_smoothing must be in (0, 1]"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.alpha_prior),
+            "alpha_prior must be in [0, 1]"
+        );
+        Ok(())
+    }
+
+    /// Clamp every knob into its valid range. [`SpecController::new`] runs
+    /// on whatever thread owns the engine, where a panic would silently
+    /// kill serving — so it sanitizes rather than asserts; callers that
+    /// want loud failures use [`ControlConfig::validate`] up front.
+    fn sanitized(&self) -> ControlConfig {
+        ControlConfig {
+            policy: self.policy.clone(),
+            interval_seq_rounds: self.interval_seq_rounds.max(1),
+            gamma_max: self.gamma_max.max(1),
+            hysteresis: self.hysteresis.max(0.0),
+            min_dwell_intervals: self.min_dwell_intervals,
+            probe_every_intervals: self.probe_every_intervals,
+            alpha_prior: self.alpha_prior.clamp(0.0, 1.0),
+            alpha_smoothing: if self.alpha_smoothing > 0.0 && self.alpha_smoothing <= 1.0 {
+                self.alpha_smoothing
+            } else {
+                ControlConfig::default().alpha_smoothing
+            },
+        }
+    }
+}
+
+/// What the engine reports after each decode round.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundObservation {
+    pub round: u64,
+    /// Decode batch size this round.
+    pub batch: usize,
+    /// γ in effect this round.
+    pub gamma: usize,
+    /// Draft tokens proposed (batch · γ).
+    pub proposed: u64,
+    /// Draft tokens accepted by rejection sampling.
+    pub accepted: u64,
+    /// Tokens committed this round (accepted + one per sequence).
+    pub emitted: u64,
+    /// Stage costs on the engine clock (the paper's T_D, T_T, T_reject).
+    pub t_draft: f64,
+    pub t_verify: f64,
+    pub t_reject: f64,
+}
+
+/// Exponentially-weighted moving average with a sample counter.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Ewma {
+    value: f64,
+    samples: u64,
+}
+
+/// Smoothing weight for cost-table entries.
+const COST_BETA: f64 = 0.3;
+
+impl Ewma {
+    pub fn update(&mut self, x: f64) {
+        if self.samples == 0 {
+            self.value = x;
+        } else {
+            self.value = COST_BETA * x + (1.0 - COST_BETA) * self.value;
+        }
+        self.samples += 1;
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        (self.samples > 0).then_some(self.value)
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+}
+
+/// Batch sizes are bucketed to powers of two so estimates pool across the
+/// small batch fluctuations continuous batching produces.
+pub fn bucket_of(batch: usize) -> usize {
+    batch.max(1).next_power_of_two()
+}
+
+/// Measured per-stage costs keyed by (batch bucket, verify width).
+#[derive(Debug, Clone, Default)]
+pub struct CostTable {
+    /// (bucket, s = γ+1) → target forward time for the round.
+    verify: BTreeMap<(usize, usize), Ewma>,
+    /// bucket → per-forward draft time.
+    draft: BTreeMap<usize, Ewma>,
+    /// Rejection cost per verified row (B·(γ+1) rows per round).
+    reject_per_row: Ewma,
+}
+
+impl CostTable {
+    pub fn is_empty(&self) -> bool {
+        self.verify.is_empty()
+    }
+
+    pub fn observe(&mut self, obs: &RoundObservation) {
+        let bucket = bucket_of(obs.batch);
+        self.verify
+            .entry((bucket, obs.gamma + 1))
+            .or_default()
+            .update(obs.t_verify);
+        if obs.gamma > 0 && obs.t_draft > 0.0 {
+            self.draft
+                .entry(bucket)
+                .or_default()
+                .update(obs.t_draft / obs.gamma as f64);
+        }
+        let rows = (obs.batch * (obs.gamma + 1)) as f64;
+        if rows > 0.0 && obs.t_reject > 0.0 {
+            self.reject_per_row.update(obs.t_reject / rows);
+        }
+    }
+
+    pub fn verify_time(&self, bucket: usize, s: usize) -> Option<f64> {
+        self.verify.get(&(bucket, s)).and_then(|e| e.get())
+    }
+
+    pub fn draft_per_forward(&self, bucket: usize) -> Option<f64> {
+        self.draft.get(&bucket).and_then(|e| e.get())
+    }
+
+    pub fn reject_per_row(&self) -> Option<f64> {
+        self.reject_per_row.get()
+    }
+
+    /// The observed verify entry at this bucket whose width is closest to
+    /// `want_s` (more samples win ties). Returns `(s, time)`.
+    pub fn verify_nearest(&self, bucket: usize, want_s: usize) -> Option<(usize, f64)> {
+        self.verify
+            .iter()
+            .filter(|((b, _), e)| *b == bucket && e.samples > 0)
+            .min_by_key(|((_, s), e)| {
+                ((*s as i64 - want_s as i64).unsigned_abs(), u64::MAX - e.samples)
+            })
+            .map(|((_, s), e)| (*s, e.value))
+    }
+
+    /// The verify entry with the most samples across all buckets.
+    pub fn busiest_verify(&self) -> Option<(usize, usize, f64)> {
+        self.verify
+            .iter()
+            .filter(|(_, e)| e.samples > 0)
+            .max_by_key(|(_, e)| e.samples)
+            .map(|((b, s), e)| (*b, *s, e.value))
+    }
+
+    /// Measured target efficiency T(B,1)/T(B,s) for a bucket: requires an
+    /// AR (s=1) observation and a speculative one (largest observed s>1).
+    pub fn measured_target_efficiency(&self, bucket: usize) -> Option<(usize, f64)> {
+        let t1 = self.verify_time(bucket, 1)?;
+        self.verify
+            .iter()
+            .filter(|((b, s), e)| *b == bucket && *s > 1 && e.samples > 0)
+            .max_by_key(|((_, s), _)| *s)
+            .map(|((_, s), e)| (*s, t1 / e.value))
+    }
+
+    /// All (bucket, measured target efficiency) pairs, for reporting.
+    pub fn target_efficiency_by_bucket(&self) -> Vec<(usize, f64)> {
+        let buckets: BTreeSet<usize> = self.verify.keys().map(|(b, _)| *b).collect();
+        buckets
+            .into_iter()
+            .filter_map(|b| self.measured_target_efficiency(b).map(|(_, te)| (b, te)))
+            .collect()
+    }
+}
+
+/// Snapshot of controller state for metrics/server reporting.
+#[derive(Debug, Clone)]
+pub struct ControllerState {
+    pub policy: String,
+    pub gamma: usize,
+    pub alpha_hat: Option<f64>,
+    pub sigma_hat: Option<f64>,
+    pub intervals: u64,
+    pub switches: u64,
+    pub probes: u64,
+    /// Measured target efficiency per batch bucket (§3.1, online).
+    pub target_efficiency: Vec<(usize, f64)>,
+    /// Bounded (round, new γ) switch log.
+    pub history: Vec<(u64, usize)>,
+}
+
+impl ControllerState {
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| match v {
+            Some(x) => x.into(),
+            None => Json::Null,
+        };
+        Json::from_pairs(vec![
+            ("policy", self.policy.as_str().into()),
+            ("gamma", self.gamma.into()),
+            ("alpha_hat", opt(self.alpha_hat)),
+            ("sigma_hat", opt(self.sigma_hat)),
+            ("intervals", self.intervals.into()),
+            ("switches", self.switches.into()),
+            ("probes", self.probes.into()),
+            (
+                "target_efficiency",
+                Json::Arr(
+                    self.target_efficiency
+                        .iter()
+                        .map(|(b, te)| {
+                            Json::from_pairs(vec![("bucket", (*b).into()), ("teff", (*te).into())])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "history",
+                Json::Arr(
+                    self.history
+                        .iter()
+                        .rev()
+                        .take(HISTORY_JSON_CAP)
+                        .rev()
+                        .map(|(round, gamma)| {
+                            Json::from_pairs(vec![
+                                ("round", (*round).into()),
+                                ("gamma", (*gamma).into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Switch-log capacity (the oldest entries are dropped once full).
+const HISTORY_CAP: usize = 256;
+
+/// How many of the most recent switches `ControllerState::to_json` emits.
+const HISTORY_JSON_CAP: usize = 16;
+
+/// The online speculation controller (owned by the engine).
+pub struct SpecController {
+    cfg: ControlConfig,
+    policy: Box<dyn GammaPolicy>,
+    gamma: usize,
+    bootstrapped: bool,
+    alpha_hat: Option<f64>,
+    sigma_hat: Option<f64>,
+    costs: CostTable,
+    last_batch: usize,
+    /// Batch bucket of the most recent decision — a bucket change is a
+    /// load-regime shift and triggers an immediate unguarded re-consult.
+    last_bucket: Option<usize>,
+    last_round: u64,
+    // Accumulators for the open control interval.
+    int_rounds: usize,
+    int_gamma: usize,
+    int_seq_rounds: u64,
+    int_accepted: u64,
+    int_emitted: u64,
+    // Counters.
+    intervals: u64,
+    switches: u64,
+    probes: u64,
+    history: Vec<(u64, usize)>,
+}
+
+impl SpecController {
+    pub fn new(cfg: ControlConfig) -> SpecController {
+        let cfg = cfg.sanitized();
+        let (policy, gamma0): (Box<dyn GammaPolicy>, usize) = match &cfg.policy {
+            PolicyKind::Static { gamma } => (Box::new(StaticPolicy { gamma: *gamma }), *gamma),
+            // Model-guided starts conservatively at AR; the bootstrap
+            // consult picks the prior-α argmax before the first round.
+            PolicyKind::ModelGuided { cost } => {
+                (Box::new(ModelGuidedPolicy::new(cost.clone(), &cfg)), 0)
+            }
+        };
+        SpecController {
+            cfg,
+            policy,
+            gamma: gamma0,
+            bootstrapped: false,
+            alpha_hat: None,
+            sigma_hat: None,
+            costs: CostTable::default(),
+            last_batch: 1,
+            last_bucket: None,
+            last_round: 0,
+            int_rounds: 0,
+            int_gamma: 0,
+            int_seq_rounds: 0,
+            int_accepted: 0,
+            int_emitted: 0,
+            intervals: 0,
+            switches: 0,
+            probes: 0,
+            history: Vec::new(),
+        }
+    }
+
+    /// γ for the coming round. The first call runs the policy once so even
+    /// round 0 uses a considered γ rather than a hard-coded one; after
+    /// that, a batch-bucket change (the load regime moved) re-consults
+    /// immediately — B is a *known input*, not noise, so waiting out a
+    /// control interval (or hysteresis) would just burn rounds at a γ
+    /// tuned for the old load.
+    pub fn gamma_for_round(&mut self, batch: usize) -> usize {
+        let batch = batch.max(1);
+        let bucket = bucket_of(batch);
+        if !self.bootstrapped || Some(bucket) != self.last_bucket {
+            let regime_shift = self.bootstrapped;
+            self.bootstrapped = true;
+            if self.int_rounds > 0 {
+                self.close_interval();
+            }
+            self.last_bucket = Some(bucket);
+            self.last_batch = batch;
+            self.consult(batch, self.last_round, regime_shift);
+        }
+        self.gamma
+    }
+
+    /// Currently-applied γ (without consulting).
+    pub fn gamma(&self) -> usize {
+        self.gamma
+    }
+
+    pub fn alpha_hat(&self) -> Option<f64> {
+        self.alpha_hat
+    }
+
+    pub fn sigma_hat(&self) -> Option<f64> {
+        self.sigma_hat
+    }
+
+    pub fn costs(&self) -> &CostTable {
+        &self.costs
+    }
+
+    /// Record one decode round; on interval boundaries, refresh the
+    /// estimates and consult the policy.
+    pub fn observe(&mut self, obs: RoundObservation) {
+        self.last_batch = obs.batch.max(1);
+        self.last_round = obs.round;
+        self.costs.observe(&obs);
+        if self.int_rounds > 0 && obs.gamma != self.int_gamma {
+            // γ changed mid-interval (probe or regime shift): close the
+            // partial interval so α̂ never mixes γ regimes.
+            self.close_interval();
+        }
+        self.int_gamma = obs.gamma;
+        self.int_rounds += 1;
+        self.int_seq_rounds += obs.batch as u64;
+        self.int_accepted += obs.accepted;
+        self.int_emitted += obs.emitted;
+        if self.int_seq_rounds >= self.cfg.interval_seq_rounds as u64 {
+            self.close_interval();
+            self.consult(obs.batch, obs.round, false);
+        }
+    }
+
+    fn close_interval(&mut self) {
+        if self.int_seq_rounds > 0 {
+            let gamma = self.int_gamma;
+            let seq_rounds = self.int_seq_rounds as f64;
+            let beta = self.cfg.alpha_smoothing;
+            // σ and α carry signal only in speculative intervals: at γ=0
+            // σ is identically 1, and blending that in would drag σ̂
+            // toward 1 during AR stretches and corrupt the TPOT estimate
+            // when speculation resumes. α̂ is the γ-invariant quantity;
+            // σ for any γ is re-derived from it via Eq. 5 where needed.
+            if gamma > 0 {
+                let sigma = self.int_emitted as f64 / (seq_rounds * (gamma + 1) as f64);
+                self.sigma_hat = Some(blend(self.sigma_hat, sigma, beta));
+                // Mean accepted length + the bonus token, over the γ+1
+                // maximum, is exactly Eq. 5's σ — invert it for α̂.
+                let mean_accept = self.int_accepted as f64 / seq_rounds;
+                let lo = 1.0 / (gamma + 1) as f64;
+                let sig = ((mean_accept + 1.0) / (gamma + 1) as f64).clamp(lo, 1.0);
+                let alpha = theory::alpha_from_sigma(sig, gamma);
+                self.alpha_hat = Some(blend(self.alpha_hat, alpha, beta));
+            }
+            self.intervals += 1;
+        }
+        self.int_rounds = 0;
+        self.int_seq_rounds = 0;
+        self.int_accepted = 0;
+        self.int_emitted = 0;
+    }
+
+    fn consult(&mut self, batch: usize, round: u64, regime_shift: bool) {
+        let est = Estimates {
+            batch: batch.max(1),
+            alpha: self.alpha_hat,
+            sigma: self.sigma_hat,
+            current_gamma: self.gamma,
+            regime_shift,
+            costs: &self.costs,
+        };
+        let decision = self.policy.decide(&est);
+        match decision.kind {
+            DecisionKind::Probe => self.probes += 1,
+            DecisionKind::Switch if decision.gamma != self.gamma => self.switches += 1,
+            _ => {}
+        }
+        if decision.gamma != self.gamma {
+            self.gamma = decision.gamma;
+            // Ring semantics: keep the most recent HISTORY_CAP switches.
+            if self.history.len() == HISTORY_CAP {
+                self.history.remove(0);
+            }
+            self.history.push((round, decision.gamma));
+        }
+    }
+
+    /// Measured round economics at the current γ: `(round_time,
+    /// reference_batch, round_len)`. The reference batch is the *actual*
+    /// batch the engine has been running (not its power-of-two bucket) —
+    /// the cost EWMAs track recent rounds, which ran at ≈ `last_batch`
+    /// sequences, so attributing them to the bucket top would understate
+    /// TPOT by up to 2× and over-admit against the SLO.
+    fn round_economics(&self) -> Option<(f64, usize, f64)> {
+        let gamma = self.gamma;
+        let bucket = bucket_of(self.last_batch);
+        let (b0, t_verify) = match self.costs.verify_nearest(bucket, gamma + 1) {
+            Some((_, t)) => (self.last_batch, t),
+            None => match self.costs.busiest_verify() {
+                Some((b, _, t)) => (b, t),
+                None => return None,
+            },
+        };
+        let b0 = b0.max(1);
+        let t_draft = gamma as f64
+            * self
+                .costs
+                .draft_per_forward(bucket_of(b0))
+                .unwrap_or(0.0);
+        let t_rej = self.costs.reject_per_row().unwrap_or(0.0) * (b0 * (gamma + 1)) as f64;
+        let round_len = if gamma == 0 {
+            1.0
+        } else {
+            // Derive σ for the *current* γ from the γ-invariant α̂ (σ̂ is
+            // an observability value tied to whatever γ it was measured
+            // at, so it cannot be used across γ regimes directly).
+            let alpha = self.alpha_hat.unwrap_or(self.cfg.alpha_prior);
+            theory::expected_round_length(alpha, gamma)
+        };
+        Some((t_verify + t_draft + t_rej, b0, round_len))
+    }
+
+    /// Predicted seconds/token at batch size `b` from the measured round
+    /// economics (linearly scaled from the reference batch — the same
+    /// conservative rule the engine's built-in SLO estimator uses).
+    pub fn est_tpot(&self, b: usize) -> f64 {
+        match self.round_economics() {
+            None => 0.0,
+            Some((round, b0, round_len)) => {
+                let scale = (b as f64 / b0 as f64).max(0.25);
+                round * scale / round_len.max(1e-9)
+            }
+        }
+    }
+
+    /// Controller-driven batch ceiling for the scheduler. Without a TPOT
+    /// SLO this is just `max_batch`; with one, the measured economics feed
+    /// the scheduler's ceiling search. Before any data exists a small
+    /// pilot batch is admitted so the estimators can observe something.
+    pub fn batch_ceiling(&self, scheduler: &Scheduler) -> usize {
+        let max = scheduler.config.max_batch;
+        if scheduler.config.tpot_slo.is_none() || max == 0 {
+            return max;
+        }
+        // Hoist the b-independent economics out of the ceiling search so
+        // the per-candidate closure is pure arithmetic (the search runs
+        // every admit call).
+        match self.round_economics() {
+            None => 4.min(max),
+            Some((round, b0, round_len)) => scheduler.batch_ceiling(|b| {
+                let scale = (b as f64 / b0 as f64).max(0.25);
+                round * scale / round_len.max(1e-9)
+            }),
+        }
+    }
+
+    pub fn state(&self) -> ControllerState {
+        ControllerState {
+            policy: self.policy.name().to_string(),
+            gamma: self.gamma,
+            alpha_hat: self.alpha_hat,
+            sigma_hat: self.sigma_hat,
+            intervals: self.intervals,
+            switches: self.switches,
+            probes: self.probes,
+            target_efficiency: self.costs.target_efficiency_by_bucket(),
+            history: self.history.clone(),
+        }
+    }
+}
+
+fn blend(prev: Option<f64>, x: f64, beta: f64) -> f64 {
+    match prev {
+        None => x,
+        Some(p) => beta * x + (1.0 - beta) * p,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::hardware::platform_2x_gpu_a;
+    use crate::scheduler::{Scheduler, SchedulerConfig};
+    use crate::util::rng::Rng;
+
+    fn roofline_spec() -> CostModelSpec {
+        let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+        let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+        CostModelSpec::roofline(target, draft)
+    }
+
+    /// Simulate the acceptance outcome of one sequence-round: Bernoulli(α)
+    /// chain truncation, exactly what the engine's rejection sampler does
+    /// against the synthetic backend.
+    fn sim_round(rng: &mut Rng, alpha: f64, gamma: usize, batch: usize) -> (u64, u64) {
+        let mut accepted = 0u64;
+        for _ in 0..batch {
+            for _ in 0..gamma {
+                if rng.bernoulli(alpha) {
+                    accepted += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+        (accepted, accepted + batch as u64)
+    }
+
+    fn observe_rounds(
+        ctl: &mut SpecController,
+        rng: &mut Rng,
+        alpha: f64,
+        gamma: usize,
+        batch: usize,
+        rounds: usize,
+    ) {
+        for r in 0..rounds {
+            let (accepted, emitted) = sim_round(rng, alpha, gamma, batch);
+            ctl.observe(RoundObservation {
+                round: r as u64,
+                batch,
+                gamma,
+                proposed: (batch * gamma) as u64,
+                accepted,
+                emitted,
+                t_draft: 0.001 * gamma as f64,
+                t_verify: 0.01,
+                t_reject: 1e-4,
+            });
+        }
+    }
+
+    #[test]
+    fn bucket_and_ewma_basics() {
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(3), 4);
+        assert_eq!(bucket_of(32), 32);
+        assert_eq!(bucket_of(33), 64);
+        let mut e = Ewma::default();
+        assert_eq!(e.get(), None);
+        e.update(10.0);
+        assert_eq!(e.get(), Some(10.0));
+        e.update(0.0);
+        let v = e.get().unwrap();
+        assert!(v < 10.0 && v > 0.0);
+        assert_eq!(e.samples(), 2);
+    }
+
+    #[test]
+    fn cost_table_records_and_measures_target_efficiency() {
+        let mut t = CostTable::default();
+        assert!(t.is_empty());
+        let mk = |gamma: usize, t_verify: f64| RoundObservation {
+            round: 0,
+            batch: 16,
+            gamma,
+            proposed: 0,
+            accepted: 0,
+            emitted: 16,
+            t_draft: 0.004,
+            t_verify,
+            t_reject: 1e-4,
+        };
+        for _ in 0..5 {
+            t.observe(&mk(0, 0.010)); // AR rounds: s = 1
+            t.observe(&mk(3, 0.012)); // SD rounds: s = 4
+        }
+        assert!(!t.is_empty());
+        assert!(t.verify_time(16, 1).is_some());
+        assert!(t.verify_time(16, 4).is_some());
+        let (s, teff) = t.measured_target_efficiency(16).unwrap();
+        assert_eq!(s, 4);
+        assert!((teff - 0.010 / 0.012).abs() < 1e-6, "teff={teff}");
+        let all = t.target_efficiency_by_bucket();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].0, 16);
+        // Nearest-s lookup prefers the closest width.
+        assert_eq!(t.verify_nearest(16, 4).unwrap().0, 4);
+        assert_eq!(t.verify_nearest(16, 1).unwrap().0, 1);
+        assert!(t.verify_nearest(8, 1).is_none());
+        assert!(t.draft_per_forward(16).is_some());
+        assert!(t.reject_per_row().is_some());
+    }
+
+    #[test]
+    fn sigma_window_converges_to_true_alpha() {
+        // Satellite requirement: σ-window convergence. Feed simulated
+        // rounds at a known α and check α̂ and σ̂ converge.
+        for &alpha in &[0.5, 0.8, 0.95] {
+            let gamma = 3;
+            let mut ctl = SpecController::new(ControlConfig::static_gamma(gamma));
+            let mut rng = Rng::seeded(42);
+            observe_rounds(&mut ctl, &mut rng, alpha, gamma, 16, 400);
+            let a = ctl.alpha_hat().expect("alpha estimated");
+            assert!((a - alpha).abs() < 0.05, "α̂={a} vs α={alpha}");
+            let s = ctl.sigma_hat().expect("sigma estimated");
+            let want = theory::sigma_from_alpha(alpha, gamma);
+            assert!((s - want).abs() < 0.05, "σ̂={s} vs Eq.5 {want}");
+            assert!(ctl.state().intervals > 0);
+        }
+    }
+
+    #[test]
+    fn static_policy_never_moves_gamma() {
+        let mut ctl = SpecController::new(ControlConfig::static_gamma(5));
+        assert_eq!(ctl.gamma_for_round(8), 5);
+        let mut rng = Rng::seeded(1);
+        observe_rounds(&mut ctl, &mut rng, 0.3, 5, 8, 100);
+        assert_eq!(ctl.gamma(), 5);
+        assert_eq!(ctl.state().switches, 0);
+    }
+
+    #[test]
+    fn model_guided_bootstraps_speculative_at_small_batch() {
+        let mut ctl = SpecController::new(ControlConfig::model_guided(roofline_spec()));
+        // At B=1 the MoE target is totally memory-bound: SD should win the
+        // bootstrap consult with the default α prior.
+        let g = ctl.gamma_for_round(1);
+        assert!(g >= 1, "expected speculative bootstrap at B=1, got γ={g}");
+    }
+
+    #[test]
+    fn interval_flushes_when_gamma_changes_midstream() {
+        let mut ctl = SpecController::new(ControlConfig {
+            interval_seq_rounds: 10_000, // interval would normally stay open
+            ..ControlConfig::static_gamma(2)
+        });
+        let mut rng = Rng::seeded(3);
+        observe_rounds(&mut ctl, &mut rng, 0.9, 2, 4, 10);
+        assert_eq!(ctl.state().intervals, 0); // interval still open
+        observe_rounds(&mut ctl, &mut rng, 0.9, 3, 4, 1); // γ changed
+        assert_eq!(ctl.state().intervals, 1, "partial interval must flush");
+    }
+
+    #[test]
+    fn bucket_shift_triggers_immediate_reconsult() {
+        // Model-guided at a small batch picks a speculative γ; when the
+        // load jumps to a compute-bound batch the very next round must
+        // already run the re-seated γ (no interval/hysteresis lag).
+        let mut ctl = SpecController::new(ControlConfig::model_guided(roofline_spec()));
+        let g_small = ctl.gamma_for_round(4);
+        assert!(g_small >= 1, "γ={g_small}");
+        let g_huge = ctl.gamma_for_round(4096);
+        assert_eq!(g_huge, 0, "bucket shift must re-seat γ to AR instantly");
+        // And back: the small-batch regime re-enables speculation.
+        let g_back = ctl.gamma_for_round(4);
+        assert!(g_back >= 1, "γ={g_back}");
+    }
+
+    #[test]
+    fn batch_ceiling_pilot_then_slo_bound() {
+        let cfg = ControlConfig::static_gamma(3);
+        let mut ctl = SpecController::new(cfg);
+        let sched = Scheduler::new(SchedulerConfig {
+            max_batch: 64,
+            admit_reserve_tokens: 0,
+            tpot_slo: Some(0.02),
+        });
+        // No data yet: pilot batch.
+        assert_eq!(ctl.batch_ceiling(&sched), 4);
+        // Feed rounds at B=16 where TPOT is comfortably inside the SLO.
+        let mut rng = Rng::seeded(9);
+        observe_rounds(&mut ctl, &mut rng, 0.9, 3, 16, 50);
+        let c = ctl.batch_ceiling(&sched);
+        assert!(c >= 16, "SLO should allow at least the observed batch: {c}");
+        // A much tighter SLO must clamp the ceiling down.
+        let tight = Scheduler::new(SchedulerConfig {
+            max_batch: 64,
+            admit_reserve_tokens: 0,
+            tpot_slo: Some(1e-5),
+        });
+        assert!(ctl.batch_ceiling(&tight) < c);
+        // No SLO: ceiling is max_batch regardless of data.
+        let free = Scheduler::new(SchedulerConfig {
+            max_batch: 64,
+            admit_reserve_tokens: 0,
+            tpot_slo: None,
+        });
+        assert_eq!(ctl.batch_ceiling(&free), 64);
+    }
+
+    #[test]
+    fn state_renders_to_json() {
+        let mut ctl = SpecController::new(ControlConfig::static_gamma(2));
+        let mut rng = Rng::seeded(5);
+        observe_rounds(&mut ctl, &mut rng, 0.8, 2, 8, 20);
+        let s = ctl.state();
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"policy\""));
+        assert!(j.contains("\"gamma\""));
+        assert!(j.contains("\"alpha_hat\""));
+        assert!(j.contains("\"target_efficiency\""));
+    }
+}

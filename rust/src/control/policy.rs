@@ -1,0 +1,431 @@
+//! γ-selection policies behind the [`GammaPolicy`] trait.
+//!
+//! [`StaticPolicy`] pins γ (the launch-config baseline every current
+//! serving stack uses). [`ModelGuidedPolicy`] re-solves the paper's Eq. 4
+//! speedup decomposition each control interval with the *measured* α̂
+//! plugged into σ(α, γ) (Eq. 5), over an analytic cost model rescaled by
+//! the measured cost table — and selects the argmax γ, including the γ=0
+//! autoregressive fallback for regimes where SD loses (large compute-bound
+//! batches, §3.1's collapsing target efficiency).
+
+use super::{bucket_of, ControlConfig, CostModel, CostModelSpec, CostTable};
+use crate::theory;
+use crate::util::stats::argmax;
+
+/// Inputs to a policy decision: the controller's current online estimates.
+pub struct Estimates<'a> {
+    /// Decode batch size of the closing round.
+    pub batch: usize,
+    /// Windowed per-token acceptance estimate (None before any SD round).
+    pub alpha: Option<f64>,
+    /// Windowed σ estimate.
+    pub sigma: Option<f64>,
+    /// γ currently in effect.
+    pub current_gamma: usize,
+    /// The batch bucket just changed (load shift): the decision should be
+    /// taken fresh, without hysteresis/dwell damping — those guards exist
+    /// to absorb estimator noise, not real regime changes.
+    pub regime_shift: bool,
+    /// Measured per-stage costs.
+    pub costs: &'a CostTable,
+}
+
+/// How a decision came about (observability + probe bookkeeping).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionKind {
+    /// Keep the current γ.
+    Hold,
+    /// Move to a better γ.
+    Switch,
+    /// Temporary speculative interval to refresh α̂ while in AR fallback.
+    Probe,
+}
+
+/// A policy's output for the next control interval.
+#[derive(Debug, Clone, Copy)]
+pub struct GammaDecision {
+    pub gamma: usize,
+    pub kind: DecisionKind,
+}
+
+/// A γ-selection policy consulted once per control interval.
+pub trait GammaPolicy: Send {
+    fn name(&self) -> &'static str;
+    fn decide(&mut self, est: &Estimates) -> GammaDecision;
+}
+
+/// Fixed γ — the baseline against which adaptation is measured.
+pub struct StaticPolicy {
+    pub gamma: usize,
+}
+
+impl GammaPolicy for StaticPolicy {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn decide(&mut self, _est: &Estimates) -> GammaDecision {
+        GammaDecision {
+            gamma: self.gamma,
+            kind: DecisionKind::Hold,
+        }
+    }
+}
+
+/// Eq. 4 argmax-γ with measured-cost grounding, hysteresis, dwell time and
+/// AR-fallback probing.
+pub struct ModelGuidedPolicy {
+    cost: CostModelSpec,
+    gamma_max: usize,
+    hysteresis: f64,
+    min_dwell: usize,
+    probe_every: usize,
+    alpha_prior: f64,
+    intervals_since_switch: usize,
+    intervals_at_ar: usize,
+    probing: bool,
+}
+
+impl ModelGuidedPolicy {
+    pub fn new(cost: CostModelSpec, cfg: &ControlConfig) -> ModelGuidedPolicy {
+        assert!(cfg.gamma_max >= 1, "model-guided policy needs gamma_max >= 1");
+        ModelGuidedPolicy {
+            cost,
+            gamma_max: cfg.gamma_max,
+            hysteresis: cfg.hysteresis,
+            min_dwell: cfg.min_dwell_intervals,
+            probe_every: cfg.probe_every_intervals,
+            alpha_prior: cfg.alpha_prior,
+            // Large initial dwell so the bootstrap decision is unhindered.
+            intervals_since_switch: usize::MAX / 2,
+            intervals_at_ar: 0,
+            probing: false,
+        }
+    }
+
+    /// Predicted committed tokens/second per sequence at (B, γ): the Eq. 4
+    /// round economics, σ(α̂, γ)·(γ+1) over the round time. Model costs are
+    /// re-anchored by measured entries where the cost table has them, so
+    /// the s-shape comes from the model but the absolute levels track
+    /// production reality.
+    pub fn score(&self, batch: usize, gamma: usize, alpha: f64, costs: &CostTable) -> f64 {
+        let b = batch.max(1);
+        let bucket = bucket_of(b);
+        let model_verify = self.cost.t_target(b, gamma + 1);
+        let verify = match costs.verify_nearest(bucket, gamma + 1) {
+            Some((s_obs, measured)) => {
+                let model_at_obs = self.cost.t_target(b, s_obs);
+                if model_at_obs > 0.0 {
+                    model_verify * (measured / model_at_obs)
+                } else {
+                    model_verify
+                }
+            }
+            None => model_verify,
+        };
+        let draft1 = match costs.draft_per_forward(bucket) {
+            Some(measured) => measured,
+            None => self.cost.t_draft(b),
+        };
+        let reject = match costs.reject_per_row() {
+            Some(per_row) => per_row * (b * (gamma + 1)) as f64,
+            None => self.cost.t_reject(b, gamma),
+        };
+        let round_len = theory::expected_round_length(alpha, gamma);
+        round_len / (gamma as f64 * draft1 + verify + reject).max(1e-300)
+    }
+
+    fn scores(&self, batch: usize, alpha: f64, costs: &CostTable) -> Vec<f64> {
+        (0..=self.gamma_max)
+            .map(|g| self.score(batch, g, alpha, costs))
+            .collect()
+    }
+}
+
+impl GammaPolicy for ModelGuidedPolicy {
+    fn name(&self) -> &'static str {
+        "model-guided"
+    }
+
+    fn decide(&mut self, est: &Estimates) -> GammaDecision {
+        let alpha = est.alpha.unwrap_or(self.alpha_prior);
+        let scores = self.scores(est.batch, alpha, est.costs);
+        let best = argmax(&scores);
+        let cur = est.current_gamma.min(self.gamma_max);
+
+        // A probe interval just ended, or the load regime shifted:
+        // re-decide unguarded so a failed probe drops straight back to AR
+        // and a batch jump re-seats γ before paying a single stale round.
+        if self.probing || est.regime_shift {
+            self.probing = false;
+            self.intervals_since_switch = 0;
+            if best > 0 {
+                self.intervals_at_ar = 0;
+            }
+            let kind = if best == cur {
+                DecisionKind::Hold
+            } else {
+                DecisionKind::Switch
+            };
+            return GammaDecision { gamma: best, kind };
+        }
+
+        if cur == 0 {
+            self.intervals_at_ar += 1;
+            // The AR fallback produces no acceptance signal, so α̂ goes
+            // stale; periodically spend one interval on the best
+            // speculative γ to refresh it (and to notice regime shifts).
+            if self.probe_every > 0 && best == 0 && self.intervals_at_ar >= self.probe_every {
+                self.intervals_at_ar = 0;
+                self.probing = true;
+                let spec = 1 + argmax(&scores[1..]);
+                return GammaDecision {
+                    gamma: spec,
+                    kind: DecisionKind::Probe,
+                };
+            }
+        } else {
+            self.intervals_at_ar = 0;
+        }
+
+        self.intervals_since_switch = self.intervals_since_switch.saturating_add(1);
+        if best == cur {
+            return GammaDecision {
+                gamma: cur,
+                kind: DecisionKind::Hold,
+            };
+        }
+        // Dwell: don't even consider switching right after a switch.
+        if self.intervals_since_switch <= self.min_dwell {
+            return GammaDecision {
+                gamma: cur,
+                kind: DecisionKind::Hold,
+            };
+        }
+        // Hysteresis: the candidate must beat the incumbent by a margin.
+        if scores[best] < scores[cur] * (1.0 + self.hysteresis) {
+            return GammaDecision {
+                gamma: cur,
+                kind: DecisionKind::Hold,
+            };
+        }
+        self.intervals_since_switch = 0;
+        GammaDecision {
+            gamma: best,
+            kind: DecisionKind::Switch,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::hardware::platform_2x_gpu_a;
+    use crate::perfmodel::PerfParams;
+    use crate::simulator::ExecSim;
+
+    fn roofline_spec() -> CostModelSpec {
+        let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+        let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+        CostModelSpec::roofline(target, draft)
+    }
+
+    fn perf_spec() -> CostModelSpec {
+        // The perfmodel's demo-scale parameters (same orders as its tests).
+        CostModelSpec::perf(
+            platform_2x_gpu_a().ridge_point(),
+            PerfParams {
+                bias: 0.02,
+                k1: 1e-4,
+                k2: 2e-4,
+                k3: 5e-4,
+                draft_bias: 0.001,
+                draft_k: 1e-5,
+                reject_bias: 1e-4,
+                reject_k: 1e-7,
+                lambda: 0.5,
+                s: 1.02,
+            },
+            8,
+            64,
+        )
+    }
+
+    fn policy(cost: CostModelSpec, hysteresis: f64, dwell: usize) -> ModelGuidedPolicy {
+        let cfg = ControlConfig {
+            hysteresis,
+            min_dwell_intervals: dwell,
+            probe_every_intervals: 0,
+            ..ControlConfig::model_guided(cost.clone())
+        };
+        ModelGuidedPolicy::new(cost, &cfg)
+    }
+
+    fn est<'a>(batch: usize, alpha: f64, cur: usize, costs: &'a CostTable) -> Estimates<'a> {
+        Estimates {
+            batch,
+            alpha: Some(alpha),
+            sigma: None,
+            current_gamma: cur,
+            regime_shift: false,
+            costs,
+        }
+    }
+
+    #[test]
+    fn static_policy_is_constant() {
+        let mut p = StaticPolicy { gamma: 4 };
+        let costs = CostTable::default();
+        for b in [1usize, 64, 512] {
+            let d = p.decide(&est(b, 0.1, 4, &costs));
+            assert_eq!(d.gamma, 4);
+            assert_eq!(d.kind, DecisionKind::Hold);
+        }
+    }
+
+    #[test]
+    fn speculative_wins_small_batch_ar_wins_compute_bound() {
+        // The paper's core trade-off reproduced by the policy scores: at
+        // B=4 (memory-bound) SD wins big; at B=4096 (compute-bound) the
+        // verify step costs ≈(γ+1)×, so γ=0 is optimal for any α<1.
+        for spec in [roofline_spec(), perf_spec()] {
+            let p = policy(spec, 0.05, 0);
+            let costs = CostTable::default();
+            let small: Vec<f64> = (0..=8).map(|g| p.score(4, g, 0.9, &costs)).collect();
+            assert!(argmax(&small) >= 1, "SD should win at B=4: {small:?}");
+            let huge: Vec<f64> = (0..=8).map(|g| p.score(4096, g, 0.6, &costs)).collect();
+            assert_eq!(argmax(&huge), 0, "AR should win at B=4096: {huge:?}");
+        }
+    }
+
+    #[test]
+    fn gamma0_fallback_when_target_efficiency_collapses() {
+        // Satellite requirement: the γ=0 fallback at large B. Even with a
+        // decent α the model-guided policy must fall back to AR.
+        let mut p = policy(roofline_spec(), 0.05, 0);
+        let costs = CostTable::default();
+        let d = p.decide(&est(4096, 0.8, 4, &costs));
+        assert_eq!(d.gamma, 0, "expected AR fallback at B=4096");
+        assert_eq!(d.kind, DecisionKind::Switch);
+    }
+
+    #[test]
+    fn hysteresis_prevents_oscillation_under_noisy_alpha() {
+        // Find an α where the argmax γ sits on a decision boundary, then
+        // feed the policy alternating α̂ on either side of it. With
+        // hysteresis + dwell the γ trace must not thrash; without them it
+        // flips continuously.
+        let probe = policy(roofline_spec(), 0.0, 0);
+        let costs = CostTable::default();
+        let batch = 48;
+        let argmax_at = |a: f64| {
+            argmax(
+                &(0..=8)
+                    .map(|g| probe.score(batch, g, a, &costs))
+                    .collect::<Vec<_>>(),
+            )
+        };
+        let mut boundary = None;
+        let mut a = 0.30;
+        while a < 0.98 {
+            if argmax_at(a) != argmax_at(a + 0.02) {
+                boundary = Some(a);
+                break;
+            }
+            a += 0.02;
+        }
+        let a = boundary.expect("no γ decision boundary found in α ∈ [0.3, 0.98]");
+        let (lo, hi) = (a, a + 0.02);
+
+        let run = |mut p: ModelGuidedPolicy| -> usize {
+            let mut switches = 0;
+            let mut cur = argmax_at(lo);
+            for i in 0..40 {
+                let alpha = if i % 2 == 0 { lo } else { hi };
+                let d = p.decide(&est(batch, alpha, cur, &costs));
+                if d.gamma != cur {
+                    switches += 1;
+                    cur = d.gamma;
+                }
+            }
+            switches
+        };
+
+        let guarded = run(policy(roofline_spec(), 0.15, 3));
+        let naive = run(policy(roofline_spec(), 0.0, 0));
+        assert!(guarded <= 2, "hysteresis should damp switching: {guarded}");
+        assert!(
+            naive > guarded,
+            "without hysteresis the policy should thrash more: naive={naive} guarded={guarded}"
+        );
+    }
+
+    #[test]
+    fn probe_cycle_refreshes_ar_fallback() {
+        let cfg = ControlConfig {
+            probe_every_intervals: 3,
+            ..ControlConfig::model_guided(roofline_spec())
+        };
+        let mut p = ModelGuidedPolicy::new(roofline_spec(), &cfg);
+        let costs = CostTable::default();
+        // Park the policy in AR (B=4096 keeps best = 0).
+        let mut cur = 0usize;
+        let mut probes = 0;
+        let mut trace = Vec::new();
+        for _ in 0..12 {
+            let d = p.decide(&est(4096, 0.6, cur, &costs));
+            if d.kind == DecisionKind::Probe {
+                probes += 1;
+                assert!(d.gamma >= 1, "probe must be speculative");
+            }
+            cur = d.gamma;
+            trace.push(cur);
+        }
+        assert!(probes >= 2, "expected periodic probes, trace={trace:?}");
+        // Every probe must return to AR on the very next decision.
+        for w in trace.windows(2) {
+            if w[0] >= 1 {
+                assert_eq!(w[1], 0, "probe should fall back immediately: {trace:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn measured_costs_reanchor_the_model() {
+        let p = policy(roofline_spec(), 0.05, 0);
+        let mut costs = CostTable::default();
+        let base = p.score(16, 3, 0.9, &costs);
+        // Report a verify cost 10× the model's prediction at (16, s=4):
+        // the score must drop far below the pure-model value.
+        let model_verify = p.cost.t_target(16, 4);
+        costs.observe(&super::super::RoundObservation {
+            round: 0,
+            batch: 16,
+            gamma: 3,
+            proposed: 48,
+            accepted: 40,
+            emitted: 56,
+            t_draft: 0.0,
+            t_verify: 10.0 * model_verify,
+            t_reject: 0.0,
+        });
+        let grounded = p.score(16, 3, 0.9, &costs);
+        assert!(
+            grounded < 0.5 * base,
+            "measured verify cost should pull the score down: {grounded} vs {base}"
+        );
+    }
+
+    #[test]
+    fn perf_spec_scores_are_finite_and_peak_interior() {
+        let p = policy(perf_spec(), 0.05, 0);
+        let costs = CostTable::default();
+        for b in [1usize, 8, 64, 512] {
+            for g in 0..=8usize {
+                let s = p.score(b, g, 0.85, &costs);
+                assert!(s.is_finite() && s > 0.0, "score(B={b}, γ={g}) = {s}");
+            }
+        }
+    }
+}

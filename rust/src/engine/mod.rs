@@ -20,6 +20,7 @@
 //! AR and SD share scheduler/batcher/sampler code paths.
 
 use crate::batching::{Buckets, Completion, Request, RequestQueue, SamplingParams};
+use crate::control::{ControlConfig, ControllerState, RoundObservation, SpecController};
 use crate::kvcache::{KvConfig, KvManager, SeqId};
 use crate::metrics::{Counters, EngineMetrics};
 use crate::sampling::verify_chain;
@@ -30,7 +31,9 @@ use crate::util::rng::Rng;
 /// Engine configuration (the "launcher config" surface).
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
-    /// Draft length γ; 0 = autoregressive baseline.
+    /// Draft length γ; 0 = autoregressive baseline. When a controller is
+    /// configured this is only the pre-bootstrap value — the control plane
+    /// owns γ from the first round on.
     pub gamma: usize,
     pub kv: KvConfig,
     pub scheduler: SchedulerConfig,
@@ -38,6 +41,9 @@ pub struct EngineConfig {
     /// backend; binding for the HLO backend, which pads to these).
     pub buckets: Buckets,
     pub seed: u64,
+    /// Optional adaptive speculation controller (γ / batch-ceiling
+    /// co-tuning from measured target efficiency; see [`crate::control`]).
+    pub control: Option<ControlConfig>,
 }
 
 impl Default for EngineConfig {
@@ -51,6 +57,7 @@ impl Default for EngineConfig {
             scheduler: SchedulerConfig::default(),
             buckets: Buckets::pow2_up_to(64),
             seed: 0,
+            control: None,
         }
     }
 }
@@ -84,6 +91,7 @@ pub struct Engine<B: SdBackend> {
     queue: RequestQueue,
     scheduler: Scheduler,
     running: Vec<RunningSeq>,
+    controller: Option<SpecController>,
     pub metrics: EngineMetrics,
     pub counters: Counters,
     clock: f64,
@@ -97,6 +105,7 @@ impl<B: SdBackend> Engine<B> {
         let scheduler = Scheduler::new(config.scheduler.clone());
         let rng = Rng::new(config.seed, 0x5d);
         let queue = RequestQueue::new();
+        let controller = config.control.clone().map(SpecController::new);
         Engine {
             config,
             backend,
@@ -104,6 +113,7 @@ impl<B: SdBackend> Engine<B> {
             queue,
             scheduler,
             running: Vec::new(),
+            controller,
             metrics: EngineMetrics::default(),
             counters: Counters::default(),
             clock: 0.0,
@@ -138,6 +148,22 @@ impl<B: SdBackend> Engine<B> {
         &self.kv
     }
 
+    /// γ that would apply to the next round (controller-owned if present).
+    pub fn current_gamma(&self) -> usize {
+        self.controller
+            .as_ref()
+            .map_or(self.config.gamma, |c| c.gamma())
+    }
+
+    pub fn controller(&self) -> Option<&SpecController> {
+        self.controller.as_ref()
+    }
+
+    /// Snapshot of the adaptive controller (None without one).
+    pub fn controller_state(&self) -> Option<ControllerState> {
+        self.controller.as_ref().map(|c| c.state())
+    }
+
     /// Whether any work remains.
     pub fn is_idle(&self) -> bool {
         self.running.is_empty() && self.queue.is_empty()
@@ -165,7 +191,14 @@ impl<B: SdBackend> Engine<B> {
             return Ok(completions);
         }
 
-        let gamma = self.config.gamma;
+        // The control plane owns γ when configured: it re-decides on batch
+        // regime shifts and control-interval boundaries, so this is a
+        // cheap lookup on the hot path.
+        let running_now = self.running.len();
+        let gamma = match self.controller.as_mut() {
+            Some(ctl) => ctl.gamma_for_round(running_now),
+            None => self.config.gamma,
+        };
 
         // --- capacity reservation: γ+1 tokens per sequence ------------------
         // Sequences that don't fit are preempted (released + requeued) so the
@@ -217,11 +250,13 @@ impl<B: SdBackend> Engine<B> {
         } else {
             Ok(None)
         };
+        let mut round_draft_cost = 0.0;
         let (draft_tokens, draft_probs) = match propose_result {
             Ok(Some(out)) => {
                 self.clock += out.cost;
                 self.metrics.time_draft += out.cost;
                 self.metrics.draft_tokens_proposed += (b * gamma) as u64;
+                round_draft_cost = out.cost;
                 (out.tokens, out.probs)
             }
             Ok(None) => (vec![Vec::new(); b], vec![Vec::new(); b]),
@@ -248,6 +283,8 @@ impl<B: SdBackend> Engine<B> {
         self.metrics.time_reject += rcost;
 
         let mut finished_idx: Vec<usize> = Vec::new();
+        let mut round_accepted: u64 = 0;
+        let mut round_emitted: u64 = 0;
         for (i, seq) in self.running.iter_mut().enumerate() {
             let outcome = verify_chain(
                 &draft_tokens[i],
@@ -256,6 +293,8 @@ impl<B: SdBackend> Engine<B> {
                 &mut self.rng,
             );
             self.metrics.draft_tokens_accepted += outcome.accepted as u64;
+            round_accepted += outcome.accepted as u64;
+            round_emitted += outcome.tokens.len() as u64;
             seq.rounds += 1;
 
             if seq.first_token_at.is_none() {
@@ -295,6 +334,21 @@ impl<B: SdBackend> Engine<B> {
             if done {
                 finished_idx.push(i);
             }
+        }
+
+        // Close the control loop: report what this round measured.
+        if let Some(ctl) = self.controller.as_mut() {
+            ctl.observe(RoundObservation {
+                round: self.round_counter,
+                batch: b,
+                gamma,
+                proposed: (b * gamma) as u64,
+                accepted: round_accepted,
+                emitted: round_emitted,
+                t_draft: round_draft_cost,
+                t_verify: verify.cost,
+                t_reject: rcost,
+            });
         }
 
         // Retire finished sequences (descending index for stable removal).
@@ -339,9 +393,16 @@ impl<B: SdBackend> Engine<B> {
 
     /// Admit waiting requests whose arrival time has come.
     fn admit(&mut self) -> anyhow::Result<()> {
-        // SLO-aware batch ceiling (§3.4 latency-critical serving): estimate
-        // TPOT(b) from observed round economics, assuming round time scales
-        // linearly with batch size in the compute-bound direction.
+        // With a controller, the ceiling comes from its measured cost
+        // table (γ-aware round economics). Otherwise the built-in SLO
+        // estimator below applies (§3.4 latency-critical serving):
+        // estimate TPOT(b) from observed round economics, assuming round
+        // time scales linearly with batch size in the compute-bound
+        // direction.
+        if let Some(ctl) = self.controller.as_ref() {
+            let ceiling = ctl.batch_ceiling(&self.scheduler);
+            return self.admit_with_ceiling(ceiling);
+        }
         let ceiling = match self.scheduler.config.tpot_slo {
             // No round economics observed yet: admit a small pilot batch
             // so the estimator has data before committing to a large one.
@@ -357,6 +418,10 @@ impl<B: SdBackend> Engine<B> {
             }
             _ => self.scheduler.config.max_batch,
         };
+        self.admit_with_ceiling(ceiling)
+    }
+
+    fn admit_with_ceiling(&mut self, ceiling: usize) -> anyhow::Result<()> {
         let admitted = self.scheduler.admit(
             &mut self.queue,
             &self.kv,
@@ -616,6 +681,35 @@ mod tests {
         assert_eq!(done.len(), 2);
         // Request 2 must have joined the running batch (batch of 2 seen).
         assert!(e.metrics.mean_batch() > 1.0);
+    }
+
+    #[test]
+    fn adaptive_controller_drives_gamma_and_stays_lossless() {
+        use crate::control::{ControlConfig, CostModelSpec};
+        let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+        let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+        let config = EngineConfig {
+            gamma: 0, // the controller owns γ from round 0
+            control: Some(ControlConfig::model_guided(CostModelSpec::roofline(
+                target, draft,
+            ))),
+            ..Default::default()
+        };
+        let mut e = Engine::new(config, synthetic(0.9, 11));
+        for id in 0..4 {
+            e.submit(req(id, 6, 24, 0.0));
+        }
+        let done = e.run_to_completion(1000).unwrap();
+        assert_eq!(done.len(), 4);
+        // Losslessness holds under adaptive γ: the emitted chains are
+        // exactly what the target would have produced autoregressively.
+        for c in &done {
+            assert_eq!(c.tokens, e.backend().expected_chain(c.id, 6, 24));
+        }
+        let st = e.controller_state().unwrap();
+        assert!(st.gamma >= 1, "small-batch adaptive should speculate: {st:?}");
+        assert!(e.metrics.draft_tokens_proposed > 0);
+        assert_eq!(e.current_gamma(), st.gamma);
     }
 
     #[test]

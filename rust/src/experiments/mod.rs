@@ -12,6 +12,7 @@
 //! clock, exactly how the paper measures T_AR / T_SD on vLLM.
 
 pub mod ablations;
+pub mod adaptive;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
@@ -104,6 +105,7 @@ fn build_engine(
         },
         buckets: Buckets::pow2_up_to(batch.max(1)),
         seed: opts.seed,
+        control: None,
     };
     Engine::new(config, backend)
 }

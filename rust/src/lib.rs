@@ -11,8 +11,10 @@
 //!
 //! Layer map:
 //! - **L3 (this crate)** — request router, continuous batcher, paged KV cache,
-//!   speculative-decoding scheduler, metrics, the roofline GPU simulator and
-//!   the paper's analytic speedup model + fitting.
+//!   speculative-decoding scheduler, the adaptive speculation control plane
+//!   ([`control`]: online γ / batch-ceiling co-tuning from measured target
+//!   efficiency), metrics, the roofline GPU simulator and the paper's
+//!   analytic speedup model + fitting.
 //! - **L2 (python/compile/model.py)** — the JAX MoE transformer, AOT-lowered
 //!   to HLO text loaded by [`runtime`].
 //! - **L1 (python/compile/kernels/)** — Pallas MoE-FFN / decode-attention
@@ -22,6 +24,7 @@ pub mod arch;
 pub mod batching;
 pub mod benchlib;
 pub mod config;
+pub mod control;
 pub mod engine;
 pub mod experiments;
 pub mod fit;

@@ -24,7 +24,7 @@ use moesd::workload::{calibrated_alpha, Dataset};
 use std::path::Path;
 
 fn main() {
-    let args = Args::from_env(&["verbose", "help"]);
+    let args = Args::from_env(&["verbose", "help", "adaptive"]);
     if args.flag("verbose") {
         logging::set_level(logging::Level::Debug);
     }
@@ -51,8 +51,8 @@ fn print_help() {
          \n\
          USAGE: moesd <serve|bench|fit|selfcheck|list> [options]\n\
          \n\
-         serve     --mode synthetic|hlo --port N --gamma N [--config file.json]\n\
-         bench     <fig1|fig2|fig3|fig4|fig5|fig6|table1|table2|table3>\n\
+         serve     --mode synthetic|hlo --port N --gamma N [--adaptive] [--config file.json]\n\
+         bench     <fig1|fig2|fig3|fig4|fig5|fig6|table1|table2|table3|adaptive>\n\
          fit       --gamma N --alpha X\n\
          selfcheck --artifacts DIR\n\
          list"
@@ -73,6 +73,9 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
     }
     cfg.gamma = args.usize_or("gamma", cfg.gamma)?;
     cfg.max_batch = args.usize_or("max-batch", cfg.max_batch)?;
+    if args.flag("adaptive") {
+        cfg.adaptive = true;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -81,8 +84,12 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let port = args.usize_or("port", 7433)?;
     let bind = format!("127.0.0.1:{port}");
-    let engine_cfg = cfg.engine_config();
+    // engine_config() honors cfg.adaptive (validated against the mode).
+    let engine_cfg = cfg.engine_config()?;
     println!("starting moesd server on {bind} (mode {:?}, γ={})", cfg.mode, cfg.gamma);
+    if engine_cfg.control.is_some() {
+        println!("adaptive speculation control plane: model-guided γ/batch co-tuning");
+    }
     let server = match cfg.mode {
         Mode::Hlo => {
             let dir = cfg.artifacts_dir.clone();
@@ -97,7 +104,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             let draft = presets::by_name(&cfg.draft)?;
             let platform = hardware::platform_by_name(&cfg.platform)?;
             let alpha = calibrated_alpha(
-                if cfg.model.starts_with("qwen2") { "qwen2" } else { "mixtral" },
+                moesd::workload::model_family(&cfg.model),
                 Dataset::by_name(&cfg.dataset)?,
                 cfg.temperature,
                 cfg.gamma.clamp(2, 4),
@@ -188,6 +195,20 @@ fn bench(args: &Args) -> anyhow::Result<()> {
                 println!("m={:3} stride={:3} MSE={:.4}", r.m, r.stride, r.mse);
             }
             moesd::benchlib::write_report("table3_fit_mse.csv", &table3::to_csv(&out).to_string())?;
+        }
+        "adaptive" => {
+            let out = adaptive::run(0.85, 42)?;
+            for r in &out.rows {
+                println!(
+                    "{:>10} B={:>3}: {:>8.1} tok/s (γ_end={}, ar_bulk={})",
+                    r.policy, r.batch, r.tok_s, r.gamma_end, r.ar_bulk_rounds
+                );
+            }
+            moesd::benchlib::write_report("adaptive_ramp.csv", &adaptive::to_csv(&out).to_string())?;
+            if let Err(e) = adaptive::check_shape(&out) {
+                anyhow::bail!("adaptive ramp shape check failed: {e}");
+            }
+            println!("shape check passed: adaptive tracks the best static γ per phase");
         }
         other => anyhow::bail!("unknown experiment `{other}`"),
     }

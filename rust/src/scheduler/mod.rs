@@ -44,7 +44,21 @@ impl Scheduler {
 
     /// Effective batch ceiling given the SLO estimator: `est_tpot(b)`
     /// returns estimated seconds/token at batch size b.
+    ///
+    /// Contract (also exercised by the edge-case tests below):
+    /// - the result is always ≤ `max_batch`, and `max_batch == 0` returns
+    ///   0 (admissions fully paused);
+    /// - with an SLO, the largest `b` with `est_tpot(b) <= slo` wins;
+    /// - if **no** batch size meets the SLO — the SLO is simply
+    ///   infeasible on this hardware — the ceiling degrades to 1 rather
+    ///   than 0: the system keeps draining at minimum batch (and maximum
+    ///   per-request speed) instead of deadlocking with queued work. An
+    ///   infeasible SLO is an operator error we make progress under, not
+    ///   a reason to stop serving.
     pub fn batch_ceiling<F: Fn(usize) -> f64>(&self, est_tpot: F) -> usize {
+        if self.config.max_batch == 0 {
+            return 0;
+        }
         match self.config.tpot_slo {
             None => self.config.max_batch,
             Some(slo) => {
@@ -174,6 +188,45 @@ mod tests {
         // No SLO → max batch.
         let s2 = Scheduler::new(SchedulerConfig::default());
         assert_eq!(s2.batch_ceiling(|_| 1.0), 64);
+    }
+
+    #[test]
+    fn batch_ceiling_max_batch_zero_pauses_admissions() {
+        for slo in [None, Some(0.05)] {
+            let s = Scheduler::new(SchedulerConfig {
+                max_batch: 0,
+                admit_reserve_tokens: 0,
+                tpot_slo: slo,
+            });
+            assert_eq!(s.batch_ceiling(|_| 0.0), 0, "slo={slo:?}");
+            // And admit() honors the zero ceiling.
+            let mut q = RequestQueue::new();
+            q.push(req(1, 4));
+            assert!(s.admit(&mut q, &kv(100), 0, 0, 0.0).is_empty());
+        }
+    }
+
+    #[test]
+    fn batch_ceiling_max_batch_one() {
+        let s = Scheduler::new(SchedulerConfig {
+            max_batch: 1,
+            admit_reserve_tokens: 0,
+            tpot_slo: Some(0.05),
+        });
+        // b=1 meets the SLO → ceiling 1; and that is also the maximum.
+        assert_eq!(s.batch_ceiling(|b| 0.01 * b as f64), 1);
+        // b=1 misses the SLO → still 1 (degraded-SLO floor, documented).
+        assert_eq!(s.batch_ceiling(|_| 1.0), 1);
+    }
+
+    #[test]
+    fn infeasible_slo_degrades_to_batch_one_not_zero() {
+        let s = Scheduler::new(SchedulerConfig {
+            max_batch: 64,
+            admit_reserve_tokens: 0,
+            tpot_slo: Some(1e-9), // no hardware meets this
+        });
+        assert_eq!(s.batch_ceiling(|b| 0.01 * b as f64), 1);
     }
 
     #[test]

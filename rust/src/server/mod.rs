@@ -3,7 +3,12 @@
 //! Protocol: newline-delimited JSON. One request object per line:
 //! `{"id": 7, "prompt": "text", "max_new_tokens": 32, "temperature": 0.0}`
 //! answered by
-//! `{"id": 7, "text": "...", "n_tokens": 32, "ttft": 0.01, "latency": 0.2}`.
+//! `{"id": 7, "text": "...", "n_tokens": 32, "ttft": 0.01, "latency": 0.2,
+//! "gamma": 3, ...}` (plus `ctl_*` fields when the adaptive controller is
+//! active). A line `{"stats": true}` returns the aggregate serving stats
+//! instead — throughput, acceptance, and the full controller state
+//! (γ, α̂, σ̂, measured target efficiency per batch bucket, switch/probe
+//! counters) as published by the engine thread after every step.
 //!
 //! Architecture (std-threads; tokio is unavailable offline):
 //! - an **engine thread** owns the [`Engine`] and loops
@@ -17,6 +22,7 @@
 //! synthetic backends — which is exactly the repo's serving scope.
 
 use crate::batching::{Completion, Request, SamplingParams};
+use crate::control::ControllerState;
 use crate::engine::{Engine, EngineConfig};
 use crate::spec::SdBackend;
 use crate::tokenizer;
@@ -26,7 +32,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 /// A submitted job: the request plus where to send the completion.
@@ -34,6 +40,42 @@ struct Job {
     request: Request,
     respond: Sender<Completion>,
 }
+
+/// Aggregate serving stats, published by the engine thread after every
+/// step and served to clients via `{"stats": true}`.
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub rounds: u64,
+    pub mean_batch: f64,
+    pub tokens_per_second: f64,
+    pub acceptance_rate: f64,
+    /// γ currently in effect (controller-owned when one is configured).
+    pub gamma: usize,
+    /// Adaptive-controller snapshot, when the engine runs one.
+    pub controller: Option<ControllerState>,
+}
+
+impl ServerStats {
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("requests_completed", self.requests_completed.into()),
+            ("tokens_generated", self.tokens_generated.into()),
+            ("rounds", self.rounds.into()),
+            ("mean_batch", self.mean_batch.into()),
+            ("tokens_per_second", self.tokens_per_second.into()),
+            ("acceptance_rate", self.acceptance_rate.into()),
+            ("gamma", self.gamma.into()),
+        ];
+        if let Some(ctl) = &self.controller {
+            pairs.push(("controller", ctl.to_json()));
+        }
+        Json::from_pairs(pairs)
+    }
+}
+
+type SharedStats = Arc<Mutex<ServerStats>>;
 
 /// Server handle: join/shutdown control.
 pub struct Server {
@@ -67,14 +109,21 @@ impl Server {
         B: SdBackend + 'static,
         F: FnOnce() -> anyhow::Result<B> + Send + 'static,
     {
+        // Surface controller misconfiguration here, where the caller can
+        // see it — not as a silent engine-thread death later.
+        if let Some(ctl) = &config.control {
+            ctl.validate()?;
+        }
         let listener = TcpListener::bind(bind_addr)?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
+        let stats: SharedStats = Arc::new(Mutex::new(ServerStats::default()));
         let (job_tx, job_rx) = channel::<Job>();
 
         let engine_thread = {
             let shutdown = shutdown.clone();
+            let stats = stats.clone();
             std::thread::Builder::new()
                 .name("moesd-engine".into())
                 .spawn(move || {
@@ -89,7 +138,7 @@ impl Server {
                             return;
                         }
                     };
-                    engine_loop(config, backend, job_rx, shutdown)
+                    engine_loop(config, backend, job_rx, shutdown, stats)
                 })?
         };
 
@@ -97,7 +146,7 @@ impl Server {
             let shutdown = shutdown.clone();
             std::thread::Builder::new()
                 .name("moesd-accept".into())
-                .spawn(move || accept_loop(listener, job_tx, shutdown))?
+                .spawn(move || accept_loop(listener, job_tx, shutdown, stats))?
         };
 
         Ok(Server {
@@ -131,14 +180,37 @@ impl Drop for Server {
     }
 }
 
+fn publish_stats<B: SdBackend>(engine: &Engine<B>, stats: &SharedStats) {
+    let m = &engine.metrics;
+    let snapshot = ServerStats {
+        requests_completed: m.requests_completed,
+        tokens_generated: m.tokens_generated,
+        rounds: m.rounds,
+        mean_batch: m.mean_batch(),
+        tokens_per_second: m.tokens_per_second(),
+        acceptance_rate: m.acceptance_rate(),
+        gamma: engine.current_gamma(),
+        controller: engine.controller_state(),
+    };
+    *stats.lock().unwrap() = snapshot;
+}
+
 fn engine_loop<B: SdBackend>(
     config: EngineConfig,
     backend: B,
     jobs: Receiver<Job>,
     shutdown: Arc<AtomicBool>,
+    stats: SharedStats,
 ) {
     let mut engine = Engine::new(config, backend);
     let mut pending: HashMap<u64, Sender<Completion>> = HashMap::new();
+    publish_stats(&engine, &stats);
+    // Snapshotting clones the controller state (history + per-bucket
+    // vectors), so don't pay it on every decode round of a busy engine:
+    // publish when work completes (responses read the snapshot) and on a
+    // step cadence so pure-decode stretches stay observable.
+    const PUBLISH_EVERY_STEPS: usize = 16;
+    let mut steps_since_publish = 0usize;
     while !shutdown.load(Ordering::SeqCst) {
         // Drain new submissions.
         let mut got_work = false;
@@ -155,6 +227,11 @@ fn engine_loop<B: SdBackend>(
         }
         match engine.step() {
             Ok(completions) => {
+                steps_since_publish += 1;
+                if !completions.is_empty() || steps_since_publish >= PUBLISH_EVERY_STEPS {
+                    publish_stats(&engine, &stats);
+                    steps_since_publish = 0;
+                }
                 for c in completions {
                     if let Some(tx) = pending.remove(&c.id) {
                         let _ = tx.send(c);
@@ -172,7 +249,12 @@ fn engine_loop<B: SdBackend>(
     }
 }
 
-fn accept_loop(listener: TcpListener, jobs: Sender<Job>, shutdown: Arc<AtomicBool>) {
+fn accept_loop(
+    listener: TcpListener,
+    jobs: Sender<Job>,
+    shutdown: Arc<AtomicBool>,
+    stats: SharedStats,
+) {
     let next_id = Arc::new(AtomicU64::new(1));
     loop {
         if shutdown.load(Ordering::SeqCst) {
@@ -182,10 +264,11 @@ fn accept_loop(listener: TcpListener, jobs: Sender<Job>, shutdown: Arc<AtomicBoo
             Ok((stream, _peer)) => {
                 let jobs = jobs.clone();
                 let next_id = next_id.clone();
+                let stats = stats.clone();
                 let _ = std::thread::Builder::new()
                     .name("moesd-conn".into())
                     .spawn(move || {
-                        let _ = handle_connection(stream, jobs, next_id);
+                        let _ = handle_connection(stream, jobs, next_id, stats);
                     });
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -200,6 +283,7 @@ fn handle_connection(
     stream: TcpStream,
     jobs: Sender<Job>,
     next_id: Arc<AtomicU64>,
+    stats: SharedStats,
 ) -> anyhow::Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -208,7 +292,7 @@ fn handle_connection(
         if line.trim().is_empty() {
             continue;
         }
-        let response = match serve_one(&line, &jobs, &next_id) {
+        let response = match serve_one(&line, &jobs, &next_id, &stats) {
             Ok(resp) => resp,
             Err(e) => Json::from_pairs(vec![("error", format!("{e}").into())]),
         };
@@ -219,8 +303,16 @@ fn handle_connection(
     Ok(())
 }
 
-fn serve_one(line: &str, jobs: &Sender<Job>, next_id: &AtomicU64) -> anyhow::Result<Json> {
+fn serve_one(
+    line: &str,
+    jobs: &Sender<Job>,
+    next_id: &AtomicU64,
+    stats: &SharedStats,
+) -> anyhow::Result<Json> {
     let j = Json::parse(line)?;
+    if j.get("stats").and_then(Json::as_bool) == Some(true) {
+        return Ok(stats.lock().unwrap().to_json());
+    }
     let prompt_text = j.req_str("prompt")?;
     anyhow::ensure!(!prompt_text.is_empty(), "empty prompt");
     let client_id = j.get("id").and_then(Json::as_i64).unwrap_or(-1);
@@ -247,7 +339,9 @@ fn serve_one(line: &str, jobs: &Sender<Job>, next_id: &AtomicU64) -> anyhow::Res
     let completion = rx
         .recv_timeout(std::time::Duration::from_secs(120))
         .map_err(|_| anyhow::anyhow!("request timed out"))?;
-    Ok(Json::from_pairs(vec![
+    // Controller state at completion time (per-request observability).
+    let snap = stats.lock().unwrap().clone();
+    let mut pairs: Vec<(&str, Json)> = vec![
         (
             "id",
             if client_id >= 0 {
@@ -264,7 +358,20 @@ fn serve_one(line: &str, jobs: &Sender<Job>, next_id: &AtomicU64) -> anyhow::Res
             (completion.finished_at - completion.arrival).into(),
         ),
         ("rounds", (completion.rounds as usize).into()),
-    ]))
+        ("gamma", snap.gamma.into()),
+    ];
+    if let Some(ctl) = &snap.controller {
+        pairs.push(("ctl_policy", ctl.policy.as_str().into()));
+        pairs.push((
+            "ctl_alpha_hat",
+            match ctl.alpha_hat {
+                Some(a) => a.into(),
+                None => Json::Null,
+            },
+        ));
+        pairs.push(("ctl_switches", ctl.switches.into()));
+    }
+    Ok(Json::from_pairs(pairs))
 }
 
 /// Blocking client for tests/examples.
@@ -292,6 +399,22 @@ impl Client {
             ("max_new_tokens", max_new_tokens.into()),
             ("temperature", temperature.into()),
         ]);
+        self.stream.write_all(req.to_string().as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        self.stream.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let resp = Json::parse(&line)?;
+        if let Some(err) = resp.get("error") {
+            anyhow::bail!("server error: {err}");
+        }
+        Ok(resp)
+    }
+
+    /// Query the aggregate serving stats (throughput, acceptance, γ, and
+    /// the adaptive-controller state when one is running).
+    pub fn stats(&mut self) -> anyhow::Result<Json> {
+        let req = Json::from_pairs(vec![("stats", true.into())]);
         self.stream.write_all(req.to_string().as_bytes())?;
         self.stream.write_all(b"\n")?;
         self.stream.flush()?;

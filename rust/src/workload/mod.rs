@@ -79,6 +79,22 @@ pub fn calibrated_alpha(model: &str, dataset: Dataset, temp: f64, gamma: usize) 
     theory::alpha_from_sigma(sigma, gamma.clamp(2, 4))
 }
 
+/// Map a model preset name to its [`paper_sigma`] calibration family
+/// ("qwen2" / "mixtral" / "opt"; anything else hits the table's default
+/// row). Shared by the launcher and config so the mapping lives in one
+/// place.
+pub fn model_family(model_name: &str) -> &'static str {
+    if model_name.starts_with("qwen2") {
+        "qwen2"
+    } else if model_name.starts_with("mixtral") {
+        "mixtral"
+    } else if model_name.starts_with("opt") {
+        "opt"
+    } else {
+        "generic"
+    }
+}
+
 /// A workload profile: how requests look and arrive.
 #[derive(Debug, Clone)]
 pub struct WorkloadProfile {
@@ -136,6 +152,99 @@ impl WorkloadProfile {
                 }
             })
             .collect()
+    }
+}
+
+/// One phase of a non-stationary arrival process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RampPhase {
+    /// Mean arrival rate during the phase (requests/second).
+    pub rate: f64,
+    /// Phase length (seconds).
+    pub duration: f64,
+}
+
+/// Piecewise-stationary Poisson arrivals — the shifting-traffic workload
+/// the adaptive control plane's soak test drives through the engine
+/// (`tests/integration_control.rs::traffic_ramp_soak_...`). Each phase
+/// draws exponential inter-arrivals at its own rate, so a ramp like
+/// 4 → 256 req/s sweeps the engine through the full §3.1 batch-size
+/// regime (memory-bound SD paradise up to compute-bound AR territory)
+/// in one open-loop run.
+#[derive(Debug, Clone)]
+pub struct TrafficRamp {
+    pub phases: Vec<RampPhase>,
+}
+
+impl TrafficRamp {
+    pub fn new(phases: Vec<RampPhase>) -> TrafficRamp {
+        assert!(!phases.is_empty(), "ramp needs at least one phase");
+        for p in &phases {
+            assert!(p.rate > 0.0 && p.duration > 0.0, "invalid phase {p:?}");
+        }
+        TrafficRamp { phases }
+    }
+
+    /// Geometric ramp: `n` phases of `duration` seconds each, starting at
+    /// `rate0` requests/second and multiplying by `factor` per phase.
+    pub fn geometric(rate0: f64, factor: f64, n: usize, duration: f64) -> TrafficRamp {
+        assert!(n >= 1 && rate0 > 0.0 && factor > 0.0);
+        let mut phases = Vec::with_capacity(n);
+        let mut rate = rate0;
+        for _ in 0..n {
+            phases.push(RampPhase { rate, duration });
+            rate *= factor;
+        }
+        TrafficRamp::new(phases)
+    }
+
+    pub fn total_duration(&self) -> f64 {
+        self.phases.iter().map(|p| p.duration).sum()
+    }
+
+    /// Index of the phase containing time `t` (clamped to the last phase).
+    pub fn phase_at(&self, t: f64) -> usize {
+        let mut acc = 0.0;
+        for (i, p) in self.phases.iter().enumerate() {
+            acc += p.duration;
+            if t < acc {
+                return i;
+            }
+        }
+        self.phases.len() - 1
+    }
+
+    /// Generate the ramp's requests (ids `id0..`), sorted by arrival.
+    /// Prompt lengths and sampling parameters come from `profile` (its
+    /// own `arrival_rate` is ignored — the ramp owns arrival times).
+    pub fn generate(&self, profile: &WorkloadProfile, id0: u64, seed: u64) -> Vec<Request> {
+        let mut rng = Rng::new(seed, 0x7a);
+        let mut out = Vec::new();
+        let mut id = id0;
+        let mut phase_start = 0.0;
+        for phase in &self.phases {
+            let mut t = phase_start;
+            loop {
+                t += rng.exponential(phase.rate);
+                if t >= phase_start + phase.duration {
+                    break;
+                }
+                let len = profile.sample_prompt_len(&mut rng);
+                out.push(Request {
+                    id,
+                    prompt: (0..len as u32).map(|p| p % 251).collect(),
+                    params: SamplingParams {
+                        temperature: profile.temperature,
+                        max_new_tokens: profile.max_new_tokens,
+                        eos_token: None,
+                    },
+                    arrival: t,
+                });
+                id += 1;
+            }
+            phase_start += phase.duration;
+        }
+        out
     }
 }
 
@@ -215,5 +324,71 @@ mod tests {
         // Batch profile arrives at t=0.
         let batch = WorkloadProfile::batch(Dataset::HumanEval, 0.0, 8).generate(10, 0, 1);
         assert!(batch.iter().all(|r| r.arrival == 0.0));
+    }
+
+    #[test]
+    fn ramp_phase_counts_track_rates() {
+        let ramp = TrafficRamp::geometric(10.0, 4.0, 3, 20.0); // 10, 40, 160 req/s
+        let profile = WorkloadProfile::batch(Dataset::MtBench, 0.0, 16);
+        let reqs = ramp.generate(&profile, 0, 5);
+        let mut counts = [0usize; 3];
+        for r in &reqs {
+            counts[ramp.phase_at(r.arrival)] += 1;
+        }
+        // Expected counts: rate × duration = 200, 800, 3200 (±20%).
+        for (i, &want) in [200.0f64, 800.0, 3200.0].iter().enumerate() {
+            let got = counts[i] as f64;
+            assert!(
+                (got - want).abs() / want < 0.2,
+                "phase {i}: {got} arrivals vs expected {want}"
+            );
+        }
+        // Sorted and inside the ramp window.
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        assert!(reqs.last().unwrap().arrival < ramp.total_duration());
+    }
+
+    #[test]
+    fn ramp_generation_is_deterministic() {
+        let ramp = TrafficRamp::new(vec![
+            RampPhase {
+                rate: 5.0,
+                duration: 10.0,
+            },
+            RampPhase {
+                rate: 50.0,
+                duration: 10.0,
+            },
+        ]);
+        let profile = WorkloadProfile::batch(Dataset::HumanEval, 0.0, 8);
+        let a = ramp.generate(&profile, 0, 9);
+        let b = ramp.generate(&profile, 0, 9);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.arrival, y.arrival);
+        }
+    }
+
+    #[test]
+    fn ramp_phase_at_boundaries() {
+        let ramp = TrafficRamp::geometric(1.0, 2.0, 3, 10.0);
+        assert_eq!(ramp.phase_at(0.0), 0);
+        assert_eq!(ramp.phase_at(9.99), 0);
+        assert_eq!(ramp.phase_at(10.0), 1);
+        assert_eq!(ramp.phase_at(25.0), 2);
+        assert_eq!(ramp.phase_at(1e9), 2); // clamped past the end
+        assert_eq!(ramp.total_duration(), 30.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid phase")]
+    fn ramp_rejects_nonpositive_rate() {
+        TrafficRamp::new(vec![RampPhase {
+            rate: 0.0,
+            duration: 1.0,
+        }]);
     }
 }

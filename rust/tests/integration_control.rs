@@ -1,0 +1,241 @@
+//! End-to-end tests of the adaptive speculation control plane: the
+//! full traffic-ramp comparison, the compute-bound γ=0 fallback through
+//! the real engine, and controller-driven SLO batch ceilings.
+
+use moesd::arch::presets;
+use moesd::batching::{Buckets, Request, SamplingParams};
+use moesd::control::{ControlConfig, CostModelSpec, PolicyKind};
+use moesd::engine::{Engine, EngineConfig};
+use moesd::hardware::{platform_2x_gpu_a, Platform};
+use moesd::kvcache::KvConfig;
+use moesd::scheduler::SchedulerConfig;
+use moesd::simulator::ExecSim;
+use moesd::spec::synthetic::SyntheticLm;
+
+fn sims() -> (ExecSim, ExecSim) {
+    let platform = platform_2x_gpu_a();
+    let target = ExecSim::new(presets::qwen2_57b_a14b(), platform.clone());
+    let draft_platform = Platform::new(platform.gpu.clone(), 1, platform.interconnect_bw);
+    let draft = ExecSim::new(presets::qwen2_0_5b(), draft_platform);
+    (target, draft)
+}
+
+fn engine(
+    alpha: f64,
+    max_batch: usize,
+    control: Option<ControlConfig>,
+    seed: u64,
+) -> Engine<SyntheticLm> {
+    let (tsim, dsim) = sims();
+    let backend = SyntheticLm::new(tsim, dsim, alpha, seed);
+    Engine::new(
+        EngineConfig {
+            gamma: 3,
+            kv: KvConfig {
+                num_blocks: 1 << 16,
+                block_size: 16,
+            },
+            scheduler: SchedulerConfig {
+                max_batch,
+                admit_reserve_tokens: 32,
+                tpot_slo: None,
+            },
+            buckets: Buckets::pow2_up_to(max_batch.max(1)),
+            seed,
+            control,
+        },
+        backend,
+    )
+}
+
+fn req(id: u64, max_new: usize, arrival: f64) -> Request {
+    Request {
+        id,
+        prompt: (0..16u32).collect(),
+        params: SamplingParams {
+            temperature: 0.0,
+            max_new_tokens: max_new,
+            eos_token: None,
+        },
+        arrival,
+    }
+}
+
+fn adaptive(alpha: f64) -> ControlConfig {
+    let (tsim, dsim) = sims();
+    ControlConfig {
+        alpha_prior: alpha,
+        ..ControlConfig::model_guided(CostModelSpec::roofline(tsim, dsim))
+    }
+}
+
+#[test]
+fn traffic_ramp_adaptive_tracks_best_static() {
+    // The PR's acceptance criterion, end-to-end: ≥ 0.95× the best static
+    // γ and strictly above the worst, in every ramp phase, with the γ=0
+    // fallback engaged during the compute-bound phase.
+    let out = moesd::experiments::adaptive::run(0.85, 42).unwrap();
+    if let Err(e) = moesd::experiments::adaptive::check_shape(&out) {
+        panic!("adaptive ramp shape violated: {e}");
+    }
+}
+
+#[test]
+fn compute_bound_batch_drives_gamma_to_zero_in_engine() {
+    // Satellite requirement: γ=0 fallback when target efficiency
+    // collapses at large B, through the real engine (not just the
+    // policy unit test).
+    let b = 512;
+    let mut e = engine(0.85, b, Some(adaptive(0.85)), 3);
+    for id in 0..b as u64 {
+        e.submit(req(id, 32, 0.0));
+    }
+    let mut ar_rounds = 0u64;
+    let mut rounds = 0u64;
+    while !e.is_idle() {
+        e.step().unwrap();
+        rounds += 1;
+        if e.current_gamma() == 0 && e.num_running() * 2 >= b {
+            ar_rounds += 1;
+        }
+        assert!(rounds < 100_000, "engine did not drain");
+    }
+    assert!(
+        ar_rounds * 2 > rounds / 2,
+        "compute-bound bulk should mostly run AR: {ar_rounds}/{rounds} rounds"
+    );
+    let st = e.controller_state().unwrap();
+    assert!(st.intervals > 0);
+    assert!(st.switches >= 1, "controller never switched: {st:?}");
+}
+
+#[test]
+fn memory_bound_batch_keeps_speculation_on() {
+    // 32 requests through a batch-4 engine: enough sequence-rounds for
+    // several control intervals, so α̂ actually converges.
+    let mut e = engine(0.9, 4, Some(adaptive(0.9)), 5);
+    for id in 0..32u64 {
+        e.submit(req(id, 48, 0.0));
+    }
+    e.run_to_completion(10_000).unwrap();
+    let st = e.controller_state().unwrap();
+    assert!(st.gamma >= 1, "small-batch regime should speculate: {st:?}");
+    assert!(
+        e.metrics.draft_tokens_proposed > 0,
+        "no speculative rounds ran"
+    );
+    // The online α̂ tracked the true acceptance probability.
+    let a = st.alpha_hat.expect("alpha estimated");
+    assert!((a - 0.9).abs() < 0.08, "α̂={a}");
+}
+
+#[test]
+fn traffic_ramp_soak_open_loop_poisson_arrivals() {
+    // Open-loop soak: a piecewise-Poisson TrafficRamp (4 → 32 → 256
+    // req/s) floods the adaptive engine. Everything must complete, the
+    // concurrency must actually ramp, and the controller must have
+    // re-seated γ along the way.
+    use moesd::workload::{Dataset, TrafficRamp, WorkloadProfile};
+    let ramp = TrafficRamp::geometric(4.0, 8.0, 3, 4.0);
+    let profile = WorkloadProfile {
+        dataset: Dataset::HumanEval,
+        temperature: 0.0,
+        max_new_tokens: 16,
+        arrival_rate: None, // the ramp owns arrivals
+    };
+    let mut requests = ramp.generate(&profile, 0, 21);
+    for r in &mut requests {
+        r.prompt.truncate(24); // keep prefill cheap at B≈256
+    }
+    let n = requests.len();
+    assert!(n > 500, "ramp should generate a real load: {n} requests");
+
+    let mut e = engine(0.85, 256, Some(adaptive(0.85)), 13);
+    for r in requests {
+        e.submit(r);
+    }
+    let mut peak_running = 0;
+    let mut steps = 0u64;
+    while !e.is_idle() {
+        e.step().unwrap();
+        peak_running = peak_running.max(e.num_running());
+        steps += 1;
+        assert!(steps < 500_000, "soak did not drain");
+    }
+    assert_eq!(e.metrics.requests_completed as usize, n);
+    assert!(
+        peak_running >= 32,
+        "high-rate phase should batch up: peak={peak_running}"
+    );
+    let st = e.controller_state().unwrap();
+    assert!(
+        st.switches >= 1,
+        "controller should adapt across the ramp: {st:?}"
+    );
+    assert!(st.alpha_hat.is_some());
+    e.kv().check_invariants().unwrap();
+}
+
+#[test]
+fn static_policy_controller_reports_but_does_not_steer() {
+    let mut e = engine(0.8, 8, Some(ControlConfig::static_gamma(2)), 9);
+    for id in 0..8u64 {
+        e.submit(req(id, 32, 0.0));
+    }
+    e.run_to_completion(10_000).unwrap();
+    let st = e.controller_state().unwrap();
+    assert_eq!(st.gamma, 2);
+    assert_eq!(st.switches, 0);
+    assert_eq!(st.policy, "static");
+    assert!(st.alpha_hat.is_some(), "estimates still maintained");
+    assert!(st.intervals > 0);
+}
+
+#[test]
+fn controller_slo_ceiling_caps_admissions() {
+    // With a TPOT SLO and a controller, the measured cost table drives
+    // the batch ceiling: a tight SLO must keep the running batch well
+    // under max_batch, a loose one must not.
+    let run_with_slo = |slo: Option<f64>| -> f64 {
+        let (tsim, dsim) = sims();
+        let backend = SyntheticLm::new(tsim, dsim, 0.9, 11);
+        let mut e = Engine::new(
+            EngineConfig {
+                gamma: 3,
+                kv: KvConfig {
+                    num_blocks: 1 << 16,
+                    block_size: 16,
+                },
+                scheduler: SchedulerConfig {
+                    max_batch: 64,
+                    admit_reserve_tokens: 32,
+                    tpot_slo: slo,
+                },
+                buckets: Buckets::pow2_up_to(64),
+                seed: 11,
+                control: Some(ControlConfig::static_gamma(3)),
+            },
+            backend,
+        );
+        for id in 0..64u64 {
+            e.submit(req(id, 24, 0.0));
+        }
+        e.run_to_completion(100_000).unwrap();
+        e.metrics.mean_batch()
+    };
+    let free = run_with_slo(None);
+    // ~8 ms/token: satisfiable only at small batches on this platform.
+    let tight = run_with_slo(Some(8e-3));
+    assert!(
+        free > 1.5 * tight,
+        "tight SLO should shrink mean batch: free={free:.1} tight={tight:.1}"
+    );
+}
+
+#[test]
+fn control_config_kinds_construct() {
+    let c = ControlConfig::static_gamma(4);
+    assert!(matches!(c.policy, PolicyKind::Static { gamma: 4 }));
+    let a = adaptive(0.8);
+    assert!(matches!(a.policy, PolicyKind::ModelGuided { .. }));
+}

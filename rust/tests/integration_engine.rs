@@ -30,6 +30,7 @@ fn engine_with(alpha: f64, gamma: usize, max_batch: usize, seed: u64) -> Engine<
             },
             buckets: Buckets::pow2_up_to(max_batch),
             seed,
+            control: None,
         },
         backend,
     )

@@ -38,6 +38,7 @@ fn config() -> EngineConfig {
         },
         buckets: Buckets::pow2_up_to(16),
         seed: 1,
+        control: None,
     }
 }
 
@@ -85,6 +86,67 @@ fn sequential_requests_on_one_connection() {
         let n = resp.get("n_tokens").unwrap().as_usize().unwrap();
         assert!((1..=8).contains(&n), "n_tokens={n}");
     }
+    server.stop();
+}
+
+#[test]
+fn stats_query_and_per_request_controller_state() {
+    // Controller-enabled server: responses carry γ and controller
+    // fields, and {"stats": true} returns the aggregate controller
+    // snapshot (the adaptive control plane's observability surface).
+    let target = ExecSim::new(moesd::arch::presets::moesd_tiny(), platform_2x_gpu_a());
+    let draft = ExecSim::new(moesd::arch::presets::moesd_tiny_draft(), platform_2x_gpu_a());
+    let mut cfg = config();
+    cfg.control = Some(moesd::control::ControlConfig {
+        alpha_prior: 0.9,
+        ..moesd::control::ControlConfig::model_guided(
+            moesd::control::CostModelSpec::roofline(target, draft),
+        )
+    });
+    let server = Server::start("127.0.0.1:0", cfg, tiny_platform_backend(9)).unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+    // Stats are served even before any generation (poll briefly: the
+    // engine thread publishes its first snapshot asynchronously).
+    let mut s0 = client.stats().unwrap();
+    for _ in 0..200 {
+        if s0.get("controller").is_some() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        s0 = client.stats().unwrap();
+    }
+    assert!(s0.get("gamma").is_some(), "{s0}");
+    assert!(s0.get("controller").is_some(), "{s0}");
+    // A generation response carries per-request controller state.
+    let resp = client.generate("INFO adaptive", 12, 0.0).unwrap();
+    assert!(resp.get("gamma").unwrap().as_usize().is_some(), "{resp}");
+    assert_eq!(
+        resp.get("ctl_policy").unwrap().as_str().unwrap(),
+        "model-guided"
+    );
+    // Aggregate stats moved after serving.
+    let s1 = client.stats().unwrap();
+    assert!(
+        s1.get("tokens_generated").unwrap().as_usize().unwrap() > 0,
+        "{s1}"
+    );
+    let ctl = s1.get("controller").unwrap();
+    assert_eq!(ctl.get("policy").unwrap().as_str().unwrap(), "model-guided");
+    assert!(ctl.get("intervals").is_some());
+    server.stop();
+}
+
+#[test]
+fn stats_without_controller_still_serve() {
+    let server = Server::start("127.0.0.1:0", config(), tiny_platform_backend(10)).unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+    let resp = client.generate("INFO plain", 8, 0.0).unwrap();
+    // γ is reported (the static config value), controller fields absent.
+    assert_eq!(resp.get("gamma").unwrap().as_usize().unwrap(), 3);
+    assert!(resp.get("ctl_policy").is_none());
+    let s = client.stats().unwrap();
+    assert!(s.get("controller").is_none(), "{s}");
+    assert_eq!(s.get("gamma").unwrap().as_usize().unwrap(), 3);
     server.stop();
 }
 

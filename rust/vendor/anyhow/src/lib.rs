@@ -1,0 +1,221 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! This build environment has no crates.io access, so the subset of the
+//! `anyhow` API the workspace uses is vendored here with identical
+//! semantics:
+//!
+//! - [`Error`]: an opaque boxed error with a context chain. `{}` prints
+//!   the outermost message, `{:#}` the whole chain colon-separated, `{:?}`
+//!   the chain as a "Caused by" report.
+//! - [`Result<T>`] with `E` defaulted to [`Error`].
+//! - `?` conversion from any `std::error::Error + Send + Sync + 'static`.
+//! - The [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//! - [`Context`] for adding context to `Result` and `Option`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: an innermost message or source plus a stack of
+/// human-readable context frames (outermost last).
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+            source: None,
+            context: Vec::new(),
+        }
+    }
+
+    /// Wrap a concrete `std::error::Error`.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error {
+            msg: error.to_string(),
+            source: Some(Box::new(error)),
+            context: Vec::new(),
+        }
+    }
+
+    /// Push an outer context frame (mirrors `anyhow::Error::context`).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.context.push(context.to_string());
+        self
+    }
+
+    /// Messages from outermost to innermost.
+    fn chain_messages(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = self.context.iter().rev().map(String::as_str).collect();
+        out.push(self.msg.as_str());
+        out
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause_message(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain_messages();
+        if f.alternate() {
+            write!(f, "{}", chain.join(": "))
+        } else {
+            write!(f, "{}", chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain_messages();
+        write!(f, "{}", chain[0])?;
+        if chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for msg in &chain[1..] {
+                write!(f, "\n    {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes the blanket `From` below coherent (same trick as the real
+// crate's specialization-free fallback).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Early-return with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Early-return with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn display_modes() {
+        let e = Error::new(io_err()).context("opening manifest");
+        assert_eq!(format!("{e}"), "opening manifest");
+        assert_eq!(format!("{e:#}"), "opening manifest: disk on fire");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("disk on fire"));
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            ensure!(x < 100);
+            if x == 13 {
+                bail!("unlucky {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(format!("{:#}", f(0).unwrap_err()).contains("positive"));
+        assert!(format!("{:#}", f(200).unwrap_err()).contains("condition failed"));
+        assert!(format!("{:#}", f(13).unwrap_err()).contains("unlucky 13"));
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+    }
+
+    #[test]
+    fn context_trait_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("stage A").unwrap_err();
+        assert_eq!(format!("{e:#}"), "stage A: disk on fire");
+        let o: Option<u32> = None;
+        assert!(o.with_context(|| "missing").is_err());
+    }
+}
