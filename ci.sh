@@ -25,4 +25,15 @@ echo "== tier-1: cargo build --release && cargo test -q"
 cargo build --release
 cargo test -q
 
+if [[ $FAST -eq 0 ]]; then
+    # Hot-path perf gate: reduced-rep micro-bench run that asserts the
+    # §Perf <5% coordinator-overhead budget and the >=5x sparse-vs-dense
+    # hot-path speedup, and exercises the JSON emitter. Smoke runs never
+    # write the tracked BENCH_hotpath.json baseline (too noisy; and CI
+    # must not dirty the checkout) — seed/refresh it with a full
+    # `cargo bench --bench micro_hotpath` run.
+    echo "== micro_hotpath smoke (MOESD_SMOKE=1, release bench)"
+    MOESD_SMOKE=1 cargo bench --bench micro_hotpath
+fi
+
 echo "CI gate passed."

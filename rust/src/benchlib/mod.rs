@@ -12,6 +12,8 @@ use crate::util::stats;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+pub use crate::util::json::Json;
+
 /// Where bench outputs land.
 pub fn results_dir() -> PathBuf {
     let dir = std::env::var("MOESD_RESULTS_DIR").unwrap_or_else(|_| "results".to_string());
@@ -26,6 +28,26 @@ pub fn write_report(name: &str, contents: &str) -> anyhow::Result<PathBuf> {
     }
     std::fs::write(&path, contents)?;
     Ok(path)
+}
+
+/// One micro-bench metric as a JSON record (raw seconds plus the derived
+/// ns/op the perf-trajectory tooling tracks). Built on the crate's shared
+/// [`crate::util::json::Json`] value so bench output, configs, and the
+/// artifact manifest all go through one writer.
+pub fn bench_record_json(name: &str, secs: &[f64]) -> Json {
+    Json::from_pairs(vec![
+        ("name", Json::Str(name.to_string())),
+        ("mean_s", Json::Num(stats::mean(secs))),
+        ("p50_s", Json::Num(stats::median(secs))),
+        ("min_s", Json::Num(stats::min(secs))),
+        ("ns_per_op", Json::Num(stats::mean(secs) * 1e9)),
+        ("n", Json::Num(secs.len() as f64)),
+    ])
+}
+
+/// Write a pretty-printed JSON report under results/.
+pub fn write_json_report(name: &str, json: &Json) -> anyhow::Result<PathBuf> {
+    write_report(name, &json.to_pretty())
 }
 
 /// Micro-benchmark a closure: `warmup` unmeasured runs, then `reps`
@@ -151,6 +173,19 @@ mod tests {
         let mut c = ShapeChecks::new();
         c.check("bad", false);
         c.finish("test");
+    }
+
+    #[test]
+    fn bench_record_json_fields_roundtrip() {
+        let j = bench_record_json("kv_ops", &[1e-6, 3e-6]);
+        let s = j.to_pretty();
+        assert!(s.contains("\"name\": \"kv_ops\""));
+        assert!(s.contains("\"ns_per_op\": 2000"));
+        assert!(s.contains("\"n\": 2"));
+        // The shared util::json writer emits parseable output.
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back.req_f64("ns_per_op").unwrap(), 2000.0);
+        assert_eq!(back.req_str("name").unwrap(), "kv_ops");
     }
 
     #[test]

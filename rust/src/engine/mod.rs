@@ -23,9 +23,9 @@ use crate::batching::{Buckets, Completion, Request, RequestQueue, SamplingParams
 use crate::control::{ControlConfig, ControllerState, RoundObservation, SpecController};
 use crate::kvcache::{KvConfig, KvManager, SeqId};
 use crate::metrics::{Counters, EngineMetrics};
-use crate::sampling::verify_chain;
+use crate::sampling::verify_chain_views;
 use crate::scheduler::{Scheduler, SchedulerConfig};
-use crate::spec::SdBackend;
+use crate::spec::{LogitsView, ProposeOut, SdBackend};
 use crate::util::rng::Rng;
 
 /// Engine configuration (the "launcher config" surface).
@@ -83,6 +83,25 @@ impl RunningSeq {
     }
 }
 
+/// Reusable per-round buffers. In steady state (stable batch composition)
+/// `step()` performs no coordinator-side heap allocation of its own: the
+/// per-round `seq_ids`/`temps`/`feeds` vectors and the per-sequence
+/// `pending` backlog buffers are cleared and refilled in place (§Perf L3;
+/// `micro_hotpath` tracks the step wall time this buys).
+#[derive(Debug, Default)]
+struct RoundScratch {
+    seq_ids: Vec<SeqId>,
+    temps: Vec<f64>,
+    feeds: Vec<u32>,
+    /// Draft token backlogs, one reused buffer per running slot.
+    pending: Vec<Vec<u32>>,
+    /// Permanently-empty per-sequence draft lists for γ = 0 (AR) verify
+    /// calls, so the AR path allocates nothing per round either.
+    empty_drafts: Vec<Vec<u32>>,
+    /// Indices of sequences that finished this round (ascending).
+    finished: Vec<usize>,
+}
+
 /// The coordinator.
 pub struct Engine<B: SdBackend> {
     pub config: EngineConfig,
@@ -92,6 +111,7 @@ pub struct Engine<B: SdBackend> {
     scheduler: Scheduler,
     running: Vec<RunningSeq>,
     controller: Option<SpecController>,
+    scratch: RoundScratch,
     pub metrics: EngineMetrics,
     pub counters: Counters,
     clock: f64,
@@ -114,6 +134,7 @@ impl<B: SdBackend> Engine<B> {
             scheduler,
             running: Vec::new(),
             controller,
+            scratch: RoundScratch::default(),
             metrics: EngineMetrics::default(),
             counters: Counters::default(),
             clock: 0.0,
@@ -222,13 +243,16 @@ impl<B: SdBackend> Engine<B> {
         self.metrics.batch_size_sum += b as u64;
         self.round_counter += 1;
 
-        let seq_ids: Vec<SeqId> = self.running.iter().map(|s| s.id).collect();
-        let temps: Vec<f64> = self
-            .running
-            .iter()
-            .map(|s| s.params.temperature)
-            .collect();
-        let feeds: Vec<u32> = self.running.iter().map(|s| s.stream[s.base]).collect();
+        // Per-round inputs live in reusable scratch buffers — no fresh
+        // allocation in steady state.
+        self.scratch.seq_ids.clear();
+        self.scratch.temps.clear();
+        self.scratch.feeds.clear();
+        for s in &self.running {
+            self.scratch.seq_ids.push(s.id);
+            self.scratch.temps.push(s.params.temperature);
+            self.scratch.feeds.push(s.stream[s.base]);
+        }
 
         // Stages ① and ② run as a transaction: on a backend error, roll
         // every sequence's model state and KV reservation back to its
@@ -236,30 +260,37 @@ impl<B: SdBackend> Engine<B> {
         // the failure-injection integration test).
         // --- stage ①: draft propose ----------------------------------------
         let propose_result = if gamma > 0 {
-            let pending: Vec<Vec<u32>> = self
-                .running
-                .iter()
-                .map(|s| {
-                    let dlen = self.backend.draft_len(s.id);
-                    s.stream[dlen..=s.base].to_vec()
-                })
-                .collect();
+            if self.scratch.pending.len() < b {
+                self.scratch.pending.resize_with(b, Vec::new);
+            }
+            for (i, s) in self.running.iter().enumerate() {
+                let dlen = self.backend.draft_len(s.id);
+                let buf = &mut self.scratch.pending[i];
+                buf.clear();
+                buf.extend_from_slice(&s.stream[dlen..=s.base]);
+            }
             self.backend
-                .propose(&seq_ids, &pending, gamma, &temps, self.round_counter)
+                .propose(
+                    &self.scratch.seq_ids,
+                    &self.scratch.pending[..b],
+                    gamma,
+                    &self.scratch.temps,
+                    self.round_counter,
+                )
                 .map(Some)
         } else {
             Ok(None)
         };
         let mut round_draft_cost = 0.0;
-        let (draft_tokens, draft_probs) = match propose_result {
+        let propose_out: Option<ProposeOut> = match propose_result {
             Ok(Some(out)) => {
                 self.clock += out.cost;
                 self.metrics.time_draft += out.cost;
                 self.metrics.draft_tokens_proposed += (b * gamma) as u64;
                 round_draft_cost = out.cost;
-                (out.tokens, out.probs)
+                Some(out)
             }
-            Ok(None) => (vec![Vec::new(); b], vec![Vec::new(); b]),
+            Ok(None) => None,
             Err(e) => {
                 self.abort_round();
                 return Err(e.context("draft propose failed (round rolled back)"));
@@ -267,7 +298,19 @@ impl<B: SdBackend> Engine<B> {
         };
 
         // --- stage ②: target verify ----------------------------------------
-        let verify = match self.backend.verify(&seq_ids, &feeds, &draft_tokens, &temps) {
+        if propose_out.is_none() && self.scratch.empty_drafts.len() < b {
+            self.scratch.empty_drafts.resize_with(b, Vec::new);
+        }
+        let drafts: &[Vec<u32>] = match &propose_out {
+            Some(out) => &out.tokens,
+            None => &self.scratch.empty_drafts[..b],
+        };
+        let verify = match self.backend.verify(
+            &self.scratch.seq_ids,
+            &self.scratch.feeds,
+            drafts,
+            &self.scratch.temps,
+        ) {
             Ok(v) => v,
             Err(e) => {
                 self.abort_round();
@@ -282,16 +325,16 @@ impl<B: SdBackend> Engine<B> {
         self.clock += rcost;
         self.metrics.time_reject += rcost;
 
-        let mut finished_idx: Vec<usize> = Vec::new();
+        self.scratch.finished.clear();
         let mut round_accepted: u64 = 0;
         let mut round_emitted: u64 = 0;
         for (i, seq) in self.running.iter_mut().enumerate() {
-            let outcome = verify_chain(
-                &draft_tokens[i],
-                &draft_probs[i],
-                &verify.probs[i],
-                &mut self.rng,
-            );
+            let (draft_toks, draft_rows): (&[u32], &[LogitsView]) = match &propose_out {
+                Some(out) => (out.tokens[i].as_slice(), out.probs[i].as_slice()),
+                None => (&[], &[]),
+            };
+            let outcome =
+                verify_chain_views(draft_toks, draft_rows, &verify.probs[i], &mut self.rng);
             self.metrics.draft_tokens_accepted += outcome.accepted as u64;
             round_accepted += outcome.accepted as u64;
             round_emitted += outcome.tokens.len() as u64;
@@ -332,7 +375,7 @@ impl<B: SdBackend> Engine<B> {
             let discarded = len_with_emitted - seq.stream.len();
             self.metrics.tokens_generated -= discarded as u64;
             if done {
-                finished_idx.push(i);
+                self.scratch.finished.push(i);
             }
         }
 
@@ -352,7 +395,8 @@ impl<B: SdBackend> Engine<B> {
         }
 
         // Retire finished sequences (descending index for stable removal).
-        for &i in finished_idx.iter().rev() {
+        for k in (0..self.scratch.finished.len()).rev() {
+            let i = self.scratch.finished[k];
             let seq = self.running.remove(i);
             self.backend.release(seq.id);
             self.kv.release(seq.id);

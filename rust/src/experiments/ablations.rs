@@ -21,20 +21,18 @@ use crate::util::csv::CsvTable;
 use crate::util::rng::Rng;
 
 /// Ablation 1: SD speedup proxy (target efficiency) at small batch as the
-/// EP degree grows. Returns (n_gpus, teff at B=1, teff at B=32).
+/// EP degree grows. Returns (n_gpus, teff at B=1, teff at B=32). The
+/// per-EP-degree evaluations are independent and fan across workers.
 pub fn ep_scaling(gammas_gpus: &[usize], gamma: usize) -> Vec<(usize, f64, f64)> {
-    gammas_gpus
-        .iter()
-        .map(|&n| {
-            let platform = Platform::new(gpu_a(), n, 300e9);
-            let sim = ExecSim::new(presets::qwen2_57b_a14b(), platform);
-            (
-                n,
-                sim.target_efficiency(1, gamma, 512),
-                sim.target_efficiency(32, gamma, 512),
-            )
-        })
-        .collect()
+    super::parallel_sweep(gammas_gpus, |&n| {
+        let platform = Platform::new(gpu_a(), n, 300e9);
+        let sim = ExecSim::new(presets::qwen2_57b_a14b(), platform);
+        (
+            n,
+            sim.target_efficiency(1, gamma, 512),
+            sim.target_efficiency(32, gamma, 512),
+        )
+    })
 }
 
 /// Ablation 2: empirical activation under Dirichlet-skewed routers vs the
@@ -55,13 +53,15 @@ pub fn imbalance_activation(alphas: &[f64], ts: &[u64], seed: u64) -> CsvTable {
 }
 
 /// Ablation 3: target efficiency vs context length at a large batch — the
-/// MagicDec handoff. Returns (ctx, teff).
+/// MagicDec handoff. Returns (ctx, teff), one independent point per
+/// worker (each builds its own simulator; the pricing cache is
+/// per-instance).
 pub fn kv_dominant_regime(ctxs: &[usize], batch: usize, gamma: usize) -> Vec<(usize, f64)> {
-    let platform = crate::hardware::platform_2x_gpu_a();
-    let sim = ExecSim::new(presets::qwen2_57b_a14b(), platform);
-    ctxs.iter()
-        .map(|&ctx| (ctx, sim.target_efficiency(batch, gamma, ctx)))
-        .collect()
+    super::parallel_sweep(ctxs, |&ctx| {
+        let platform = crate::hardware::platform_2x_gpu_a();
+        let sim = ExecSim::new(presets::qwen2_57b_a14b(), platform);
+        (ctx, sim.target_efficiency(batch, gamma, ctx))
+    })
 }
 
 #[cfg(test)]

@@ -3,7 +3,7 @@
 //! (Qwen2, 2×GPU-B), (Qwen2, 4×GPU-A) and (Mixtral, 2×GPU-A)-style
 //! combinations; we regenerate a configurable panel set.
 
-use super::{paper_batch_grid, run_pair, PairStats, RunOpts};
+use super::{paper_batch_grid, run_pair_grid, PairStats, RunOpts};
 use crate::arch::presets;
 use crate::hardware::platform_by_name;
 use crate::util::csv::CsvTable;
@@ -62,7 +62,8 @@ fn archs_for(model: &str) -> (crate::arch::ModelArch, crate::arch::ModelArch) {
     }
 }
 
-/// Sweep one panel across the paper's batch grid.
+/// Sweep one panel across the paper's batch grid (fanned across worker
+/// threads; per-point results are bit-identical to a serial sweep).
 pub fn sweep_panel(panel: &Panel, seed: u64) -> anyhow::Result<Vec<PairStats>> {
     let (target, draft) = archs_for(panel.model);
     let platform = platform_by_name(panel.platform)?;
@@ -71,10 +72,15 @@ pub fn sweep_panel(panel: &Panel, seed: u64) -> anyhow::Result<Vec<PairStats>> {
         seed,
         ..Default::default()
     };
-    paper_batch_grid()
-        .into_iter()
-        .map(|b| run_pair(&target, &draft, &platform, alpha, panel.gamma, b, &opts))
-        .collect()
+    run_pair_grid(
+        &target,
+        &draft,
+        &platform,
+        alpha,
+        panel.gamma,
+        &paper_batch_grid(),
+        &opts,
+    )
 }
 
 /// CSV rows for one panel: batch, speedup, target_efficiency, sigma.

@@ -6,7 +6,7 @@
 //! stride-11 subsample, and overlays model vs measurement. We reproduce
 //! the full pipeline against the roofline simulator.
 
-use super::{paper_batch_grid, run_pair, RunOpts};
+use super::{paper_batch_grid, parallel_sweep, run_pair, RunOpts};
 use crate::arch::presets;
 use crate::fit::fit_perfmodel;
 use crate::hardware::platform_2x_gpu_a;
@@ -37,7 +37,8 @@ pub struct Fig4Output {
 
 /// Generate the full 228-point measurement grid (sorted by K, γ, B —
 /// the paper's dataframe ordering, which Table 3's stride sampling
-/// depends on).
+/// depends on). The independent grid points fan across worker threads;
+/// `parallel_sweep` keeps the dataframe order.
 pub fn measure_grid(alpha: f64, seed: u64) -> anyhow::Result<Vec<Measurement>> {
     let draft = presets::qwen2_0_5b();
     let platform = platform_2x_gpu_a();
@@ -47,24 +48,28 @@ pub fn measure_grid(alpha: f64, seed: u64) -> anyhow::Result<Vec<Measurement>> {
         seed,
         ..Default::default()
     };
-    let mut out = Vec::new();
+    let mut points = Vec::new();
     for &k in &K_VALUES {
-        let target = base.with_topk(k);
         for &gamma in &GAMMAS {
             for &b in &paper_batch_grid() {
-                let s = run_pair(&target, &draft, &platform, alpha, gamma, b, &opts)?;
-                out.push(Measurement {
-                    batch: b,
-                    gamma,
-                    k,
-                    e: base.experts(),
-                    sigma: s.sigma,
-                    speedup: s.speedup,
-                });
+                points.push((k, gamma, b));
             }
         }
     }
-    Ok(out)
+    parallel_sweep(&points, |&(k, gamma, b)| -> anyhow::Result<Measurement> {
+        let target = base.with_topk(k);
+        let s = run_pair(&target, &draft, &platform, alpha, gamma, b, &opts)?;
+        Ok(Measurement {
+            batch: b,
+            gamma,
+            k,
+            e: base.experts(),
+            sigma: s.sigma,
+            speedup: s.speedup,
+        })
+    })
+    .into_iter()
+    .collect()
 }
 
 /// Stride-subsample the sorted grid (`df[begin:end:stride]`, App. C.2).

@@ -1,7 +1,7 @@
 //! Fig. 5 — SD speedup trends across more settings, with 5 individual
 //! runs + their mean, including the tile-quantization sawtooth (App. A.1).
 
-use super::{paper_batch_grid, run_pair, RunOpts};
+use super::{paper_batch_grid, parallel_sweep, run_pair, RunOpts};
 use crate::arch::presets;
 use crate::hardware::platform_by_name;
 use crate::util::csv::CsvTable;
@@ -32,24 +32,27 @@ pub fn run(
     let alpha = calibrated_alpha(model, dataset, temp, gamma);
     let batches = paper_batch_grid();
 
-    let mut per_run: Vec<Vec<f64>> = Vec::with_capacity(runs);
+    // The whole runs × batches grid fans across worker threads at once
+    // (run-major order, reshaped below).
+    let mut points: Vec<(u64, usize)> = Vec::with_capacity(runs * batches.len());
     for r in 0..runs {
+        for &b in &batches {
+            points.push((1000 + r as u64, b));
+        }
+    }
+    let flat: Vec<f64> = parallel_sweep(&points, |&(seed, b)| {
         let opts = RunOpts {
-            seed: 1000 + r as u64,
+            seed,
             noise: true,
             tile_effects: true,
             max_new_tokens: 24,
             ..Default::default()
         };
-        let sweep: Vec<f64> = batches
-            .iter()
-            .map(|&b| {
-                run_pair(&target, &draft, &platform, alpha, gamma, b, &opts)
-                    .map(|s| s.speedup)
-            })
-            .collect::<anyhow::Result<_>>()?;
-        per_run.push(sweep);
-    }
+        run_pair(&target, &draft, &platform, alpha, gamma, b, &opts).map(|s| s.speedup)
+    })
+    .into_iter()
+    .collect::<anyhow::Result<_>>()?;
+    let per_run: Vec<Vec<f64>> = flat.chunks(batches.len()).map(<[f64]>::to_vec).collect();
 
     let mut header = vec!["batch".to_string()];
     for r in 0..runs {

@@ -1,7 +1,7 @@
 //! Fig. 6 — end-to-end SD speedup: MoE vs dense models across datasets
 //! and temperatures (App. A.2).
 
-use super::{paper_batch_grid, run_pair, RunOpts};
+use super::{paper_batch_grid, run_pair_grid, RunOpts};
 use crate::arch::presets;
 use crate::hardware::platform_2x_gpu_a;
 use crate::util::csv::CsvTable;
@@ -28,15 +28,16 @@ pub fn run(dataset: Dataset, temp: f64, gamma: usize, seed: u64) -> anyhow::Resu
     let (moe_t, moe_d) = (presets::qwen2_57b_a14b(), presets::qwen2_0_5b());
     let (opt_t, opt_d) = (presets::opt_30b(), presets::opt_350m());
 
+    let moe_stats = run_pair_grid(&moe_t, &moe_d, &platform, moe_alpha, gamma, &batches, &opts)?;
+    let dense_stats =
+        run_pair_grid(&opt_t, &opt_d, &platform, dense_alpha, gamma, &batches, &opts)?;
     let mut table = CsvTable::new(&["batch", "moe_speedup", "dense_speedup"]);
     let mut moe = Vec::new();
     let mut dense = Vec::new();
-    for &b in &batches {
-        let m = run_pair(&moe_t, &moe_d, &platform, moe_alpha, gamma, b, &opts)?;
-        let d = run_pair(&opt_t, &opt_d, &platform, dense_alpha, gamma, b, &opts)?;
-        moe.push(m.speedup);
-        dense.push(d.speedup);
-        table.push_nums(&[b as f64, m.speedup, d.speedup]);
+    for (i, &b) in batches.iter().enumerate() {
+        moe.push(moe_stats[i].speedup);
+        dense.push(dense_stats[i].speedup);
+        table.push_nums(&[b as f64, moe_stats[i].speedup, dense_stats[i].speedup]);
     }
     Ok(Fig6Output {
         table,

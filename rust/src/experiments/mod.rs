@@ -21,6 +21,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod table3;
 pub mod tables;
+pub mod vocab_scale;
 
 use crate::arch::ModelArch;
 use crate::batching::{Buckets, Request, SamplingParams};
@@ -59,6 +60,12 @@ pub struct RunOpts {
     pub noise: bool,
     /// GEMM tile quantization (Fig. 5 sawtooth).
     pub tile_effects: bool,
+    /// Synthetic token-space size. The virtual clock is vocab-independent
+    /// (the roofline prices the arch's real LM head throughout); this only
+    /// sizes the coordinator-side token math, which the sparse
+    /// `LogitsView` interface keeps O(1) per row — so realistic values up
+    /// to Qwen2's 151 936 are now feasible (see `vocab_scale`).
+    pub vocab: usize,
 }
 
 impl Default for RunOpts {
@@ -69,6 +76,7 @@ impl Default for RunOpts {
             seed: 0,
             noise: false,
             tile_effects: false,
+            vocab: 64,
         }
     }
 }
@@ -88,7 +96,7 @@ fn build_engine(
     // the small draft model stays single-GPU while the target shards).
     let draft_platform = Platform::new(platform.gpu.clone(), 1, platform.interconnect_bw);
     let dsim = ExecSim::new(draft.clone(), draft_platform);
-    let mut backend = SyntheticLm::new(tsim, dsim, alpha, opts.seed);
+    let mut backend = SyntheticLm::new(tsim, dsim, alpha, opts.seed).with_vocab(opts.vocab);
     if opts.noise {
         backend = backend.with_noise(opts.seed ^ 0xabcd);
     }
@@ -161,6 +169,87 @@ pub fn run_pair(
         speedup: t_ar / t_sd,
         target_efficiency: teff,
     })
+}
+
+/// Worker-thread count for parallel sweeps: `MOESD_THREADS` overrides
+/// (set to 1 to force serial execution), otherwise the machine's
+/// available parallelism.
+pub fn sweep_threads() -> usize {
+    if let Ok(v) = std::env::var("MOESD_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map_or(1, |n| n.get())
+}
+
+/// Map `f` over `items` on scoped worker threads, returning results in
+/// item order.
+///
+/// Every figure/table sweep is hundreds of *independent* `run_pair`
+/// engine runs (each builds its own seeded engine + simulators), so the
+/// grid fans across cores with no shared state and the output is
+/// bit-identical to the serial map. Work is striped round-robin
+/// (worker t takes items t, t+T, t+2T, …) so the expensive large-batch
+/// end of a grid spreads across workers instead of landing on one.
+pub fn parallel_sweep<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = sweep_threads().min(n.max(1));
+    if threads <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                scope.spawn(move || {
+                    items
+                        .iter()
+                        .enumerate()
+                        .skip(t)
+                        .step_by(threads)
+                        .map(|(i, item)| (i, f(item)))
+                        .collect::<Vec<(usize, R)>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("sweep worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("sweep slot unfilled"))
+        .collect()
+}
+
+/// Fan one (target, draft, platform, α, γ) setting's batch sweep across
+/// worker threads — the unit every figure/table sweep is built from.
+/// Results keep `batches` order; the first error (if any) is returned.
+#[allow(clippy::too_many_arguments)]
+pub fn run_pair_grid(
+    target: &ModelArch,
+    draft: &ModelArch,
+    platform: &Platform,
+    alpha: f64,
+    gamma: usize,
+    batches: &[usize],
+    opts: &RunOpts,
+) -> anyhow::Result<Vec<PairStats>> {
+    parallel_sweep(batches, |&b| {
+        run_pair(target, draft, platform, alpha, gamma, b, opts)
+    })
+    .into_iter()
+    .collect()
 }
 
 /// The batch-size sweep used across Figs. 2/4/5/6 and the peak-speedup
@@ -250,6 +339,39 @@ mod tests {
     fn sigma_adjust_identity_when_equal() {
         assert_eq!(sigma_adjust(2.0, 0.9, 0.9), 2.0);
         assert!((sigma_adjust(2.0, 0.45, 0.9) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_sweep_preserves_order() {
+        let items: Vec<usize> = (0..37).collect();
+        let out = parallel_sweep(&items, |&x| x * x + 1);
+        let want: Vec<usize> = items.iter().map(|&x| x * x + 1).collect();
+        assert_eq!(out, want);
+        // Degenerate inputs.
+        assert_eq!(parallel_sweep(&[] as &[usize], |&x| x), Vec::<usize>::new());
+        assert_eq!(parallel_sweep(&[9usize], |&x| x + 1), vec![10]);
+    }
+
+    #[test]
+    fn parallel_grid_is_bit_identical_to_serial_runs() {
+        // Each grid point builds its own seeded engine, so fanning across
+        // threads must not change a single measurement.
+        let target = presets::qwen2_57b_a14b();
+        let draft = presets::qwen2_0_5b();
+        let p = platform_2x_gpu_a();
+        let opts = RunOpts {
+            max_new_tokens: 12,
+            ..Default::default()
+        };
+        let batches = [1usize, 8, 32];
+        let grid = run_pair_grid(&target, &draft, &p, 0.9, 3, &batches, &opts).unwrap();
+        for (i, &b) in batches.iter().enumerate() {
+            let s = run_pair(&target, &draft, &p, 0.9, 3, b, &opts).unwrap();
+            assert_eq!(grid[i].batch, b);
+            assert_eq!(grid[i].t_ar, s.t_ar, "B={b}");
+            assert_eq!(grid[i].t_sd, s.t_sd, "B={b}");
+            assert_eq!(grid[i].sigma, s.sigma, "B={b}");
+        }
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! T_AR, T_SD, σ and x at the batch size maximizing x — the paper's exact
 //! reporting format.
 
-use super::{paper_batch_grid, peak_speedup, run_pair, PairStats, RunOpts};
+use super::{paper_batch_grid, peak_speedup, run_pair_grid, PairStats, RunOpts};
 use crate::arch::presets;
 use crate::hardware::platform_by_name;
 use crate::util::csv::CsvTable;
@@ -52,10 +52,15 @@ pub fn compute_row(
     let mut cells = Vec::new();
     for &gamma in &GAMMAS {
         let alpha = calibrated_alpha(model, dataset, temp, gamma);
-        let sweep: Vec<PairStats> = paper_batch_grid()
-            .into_iter()
-            .map(|b| run_pair(&target, &draft, &platform, alpha, gamma, b, &opts))
-            .collect::<anyhow::Result<_>>()?;
+        let sweep = run_pair_grid(
+            &target,
+            &draft,
+            &platform,
+            alpha,
+            gamma,
+            &paper_batch_grid(),
+            &opts,
+        )?;
         cells.push(*peak_speedup(&sweep));
     }
     Ok(TableRow {

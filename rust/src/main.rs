@@ -52,7 +52,7 @@ fn print_help() {
          USAGE: moesd <serve|bench|fit|selfcheck|list> [options]\n\
          \n\
          serve     --mode synthetic|hlo --port N --gamma N [--adaptive] [--config file.json]\n\
-         bench     <fig1|fig2|fig3|fig4|fig5|fig6|table1|table2|table3|adaptive>\n\
+         bench     <fig1|fig2|fig3|fig4|fig5|fig6|table1|table2|table3|adaptive|vocab>\n\
          fit       --gamma N --alpha X\n\
          selfcheck --artifacts DIR\n\
          list"
@@ -126,7 +126,9 @@ fn bench(args: &Args) -> anyhow::Result<()> {
         .positional
         .first()
         .map(String::as_str)
-        .ok_or_else(|| anyhow::anyhow!("bench needs an experiment id (fig1..fig6, table1..3)"))?;
+        .ok_or_else(|| {
+            anyhow::anyhow!("bench needs an experiment id (fig1..fig6, table1..3, adaptive, vocab)")
+        })?;
     use moesd::experiments::*;
     match which {
         "fig1" => {
@@ -210,13 +212,22 @@ fn bench(args: &Args) -> anyhow::Result<()> {
             }
             println!("shape check passed: adaptive tracks the best static γ per phase");
         }
+        "vocab" => {
+            let out = vocab_scale::run(&vocab_scale::VOCABS, 4, 0.9, 42)?;
+            println!("{}", out.table.to_string());
+            moesd::benchlib::write_report("vocab_scale.csv", &out.table.to_string())?;
+            if let Err(e) = vocab_scale::check_shape(&out) {
+                anyhow::bail!("vocab-scale shape check failed: {e}");
+            }
+            println!("shape check passed: speedup invariant to synthetic vocab up to 151936");
+        }
         other => anyhow::bail!("unknown experiment `{other}`"),
     }
     Ok(())
 }
 
 fn fit(args: &Args) -> anyhow::Result<()> {
-    use moesd::experiments::{run_pair, RunOpts};
+    use moesd::experiments::{run_pair_grid, RunOpts};
     use moesd::fit::fit_perfmodel;
     use moesd::perfmodel::*;
     let gamma = args.usize_or("gamma", 4)?;
@@ -225,18 +236,19 @@ fn fit(args: &Args) -> anyhow::Result<()> {
     let draft = presets::qwen2_0_5b();
     let platform = hardware::platform_2x_gpu_a();
     let opts = RunOpts::default();
+    let grid = moesd::experiments::paper_batch_grid();
+    let stats = run_pair_grid(&target, &draft, &platform, alpha, gamma, &grid, &opts)?;
     let mut ms = Vec::new();
-    for &b in &moesd::experiments::paper_batch_grid() {
-        let s = run_pair(&target, &draft, &platform, alpha, gamma, b, &opts)?;
+    for s in &stats {
         ms.push(Measurement {
-            batch: b,
+            batch: s.batch,
             gamma,
             k: 8,
             e: 64,
             sigma: s.sigma,
             speedup: s.speedup,
         });
-        println!("B={b:3}: speedup {:.3} σ {:.3}", s.speedup, s.sigma);
+        println!("B={:3}: speedup {:.3} σ {:.3}", s.batch, s.speedup, s.sigma);
     }
     let model = PerfModel::new(&platform);
     let bounds = ParamBounds::for_setup(&target, &draft, &platform, 1e-3);

@@ -16,11 +16,23 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::time::Instant;
 
-use super::{literal_f32, literal_i32, ModelDims, PjrtEngine};
+use super::{ModelDims, PjrtEngine};
 use crate::kvcache::SeqId;
-use crate::sampling::softmax_with_temperature;
-use crate::spec::{ProbRow, ProposeOut, SdBackend, VerifyOut};
+use crate::sampling::{argmax_f32, softmax_with_temperature};
+use crate::spec::{LogitsView, ProposeOut, SdBackend, VerifyOut};
 use crate::util::rng::Rng;
+
+/// One logits row → the cheapest exact [`LogitsView`]: greedy rows
+/// (temperature 0) are degenerate, so they ship as a two-word `OneHot`
+/// instead of a vocab-sized softmax output; positive temperatures have
+/// full support and stay `Dense`.
+fn row_view(logits: &[f32], temp: f64) -> LogitsView {
+    if temp <= 0.0 {
+        LogitsView::one_hot(argmax_f32(logits) as u32, logits.len())
+    } else {
+        LogitsView::dense(softmax_with_temperature(logits, temp))
+    }
+}
 
 /// Host-side state for one model of one sequence.
 #[derive(Debug, Clone)]
@@ -418,7 +430,7 @@ impl SdBackend for HloBackend {
         anyhow::ensure!(seqs.len() == pending.len() && seqs.len() == temps.len());
         let n = seqs.len();
         let mut tokens: Vec<Vec<u32>> = vec![Vec::with_capacity(gamma); n];
-        let mut probs: Vec<Vec<ProbRow>> = vec![Vec::with_capacity(gamma); n];
+        let mut probs: Vec<Vec<LogitsView>> = vec![Vec::with_capacity(gamma); n];
         let mut cost = 0.0;
         let mut rng = self.rng.fork(seed);
         // First forward consumes each sequence's pending backlog; the
@@ -433,10 +445,10 @@ impl SdBackend for HloBackend {
             for i in 0..n {
                 let last_real = feeds[i].len().saturating_sub(1);
                 let row = &out.logits[i][last_real];
-                let dist = softmax_with_temperature(row, temps[i]);
-                let tok = rng.categorical(&dist) as u32;
+                let view = row_view(row, temps[i]);
+                let tok = view.sample(&mut rng);
                 tokens[i].push(tok);
-                probs[i].push(dist);
+                probs[i].push(view);
                 if g + 1 < gamma {
                     feeds[i] = vec![tok];
                 }
@@ -471,15 +483,11 @@ impl SdBackend for HloBackend {
             })
             .collect();
         let out = self.forward_model("target", seqs, &tokens, s)?;
-        let probs: Vec<Vec<ProbRow>> = out
+        let probs: Vec<Vec<LogitsView>> = out
             .logits
             .iter()
             .zip(temps)
-            .map(|(rows, &temp)| {
-                rows.iter()
-                    .map(|r| softmax_with_temperature(r, temp))
-                    .collect()
-            })
+            .map(|(rows, &temp)| rows.iter().map(|r| row_view(r, temp)).collect())
             .collect();
         Ok(VerifyOut {
             probs,

@@ -13,6 +13,9 @@
 
 pub mod routing;
 
+use std::cell::RefCell;
+use std::collections::HashMap;
+
 use crate::arch::{Ffn, ModelArch};
 use crate::hardware::{tile_quantize, Platform};
 use crate::theory;
@@ -54,15 +57,28 @@ pub enum ActivationMode {
 
 /// The simulator: immutable model+platform description plus evaluation
 /// options.
+///
+/// All price-affecting state is private and set only through `new` and the
+/// cache-invalidating builder methods — prices are memoized (see
+/// `price_cache`), so uncontrolled field mutation would silently serve
+/// stale timings.
 #[derive(Debug, Clone)]
 pub struct ExecSim {
-    pub arch: ModelArch,
-    pub platform: Platform,
-    pub activation: ActivationMode,
+    arch: ModelArch,
+    platform: Platform,
+    activation: ActivationMode,
     /// Apply GEMM tile quantization (the sawtooth effect).
-    pub tile_effects: bool,
+    tile_effects: bool,
     /// Fixed per-step launch/runtime overhead (scheduler, kernel launches).
-    pub step_overhead: f64,
+    step_overhead: f64,
+    /// Memoized rng-free forward prices keyed by (b, s, ctx). An engine
+    /// run prices thousands of rounds over a handful of distinct shapes,
+    /// and the figure sweeps re-ask the same points per grid cell —
+    /// re-walking the roofline each call was measurable coordinator
+    /// overhead. Interior mutability keeps the pricing API `&self`; the
+    /// builder methods clear the cache because prices depend on their
+    /// settings.
+    price_cache: RefCell<HashMap<(usize, usize, usize), f64>>,
 }
 
 impl ExecSim {
@@ -78,17 +94,28 @@ impl ExecSim {
             activation: ActivationMode::Expected,
             tile_effects: false,
             step_overhead,
+            price_cache: RefCell::new(HashMap::new()),
         }
     }
 
     pub fn with_activation(mut self, mode: ActivationMode) -> Self {
         self.activation = mode;
+        self.price_cache.get_mut().clear();
         self
     }
 
     pub fn with_tile_effects(mut self, on: bool) -> Self {
         self.tile_effects = on;
+        self.price_cache.get_mut().clear();
         self
+    }
+
+    pub fn arch(&self) -> &ModelArch {
+        &self.arch
+    }
+
+    pub fn platform(&self) -> &Platform {
+        &self.platform
     }
 
     /// Number of activated experts for `t` tokens through one gate.
@@ -204,9 +231,17 @@ impl ExecSim {
         out
     }
 
-    /// T_T(B, s) — the scalar the paper's equations use.
+    /// T_T(B, s) — the scalar the paper's equations use. Without an RNG
+    /// the walk is deterministic in (b, s, ctx) (sampled-activation mode
+    /// falls back to the Eq. 8 expectation), so results are memoized.
     pub fn t_forward(&self, b: usize, s: usize, ctx: usize) -> f64 {
-        self.forward_time(b, s, ctx, None).total()
+        let key = (b, s, ctx);
+        if let Some(&t) = self.price_cache.borrow().get(&key) {
+            return t;
+        }
+        let t = self.forward_time(b, s, ctx, None).total();
+        self.price_cache.borrow_mut().insert(key, t);
+        t
     }
 
     /// Rejection-sampling stage cost (§3.1 stage ③): reading B·(γ+1) logit
@@ -346,6 +381,23 @@ mod tests {
         let f8 = sim8.forward_time(32, 1, 512, None).ffn_fraction();
         let f1 = sim1.forward_time(32, 1, 512, None).ffn_fraction();
         assert!(f8 > f1, "K=8 FFN share {f8} should exceed K=1 share {f1}");
+    }
+
+    #[test]
+    fn t_forward_memoization_is_transparent() {
+        let sim = qwen_sim();
+        let fresh = sim.forward_time(16, 4, 512, None).total();
+        let a = sim.t_forward(16, 4, 512);
+        let b = sim.t_forward(16, 4, 512); // cache hit
+        assert_eq!(a, fresh);
+        assert_eq!(a, b);
+        // Builder methods invalidate: the tiled price differs from the
+        // untiled one but still matches its own fresh walk.
+        let tiled = sim.clone().with_tile_effects(true);
+        assert_eq!(
+            tiled.t_forward(63, 1, 512),
+            tiled.forward_time(63, 1, 512, None).total()
+        );
     }
 
     #[test]

@@ -30,13 +30,21 @@
 //! With γ = 0 the same protocol is plain autoregressive decoding (the
 //! baseline T_AR measurement): verify forwards just the feed token and the
 //! engine samples from the single returned row.
+//!
+//! ## Distribution representation
+//!
+//! Probability rows cross the trait boundary as [`LogitsView`]s, not
+//! dense `Vec<f64>`s: a backend whose rows are degenerate (the synthetic
+//! oracle's one-hot chains, greedy temperature-0 rows) emits
+//! `OneHot`/`TopK` without a per-token vocab-sized allocation, and the
+//! engine's rejection sampler consumes them directly with bit-identical
+//! semantics to the dense path. Backends with genuinely full-support
+//! rows (the real-model HLO backend at temperature > 0) emit `Dense`.
 
 pub mod synthetic;
 
 use crate::kvcache::SeqId;
-
-/// A next-token probability distribution.
-pub type ProbRow = Vec<f64>;
+pub use crate::sampling::LogitsView;
 
 /// Output of a draft propose step.
 #[derive(Debug, Clone)]
@@ -45,7 +53,7 @@ pub struct ProposeOut {
     pub tokens: Vec<Vec<u32>>,
     /// Draft distributions the tokens were sampled from (same shape),
     /// already temperature-adjusted.
-    pub probs: Vec<Vec<ProbRow>>,
+    pub probs: Vec<Vec<LogitsView>>,
     /// Cost in seconds (simulated or measured, per the backend's clock).
     pub cost: f64,
 }
@@ -56,7 +64,7 @@ pub struct VerifyOut {
     /// Target distributions per sequence: `probs[i].len() == gamma + 1`
     /// (one row to verify each draft token, plus the bonus row), already
     /// temperature-adjusted.
-    pub probs: Vec<Vec<ProbRow>>,
+    pub probs: Vec<Vec<LogitsView>>,
     /// Cost in seconds.
     pub cost: f64,
 }

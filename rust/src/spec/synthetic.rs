@@ -21,9 +21,9 @@
 
 use std::collections::HashMap;
 
-use super::{ProbRow, ProposeOut, SdBackend, VerifyOut};
+use super::{LogitsView, ProposeOut, SdBackend, VerifyOut};
 use crate::kvcache::SeqId;
-use crate::simulator::ExecSim;
+use crate::simulator::{ActivationMode, ExecSim};
 use crate::util::rng::Rng;
 
 /// Deterministic "correct token" oracle (splitmix64 finalizer).
@@ -50,6 +50,11 @@ struct SeqState {
 pub struct SyntheticLm {
     target_sim: ExecSim,
     draft_sim: ExecSim,
+    /// Pre-built sampled-activation clone of `target_sim` for noisy
+    /// pricing. Built once in [`Self::with_noise`] — cloning the whole
+    /// simulator (arch + platform) on every verify call was a measurable
+    /// per-round cost.
+    noisy_target_sim: Option<ExecSim>,
     /// Probability that the draft proposes the correct chain token.
     pub alpha: f64,
     vocab: usize,
@@ -61,6 +66,10 @@ pub struct SyntheticLm {
     /// Use sampled (noisy) expert activation when pricing — run-to-run
     /// variation for Fig. 5's individual-run curves.
     noise_rng: Option<Rng>,
+    /// Emit dense vocab-sized rows instead of sparse `OneHot` views.
+    /// Byte-compatible with the pre-sparse backend — reference mode for
+    /// the equivalence property tests and the micro-bench dense baseline.
+    dense_rows: bool,
 }
 
 impl SyntheticLm {
@@ -69,18 +78,42 @@ impl SyntheticLm {
         SyntheticLm {
             target_sim,
             draft_sim,
+            noisy_target_sim: None,
             alpha,
             vocab: 64,
             stream: seed,
             seqs: HashMap::new(),
             ctx_for_pricing: 512,
             noise_rng: None,
+            dense_rows: false,
         }
     }
 
     /// Enable run-to-run pricing noise (sampled expert activation).
     pub fn with_noise(mut self, seed: u64) -> Self {
         self.noise_rng = Some(Rng::new(seed, 3));
+        self.noisy_target_sim = Some(
+            self.target_sim
+                .clone()
+                .with_activation(ActivationMode::Sampled),
+        );
+        self
+    }
+
+    /// Set the synthetic token space. The default 64 was the largest the
+    /// dense-row interface could afford; with sparse [`LogitsView`] rows
+    /// the backend runs at Qwen2's real 151 936 without any per-token
+    /// vocab-sized work (see `experiments::vocab_scale`).
+    pub fn with_vocab(mut self, vocab: usize) -> Self {
+        assert!(vocab >= 2, "vocab must be at least 2");
+        self.vocab = vocab;
+        self
+    }
+
+    /// Emit dense rows exactly like the pre-sparse backend (reference /
+    /// baseline mode; O(vocab) per emitted row).
+    pub fn with_dense_rows(mut self) -> Self {
+        self.dense_rows = true;
         self
     }
 
@@ -96,10 +129,16 @@ impl SyntheticLm {
         &self.target_sim
     }
 
-    fn one_hot(&self, tok: u32) -> ProbRow {
-        let mut row = vec![0.0; self.vocab];
-        row[tok as usize] = 1.0;
-        row
+    /// One distribution row: a two-word `OneHot` view in the default
+    /// sparse mode, a vocab-sized vector in the dense reference mode.
+    fn row(&self, tok: u32) -> LogitsView {
+        if self.dense_rows {
+            let mut row = vec![0.0; self.vocab];
+            row[tok as usize] = 1.0;
+            LogitsView::dense(row)
+        } else {
+            LogitsView::one_hot(tok, self.vocab)
+        }
     }
 
     fn state(&self, seq: SeqId) -> &SeqState {
@@ -108,14 +147,9 @@ impl SyntheticLm {
 
     fn price_target(&mut self, b: usize, s: usize) -> f64 {
         let ctx = self.ctx_for_pricing;
-        match &mut self.noise_rng {
-            Some(rng) => self
-                .target_sim
-                .clone()
-                .with_activation(crate::simulator::ActivationMode::Sampled)
-                .forward_time(b, s, ctx, Some(rng))
-                .total(),
-            None => self.target_sim.t_forward(b, s, ctx),
+        match (&mut self.noise_rng, &self.noisy_target_sim) {
+            (Some(rng), Some(sim)) => sim.forward_time(b, s, ctx, Some(rng)).total(),
+            _ => self.target_sim.t_forward(b, s, ctx),
         }
     }
 }
@@ -181,7 +215,7 @@ impl SdBackend for SyntheticLm {
                     }
                     t
                 };
-                rows.push(self.one_hot(tok));
+                rows.push(self.row(tok));
                 toks.push(tok);
             }
             if gamma > 0 {
@@ -224,8 +258,8 @@ impl SdBackend for SyntheticLm {
             // Row g is the target's next-token distribution after
             // [.., feed, d1..dg] — one-hot at the chain token (the chain
             // defines the target's behavior regardless of draft content).
-            let rows: Vec<ProbRow> = (0..=gamma)
-                .map(|g| self.one_hot(chain_token(self.stream, seq, base + 1 + g, self.vocab)))
+            let rows: Vec<LogitsView> = (0..=gamma)
+                .map(|g| self.row(chain_token(self.stream, seq, base + 1 + g, self.vocab)))
                 .collect();
             let st = self.seqs.get_mut(&seq).unwrap();
             st.target_len += gamma + 1; // consumed [feed, d1..dγ]
@@ -378,6 +412,41 @@ mod tests {
         let mut b = backend(0.5);
         b.prefill(&[(1, vec![1, 2])]).unwrap();
         assert!(b.prefill(&[(1, vec![1, 2])]).is_err());
+    }
+
+    #[test]
+    fn sparse_rows_by_default_dense_in_reference_mode() {
+        let mut b = backend(1.0);
+        b.prefill(&[(1, vec![1, 2])]).unwrap();
+        let p = b.propose(&[1], &[vec![2]], 2, &[0.0], 1).unwrap();
+        assert!(matches!(p.probs[0][0], LogitsView::OneHot { .. }));
+        let v = b.verify(&[1], &[2], &[p.tokens[0].clone()], &[0.0]).unwrap();
+        assert!(matches!(v.probs[0][0], LogitsView::OneHot { .. }));
+
+        let mut d = backend(1.0).with_dense_rows();
+        d.prefill(&[(1, vec![1, 2])]).unwrap();
+        let p = d.propose(&[1], &[vec![2]], 2, &[0.0], 1).unwrap();
+        match &p.probs[0][0] {
+            LogitsView::Dense(row) => assert_eq!(row.len(), 64),
+            other => panic!("expected dense row, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn realistic_vocab_runs_without_dense_allocations() {
+        let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+        let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+        let mut b = SyntheticLm::new(target, draft, 1.0, 9).with_vocab(151_936);
+        assert_eq!(b.vocab(), 151_936);
+        b.prefill(&[(1, vec![5, 6])]).unwrap();
+        let p = b.propose(&[1], &[vec![6]], 4, &[0.0], 3).unwrap();
+        assert_eq!(p.tokens[0], b.expected_chain(1, 2, 4));
+        assert!(p.tokens[0].iter().all(|&t| (t as usize) < 151_936));
+        let v = b.verify(&[1], &[6], &[p.tokens[0].clone()], &[0.0]).unwrap();
+        assert_eq!(v.probs[0].len(), 5);
+        assert!(matches!(v.probs[0][0], LogitsView::OneHot { .. }));
+        // The sparse row still reports the full vocabulary.
+        assert_eq!(v.probs[0][0].vocab(), 151_936);
     }
 
     #[test]

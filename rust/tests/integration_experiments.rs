@@ -50,6 +50,23 @@ fn peak_speedup_helper() {
 }
 
 #[test]
+fn vocab_scale_full_sweep_at_realistic_vocab() {
+    // The acceptance criterion for the sparse-logits tentpole: a full
+    // fig2-style 19-point batch sweep at Qwen2's real 151936-entry vocab
+    // completes under the parallel runner, and its speedups agree with
+    // the toy-vocab sweep (the virtual clock is vocab-independent).
+    let out = vocab_scale::run(&[64, 151_936], 4, 0.9, 21).unwrap();
+    vocab_scale::check_shape(&out).unwrap();
+    assert_eq!(out.speedups[1].len(), paper_batch_grid().len());
+    // The realistic-vocab sweep shows the same headline result.
+    let peak = out.speedups[1]
+        .iter()
+        .cloned()
+        .fold(f64::NEG_INFINITY, f64::max);
+    assert!(peak > 1.4, "SD should win at moderate batch: peak {peak}");
+}
+
+#[test]
 fn table1_single_cell_sanity() {
     let row = tables::compute_row("2xGPU-A", "qwen2", Dataset::HumanEval, 0.0, 9).unwrap();
     // γ ordering on the most predictable workload.

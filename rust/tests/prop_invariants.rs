@@ -6,7 +6,7 @@ use moesd::batching::{Request, SamplingParams};
 use moesd::engine::{Engine, EngineConfig};
 use moesd::hardware::platform_2x_gpu_a;
 use moesd::kvcache::KvConfig;
-use moesd::sampling::verify_chain;
+use moesd::sampling::{verify_chain, verify_chain_views, LogitsView};
 use moesd::scheduler::SchedulerConfig;
 use moesd::simulator::routing::Router;
 use moesd::simulator::ExecSim;
@@ -133,6 +133,169 @@ fn prop_verify_chain_length_and_identity() {
         }
         ensure(true, "")
     });
+}
+
+/// The tentpole equivalence, synthetic-oracle regime: `verify_chain` over
+/// sparse one-hot `LogitsView`s emits byte-identical token streams to the
+/// dense reference path, across α ∈ {0, 0.5, 1}, γ ∈ 0..=4, and vocab ∈
+/// {64, 4096, 151936}, with the two RNG streams staying in lockstep.
+#[test]
+fn prop_sparse_dense_equivalence_one_hot_chains() {
+    for &vocab in &[64usize, 4096, 151_936] {
+        for &alpha in &[0.0f64, 0.5, 1.0] {
+            for gamma in 0usize..=4 {
+                let seed = 0xC0FFEE
+                    ^ (vocab as u64)
+                    ^ ((gamma as u64) << 32)
+                    ^ (((alpha * 2.0) as u64) << 40);
+                let mut gen = Rng::new(seed, 17);
+                let mut rng_sparse = Rng::new(seed, 23);
+                let mut rng_dense = Rng::new(seed, 23);
+                // Dense expansion at 151936 is the expensive reference —
+                // fewer rounds there keep the suite fast.
+                let rounds = if vocab > 100_000 { 8 } else { 60 };
+                for round in 0..rounds {
+                    // Synthesize a round like the synthetic oracle: one-hot
+                    // target chain, draft matching with probability α.
+                    let targets: Vec<u32> = (0..=gamma)
+                        .map(|_| gen.below(vocab as u64) as u32)
+                        .collect();
+                    let draft_tokens: Vec<u32> = (0..gamma)
+                        .map(|g| {
+                            if gen.bernoulli(alpha) {
+                                targets[g]
+                            } else {
+                                let mut t = gen.below(vocab as u64 - 1) as u32;
+                                if t >= targets[g] {
+                                    t += 1;
+                                }
+                                t
+                            }
+                        })
+                        .collect();
+                    let sparse_d: Vec<LogitsView> = draft_tokens
+                        .iter()
+                        .map(|&t| LogitsView::one_hot(t, vocab))
+                        .collect();
+                    let sparse_t: Vec<LogitsView> = targets
+                        .iter()
+                        .map(|&t| LogitsView::one_hot(t, vocab))
+                        .collect();
+                    let dense_d: Vec<Vec<f64>> =
+                        sparse_d.iter().map(LogitsView::to_dense).collect();
+                    let dense_t: Vec<Vec<f64>> =
+                        sparse_t.iter().map(LogitsView::to_dense).collect();
+                    let a =
+                        verify_chain_views(&draft_tokens, &sparse_d, &sparse_t, &mut rng_sparse);
+                    let b = verify_chain(&draft_tokens, &dense_d, &dense_t, &mut rng_dense);
+                    assert_eq!(
+                        a, b,
+                        "sparse/dense divergence: vocab={vocab} α={alpha} γ={gamma} round={round}"
+                    );
+                }
+                // Same number of RNG draws consumed on both paths.
+                assert_eq!(
+                    rng_sparse.next_u64(),
+                    rng_dense.next_u64(),
+                    "rng streams diverged: vocab={vocab} α={alpha} γ={gamma}"
+                );
+            }
+        }
+    }
+}
+
+/// Equivalence under arbitrary sparse supports: random TopK target rows
+/// against full-support dense drafts (and dense-wrapped targets) match
+/// the dense reference bit-for-bit.
+#[test]
+fn prop_topk_view_matches_dense_expansion() {
+    let mut runner = Runner::new("topk_equivalence");
+    runner.run(200, |g| {
+        let vocab = g.usize_in(8, 512);
+        let gamma = g.usize_in(0, 5);
+        let k = g.usize_in(1, 8.min(vocab));
+        let mut rng = Rng::seeded(g.u64_in(0, 1 << 30));
+        // Random k-sparse target rows over distinct tokens.
+        let mk_topk = |rng: &mut Rng| -> LogitsView {
+            let mut ids: Vec<u32> = (0..vocab as u32).collect();
+            rng.shuffle(&mut ids);
+            let entries: Vec<(u32, f64)> =
+                ids[..k].iter().map(|&t| (t, rng.f64() + 0.01)).collect();
+            LogitsView::top_k(entries, vocab)
+        };
+        // Full-support dense draft rows.
+        let mk_dense = |rng: &mut Rng| -> Vec<f64> {
+            let v: Vec<f64> = (0..vocab).map(|_| rng.f64() + 0.01).collect();
+            let s: f64 = v.iter().sum();
+            v.into_iter().map(|x| x / s).collect()
+        };
+        let target_views: Vec<LogitsView> = (0..=gamma).map(|_| mk_topk(&mut rng)).collect();
+        let draft_rows: Vec<Vec<f64>> = (0..gamma).map(|_| mk_dense(&mut rng)).collect();
+        let draft_views: Vec<LogitsView> =
+            draft_rows.iter().cloned().map(LogitsView::dense).collect();
+        let draft_tokens: Vec<u32> = draft_rows
+            .iter()
+            .map(|d| rng.categorical(d) as u32)
+            .collect();
+        let dense_t: Vec<Vec<f64>> = target_views.iter().map(LogitsView::to_dense).collect();
+        let seed = g.u64_in(0, 1 << 30);
+        let mut ra = Rng::seeded(seed);
+        let mut rb = Rng::seeded(seed);
+        let a = verify_chain_views(&draft_tokens, &draft_views, &target_views, &mut ra);
+        let b = verify_chain(&draft_tokens, &draft_rows, &dense_t, &mut rb);
+        if a != b {
+            return Err(format!("topk divergence: {a:?} vs {b:?} (vocab={vocab}, k={k})"));
+        }
+        if ra.next_u64() != rb.next_u64() {
+            return Err("rng streams diverged".into());
+        }
+        ensure(true, "")
+    });
+}
+
+/// Engine-level equivalence: a backend emitting sparse OneHot rows and the
+/// dense-rows reference backend drive byte-identical serving runs — same
+/// completions, same round count — at toy and realistic vocabulary.
+#[test]
+fn prop_engine_sparse_equals_dense_rows_backend() {
+    for &(vocab, alpha, gamma) in &[(64usize, 0.5f64, 3usize), (4096, 0.9, 4), (151_936, 0.8, 2)] {
+        let run = |dense: bool| -> (Vec<(u64, Vec<u32>)>, u64) {
+            let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+            let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+            let mut backend = SyntheticLm::new(target, draft, alpha, 7).with_vocab(vocab);
+            if dense {
+                backend = backend.with_dense_rows();
+            }
+            let mut engine = Engine::new(
+                EngineConfig {
+                    gamma,
+                    ..Default::default()
+                },
+                backend,
+            );
+            for id in 0..4u64 {
+                engine.submit(Request {
+                    id,
+                    prompt: (0..6u32).collect(),
+                    params: SamplingParams {
+                        temperature: 0.0,
+                        max_new_tokens: 8,
+                        eos_token: None,
+                    },
+                    arrival: 0.0,
+                });
+            }
+            let mut done = engine.run_to_completion(10_000).unwrap();
+            done.sort_by_key(|c| c.id);
+            (
+                done.into_iter().map(|c| (c.id, c.tokens)).collect(),
+                engine.metrics.rounds,
+            )
+        };
+        let sparse = run(false);
+        let dense = run(true);
+        assert_eq!(sparse, dense, "vocab={vocab} α={alpha} γ={gamma}");
+    }
 }
 
 /// Routing conservation: every token lands on exactly K distinct experts,
