@@ -19,6 +19,12 @@ if [[ $FAST -eq 0 ]]; then
 
     echo "== cargo clippy (lib + bins, -D warnings, style advisory)"
     cargo clippy --lib --bins -- -D warnings -A clippy::style
+
+    # Rustdoc gate: broken intra-doc links / malformed doc markup are
+    # errors, so the module-map documentation can't rot. --no-deps keeps
+    # the vendored stub crates out of scope.
+    echo "== cargo doc (rustdoc warnings are errors)"
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 fi
 
 echo "== tier-1: cargo build --release && cargo test -q"

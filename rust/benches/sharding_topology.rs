@@ -1,0 +1,64 @@
+//! Bench: the expert-parallel topology sweep — SD speedup × batch ×
+//! EP degree × sparsity heatmap data (§3.4's scale axis), with the
+//! monotonicity claims asserted as shape checks.
+
+use moesd::benchlib::{banner, write_json_report, write_report, Json, ShapeChecks};
+use moesd::experiments::sharding::{self, Fabric};
+
+fn main() {
+    banner("sharding_topology", "§3.4 EP configurations");
+    let (gamma, alpha) = (3usize, 0.9f64);
+    let out = sharding::run(gamma, alpha);
+    write_report("sharding_sweep.csv", &out.table.to_string()).unwrap();
+
+    // Per-configuration summary: peak speedup and the SD-favorable edge.
+    let mut summary_rows: Vec<Json> = Vec::new();
+    for &(fabric, d) in &sharding::default_configs() {
+        for &k in &sharding::TOPK_SWEEP {
+            let series: Vec<&sharding::ShardPoint> = out
+                .points
+                .iter()
+                .filter(|p| p.fabric == fabric && p.devices == d && p.k == k)
+                .collect();
+            let peak = series
+                .iter()
+                .map(|p| p.speedup)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let edge = sharding::crossover_batch(fabric, d, k, gamma, alpha);
+            println!(
+                "{:>6} d={d} K={k}: peak {:.2}x, SD-favorable up to B≈{edge}",
+                fabric.name(),
+                peak
+            );
+            summary_rows.push(Json::from_pairs(vec![
+                ("fabric", fabric.name().into()),
+                ("devices", d.into()),
+                ("k", k.into()),
+                ("peak_speedup", peak.into()),
+                ("favorable_edge", edge.into()),
+            ]));
+        }
+    }
+    let json = Json::from_pairs(vec![
+        ("bench", Json::Str("sharding_topology".into())),
+        ("gamma", gamma.into()),
+        ("alpha", alpha.into()),
+        ("summary", Json::Arr(summary_rows)),
+    ]);
+    write_json_report("sharding_sweep.json", &json).unwrap();
+
+    let mut checks = ShapeChecks::new();
+    match sharding::check_shape(&out) {
+        Ok(()) => checks.check("EP/sparsity widen, comm-bound narrows", true),
+        Err(e) => {
+            println!("shape error: {e}");
+            checks.check("EP/sparsity widen, comm-bound narrows", false);
+        }
+    }
+    checks.check(
+        "8-way NVLink extends K=8 edge past one rank",
+        sharding::crossover_batch(Fabric::NvLink, 8, 8, gamma, alpha)
+            > sharding::crossover_batch(Fabric::None, 1, 8, gamma, alpha),
+    );
+    checks.finish("sharding_topology");
+}

@@ -55,6 +55,7 @@ pub use policy::{
     DecisionKind, Estimates, GammaDecision, GammaPolicy, ModelGuidedPolicy, StaticPolicy,
 };
 
+use crate::hardware::ShardingSpec;
 use crate::perfmodel::{PerfModel, PerfParams};
 use crate::scheduler::Scheduler;
 use crate::simulator::ExecSim;
@@ -87,9 +88,13 @@ pub enum CostModelSpec {
         k: usize,
         /// Total expert count (E) of the target.
         e: usize,
+        /// Expert-parallel deployment the target runs under
+        /// ([`ShardingSpec::single`] for one group).
+        sharding: ShardingSpec,
     },
     /// The roofline simulator pair — the same oracle the synthetic
-    /// backend prices rounds with.
+    /// backend prices rounds with. The target simulator carries its own
+    /// [`ShardingSpec`] (see [`crate::simulator::ExecSim::with_sharding`]).
     Roofline {
         target: ExecSim,
         draft: ExecSim,
@@ -115,6 +120,42 @@ impl CostModelSpec {
             params,
             k,
             e,
+            sharding: ShardingSpec::single(),
+        }
+    }
+
+    /// Re-anchor this cost model on an EP-sharded deployment: the policy's
+    /// γ argmax then reflects the topology's cost surface (wider
+    /// SD-favorable batch ranges on fast fabrics, smaller γ on
+    /// communication-bound ones).
+    pub fn with_sharding(self, spec: ShardingSpec) -> CostModelSpec {
+        match self {
+            CostModelSpec::Perf {
+                ridge_point,
+                params,
+                k,
+                e,
+                ..
+            } => CostModelSpec::Perf {
+                ridge_point,
+                params,
+                k,
+                e,
+                sharding: spec,
+            },
+            CostModelSpec::Roofline { target, draft, ctx } => CostModelSpec::Roofline {
+                target: target.with_sharding(spec),
+                draft,
+                ctx,
+            },
+        }
+    }
+
+    /// The EP sharding this cost model prices against.
+    pub fn sharding(&self) -> &ShardingSpec {
+        match self {
+            CostModelSpec::Perf { sharding, .. } => sharding,
+            CostModelSpec::Roofline { target, .. } => target.sharding(),
         }
     }
 }
@@ -127,7 +168,9 @@ impl CostModel for CostModelSpec {
                 params,
                 k,
                 e,
-            } => PerfModel::with_ridge_point(*ridge_point).t_target(params, b, s, *k, *e),
+                sharding,
+            } => PerfModel::with_ridge_point(*ridge_point)
+                .t_target_sharded(params, b, s, *k, *e, sharding),
             CostModelSpec::Roofline { target, ctx, .. } => target.t_forward(b, s, *ctx),
         }
     }

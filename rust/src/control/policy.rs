@@ -362,6 +362,39 @@ mod tests {
     }
 
     #[test]
+    fn sharded_cost_model_shifts_gamma_per_topology() {
+        // The tentpole's control-plane surface: the same policy, handed a
+        // cost model re-anchored on an EP topology, picks a γ tuned to
+        // that topology. On a communication-bound fabric every extra
+        // verified token pays all-to-all bandwidth, so the argmax γ drops
+        // (validated against the python replica: γ=8 → γ=6 at B=8).
+        use crate::hardware::{ShardingSpec, Topology};
+        let arch = crate::arch::presets::qwen2_57b_a14b();
+        let d1 = policy(roofline_spec(), 0.0, 0);
+        let pcie_spec = roofline_spec()
+            .with_sharding(ShardingSpec::for_arch(Topology::pcie(4), &arch));
+        let pcie = policy(pcie_spec, 0.0, 0);
+        let costs = CostTable::default();
+        let best = |p: &ModelGuidedPolicy, b: usize| {
+            argmax(
+                &(0..=8)
+                    .map(|g| p.score(b, g, 0.85, &costs))
+                    .collect::<Vec<_>>(),
+            )
+        };
+        let g1 = best(&d1, 8);
+        let gp = best(&pcie, 8);
+        assert!(g1 >= 1 && gp >= 1, "SD should win at B=8: {g1} / {gp}");
+        assert!(
+            gp < g1,
+            "comm-bound fabric should shrink the argmax γ: d1={g1} pcie={gp}"
+        );
+        // Both topologies still fall back to AR once compute-bound.
+        assert_eq!(best(&d1, 4096), 0);
+        assert_eq!(best(&pcie, 4096), 0);
+    }
+
+    #[test]
     fn probe_cycle_refreshes_ar_fallback() {
         let cfg = ControlConfig {
             probe_every_intervals: 3,

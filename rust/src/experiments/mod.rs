@@ -19,6 +19,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
+pub mod sharding;
 pub mod table3;
 pub mod tables;
 pub mod vocab_scale;
@@ -26,7 +27,7 @@ pub mod vocab_scale;
 use crate::arch::ModelArch;
 use crate::batching::{Buckets, Request, SamplingParams};
 use crate::engine::{Engine, EngineConfig};
-use crate::hardware::Platform;
+use crate::hardware::{Platform, ShardingSpec, Topology};
 use crate::kvcache::KvConfig;
 use crate::scheduler::SchedulerConfig;
 use crate::simulator::ExecSim;
@@ -66,6 +67,11 @@ pub struct RunOpts {
     /// `LogitsView` interface keeps O(1) per row — so realistic values up
     /// to Qwen2's 151 936 are now feasible (see `vocab_scale`).
     pub vocab: usize,
+    /// Expert-parallel topology for the *target* model (the draft replica
+    /// serves its own rank). `None` keeps the unsharded single-group
+    /// pricing; `Some(topology)` prices the EP deployment via
+    /// [`ShardingSpec::for_arch`] (see [`sharding`]).
+    pub topology: Option<Topology>,
 }
 
 impl Default for RunOpts {
@@ -77,6 +83,7 @@ impl Default for RunOpts {
             noise: false,
             tile_effects: false,
             vocab: 64,
+            topology: None,
         }
     }
 }
@@ -95,7 +102,16 @@ fn build_engine(
     // The draft runs on a single device of the platform (the paper notes
     // the small draft model stays single-GPU while the target shards).
     let draft_platform = Platform::new(platform.gpu.clone(), 1, platform.interconnect_bw);
-    let dsim = ExecSim::new(draft.clone(), draft_platform);
+    let mut dsim = ExecSim::new(draft.clone(), draft_platform);
+    if let Some(topo) = &opts.topology {
+        tsim = tsim.with_sharding(ShardingSpec::for_arch(topo.clone(), target));
+        // One draft replica per EP rank: for a dense draft the EP walk
+        // degenerates to data parallelism (per-rank B/d tokens, replicated
+        // weights, zero fabric payload) — the same pricing the analytic
+        // sharding sweep uses, so engine-measured and sweep numbers
+        // reconcile.
+        dsim = dsim.with_sharding(ShardingSpec::for_arch(topo.clone(), draft));
+    }
     let mut backend = SyntheticLm::new(tsim, dsim, alpha, opts.seed).with_vocab(opts.vocab);
     if opts.noise {
         backend = backend.with_noise(opts.seed ^ 0xabcd);
@@ -158,7 +174,10 @@ pub fn run_pair(
     assert!(gamma >= 1, "run_pair needs a speculative γ");
     let (t_sd, sigma) = run_one(target, draft, platform, alpha, gamma, batch, opts)?;
     let (t_ar, _) = run_one(target, draft, platform, alpha, 0, batch, opts)?;
-    let sim = ExecSim::new(target.clone(), platform.clone());
+    let mut sim = ExecSim::new(target.clone(), platform.clone());
+    if let Some(topo) = &opts.topology {
+        sim = sim.with_sharding(ShardingSpec::for_arch(topo.clone(), target));
+    }
     let teff = sim.target_efficiency(batch, gamma, 512);
     Ok(PairStats {
         batch,

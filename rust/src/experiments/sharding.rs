@@ -1,0 +1,360 @@
+//! Expert-parallel topology sweep — the §3.4 "extensive EP
+//! configurations" scale axis, turned into a figure family.
+//!
+//! Every existing experiment prices one serving group; this sweep widens
+//! the axis to a rack: SD speedup × batch size × EP degree × MoE sparsity,
+//! across an NVLink-class and a PCIe-class fabric. Speedups come from the
+//! Eq. 4 decomposition over the EP-sharded roofline prices
+//! ([`crate::simulator::ExecSim::with_sharding`]), with one draft replica
+//! per EP rank (a dense model's EP walk is pure data parallelism —
+//! per-rank `B/d` tokens on replicated weights — the same pricing the
+//! engine's backend charges, so sweep and engine numbers reconcile).
+//!
+//! The qualitative claims `check_shape` pins (each validated against an
+//! independent python replica of the pricing model):
+//! 1. the SD-favorable batch range — the largest B whose Eq. 4 speedup
+//!    exceeds 1 ([`crossover_batch`]) — grows monotonically with EP
+//!    degree at every sparsity, on both fabrics;
+//! 2. sparser MoE (smaller K) pushes the crossover further out at every
+//!    topology — sparsity × EP degree compound;
+//! 3. on the payload-heavy K=8 axis a communication-bound fabric (PCIe)
+//!    drags target efficiency below NVLink's and narrows the
+//!    high-efficiency batch band. (Curiosity, deliberately *not*
+//!    asserted: at very sparse K with many ranks the comparison can
+//!    invert — the all-to-all payload shrinks with K while PCIe's
+//!    γ-independent launch latency dilutes the verify-term growth.)
+
+use super::parallel_sweep;
+use crate::arch::presets;
+use crate::hardware::{platform_2x_gpu_a, Platform, ShardingSpec, Topology};
+use crate::simulator::ExecSim;
+use crate::theory;
+use crate::util::csv::CsvTable;
+
+/// Fabric class of an EP group (the `d = 1` baseline has none).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fabric {
+    /// Single rank — no inter-rank fabric.
+    None,
+    /// NVLink/NVSwitch-class ([`Topology::nvlink`]).
+    NvLink,
+    /// PCIe-class ([`Topology::pcie`]) — the communication-bound regime.
+    Pcie,
+}
+
+impl Fabric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Fabric::None => "none",
+            Fabric::NvLink => "nvlink",
+            Fabric::Pcie => "pcie",
+        }
+    }
+
+    /// Topology for `devices` ranks (`None` iff `devices == 1`).
+    pub fn topology(&self, devices: usize) -> Option<Topology> {
+        match self {
+            Fabric::None => None,
+            Fabric::NvLink => Some(Topology::nvlink(devices)),
+            Fabric::Pcie => Some(Topology::pcie(devices)),
+        }
+    }
+}
+
+/// EP degrees swept (1 is the unsharded baseline).
+pub const EP_DEGREES: [usize; 4] = [1, 2, 4, 8];
+
+/// Activated-experts-per-token sweep (Qwen2-57B's K=8 plus the sparser
+/// Fig. 4-style variants).
+pub const TOPK_SWEEP: [usize; 3] = [2, 4, 8];
+
+/// Power-of-two batch grid 1..4096 — wide enough to cross every regime
+/// from memory-bound EP ranks to the compute-bound collapse.
+pub fn sharding_batch_grid() -> Vec<usize> {
+    (0..=12).map(|i| 1usize << i).collect()
+}
+
+/// One point of the sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardPoint {
+    pub devices: usize,
+    pub fabric: Fabric,
+    pub k: usize,
+    pub batch: usize,
+    /// Sharded target efficiency T_T(B,1)/T_T(B,γ+1) (§3.1).
+    pub target_efficiency: f64,
+    /// Eq. 4 analytic speedup over the sharded prices.
+    pub speedup: f64,
+}
+
+pub struct ShardingOutput {
+    pub gamma: usize,
+    pub alpha: f64,
+    pub points: Vec<ShardPoint>,
+    pub table: CsvTable,
+}
+
+/// The sharded target simulator for one (fabric, d, K) configuration.
+fn target_sim(fabric: Fabric, devices: usize, k: usize) -> ExecSim {
+    let target = presets::qwen2_57b_a14b().with_topk(k);
+    let mut sim = ExecSim::new(target.clone(), platform_2x_gpu_a());
+    if let Some(topo) = fabric.topology(devices) {
+        sim = sim.with_sharding(ShardingSpec::for_arch(topo, &target));
+    }
+    sim
+}
+
+/// Draft replica on one GPU of its rank (same convention as the engine
+/// builder in `experiments::build_engine`): one replica per EP rank,
+/// which for a dense draft is the EP walk's data-parallel degenerate
+/// case (per-rank `B/d` tokens, replicated weights, zero fabric
+/// payload) — identical pricing to what the engine's backend charges.
+fn draft_sim(fabric: Fabric, devices: usize) -> ExecSim {
+    let platform = platform_2x_gpu_a();
+    let draft_platform = Platform::new(platform.gpu.clone(), 1, platform.interconnect_bw);
+    let draft = presets::qwen2_0_5b();
+    let mut sim = ExecSim::new(draft.clone(), draft_platform);
+    if let Some(topo) = fabric.topology(devices) {
+        sim = sim.with_sharding(ShardingSpec::for_arch(topo, &draft));
+    }
+    sim
+}
+
+/// Eq. 4 point evaluation: (target efficiency, speedup) at one setting.
+fn eval_point(
+    tsim: &ExecSim,
+    dsim: &ExecSim,
+    batch: usize,
+    gamma: usize,
+    alpha: f64,
+) -> (f64, f64) {
+    let ctx = 512;
+    let t1 = tsim.t_forward(batch, 1, ctx);
+    let tg = tsim.t_forward(batch, gamma + 1, ctx);
+    let td = dsim.t_forward(batch, 1, ctx);
+    let rej = tsim.t_reject(batch, gamma);
+    let sigma = theory::sigma_from_alpha(alpha, gamma);
+    let terms = theory::speedup_decomposition(t1, tg, td, rej, sigma, gamma);
+    (theory::target_efficiency(t1, tg), terms.speedup())
+}
+
+/// The fabric × EP-degree configurations swept (d = 1 baseline once).
+pub fn default_configs() -> Vec<(Fabric, usize)> {
+    let mut cfgs = vec![(Fabric::None, 1)];
+    for &d in &EP_DEGREES[1..] {
+        cfgs.push((Fabric::NvLink, d));
+        cfgs.push((Fabric::Pcie, d));
+    }
+    cfgs
+}
+
+/// Run the full sweep: every (fabric, d) × K × batch point, fanned across
+/// worker threads (each point builds its own simulators, so results are
+/// bit-identical to a serial sweep).
+pub fn run(gamma: usize, alpha: f64) -> ShardingOutput {
+    let batches = sharding_batch_grid();
+    let mut grid: Vec<(Fabric, usize, usize, usize)> = Vec::new();
+    for &(fabric, d) in &default_configs() {
+        for &k in &TOPK_SWEEP {
+            for &b in &batches {
+                grid.push((fabric, d, k, b));
+            }
+        }
+    }
+    let points: Vec<ShardPoint> = parallel_sweep(&grid, |&(fabric, d, k, b)| {
+        let tsim = target_sim(fabric, d, k);
+        let dsim = draft_sim(fabric, d);
+        let (teff, x) = eval_point(&tsim, &dsim, b, gamma, alpha);
+        ShardPoint {
+            devices: d,
+            fabric,
+            k,
+            batch: b,
+            target_efficiency: teff,
+            speedup: x,
+        }
+    });
+    let mut table = CsvTable::new(&[
+        "devices",
+        "fabric",
+        "link_gbps",
+        "k",
+        "batch",
+        "target_efficiency",
+        "speedup",
+    ]);
+    for p in &points {
+        let link = p
+            .fabric
+            .topology(p.devices)
+            .map_or(0.0, |t| t.link_bw / 1e9);
+        table.push_row(vec![
+            format!("{}", p.devices),
+            p.fabric.name().to_string(),
+            crate::util::csv::format_num(link),
+            format!("{}", p.k),
+            format!("{}", p.batch),
+            format!("{:.4}", p.target_efficiency),
+            format!("{:.4}", p.speedup),
+        ]);
+    }
+    ShardingOutput {
+        gamma,
+        alpha,
+        points,
+        table,
+    }
+}
+
+/// The SD-favorable upper edge: largest B (16-step scan up to 2048) whose
+/// Eq. 4 speedup exceeds 1 at this configuration.
+pub fn crossover_batch(
+    fabric: Fabric,
+    devices: usize,
+    k: usize,
+    gamma: usize,
+    alpha: f64,
+) -> usize {
+    let tsim = target_sim(fabric, devices, k);
+    let dsim = draft_sim(fabric, devices);
+    let mut best = 0;
+    let mut b = 16;
+    while b <= 2048 {
+        let (_, x) = eval_point(&tsim, &dsim, b, gamma, alpha);
+        if x > 1.0 {
+            best = b;
+        }
+        b += 16;
+    }
+    best
+}
+
+/// Width of the high-efficiency band: how many grid batches keep sharded
+/// target efficiency ≥ `tau`.
+pub fn teff_band_width(fabric: Fabric, devices: usize, k: usize, gamma: usize, tau: f64) -> usize {
+    let tsim = target_sim(fabric, devices, k);
+    sharding_batch_grid()
+        .into_iter()
+        .filter(|&b| tsim.target_efficiency(b, gamma, 512) >= tau)
+        .count()
+}
+
+/// The monotonicity claims of the module docs, asserted on the sweep
+/// (validated against the python replica — see module docs).
+pub fn check_shape(out: &ShardingOutput) -> Result<(), String> {
+    for p in &out.points {
+        if !(p.speedup.is_finite() && p.speedup > 0.0) {
+            return Err(format!("non-finite speedup at {p:?}"));
+        }
+        if !(p.target_efficiency > 0.0 && p.target_efficiency <= 1.0 + 1e-9) {
+            return Err(format!("target efficiency out of range at {p:?}"));
+        }
+    }
+    let (gamma, alpha) = (out.gamma, out.alpha);
+
+    // 1. Favorable range grows with EP degree, per sparsity and fabric.
+    for &k in &TOPK_SWEEP {
+        for fabric in [Fabric::NvLink, Fabric::Pcie] {
+            let mut prev = crossover_batch(Fabric::None, 1, k, gamma, alpha);
+            let base = prev;
+            for &d in &EP_DEGREES[1..] {
+                let edge = crossover_batch(fabric, d, k, gamma, alpha);
+                if edge < prev {
+                    return Err(format!(
+                        "favorable edge shrank with EP: K={k} {} d={d}: {edge} < {prev}",
+                        fabric.name()
+                    ));
+                }
+                prev = edge;
+            }
+            if prev <= base {
+                return Err(format!(
+                    "8-way EP should strictly widen the favorable range: K={k} {}: {prev} vs {base}",
+                    fabric.name()
+                ));
+            }
+        }
+    }
+
+    // 2. Sparser MoE pushes the edge out at every topology.
+    for &(fabric, d) in &default_configs() {
+        let mut prev = usize::MAX;
+        for &k in &TOPK_SWEEP {
+            let edge = crossover_batch(fabric, d, k, gamma, alpha);
+            if edge > prev {
+                return Err(format!(
+                    "sparser K should not narrow the range: {} d={d} K={k}: {edge} > {prev}",
+                    fabric.name()
+                ));
+            }
+            prev = edge;
+        }
+    }
+
+    // 3. Communication-bound fabric (payload-heavy K=8 axis): PCIe target
+    //    efficiency sits below NVLink's, and the ≥0.85 band is narrower.
+    for &d in &EP_DEGREES[1..] {
+        for b in [16usize, 32, 64, 128] {
+            let nv = target_sim(Fabric::NvLink, d, 8).target_efficiency(b, gamma, 512);
+            let pc = target_sim(Fabric::Pcie, d, 8).target_efficiency(b, gamma, 512);
+            if pc >= nv {
+                return Err(format!(
+                    "PCIe teff should trail NVLink at K=8 d={d} B={b}: {pc} vs {nv}"
+                ));
+            }
+        }
+        let w_nv = teff_band_width(Fabric::NvLink, d, 8, gamma, 0.85);
+        let w_pc = teff_band_width(Fabric::Pcie, d, 8, gamma, 0.85);
+        if w_pc > w_nv {
+            return Err(format!(
+                "PCIe high-efficiency band wider than NVLink at d={d}: {w_pc} > {w_nv}"
+            ));
+        }
+        if d >= 4 && w_pc >= w_nv {
+            return Err(format!(
+                "PCIe band should be strictly narrower at d={d}: {w_pc} vs {w_nv}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_grid_and_passes_shape() {
+        let out = run(3, 0.9);
+        let want = default_configs().len() * TOPK_SWEEP.len() * sharding_batch_grid().len();
+        assert_eq!(out.points.len(), want);
+        assert_eq!(out.table.rows.len(), want);
+        check_shape(&out).unwrap();
+    }
+
+    #[test]
+    fn crossover_values_match_python_replica() {
+        // Spot values computed by the independent python replica of the
+        // pricing model (16-step scan, γ=3, α=0.9): K=8 crossovers
+        // 352 (d=1) → 384 (d=4 nvlink) → 464 (d=8 nvlink).
+        assert_eq!(crossover_batch(Fabric::None, 1, 8, 3, 0.9), 352);
+        assert_eq!(crossover_batch(Fabric::NvLink, 4, 8, 3, 0.9), 384);
+        assert_eq!(crossover_batch(Fabric::NvLink, 8, 8, 3, 0.9), 464);
+    }
+
+    #[test]
+    fn baseline_points_match_unsharded_simulator() {
+        // The d=1 column of the sweep must be exactly the unsharded
+        // simulator's numbers (no spec, no fabric).
+        let out = run(3, 0.9);
+        let plain = ExecSim::new(presets::qwen2_57b_a14b().with_topk(8), platform_2x_gpu_a());
+        for p in out.points.iter().filter(|p| p.devices == 1 && p.k == 8) {
+            assert_eq!(
+                p.target_efficiency,
+                plain.target_efficiency(p.batch, 3, 512),
+                "B={}",
+                p.batch
+            );
+        }
+    }
+}

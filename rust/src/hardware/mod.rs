@@ -1,7 +1,21 @@
 //! Hardware platform descriptions: GPU roofline profiles (Eq. 1's ridge
 //! point), multi-GPU platforms with tensor-parallel scaling, tile
-//! quantization (the Fig. 5 sawtooth), and the CPU-offload bandwidth mode
-//! discussed in §3.4.
+//! quantization (the Fig. 5 sawtooth), the CPU-offload bandwidth mode
+//! discussed in §3.4, and expert-parallel (EP) sharding topologies
+//! ([`Topology`] / [`ShardingSpec`]) for the §3.4 "extensive EP
+//! configurations" scale axis.
+//!
+//! Two distinct multi-device axes compose here:
+//! - **Tensor parallelism** ([`Platform::n_gpus`]): every weight matrix is
+//!   split across the TP group, which acts as one fat device with
+//!   aggregated FLOPs/bandwidth plus per-layer all-reduces. This is the
+//!   paper's 2×/4× GPU setting.
+//! - **Expert parallelism** ([`ShardingSpec`]): `d` whole [`Platform`]s
+//!   (EP ranks) each own `E/d` routed experts; non-expert weights are
+//!   replicated and sequences are data-parallel (per-rank batch `B/d`),
+//!   while tokens reach remote experts through all-to-all
+//!   dispatch/combine on the [`Topology`] fabric. This is how
+//!   Qwen2-57B-class sparse MoEs are actually served at rack scale.
 //!
 //! The paper anonymizes its devices as GPU-A/B/C. We bind them to public
 //! roofline numbers that reproduce the paper's orderings:
@@ -210,6 +224,184 @@ pub fn platform_by_name(name: &str) -> anyhow::Result<Platform> {
     }
 }
 
+/// Inter-rank fabric of an expert-parallel group: how many EP ranks there
+/// are and how fast tokens move between them during MoE dispatch/combine.
+///
+/// `devices == 1` is the degenerate single-rank topology — no fabric, no
+/// all-to-all — and every sharded code path is required to collapse to the
+/// unsharded one bit-for-bit there (property-tested in
+/// `rust/tests/prop_invariants.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    /// EP group size `d` (each rank is a full [`Platform`]).
+    pub devices: usize,
+    /// Per-rank, per-direction all-to-all bandwidth, bytes/s.
+    pub link_bw: f64,
+    /// Fixed latency per collective launch, seconds.
+    pub link_latency: f64,
+}
+
+impl Topology {
+    /// The degenerate one-rank topology (no fabric).
+    pub fn single() -> Topology {
+        Topology {
+            devices: 1,
+            link_bw: 300e9,
+            link_latency: 0.0,
+        }
+    }
+
+    /// NVLink/NVSwitch-class fabric: ~250 GB/s per direction, ~10 µs
+    /// collective launch.
+    pub fn nvlink(devices: usize) -> Topology {
+        Topology {
+            devices,
+            link_bw: 250e9,
+            link_latency: 10e-6,
+        }
+    }
+
+    /// PCIe 4.0 x16-class fabric: ~32 GB/s per direction, ~25 µs launch —
+    /// the communication-bound regime (cf. the 4×GPU-C platform).
+    pub fn pcie(devices: usize) -> Topology {
+        Topology {
+            devices,
+            link_bw: 32e9,
+            link_latency: 25e-6,
+        }
+    }
+
+    /// Fully custom fabric.
+    pub fn custom(devices: usize, link_bw: f64, link_latency: f64) -> Topology {
+        Topology {
+            devices,
+            link_bw,
+            link_latency,
+        }
+    }
+
+    /// Short identifier for reports, e.g. `ep4@250GB/s`.
+    pub fn name(&self) -> String {
+        format!("ep{}@{:.0}GB/s", self.devices, self.link_bw / 1e9)
+    }
+}
+
+/// Everything a cost model needs to price one expert-parallel deployment:
+/// the fabric, a routing-imbalance factor, and the all-to-all payload scale
+/// (so arch-less models like [`crate::perfmodel::PerfModel`] can price the
+/// fabric without knowing hidden sizes).
+///
+/// Construct with [`ShardingSpec::for_arch`] when a [`crate::arch::ModelArch`]
+/// is at hand (derives the payload exactly), or [`ShardingSpec::single`]
+/// for the unsharded baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardingSpec {
+    pub topology: Topology,
+    /// Straggler multiplier on the per-rank expert arm (balanced routing
+    /// = 1.0; the hottest rank sees `imbalance ×` the mean expert load).
+    pub imbalance: f64,
+    /// Dispatch + combine bytes crossing the expert fabric per *global*
+    /// token for one full forward pass: `2 · layers · K · hidden · dtype`
+    /// for a MoE architecture, 0 for dense (no routed experts, no
+    /// all-to-all).
+    pub payload_bytes_per_token: f64,
+    /// Collective launches per forward (2 per MoE layer).
+    pub collectives_per_forward: f64,
+}
+
+impl ShardingSpec {
+    /// The unsharded baseline (one rank, zero fabric cost).
+    pub fn single() -> ShardingSpec {
+        ShardingSpec {
+            topology: Topology::single(),
+            imbalance: 1.0,
+            payload_bytes_per_token: 0.0,
+            collectives_per_forward: 0.0,
+        }
+    }
+
+    /// Topology-only spec with zero payload (an *ideal* fabric — useful
+    /// for ablating bandwidth effects out of a sweep).
+    pub fn new(topology: Topology) -> ShardingSpec {
+        ShardingSpec {
+            topology,
+            imbalance: 1.0,
+            payload_bytes_per_token: 0.0,
+            collectives_per_forward: 0.0,
+        }
+    }
+
+    /// Derive the payload scale from a model architecture: each token's
+    /// hidden state is scattered to its K experts and gathered back, per
+    /// MoE layer. Dense architectures get a zero payload (EP is a no-op
+    /// for them).
+    pub fn for_arch(topology: Topology, arch: &crate::arch::ModelArch) -> ShardingSpec {
+        let (payload, collectives) = if arch.is_moe() {
+            (
+                2.0 * arch.layers as f64
+                    * arch.topk() as f64
+                    * arch.hidden as f64
+                    * arch.dtype_bytes,
+                2.0 * arch.layers as f64,
+            )
+        } else {
+            (0.0, 0.0)
+        };
+        ShardingSpec {
+            topology,
+            imbalance: 1.0,
+            payload_bytes_per_token: payload,
+            collectives_per_forward: collectives,
+        }
+    }
+
+    /// Builder: set the straggler factor (≥ 1).
+    pub fn with_imbalance(mut self, imbalance: f64) -> ShardingSpec {
+        self.imbalance = imbalance;
+        self
+    }
+
+    /// EP group size `d`.
+    pub fn devices(&self) -> usize {
+        self.topology.devices.max(1)
+    }
+
+    pub fn is_sharded(&self) -> bool {
+        self.devices() > 1
+    }
+
+    /// All-to-all time for one forward pass over `tokens` *global* tokens:
+    /// each rank exchanges its `tokens/d` share of the payload, of which
+    /// the [`crate::theory::ep_remote_fraction`] crosses its fabric link,
+    /// plus the per-collective launch latency. Zero for one rank.
+    pub fn comm_time(&self, tokens: f64) -> f64 {
+        let d = self.devices() as f64;
+        if self.devices() <= 1 {
+            return 0.0;
+        }
+        let remote = crate::theory::ep_remote_fraction(self.devices());
+        let per_rank_bytes = tokens / d * self.payload_bytes_per_token * remote;
+        self.collectives_per_forward * self.topology.link_latency
+            + per_rank_bytes / self.topology.link_bw
+    }
+
+    /// Loud validation for API boundaries (config loading, CLI).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.topology.devices >= 1, "topology needs >= 1 device");
+        anyhow::ensure!(
+            self.topology.link_bw > 0.0,
+            "link bandwidth must be positive"
+        );
+        anyhow::ensure!(self.topology.link_latency >= 0.0, "negative link latency");
+        anyhow::ensure!(self.imbalance >= 1.0, "imbalance factor must be >= 1");
+        anyhow::ensure!(
+            self.payload_bytes_per_token >= 0.0 && self.collectives_per_forward >= 0.0,
+            "negative payload/collective counts"
+        );
+        Ok(())
+    }
+}
+
 /// Tile quantization [47]: GEMMs process token counts rounded up to the
 /// device tile, so effective work is `ceil(t / tile) · tile`. This produces
 /// the sawtooth in the paper's Fig. 5(c).
@@ -276,6 +468,60 @@ mod tests {
         assert_eq!(tile_quantize(64.0, 64), 64.0);
         assert_eq!(tile_quantize(65.0, 64), 128.0);
         assert_eq!(tile_quantize(0.0, 64), 0.0);
+    }
+
+    #[test]
+    fn topology_presets_and_name() {
+        let nv = Topology::nvlink(4);
+        let pc = Topology::pcie(4);
+        assert_eq!(nv.devices, 4);
+        assert!(nv.link_bw > pc.link_bw * 5.0, "NVLink should dwarf PCIe");
+        assert!(pc.link_latency > nv.link_latency);
+        assert_eq!(nv.name(), "ep4@250GB/s");
+        assert_eq!(Topology::single().devices, 1);
+    }
+
+    #[test]
+    fn sharding_spec_for_arch_payload() {
+        let arch = crate::arch::presets::qwen2_57b_a14b();
+        let spec = ShardingSpec::for_arch(Topology::nvlink(4), &arch);
+        // 2 · layers · K · hidden · dtype = 2 · 28 · 8 · 3584 · 2.
+        let want = 2.0 * 28.0 * 8.0 * 3584.0 * 2.0;
+        assert_eq!(spec.payload_bytes_per_token, want);
+        assert_eq!(spec.collectives_per_forward, 56.0);
+        assert!(spec.validate().is_ok());
+        // Dense arch: EP is a no-op, zero payload.
+        let dense = ShardingSpec::for_arch(Topology::nvlink(4), &crate::arch::presets::opt_30b());
+        assert_eq!(dense.payload_bytes_per_token, 0.0);
+    }
+
+    #[test]
+    fn comm_time_zero_single_scales_with_tokens_and_fabric() {
+        let arch = crate::arch::presets::qwen2_57b_a14b();
+        assert_eq!(ShardingSpec::single().comm_time(1e6), 0.0);
+        let nv = ShardingSpec::for_arch(Topology::nvlink(4), &arch);
+        let pc = ShardingSpec::for_arch(Topology::pcie(4), &arch);
+        assert!(nv.comm_time(256.0) > nv.comm_time(32.0));
+        assert!(
+            pc.comm_time(256.0) > 5.0 * nv.comm_time(256.0),
+            "PCIe all-to-all should be far slower: {} vs {}",
+            pc.comm_time(256.0),
+            nv.comm_time(256.0)
+        );
+        // Latency floor: even one token pays the collective launches.
+        assert!(nv.comm_time(1.0) >= 56.0 * 10e-6);
+    }
+
+    #[test]
+    fn sharding_spec_validation_rejects_bad_knobs() {
+        let arch = crate::arch::presets::qwen2_57b_a14b();
+        let mut spec = ShardingSpec::for_arch(Topology::nvlink(2), &arch);
+        spec.imbalance = 0.5;
+        assert!(spec.validate().is_err());
+        let bad_bw = ShardingSpec::new(Topology::custom(2, 0.0, 1e-6));
+        assert!(bad_bw.validate().is_err());
+        let no_dev = ShardingSpec::new(Topology::custom(0, 1e9, 0.0));
+        assert!(no_dev.validate().is_err());
     }
 
     #[test]

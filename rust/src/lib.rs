@@ -13,12 +13,17 @@
 //! - **L3 (this crate)** — request router, continuous batcher, paged KV cache,
 //!   speculative-decoding scheduler, the adaptive speculation control plane
 //!   ([`control`]: online γ / batch-ceiling co-tuning from measured target
-//!   efficiency), metrics, the roofline GPU simulator and the paper's
-//!   analytic speedup model + fitting.
+//!   efficiency), metrics, the roofline GPU simulator — including
+//!   expert-parallel sharding topologies ([`hardware`]:
+//!   `Topology`/`ShardingSpec`) — and the paper's analytic speedup model +
+//!   fitting.
 //! - **L2 (python/compile/model.py)** — the JAX MoE transformer, AOT-lowered
 //!   to HLO text loaded by [`runtime`].
 //! - **L1 (python/compile/kernels/)** — Pallas MoE-FFN / decode-attention
 //!   kernels lowered into the same HLO.
+//!
+//! New here? `docs/ARCHITECTURE.md` maps every module to the paper section
+//! and equation it implements and walks one decode round through the stack.
 
 pub mod arch;
 pub mod batching;

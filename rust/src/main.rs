@@ -52,7 +52,7 @@ fn print_help() {
          USAGE: moesd <serve|bench|fit|selfcheck|list> [options]\n\
          \n\
          serve     --mode synthetic|hlo --port N --gamma N [--adaptive] [--config file.json]\n\
-         bench     <fig1|fig2|fig3|fig4|fig5|fig6|table1|table2|table3|adaptive|vocab>\n\
+         bench     <fig1|fig2|fig3|fig4|fig5|fig6|table1|table2|table3|adaptive|vocab|sharding>\n\
          fit       --gamma N --alpha X\n\
          selfcheck --artifacts DIR\n\
          list"
@@ -127,7 +127,9 @@ fn bench(args: &Args) -> anyhow::Result<()> {
         .first()
         .map(String::as_str)
         .ok_or_else(|| {
-            anyhow::anyhow!("bench needs an experiment id (fig1..fig6, table1..3, adaptive, vocab)")
+            anyhow::anyhow!(
+                "bench needs an experiment id (fig1..fig6, table1..3, adaptive, vocab, sharding)"
+            )
         })?;
     use moesd::experiments::*;
     match which {
@@ -211,6 +213,46 @@ fn bench(args: &Args) -> anyhow::Result<()> {
                 anyhow::bail!("adaptive ramp shape check failed: {e}");
             }
             println!("shape check passed: adaptive tracks the best static γ per phase");
+        }
+        "sharding" => {
+            let gamma = args.usize_or("gamma", 3)?;
+            let alpha = args.f64_or("alpha", 0.9)?;
+            let out = sharding::run(gamma, alpha);
+            moesd::benchlib::write_report("sharding_sweep.csv", &out.table.to_string())?;
+            let mut rows: Vec<moesd::benchlib::Json> = Vec::new();
+            for &(fabric, d) in &sharding::default_configs() {
+                let edge = sharding::crossover_batch(fabric, d, 8, gamma, alpha);
+                let peak = out
+                    .points
+                    .iter()
+                    .filter(|p| p.fabric == fabric && p.devices == d && p.k == 8)
+                    .map(|p| p.speedup)
+                    .fold(f64::NEG_INFINITY, f64::max);
+                println!(
+                    "{:>6} d={d}: K=8 peak {:.2}x, SD-favorable up to B≈{edge}",
+                    fabric.name(),
+                    peak
+                );
+                rows.push(moesd::benchlib::Json::from_pairs(vec![
+                    ("fabric", fabric.name().into()),
+                    ("devices", d.into()),
+                    ("peak_speedup_k8", peak.into()),
+                    ("favorable_edge_k8", edge.into()),
+                ]));
+            }
+            let json = moesd::benchlib::Json::from_pairs(vec![
+                ("gamma", gamma.into()),
+                ("alpha", alpha.into()),
+                ("summary", moesd::benchlib::Json::Arr(rows)),
+            ]);
+            moesd::benchlib::write_json_report("sharding_sweep.json", &json)?;
+            if let Err(e) = sharding::check_shape(&out) {
+                anyhow::bail!("sharding sweep shape check failed: {e}");
+            }
+            println!(
+                "shape check passed: sparsity x EP degree widen the SD-favorable \
+                 batch range; communication-bound fabrics narrow it"
+            );
         }
         "vocab" => {
             let out = vocab_scale::run(&vocab_scale::VOCABS, 4, 0.9, 42)?;

@@ -12,9 +12,21 @@
 //! The 10 relaxation parameters carry the physical meanings and search
 //! bounds of Appendix C.2; [`ParamBounds::for_setup`] derives them from the
 //! architecture + platform exactly as the appendix prescribes.
+//!
+//! ## Expert-parallel extension
+//!
+//! The `*_sharded` variants accept a [`ShardingSpec`] and apply the same
+//! structural corollaries the roofline simulator derives for EP groups
+//! (§3.4): dense-ramp tokens divide by the EP degree `d` (data-parallel
+//! replicas), the expert-loading term `k2·N(t)` divides by `d` (experts
+//! partitioned) while the expert-ramp argument `T̄_exp` is d-invariant
+//! (global token pool), and the fabric's all-to-all time is added on the
+//! physical clock ([`ShardingSpec::comm_time`] — the fitted parameters are
+//! seconds, so the units line up). A `d = 1` spec reproduces the
+//! unsharded model exactly.
 
 use crate::arch::ModelArch;
-use crate::hardware::Platform;
+use crate::hardware::{Platform, ShardingSpec};
 use crate::theory;
 
 /// The 10 fitted relaxation parameters (Appendix C.2 order).
@@ -198,12 +210,53 @@ impl PerfModel {
     }
 
     /// Target forward time for `b·s` tokens (Alg. 1 lines 6–8).
+    ///
+    /// ```
+    /// use moesd::perfmodel::{PerfModel, PerfParams};
+    /// let model = PerfModel::with_ridge_point(150.0);
+    /// let p = PerfParams {
+    ///     bias: 0.02, k1: 1e-4, k2: 2e-4, k3: 5e-4,
+    ///     draft_bias: 0.001, draft_k: 1e-5,
+    ///     reject_bias: 1e-4, reject_k: 1e-7,
+    ///     lambda: 0.5, s: 1.02,
+    /// };
+    /// // More tokens through the gate ⇒ strictly more time (Alg. 1's
+    /// // monotone cost surface).
+    /// assert!(model.t_target(&p, 64, 1, 8, 64) > model.t_target(&p, 8, 1, 8, 64));
+    /// ```
     pub fn t_target(&self, p: &PerfParams, b: usize, s: usize, k: usize, e: usize) -> f64 {
         let t = (b * s) as f64;
         let rho = k as f64 / e as f64;
         let n = theory::expected_active_experts(e, k, (b * s) as u64);
         let load = theory::expert_load(t, rho);
         p.bias + p.k1 * self.ramp(p, t) + p.k2 * n + p.k3 * self.ramp(p, load)
+    }
+
+    /// EP-sharded target forward time: Alg. 1's cost surface re-derived
+    /// for `spec.devices()` data-parallel ranks holding `E/d` experts each
+    /// (see the module docs for the term-by-term mapping).
+    pub fn t_target_sharded(
+        &self,
+        p: &PerfParams,
+        b: usize,
+        s: usize,
+        k: usize,
+        e: usize,
+        spec: &ShardingSpec,
+    ) -> f64 {
+        if !spec.is_sharded() {
+            return self.t_target(p, b, s, k, e);
+        }
+        let d = spec.devices() as f64;
+        let t = (b * s) as f64;
+        let rho = k as f64 / e as f64;
+        let n_rank = theory::ep_active_experts_per_device(e, k, (b * s) as u64, spec.devices());
+        let load = theory::expert_load(t, rho);
+        p.bias
+            + p.k1 * self.ramp(p, t / d)
+            + p.k2 * n_rank * spec.imbalance
+            + p.k3 * self.ramp(p, load) * spec.imbalance
+            + spec.comm_time(t)
     }
 
     /// Dense-target variant (factor (1) only; Alg. 1 line 9 shape).
@@ -223,6 +276,21 @@ impl PerfModel {
     }
 
     /// Alg. 1 line 3: the full speedup expression.
+    ///
+    /// ```
+    /// use moesd::perfmodel::{Measurement, PerfModel, PerfParams};
+    /// let model = PerfModel::with_ridge_point(150.0);
+    /// let p = PerfParams {
+    ///     bias: 0.02, k1: 1e-4, k2: 2e-4, k3: 5e-4,
+    ///     draft_bias: 0.001, draft_k: 1e-5,
+    ///     reject_bias: 1e-4, reject_k: 1e-7,
+    ///     lambda: 0.5, s: 1.02,
+    /// };
+    /// let m = Measurement { batch: 16, gamma: 3, k: 8, e: 64, sigma: 0.9, speedup: 0.0 };
+    /// let x = model.compute_speedup(&p, &m);
+    /// // Bounded by the expected round length σ·(γ+1) (Eq. 4's numerator).
+    /// assert!(x > 1.0 && x <= 0.9 * 4.0);
+    /// ```
     pub fn compute_speedup(&self, p: &PerfParams, m: &Measurement) -> f64 {
         let t_ar = self.t_target(p, m.batch, 1, m.k, m.e);
         let t_verify = self.t_target(p, m.batch, m.gamma + 1, m.k, m.e);
@@ -230,6 +298,34 @@ impl PerfModel {
         let t_rej = self.t_reject(p, m.batch, m.gamma);
         let round_len = m.sigma * (m.gamma + 1) as f64;
         round_len * t_ar / (m.gamma as f64 * t_draft + t_verify + t_rej)
+    }
+
+    /// Eq. 4 speedup over the EP-sharded cost surface: the target terms go
+    /// through [`PerfModel::t_target_sharded`]; draft and rejection stages
+    /// are topology-independent (the draft replica serves its own rank).
+    pub fn compute_speedup_sharded(
+        &self,
+        p: &PerfParams,
+        m: &Measurement,
+        spec: &ShardingSpec,
+    ) -> f64 {
+        let t_ar = self.t_target_sharded(p, m.batch, 1, m.k, m.e, spec);
+        let t_verify = self.t_target_sharded(p, m.batch, m.gamma + 1, m.k, m.e, spec);
+        let t_draft = self.t_draft(p, m.batch);
+        let t_rej = self.t_reject(p, m.batch, m.gamma);
+        let round_len = m.sigma * (m.gamma + 1) as f64;
+        round_len * t_ar / (m.gamma as f64 * t_draft + t_verify + t_rej)
+    }
+
+    /// Sharded target efficiency (§3.1 under a [`ShardingSpec`]).
+    pub fn target_efficiency_sharded(
+        &self,
+        p: &PerfParams,
+        m: &Measurement,
+        spec: &ShardingSpec,
+    ) -> f64 {
+        self.t_target_sharded(p, m.batch, 1, m.k, m.e, spec)
+            / self.t_target_sharded(p, m.batch, m.gamma + 1, m.k, m.e, spec)
     }
 
     /// Model-side target efficiency (for Fig. 2/3-style decompositions).
@@ -394,6 +490,80 @@ mod tests {
         let r = m.residuals(&p, &[meas]);
         assert!((r[0] - (pred - 1.5)).abs() < 1e-12);
         assert!((m.mse(&p, &[meas]) - r[0] * r[0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sharded_single_rank_is_identity() {
+        use crate::hardware::ShardingSpec;
+        let m = model();
+        let p = demo_params();
+        let spec = ShardingSpec::single();
+        for (b, s) in [(1usize, 1usize), (16, 4), (256, 5)] {
+            assert_eq!(
+                m.t_target_sharded(&p, b, s, 8, 64, &spec),
+                m.t_target(&p, b, s, 8, 64)
+            );
+        }
+        let meas = Measurement {
+            batch: 16,
+            gamma: 3,
+            k: 8,
+            e: 64,
+            sigma: 0.9,
+            speedup: 0.0,
+        };
+        assert_eq!(
+            m.compute_speedup_sharded(&p, &meas, &spec),
+            m.compute_speedup(&p, &meas)
+        );
+    }
+
+    #[test]
+    fn sharding_lifts_model_target_efficiency_and_fabric_drags_it() {
+        use crate::hardware::{ShardingSpec, Topology};
+        let m = model();
+        let p = demo_params();
+        let arch = presets::qwen2_57b_a14b();
+        let meas = Measurement {
+            batch: 16,
+            gamma: 3,
+            k: 8,
+            e: 64,
+            sigma: 0.9,
+            speedup: 0.0,
+        };
+        let nv = ShardingSpec::for_arch(Topology::nvlink(4), &arch);
+        let pc = ShardingSpec::for_arch(Topology::pcie(4), &arch);
+        let base = m.target_efficiency(&p, &meas);
+        let e_nv = m.target_efficiency_sharded(&p, &meas, &nv);
+        let e_pc = m.target_efficiency_sharded(&p, &meas, &pc);
+        // Same corollary the roofline simulator shows: splitting the k2
+        // expert-loading term across ranks shrinks the verify-step growth.
+        assert!(e_nv > base, "EP should lift model teff: {e_nv} vs {base}");
+        // A slow fabric adds token-linear cost, dragging teff back down.
+        assert!(e_pc < e_nv, "PCIe fabric should cost teff: {e_pc} vs {e_nv}");
+        // Speedup stays finite, positive, and Eq. 4-bounded everywhere.
+        for spec in [&nv, &pc] {
+            for b in [1usize, 16, 256, 2048] {
+                let mm = Measurement { batch: b, ..meas };
+                let x = m.compute_speedup_sharded(&p, &mm, spec);
+                assert!(x.is_finite() && x > 0.0 && x <= 0.9 * 4.0 + 1e-9, "x={x} B={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_imbalance_raises_cost() {
+        use crate::hardware::{ShardingSpec, Topology};
+        let m = model();
+        let p = demo_params();
+        let arch = presets::qwen2_57b_a14b();
+        let spec = ShardingSpec::for_arch(Topology::nvlink(4), &arch);
+        let skew = spec.clone().with_imbalance(1.5);
+        assert!(
+            m.t_target_sharded(&p, 32, 4, 8, 64, &skew)
+                > m.t_target_sharded(&p, 32, 4, 8, 64, &spec)
+        );
     }
 
     #[test]

@@ -1,11 +1,10 @@
 //! Mini property-based testing framework (proptest is not available in this
 //! offline build environment).
 //!
-//! Usage (`no_run`: doctest binaries can't locate the xla shared library
-//! without the workspace rpath, so this example compiles but isn't run —
-//! the same pattern executes in this module's unit tests):
-//! ```no_run
-//! use moesd::testkit::{Runner, Gen};
+//! Usage (runs as a doctest — the vendored `xla` stub is pure Rust, so
+//! doctest binaries link without any native library):
+//! ```
+//! use moesd::testkit::Runner;
 //! let mut runner = Runner::new("my_property");
 //! runner.run(200, |g| {
 //!     let x = g.usize_in(1, 100);

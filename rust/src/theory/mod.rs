@@ -16,11 +16,24 @@
 //! - Eq. 11 — the roofline ramp G(t; λRP, s) [`roofline_g`].
 //! - §3.1   — *target efficiency* T_T(B,1)/T_T(B,γ) [`target_efficiency`].
 //! - App. B — monotonicity of T̄_exp in ρ (property-tested below).
+//! - §3.4   — expert-parallel sharding corollaries of Eq. 8
+//!   ([`ep_active_experts_per_device`], [`ep_remote_fraction`]): under EP
+//!   the token pool stays *global*, so per-expert load T̄_exp is
+//!   d-invariant while per-device activation and weight traffic divide
+//!   by d.
 
 /// σ (Eq. 5): expected generated tokens per round divided by the maximal
 /// γ+1, given per-token acceptance probability α and draft length γ.
 ///
 /// σ = [(1 - α^{γ+1}) / (1 - α)] / (γ + 1), with the α → 1 limit equal to 1.
+///
+/// ```
+/// use moesd::theory::sigma_from_alpha;
+/// // γ=2, α=0.8: (1 − 0.8³)/(1 − 0.8)/3 = 0.813̄ (the Eq. 5 closed form).
+/// assert!((sigma_from_alpha(0.8, 2) - 0.8133333333).abs() < 1e-9);
+/// // A draft that is never right still yields the bonus token: σ = 1/(γ+1).
+/// assert_eq!(sigma_from_alpha(0.0, 3), 0.25);
+/// ```
 pub fn sigma_from_alpha(alpha: f64, gamma: usize) -> f64 {
     assert!((0.0..=1.0).contains(&alpha), "alpha out of [0,1]: {alpha}");
     let g1 = (gamma + 1) as f64;
@@ -121,9 +134,58 @@ pub fn roofline_g(t: f64, lambda_rp: f64, s: f64) -> f64 {
     }
 }
 
+/// Expected activated experts **per EP rank** when `t` global tokens hit a
+/// gate whose `e` experts are partitioned evenly across `d` ranks.
+///
+/// By symmetry each expert is activated with the same probability
+/// `1 − ((E−K)/E)^t` wherever it lives, so a rank holding `E/d` experts
+/// expects exactly `N(t)/d` of them active — Eq. 8 divided by the EP
+/// degree. This is what makes EP attractive for sparse MoE: per-rank
+/// expert *weight traffic* divides by `d` while per-expert *load*
+/// (`T̄_exp`, [`expert_load`]) is unchanged, because the token pool stays
+/// global.
+///
+/// ```
+/// use moesd::theory::{ep_active_experts_per_device, expected_active_experts};
+/// let global = expected_active_experts(64, 8, 128);
+/// let per_rank = ep_active_experts_per_device(64, 8, 128, 4);
+/// assert!((per_rank - global / 4.0).abs() < 1e-12);
+/// // d = 1 is exactly the unsharded Eq. 8.
+/// assert_eq!(ep_active_experts_per_device(64, 8, 128, 1), global);
+/// ```
+pub fn ep_active_experts_per_device(e: usize, k: usize, t: u64, d: usize) -> f64 {
+    assert!(d >= 1, "EP degree must be >= 1");
+    expected_active_experts(e, k, t) / d as f64
+}
+
+/// Fraction of dispatched tokens that must cross the EP fabric under
+/// uniform routing: `(d − 1)/d` (a token's expert lives on its own rank
+/// with probability `1/d`). Zero for a single rank.
+///
+/// ```
+/// use moesd::theory::ep_remote_fraction;
+/// assert_eq!(ep_remote_fraction(1), 0.0);
+/// assert_eq!(ep_remote_fraction(4), 0.75);
+/// ```
+pub fn ep_remote_fraction(d: usize) -> f64 {
+    if d <= 1 {
+        0.0
+    } else {
+        (d - 1) as f64 / d as f64
+    }
+}
+
 /// Target efficiency (§3.1): T_T(B,1) / T_T(B,γ) ∈ (0, 1].
 /// Values near 1 mean verification is "free"; small values mean SD pays a
 /// heavy verification penalty.
+///
+/// ```
+/// use moesd::theory::target_efficiency;
+/// // Verification that costs the same as decode is "free": efficiency 1.
+/// assert_eq!(target_efficiency(5.0, 5.0), 1.0);
+/// // A 2× costlier verify step halves it.
+/// assert_eq!(target_efficiency(5.0, 10.0), 0.5);
+/// ```
 pub fn target_efficiency(t_target_1: f64, t_target_gamma: f64) -> f64 {
     assert!(t_target_1 > 0.0 && t_target_gamma > 0.0);
     t_target_1 / t_target_gamma
@@ -150,6 +212,15 @@ impl SpeedupTerms {
 }
 
 /// Eq. 4: assemble SD speedup from measured/simulated component times.
+///
+/// ```
+/// use moesd::theory::speedup_decomposition;
+/// // T_T(B,1)=10, T_T(B,γ+1)=12, T_D=1, T_rej=0.2, σ=0.9, γ=3:
+/// // x = σ(γ+1) / (γ·T_D/T_T1 + T_Tγ/T_T1 + T_rej/T_T1) = 3.6/1.52.
+/// let terms = speedup_decomposition(10.0, 12.0, 1.0, 0.2, 0.9, 3);
+/// assert!((terms.speedup() - 3.6 / 1.52).abs() < 1e-12);
+/// assert!((terms.verify_term - 1.2).abs() < 1e-12);
+/// ```
 pub fn speedup_decomposition(
     t_target_1: f64,
     t_target_gamma: f64,
@@ -399,5 +470,37 @@ mod tests {
     fn target_efficiency_bounds() {
         assert!((target_efficiency(5.0, 5.0) - 1.0).abs() < 1e-12);
         assert!(target_efficiency(5.0, 10.0) < 1.0);
+    }
+
+    #[test]
+    fn ep_activation_splits_evenly_and_load_is_d_invariant() {
+        let mut r = Runner::new("ep_activation");
+        r.run(200, |g| {
+            let e = g.usize_in(2, 128);
+            let k = g.usize_in(1, e);
+            let t = g.u64_in(1, 512);
+            let d = g.usize_in(1, 16);
+            let global = expected_active_experts(e, k, t);
+            let per = ep_active_experts_per_device(e, k, t, d);
+            ensure_close(per * d as f64, global, 1e-9, "per-rank activation × d")?;
+            // Per-expert load (Eq. 10) references the *global* token pool,
+            // so nothing about it changes under EP — asserted here as the
+            // invariant the sharded simulator relies on.
+            let rho = k as f64 / e as f64;
+            let load = expert_load(t as f64, rho);
+            ensure(
+                load > 0.0 && load <= t as f64 + 1e-9,
+                format!("load {load} out of range"),
+            )
+        });
+    }
+
+    #[test]
+    fn ep_remote_fraction_limits() {
+        assert_eq!(ep_remote_fraction(1), 0.0);
+        assert_eq!(ep_remote_fraction(2), 0.5);
+        assert!((ep_remote_fraction(8) - 0.875).abs() < 1e-12);
+        // Approaches 1 as the group grows: almost every token goes remote.
+        assert!(ep_remote_fraction(1024) > 0.999);
     }
 }

@@ -183,6 +183,12 @@ impl Json {
     // ---- serialization -----------------------------------------------------
 
     /// Compact single-line serialization.
+    ///
+    /// Deliberately shadows `Display::to_string` (same output, no
+    /// formatter indirection on the emitter hot path) — the deny-by-
+    /// default clippy lint is waived rather than renaming a method the
+    /// whole crate calls.
+    #[allow(clippy::inherent_to_string_shadow_display)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, None, 0);

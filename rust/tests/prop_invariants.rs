@@ -4,7 +4,7 @@
 use moesd::arch::presets;
 use moesd::batching::{Request, SamplingParams};
 use moesd::engine::{Engine, EngineConfig};
-use moesd::hardware::platform_2x_gpu_a;
+use moesd::hardware::{platform_2x_gpu_a, ShardingSpec, Topology};
 use moesd::kvcache::KvConfig;
 use moesd::sampling::{verify_chain, verify_chain_views, LogitsView};
 use moesd::scheduler::SchedulerConfig;
@@ -295,6 +295,98 @@ fn prop_engine_sparse_equals_dense_rows_backend() {
         let sparse = run(false);
         let dense = run(true);
         assert_eq!(sparse, dense, "vocab={vocab} α={alpha} γ={gamma}");
+    }
+}
+
+/// The sharding equivalence tentpole guarantee: a `d = 1` [`ShardingSpec`]
+/// — whether the explicit `single()` spec or a 1-rank fabric topology —
+/// prices every (model, batch, verify width, context) point **bit-for-bit**
+/// identically to the unsharded simulator, across MoE and dense targets,
+/// expected and per-component breakdowns.
+#[test]
+fn prop_single_rank_sharding_prices_bit_identical() {
+    let mut runner = Runner::new("sharding_d1_identity");
+    runner.run(120, |g| {
+        let moe = g.usize_in(0, 1) == 0;
+        let arch = if moe {
+            presets::qwen2_57b_a14b()
+        } else {
+            presets::opt_30b()
+        };
+        let b = g.usize_in(1, 1024);
+        let s = g.usize_in(1, 8);
+        let ctx = g.usize_in(16, 4096);
+        let tiles = g.usize_in(0, 1) == 1;
+        let plain = ExecSim::new(arch.clone(), platform_2x_gpu_a()).with_tile_effects(tiles);
+        let single = ExecSim::new(arch.clone(), platform_2x_gpu_a())
+            .with_tile_effects(tiles)
+            .with_sharding(ShardingSpec::single());
+        let one_rank = ExecSim::new(arch.clone(), platform_2x_gpu_a())
+            .with_tile_effects(tiles)
+            .with_sharding(ShardingSpec::for_arch(Topology::nvlink(1), &arch));
+        let want = plain.forward_time(b, s, ctx, None);
+        let got_single = single.forward_time(b, s, ctx, None);
+        let got_one = one_rank.forward_time(b, s, ctx, None);
+        if got_single != want {
+            return Err(format!(
+                "single() spec diverged at b={b} s={s} ctx={ctx} moe={moe}: {got_single:?} vs {want:?}"
+            ));
+        }
+        if got_one != want {
+            return Err(format!(
+                "1-rank topology diverged at b={b} s={s} ctx={ctx} moe={moe}: {got_one:?} vs {want:?}"
+            ));
+        }
+        // The memoized scalar path agrees too (same cache key space).
+        ensure(
+            single.t_forward(b, s, ctx) == plain.t_forward(b, s, ctx)
+                && one_rank.t_reject(b, 3) == plain.t_reject(b, 3),
+            "memoized/reject paths diverged",
+        )
+    });
+}
+
+/// Whole-engine d=1 equivalence: serving on a `single()`-sharded pricing
+/// simulator emits byte-identical completions, round counts, and virtual
+/// clocks to the unsharded engine.
+#[test]
+fn prop_engine_single_rank_sharding_is_transparent() {
+    for &(alpha, gamma, n_reqs) in &[(0.5f64, 3usize, 4usize), (0.9, 5, 6), (0.0, 1, 2)] {
+        let run = |sharded: bool| -> (Vec<(u64, Vec<u32>)>, u64, f64) {
+            let arch = presets::qwen2_57b_a14b();
+            let mut target = ExecSim::new(arch.clone(), platform_2x_gpu_a());
+            if sharded {
+                target = target.with_sharding(ShardingSpec::single());
+            }
+            let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+            let mut engine = Engine::new(
+                EngineConfig {
+                    gamma,
+                    ..Default::default()
+                },
+                SyntheticLm::new(target, draft, alpha, 23),
+            );
+            for id in 0..n_reqs as u64 {
+                engine.submit(Request {
+                    id,
+                    prompt: (0..8u32).collect(),
+                    params: SamplingParams {
+                        temperature: 0.0,
+                        max_new_tokens: 12,
+                        eos_token: None,
+                    },
+                    arrival: 0.0,
+                });
+            }
+            let mut done = engine.run_to_completion(10_000).unwrap();
+            done.sort_by_key(|c| c.id);
+            (
+                done.into_iter().map(|c| (c.id, c.tokens)).collect(),
+                engine.metrics.rounds,
+                engine.clock(),
+            )
+        };
+        assert_eq!(run(false), run(true), "α={alpha} γ={gamma}");
     }
 }
 
