@@ -27,6 +27,11 @@ if [[ $FAST -eq 0 ]]; then
     RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 fi
 
+# Tier-1's `cargo test` includes the library doctests (no target sets
+# `doctest = false`), so the documented entry points in theory/, perfmodel/
+# and control/ — including the ragged-γ helpers — are executed here, not
+# just rendered by the `cargo doc` gate above. Verify with
+# `cargo test --doc` if in doubt.
 echo "== tier-1: cargo build --release && cargo test -q"
 cargo build --release
 cargo test -q

@@ -56,6 +56,10 @@ pub struct Config {
     /// Enable the adaptive speculation control plane (synthetic mode):
     /// online model-guided γ/batch co-tuning instead of the fixed γ.
     pub adaptive: bool,
+    /// Enable ragged rounds (per-sequence γᵢ refined from windowed
+    /// per-sequence α̂ᵢ). Requires `adaptive`; the `--ragged` CLI flag
+    /// sets both.
+    pub ragged: bool,
 }
 
 impl Default for Config {
@@ -75,6 +79,7 @@ impl Default for Config {
             seed: 0,
             artifacts_dir: "artifacts".into(),
             adaptive: false,
+            ragged: false,
         }
     }
 }
@@ -110,6 +115,7 @@ impl Config {
             seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
             artifacts_dir: str_or("artifacts_dir", &d.artifacts_dir),
             adaptive: j.get("adaptive").and_then(Json::as_bool).unwrap_or(false),
+            ragged: j.get("ragged").and_then(Json::as_bool).unwrap_or(false),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -139,6 +145,11 @@ impl Config {
             !(self.adaptive && self.mode == Mode::Hlo),
             "adaptive control requires synthetic mode (no calibrated cost model for \
              the HLO backend yet)"
+        );
+        anyhow::ensure!(
+            !(self.ragged && !self.adaptive),
+            "ragged speculation requires the adaptive control plane (use --ragged, \
+             which implies --adaptive, or set both in the config file)"
         );
         Ok(())
     }
@@ -171,6 +182,7 @@ impl Config {
         let dsim = ExecSim::new(draft, platform);
         Ok(Some(ControlConfig {
             alpha_prior: alpha,
+            ragged: self.ragged,
             ..ControlConfig::model_guided(CostModelSpec::roofline(tsim, dsim))
         }))
     }
@@ -218,6 +230,7 @@ impl Config {
             ("seed", self.seed.into()),
             ("artifacts_dir", self.artifacts_dir.as_str().into()),
             ("adaptive", self.adaptive.into()),
+            ("ragged", self.ragged.into()),
         ])
     }
 }
@@ -274,6 +287,27 @@ mod tests {
         assert_eq!(e.buckets.max(), 16); // pow2 ≤ 20
         assert_eq!(e.gamma, c.gamma);
         assert!(e.control.is_none());
+    }
+
+    #[test]
+    fn ragged_requires_adaptive_and_propagates() {
+        // ragged without adaptive is a configuration error.
+        let bad = Config {
+            ragged: true,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        // With adaptive, the flag reaches the controller config.
+        let good = Config {
+            adaptive: true,
+            ragged: true,
+            ..Default::default()
+        };
+        let ctl = good.engine_config().unwrap().control.unwrap();
+        assert!(ctl.ragged);
+        // Round-trips through JSON.
+        let c2 = Config::from_json(&good.to_json()).unwrap();
+        assert!(c2.ragged && c2.adaptive);
     }
 
     #[test]

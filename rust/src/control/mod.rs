@@ -48,6 +48,19 @@
 //! SLO configured it converts the measured round economics into an
 //! est-TPOT(B) curve and asks [`crate::scheduler::Scheduler::batch_ceiling`]
 //! for the largest compliant batch (§3.4's latency-critical scenario).
+//!
+//! ## Ragged rounds (per-sequence γᵢ)
+//!
+//! With [`ControlConfig::ragged`] on, the controller additionally keeps a
+//! **windowed per-sequence α̂ᵢ** (the MLE ratio over each sequence's
+//! recent accept outcomes, fed by [`SpecController::observe_sequences`])
+//! and refines the scalar decision every round through
+//! [`GammaPolicy::gamma_for_sequences`]: easy sequences draft deeper,
+//! hard ones shallower, within the regime the scalar loop chose. The
+//! scalar loop keeps sole authority over regimes — bootstrap,
+//! batch-bucket shifts, the γ=0 AR fallback, hysteresis and probing are
+//! untouched, and uniform-α workloads (or sequences still in window
+//! warm-up) run the exact scalar γ, bit-for-bit.
 
 pub mod policy;
 
@@ -56,12 +69,13 @@ pub use policy::{
 };
 
 use crate::hardware::ShardingSpec;
+use crate::kvcache::SeqId;
 use crate::perfmodel::{PerfModel, PerfParams};
 use crate::scheduler::Scheduler;
 use crate::simulator::ExecSim;
 use crate::theory;
 use crate::util::json::Json;
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 
 /// Analytic cost oracle the model-guided policy extrapolates with.
 ///
@@ -75,6 +89,21 @@ pub trait CostModel: Send {
     fn t_draft(&self, b: usize) -> f64;
     /// Rejection-sampling stage time.
     fn t_reject(&self, b: usize, gamma: usize) -> f64;
+    /// Target forward time for a **packed ragged** round: `b` sequences
+    /// contributing `tokens = Σ(γᵢ+1)` new tokens in total. The default
+    /// interpolates linearly between the two adjacent uniform widths;
+    /// [`CostModelSpec`] overrides it with the exact packed price.
+    fn t_target_tokens(&self, b: usize, tokens: usize) -> f64 {
+        let b = b.max(1);
+        let s_lo = (tokens / b).max(1);
+        let rem = tokens.saturating_sub(b * s_lo);
+        if rem == 0 {
+            return self.t_target(b, s_lo);
+        }
+        let lo = self.t_target(b, s_lo);
+        let hi = self.t_target(b, s_lo + 1);
+        lo + (hi - lo) * rem as f64 / b as f64
+    }
 }
 
 /// Plain-data cost model description (keeps [`ControlConfig`] `Clone`).
@@ -196,6 +225,24 @@ impl CostModel for CostModelSpec {
             CostModelSpec::Roofline { target, .. } => target.t_reject(b, gamma),
         }
     }
+
+    fn t_target_tokens(&self, b: usize, tokens: usize) -> f64 {
+        match self {
+            // Alg. 1's surface depends on (b, s) only through t = b·s, so
+            // the packed form is exact: t_target(tokens, 1).
+            CostModelSpec::Perf {
+                ridge_point,
+                params,
+                k,
+                e,
+                sharding,
+            } => PerfModel::with_ridge_point(*ridge_point)
+                .t_target_sharded(params, tokens, 1, *k, *e, sharding),
+            CostModelSpec::Roofline { target, ctx, .. } => {
+                target.t_forward_tokens(b.max(1), tokens, *ctx)
+            }
+        }
+    }
 }
 
 /// Which policy the controller runs.
@@ -230,6 +277,27 @@ pub struct ControlConfig {
     pub alpha_prior: f64,
     /// EWMA weight of the newest interval estimate, in (0, 1].
     pub alpha_smoothing: f64,
+    /// Enable **ragged rounds**: per-sequence γᵢ refined every round from
+    /// windowed per-sequence α̂ᵢ via [`GammaPolicy::gamma_for_sequences`].
+    /// Off by default — the scalar control loop is unchanged, and ragged
+    /// refinement only ever applies *within* a speculative regime (the
+    /// γ=0 AR fallback stays uniform).
+    pub ragged: bool,
+    /// Per-sequence α̂ window: the number of recent speculative rounds a
+    /// sequence must have (and that are averaged) before its own α̂ᵢ is
+    /// trusted. Sequences with fewer observations fall back to the
+    /// batch-level estimate (warm-up).
+    pub seq_window_rounds: usize,
+    /// Minimum spread (max α̂ᵢ − min α̂ᵢ) before a round is actually made
+    /// ragged; below it the uniform scalar decision applies unchanged.
+    /// Damps estimator noise from masquerading as workload heterogeneity:
+    /// at the default window of 8 rounds a per-sequence α̂ᵢ carries a
+    /// sampling std of roughly 0.07, so the max−min spread of a large
+    /// *homogeneous* batch routinely reaches ~0.2 — the default gate of
+    /// 0.25 sits above that noise floor, while genuinely bimodal mixes
+    /// (spreads ≥ 0.3 for e.g. α 0.9/0.5) clear it immediately.
+    /// Deployments with longer windows (less noise) can lower it.
+    pub ragged_min_spread: f64,
 }
 
 impl Default for ControlConfig {
@@ -243,6 +311,9 @@ impl Default for ControlConfig {
             probe_every_intervals: 8,
             alpha_prior: 0.8,
             alpha_smoothing: 0.4,
+            ragged: false,
+            seq_window_rounds: 8,
+            ragged_min_spread: 0.25,
         }
     }
 }
@@ -259,6 +330,14 @@ impl ControlConfig {
         ControlConfig {
             policy: PolicyKind::ModelGuided { cost },
             ..ControlConfig::default()
+        }
+    }
+
+    /// Model-guided with ragged rounds enabled (per-sequence γᵢ).
+    pub fn model_guided_ragged(cost: CostModelSpec) -> ControlConfig {
+        ControlConfig {
+            ragged: true,
+            ..ControlConfig::model_guided(cost)
         }
     }
 
@@ -279,6 +358,14 @@ impl ControlConfig {
         anyhow::ensure!(
             (0.0..=1.0).contains(&self.alpha_prior),
             "alpha_prior must be in [0, 1]"
+        );
+        anyhow::ensure!(
+            self.seq_window_rounds >= 1,
+            "seq_window_rounds must be >= 1"
+        );
+        anyhow::ensure!(
+            self.ragged_min_spread >= 0.0,
+            "ragged_min_spread must be non-negative"
         );
         Ok(())
     }
@@ -301,6 +388,9 @@ impl ControlConfig {
             } else {
                 ControlConfig::default().alpha_smoothing
             },
+            ragged: self.ragged,
+            seq_window_rounds: self.seq_window_rounds.max(1),
+            ragged_min_spread: self.ragged_min_spread.max(0.0),
         }
     }
 }
@@ -323,6 +413,62 @@ pub struct RoundObservation {
     pub t_draft: f64,
     pub t_verify: f64,
     pub t_reject: f64,
+}
+
+/// One sequence's acceptance outcome in one decode round — the
+/// per-sequence accounting the engine reports alongside the aggregate
+/// [`RoundObservation`], feeding the windowed per-sequence α̂ᵢ estimators
+/// behind ragged-γ decisions.
+#[derive(Debug, Clone, Copy)]
+pub struct SeqRoundSample {
+    pub seq: SeqId,
+    /// The draft length this sequence ran this round (its γᵢ).
+    pub gamma: usize,
+    /// Draft tokens accepted by rejection sampling (≤ γᵢ).
+    pub accepted: usize,
+}
+
+/// Windowed per-sequence acceptance estimator. Each speculative round
+/// contributes a `(attempts, successes)` pair — the chain consumes
+/// `accepted + 1` Bernoulli(α) trials when it rejects inside the draft
+/// and `γ` when it accepts everything — so the window ratio
+/// `Σ successes / Σ attempts` is the maximum-likelihood α̂ for the
+/// truncated-geometric acceptance process, and it composes across rounds
+/// with *different* γᵢ (unlike an Eq. 5 inversion, which needs one γ).
+#[derive(Debug, Clone, Default)]
+struct SeqWindow {
+    /// Ring of (attempts, successes) from recent speculative rounds.
+    samples: VecDeque<(u32, u32)>,
+}
+
+impl SeqWindow {
+    fn push(&mut self, gamma: usize, accepted: usize, cap: usize) {
+        if gamma == 0 {
+            return; // AR rounds carry no acceptance signal
+        }
+        let attempts = if accepted < gamma { accepted + 1 } else { gamma };
+        self.samples.push_back((attempts as u32, accepted as u32));
+        while self.samples.len() > cap {
+            self.samples.pop_front();
+        }
+    }
+
+    /// α̂ over a **full** window; `None` during warm-up (fewer than
+    /// `window` speculative rounds observed), when callers fall back to
+    /// the batch-level estimate.
+    fn alpha(&self, window: usize) -> Option<f64> {
+        if self.samples.len() < window {
+            return None;
+        }
+        let (att, succ) = self
+            .samples
+            .iter()
+            .fold((0u64, 0u64), |(a, s), &(at, su)| (a + at as u64, s + su as u64));
+        if att == 0 {
+            return None;
+        }
+        Some((succ as f64 / att as f64).clamp(0.0, 1.0))
+    }
 }
 
 /// Exponentially-weighted moving average with a sample counter.
@@ -458,6 +604,10 @@ pub struct ControllerState {
     pub intervals: u64,
     pub switches: u64,
     pub probes: u64,
+    /// Rounds that ran a non-uniform per-sequence γ assignment.
+    pub ragged_rounds: u64,
+    /// Sequences currently carrying a per-sequence α̂ window.
+    pub tracked_sequences: usize,
     /// Measured target efficiency per batch bucket (§3.1, online).
     pub target_efficiency: Vec<(usize, f64)>,
     /// Bounded (round, new γ) switch log.
@@ -478,6 +628,8 @@ impl ControllerState {
             ("intervals", self.intervals.into()),
             ("switches", self.switches.into()),
             ("probes", self.probes.into()),
+            ("ragged_rounds", self.ragged_rounds.into()),
+            ("tracked_sequences", self.tracked_sequences.into()),
             (
                 "target_efficiency",
                 Json::Arr(
@@ -541,6 +693,14 @@ pub struct SpecController {
     switches: u64,
     probes: u64,
     history: Vec<(u64, usize)>,
+    /// Windowed per-sequence acceptance estimators (ragged mode only;
+    /// entries are dropped when the engine releases a sequence).
+    seq_windows: HashMap<SeqId, SeqWindow>,
+    /// Reused per-round α̂ᵢ buffer (ragged mode), so steady-state rounds
+    /// avoid a fresh B-sized allocation.
+    alpha_scratch: Vec<f64>,
+    /// Rounds that actually ran a non-uniform γ assignment.
+    ragged_rounds: u64,
 }
 
 impl SpecController {
@@ -574,6 +734,9 @@ impl SpecController {
             switches: 0,
             probes: 0,
             history: Vec::new(),
+            seq_windows: HashMap::new(),
+            alpha_scratch: Vec::new(),
+            ragged_rounds: 0,
         }
     }
 
@@ -597,6 +760,106 @@ impl SpecController {
             self.consult(batch, self.last_round, regime_shift);
         }
         self.gamma
+    }
+
+    /// Per-sequence γᵢ for the coming round (ragged rounds). Runs the
+    /// scalar [`SpecController::gamma_for_round`] consult first — regime
+    /// decisions (bootstrap, batch-bucket shifts, the γ=0 AR fallback,
+    /// hysteresis/dwell) are unchanged — then, with ragged mode on and a
+    /// speculative regime in effect, refines per sequence through
+    /// [`GammaPolicy::gamma_for_sequences`] using windowed α̂ᵢ (sequences
+    /// still in warm-up fall back to the batch-level estimate). Rounds
+    /// whose α̂ᵢ spread stays under `ragged_min_spread` — in particular
+    /// every round of a uniform-α workload — run the scalar γ uniformly,
+    /// bit-for-bit identical to the non-ragged controller.
+    pub fn gammas_for_round(&mut self, seqs: &[SeqId], out: &mut Vec<usize>) {
+        out.clear();
+        let b = seqs.len();
+        let g0 = self.gamma_for_round(b.max(1));
+        if !self.cfg.ragged || g0 == 0 || b == 0 {
+            out.extend(std::iter::repeat(g0).take(b));
+            return;
+        }
+        let base = self.alpha_hat.unwrap_or(self.cfg.alpha_prior);
+        // Quantize α̂ᵢ to a 0.01 grid: round-to-round estimator drift then
+        // only moves γᵢ when an estimate crosses a grid line, damping
+        // assignment jitter without a second smoothing stage. The buffer
+        // is controller-owned scratch; the remaining per-round work of a
+        // ragged decision (the water-fill candidate sweep in the policy)
+        // is O(distinct-α̂ · γmax) small vectors — a deliberate, bounded
+        // exception to the engine's zero-alloc round discipline, spent
+        // only in ragged mode on rounds whose α̂ spread clears the gate.
+        let quant = |a: f64| (a * 100.0).round() / 100.0;
+        let mut alphas = std::mem::take(&mut self.alpha_scratch);
+        alphas.clear();
+        let (mut lo, mut hi) = (f64::MAX, f64::MIN);
+        for &s in seqs {
+            let a = quant(self.seq_alpha_hat(s).unwrap_or(base).clamp(0.0, 1.0));
+            lo = lo.min(a);
+            hi = hi.max(a);
+            alphas.push(a);
+        }
+        if hi - lo < self.cfg.ragged_min_spread {
+            self.alpha_scratch = alphas;
+            out.extend(std::iter::repeat(g0).take(b));
+            return;
+        }
+        let est = Estimates {
+            batch: b,
+            alpha: self.alpha_hat,
+            sigma: self.sigma_hat,
+            current_gamma: g0,
+            regime_shift: false,
+            costs: &self.costs,
+        };
+        self.policy.gamma_for_sequences(&est, &alphas, out);
+        self.alpha_scratch = alphas;
+        debug_assert_eq!(out.len(), b, "policy must fill one γ per sequence");
+        for g in out.iter_mut() {
+            // Floor at 1 inside a speculative regime: a sequence at γᵢ=0
+            // would stop producing acceptance samples, freezing its
+            // window at the stale low α̂ᵢ that earned it γᵢ=0 — permanent
+            // starvation. One draft token per round keeps the estimator
+            // live (the per-sequence analogue of the scalar loop's AR
+            // probes) for the price of one extra verify token.
+            *g = (*g).clamp(1, self.cfg.gamma_max);
+        }
+        let first = out[0];
+        if out.iter().any(|&g| g != first) {
+            self.ragged_rounds += 1;
+        }
+    }
+
+    /// Record per-sequence acceptance outcomes (ragged mode). Uses the
+    /// window capacity from `seq_window_rounds`; no-op when ragged mode is
+    /// off so the map cannot grow in scalar deployments.
+    pub fn observe_sequences(&mut self, samples: &[SeqRoundSample]) {
+        if !self.cfg.ragged {
+            return;
+        }
+        let cap = self.cfg.seq_window_rounds;
+        for s in samples {
+            if s.gamma > 0 {
+                self.seq_windows
+                    .entry(s.seq)
+                    .or_default()
+                    .push(s.gamma, s.accepted, cap);
+            }
+        }
+    }
+
+    /// Windowed per-sequence α̂ᵢ — `None` until the sequence has a full
+    /// window of speculative rounds (warm-up; callers fall back to the
+    /// batch-level [`SpecController::alpha_hat`]).
+    pub fn seq_alpha_hat(&self, seq: SeqId) -> Option<f64> {
+        self.seq_windows
+            .get(&seq)
+            .and_then(|w| w.alpha(self.cfg.seq_window_rounds))
+    }
+
+    /// Drop a finished/released sequence's estimator state.
+    pub fn release_sequence(&mut self, seq: SeqId) {
+        self.seq_windows.remove(&seq);
     }
 
     /// Currently-applied γ (without consulting).
@@ -770,6 +1033,8 @@ impl SpecController {
             intervals: self.intervals,
             switches: self.switches,
             probes: self.probes,
+            ragged_rounds: self.ragged_rounds,
+            tracked_sequences: self.seq_windows.len(),
             target_efficiency: self.costs.target_efficiency_by_bucket(),
             history: self.history.clone(),
         }
@@ -985,6 +1250,169 @@ mod tests {
             tpot_slo: None,
         });
         assert_eq!(ctl.batch_ceiling(&free), 64);
+    }
+
+    /// Feed one sequence `rounds` speculative outcomes at a fixed
+    /// per-round accept count (deterministic window content).
+    fn feed_seq(ctl: &mut SpecController, seq: u64, gamma: usize, accepted: usize, rounds: usize) {
+        for _ in 0..rounds {
+            ctl.observe_sequences(&[SeqRoundSample {
+                seq,
+                gamma,
+                accepted,
+            }]);
+        }
+    }
+
+    #[test]
+    fn seq_window_warmup_falls_back_to_batch_estimate() {
+        // Satellite edge case: a sequence with fewer than `window`
+        // observations has no per-seq α̂ and the ragged path hands it the
+        // batch-level estimate's γ.
+        let cfg = ControlConfig {
+            ragged: true,
+            seq_window_rounds: 8,
+            ..ControlConfig::model_guided(roofline_spec())
+        };
+        let mut ctl = SpecController::new(cfg);
+        // Seq 1: full window at a hard α (γ=4, 0 accepted → α̂ ≈ 0).
+        feed_seq(&mut ctl, 1, 4, 0, 8);
+        assert!(ctl.seq_alpha_hat(1).is_some());
+        assert!(ctl.seq_alpha_hat(1).unwrap() < 0.05);
+        // Seq 2: only 3 observations — still warming up.
+        feed_seq(&mut ctl, 2, 4, 4, 3);
+        assert_eq!(ctl.seq_alpha_hat(2), None, "warm-up must report None");
+        // Ragged assignment at a small (memory-bound) batch: the hard
+        // sequence gets a shallower draft than the warm-up sequence,
+        // which inherits the batch-level prior (0.8 by default).
+        let mut out = Vec::new();
+        ctl.gammas_for_round(&[1, 2], &mut out);
+        assert_eq!(out.len(), 2);
+        assert!(
+            out[0] < out[1],
+            "hard seq should draft shallower than warm-up seq: {out:?}"
+        );
+        // Depths are floored at 1 in speculative regimes so every
+        // sequence keeps emitting acceptance samples — a γᵢ=0 assignment
+        // would freeze its window at the stale α̂ᵢ forever.
+        assert!(out[0] >= 1, "ragged depths must stay probeable: {out:?}");
+        // Releasing drops the window; the sequence re-enters warm-up.
+        ctl.release_sequence(1);
+        assert_eq!(ctl.seq_alpha_hat(1), None);
+        assert_eq!(ctl.state().tracked_sequences, 1);
+    }
+
+    #[test]
+    fn seq_window_estimates_track_true_alpha() {
+        // The MLE ratio over mixed-γ windows recovers α.
+        let cfg = ControlConfig {
+            ragged: true,
+            seq_window_rounds: 64,
+            ..ControlConfig::static_gamma(4)
+        };
+        let mut ctl = SpecController::new(cfg);
+        let mut rng = Rng::seeded(77);
+        let alpha = 0.7;
+        for r in 0..400 {
+            // Alternate γ 3 and 5: the estimator must compose across γ.
+            let gamma = if r % 2 == 0 { 3 } else { 5 };
+            let mut accepted = 0;
+            for _ in 0..gamma {
+                if rng.bernoulli(alpha) {
+                    accepted += 1;
+                } else {
+                    break;
+                }
+            }
+            ctl.observe_sequences(&[SeqRoundSample {
+                seq: 9,
+                gamma,
+                accepted,
+            }]);
+        }
+        let a = ctl.seq_alpha_hat(9).expect("window full");
+        assert!((a - alpha).abs() < 0.1, "α̂ᵢ={a} vs α={alpha}");
+    }
+
+    #[test]
+    fn ragged_uniform_alpha_reproduces_scalar_bit_for_bit() {
+        // The issue's property: uniform-α inputs reproduce today's scalar
+        // behavior exactly. Two controllers — ragged on/off — fed the
+        // same observation stream must agree on every round's assignment.
+        let mk = |ragged: bool| {
+            SpecController::new(ControlConfig {
+                ragged,
+                ..ControlConfig::model_guided(roofline_spec())
+            })
+        };
+        let mut a = mk(true);
+        let mut b = mk(false);
+        let mut rng = Rng::seeded(5);
+        let seqs: Vec<u64> = (0..8).collect();
+        for round in 0..60u64 {
+            let mut out_a = Vec::new();
+            let mut out_b = Vec::new();
+            a.gammas_for_round(&seqs, &mut out_a);
+            b.gammas_for_round(&seqs, &mut out_b);
+            assert_eq!(out_a, out_b, "round {round}");
+            assert!(out_a.iter().all(|&g| g == out_a[0]), "must stay uniform");
+            let gamma = out_a[0];
+            let (accepted, emitted) = sim_round(&mut rng, 0.85, gamma, seqs.len());
+            let samples: Vec<SeqRoundSample> = seqs
+                .iter()
+                .map(|&s| SeqRoundSample {
+                    seq: s,
+                    gamma,
+                    accepted: (accepted / seqs.len() as u64) as usize,
+                })
+                .collect();
+            a.observe_sequences(&samples);
+            let obs = RoundObservation {
+                round,
+                batch: seqs.len(),
+                gamma,
+                proposed: (seqs.len() * gamma) as u64,
+                accepted,
+                emitted,
+                t_draft: 0.001 * gamma as f64,
+                t_verify: 0.01,
+                t_reject: 1e-4,
+            };
+            a.observe(obs);
+            b.observe(obs);
+        }
+        assert_eq!(a.state().ragged_rounds, 0, "uniform α must never go ragged");
+    }
+
+    #[test]
+    fn ragged_respects_regime_shifts() {
+        // Regime-shift re-consult with ragged γ (satellite edge case): a
+        // bimodal batch runs ragged at a small batch, collapses to the
+        // uniform γ=0 AR fallback the moment the bucket jumps to a
+        // compute-bound size, and resumes ragged refinement on return.
+        let cfg = ControlConfig {
+            ragged: true,
+            seq_window_rounds: 4,
+            ..ControlConfig::model_guided(roofline_spec())
+        };
+        let mut ctl = SpecController::new(cfg);
+        // Two full windows: seq 1 easy (all accepted at γ=6), seq 2 hard.
+        feed_seq(&mut ctl, 1, 6, 6, 4);
+        feed_seq(&mut ctl, 2, 6, 0, 4);
+        let mut out = Vec::new();
+        ctl.gammas_for_round(&[1, 2], &mut out);
+        assert!(out[0] > out[1], "bimodal batch should be ragged: {out:?}");
+        assert!(ctl.state().ragged_rounds >= 1);
+        // Compute-bound bucket: uniform AR for everyone, instantly.
+        let big: Vec<u64> = (0..4096).collect();
+        let mut out_big = Vec::new();
+        ctl.gammas_for_round(&big, &mut out_big);
+        assert_eq!(out_big.len(), 4096);
+        assert!(out_big.iter().all(|&g| g == 0), "AR fallback must stay uniform");
+        // Back to the small regime: ragged again, same ordering.
+        let mut out_back = Vec::new();
+        ctl.gammas_for_round(&[1, 2], &mut out_back);
+        assert!(out_back[0] > out_back[1], "{out_back:?}");
     }
 
     #[test]

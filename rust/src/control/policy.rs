@@ -52,6 +52,53 @@ pub struct GammaDecision {
 pub trait GammaPolicy: Send {
     fn name(&self) -> &'static str;
     fn decide(&mut self, est: &Estimates) -> GammaDecision;
+
+    /// Vectorized per-sequence decision for **ragged** rounds: fill `out`
+    /// with one γᵢ per entry of `seq_alphas` (the controller's windowed
+    /// per-sequence α̂ᵢ, batch-level fallback already applied). Side-effect
+    /// free — hysteresis/dwell/probe state belongs to the scalar
+    /// [`GammaPolicy::decide`] path, which still owns regime decisions;
+    /// this refines *within* the current regime every round.
+    ///
+    /// The default (and the guaranteed behavior of every policy when all
+    /// α̂ᵢ are equal) is the uniform round the scalar path would run:
+    /// every sequence at `est.current_gamma`.
+    ///
+    /// ```
+    /// use moesd::control::{ControlConfig, CostModelSpec, CostTable, Estimates};
+    /// use moesd::control::{GammaPolicy, ModelGuidedPolicy};
+    /// use moesd::hardware::platform_2x_gpu_a;
+    /// use moesd::perfmodel::PerfParams;
+    /// let spec = CostModelSpec::perf(
+    ///     platform_2x_gpu_a().ridge_point(),
+    ///     PerfParams {
+    ///         bias: 0.02, k1: 1e-4, k2: 2e-4, k3: 5e-4,
+    ///         draft_bias: 0.001, draft_k: 1e-5,
+    ///         reject_bias: 1e-4, reject_k: 1e-7,
+    ///         lambda: 0.5, s: 1.02,
+    ///     },
+    ///     8,
+    ///     64,
+    /// );
+    /// let policy = ModelGuidedPolicy::new(spec, &ControlConfig::default());
+    /// let costs = CostTable::default();
+    /// let est = Estimates {
+    ///     batch: 8, alpha: Some(0.8), sigma: None,
+    ///     current_gamma: 3, regime_shift: false, costs: &costs,
+    /// };
+    /// let mut out = Vec::new();
+    /// // An easy (α̂=0.98) and a hard (α̂=0.3) sequence in the same round:
+    /// // the easy one gets a strictly deeper draft.
+    /// policy.gamma_for_sequences(&est, &[0.98, 0.3], &mut out);
+    /// assert!(out[0] > out[1], "{out:?}");
+    /// // All-equal α̂ reproduces the scalar path's uniform round exactly.
+    /// out.clear();
+    /// policy.gamma_for_sequences(&est, &[0.8, 0.8], &mut out);
+    /// assert_eq!(out, vec![3, 3]);
+    /// ```
+    fn gamma_for_sequences(&self, est: &Estimates, seq_alphas: &[f64], out: &mut Vec<usize>) {
+        out.extend(std::iter::repeat(est.current_gamma).take(seq_alphas.len()));
+    }
 }
 
 /// Fixed γ — the baseline against which adaptation is measured.
@@ -109,6 +156,14 @@ impl ModelGuidedPolicy {
     /// the s-shape comes from the model but the absolute levels track
     /// production reality.
     pub fn score(&self, batch: usize, gamma: usize, alpha: f64, costs: &CostTable) -> f64 {
+        let round_len = theory::expected_round_length(alpha, gamma);
+        round_len / self.round_cost(batch, gamma, costs).max(1e-300)
+    }
+
+    /// The Eq. 4 denominator at (B, γ): measured-cost-anchored model time
+    /// of one uniform round — α-independent, so the per-sequence argmax in
+    /// [`ModelGuidedPolicy::gamma_for_sequences`] computes it once per γ.
+    fn round_cost(&self, batch: usize, gamma: usize, costs: &CostTable) -> f64 {
         let b = batch.max(1);
         let bucket = bucket_of(b);
         let model_verify = self.cost.t_target(b, gamma + 1);
@@ -131,8 +186,54 @@ impl ModelGuidedPolicy {
             Some(per_row) => per_row * (b * (gamma + 1)) as f64,
             None => self.cost.t_reject(b, gamma),
         };
-        let round_len = theory::expected_round_length(alpha, gamma);
-        round_len / (gamma as f64 * draft1 + verify + reject).max(1e-300)
+        gamma as f64 * draft1 + verify + reject
+    }
+
+    /// Measured-cost-anchored time of one **ragged** round: packed verify
+    /// over `Σ count·(γ+1)` tokens (re-anchored exactly like
+    /// [`ModelGuidedPolicy::score`]'s verify term), sequential draft steps
+    /// over the shrinking active set, and Σ-rows rejection. `groups` is
+    /// the round's assignment as `(count, γ)` per distinct-α̂ group.
+    fn ragged_round_cost(&self, batch: usize, groups: &[(usize, usize)], costs: &CostTable) -> f64 {
+        let b = batch.max(1);
+        let bucket = bucket_of(b);
+        let tokens: usize = groups.iter().map(|&(c, g)| c * (g + 1)).sum();
+        let model_verify = self.cost.t_target_tokens(b, tokens);
+        let verify = match costs.verify_nearest(bucket, (tokens + b / 2) / b) {
+            Some((s_obs, measured)) => {
+                let model_at_obs = self.cost.t_target(b, s_obs);
+                if model_at_obs > 0.0 {
+                    model_verify * (measured / model_at_obs)
+                } else {
+                    model_verify
+                }
+            }
+            None => model_verify,
+        };
+        // Draft steps at the shrinking batch, re-anchored by the measured
+        // per-forward ratio at the full batch where available.
+        let draft_ratio = match (costs.draft_per_forward(bucket), self.cost.t_draft(b)) {
+            (Some(measured), model) if model > 0.0 => measured / model,
+            _ => 1.0,
+        };
+        let gamma_top = groups.iter().map(|&(_, g)| g).max().unwrap_or(0);
+        let mut draft = 0.0;
+        for step in 0..gamma_top {
+            let bg: usize = groups
+                .iter()
+                .filter(|&&(_, g)| g > step)
+                .map(|&(c, _)| c)
+                .sum();
+            draft += self.cost.t_draft(bg.max(1)) * draft_ratio;
+        }
+        let reject = match costs.reject_per_row() {
+            Some(per_row) => per_row * tokens as f64,
+            None => {
+                let mean_gamma = ((tokens + b / 2) / b).saturating_sub(1);
+                self.cost.t_reject(b, mean_gamma)
+            }
+        };
+        draft + verify + reject
     }
 
     fn scores(&self, batch: usize, alpha: f64, costs: &CostTable) -> Vec<f64> {
@@ -213,6 +314,78 @@ impl GammaPolicy for ModelGuidedPolicy {
         GammaDecision {
             gamma: best,
             kind: DecisionKind::Switch,
+        }
+    }
+
+    /// Per-sequence Eq. 4 over the *shared* ragged round time: the
+    /// water-filling argmax of `Σᵢ σ(α̂ᵢ, γᵢ)·(γᵢ+1) / T_round(γ⃗)`.
+    /// Sequences are grouped by their (already-quantized) α̂, candidate
+    /// assignments are every uniform γ plus every water level θ = α̂ᵏ
+    /// (`γ(θ) = max{γ : α̂^γ ≥ θ}` per group, the closed form of
+    /// [`crate::perfmodel::PerfModel::argmax_gamma_ragged`]), and each
+    /// candidate is scored with the measured-cost-anchored ragged round
+    /// time. Uniform candidates are evaluated first, so ties collapse to
+    /// uniform rounds; the independent per-sequence argmax (each sequence
+    /// against the *full* round cost) is deliberately not used — it
+    /// over-drafts easy sequences because it ignores that the round time
+    /// is shared.
+    fn gamma_for_sequences(&self, est: &Estimates, seq_alphas: &[f64], out: &mut Vec<usize>) {
+        let n = seq_alphas.len();
+        if n == 0 {
+            return;
+        }
+        // All-equal α̂ is the uniform special case: reproduce the scalar
+        // path's held γ exactly (bit-for-bit — no model evaluation).
+        if seq_alphas.windows(2).all(|w| w[0] == w[1]) {
+            out.extend(std::iter::repeat(est.current_gamma).take(n));
+            return;
+        }
+        // Distinct-α̂ groups (the controller quantizes to a 0.01 grid, so
+        // there are at most ~100; exact match is intentional).
+        let mut groups: Vec<(f64, usize)> = Vec::new();
+        for &a in seq_alphas {
+            match groups.iter_mut().find(|(ga, _)| *ga == a) {
+                Some((_, c)) => *c += 1,
+                None => groups.push((a, 1)),
+            }
+        }
+        // One shared candidate set with the offline argmax
+        // ([`crate::perfmodel::water_fill_assignments`] — uniforms first,
+        // then the closed-form γ(θ) per water level), scored here with
+        // the measured-cost-anchored ragged round time. Inside a
+        // speculative regime every depth is floored at 1 *before*
+        // scoring, so the argmax runs over exactly the feasible set the
+        // controller will execute (a γᵢ=0 sequence would stop producing
+        // acceptance samples and freeze its own α̂ᵢ window — see
+        // `SpecController::gammas_for_round`).
+        let floor = if est.current_gamma >= 1 { 1 } else { 0 };
+        let group_alphas: Vec<f64> = groups.iter().map(|&(a, _)| a).collect();
+        let mut assignment: Vec<(usize, usize)> = Vec::with_capacity(groups.len());
+        let mut best: Vec<usize> = Vec::new();
+        let mut best_score = f64::MIN;
+        for mut cand in crate::perfmodel::water_fill_assignments(&group_alphas, self.gamma_max) {
+            for g in cand.iter_mut() {
+                *g = (*g).max(floor);
+            }
+            assignment.clear();
+            let mut toks = 0.0;
+            for ((a, c), &g) in groups.iter().zip(cand.iter()) {
+                assignment.push((*c, g));
+                toks += *c as f64 * theory::expected_round_length(*a, g);
+            }
+            let s = toks
+                / self
+                    .ragged_round_cost(est.batch, &assignment, est.costs)
+                    .max(1e-300);
+            if s > best_score {
+                best_score = s;
+                best = cand;
+            }
+        }
+        // Expand the winning per-group depths back to per-sequence order.
+        for &a in seq_alphas {
+            let gi = groups.iter().position(|&(ga, _)| ga == a).unwrap();
+            out.push(best[gi]);
         }
     }
 }
@@ -392,6 +565,114 @@ mod tests {
         // Both topologies still fall back to AR once compute-bound.
         assert_eq!(best(&d1, 4096), 0);
         assert_eq!(best(&pcie, 4096), 0);
+    }
+
+    #[test]
+    fn gamma_for_sequences_water_fill_matches_replica() {
+        // Validated against the python replica of the roofline pricing:
+        // B=16, bimodal α 0.9/0.5 → depths (8, 3); the compute-bound
+        // B=4096 collapses to the uniform AR round.
+        let p = policy(roofline_spec(), 0.05, 0);
+        let costs = CostTable::default();
+        let est = |b: usize, cur: usize| Estimates {
+            batch: b,
+            alpha: Some(0.7),
+            sigma: None,
+            current_gamma: cur,
+            regime_shift: false,
+            costs: &costs,
+        };
+        let mut out = Vec::new();
+        let alphas: Vec<f64> = (0..16).map(|i| if i % 2 == 0 { 0.9 } else { 0.5 }).collect();
+        p.gamma_for_sequences(&est(16, 3), &alphas, &mut out);
+        assert_eq!(out.len(), 16);
+        assert_eq!((out[0], out[1]), (8, 3), "{out:?}");
+        // Group expansion keeps per-sequence order (all evens equal, etc.).
+        assert!(out.iter().step_by(2).all(|&g| g == 8));
+        assert!(out.iter().skip(1).step_by(2).all(|&g| g == 3));
+        // Compute-bound: the uniform γ=0 candidate wins for everyone.
+        out.clear();
+        let big: Vec<f64> = (0..4096).map(|i| if i % 2 == 0 { 0.9 } else { 0.5 }).collect();
+        p.gamma_for_sequences(&est(4096, 0), &big, &mut out);
+        assert!(out.iter().all(|&g| g == 0), "non-uniform at B=4096");
+    }
+
+    #[test]
+    fn gamma_for_sequences_uniform_alpha_is_identity() {
+        // The uniform special case is exact: all-equal α̂ returns the held
+        // γ with no model evaluation, for both policies.
+        let p = policy(roofline_spec(), 0.05, 0);
+        let costs = CostTable::default();
+        let est = Estimates {
+            batch: 8,
+            alpha: Some(0.8),
+            sigma: None,
+            current_gamma: 5,
+            regime_shift: false,
+            costs: &costs,
+        };
+        let mut out = Vec::new();
+        p.gamma_for_sequences(&est, &[0.8; 6], &mut out);
+        assert_eq!(out, vec![5; 6]);
+        let stat = StaticPolicy { gamma: 2 };
+        out.clear();
+        stat.gamma_for_sequences(&est, &[0.9, 0.4], &mut out);
+        assert_eq!(out, vec![5, 5], "default impl holds the current γ");
+    }
+
+    #[test]
+    fn water_fill_beats_independent_argmax_objective() {
+        // The shared-round-time objective the water-fill maximizes: its
+        // assignment must score at least as high as both every uniform
+        // assignment and the independent per-sequence argmax (which
+        // over-drafts easy sequences by privatizing the round cost).
+        let p = policy(roofline_spec(), 0.05, 0);
+        let costs = CostTable::default();
+        let batch = 16usize;
+        let alphas: Vec<f64> = (0..batch).map(|i| if i % 2 == 0 { 0.95 } else { 0.6 }).collect();
+        let goodput = |gammas: &[usize]| -> f64 {
+            let groups: Vec<(usize, usize)> = gammas.iter().map(|&g| (1, g)).collect();
+            let toks: f64 = alphas
+                .iter()
+                .zip(gammas)
+                .map(|(&a, &g)| crate::theory::expected_round_length(a, g))
+                .sum();
+            toks / p.ragged_round_cost(batch, &groups, &costs)
+        };
+        let est = Estimates {
+            batch,
+            alpha: Some(0.775),
+            sigma: None,
+            current_gamma: 3,
+            regime_shift: false,
+            costs: &costs,
+        };
+        let mut wf = Vec::new();
+        p.gamma_for_sequences(&est, &alphas, &mut wf);
+        let wf_score = goodput(&wf);
+        for g in 0..=8usize {
+            let uni = goodput(&vec![g; batch]);
+            assert!(
+                wf_score >= uni - 1e-12,
+                "uniform γ={g} ({uni}) beat the water-fill ({wf_score})"
+            );
+        }
+        // Independent per-sequence argmax over the *full* round cost:
+        let indep: Vec<usize> = alphas
+            .iter()
+            .map(|&a| {
+                (0..=8usize)
+                    .max_by(|&x, &y| {
+                        let sx = crate::theory::expected_round_length(a, x)
+                            / p.round_cost(batch, x, &costs);
+                        let sy = crate::theory::expected_round_length(a, y)
+                            / p.round_cost(batch, y, &costs);
+                        sx.partial_cmp(&sy).unwrap()
+                    })
+                    .unwrap()
+            })
+            .collect();
+        assert!(wf_score >= goodput(&indep) - 1e-12);
     }
 
     #[test]

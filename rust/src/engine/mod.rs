@@ -5,8 +5,17 @@
 //! and drives batched speculative decoding:
 //!
 //! ```text
-//! step(): admit → (propose γ) → verify → rejection-sample → commit/rollback
+//! step(): admit → (propose γᵢ) → verify → rejection-sample → commit/rollback
 //! ```
+//!
+//! Speculation depth is **per sequence** (ragged rounds): every round each
+//! running sequence gets its own draft length γᵢ — from the control
+//! plane's vectorized policy ([`crate::control::SpecController::gammas_for_round`]),
+//! from static [`EngineConfig::gamma_overrides`], or the uniform
+//! `config.gamma` when neither applies. KV reservation, draft backlogs,
+//! verify rows and accept accounting all follow the per-sequence depth;
+//! a uniform assignment reproduces the scalar-γ engine bit-for-bit
+//! (property-tested in `rust/tests/prop_invariants.rs`).
 //!
 //! The engine clock is *whatever the backend's costs are denominated in*:
 //! the synthetic backend returns roofline-simulated seconds (virtual
@@ -20,7 +29,9 @@
 //! AR and SD share scheduler/batcher/sampler code paths.
 
 use crate::batching::{Buckets, Completion, Request, RequestQueue, SamplingParams};
-use crate::control::{ControlConfig, ControllerState, RoundObservation, SpecController};
+use crate::control::{
+    ControlConfig, ControllerState, RoundObservation, SeqRoundSample, SpecController,
+};
 use crate::kvcache::{KvConfig, KvManager, SeqId};
 use crate::metrics::{Counters, EngineMetrics};
 use crate::sampling::verify_chain_views;
@@ -44,6 +55,12 @@ pub struct EngineConfig {
     /// Optional adaptive speculation controller (γ / batch-ceiling
     /// co-tuning from measured target efficiency; see [`crate::control`]).
     pub control: Option<ControlConfig>,
+    /// Static per-sequence draft-length overrides (ragged rounds without a
+    /// controller): sequence `id` speculates `gamma_overrides[id]` tokens
+    /// per round instead of `gamma`. Used by the ragged experiments' oracle
+    /// arm and tests; online per-sequence γ comes from the control plane
+    /// ([`ControlConfig::ragged`]). Ignored when a controller is set.
+    pub gamma_overrides: std::collections::HashMap<SeqId, usize>,
 }
 
 impl Default for EngineConfig {
@@ -58,6 +75,7 @@ impl Default for EngineConfig {
             buckets: Buckets::pow2_up_to(64),
             seed: 0,
             control: None,
+            gamma_overrides: std::collections::HashMap::new(),
         }
     }
 }
@@ -91,6 +109,9 @@ impl RunningSeq {
 #[derive(Debug, Default)]
 struct RoundScratch {
     seq_ids: Vec<SeqId>,
+    /// Per-sequence draft length γᵢ for the round (ragged; a uniform
+    /// round fills equal entries), aligned with `seq_ids`/`running`.
+    gammas: Vec<usize>,
     temps: Vec<f64>,
     feeds: Vec<u32>,
     /// Draft token backlogs, one reused buffer per running slot.
@@ -98,6 +119,8 @@ struct RoundScratch {
     /// Permanently-empty per-sequence draft lists for γ = 0 (AR) verify
     /// calls, so the AR path allocates nothing per round either.
     empty_drafts: Vec<Vec<u32>>,
+    /// Per-sequence acceptance samples reported to the controller.
+    seq_samples: Vec<SeqRoundSample>,
     /// Indices of sequences that finished this round (ascending).
     finished: Vec<usize>,
 }
@@ -214,23 +237,47 @@ impl<B: SdBackend> Engine<B> {
 
         // The control plane owns γ when configured: it re-decides on batch
         // regime shifts and control-interval boundaries, so this is a
-        // cheap lookup on the hot path.
-        let running_now = self.running.len();
-        let gamma = match self.controller.as_mut() {
-            Some(ctl) => ctl.gamma_for_round(running_now),
-            None => self.config.gamma,
-        };
+        // cheap lookup on the hot path. Depths are per sequence (ragged):
+        // the controller's vectorized path refines its scalar decision
+        // with windowed per-sequence α̂ᵢ; without a controller, static
+        // `gamma_overrides` apply on top of the uniform `config.gamma`.
+        self.scratch.seq_ids.clear();
+        for s in &self.running {
+            self.scratch.seq_ids.push(s.id);
+        }
+        self.scratch.gammas.clear();
+        match self.controller.as_mut() {
+            Some(ctl) => ctl.gammas_for_round(&self.scratch.seq_ids, &mut self.scratch.gammas),
+            None if self.config.gamma_overrides.is_empty() => self
+                .scratch
+                .gammas
+                .extend(std::iter::repeat(self.config.gamma).take(self.running.len())),
+            None => {
+                for s in &self.running {
+                    self.scratch.gammas.push(
+                        self.config
+                            .gamma_overrides
+                            .get(&s.id)
+                            .copied()
+                            .unwrap_or(self.config.gamma),
+                    );
+                }
+            }
+        }
 
-        // --- capacity reservation: γ+1 tokens per sequence ------------------
+        // --- capacity reservation: γᵢ+1 tokens per sequence ----------------
         // Sequences that don't fit are preempted (released + requeued) so the
-        // batch call below operates on a consistent survivor set.
+        // batch call below operates on a consistent survivor set; the
+        // per-sequence γ/id scratch stays index-aligned through removals.
         let mut i = 0;
         while i < self.running.len() {
             let id = self.running[i].id;
-            if self.kv.append(id, gamma + 1).is_some() {
+            if self.kv.append(id, self.scratch.gammas[i] + 1).is_some() {
                 i += 1;
             } else {
                 self.preempt(i);
+                self.scratch.gammas.remove(i);
+                self.scratch.seq_ids.remove(i);
             }
         }
         if self.running.is_empty() {
@@ -239,17 +286,17 @@ impl<B: SdBackend> Engine<B> {
         }
 
         let b = self.running.len();
+        let gamma_max = self.scratch.gammas.iter().copied().max().unwrap_or(0);
+        let total_gamma: usize = self.scratch.gammas.iter().sum();
         self.metrics.rounds += 1;
         self.metrics.batch_size_sum += b as u64;
         self.round_counter += 1;
 
         // Per-round inputs live in reusable scratch buffers — no fresh
         // allocation in steady state.
-        self.scratch.seq_ids.clear();
         self.scratch.temps.clear();
         self.scratch.feeds.clear();
         for s in &self.running {
-            self.scratch.seq_ids.push(s.id);
             self.scratch.temps.push(s.params.temperature);
             self.scratch.feeds.push(s.stream[s.base]);
         }
@@ -259,7 +306,7 @@ impl<B: SdBackend> Engine<B> {
         // committed prefix so the caller can retry the round (exercised by
         // the failure-injection integration test).
         // --- stage ①: draft propose ----------------------------------------
-        let propose_result = if gamma > 0 {
+        let propose_result = if gamma_max > 0 {
             if self.scratch.pending.len() < b {
                 self.scratch.pending.resize_with(b, Vec::new);
             }
@@ -273,7 +320,7 @@ impl<B: SdBackend> Engine<B> {
                 .propose(
                     &self.scratch.seq_ids,
                     &self.scratch.pending[..b],
-                    gamma,
+                    &self.scratch.gammas,
                     &self.scratch.temps,
                     self.round_counter,
                 )
@@ -286,7 +333,7 @@ impl<B: SdBackend> Engine<B> {
             Ok(Some(out)) => {
                 self.clock += out.cost;
                 self.metrics.time_draft += out.cost;
-                self.metrics.draft_tokens_proposed += (b * gamma) as u64;
+                self.metrics.draft_tokens_proposed += total_gamma as u64;
                 round_draft_cost = out.cost;
                 Some(out)
             }
@@ -321,11 +368,12 @@ impl<B: SdBackend> Engine<B> {
         self.metrics.time_verify += verify.cost;
 
         // --- stage ③: rejection sampling ------------------------------------
-        let rcost = self.backend.reject_cost(b, gamma);
+        let rcost = self.backend.reject_cost(&self.scratch.gammas);
         self.clock += rcost;
         self.metrics.time_reject += rcost;
 
         self.scratch.finished.clear();
+        self.scratch.seq_samples.clear();
         let mut round_accepted: u64 = 0;
         let mut round_emitted: u64 = 0;
         for (i, seq) in self.running.iter_mut().enumerate() {
@@ -338,6 +386,13 @@ impl<B: SdBackend> Engine<B> {
             self.metrics.draft_tokens_accepted += outcome.accepted as u64;
             round_accepted += outcome.accepted as u64;
             round_emitted += outcome.tokens.len() as u64;
+            // Per-sequence accept accounting: the controller's windowed
+            // α̂ᵢ estimators consume these (ragged γ decisions).
+            self.scratch.seq_samples.push(SeqRoundSample {
+                seq: seq.id,
+                gamma: self.scratch.gammas[i],
+                accepted: outcome.accepted,
+            });
             seq.rounds += 1;
 
             if seq.first_token_at.is_none() {
@@ -379,13 +434,19 @@ impl<B: SdBackend> Engine<B> {
             }
         }
 
-        // Close the control loop: report what this round measured.
+        // Close the control loop: report what this round measured. The
+        // round-level γ attributed to the cost table is the *mean* verify
+        // width minus one (rounded) — exactly γ for uniform rounds, the
+        // nearest uniform equivalent for ragged ones.
         if let Some(ctl) = self.controller.as_mut() {
+            ctl.observe_sequences(&self.scratch.seq_samples);
+            let rows = b + total_gamma;
+            let gamma_obs = ((rows + b / 2) / b).saturating_sub(1);
             ctl.observe(RoundObservation {
                 round: self.round_counter,
                 batch: b,
-                gamma,
-                proposed: (b * gamma) as u64,
+                gamma: gamma_obs,
+                proposed: total_gamma as u64,
                 accepted: round_accepted,
                 emitted: round_emitted,
                 t_draft: round_draft_cost,
@@ -400,6 +461,9 @@ impl<B: SdBackend> Engine<B> {
             let seq = self.running.remove(i);
             self.backend.release(seq.id);
             self.kv.release(seq.id);
+            if let Some(ctl) = self.controller.as_mut() {
+                ctl.release_sequence(seq.id);
+            }
             self.metrics.requests_completed += 1;
             let completion = Completion {
                 id: seq.id,
@@ -725,6 +789,70 @@ mod tests {
         assert_eq!(done.len(), 2);
         // Request 2 must have joined the running batch (batch of 2 seen).
         assert!(e.metrics.mean_batch() > 1.0);
+    }
+
+    #[test]
+    fn gamma_overrides_drive_ragged_rounds_losslessly() {
+        // Static ragged rounds: two sequences at γ=6, two at γ=1, mixed
+        // per-sequence α — every chain still exact.
+        let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+        let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+        let backend = SyntheticLm::new(target, draft, 0.9, 17)
+            .with_seq_alphas(&[(2, 0.4), (3, 0.4)]);
+        let mut overrides = std::collections::HashMap::new();
+        overrides.insert(0u64, 6usize);
+        overrides.insert(1, 6);
+        overrides.insert(2, 1);
+        overrides.insert(3, 1);
+        let config = EngineConfig {
+            gamma: 3,
+            gamma_overrides: overrides,
+            ..Default::default()
+        };
+        let mut e = Engine::new(config, backend);
+        for id in 0..4 {
+            e.submit(req(id, 6, 24, 0.0));
+        }
+        let done = e.run_to_completion(1000).unwrap();
+        assert_eq!(done.len(), 4);
+        for c in &done {
+            assert_eq!(c.tokens, e.backend().expected_chain(c.id, 6, 24));
+        }
+        // The deep-γ sequences finish in fewer rounds than the shallow
+        // ones (α=0.9 at γ=6 vs α=0.4 at γ=1).
+        let rounds = |id: u64| done.iter().find(|c| c.id == id).unwrap().rounds;
+        assert!(rounds(0) < rounds(2), "{} vs {}", rounds(0), rounds(2));
+    }
+
+    #[test]
+    fn uniform_overrides_are_identical_to_plain_config() {
+        // Overrides that equal config.gamma for every sequence take the
+        // ragged code path but must reproduce the plain run bit-for-bit.
+        let run = |with_overrides: bool| -> (Vec<Vec<u32>>, u64, f64) {
+            let mut overrides = std::collections::HashMap::new();
+            if with_overrides {
+                for id in 0..5u64 {
+                    overrides.insert(id, 3usize);
+                }
+            }
+            let config = EngineConfig {
+                gamma: 3,
+                gamma_overrides: overrides,
+                ..Default::default()
+            };
+            let mut e = Engine::new(config, synthetic(0.7, 23));
+            for id in 0..5 {
+                e.submit(req(id, 6, 25, 0.0));
+            }
+            let mut done = e.run_to_completion(500).unwrap();
+            done.sort_by_key(|c| c.id);
+            (
+                done.into_iter().map(|c| c.tokens).collect(),
+                e.metrics.rounds,
+                e.clock(),
+            )
+        };
+        assert_eq!(run(false), run(true));
     }
 
     #[test]

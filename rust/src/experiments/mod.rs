@@ -19,6 +19,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
+pub mod ragged;
 pub mod sharding;
 pub mod table3;
 pub mod tables;

@@ -24,6 +24,17 @@
 //! physical clock ([`ShardingSpec::comm_time`] — the fitted parameters are
 //! seconds, so the units line up). A `d = 1` spec reproduces the
 //! unsharded model exactly.
+//!
+//! ## Per-sequence (ragged) extension
+//!
+//! The paper states Eq. 4's argmax over γ per workload; acceptance α
+//! varies per *sequence*, so the repo extends it: a ragged round gives
+//! sequence `i` its own depth γᵢ, commits Σᵢ σ(αᵢ, γᵢ)·(γᵢ+1) expected
+//! tokens, and pays one shared round time (packed verify at Σ(γᵢ+1)
+//! tokens, draft steps over the shrinking active set). See
+//! [`PerfModel::ragged_goodput`] for the objective and
+//! [`PerfModel::argmax_gamma_ragged`] for the closed-form water-filling
+//! argmax (`γᵢ(θ) = max{γ : αᵢ^γ ≥ θ}` at a common water level θ).
 
 use crate::arch::ModelArch;
 use crate::hardware::{Platform, ShardingSpec};
@@ -175,6 +186,64 @@ pub struct Measurement {
     pub sigma: f64,
     /// Measured end-to-end SD speedup (the fitting target).
     pub speedup: f64,
+}
+
+/// Total verify-forward tokens of a ragged round: `Σ(γᵢ + 1)` — the
+/// packed width the target processes in one forward (and the row count
+/// the rejection sampler reads).
+pub fn ragged_verify_tokens(gammas: &[usize]) -> usize {
+    gammas.iter().map(|&g| g + 1).sum()
+}
+
+/// Draft-step schedule of a ragged round: `schedule[g]` is the number of
+/// sequences still drafting at sequential draft step `g` (those with
+/// `γᵢ > g`), so the draft stage costs `Σ_g T_D(schedule[g])`. Length is
+/// `max γᵢ`; a uniform assignment yields `γ` steps at the full batch.
+pub fn ragged_draft_schedule(gammas: &[usize]) -> Vec<usize> {
+    let gmax = gammas.iter().copied().max().unwrap_or(0);
+    (0..gmax)
+        .map(|step| gammas.iter().filter(|&&g| g > step).count())
+        .collect()
+}
+
+/// Candidate γ assignments of the water-filling argmax for a set of
+/// acceptance estimates (per sequence, or one per distinct-α̂ group):
+/// every uniform depth `0..=γmax` first — so ties collapse to uniform
+/// rounds — then one assignment per distinct water level `θ = αᵢᵏ`, with
+/// `γᵢ(θ) = max{γ ≤ γmax : αᵢ^γ ≥ θ}` in closed form per entry. This is
+/// the single source of the candidate set: the offline argmax
+/// ([`PerfModel::argmax_gamma_ragged`]) and the online policy
+/// (`control::ModelGuidedPolicy::gamma_for_sequences`) both score
+/// exactly these assignments, each with its own cost backend.
+pub fn water_fill_assignments(alphas: &[f64], gamma_max: usize) -> Vec<Vec<usize>> {
+    let n = alphas.len();
+    let mut cands: Vec<Vec<usize>> = (0..=gamma_max).map(|g| vec![g; n]).collect();
+    let mut thetas: Vec<f64> = Vec::new();
+    for &a in alphas {
+        let a = a.clamp(0.0, 1.0);
+        for k in 1..=gamma_max {
+            let th = a.powi(k as i32);
+            if th > 0.0 && !thetas.iter().any(|&x| (x - th).abs() < 1e-12) {
+                thetas.push(th);
+            }
+        }
+    }
+    for &theta in &thetas {
+        cands.push(
+            alphas
+                .iter()
+                .map(|&a| {
+                    let a = a.clamp(0.0, 1.0);
+                    let mut g = 0;
+                    while g < gamma_max && a.powi(g as i32 + 1) >= theta {
+                        g += 1;
+                    }
+                    g
+                })
+                .collect(),
+        );
+    }
+    cands
 }
 
 /// The analytic model, bound to a platform ridge point.
@@ -332,6 +401,126 @@ impl PerfModel {
     pub fn target_efficiency(&self, p: &PerfParams, m: &Measurement) -> f64 {
         self.t_target(p, m.batch, 1, m.k, m.e)
             / self.t_target(p, m.batch, m.gamma + 1, m.k, m.e)
+    }
+
+    // --- per-sequence Eq. 4 (ragged rounds) --------------------------------
+
+    /// Target forward time over a **packed** token count — the verify pass
+    /// of a ragged round, where sequence `i` contributes `γᵢ + 1` tokens
+    /// and the forward processes `tokens = Σ(γᵢ+1)` in total. Alg. 1's
+    /// cost surface depends on `(B, s)` only through `t = B·s`, so the
+    /// packed form is exactly `t_target(tokens, 1)`; a uniform round's
+    /// `t_target_tokens(B·(γ+1))` equals `t_target(B, γ+1)` identically.
+    pub fn t_target_tokens(&self, p: &PerfParams, tokens: usize, k: usize, e: usize) -> f64 {
+        self.t_target(p, tokens, 1, k, e)
+    }
+
+    /// Time of one ragged round: the draft runs `max γᵢ` sequential
+    /// forwards over the shrinking set of sequences still drafting
+    /// ([`ragged_draft_schedule`]), the target verifies the packed
+    /// `Σ(γᵢ+1)` tokens in one forward, and rejection sampling reads the
+    /// same `Σ(γᵢ+1)` rows. A uniform assignment reproduces the
+    /// [`PerfModel::compute_speedup`] denominator.
+    pub fn ragged_round_time(&self, p: &PerfParams, gammas: &[usize], k: usize, e: usize) -> f64 {
+        let rows = ragged_verify_tokens(gammas);
+        let verify = self.t_target_tokens(p, rows, k, e);
+        let draft: f64 = ragged_draft_schedule(gammas)
+            .iter()
+            .map(|&bg| self.t_draft(p, bg))
+            .sum();
+        let reject = p.reject_bias + p.reject_k * rows as f64;
+        draft + verify + reject
+    }
+
+    /// Expected goodput (committed tokens per second, whole batch) of a
+    /// mixed-γ round — the per-sequence Eq. 4: each sequence contributes
+    /// σ(αᵢ, γᵢ)·(γᵢ+1) expected tokens while the round pays one shared
+    /// ragged round time.
+    ///
+    /// ```
+    /// use moesd::perfmodel::{PerfModel, PerfParams};
+    /// let model = PerfModel::with_ridge_point(150.0);
+    /// let p = PerfParams {
+    ///     bias: 0.02, k1: 1e-4, k2: 2e-4, k3: 5e-4,
+    ///     draft_bias: 0.001, draft_k: 1e-5,
+    ///     reject_bias: 1e-4, reject_k: 1e-7,
+    ///     lambda: 0.5, s: 1.02,
+    /// };
+    /// // A bimodal batch (8 easy α=0.95 sequences, 8 hard α=0.5 ones) at
+    /// // per-sequence depths (6, 2) out-produces the uniform compromise
+    /// // γ=4 — the argmax the scalar Eq. 4 would pick for the mean α.
+    /// let alphas: Vec<f64> = (0..16).map(|i| if i % 2 == 0 { 0.95 } else { 0.5 }).collect();
+    /// let ragged: Vec<usize> = (0..16).map(|i| if i % 2 == 0 { 6 } else { 2 }).collect();
+    /// let gr = model.ragged_goodput(&p, &ragged, &alphas, 8, 64);
+    /// let gu = model.ragged_goodput(&p, &vec![4; 16], &alphas, 8, 64);
+    /// assert!(gr > gu, "mixed depths should win: {gr} vs {gu}");
+    /// ```
+    pub fn ragged_goodput(
+        &self,
+        p: &PerfParams,
+        gammas: &[usize],
+        alphas: &[f64],
+        k: usize,
+        e: usize,
+    ) -> f64 {
+        assert_eq!(gammas.len(), alphas.len(), "gammas/alphas length mismatch");
+        assert!(!gammas.is_empty(), "ragged goodput needs at least one sequence");
+        theory::ragged_round_tokens(alphas, gammas) / self.ragged_round_time(p, gammas, k, e)
+    }
+
+    /// Closed-form argmax of the per-sequence Eq. 4: the water-filling
+    /// rule. The marginal expected tokens from extending sequence `i`'s
+    /// draft from `γ` to `γ+1` is `αᵢ^{γ+1}` (the probability the whole
+    /// extended prefix is accepted), while the marginal round-time cost of
+    /// one more verify token is shared across the batch — so at the
+    /// optimum every sequence drafts while its marginal stays above one
+    /// common water level θ, giving `γᵢ(θ) = max{γ ≤ γmax : αᵢ^γ ≥ θ}` in
+    /// closed form per sequence. The water level itself is found by
+    /// sweeping the (at most `distinct-α × γmax`) candidate marginals plus
+    /// every uniform assignment and keeping the assignment with the
+    /// highest [`PerfModel::ragged_goodput`]; with uniform α the
+    /// candidates collapse to uniform assignments and the result is the
+    /// scalar Eq. 4 argmax.
+    ///
+    /// ```
+    /// use moesd::perfmodel::{PerfModel, PerfParams};
+    /// let model = PerfModel::with_ridge_point(150.0);
+    /// let p = PerfParams {
+    ///     bias: 0.02, k1: 1e-4, k2: 2e-4, k3: 5e-4,
+    ///     draft_bias: 0.001, draft_k: 1e-5,
+    ///     reject_bias: 1e-4, reject_k: 1e-7,
+    ///     lambda: 0.5, s: 1.02,
+    /// };
+    /// let alphas: Vec<f64> = (0..16).map(|i| if i % 2 == 0 { 0.95 } else { 0.5 }).collect();
+    /// let gammas = model.argmax_gamma_ragged(&p, &alphas, 8, 8, 64);
+    /// // Easy sequences get strictly deeper drafts than hard ones.
+    /// assert!(gammas[0] > gammas[1]);
+    /// // And the assignment is at least as good as every uniform γ.
+    /// let best = model.ragged_goodput(&p, &gammas, &alphas, 8, 64);
+    /// for g in 0..=8usize {
+    ///     let uni = model.ragged_goodput(&p, &vec![g; 16], &alphas, 8, 64);
+    ///     assert!(best >= uni, "uniform γ={g} beat the water-fill");
+    /// }
+    /// ```
+    pub fn argmax_gamma_ragged(
+        &self,
+        p: &PerfParams,
+        alphas: &[f64],
+        gamma_max: usize,
+        k: usize,
+        e: usize,
+    ) -> Vec<usize> {
+        assert!(!alphas.is_empty(), "argmax needs at least one sequence");
+        let mut best: Vec<usize> = Vec::new();
+        let mut best_score = f64::MIN;
+        for cand in water_fill_assignments(alphas, gamma_max) {
+            let s = self.ragged_goodput(p, &cand, alphas, k, e);
+            if s > best_score {
+                best_score = s;
+                best = cand;
+            }
+        }
+        best
     }
 
     /// Residual vector for the Alg. 1 line-13 least-squares objective.
@@ -564,6 +753,101 @@ mod tests {
             m.t_target_sharded(&p, 32, 4, 8, 64, &skew)
                 > m.t_target_sharded(&p, 32, 4, 8, 64, &spec)
         );
+    }
+
+    #[test]
+    fn ragged_helpers_shapes() {
+        assert_eq!(ragged_verify_tokens(&[3, 0, 5]), 11);
+        assert_eq!(ragged_verify_tokens(&[4, 4]), 10);
+        assert_eq!(ragged_draft_schedule(&[3, 0, 5]), vec![2, 2, 2, 1, 1]);
+        assert_eq!(ragged_draft_schedule(&[2, 2]), vec![2, 2]);
+        assert!(ragged_draft_schedule(&[0, 0]).is_empty());
+    }
+
+    #[test]
+    fn water_fill_candidates_cover_uniforms_and_levels() {
+        let cands = water_fill_assignments(&[0.9, 0.5], 4);
+        // Uniforms first: 0..=4.
+        for (g, c) in cands.iter().take(5).enumerate() {
+            assert_eq!(c, &vec![g; 2]);
+        }
+        // Every θ candidate is monotone in α (deeper drafts for higher α)
+        // and within bounds.
+        for c in &cands[5..] {
+            assert!(c[0] >= c[1], "water level must favor the higher α: {c:?}");
+            assert!(c.iter().all(|&g| g <= 4));
+        }
+        // Distinct θ levels: 0.9^k and 0.5^k for k=1..4, all distinct → 8.
+        assert_eq!(cands.len(), 5 + 8);
+        // α=1 drafts at γmax for every level; α=0 never drafts.
+        let degenerate = water_fill_assignments(&[1.0, 0.0], 3);
+        for c in &degenerate[4..] {
+            assert_eq!(c[0], 3);
+            assert_eq!(c[1], 0);
+        }
+    }
+
+    #[test]
+    fn ragged_uniform_round_matches_scalar_denominator() {
+        // A uniform assignment must reproduce the compute_speedup
+        // denominator (up to float-summation order in the draft term).
+        let m = model();
+        let p = demo_params();
+        let (b, gamma) = (16usize, 3usize);
+        let scalar = gamma as f64 * m.t_draft(&p, b)
+            + m.t_target(&p, b, gamma + 1, 8, 64)
+            + m.t_reject(&p, b, gamma);
+        let ragged = m.ragged_round_time(&p, &vec![gamma; b], 8, 64);
+        assert!((ragged - scalar).abs() < 1e-12 * scalar.max(1.0), "{ragged} vs {scalar}");
+        // Packed verify is exactly the uniform-width verify.
+        assert_eq!(
+            m.t_target_tokens(&p, b * (gamma + 1), 8, 64),
+            m.t_target(&p, b, gamma + 1, 8, 64)
+        );
+    }
+
+    #[test]
+    fn water_fill_beats_every_uniform_on_bimodal_alpha() {
+        // Validated against the python replica of this model: bimodal
+        // α = 0.95/0.5 at B=16 — the water-fill lands on the (8, 5)
+        // pattern with goodput ≈ 1790 tok/s vs 1784 for the best uniform
+        // (γ=8) and 1382 for the mean-α compromise γ=4.
+        let m = model();
+        let p = demo_params();
+        let alphas: Vec<f64> = (0..16)
+            .map(|i| if i % 2 == 0 { 0.95 } else { 0.5 })
+            .collect();
+        let assignment = m.argmax_gamma_ragged(&p, &alphas, 8, 8, 64);
+        assert!(assignment[0] > assignment[1], "{assignment:?}");
+        let best = m.ragged_goodput(&p, &assignment, &alphas, 8, 64);
+        for g in 0..=8usize {
+            let uni = m.ragged_goodput(&p, &vec![g; 16], &alphas, 8, 64);
+            assert!(best >= uni, "uniform γ={g} ({uni}) beat water-fill ({best})");
+        }
+    }
+
+    #[test]
+    fn water_fill_uniform_alpha_is_the_scalar_argmax() {
+        // Uniform-α inputs reproduce the scalar Eq. 4 argmax exactly (the
+        // "uniform special case" the issue requires).
+        let m = model();
+        let p = demo_params();
+        for &(alpha, batch) in &[(0.85f64, 16usize), (0.6, 64), (0.95, 4)] {
+            let alphas = vec![alpha; batch];
+            let assignment = m.argmax_gamma_ragged(&p, &alphas, 8, 8, 64);
+            assert!(
+                assignment.windows(2).all(|w| w[0] == w[1]),
+                "uniform α must yield a uniform assignment: {assignment:?}"
+            );
+            let scalar_best = (0..=8usize)
+                .max_by(|&a, &b| {
+                    let ga = m.ragged_goodput(&p, &vec![a; batch], &alphas, 8, 64);
+                    let gb = m.ragged_goodput(&p, &vec![b; batch], &alphas, 8, 64);
+                    ga.partial_cmp(&gb).unwrap()
+                })
+                .unwrap();
+            assert_eq!(assignment[0], scalar_best, "α={alpha} B={batch}");
+        }
     }
 
     #[test]

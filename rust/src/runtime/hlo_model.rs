@@ -423,38 +423,71 @@ impl SdBackend for HloBackend {
         &mut self,
         seqs: &[SeqId],
         pending: &[Vec<u32>],
-        gamma: usize,
+        gammas: &[usize],
         temps: &[f64],
         seed: u64,
     ) -> anyhow::Result<ProposeOut> {
         anyhow::ensure!(seqs.len() == pending.len() && seqs.len() == temps.len());
+        anyhow::ensure!(seqs.len() == gammas.len(), "gammas length mismatch");
         let n = seqs.len();
-        let mut tokens: Vec<Vec<u32>> = vec![Vec::with_capacity(gamma); n];
-        let mut probs: Vec<Vec<LogitsView>> = vec![Vec::with_capacity(gamma); n];
+        let gamma_max = gammas.iter().copied().max().unwrap_or(0);
+        let mut tokens: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut probs: Vec<Vec<LogitsView>> = vec![Vec::new(); n];
         let mut cost = 0.0;
         let mut rng = self.rng.fork(seed);
         // First forward consumes each sequence's pending backlog; the
         // backlog can be ragged (1 or 2 tokens) — pad to the max and step
         // the shorter sequences' lengths accordingly (their extra slot is
         // a pad the mask ignores; len advances only by real tokens).
+        // Ragged γᵢ: draft step g only runs the sequences still drafting
+        // (γᵢ > g), so late steps forward a shrinking sub-batch. The
+        // sub-batch changes composition, which misses the whole-batch KV
+        // cache — correctness is untouched (the cache flushes to the
+        // per-sequence slabs), it just pays the per-seq gather on those
+        // steps.
         let mut feeds: Vec<Vec<u32>> = pending.to_vec();
-        for g in 0..gamma {
-            let s = feeds.iter().map(Vec::len).max().unwrap_or(1).clamp(1, 2);
-            let out = self.forward_model("draft", seqs, &feeds, s)?;
+        // Backlog catch-up: a sequence that sat at γᵢ=0 for some rounds
+        // (ragged assignments, or static overrides) accumulates more than
+        // the usual ≤2 pending tokens, which the sampling loop's step
+        // widths (clamped to the compiled 1–2-token draft executables)
+        // cannot consume in one forward. Drain oversized backlogs two
+        // tokens at a time first, without sampling — only KV/length
+        // advance — so the loop below always starts within step width.
+        loop {
+            let lagging: Vec<usize> = (0..n)
+                .filter(|&i| gammas[i] > 0 && feeds[i].len() > 2)
+                .collect();
+            if lagging.is_empty() {
+                break;
+            }
+            let lag_seqs: Vec<SeqId> = lagging.iter().map(|&i| seqs[i]).collect();
+            let chunks: Vec<Vec<u32>> = lagging.iter().map(|&i| feeds[i][..2].to_vec()).collect();
+            let out = self.forward_model("draft", &lag_seqs, &chunks, 2)?;
             cost += out.seconds;
-            for i in 0..n {
-                let last_real = feeds[i].len().saturating_sub(1);
-                let row = &out.logits[i][last_real];
+            for &i in &lagging {
+                feeds[i].drain(..2);
+            }
+        }
+        for g in 0..gamma_max {
+            let active: Vec<usize> = (0..n).filter(|&i| gammas[i] > g).collect();
+            if active.is_empty() {
+                break;
+            }
+            let act_seqs: Vec<SeqId> = active.iter().map(|&i| seqs[i]).collect();
+            let act_feeds: Vec<Vec<u32>> = active.iter().map(|&i| feeds[i].clone()).collect();
+            let s = act_feeds.iter().map(Vec::len).max().unwrap_or(1).clamp(1, 2);
+            let out = self.forward_model("draft", &act_seqs, &act_feeds, s)?;
+            cost += out.seconds;
+            for (j, &i) in active.iter().enumerate() {
+                let last_real = act_feeds[j].len().saturating_sub(1);
+                let row = &out.logits[j][last_real];
                 let view = row_view(row, temps[i]);
                 let tok = view.sample(&mut rng);
                 tokens[i].push(tok);
                 probs[i].push(view);
-                if g + 1 < gamma {
+                if g + 1 < gammas[i] {
                     feeds[i] = vec![tok];
                 }
-            }
-            if g + 1 < gamma {
-                // subsequent rounds feed exactly the sampled token
             }
         }
         Ok(ProposeOut {
@@ -472,11 +505,15 @@ impl SdBackend for HloBackend {
         temps: &[f64],
     ) -> anyhow::Result<VerifyOut> {
         anyhow::ensure!(seqs.len() == feed.len() && seqs.len() == drafts.len());
-        let gamma = drafts.first().map_or(0, Vec::len);
-        let s = gamma + 1;
+        // Ragged drafts: pad the batch to the widest sequence's γᵢ+1 (the
+        // executable's fixed step shape); pad slots sit *after* each
+        // sequence's real tokens, so the causal mask keeps them out of the
+        // real rows and `forward_model` advances lengths by real tokens
+        // only. Surplus logit rows are dropped per sequence below.
+        let s = drafts.iter().map(Vec::len).max().unwrap_or(0) + 1;
         let tokens: Vec<Vec<u32>> = (0..seqs.len())
             .map(|i| {
-                let mut t = Vec::with_capacity(s);
+                let mut t = Vec::with_capacity(drafts[i].len() + 1);
                 t.push(feed[i]);
                 t.extend_from_slice(&drafts[i]);
                 t
@@ -487,7 +524,13 @@ impl SdBackend for HloBackend {
             .logits
             .iter()
             .zip(temps)
-            .map(|(rows, &temp)| rows.iter().map(|r| row_view(r, temp)).collect())
+            .zip(drafts)
+            .map(|((rows, &temp), draft)| {
+                rows.iter()
+                    .take(draft.len() + 1)
+                    .map(|r| row_view(r, temp))
+                    .collect()
+            })
             .collect();
         Ok(VerifyOut {
             probs,
@@ -518,7 +561,7 @@ impl SdBackend for HloBackend {
         self.seqs.remove(&seq);
     }
 
-    fn reject_cost(&self, _batch: usize, _gamma: usize) -> f64 {
+    fn reject_cost(&self, _gammas: &[usize]) -> f64 {
         // Rejection sampling happens inside the engine on the host; its
         // wall cost is captured by the engine's overhead timer.
         0.0

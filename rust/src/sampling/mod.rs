@@ -264,6 +264,14 @@ pub struct VerifyOutcome {
 /// reference, so the emitted token stream is byte-identical for equal
 /// distributions regardless of representation — the property the
 /// equivalence tests in `rust/tests/prop_invariants.rs` pin down.
+///
+/// The chain length is per call, so **ragged rounds need no special
+/// handling here**: the engine invokes this once per sequence with that
+/// sequence's own γᵢ-length draft (`draft_tokens.len() == γᵢ`,
+/// `target_probs.len() == γᵢ + 1`), in batch order, against one shared
+/// RNG. Because every call consumes a deterministic draw count given its
+/// outcome, the RNG stream stays in lockstep across ragged and uniform
+/// batches alike (asserted by `ragged_batch_keeps_rng_lockstep` below).
 pub fn verify_chain_views(
     draft_tokens: &[u32],
     draft_probs: &[LogitsView],
@@ -640,6 +648,56 @@ mod tests {
             let b = verify_chain(&toks, &draft, &target, &mut rb);
             assert_eq!(a, b, "trial {trial}");
             assert_eq!(ra.next_u64(), rb.next_u64(), "rng divergence, trial {trial}");
+        }
+    }
+
+    /// A ragged batch (per-sequence γᵢ) walked sequence-by-sequence against
+    /// one RNG consumes exactly the same draws as verifying each sequence
+    /// alone with its own RNG stream — the lockstep property the ragged
+    /// engine rounds rely on.
+    #[test]
+    fn ragged_batch_keeps_rng_lockstep() {
+        let vocab = 16;
+        let gammas = [4usize, 0, 2, 7, 1];
+        let mut gen = Rng::seeded(91);
+        let mk = |r: &mut Rng| -> Vec<f64> {
+            let v: Vec<f64> = (0..vocab).map(|_| r.f64() + 0.01).collect();
+            let s: f64 = v.iter().sum();
+            v.into_iter().map(|x| x / s).collect()
+        };
+        // Build one ragged batch of (draft tokens, draft rows, target rows).
+        let batch: Vec<(Vec<u32>, Vec<LogitsView>, Vec<LogitsView>)> = gammas
+            .iter()
+            .map(|&g| {
+                let draft: Vec<Vec<f64>> = (0..g).map(|_| mk(&mut gen)).collect();
+                let target: Vec<Vec<f64>> = (0..=g).map(|_| mk(&mut gen)).collect();
+                let toks: Vec<u32> = draft.iter().map(|d| gen.categorical(d) as u32).collect();
+                (
+                    toks,
+                    draft.into_iter().map(LogitsView::dense).collect(),
+                    target.into_iter().map(LogitsView::dense).collect(),
+                )
+            })
+            .collect();
+        // Walk the whole ragged batch against one RNG...
+        let mut shared = Rng::seeded(4242);
+        let walked: Vec<VerifyOutcome> = batch
+            .iter()
+            .map(|(t, d, tp)| verify_chain_views(t, d, tp, &mut shared))
+            .collect();
+        // ...and replay each sequence alone, advancing a twin RNG by the
+        // draws the previous sequences consumed. Outcomes must agree and
+        // the twin must end in lockstep with the shared stream.
+        let mut twin = Rng::seeded(4242);
+        for ((t, d, tp), want) in batch.iter().zip(&walked) {
+            let got = verify_chain_views(t, d, tp, &mut twin);
+            assert_eq!(&got, want);
+        }
+        assert_eq!(shared.next_u64(), twin.next_u64(), "rng streams diverged");
+        // Output-shape sanity on the ragged outcomes.
+        for (g, out) in gammas.iter().zip(&walked) {
+            assert!(out.accepted <= *g);
+            assert_eq!(out.tokens.len(), out.accepted + 1);
         }
     }
 

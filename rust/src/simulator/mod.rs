@@ -28,6 +28,18 @@
 //!
 //! `d = 1` takes the *identical* unsharded code path, bit-for-bit
 //! (property-tested in `rust/tests/prop_invariants.rs`).
+//!
+//! ## Ragged verify passes
+//!
+//! A ragged speculative round gives every sequence its own draft length
+//! γᵢ, so the verify forward processes `widths[i] = γᵢ + 1` tokens for
+//! sequence `i`. The simulator prices that **packed**: the roofline cost
+//! surface depends on batch and step width only through the total token
+//! count `t = Σ widths` (the dense GEMM arm runs at the sum of widths and
+//! the expert arm at the realized token count), so
+//! [`ExecSim::t_forward_ragged`] is `t_forward_tokens(b, Σ widths)` and a
+//! uniform-width call reproduces [`ExecSim::t_forward`] **bit-for-bit**
+//! (property-tested in `rust/tests/prop_invariants.rs`).
 
 pub mod routing;
 
@@ -92,13 +104,15 @@ pub struct ExecSim {
     /// Expert-parallel deployment this simulator prices. The default
     /// [`ShardingSpec::single`] keeps the original single-group path.
     sharding: ShardingSpec,
-    /// Memoized rng-free forward prices keyed by (b, s, ctx). An engine
-    /// run prices thousands of rounds over a handful of distinct shapes,
-    /// and the figure sweeps re-ask the same points per grid cell —
-    /// re-walking the roofline each call was measurable coordinator
-    /// overhead. Interior mutability keeps the pricing API `&self`; the
-    /// builder methods clear the cache because prices depend on their
-    /// settings.
+    /// Memoized rng-free forward prices keyed by (b, total new tokens,
+    /// ctx) — the cost surface depends on batch and width only through
+    /// the token total, so uniform (`t_forward`) and ragged
+    /// (`t_forward_ragged`) calls share entries. An engine run prices
+    /// thousands of rounds over a handful of distinct shapes, and the
+    /// figure sweeps re-ask the same points per grid cell — re-walking
+    /// the roofline each call was measurable coordinator overhead.
+    /// Interior mutability keeps the pricing API `&self`; the builder
+    /// methods clear the cache because prices depend on their settings.
     price_cache: RefCell<HashMap<(usize, usize, usize), f64>>,
 }
 
@@ -186,17 +200,34 @@ impl ExecSim {
         b: usize,
         s: usize,
         ctx: usize,
+        rng: Option<&mut Rng>,
+    ) -> TimeBreakdown {
+        assert!(s > 0);
+        self.forward_time_tokens(b, b * s, ctx, rng)
+    }
+
+    /// Token-count form of [`ExecSim::forward_time`]: one forward pass over
+    /// `b` sequences contributing `tokens` new tokens **in total** (ragged
+    /// verify passes pack per-sequence widths; `tokens = Σ(γᵢ+1)`). The
+    /// roofline walk depends on `(b, s)` only through `t = b·s`, so a
+    /// uniform call `forward_time(b, s, ..)` is exactly
+    /// `forward_time_tokens(b, b·s, ..)` — same arithmetic, bit-for-bit.
+    pub fn forward_time_tokens(
+        &self,
+        b: usize,
+        tokens: usize,
+        ctx: usize,
         mut rng: Option<&mut Rng>,
     ) -> TimeBreakdown {
-        assert!(b > 0 && s > 0);
+        assert!(b > 0 && tokens > 0);
         if self.sharding.is_sharded() {
             // The EP-sharded walk lives in its own function; the d = 1
             // path below stays byte-identical to the pre-sharding pricing.
-            return self.forward_time_ep(b, s, ctx, rng);
+            return self.forward_time_ep(b, tokens, ctx, rng);
         }
         let a = &self.arch;
         let p = &self.platform;
-        let t = (b * s) as f64;
+        let t = tokens as f64;
         let tq = self.q(t);
         let dt = a.dtype_bytes;
         let h = a.hidden as f64;
@@ -246,7 +277,7 @@ impl ExecSim {
                 // Routed experts: the §3.2 effect. Weight traffic scales
                 // with the *activated* expert count N(t); compute scales
                 // with per-expert load T̄_exp (tile-quantized per expert).
-                let n_act = self.activated_experts(b as u64 * s as u64, rng.as_deref_mut());
+                let n_act = self.activated_experts(tokens as u64, rng.as_deref_mut());
                 let expert_w = n_act * a.bytes_per_expert();
                 let load = t * *topk as f64 / n_act.max(1e-9);
                 let expert_flops = n_act * self.q(load) * 6.0 * h * *expert_inter as f64;
@@ -271,17 +302,19 @@ impl ExecSim {
         out
     }
 
-    /// Expert-parallel variant of [`ExecSim::forward_time`]: `d` ranks,
-    /// each this simulator's full [`Platform`]. Dense/attention work is
-    /// data-parallel (`t/d` tokens per rank against replicated weights),
-    /// routed experts are partitioned (`N(t)/d` activated per rank at the
-    /// *global* per-expert load), and dispatch/combine pays the fabric
-    /// ([`ShardingSpec::comm_time`]). The spec's `imbalance` multiplies
-    /// the expert arm — the round completes when the straggler rank does.
+    /// Expert-parallel variant of [`ExecSim::forward_time_tokens`]: `d`
+    /// ranks, each this simulator's full [`Platform`]. Dense/attention
+    /// work is data-parallel (`t/d` tokens per rank against replicated
+    /// weights), routed experts are partitioned (`N(t)/d` activated per
+    /// rank at the *global* per-expert load), and dispatch/combine pays
+    /// the fabric ([`ShardingSpec::comm_time`]). The spec's `imbalance`
+    /// multiplies the expert arm — the round completes when the straggler
+    /// rank does. `tokens` is the packed total (b·s uniform, Σ(γᵢ+1)
+    /// ragged).
     fn forward_time_ep(
         &self,
         b: usize,
-        s: usize,
+        tokens: usize,
         ctx: usize,
         mut rng: Option<&mut Rng>,
     ) -> TimeBreakdown {
@@ -289,7 +322,7 @@ impl ExecSim {
         let p = &self.platform;
         let spec = &self.sharding;
         let d = spec.devices() as f64;
-        let t = (b * s) as f64;
+        let t = tokens as f64;
         let td = t / d; // per-rank token share (data parallel)
         let bd = b as f64 / d; // per-rank resident sequences
         let dt = a.dtype_bytes;
@@ -347,7 +380,7 @@ impl ExecSim {
                 // while the per-expert load T̄_exp = t·K/N(t) is
                 // d-invariant, so the arithmetic-intensity structure of
                 // §3.2 survives sharding.
-                let n_act = self.activated_experts(b as u64 * s as u64, rng.as_deref_mut());
+                let n_act = self.activated_experts(tokens as u64, rng.as_deref_mut());
                 let n_rank = n_act / d;
                 let expert_w = n_rank * a.bytes_per_expert();
                 let load = t * *topk as f64 / n_act.max(1e-9);
@@ -375,22 +408,48 @@ impl ExecSim {
     }
 
     /// T_T(B, s) — the scalar the paper's equations use. Without an RNG
-    /// the walk is deterministic in (b, s, ctx) (sampled-activation mode
-    /// falls back to the Eq. 8 expectation), so results are memoized.
+    /// the walk is deterministic in (b, total tokens, ctx)
+    /// (sampled-activation mode falls back to the Eq. 8 expectation), so
+    /// results are memoized.
     pub fn t_forward(&self, b: usize, s: usize, ctx: usize) -> f64 {
-        let key = (b, s, ctx);
+        self.t_forward_tokens(b, b * s, ctx)
+    }
+
+    /// Memoized token-count form of [`ExecSim::t_forward`] — the price of
+    /// one forward over `b` sequences and `tokens` packed new tokens
+    /// (shares the cache with the uniform entry point: the surface only
+    /// depends on the total).
+    pub fn t_forward_tokens(&self, b: usize, tokens: usize, ctx: usize) -> f64 {
+        let key = (b, tokens, ctx);
         if let Some(&t) = self.price_cache.borrow().get(&key) {
             return t;
         }
-        let t = self.forward_time(b, s, ctx, None).total();
+        let t = self.forward_time_tokens(b, tokens, ctx, None).total();
         self.price_cache.borrow_mut().insert(key, t);
         t
+    }
+
+    /// Price a ragged verify pass: sequence `i` contributes `widths[i]`
+    /// new tokens (γᵢ + 1 in an SD round). Packed pricing — the dense arm
+    /// runs at the sum of widths, the expert arm at the realized token
+    /// count — so uniform widths reproduce `t_forward(b, s, ctx)`
+    /// bit-for-bit.
+    pub fn t_forward_ragged(&self, widths: &[usize], ctx: usize) -> f64 {
+        assert!(!widths.is_empty(), "ragged forward needs at least one sequence");
+        self.t_forward_tokens(widths.len(), widths.iter().sum(), ctx)
     }
 
     /// Rejection-sampling stage cost (§3.1 stage ③): reading B·(γ+1) logit
     /// rows plus a fixed launch overhead. Much smaller than a model forward.
     pub fn t_reject(&self, b: usize, gamma: usize) -> f64 {
-        let rows = (b * (gamma + 1)) as f64;
+        self.t_reject_rows(b * (gamma + 1))
+    }
+
+    /// Row-count form of [`ExecSim::t_reject`] for ragged rounds, where
+    /// the sampler reads `Σ(γᵢ+1)` logit rows. The uniform call is
+    /// `t_reject_rows(b·(γ+1))` — identical arithmetic.
+    pub fn t_reject_rows(&self, rows: usize) -> f64 {
+        let rows = rows as f64;
         let bytes = rows * self.arch.vocab as f64 * 4.0; // f32 logits
         40e-6 + bytes / self.platform.total_mem_bw()
     }
@@ -549,6 +608,49 @@ mod tests {
         let r = sim.t_reject(16, 3);
         assert!(r < 0.1 * sim.t_forward(16, 1, 512));
         assert!(sim.t_reject(32, 3) > sim.t_reject(1, 3));
+        // Ragged row-count form: uniform rows reproduce t_reject exactly.
+        assert_eq!(sim.t_reject_rows(16 * 4), sim.t_reject(16, 3));
+        assert!(sim.t_reject_rows(10) < sim.t_reject_rows(100));
+    }
+
+    #[test]
+    fn ragged_uniform_widths_price_bit_identical() {
+        // The ragged-verify pricing contract: uniform widths are exactly
+        // the scalar path, for MoE and dense archs, sharded and not.
+        let arch = presets::qwen2_57b_a14b();
+        let sims = [
+            qwen_sim(),
+            dense_sim(),
+            qwen_sim().with_tile_effects(true),
+            qwen_sim().with_sharding(crate::hardware::ShardingSpec::for_arch(
+                crate::hardware::Topology::nvlink(4),
+                &arch,
+            )),
+        ];
+        for sim in &sims {
+            for (b, s) in [(1usize, 1usize), (4, 4), (16, 5), (128, 3)] {
+                let widths = vec![s; b];
+                assert_eq!(
+                    sim.t_forward_ragged(&widths, 512),
+                    sim.t_forward(b, s, 512),
+                    "uniform ragged must equal scalar at b={b} s={s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_mixed_widths_price_between_uniform_extremes() {
+        let sim = qwen_sim();
+        // 4 sequences at widths {1, 1, 5, 5} — total 12 tokens — must cost
+        // the same as any packing with the same total, and sit strictly
+        // between the all-1 and all-5 uniform rounds.
+        let mixed = sim.t_forward_ragged(&[1, 1, 5, 5], 512);
+        assert_eq!(mixed, sim.t_forward_ragged(&[5, 1, 5, 1], 512));
+        assert_eq!(mixed, sim.t_forward_tokens(4, 12, 512));
+        let lo = sim.t_forward(4, 1, 512);
+        let hi = sim.t_forward(4, 5, 512);
+        assert!(lo < mixed && mixed < hi, "{lo} < {mixed} < {hi}");
     }
 
     #[test]

@@ -11,25 +11,32 @@
 //! - [`crate::runtime::hlo_model::HloBackend`] — the real tiny MoE model
 //!   executed through PJRT (wall clock).
 //!
-//! ## Round protocol (chain speculation, uniform shapes)
+//! ## Round protocol (chain speculation, ragged shapes)
 //!
 //! Let `S` be a sequence's token stream (prompt ++ emitted tokens), and
 //! `base` the number of tokens committed to the target KV. The *feed*
-//! token `S[base]` is known but not yet processed. Each round:
+//! token `S[base]` is known but not yet processed. Each round the engine
+//! assigns every sequence its own draft length γᵢ (a uniform round is the
+//! special case γᵢ = γ):
 //!
-//! 1. `propose(pending)` — the draft catches up on its `pending` token
-//!    backlog (`S[draft_len .. base+1]`, usually just the feed) and samples
-//!    γ tokens autoregressively: γ forwards, ≈ γ·T_D(B,1).
-//! 2. `verify(feed, drafts)` — the target runs **one** forward over the
-//!    γ+1 tokens `[feed, d1, …, dγ]`, returning γ+1 next-token
-//!    distributions (≈ T_T(B, γ+1) — the paper's verification step).
+//! 1. `propose(pending, gammas)` — the draft catches up on its `pending`
+//!    token backlog (`S[draft_len .. base+1]`, usually just the feed) and
+//!    samples γᵢ tokens autoregressively per sequence: `max γᵢ`
+//!    sequential forwards over the shrinking set of sequences still
+//!    drafting, ≈ Σ_g T_D(B_g, 1).
+//! 2. `verify(feed, drafts)` — the target runs **one** forward over each
+//!    sequence's γᵢ+1 tokens `[feed, d1, …, dγᵢ]`, returning γᵢ+1
+//!    next-token distributions per sequence (priced Σ(γᵢ+1)-based: the
+//!    synthetic backend packs the ragged widths into one roofline walk,
+//!    ≈ T_T over Σ(γᵢ+1) tokens — the paper's verification step).
 //! 3. The engine rejection-samples ([`crate::sampling::verify_chain`]),
 //!    emits `accepted + 1` tokens, rolls both models back to the accepted
 //!    prefix, and the fresh token becomes the next round's feed.
 //!
-//! With γ = 0 the same protocol is plain autoregressive decoding (the
-//! baseline T_AR measurement): verify forwards just the feed token and the
-//! engine samples from the single returned row.
+//! With γᵢ = 0 for every sequence the same protocol is plain
+//! autoregressive decoding (the baseline T_AR measurement): verify
+//! forwards just the feed token and the engine samples from the single
+//! returned row.
 //!
 //! ## Distribution representation
 //!
@@ -49,7 +56,8 @@ pub use crate::sampling::LogitsView;
 /// Output of a draft propose step.
 #[derive(Debug, Clone)]
 pub struct ProposeOut {
-    /// Proposed tokens per sequence: `tokens[i].len() == gamma`.
+    /// Proposed tokens per sequence: `tokens[i].len() == gammas[i]`
+    /// (ragged; uniform rounds have equal lengths).
     pub tokens: Vec<Vec<u32>>,
     /// Draft distributions the tokens were sampled from (same shape),
     /// already temperature-adjusted.
@@ -61,9 +69,9 @@ pub struct ProposeOut {
 /// Output of a target verify step.
 #[derive(Debug, Clone)]
 pub struct VerifyOut {
-    /// Target distributions per sequence: `probs[i].len() == gamma + 1`
-    /// (one row to verify each draft token, plus the bonus row), already
-    /// temperature-adjusted.
+    /// Target distributions per sequence: `probs[i].len() ==
+    /// drafts[i].len() + 1` (one row to verify each draft token, plus the
+    /// bonus row), already temperature-adjusted.
     pub probs: Vec<Vec<LogitsView>>,
     /// Cost in seconds.
     pub cost: f64,
@@ -78,22 +86,25 @@ pub trait SdBackend {
     /// the scheduler treats that as admission backpressure.
     fn prefill(&mut self, batch: &[(SeqId, Vec<u32>)]) -> anyhow::Result<f64>;
 
-    /// Draft-propose `gamma` tokens per sequence. `pending[i]` is the
-    /// token backlog to feed into the draft context first (last prompt
-    /// token, previous fresh token, and — after a fully-accepted round —
-    /// the final draft token it never consumed). `temps[i]` controls the
-    /// per-sequence sampling temperature.
+    /// Draft-propose `gammas[i]` tokens for sequence `i` (ragged; a
+    /// uniform round passes equal entries). `pending[i]` is the token
+    /// backlog to feed into the draft context first (last prompt token,
+    /// previous fresh token, and — after a fully-accepted round — the
+    /// final draft token it never consumed). `temps[i]` controls the
+    /// per-sequence sampling temperature. Sequences with `gammas[i] == 0`
+    /// take no draft forwards and return empty rows.
     fn propose(
         &mut self,
         seqs: &[SeqId],
         pending: &[Vec<u32>],
-        gamma: usize,
+        gammas: &[usize],
         temps: &[f64],
         seed: u64,
     ) -> anyhow::Result<ProposeOut>;
 
     /// Target-verify: one forward over `[feed[i], drafts[i]...]` per
-    /// sequence, returning `gamma + 1` distribution rows each.
+    /// sequence, returning `drafts[i].len() + 1` distribution rows each.
+    /// Draft lists may be ragged; pricing is Σ(γᵢ+1)-based.
     fn verify(
         &mut self,
         seqs: &[SeqId],
@@ -119,9 +130,11 @@ pub trait SdBackend {
     /// Release all state for a finished sequence.
     fn release(&mut self, seq: SeqId);
 
-    /// Rejection-sampling stage cost for a batch (backends price this from
-    /// their simulator or measure it; the engine adds it to the clock).
-    fn reject_cost(&self, batch: usize, gamma: usize) -> f64;
+    /// Rejection-sampling stage cost for a (possibly ragged) round: the
+    /// sampler reads `Σ(gammas[i] + 1)` distribution rows. Backends price
+    /// this from their simulator or measure it; the engine adds it to the
+    /// clock.
+    fn reject_cost(&self, gammas: &[usize]) -> f64;
 }
 
 #[cfg(test)]

@@ -57,6 +57,9 @@ pub struct SyntheticLm {
     noisy_target_sim: Option<ExecSim>,
     /// Probability that the draft proposes the correct chain token.
     pub alpha: f64,
+    /// Per-sequence overrides of `alpha` (mixed-acceptance populations for
+    /// the ragged-γ experiments); sequences not present use `alpha`.
+    seq_alpha: HashMap<SeqId, f64>,
     vocab: usize,
     stream: u64,
     seqs: HashMap<SeqId, SeqState>,
@@ -80,6 +83,7 @@ impl SyntheticLm {
             draft_sim,
             noisy_target_sim: None,
             alpha,
+            seq_alpha: HashMap::new(),
             vocab: 64,
             stream: seed,
             seqs: HashMap::new(),
@@ -117,6 +121,24 @@ impl SyntheticLm {
         self
     }
 
+    /// Override the acceptance probability for specific sequences —
+    /// mixed-α populations for the ragged-speculation experiments
+    /// (`experiments::ragged`). Sequences without an entry keep the
+    /// backend-wide `alpha`, so an empty map is exactly the uniform
+    /// backend.
+    pub fn with_seq_alphas(mut self, pairs: &[(SeqId, f64)]) -> Self {
+        for &(seq, a) in pairs {
+            assert!((0.0..=1.0).contains(&a), "per-seq alpha out of [0,1]: {a}");
+            self.seq_alpha.insert(seq, a);
+        }
+        self
+    }
+
+    /// The acceptance probability in effect for one sequence.
+    pub fn alpha_for(&self, seq: SeqId) -> f64 {
+        self.seq_alpha.get(&seq).copied().unwrap_or(self.alpha)
+    }
+
     /// The ground-truth continuation this backend will deterministically
     /// emit for a sequence (test hook for losslessness assertions).
     pub fn expected_chain(&self, seq: SeqId, start_pos: usize, n: usize) -> Vec<u32> {
@@ -145,11 +167,14 @@ impl SyntheticLm {
         self.seqs.get(&seq).expect("unknown sequence")
     }
 
-    fn price_target(&mut self, b: usize, s: usize) -> f64 {
+    /// Price one (possibly ragged) verify forward: `b` sequences, `tokens`
+    /// packed new tokens (Σ(γᵢ+1)). Uniform rounds pass `tokens = b·(γ+1)`
+    /// and price bit-identically to the pre-ragged backend.
+    fn price_target_tokens(&mut self, b: usize, tokens: usize) -> f64 {
         let ctx = self.ctx_for_pricing;
         match (&mut self.noise_rng, &self.noisy_target_sim) {
-            (Some(rng), Some(sim)) => sim.forward_time(b, s, ctx, Some(rng)).total(),
-            _ => self.target_sim.t_forward(b, s, ctx),
+            (Some(rng), Some(sim)) => sim.forward_time_tokens(b, tokens, ctx, Some(rng)).total(),
+            _ => self.target_sim.t_forward_tokens(b, tokens, ctx),
         }
     }
 }
@@ -189,16 +214,19 @@ impl SdBackend for SyntheticLm {
         &mut self,
         seqs: &[SeqId],
         pending: &[Vec<u32>],
-        gamma: usize,
+        gammas: &[usize],
         temps: &[f64],
         seed: u64,
     ) -> anyhow::Result<ProposeOut> {
         anyhow::ensure!(seqs.len() == pending.len() && seqs.len() == temps.len());
+        anyhow::ensure!(seqs.len() == gammas.len(), "gammas length mismatch");
         let mut rng = Rng::new(self.stream ^ seed, 13);
         let mut tokens = Vec::with_capacity(seqs.len());
         let mut probs = Vec::with_capacity(seqs.len());
         for (i, &seq) in seqs.iter().enumerate() {
+            let gamma = gammas[i];
             anyhow::ensure!(!pending[i].is_empty() || gamma == 0, "no pending feed");
+            let alpha = self.alpha_for(seq);
             let base = self.state(seq).target_len; // committed stream length
             let mut toks = Vec::with_capacity(gamma);
             let mut rows = Vec::with_capacity(gamma);
@@ -206,7 +234,7 @@ impl SdBackend for SyntheticLm {
                 // Stream position of this proposal: base is the feed token's
                 // index, proposals continue at base+1+g.
                 let correct = chain_token(self.stream, seq, base + 1 + g, self.vocab);
-                let tok = if rng.bernoulli(self.alpha) {
+                let tok = if rng.bernoulli(alpha) {
                     correct
                 } else {
                     let mut t = rng.below(self.vocab as u64 - 1) as u32;
@@ -220,19 +248,32 @@ impl SdBackend for SyntheticLm {
             }
             if gamma > 0 {
                 let st = self.seqs.get_mut(&seq).unwrap();
-                // Fed the pending backlog plus γ−1 of its own proposals.
+                // Fed the pending backlog plus γᵢ−1 of its own proposals.
                 st.draft_len += pending[i].len() + gamma - 1;
             }
             tokens.push(toks);
             probs.push(rows);
         }
         let b = seqs.len();
-        let cost = if gamma == 0 {
+        let gamma_max = gammas.iter().copied().max().unwrap_or(0);
+        let cost = if gamma_max == 0 {
             0.0
+        } else if gammas.iter().all(|&g| g == gamma_max) {
+            // Uniform round: γ sequential draft forwards (the first
+            // consumes the pending backlog; backlog is ≤ 2 tokens so
+            // single-token pricing holds). Kept as a multiply — not the
+            // stepped sum below — so uniform pricing stays bit-identical
+            // to the pre-ragged backend.
+            gamma_max as f64 * self.draft_sim.t_forward(b, 1, self.ctx_for_pricing)
         } else {
-            // γ sequential draft forwards (the first consumes the pending
-            // backlog; backlog is ≤ 2 tokens so single-token pricing holds).
-            gamma as f64 * self.draft_sim.t_forward(b, 1, self.ctx_for_pricing)
+            // Ragged round: the draft still runs max γᵢ sequential steps,
+            // but step g only carries the sequences still drafting
+            // (γᵢ > g), so late steps run at a smaller batch (the shared
+            // schedule helper — same accounting the perf model uses).
+            crate::perfmodel::ragged_draft_schedule(gammas)
+                .iter()
+                .map(|&bg| self.draft_sim.t_forward(bg, 1, self.ctx_for_pricing))
+                .sum()
         };
         Ok(ProposeOut {
             tokens,
@@ -250,10 +291,11 @@ impl SdBackend for SyntheticLm {
     ) -> anyhow::Result<VerifyOut> {
         anyhow::ensure!(seqs.len() == feed.len() && seqs.len() == drafts.len());
         anyhow::ensure!(seqs.len() == temps.len());
-        let gamma = drafts.first().map_or(0, Vec::len);
+        let mut total_tokens = 0usize;
         let mut probs = Vec::with_capacity(seqs.len());
         for (i, &seq) in seqs.iter().enumerate() {
-            anyhow::ensure!(drafts[i].len() == gamma, "ragged draft lengths");
+            // Ragged rounds: each sequence verifies its own γᵢ+1 tokens.
+            let gamma = drafts[i].len();
             let base = self.state(seq).target_len;
             // Row g is the target's next-token distribution after
             // [.., feed, d1..dg] — one-hot at the chain token (the chain
@@ -262,11 +304,14 @@ impl SdBackend for SyntheticLm {
                 .map(|g| self.row(chain_token(self.stream, seq, base + 1 + g, self.vocab)))
                 .collect();
             let st = self.seqs.get_mut(&seq).unwrap();
-            st.target_len += gamma + 1; // consumed [feed, d1..dγ]
+            st.target_len += gamma + 1; // consumed [feed, d1..dγᵢ]
+            total_tokens += gamma + 1;
             probs.push(rows);
         }
         let b = seqs.len();
-        let cost = self.price_target(b, gamma + 1);
+        // Σ(γᵢ+1)-based pricing: the packed roofline walk; uniform widths
+        // reproduce the old T_T(B, γ+1) price bit-for-bit.
+        let cost = self.price_target_tokens(b, total_tokens);
         Ok(VerifyOut { probs, cost })
     }
 
@@ -293,8 +338,11 @@ impl SdBackend for SyntheticLm {
         self.seqs.remove(&seq);
     }
 
-    fn reject_cost(&self, batch: usize, gamma: usize) -> f64 {
-        self.target_sim.t_reject(batch, gamma)
+    fn reject_cost(&self, gammas: &[usize]) -> f64 {
+        // Σ(γᵢ+1) rows (the shared accounting helper); uniform rounds
+        // reproduce t_reject(b, γ) exactly.
+        self.target_sim
+            .t_reject_rows(crate::perfmodel::ragged_verify_tokens(gammas))
     }
 }
 
@@ -323,7 +371,7 @@ mod tests {
         let prompt = vec![1u32, 2, 3, 4];
         b.prefill(&[(7, prompt.clone())]).unwrap();
         assert_eq!(b.target_len(7), 3);
-        let p = b.propose(&[7], &[vec![4]], 3, &[0.0], 1).unwrap();
+        let p = b.propose(&[7], &[vec![4]], &[3], &[0.0], 1).unwrap();
         assert_eq!(p.tokens[0].len(), 3);
         assert_eq!(p.probs[0].len(), 3);
         assert!(p.cost > 0.0);
@@ -340,7 +388,7 @@ mod tests {
     fn alpha_one_draft_always_matches_target() {
         let mut b = backend(1.0);
         b.prefill(&[(1, vec![5, 6])]).unwrap();
-        let p = b.propose(&[1], &[vec![6]], 4, &[0.0], 3).unwrap();
+        let p = b.propose(&[1], &[vec![6]], &[4], &[0.0], 3).unwrap();
         let expected = b.expected_chain(1, 2, 4);
         assert_eq!(p.tokens[0], expected);
     }
@@ -349,7 +397,7 @@ mod tests {
     fn alpha_zero_draft_never_matches_target() {
         let mut b = backend(0.0);
         b.prefill(&[(1, vec![5, 6])]).unwrap();
-        let p = b.propose(&[1], &[vec![6]], 4, &[0.0], 3).unwrap();
+        let p = b.propose(&[1], &[vec![6]], &[4], &[0.0], 3).unwrap();
         let expected = b.expected_chain(1, 2, 4);
         for (got, want) in p.tokens[0].iter().zip(&expected) {
             assert_ne!(got, want);
@@ -364,7 +412,7 @@ mod tests {
         let mut total = 0;
         for s in 0..200u64 {
             b.prefill(&[(s, vec![1, 2])]).unwrap();
-            let p = b.propose(&[s], &[vec![2]], 1, &[0.0], s).unwrap();
+            let p = b.propose(&[s], &[vec![2]], &[1], &[0.0], s).unwrap();
             let expected = b.expected_chain(s, 2, 1);
             if p.tokens[0][0] == expected[0] {
                 matches += 1;
@@ -418,14 +466,14 @@ mod tests {
     fn sparse_rows_by_default_dense_in_reference_mode() {
         let mut b = backend(1.0);
         b.prefill(&[(1, vec![1, 2])]).unwrap();
-        let p = b.propose(&[1], &[vec![2]], 2, &[0.0], 1).unwrap();
+        let p = b.propose(&[1], &[vec![2]], &[2], &[0.0], 1).unwrap();
         assert!(matches!(p.probs[0][0], LogitsView::OneHot { .. }));
         let v = b.verify(&[1], &[2], &[p.tokens[0].clone()], &[0.0]).unwrap();
         assert!(matches!(v.probs[0][0], LogitsView::OneHot { .. }));
 
         let mut d = backend(1.0).with_dense_rows();
         d.prefill(&[(1, vec![1, 2])]).unwrap();
-        let p = d.propose(&[1], &[vec![2]], 2, &[0.0], 1).unwrap();
+        let p = d.propose(&[1], &[vec![2]], &[2], &[0.0], 1).unwrap();
         match &p.probs[0][0] {
             LogitsView::Dense(row) => assert_eq!(row.len(), 64),
             other => panic!("expected dense row, got {other:?}"),
@@ -439,7 +487,7 @@ mod tests {
         let mut b = SyntheticLm::new(target, draft, 1.0, 9).with_vocab(151_936);
         assert_eq!(b.vocab(), 151_936);
         b.prefill(&[(1, vec![5, 6])]).unwrap();
-        let p = b.propose(&[1], &[vec![6]], 4, &[0.0], 3).unwrap();
+        let p = b.propose(&[1], &[vec![6]], &[4], &[0.0], 3).unwrap();
         assert_eq!(p.tokens[0], b.expected_chain(1, 2, 4));
         assert!(p.tokens[0].iter().all(|&t| (t as usize) < 151_936));
         let v = b.verify(&[1], &[6], &[p.tokens[0].clone()], &[0.0]).unwrap();
@@ -447,6 +495,92 @@ mod tests {
         assert!(matches!(v.probs[0][0], LogitsView::OneHot { .. }));
         // The sparse row still reports the full vocabulary.
         assert_eq!(v.probs[0][0].vocab(), 151_936);
+    }
+
+    #[test]
+    fn ragged_propose_and_verify_shapes() {
+        let mut b = backend(1.0);
+        b.prefill(&[(1, vec![1, 2]), (2, vec![1, 2]), (3, vec![1, 2])])
+            .unwrap();
+        let p = b
+            .propose(
+                &[1, 2, 3],
+                &[vec![2], vec![2], vec![2]],
+                &[4, 1, 0],
+                &[0.0; 3],
+                9,
+            )
+            .unwrap();
+        assert_eq!(p.tokens[0].len(), 4);
+        assert_eq!(p.tokens[1].len(), 1);
+        assert!(p.tokens[2].is_empty() && p.probs[2].is_empty());
+        assert!(p.cost > 0.0);
+        // α=1: every ragged proposal is the sequence's own chain.
+        assert_eq!(p.tokens[0], b.expected_chain(1, 1, 4));
+        assert_eq!(p.tokens[1], b.expected_chain(2, 1, 1));
+        let v = b
+            .verify(
+                &[1, 2, 3],
+                &[2, 2, 2],
+                &[p.tokens[0].clone(), p.tokens[1].clone(), vec![]],
+                &[0.0; 3],
+            )
+            .unwrap();
+        assert_eq!(v.probs[0].len(), 5);
+        assert_eq!(v.probs[1].len(), 2);
+        assert_eq!(v.probs[2].len(), 1);
+        // Per-sequence target advance: γᵢ + 1 each.
+        assert_eq!(b.target_len(1), 1 + 5);
+        assert_eq!(b.target_len(2), 1 + 2);
+        assert_eq!(b.target_len(3), 1 + 1);
+    }
+
+    #[test]
+    fn uniform_ragged_pricing_matches_scalar_paths() {
+        // The bit-for-bit uniform special case: a ragged round with equal
+        // γᵢ prices propose/verify/reject exactly like the scalar round.
+        let mk = || {
+            let mut b = backend(0.9);
+            b.prefill(&[(1, vec![1, 2]), (2, vec![1, 2])]).unwrap();
+            b
+        };
+        let mut a = mk();
+        let pa = a
+            .propose(&[1, 2], &[vec![2], vec![2]], &[3, 3], &[0.0; 2], 5)
+            .unwrap();
+        let va = a
+            .verify(&[1, 2], &[2, 2], &[pa.tokens[0].clone(), pa.tokens[1].clone()], &[0.0; 2])
+            .unwrap();
+        // Reference: scalar-style uniform pricing computed directly.
+        let b_ref = mk();
+        let draft_ref = 3.0 * b_ref.draft_sim.t_forward(2, 1, b_ref.ctx_for_pricing);
+        let verify_ref = b_ref.target_sim.t_forward(2, 4, b_ref.ctx_for_pricing);
+        assert_eq!(pa.cost, draft_ref);
+        assert_eq!(va.cost, verify_ref);
+        assert_eq!(a.reject_cost(&[3, 3]), b_ref.target_sim.t_reject(2, 3));
+        // Mixed γᵢ genuinely changes the prices.
+        let mut c = mk();
+        let pc = c
+            .propose(&[1, 2], &[vec![2], vec![2]], &[5, 1], &[0.0; 2], 5)
+            .unwrap();
+        assert!(pc.cost != pa.cost);
+        assert!(c.reject_cost(&[5, 1]) == c.reject_cost(&[3, 3]), "same total rows");
+    }
+
+    #[test]
+    fn per_sequence_alpha_overrides() {
+        let mut b = backend(0.0).with_seq_alphas(&[(1, 1.0)]);
+        assert_eq!(b.alpha_for(1), 1.0);
+        assert_eq!(b.alpha_for(2), 0.0);
+        b.prefill(&[(1, vec![5, 6]), (2, vec![5, 6])]).unwrap();
+        let p = b
+            .propose(&[1, 2], &[vec![6], vec![6]], &[4, 4], &[0.0; 2], 3)
+            .unwrap();
+        // Seq 1 (α=1) always matches its chain; seq 2 (α=0) never does.
+        assert_eq!(p.tokens[0], b.expected_chain(1, 2, 4));
+        for (got, want) in p.tokens[1].iter().zip(b.expected_chain(2, 2, 4)) {
+            assert_ne!(*got, want);
+        }
     }
 
     #[test]

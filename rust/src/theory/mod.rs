@@ -48,6 +48,28 @@ pub fn expected_round_length(alpha: f64, gamma: usize) -> f64 {
     sigma_from_alpha(alpha, gamma) * (gamma + 1) as f64
 }
 
+/// Expected tokens committed by a **ragged** round (per-sequence draft
+/// lengths): Σᵢ σ(αᵢ, γᵢ)·(γᵢ+1) — the numerator of the per-sequence
+/// Eq. 4 extension (see [`crate::perfmodel::PerfModel::ragged_goodput`]).
+///
+/// ```
+/// use moesd::theory::{expected_round_length, ragged_round_tokens};
+/// let mixed = ragged_round_tokens(&[0.9, 0.5], &[6, 2]);
+/// let by_hand = expected_round_length(0.9, 6) + expected_round_length(0.5, 2);
+/// assert!((mixed - by_hand).abs() < 1e-12);
+/// // A uniform round is the degenerate case: B equal terms.
+/// let uni = ragged_round_tokens(&[0.8, 0.8], &[3, 3]);
+/// assert!((uni - 2.0 * expected_round_length(0.8, 3)).abs() < 1e-12);
+/// ```
+pub fn ragged_round_tokens(alphas: &[f64], gammas: &[usize]) -> f64 {
+    assert_eq!(alphas.len(), gammas.len(), "alphas/gammas length mismatch");
+    alphas
+        .iter()
+        .zip(gammas)
+        .map(|(&a, &g)| expected_round_length(a, g))
+        .sum()
+}
+
 /// Numeric inverse of Eq. 5: recover α from a measured σ at draft length γ
 /// by bisection. Used to calibrate the synthetic workloads to the σ values
 /// the paper reports in Tables 1–2.

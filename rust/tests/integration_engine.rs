@@ -244,11 +244,11 @@ impl<B: moesd::spec::SdBackend> moesd::spec::SdBackend for Flaky<B> {
         &mut self,
         seqs: &[u64],
         pending: &[Vec<u32>],
-        gamma: usize,
+        gammas: &[usize],
         temps: &[f64],
         seed: u64,
     ) -> anyhow::Result<moesd::spec::ProposeOut> {
-        self.inner.propose(seqs, pending, gamma, temps, seed)
+        self.inner.propose(seqs, pending, gammas, temps, seed)
     }
     fn verify(
         &mut self,
@@ -279,8 +279,8 @@ impl<B: moesd::spec::SdBackend> moesd::spec::SdBackend for Flaky<B> {
     fn release(&mut self, seq: u64) {
         self.inner.release(seq)
     }
-    fn reject_cost(&self, batch: usize, gamma: usize) -> f64 {
-        self.inner.reject_cost(batch, gamma)
+    fn reject_cost(&self, gammas: &[usize]) -> f64 {
+        self.inner.reject_cost(gammas)
     }
 }
 

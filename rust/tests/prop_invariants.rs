@@ -390,6 +390,160 @@ fn prop_engine_single_rank_sharding_is_transparent() {
     }
 }
 
+/// The ragged-pricing tentpole guarantee: packed token-count pricing with
+/// uniform widths is **bit-for-bit** the scalar path — across MoE and
+/// dense archs, tile effects, EP sharding, and the reject stage.
+#[test]
+fn prop_uniform_ragged_pricing_bit_identical() {
+    let mut runner = Runner::new("ragged_uniform_pricing");
+    runner.run(150, |g| {
+        let moe = g.usize_in(0, 1) == 0;
+        let arch = if moe {
+            presets::qwen2_57b_a14b()
+        } else {
+            presets::opt_30b()
+        };
+        let b = g.usize_in(1, 512);
+        let s = g.usize_in(1, 9);
+        let ctx = g.usize_in(16, 2048);
+        let tiles = g.usize_in(0, 1) == 1;
+        let sharded = g.usize_in(0, 1) == 1;
+        let mut sim = ExecSim::new(arch.clone(), platform_2x_gpu_a()).with_tile_effects(tiles);
+        if sharded {
+            sim = sim.with_sharding(ShardingSpec::for_arch(Topology::nvlink(4), &arch));
+        }
+        let widths = vec![s; b];
+        if sim.t_forward_ragged(&widths, ctx) != sim.t_forward(b, s, ctx) {
+            return Err(format!(
+                "uniform ragged forward diverged: b={b} s={s} ctx={ctx} moe={moe} sharded={sharded}"
+            ));
+        }
+        let gamma = s - 1;
+        if sim.t_reject_rows(b * (gamma + 1)) != sim.t_reject(b, gamma) {
+            return Err(format!("uniform ragged reject diverged: b={b} γ={gamma}"));
+        }
+        ensure(true, "")
+    });
+}
+
+/// Whole-engine uniform-ragged transparency: per-sequence overrides that
+/// all equal `config.gamma` drive the ragged code path yet reproduce the
+/// plain scalar engine byte-for-byte — completions, rounds, virtual clock.
+#[test]
+fn prop_engine_uniform_overrides_are_transparent() {
+    let mut runner = Runner::new("ragged_uniform_engine");
+    runner.run(12, |g| {
+        let alpha = g.f64_in(0.0, 1.0);
+        let gamma = g.usize_in(0, 6);
+        let n_reqs = g.usize_in(1, 8);
+        let seed = g.u64_in(0, 1 << 20);
+        let run = |with_overrides: bool| -> Result<(Vec<(u64, Vec<u32>)>, u64, f64), String> {
+            let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+            let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+            let mut overrides = std::collections::HashMap::new();
+            if with_overrides {
+                for id in 0..n_reqs as u64 {
+                    overrides.insert(id, gamma);
+                }
+            }
+            let mut engine = Engine::new(
+                EngineConfig {
+                    gamma,
+                    gamma_overrides: overrides,
+                    ..Default::default()
+                },
+                SyntheticLm::new(target, draft, alpha, seed),
+            );
+            for id in 0..n_reqs as u64 {
+                engine.submit(Request {
+                    id,
+                    prompt: (0..8u32).collect(),
+                    params: SamplingParams {
+                        temperature: 0.0,
+                        max_new_tokens: 16,
+                        eos_token: None,
+                    },
+                    arrival: 0.0,
+                });
+            }
+            let mut done = engine
+                .run_to_completion(50_000)
+                .map_err(|e| format!("{e}"))?;
+            done.sort_by_key(|c| c.id);
+            Ok((
+                done.into_iter().map(|c| (c.id, c.tokens)).collect(),
+                engine.metrics.rounds,
+                engine.clock(),
+            ))
+        };
+        let plain = run(false)?;
+        let ragged = run(true)?;
+        ensure(
+            plain == ragged,
+            format!("uniform overrides diverged (α={alpha}, γ={gamma})"),
+        )
+    });
+}
+
+/// Genuinely ragged rounds stay lossless: random per-sequence depths and
+/// mixed per-sequence α still emit every sequence's exact chain, with KV
+/// conservation intact.
+#[test]
+fn prop_ragged_rounds_stay_lossless() {
+    let mut runner = Runner::new("ragged_lossless");
+    runner.run(15, |g| {
+        let n_reqs = g.usize_in(2, 8);
+        let seed = g.u64_in(0, 1 << 20);
+        let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+        let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+        let mut overrides = std::collections::HashMap::new();
+        let mut alphas = Vec::new();
+        for id in 0..n_reqs as u64 {
+            overrides.insert(id, g.usize_in(0, 8));
+            alphas.push((id, g.f64_in(0.0, 1.0)));
+        }
+        let backend = SyntheticLm::new(target, draft, 0.7, seed).with_seq_alphas(&alphas);
+        let mut engine = Engine::new(
+            EngineConfig {
+                gamma: 3,
+                gamma_overrides: overrides,
+                ..Default::default()
+            },
+            backend,
+        );
+        let max_new = g.usize_in(1, 24);
+        for id in 0..n_reqs as u64 {
+            engine.submit(Request {
+                id,
+                prompt: (0..6u32).collect(),
+                params: SamplingParams {
+                    temperature: 0.0,
+                    max_new_tokens: max_new,
+                    eos_token: None,
+                },
+                arrival: 0.0,
+            });
+        }
+        let done = engine
+            .run_to_completion(100_000)
+            .map_err(|e| format!("{e}"))?;
+        if done.len() != n_reqs {
+            return Err(format!("{} of {n_reqs} completed", done.len()));
+        }
+        for c in &done {
+            let expect = engine.backend().expected_chain(c.id, 6, max_new);
+            if c.tokens != expect {
+                return Err(format!("seq {}: ragged round broke losslessness", c.id));
+            }
+        }
+        engine
+            .kv()
+            .check_invariants()
+            .map_err(|e| format!("KV invariant: {e}"))?;
+        ensure(true, "")
+    });
+}
+
 /// Routing conservation: every token lands on exactly K distinct experts,
 /// and the empirical activation stays within the binomial envelope of the
 /// Eq. 8 expectation.
