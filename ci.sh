@@ -39,12 +39,50 @@ cargo test -q
 if [[ $FAST -eq 0 ]]; then
     # Hot-path perf gate: reduced-rep micro-bench run that asserts the
     # §Perf <5% coordinator-overhead budget and the >=5x sparse-vs-dense
-    # hot-path speedup, and exercises the JSON emitter. Smoke runs never
-    # write the tracked BENCH_hotpath.json baseline (too noisy; and CI
-    # must not dirty the checkout) — seed/refresh it with a full
+    # hot-path speedup, exercises the JSON emitter, and — once a full run
+    # has populated BENCH_hotpath.json on this machine — compares against
+    # that baseline with tolerance bands (fail >15% regression, warn >5%;
+    # MOESD_SKIP_BASELINE=1 to skip on a foreign machine). Smoke runs
+    # never write the tracked baseline (too noisy; and CI must not dirty
+    # the checkout) — seed/refresh it with a full
     # `cargo bench --bench micro_hotpath` run.
     echo "== micro_hotpath smoke (MOESD_SMOKE=1, release bench)"
     MOESD_SMOKE=1 cargo bench --bench micro_hotpath
+
+    # Multi-tenant serving smoke: replay the tiny bundled trace through
+    # the load x admission-policy sweep and validate the per-tenant stats
+    # JSON shape the operators consume.
+    echo "== multitenant smoke (tiny bundled trace)"
+    MOESD_SMOKE=1 cargo run --release --bin moesd -- bench multitenant --smoke
+    echo "== validate results/multitenant.json shape"
+    if command -v python3 >/dev/null 2>&1; then
+        python3 - <<'PYEOF'
+import json, sys
+with open("results/multitenant.json") as f:
+    doc = json.load(f)
+assert doc["experiment"] == "multitenant", doc.get("experiment")
+arms = doc["arms"]
+assert arms, "no arms in multitenant.json"
+policies = {a["policy"] for a in arms}
+assert {"ar", "fifo", "class", "class+mix"} <= policies, policies
+for a in arms:
+    for key in ("load", "tok_s", "speedup", "slos_met", "classes"):
+        assert key in a, f"arm missing {key}: {a.keys()}"
+    assert len(a["classes"]) == 3, a["classes"]
+    for c in a["classes"]:
+        for key in ("name", "completed", "tokens", "ttft_p99",
+                    "ttft_slo_attainment", "tpot_slo_attainment"):
+            assert key in c, f"class missing {key}"
+print(f"multitenant.json shape OK ({len(arms)} arms)")
+PYEOF
+    else
+        # Minimal fallback without python3: the load-bearing keys exist.
+        for key in '"experiment"' '"arms"' '"ttft_slo_attainment"' '"slos_met"'; do
+            grep -q "$key" results/multitenant.json || {
+                echo "multitenant.json missing $key"; exit 1; }
+        done
+        echo "multitenant.json shape OK (grep fallback)"
+    fi
 fi
 
 echo "CI gate passed."

@@ -57,6 +57,7 @@ fn run_batch(dir: &Path, gamma: usize, batch: usize) -> anyhow::Result<(f64, f64
                 eos_token: None,
             },
             arrival: 0.0,
+            class: 0,
         });
     }
     let done = engine.run_to_completion(10_000)?;

@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
                     eos_token: None,
                 },
                 arrival: 0.0,
+                class: 0,
             });
         }
         let done = engine.run_to_completion(10_000)?;

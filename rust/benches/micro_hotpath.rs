@@ -20,8 +20,8 @@
 use moesd::arch::presets;
 use moesd::batching::{Request, SamplingParams};
 use moesd::benchlib::{
-    banner, bench_record_json, repo_path, summarize, time_reps, write_json_report, write_report,
-    Json,
+    banner, bench_record_json, compare_to_baseline, repo_path, summarize, time_reps,
+    write_json_report, write_report, Json,
 };
 use moesd::engine::{Engine, EngineConfig};
 use moesd::hardware::platform_2x_gpu_a;
@@ -76,6 +76,7 @@ fn steady_engine(vocab: usize, dense_rows: bool) -> Engine<SyntheticLm> {
                 eos_token: None,
             },
             arrival: 0.0,
+            class: 0,
         });
     }
     engine.step().unwrap(); // prefill + first round
@@ -342,12 +343,45 @@ fn main() {
     ]);
     write_json_report("micro_hotpath.json", &json).unwrap();
 
+    // Perf-regression harness: compare this run against the tracked
+    // baseline BEFORE any baseline maintenance, so a refresh can't mask
+    // a regression. Full runs use the tight bands (fail > 15%, warn
+    // > 5%); the MOESD_SMOKE=1 ci.sh gate still fails hard but at 3×
+    // wider bands — its 20×-reduced reps carry real scheduler jitter,
+    // and a flaky perf gate trains people to ignore it.
+    // MOESD_SKIP_BASELINE=1 opts out on machines the baseline wasn't
+    // measured on.
+    let baseline = repo_path("BENCH_hotpath.json");
+    let skip_cmp =
+        std::env::var("MOESD_SKIP_BASELINE").map_or(false, |v| v != "0" && !v.is_empty());
+    if !skip_cmp {
+        if let Ok(base) = Json::parse_file(&baseline) {
+            let (warn, fail) = if smoke { (0.15, 0.45) } else { (0.05, 0.15) };
+            let report = compare_to_baseline(&json, &base, warn, fail);
+            println!("{}", report.summary());
+            for w in &report.warnings {
+                println!("  perf WARN: {w}");
+            }
+            for f in &report.failures {
+                println!("  perf FAIL: {f}");
+            }
+            assert!(
+                report.failures.is_empty(),
+                "micro_hotpath regressed >{:.0}% vs BENCH_hotpath.json on {} metric(s) \
+                 (MOESD_WRITE_BASELINE=1 rebaselines after an intentional change; \
+                 MOESD_SKIP_BASELINE=1 skips on foreign machines): {:?}",
+                fail * 100.0,
+                report.failures.len(),
+                report.failures
+            );
+        }
+    }
+
     // Maintain the tracked repo-root baseline. Smoke runs (ci.sh) never
     // touch it — their 20x-reduced reps are too noisy to anchor a perf
     // trajectory and would dirty every checkout CI runs on. A *full*
     // bench run seeds it while it is absent/unpopulated;
     // MOESD_WRITE_BASELINE=1 forces a refresh (full runs only).
-    let baseline = repo_path("BENCH_hotpath.json");
     let force = std::env::var("MOESD_WRITE_BASELINE").map_or(false, |v| v != "0" && !v.is_empty());
     let unpopulated = Json::parse_file(&baseline)
         .ok()

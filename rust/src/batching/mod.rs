@@ -9,6 +9,15 @@
 use crate::kvcache::SeqId;
 use std::collections::VecDeque;
 
+/// Tenant/SLO class handle: an index into the launcher's
+/// [`crate::workload::TenantClass`] table. Class 0 is the implicit default
+/// class of single-tenant deployments — every pre-multi-tenant constructor
+/// uses it, so the classless serving path is unchanged.
+pub type ClassId = usize;
+
+/// The default class untagged requests belong to.
+pub const DEFAULT_CLASS: ClassId = 0;
+
 /// Sampling configuration for a request.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SamplingParams {
@@ -37,6 +46,17 @@ pub struct Request {
     pub params: SamplingParams,
     /// Arrival time on the engine clock (seconds).
     pub arrival: f64,
+    /// Tenant/SLO class ([`DEFAULT_CLASS`] for untagged requests).
+    pub class: ClassId,
+}
+
+impl Request {
+    /// Tag this request with a tenant class (builder-style, so existing
+    /// `Request { .. }` construction sites stay untouched).
+    pub fn with_class(mut self, class: ClassId) -> Request {
+        self.class = class;
+        self
+    }
 }
 
 /// A finished request.
@@ -50,6 +70,8 @@ pub struct Completion {
     pub finished_at: f64,
     /// SD rounds this sequence participated in.
     pub rounds: u64,
+    /// Tenant/SLO class the request belonged to.
+    pub class: ClassId,
 }
 
 impl Completion {
@@ -108,6 +130,21 @@ impl RequestQueue {
     /// Requeue at the *front* (preemption putback keeps FIFO fairness).
     pub fn push_front(&mut self, req: Request) {
         self.waiting.push_front(req);
+    }
+
+    /// Iterate waiting requests in queue (arrival) order. Class-aware
+    /// admission scans this to build its per-class logical queues; the
+    /// physical queue stays one arrival-ordered deque so FIFO admission is
+    /// untouched and per-class FIFO order falls out of the scan order.
+    pub fn iter(&self) -> impl Iterator<Item = &Request> {
+        self.waiting.iter()
+    }
+
+    /// Remove and return the request at queue position `idx` (0 = head).
+    /// O(n) middle removal — admission runs once per decode round over a
+    /// modest queue, not on a per-token path.
+    pub fn remove_at(&mut self, idx: usize) -> Option<Request> {
+        self.waiting.remove(idx)
     }
 }
 
@@ -174,6 +211,7 @@ mod tests {
             prompt: vec![1, 2, 3],
             params: SamplingParams::default(),
             arrival: 0.0,
+            class: DEFAULT_CLASS,
         }
     }
 
@@ -199,6 +237,7 @@ mod tests {
             prompt: vec![],
             params: SamplingParams::default(),
             arrival: 0.0,
+            class: DEFAULT_CLASS,
         });
     }
 
@@ -222,6 +261,26 @@ mod tests {
     }
 
     #[test]
+    fn queue_iter_and_middle_removal() {
+        let mut q = RequestQueue::new();
+        for id in 1..=4 {
+            q.push(req(id).with_class((id % 2) as ClassId));
+        }
+        let ids: Vec<SeqId> = q.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2, 3, 4]);
+        // Remove from the middle; remaining order is preserved.
+        let r = q.remove_at(1).unwrap();
+        assert_eq!(r.id, 2);
+        assert_eq!(r.class, 0);
+        let ids: Vec<SeqId> = q.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 3, 4]);
+        assert!(q.remove_at(10).is_none());
+        // Untagged requests are class 0; with_class retags.
+        assert_eq!(req(9).class, DEFAULT_CLASS);
+        assert_eq!(req(9).with_class(3).class, 3);
+    }
+
+    #[test]
     fn completion_slo_math() {
         let c = Completion {
             id: 1,
@@ -230,6 +289,7 @@ mod tests {
             first_token_at: 10.5,
             finished_at: 12.5,
             rounds: 2,
+            class: DEFAULT_CLASS,
         };
         assert!((c.ttft() - 0.5).abs() < 1e-12);
         assert!((c.tpot() - 0.5).abs() < 1e-12);

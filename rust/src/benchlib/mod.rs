@@ -50,6 +50,91 @@ pub fn write_json_report(name: &str, json: &Json) -> anyhow::Result<PathBuf> {
     write_report(name, &json.to_pretty())
 }
 
+/// Outcome of comparing a fresh micro-bench run against the tracked
+/// baseline (see [`compare_to_baseline`]).
+#[derive(Debug, Clone, Default)]
+pub struct BaselineReport {
+    /// Metrics matched by name in both runs.
+    pub compared: usize,
+    /// Metrics present on only one side (renames, new benches).
+    pub skipped: usize,
+    /// Regressions over the warn band (fraction over baseline ns/op).
+    pub warnings: Vec<String>,
+    /// Regressions over the fail band.
+    pub failures: Vec<String>,
+}
+
+impl BaselineReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "perf baseline: {} metrics compared, {} skipped, {} warning(s), {} failure(s)",
+            self.compared,
+            self.skipped,
+            self.warnings.len(),
+            self.failures.len()
+        )
+    }
+}
+
+/// Compare a fresh micro-bench JSON report against the tracked baseline
+/// (`BENCH_hotpath.json`): metrics match by `name`, regress on
+/// `ns_per_op`. A fresh value more than `warn_frac` over the baseline is
+/// a warning, more than `fail_frac` a failure (improvements never flag —
+/// refresh the baseline with `MOESD_WRITE_BASELINE=1` to bank them). An
+/// unpopulated baseline (the skeleton the repo ships before the first
+/// full run on a machine) compares nothing.
+pub fn compare_to_baseline(
+    current: &Json,
+    baseline: &Json,
+    warn_frac: f64,
+    fail_frac: f64,
+) -> BaselineReport {
+    let mut report = BaselineReport::default();
+    if baseline.get("populated").and_then(Json::as_bool) != Some(true) {
+        return report;
+    }
+    let metric_map = |j: &Json| -> Vec<(String, f64)> {
+        j.get("metrics")
+            .and_then(Json::as_arr)
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|m| {
+                        Some((
+                            m.get("name")?.as_str()?.to_string(),
+                            m.get("ns_per_op")?.as_f64()?,
+                        ))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    let base = metric_map(baseline);
+    let cur = metric_map(current);
+    for (name, cur_ns) in &cur {
+        let Some((_, base_ns)) = base.iter().find(|(n, _)| n == name) else {
+            report.skipped += 1;
+            continue;
+        };
+        if *base_ns <= 0.0 {
+            report.skipped += 1;
+            continue;
+        }
+        report.compared += 1;
+        let frac = cur_ns / base_ns - 1.0;
+        let line = format!(
+            "{name}: {cur_ns:.0} ns/op vs baseline {base_ns:.0} ({:+.1}%)",
+            frac * 100.0
+        );
+        if frac > fail_frac {
+            report.failures.push(line);
+        } else if frac > warn_frac {
+            report.warnings.push(line);
+        }
+    }
+    report.skipped += base.iter().filter(|(n, _)| !cur.iter().any(|(c, _)| c == n)).count();
+    report
+}
+
 /// Micro-benchmark a closure: `warmup` unmeasured runs, then `reps`
 /// measured runs. Returns per-rep seconds.
 pub fn time_reps<F: FnMut()>(mut f: F, warmup: usize, reps: usize) -> Vec<f64> {
@@ -186,6 +271,46 @@ mod tests {
         let back = Json::parse(&s).unwrap();
         assert_eq!(back.req_f64("ns_per_op").unwrap(), 2000.0);
         assert_eq!(back.req_str("name").unwrap(), "kv_ops");
+    }
+
+    #[test]
+    fn baseline_comparison_bands_and_skips() {
+        let mk = |pairs: &[(&str, f64)], populated: bool| {
+            Json::from_pairs(vec![
+                ("populated", Json::Bool(populated)),
+                (
+                    "metrics",
+                    Json::Arr(
+                        pairs
+                            .iter()
+                            .map(|(n, ns)| {
+                                Json::from_pairs(vec![
+                                    ("name", Json::Str(n.to_string())),
+                                    ("ns_per_op", Json::Num(*ns)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        };
+        let base = mk(&[("a", 100.0), ("b", 100.0), ("c", 100.0), ("gone", 50.0)], true);
+        let cur = mk(&[("a", 104.0), ("b", 110.0), ("c", 140.0), ("new", 9.0)], true);
+        let r = compare_to_baseline(&cur, &base, 0.05, 0.15);
+        assert_eq!(r.compared, 3);
+        assert_eq!(r.skipped, 2, "one renamed each way");
+        assert_eq!(r.warnings.len(), 1, "{:?}", r.warnings); // b: +10%
+        assert_eq!(r.failures.len(), 1, "{:?}", r.failures); // c: +40%
+        assert!(r.failures[0].starts_with("c:"));
+        assert!(r.summary().contains("3 metrics compared"));
+        // Improvements never flag.
+        let fast = mk(&[("a", 10.0), ("b", 10.0), ("c", 10.0)], true);
+        let r = compare_to_baseline(&fast, &base, 0.05, 0.15);
+        assert!(r.warnings.is_empty() && r.failures.is_empty());
+        // The unpopulated skeleton compares nothing.
+        let skel = mk(&[("a", 100.0)], false);
+        let r = compare_to_baseline(&cur, &skel, 0.05, 0.15);
+        assert_eq!(r.compared, 0);
     }
 
     #[test]

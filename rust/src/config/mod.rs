@@ -22,9 +22,10 @@ use crate::batching::Buckets;
 use crate::control::{ControlConfig, CostModelSpec};
 use crate::engine::EngineConfig;
 use crate::kvcache::KvConfig;
-use crate::scheduler::SchedulerConfig;
+use crate::scheduler::{AdmissionPolicyConfig, ClassAwareConfig, SchedulerConfig};
 use crate::simulator::ExecSim;
 use crate::util::json::Json;
+use crate::workload::TenantClass;
 use std::path::Path;
 
 /// Which backend the launcher builds.
@@ -60,6 +61,17 @@ pub struct Config {
     /// per-sequence α̂ᵢ). Requires `adaptive`; the `--ragged` CLI flag
     /// sets both.
     pub ragged: bool,
+    /// Multi-tenant SLO classes: a [`crate::workload::parse_tenants`]
+    /// spec string (empty = classless serving). Setting it switches the
+    /// admission scheduler to the class-aware policy.
+    pub tenants: String,
+    /// Mix-aware admission: the class-aware policy additionally consults
+    /// the controller's priced regime test when composing the batch.
+    /// Requires `adaptive` (the oracle) and a non-empty tenant table.
+    pub mix_admission: bool,
+    /// Arrival-trace CSV path (`t,prompt_len,output_len`) for the
+    /// trace-replaying benches; empty = no trace.
+    pub trace: String,
 }
 
 impl Default for Config {
@@ -80,6 +92,9 @@ impl Default for Config {
             artifacts_dir: "artifacts".into(),
             adaptive: false,
             ragged: false,
+            tenants: String::new(),
+            mix_admission: false,
+            trace: String::new(),
         }
     }
 }
@@ -116,6 +131,12 @@ impl Config {
             artifacts_dir: str_or("artifacts_dir", &d.artifacts_dir),
             adaptive: j.get("adaptive").and_then(Json::as_bool).unwrap_or(false),
             ragged: j.get("ragged").and_then(Json::as_bool).unwrap_or(false),
+            tenants: str_or("tenants", ""),
+            mix_admission: j
+                .get("mix_admission")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            trace: str_or("trace", ""),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -151,7 +172,27 @@ impl Config {
             "ragged speculation requires the adaptive control plane (use --ragged, \
              which implies --adaptive, or set both in the config file)"
         );
+        // Surface tenant-spec typos at config time, not on the engine
+        // thread (one parsing path: the same call engine_config uses).
+        self.tenant_classes()?;
+        anyhow::ensure!(
+            !(self.mix_admission && self.tenants.is_empty()),
+            "mix-aware admission needs a tenant table (--tenants)"
+        );
+        anyhow::ensure!(
+            !(self.mix_admission && !self.adaptive),
+            "mix-aware admission needs the adaptive control plane's priced \
+             regime oracle (use --adaptive)"
+        );
         Ok(())
+    }
+
+    /// The parsed tenant table (empty spec = no classes).
+    pub fn tenant_classes(&self) -> anyhow::Result<Vec<TenantClass>> {
+        if self.tenants.is_empty() {
+            return Ok(Vec::new());
+        }
+        crate::workload::parse_tenants(&self.tenants)
     }
 
     /// The adaptive controller configuration this config implies:
@@ -183,6 +224,10 @@ impl Config {
         Ok(Some(ControlConfig {
             alpha_prior: alpha,
             ragged: self.ragged,
+            // Mix-aware admission reads per-sequence α̂ᵢ off the running
+            // batch, so the controller tracks windows even without ragged
+            // rounds.
+            track_seq_alpha: self.ragged || self.mix_admission,
             ..ControlConfig::model_guided(CostModelSpec::roofline(tsim, dsim))
         }))
     }
@@ -191,6 +236,14 @@ impl Config {
     /// when `adaptive` is set — the flag is honored here, not just by the
     /// serve binary).
     pub fn engine_config(&self) -> anyhow::Result<EngineConfig> {
+        let tenants = self.tenant_classes()?;
+        let admission = if tenants.is_empty() {
+            AdmissionPolicyConfig::Fifo
+        } else if self.mix_admission {
+            AdmissionPolicyConfig::ClassAware(ClassAwareConfig::mix_aware(1.05))
+        } else {
+            AdmissionPolicyConfig::ClassAware(ClassAwareConfig::default())
+        };
         Ok(EngineConfig {
             gamma: self.gamma,
             kv: KvConfig {
@@ -205,6 +258,9 @@ impl Config {
             buckets: Buckets::pow2_up_to(self.max_batch.max(1)),
             seed: self.seed,
             control: self.control_config()?,
+            gamma_overrides: std::collections::HashMap::new(),
+            tenants,
+            admission,
         })
     }
 
@@ -231,6 +287,9 @@ impl Config {
             ("artifacts_dir", self.artifacts_dir.as_str().into()),
             ("adaptive", self.adaptive.into()),
             ("ragged", self.ragged.into()),
+            ("tenants", self.tenants.as_str().into()),
+            ("mix_admission", self.mix_admission.into()),
+            ("trace", self.trace.as_str().into()),
         ])
     }
 }
@@ -308,6 +367,68 @@ mod tests {
         // Round-trips through JSON.
         let c2 = Config::from_json(&good.to_json()).unwrap();
         assert!(c2.ragged && c2.adaptive);
+    }
+
+    #[test]
+    fn tenant_config_round_trips_and_drives_admission() {
+        use crate::scheduler::AdmissionPolicyConfig;
+        let spec = "chat:prio=2,share=0.2,ttft=0.5,alpha=0.9;bulk:share=0.8,alpha=0.5";
+        let c = Config {
+            adaptive: true,
+            mix_admission: true,
+            tenants: spec.into(),
+            trace: "examples/traces/tiny_production.csv".into(),
+            ..Config::default()
+        };
+        c.validate().unwrap();
+        let e = c.engine_config().unwrap();
+        assert_eq!(e.tenants.len(), 2);
+        assert_eq!(e.tenants[0].name, "chat");
+        assert!(matches!(
+            e.admission,
+            AdmissionPolicyConfig::ClassAware(ref cfg) if cfg.mix_speedup_floor.is_some()
+        ));
+        assert!(e.control.as_ref().unwrap().track_seq_alpha);
+        // Round-trips through JSON.
+        let c2 = Config::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.tenants, spec);
+        assert!(c2.mix_admission);
+        assert_eq!(c2.trace, c.trace);
+        // Tenants without mix: class-aware, α-blind.
+        let blind = Config {
+            tenants: "a;b".into(),
+            ..Config::default()
+        };
+        let e = blind.engine_config().unwrap();
+        assert!(matches!(
+            e.admission,
+            AdmissionPolicyConfig::ClassAware(ref cfg) if cfg.mix_speedup_floor.is_none()
+        ));
+        // No tenants: the bit-compatible FIFO baseline.
+        assert!(matches!(
+            Config::default().engine_config().unwrap().admission,
+            AdmissionPolicyConfig::Fifo
+        ));
+        // Rejections: bad spec, mix without tenants, mix without adaptive.
+        assert!(Config {
+            tenants: "a:bogus=1".into(),
+            ..Config::default()
+        }
+        .validate()
+        .is_err());
+        assert!(Config {
+            mix_admission: true,
+            ..Config::default()
+        }
+        .validate()
+        .is_err());
+        assert!(Config {
+            mix_admission: true,
+            tenants: "a;b".into(),
+            ..Config::default()
+        }
+        .validate()
+        .is_err());
     }
 
     #[test]

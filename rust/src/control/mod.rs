@@ -71,10 +71,11 @@ pub use policy::{
 use crate::hardware::ShardingSpec;
 use crate::kvcache::SeqId;
 use crate::perfmodel::{PerfModel, PerfParams};
-use crate::scheduler::Scheduler;
+use crate::scheduler::{RegimeOracle, Scheduler};
 use crate::simulator::ExecSim;
 use crate::theory;
 use crate::util::json::Json;
+use crate::workload::TenantClass;
 use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 
 /// Analytic cost oracle the model-guided policy extrapolates with.
@@ -298,6 +299,11 @@ pub struct ControlConfig {
     /// (spreads ≥ 0.3 for e.g. α 0.9/0.5) clear it immediately.
     /// Deployments with longer windows (less noise) can lower it.
     pub ragged_min_spread: f64,
+    /// Track per-sequence α̂ᵢ windows even with `ragged` off. The
+    /// multi-tenant mix-aware admission policy reads the running batch's
+    /// α̂ᵢ through the engine without requiring ragged rounds; scalar
+    /// deployments that don't need either keep the map empty (default).
+    pub track_seq_alpha: bool,
 }
 
 impl Default for ControlConfig {
@@ -314,6 +320,7 @@ impl Default for ControlConfig {
             ragged: false,
             seq_window_rounds: 8,
             ragged_min_spread: 0.25,
+            track_seq_alpha: false,
         }
     }
 }
@@ -391,6 +398,7 @@ impl ControlConfig {
             ragged: self.ragged,
             seq_window_rounds: self.seq_window_rounds.max(1),
             ragged_min_spread: self.ragged_min_spread.max(0.0),
+            track_seq_alpha: self.track_seq_alpha,
         }
     }
 }
@@ -830,11 +838,12 @@ impl SpecController {
         }
     }
 
-    /// Record per-sequence acceptance outcomes (ragged mode). Uses the
-    /// window capacity from `seq_window_rounds`; no-op when ragged mode is
-    /// off so the map cannot grow in scalar deployments.
+    /// Record per-sequence acceptance outcomes (ragged mode, or
+    /// `track_seq_alpha` for mix-aware admission). Uses the window
+    /// capacity from `seq_window_rounds`; a no-op otherwise so the map
+    /// cannot grow in scalar deployments.
     pub fn observe_sequences(&mut self, samples: &[SeqRoundSample]) {
-        if !self.cfg.ragged {
+        if !self.cfg.ragged && !self.cfg.track_seq_alpha {
             return;
         }
         let cap = self.cfg.seq_window_rounds;
@@ -1008,8 +1017,16 @@ impl SpecController {
     /// the scheduler's ceiling search. Before any data exists a small
     /// pilot batch is admitted so the estimators can observe something.
     pub fn batch_ceiling(&self, scheduler: &Scheduler) -> usize {
+        self.slo_batch_ceiling(scheduler, scheduler.config.tpot_slo)
+    }
+
+    /// The same priced ceiling search for an arbitrary TPOT SLO — this is
+    /// how **per-tenant-class** batch ceilings are derived (each class's
+    /// SLO against the one measured cost table), so the class-aware
+    /// admission policy's caps are priced, not guessed.
+    pub fn slo_batch_ceiling(&self, scheduler: &Scheduler, tpot_slo: Option<f64>) -> usize {
         let max = scheduler.config.max_batch;
-        if scheduler.config.tpot_slo.is_none() || max == 0 {
+        if tpot_slo.is_none() || max == 0 {
             return max;
         }
         // Hoist the b-independent economics out of the ceiling search so
@@ -1017,11 +1034,70 @@ impl SpecController {
         // every admit call).
         match self.round_economics() {
             None => 4.min(max),
-            Some((round, b0, round_len)) => scheduler.batch_ceiling(|b| {
-                let scale = (b as f64 / b0 as f64).max(0.25);
-                round * scale / round_len.max(1e-9)
-            }),
+            Some((round, b0, round_len)) => {
+                Scheduler::ceiling_for(&scheduler.config, tpot_slo, |b| {
+                    let scale = (b as f64 / b0 as f64).max(0.25);
+                    round * scale / round_len.max(1e-9)
+                })
+            }
         }
+    }
+
+    /// Per-class batch ceilings for a tenant table (indexed by
+    /// [`crate::batching::ClassId`]): each class's TPOT SLO through
+    /// [`SpecController::slo_batch_ceiling`]. Classes without an SLO get
+    /// `max_batch`.
+    pub fn class_ceilings(&self, scheduler: &Scheduler, tenants: &[TenantClass]) -> Vec<usize> {
+        tenants
+            .iter()
+            .map(|t| self.slo_batch_ceiling(scheduler, t.tpot_slo))
+            .collect()
+    }
+
+    /// The priced speculative-regime test (see
+    /// [`crate::scheduler::RegimeOracle`]): best-γ speedup vs AR at
+    /// `batch` for an acceptance mix `alpha`, from the policy's
+    /// measured-cost-anchored Eq. 4 surface. `None` falls back to the
+    /// controller's own α̂ (or prior).
+    pub fn predicted_speedup(&self, batch: usize, alpha: Option<f64>) -> f64 {
+        let est = Estimates {
+            batch: batch.max(1),
+            alpha: self.alpha_hat,
+            sigma: self.sigma_hat,
+            current_gamma: self.gamma,
+            regime_shift: false,
+            costs: &self.costs,
+        };
+        self.policy.predict(&est, alpha).1
+    }
+
+    /// Per-class regime estimates for observability: at the current batch
+    /// regime, what γ and speedup the policy predicts for each class's α
+    /// hint. Published in the server's per-tenant stats.
+    pub fn class_estimates(&self, tenants: &[TenantClass], batch: usize) -> Vec<ClassRegimeEstimate> {
+        let est = Estimates {
+            batch: batch.max(1),
+            alpha: self.alpha_hat,
+            sigma: self.sigma_hat,
+            current_gamma: self.gamma,
+            regime_shift: false,
+            costs: &self.costs,
+        };
+        tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let alpha = t.alpha_hint.or(self.alpha_hat).unwrap_or(self.cfg.alpha_prior);
+                let (gamma, speedup) = self.policy.predict(&est, Some(alpha));
+                ClassRegimeEstimate {
+                    class: i,
+                    name: t.name.clone(),
+                    alpha,
+                    gamma,
+                    speedup,
+                }
+            })
+            .collect()
     }
 
     pub fn state(&self) -> ControllerState {
@@ -1038,6 +1114,36 @@ impl SpecController {
             target_efficiency: self.costs.target_efficiency_by_bucket(),
             history: self.history.clone(),
         }
+    }
+}
+
+impl RegimeOracle for SpecController {
+    fn predicted_speedup(&self, batch: usize, alpha: Option<f64>) -> f64 {
+        SpecController::predicted_speedup(self, batch, alpha)
+    }
+}
+
+/// One tenant class's priced regime estimate (observability surface for
+/// the server's per-tenant stats).
+#[derive(Debug, Clone)]
+pub struct ClassRegimeEstimate {
+    pub class: usize,
+    pub name: String,
+    /// The α the estimate was priced at (class hint, else batch α̂/prior).
+    pub alpha: f64,
+    pub gamma: usize,
+    pub speedup: f64,
+}
+
+impl ClassRegimeEstimate {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("class", self.class.into()),
+            ("name", self.name.as_str().into()),
+            ("alpha", self.alpha.into()),
+            ("gamma", self.gamma.into()),
+            ("speedup", self.speedup.into()),
+        ])
     }
 }
 
@@ -1413,6 +1519,68 @@ mod tests {
         let mut out_back = Vec::new();
         ctl.gammas_for_round(&[1, 2], &mut out_back);
         assert!(out_back[0] > out_back[1], "{out_back:?}");
+    }
+
+    #[test]
+    fn predicted_speedup_traces_the_band_and_class_surfaces() {
+        let mut ctl = SpecController::new(ControlConfig::model_guided(roofline_spec()));
+        // Memory-bound batch: inside the band; compute-bound: out of it.
+        let s8 = ctl.predicted_speedup(8, Some(0.9));
+        assert!(s8 > 1.2, "B=8 α=0.9 should be well inside the band: {s8}");
+        let s4096 = ctl.predicted_speedup(4096, Some(0.9));
+        assert!((s4096 - 1.0).abs() < 1e-9, "B=4096 should fall back to AR: {s4096}");
+        // Harder mixes predict less speedup at the same batch.
+        assert!(ctl.predicted_speedup(8, Some(0.4)) < s8);
+        // The RegimeOracle trait view agrees with the inherent method.
+        let oracle: &dyn crate::scheduler::RegimeOracle = &ctl;
+        assert_eq!(oracle.predicted_speedup(8, Some(0.9)), s8);
+        // Per-class estimates price each class's hint.
+        let mut easy = TenantClass::new("easy");
+        easy.alpha_hint = Some(0.92);
+        let mut hard = TenantClass::new("hard");
+        hard.alpha_hint = Some(0.45);
+        let ests = ctl.class_estimates(&[easy, hard], 8);
+        assert_eq!(ests.len(), 2);
+        assert!(ests[0].speedup > ests[1].speedup);
+        assert!(ests[0].gamma >= ests[1].gamma);
+        assert!(ests[0].to_json().to_string().contains("\"speedup\""));
+        // Per-class ceilings: a tight-TPOT class gets a lower ceiling
+        // than an SLO-free one once economics exist.
+        let sched = Scheduler::new(SchedulerConfig {
+            max_batch: 64,
+            admit_reserve_tokens: 0,
+            tpot_slo: None,
+        });
+        let mut rng = Rng::seeded(3);
+        observe_rounds(&mut ctl, &mut rng, 0.9, 3, 16, 50);
+        let mut tight = TenantClass::new("tight");
+        tight.tpot_slo = Some(1e-5);
+        let free = TenantClass::new("free");
+        let ceilings = ctl.class_ceilings(&sched, &[tight, free]);
+        assert_eq!(ceilings.len(), 2);
+        assert!(ceilings[0] < ceilings[1], "{ceilings:?}");
+        assert_eq!(ceilings[1], 64);
+    }
+
+    #[test]
+    fn track_seq_alpha_enables_windows_without_ragged() {
+        let cfg = ControlConfig {
+            track_seq_alpha: true,
+            seq_window_rounds: 4,
+            ..ControlConfig::static_gamma(4)
+        };
+        let mut ctl = SpecController::new(cfg);
+        feed_seq(&mut ctl, 5, 4, 4, 4);
+        assert!(ctl.seq_alpha_hat(5).is_some(), "tracking must fill windows");
+        // And the rounds stay uniform (ragged is still off).
+        let mut out = Vec::new();
+        ctl.gammas_for_round(&[5, 6], &mut out);
+        assert!(out.iter().all(|&g| g == out[0]));
+        assert_eq!(ctl.state().ragged_rounds, 0);
+        // Default scalar config keeps the map empty.
+        let mut plain = SpecController::new(ControlConfig::static_gamma(4));
+        feed_seq(&mut plain, 5, 4, 4, 4);
+        assert_eq!(plain.state().tracked_sequences, 0);
     }
 
     #[test]

@@ -60,6 +60,18 @@ pub trait GammaPolicy: Send {
     /// [`GammaPolicy::decide`] path, which still owns regime decisions;
     /// this refines *within* the current regime every round.
     ///
+    /// Best (γ, speedup-vs-AR) this policy predicts at `est.batch` for an
+    /// acceptance mix `alpha` (`None` = use the policy's own estimate /
+    /// prior). This is the **priced regime test** the admission layer's
+    /// mix-aware policy consults through
+    /// [`crate::scheduler::RegimeOracle`]: speedup ≤ 1 means the batch
+    /// has left the speculative band. Policies without a cost model (the
+    /// static baseline) report a neutral (current γ, 1.0).
+    fn predict(&self, est: &Estimates, alpha: Option<f64>) -> (usize, f64) {
+        let _ = alpha;
+        (est.current_gamma, 1.0)
+    }
+
     /// The default (and the guaranteed behavior of every policy when all
     /// α̂ᵢ are equal) is the uniform round the scalar path would run:
     /// every sequence at `est.current_gamma`.
@@ -246,6 +258,19 @@ impl ModelGuidedPolicy {
 impl GammaPolicy for ModelGuidedPolicy {
     fn name(&self) -> &'static str {
         "model-guided"
+    }
+
+    /// Measured-cost-anchored Eq. 4 argmax: the best γ's goodput over the
+    /// AR (γ=0) goodput at the same batch. >1 ⇔ speculation pays.
+    fn predict(&self, est: &Estimates, alpha: Option<f64>) -> (usize, f64) {
+        let alpha = alpha
+            .or(est.alpha)
+            .unwrap_or(self.alpha_prior)
+            .clamp(0.0, 1.0);
+        let scores = self.scores(est.batch, alpha, est.costs);
+        let best = argmax(&scores);
+        let ar = scores[0].max(1e-300);
+        (best, scores[best] / ar)
     }
 
     fn decide(&mut self, est: &Estimates) -> GammaDecision {
@@ -673,6 +698,27 @@ mod tests {
             })
             .collect();
         assert!(wf_score >= goodput(&indep) - 1e-12);
+    }
+
+    #[test]
+    fn predict_reports_regime_band_and_mix_sensitivity() {
+        let p = policy(roofline_spec(), 0.05, 0);
+        let costs = CostTable::default();
+        // Memory-bound batch: speculative γ with a real (>1) speedup.
+        let (g_small, s_small) = p.predict(&est(8, 0.9, 3, &costs), None);
+        assert!(g_small >= 1 && s_small > 1.2, "γ={g_small} s={s_small}");
+        // Compute-bound batch: AR, speedup pinned at 1 (scores[0]/scores[0]).
+        let (g_big, s_big) = p.predict(&est(4096, 0.9, 3, &costs), None);
+        assert_eq!(g_big, 0);
+        assert!((s_big - 1.0).abs() < 1e-12);
+        // The mix override matters: a hard mix predicts less speedup than
+        // an easy one at the same batch.
+        let (_, s_easy) = p.predict(&est(8, 0.5, 3, &costs), Some(0.95));
+        let (_, s_hard) = p.predict(&est(8, 0.5, 3, &costs), Some(0.35));
+        assert!(s_easy > s_hard, "{s_easy} vs {s_hard}");
+        // Static policies are neutral (no cost model to price with).
+        let stat = StaticPolicy { gamma: 4 };
+        assert_eq!(stat.predict(&est(8, 0.9, 4, &costs), None), (4, 1.0));
     }
 
     #[test]

@@ -28,16 +28,19 @@
 //! how every T_AR baseline in the experiments is measured, guaranteeing
 //! AR and SD share scheduler/batcher/sampler code paths.
 
-use crate::batching::{Buckets, Completion, Request, RequestQueue, SamplingParams};
+use crate::batching::{Buckets, ClassId, Completion, Request, RequestQueue, SamplingParams};
 use crate::control::{
     ControlConfig, ControllerState, RoundObservation, SeqRoundSample, SpecController,
 };
 use crate::kvcache::{KvConfig, KvManager, SeqId};
 use crate::metrics::{Counters, EngineMetrics};
 use crate::sampling::verify_chain_views;
-use crate::scheduler::{Scheduler, SchedulerConfig};
+use crate::scheduler::{
+    AdmissionContext, AdmissionPolicyConfig, RegimeOracle, RunningInfo, Scheduler, SchedulerConfig,
+};
 use crate::spec::{LogitsView, ProposeOut, SdBackend};
 use crate::util::rng::Rng;
+use crate::workload::TenantClass;
 
 /// Engine configuration (the "launcher config" surface).
 #[derive(Debug, Clone)]
@@ -61,6 +64,14 @@ pub struct EngineConfig {
     /// arm and tests; online per-sequence γ comes from the control plane
     /// ([`ControlConfig::ragged`]). Ignored when a controller is set.
     pub gamma_overrides: std::collections::HashMap<SeqId, usize>,
+    /// Tenant/SLO class table, indexed by [`ClassId`]. Empty = classless
+    /// deployment (every request is the implicit default class); entries
+    /// drive per-class SLO attainment accounting, class-aware preemption
+    /// order, and the class-aware admission policy.
+    pub tenants: Vec<TenantClass>,
+    /// Admission policy. The default [`AdmissionPolicyConfig::Fifo`]
+    /// reproduces the pre-multi-tenant scheduler bit-for-bit.
+    pub admission: AdmissionPolicyConfig,
 }
 
 impl Default for EngineConfig {
@@ -76,6 +87,8 @@ impl Default for EngineConfig {
             seed: 0,
             control: None,
             gamma_overrides: std::collections::HashMap::new(),
+            tenants: Vec::new(),
+            admission: AdmissionPolicyConfig::Fifo,
         }
     }
 }
@@ -93,6 +106,7 @@ struct RunningSeq {
     arrival: f64,
     first_token_at: Option<f64>,
     rounds: u64,
+    class: ClassId,
 }
 
 impl RunningSeq {
@@ -123,6 +137,9 @@ struct RoundScratch {
     seq_samples: Vec<SeqRoundSample>,
     /// Indices of sequences that finished this round (ascending).
     finished: Vec<usize>,
+    /// Per-running-sequence admission view (class + α̂ᵢ), rebuilt each
+    /// admit call in place.
+    run_infos: Vec<RunningInfo>,
 }
 
 /// The coordinator.
@@ -145,7 +162,7 @@ pub struct Engine<B: SdBackend> {
 impl<B: SdBackend> Engine<B> {
     pub fn new(config: EngineConfig, backend: B) -> Engine<B> {
         let kv = KvManager::new(config.kv);
-        let scheduler = Scheduler::new(config.scheduler.clone());
+        let scheduler = Scheduler::with_policy(config.scheduler.clone(), &config.admission);
         let rng = Rng::new(config.seed, 0x5d);
         let queue = RequestQueue::new();
         let controller = config.control.clone().map(SpecController::new);
@@ -190,6 +207,16 @@ impl<B: SdBackend> Engine<B> {
 
     pub fn kv(&self) -> &KvManager {
         &self.kv
+    }
+
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.scheduler
+    }
+
+    /// Admission priority of a tenant class (classes beyond the table are
+    /// neutral tier 1).
+    fn class_priority(&self, class: ClassId) -> u32 {
+        self.config.tenants.get(class).map_or(1, |t| t.priority)
     }
 
     /// γ that would apply to the next round (controller-owned if present).
@@ -266,19 +293,39 @@ impl<B: SdBackend> Engine<B> {
         }
 
         // --- capacity reservation: γᵢ+1 tokens per sequence ----------------
-        // Sequences that don't fit are preempted (released + requeued) so the
-        // batch call below operates on a consistent survivor set; the
+        // Sequences that don't fit trigger a preemption (release + requeue)
+        // so the batch call below operates on a consistent survivor set; the
         // per-sequence γ/id scratch stays index-aligned through removals.
+        // Victim order is class-aware: evict from the lowest-priority class
+        // first, and within it the most-KV-recoverable sequence (least
+        // generated progress — cheapest to redo after requeue). Only a
+        // *strictly* lower-priority victim spares the starved sequence;
+        // otherwise it is preempted itself — exactly the classless behavior
+        // whenever every sequence shares one priority tier.
         let mut i = 0;
         while i < self.running.len() {
             let id = self.running[i].id;
             if self.kv.append(id, self.scratch.gammas[i] + 1).is_some() {
                 i += 1;
-            } else {
-                self.preempt(i);
-                self.scratch.gammas.remove(i);
-                self.scratch.seq_ids.remove(i);
+                continue;
             }
+            let my_prio = self.class_priority(self.running[i].class);
+            let victim = self
+                .running
+                .iter()
+                .enumerate()
+                .filter(|(j, s)| *j != i && self.class_priority(s.class) < my_prio)
+                .min_by_key(|(j, s)| (self.class_priority(s.class), s.generated(), *j))
+                .map(|(j, _)| j);
+            let j = victim.unwrap_or(i);
+            self.preempt(j);
+            self.scratch.gammas.remove(j);
+            self.scratch.seq_ids.remove(j);
+            if j < i {
+                i -= 1;
+            }
+            // j == i: the starved sequence itself went; j != i: retry its
+            // reservation against the freed capacity.
         }
         if self.running.is_empty() {
             self.metrics.time_overhead += t0.elapsed().as_secs_f64();
@@ -291,6 +338,11 @@ impl<B: SdBackend> Engine<B> {
         self.metrics.rounds += 1;
         self.metrics.batch_size_sum += b as u64;
         self.round_counter += 1;
+        // Per-class round participation (the multi-tenant analogue of
+        // batch_size_sum; classless deployments keep one slot).
+        for s in &self.running {
+            self.metrics.class_mut(s.class).seq_rounds += 1;
+        }
 
         // Per-round inputs live in reusable scratch buffers — no fresh
         // allocation in steady state.
@@ -429,6 +481,8 @@ impl<B: SdBackend> Engine<B> {
             }
             let discarded = len_with_emitted - seq.stream.len();
             self.metrics.tokens_generated -= discarded as u64;
+            self.metrics.class_mut(seq.class).tokens_generated +=
+                (outcome.tokens.len() - discarded) as u64;
             if done {
                 self.scratch.finished.push(i);
             }
@@ -472,6 +526,7 @@ impl<B: SdBackend> Engine<B> {
                 first_token_at: seq.first_token_at.unwrap_or(self.clock),
                 finished_at: self.clock,
                 rounds: seq.rounds,
+                class: seq.class,
             };
             self.metrics.ttft.0.record(completion.ttft());
             self.metrics.tpot.0.record(completion.tpot());
@@ -479,6 +534,27 @@ impl<B: SdBackend> Engine<B> {
                 .e2e_latency
                 .0
                 .record(completion.finished_at - completion.arrival);
+            // Per-class latency + SLO attainment (SLOs come from the
+            // tenant table; classes beyond it record latency only).
+            let (ttft, tpot) = (completion.ttft(), completion.tpot());
+            let cm = self.metrics.class_mut(seq.class);
+            cm.requests_completed += 1;
+            cm.ttft.0.record(ttft);
+            cm.tpot.0.record(tpot);
+            if let Some(t) = self.config.tenants.get(seq.class) {
+                if let Some(slo) = t.ttft_slo {
+                    cm.ttft_slo_total += 1;
+                    if ttft <= slo {
+                        cm.ttft_slo_met += 1;
+                    }
+                }
+                if let Some(slo) = t.tpot_slo {
+                    cm.tpot_slo_total += 1;
+                    if tpot <= slo {
+                        cm.tpot_slo_met += 1;
+                    }
+                }
+            }
             completions.push(completion);
         }
 
@@ -530,13 +606,53 @@ impl<B: SdBackend> Engine<B> {
     }
 
     fn admit_with_ceiling(&mut self, ceiling: usize) -> anyhow::Result<()> {
-        let admitted = self.scheduler.admit(
-            &mut self.queue,
-            &self.kv,
-            self.running.len(),
+        // The per-class context (α̂ᵢ lookups, priced per-class ceilings,
+        // the regime oracle) is only computed for the class-aware policy;
+        // FIFO reads nothing but the running count, and its per-round
+        // path must stay as cheap as the pre-multi-tenant scheduler.
+        let class_aware = matches!(self.config.admission, AdmissionPolicyConfig::ClassAware(_));
+        self.scratch.run_infos.clear();
+        for s in &self.running {
+            self.scratch.run_infos.push(RunningInfo {
+                class: s.class,
+                alpha: if class_aware {
+                    self.controller
+                        .as_ref()
+                        .and_then(|c| c.seq_alpha_hat(s.id))
+                } else {
+                    None
+                },
+            });
+        }
+        // Per-class batch ceilings, priced from each class's TPOT SLO
+        // against the measured cost table (only when classes declare one).
+        let class_ceilings: Option<Vec<usize>> = match self.controller.as_ref() {
+            Some(ctl)
+                if class_aware
+                    && self
+                        .config
+                        .tenants
+                        .iter()
+                        .any(|t| t.tpot_slo.is_some()) =>
+            {
+                Some(ctl.class_ceilings(&self.scheduler, &self.config.tenants))
+            }
+            _ => None,
+        };
+        let ctx = AdmissionContext {
+            kv: &self.kv,
+            running: &self.scratch.run_infos,
             ceiling,
-            self.clock,
-        );
+            now: self.clock,
+            tenants: &self.config.tenants,
+            class_ceilings: class_ceilings.as_deref(),
+            oracle: if class_aware {
+                self.controller.as_ref().map(|c| c as &dyn RegimeOracle)
+            } else {
+                None
+            },
+        };
+        let admitted = self.scheduler.admit_with(&mut self.queue, &ctx);
         if admitted.is_empty() {
             return Ok(());
         }
@@ -563,6 +679,7 @@ impl<B: SdBackend> Engine<B> {
                 arrival: req.arrival,
                 first_token_at: None,
                 rounds: 0,
+                class: req.class,
             });
         }
         Ok(())
@@ -575,11 +692,13 @@ impl<B: SdBackend> Engine<B> {
         self.backend.release(seq.id);
         self.kv.release(seq.id);
         self.counters.inc("preemptions");
+        self.metrics.class_mut(seq.class).preemptions += 1;
         self.queue.push_front(Request {
             id: seq.id,
             prompt: seq.stream[..seq.prompt_len].to_vec(),
             params: seq.params,
             arrival: seq.arrival,
+            class: seq.class,
         });
     }
 
@@ -632,6 +751,7 @@ mod tests {
                 eos_token: None,
             },
             arrival,
+            class: 0,
         }
     }
 
@@ -882,6 +1002,125 @@ mod tests {
         assert!(st.gamma >= 1, "small-batch adaptive should speculate: {st:?}");
         assert!(e.metrics.draft_tokens_proposed > 0);
         assert_eq!(e.current_gamma(), st.gamma);
+    }
+
+    #[test]
+    fn per_class_accounting_and_slo_attainment() {
+        use crate::workload::TenantClass;
+        let mut fast = TenantClass::new("fast");
+        fast.ttft_slo = Some(1e9); // trivially met
+        fast.tpot_slo = Some(1e9);
+        let mut slow = TenantClass::new("slow");
+        slow.ttft_slo = Some(1e-12); // unmeetable
+        let config = EngineConfig {
+            gamma: 2,
+            tenants: vec![fast, slow],
+            ..Default::default()
+        };
+        let mut e = Engine::new(config, synthetic(0.9, 3));
+        e.submit(req(1, 6, 12, 0.0).with_class(0));
+        e.submit(req(2, 6, 12, 0.0).with_class(1));
+        let done = e.run_to_completion(200).unwrap();
+        assert_eq!(done.len(), 2);
+        for c in &done {
+            let want = if c.id == 1 { 0 } else { 1 };
+            assert_eq!(c.class, want, "completions carry their class");
+        }
+        let m = &e.metrics;
+        assert!(m.class.len() >= 2);
+        assert_eq!(m.class[0].requests_completed, 1);
+        assert_eq!(m.class[1].requests_completed, 1);
+        assert_eq!(m.class[0].tokens_generated, 12);
+        assert_eq!(m.class[1].tokens_generated, 12);
+        assert!(m.class[0].seq_rounds > 0 && m.class[1].seq_rounds > 0);
+        // Both classes' seq-rounds sum to the global batch_size_sum.
+        let sum: u64 = m.class.iter().map(|c| c.seq_rounds).sum();
+        assert_eq!(sum, m.batch_size_sum);
+        assert_eq!(m.class[0].ttft_attainment(), Some(1.0));
+        assert_eq!(m.class[0].tpot_attainment(), Some(1.0));
+        assert_eq!(m.class[1].ttft_attainment(), Some(0.0));
+        assert_eq!(m.class[1].tpot_attainment(), None, "slow has no TPOT SLO");
+    }
+
+    #[test]
+    fn preemption_prefers_lowest_priority_least_progress() {
+        use crate::workload::TenantClass;
+        // Tiny cache forces preemption; the high-priority sequence must
+        // never be the victim while low-priority ones are running.
+        let mut hi = TenantClass::new("hi");
+        hi.priority = 2;
+        let lo = TenantClass::new("lo"); // priority 1
+        let config = EngineConfig {
+            gamma: 3,
+            kv: KvConfig {
+                num_blocks: 14,
+                block_size: 4,
+            },
+            scheduler: SchedulerConfig {
+                max_batch: 8,
+                admit_reserve_tokens: 4,
+                tpot_slo: None,
+            },
+            tenants: vec![hi, lo],
+            ..Default::default()
+        };
+        let mut e = Engine::new(config, synthetic(0.9, 7));
+        e.submit(req(0, 6, 24, 0.0).with_class(0)); // high priority
+        for id in 1..6u64 {
+            e.submit(req(id, 6, 24, 0.0).with_class(1));
+        }
+        let done = e.run_to_completion(5000).unwrap();
+        assert_eq!(done.len(), 6, "all requests should eventually finish");
+        assert!(
+            e.counters.get("preemptions") > 0,
+            "tiny cache should force preemptions"
+        );
+        // Victim accounting is per class: every eviction hit class 1.
+        assert_eq!(e.metrics.class[0].preemptions, 0, "high priority never evicted");
+        assert!(e.metrics.class[1].preemptions > 0);
+        // Losslessness survives class-aware preemption.
+        for c in &done {
+            assert_eq!(c.tokens, e.backend().expected_chain(c.id, 6, 24));
+        }
+        e.kv().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn class_aware_single_class_matches_fifo_engine_run() {
+        use crate::scheduler::{AdmissionPolicyConfig, ClassAwareConfig};
+        // The acceptance criterion at engine level: a single-class
+        // class-aware config reproduces the FIFO engine bit-for-bit.
+        let run = |admission: AdmissionPolicyConfig| -> (Vec<Vec<u32>>, u64, f64, u64) {
+            let config = EngineConfig {
+                gamma: 3,
+                kv: KvConfig {
+                    num_blocks: 24,
+                    block_size: 4,
+                },
+                scheduler: SchedulerConfig {
+                    max_batch: 4,
+                    admit_reserve_tokens: 4,
+                    tpot_slo: None,
+                },
+                admission,
+                ..Default::default()
+            };
+            let mut e = Engine::new(config, synthetic(0.8, 21));
+            for id in 0..7 {
+                e.submit(req(id, 6, 18, 0.2 * id as f64));
+            }
+            let mut done = e.run_to_completion(2000).unwrap();
+            done.sort_by_key(|c| c.id);
+            (
+                done.into_iter().map(|c| c.tokens).collect(),
+                e.metrics.rounds,
+                e.clock(),
+                e.counters.get("preemptions"),
+            )
+        };
+        let fifo = run(AdmissionPolicyConfig::Fifo);
+        let class = run(AdmissionPolicyConfig::ClassAware(ClassAwareConfig::default()));
+        assert_eq!(fifo, class);
     }
 
     #[test]

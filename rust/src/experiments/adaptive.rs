@@ -109,6 +109,7 @@ fn build_engine(alpha: f64, control: Option<ControlConfig>, gamma: usize, seed: 
         buckets: Buckets::pow2_up_to(max_batch),
         seed,
         control,
+        ..Default::default()
     };
     Engine::new(config, backend)
 }
@@ -134,6 +135,7 @@ fn mk_request(id: u64, arrival: f64) -> Request {
             eos_token: None,
         },
         arrival,
+        class: 0,
     }
 }
 

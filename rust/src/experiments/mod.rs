@@ -19,6 +19,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
+pub mod multitenant;
 pub mod ragged;
 pub mod sharding;
 pub mod table3;
@@ -131,6 +132,7 @@ fn build_engine(
         buckets: Buckets::pow2_up_to(batch.max(1)),
         seed: opts.seed,
         control: None,
+        ..Default::default()
     };
     Engine::new(config, backend)
 }
@@ -155,6 +157,7 @@ fn run_one(
                 eos_token: None,
             },
             arrival: 0.0,
+            class: 0,
         });
     }
     engine.run_to_completion(100_000)?;

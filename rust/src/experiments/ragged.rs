@@ -196,6 +196,7 @@ fn build_engine(
         seed,
         control,
         gamma_overrides: overrides,
+        ..Default::default()
     };
     Engine::new(config, backend)
 }
@@ -217,6 +218,7 @@ fn mk_request(id: SeqId, arrival: f64) -> Request {
             eos_token: None,
         },
         arrival,
+        class: 0,
     }
 }
 

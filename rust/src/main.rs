@@ -24,7 +24,14 @@ use moesd::workload::{calibrated_alpha, Dataset};
 use std::path::Path;
 
 fn main() {
-    let args = Args::from_env(&["verbose", "help", "adaptive", "ragged"]);
+    let args = Args::from_env(&[
+        "verbose",
+        "help",
+        "adaptive",
+        "ragged",
+        "mix-admission",
+        "smoke",
+    ]);
     if args.flag("verbose") {
         logging::set_level(logging::Level::Debug);
     }
@@ -51,11 +58,17 @@ fn print_help() {
          \n\
          USAGE: moesd <serve|bench|fit|selfcheck|list> [options]\n\
          \n\
-         serve     --mode synthetic|hlo --port N --gamma N [--adaptive] [--ragged] [--config file.json]\n\
-         bench     <fig1|fig2|fig3|fig4|fig5|fig6|table1|table2|table3|adaptive|vocab|sharding|ragged>\n\
+         serve     --mode synthetic|hlo --port N --gamma N [--adaptive] [--ragged]\n\
+                   [--tenants SPEC] [--mix-admission] [--config file.json]\n\
+         bench     <fig1|fig2|fig3|fig4|fig5|fig6|table1|table2|table3|adaptive|vocab|\n\
+                    sharding|ragged|multitenant>\n\
+                   multitenant: [--trace file.csv] [--loads 0.5,1.5,3] [--smoke]\n\
          fit       --gamma N --alpha X\n\
          selfcheck --artifacts DIR\n\
-         list"
+         list\n\
+         \n\
+         --tenants SPEC: multi-tenant SLO classes, e.g.\n\
+           \"chat:prio=2,share=0.2,ttft=0.5,tpot=0.02,alpha=0.9;bulk:share=0.8,alpha=0.5\""
     );
 }
 
@@ -82,6 +95,18 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
         cfg.adaptive = true;
         cfg.ragged = true;
     }
+    if let Some(spec) = args.get("tenants") {
+        cfg.tenants = spec.to_string();
+    }
+    if let Some(path) = args.get("trace") {
+        cfg.trace = path.to_string();
+    }
+    if args.flag("mix-admission") {
+        // The mix-aware regime test needs the adaptive controller's
+        // priced oracle, so the flag implies it.
+        cfg.adaptive = true;
+        cfg.mix_admission = true;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -95,6 +120,23 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     println!("starting moesd server on {bind} (mode {:?}, γ={})", cfg.mode, cfg.gamma);
     if engine_cfg.control.is_some() {
         println!("adaptive speculation control plane: model-guided γ/batch co-tuning");
+    }
+    if !engine_cfg.tenants.is_empty() {
+        println!(
+            "multi-tenant classes ({}): {}{}",
+            engine_cfg.tenants.len(),
+            engine_cfg
+                .tenants
+                .iter()
+                .map(|t| t.name.as_str())
+                .collect::<Vec<_>>()
+                .join(", "),
+            if cfg.mix_admission {
+                " — mix-aware admission"
+            } else {
+                ""
+            }
+        );
     }
     let server = match cfg.mode {
         Mode::Hlo => {
@@ -134,7 +176,8 @@ fn bench(args: &Args) -> anyhow::Result<()> {
         .map(String::as_str)
         .ok_or_else(|| {
             anyhow::anyhow!(
-                "bench needs an experiment id (fig1..fig6, table1..3, adaptive, vocab, sharding, ragged)"
+                "bench needs an experiment id (fig1..fig6, table1..3, adaptive, vocab, \
+                 sharding, ragged, multitenant)"
             )
         })?;
     use moesd::experiments::*;
@@ -282,6 +325,92 @@ fn bench(args: &Args) -> anyhow::Result<()> {
                 "shape check passed: per-sequence γ ≥ best uniform γ everywhere, \
                  with a strict win in the memory-bound regime"
             );
+        }
+        "multitenant" => {
+            use moesd::workload::ArrivalTrace;
+            let smoke = args.flag("smoke");
+            // A supplied trace replays as-is (--trace beats the config
+            // file's `trace`); otherwise the bundled production-shaped
+            // synthetic trace (tiny in smoke mode).
+            let trace_path: Option<String> = match args.get("trace") {
+                Some(p) => Some(p.to_string()),
+                None => match args.get("config") {
+                    Some(cfg_path) => {
+                        let cfg = Config::load(Path::new(cfg_path))?;
+                        (!cfg.trace.is_empty()).then(|| cfg.trace.clone())
+                    }
+                    None => None,
+                },
+            };
+            let trace = match &trace_path {
+                Some(path) => ArrivalTrace::load(std::path::Path::new(path))?,
+                None if smoke => {
+                    ArrivalTrace::load(&moesd::benchlib::repo_path("examples/traces/tiny_production.csv"))?
+                }
+                None => ArrivalTrace::synthetic_production(
+                    multitenant::TRACE_DURATION_S,
+                    multitenant::TRACE_BASE_RATE,
+                    42,
+                ),
+            };
+            let loads: Vec<f64> = match args.get("loads") {
+                Some(spec) => spec
+                    .split(',')
+                    .map(|s| {
+                        s.trim()
+                            .parse::<f64>()
+                            .map_err(|_| anyhow::anyhow!("bad load factor `{s}`"))
+                    })
+                    .collect::<anyhow::Result<Vec<f64>>>()?,
+                None if smoke => vec![4.0],
+                None => multitenant::default_loads(),
+            };
+            println!(
+                "multitenant sweep: {} trace events, loads {loads:?}",
+                trace.len()
+            );
+            let out = multitenant::run(&trace, &loads, 42)?;
+            for r in &out.rows {
+                println!(
+                    "load {:>4}x {:>10}: {:>8.1} tok/s (speedup {:.2}, mean B {:>5.1}, \
+                     SLOs {} / chat TTFT p99 {:.3}s att {:?})",
+                    r.load,
+                    r.policy,
+                    r.tok_s,
+                    r.speedup,
+                    r.mean_batch,
+                    r.slos_met,
+                    r.classes[0].ttft_p99,
+                    r.classes[0].ttft_attainment,
+                );
+            }
+            moesd::benchlib::write_report(
+                "multitenant_sweep.csv",
+                &multitenant::to_csv(&out).to_string(),
+            )?;
+            moesd::benchlib::write_json_report("multitenant.json", &multitenant::to_json(&out))?;
+            // The shape check's margins are calibrated to the default
+            // synthetic trace + load sweep; a custom --trace/--loads run
+            // is a measurement, not a regression gate, and must not fail
+            // on workloads the margins were never tuned for.
+            let default_setup = trace_path.is_none() && args.get("loads").is_none();
+            if smoke {
+                println!("smoke run: per-tenant stats written to results/multitenant.json");
+            } else if default_setup {
+                if let Err(e) = multitenant::check_shape(&out) {
+                    anyhow::bail!("multitenant shape check failed: {e}");
+                }
+                println!(
+                    "shape check passed: class-aware admission meets strictly more SLOs \
+                     than FIFO at overload; mix-aware admission sustains the measured \
+                     speedup band"
+                );
+            } else {
+                println!(
+                    "custom trace/loads: measurement only (shape-check margins are \
+                     calibrated to the default trace + loads)"
+                );
+            }
         }
         "vocab" => {
             let out = vocab_scale::run(&vocab_scale::VOCABS, 4, 0.9, 42)?;

@@ -108,6 +108,43 @@ pub struct EngineMetrics {
     pub time_overhead: f64,
     /// Sum over rounds of the decode batch size (for mean batch size).
     pub batch_size_sum: u64,
+
+    // --- per-tenant-class accounting ----------------------------------------
+    /// Indexed by [`crate::batching::ClassId`]; grown on demand (single-
+    /// class deployments carry one entry for the default class).
+    pub class: Vec<ClassMetrics>,
+}
+
+/// Per-tenant-class serving metrics: latency distributions, SLO
+/// attainment, and round participation (the multi-tenant observability
+/// surface the server publishes per class).
+#[derive(Debug, Clone, Default)]
+pub struct ClassMetrics {
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    /// Sequence-rounds: decode rounds this class's sequences sat in.
+    pub seq_rounds: u64,
+    pub preemptions: u64,
+    pub ttft: Histogram2,
+    pub tpot: Histogram2,
+    /// SLO attainment counters (populated only when the class declares
+    /// the corresponding SLO; totals count completions, met ≤ total).
+    pub ttft_slo_met: u64,
+    pub ttft_slo_total: u64,
+    pub tpot_slo_met: u64,
+    pub tpot_slo_total: u64,
+}
+
+impl ClassMetrics {
+    /// Fraction of completions that met the TTFT SLO; `None` without one.
+    pub fn ttft_attainment(&self) -> Option<f64> {
+        (self.ttft_slo_total > 0).then(|| self.ttft_slo_met as f64 / self.ttft_slo_total as f64)
+    }
+
+    /// Fraction of completions that met the TPOT SLO; `None` without one.
+    pub fn tpot_attainment(&self) -> Option<f64> {
+        (self.tpot_slo_total > 0).then(|| self.tpot_slo_met as f64 / self.tpot_slo_total as f64)
+    }
 }
 
 /// Small wrapper so EngineMetrics can derive Default cheaply.
@@ -121,6 +158,14 @@ impl Default for Histogram2 {
 }
 
 impl EngineMetrics {
+    /// The class-metrics slot for `class`, growing the table on demand.
+    pub fn class_mut(&mut self, class: usize) -> &mut ClassMetrics {
+        if self.class.len() <= class {
+            self.class.resize_with(class + 1, ClassMetrics::default);
+        }
+        &mut self.class[class]
+    }
+
     /// σ as measured: generated tokens per sequence-round over the γ+1
     /// maximum (each of the `batch_size_sum` sequence-rounds could emit at
     /// most γ+1 tokens).
@@ -276,5 +321,23 @@ mod tests {
         let r = m.report("test", 3);
         assert!(r.contains("[test]"));
         assert!(r.contains("tok/s"));
+    }
+
+    #[test]
+    fn class_metrics_grow_and_attain() {
+        let mut m = EngineMetrics::default();
+        assert!(m.class.is_empty());
+        m.class_mut(2).requests_completed += 1;
+        assert_eq!(m.class.len(), 3);
+        assert_eq!(m.class[2].requests_completed, 1);
+        assert_eq!(m.class[0].requests_completed, 0);
+        let c = m.class_mut(0);
+        assert_eq!(c.ttft_attainment(), None);
+        c.ttft_slo_total = 4;
+        c.ttft_slo_met = 3;
+        c.tpot_slo_total = 2;
+        c.tpot_slo_met = 2;
+        assert_eq!(c.ttft_attainment(), Some(0.75));
+        assert_eq!(c.tpot_attainment(), Some(1.0));
     }
 }

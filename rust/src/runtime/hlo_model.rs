@@ -59,7 +59,7 @@ struct SeqState {
     draft: ModelSeqState,
 }
 
-/// Whole-batch host KV from the previous forward of one model.
+/// Whole-batch host KV from one forward of one model.
 ///
 /// §Perf L3 optimization #2: in steady state the decode batch composition
 /// is stable, so the KV tensors produced by one forward are exactly the
@@ -68,14 +68,42 @@ struct SeqState {
 /// (logits, k, v) root tuple always comes back as one host literal — the
 /// device→host readback is unavoidable. What *can* be skipped is the
 /// per-sequence scatter/gather on the host: cache the whole-batch k/v
-/// vectors and re-upload them directly while the composition is stable,
-/// scattering to per-seq slabs only when it changes.
+/// vectors and re-upload them directly while the composition repeats,
+/// scattering to per-seq slabs only on eviction.
 struct KvBatchCache {
     seq_ids: Vec<SeqId>,
     bucket: usize,
     k: Vec<f32>,
     v: Vec<f32>,
+    /// Creation generation: a sequence's KV in this entry is current iff
+    /// `ModelKvCaches::latest[seq] == gen` (no later forward touched it).
+    gen: u64,
 }
+
+/// Cached batch-KV snapshots per model, **keyed by composition** (PR-4
+/// follow-up): ragged draft rounds forward a shrinking active subset each
+/// step, so one most-recent-forward slot missed on every step. Instead a
+/// small ring of recent compositions is kept, with a per-sequence
+/// `latest`-generation map deciding both exact hits (every sequence's
+/// latest KV lives in the matched entry) and row-level assembly sources
+/// (copy each sequence's rows from whichever entry — or host slab — holds
+/// its latest KV, with no whole-batch flush on a composition change).
+/// Repeated compositions (the steady-state ragged schedule, prefill
+/// chunk streams) hit; correctness never depends on hitting — stale rows
+/// beyond a sequence's `len` are masked, and rows of sequences advanced
+/// elsewhere are never current by the generation rule.
+#[derive(Default)]
+struct ModelKvCaches {
+    entries: Vec<KvBatchCache>,
+    /// seq → generation of the entry holding its latest KV; absent means
+    /// the host slab is current.
+    latest: HashMap<SeqId, u64>,
+    next_gen: u64,
+}
+
+/// Composition cache capacity per model: the full batch plus the distinct
+/// shrinking subsets of a steady ragged round schedule.
+const KV_CACHE_ENTRIES: usize = 4;
 
 /// Output of one raw model forward.
 struct ForwardOut {
@@ -93,7 +121,7 @@ pub struct HloBackend {
     target_params: Vec<xla::PjRtBuffer>,
     draft_params: Vec<xla::PjRtBuffer>,
     seqs: HashMap<SeqId, SeqState>,
-    kv_cache: HashMap<String, KvBatchCache>,
+    kv_cache: HashMap<String, ModelKvCaches>,
     rng: Rng,
 }
 
@@ -157,7 +185,7 @@ impl HloBackend {
             draft: ModelSeqState::new(&m.draft),
         });
         let out = self.forward_model("target", &[u64::MAX], &[tokens], 2)?;
-        self.seqs.remove(&u64::MAX);
+        self.release(u64::MAX);
         let row1 = &out.logits[0][1];
         for (i, &want) in m.numerics_logits_row1.iter().enumerate() {
             let got = row1[i] as f64;
@@ -175,17 +203,21 @@ impl HloBackend {
         Ok(())
     }
 
-    /// Read a model's cached device KV back into the per-sequence host
-    /// slabs (sequences that no longer exist are skipped) and drop the
-    /// cache entry.
-    fn flush_kv_cache(&mut self, model: &str) -> anyhow::Result<()> {
-        let Some(cache) = self.kv_cache.remove(model) else {
-            return Ok(());
-        };
+    /// Evict one cached entry: rows still holding a sequence's latest KV
+    /// flush to the per-sequence host slabs (released sequences are
+    /// skipped), then the entry is dropped.
+    fn evict_kv_entry(&mut self, model: &str, entry_idx: usize) {
         let dims = self.dims(model);
         let slab = dims.kv_slab_elems();
-        let (k_host, v_host) = (cache.k, cache.v);
-        for (i, id) in cache.seq_ids.iter().enumerate() {
+        let Some(caches) = self.kv_cache.get_mut(model) else {
+            return;
+        };
+        let old = caches.entries.remove(entry_idx);
+        for (i, id) in old.seq_ids.iter().enumerate() {
+            if caches.latest.get(id) != Some(&old.gen) {
+                continue; // a newer forward owns this sequence's KV
+            }
+            caches.latest.remove(id);
             let Some(st) = self.seqs.get_mut(id) else { continue };
             let ms = if model == "target" {
                 &mut st.target
@@ -193,12 +225,11 @@ impl HloBackend {
                 &mut st.draft
             };
             for l in 0..dims.layers {
-                let off = (l * cache.bucket + i) * slab;
-                ms.k[l].copy_from_slice(&k_host[off..off + slab]);
-                ms.v[l].copy_from_slice(&v_host[off..off + slab]);
+                let off = (l * old.bucket + i) * slab;
+                ms.k[l].copy_from_slice(&old.k[off..off + slab]);
+                ms.v[l].copy_from_slice(&old.v[off..off + slab]);
             }
         }
-        Ok(())
     }
 
     fn dims(&self, model: &str) -> ModelDims {
@@ -224,18 +255,6 @@ impl HloBackend {
         anyhow::ensure!(n > 0 && tokens.len() == n);
         let bucket = self.engine.manifest().bucket_for(n)?;
         let slab = dims.kv_slab_elems();
-
-        // Device-KV fast path: if the previous forward of this model had
-        // the same (bucket, sequence composition), its output KV buffers
-        // are bit-identical to what we would assemble from the host slabs
-        // (rollback only shrinks `len`; stale positions are masked).
-        let cache_hit = self
-            .kv_cache
-            .get(model)
-            .map_or(false, |c| c.bucket == bucket && c.seq_ids == seq_ids);
-        if !cache_hit {
-            self.flush_kv_cache(model)?;
-        }
 
         // Assemble batch inputs.
         let mut tok_data = vec![0i32; bucket * s];
@@ -269,24 +288,64 @@ impl HloBackend {
         };
         let tok_buf = to_buf_i32(&tok_data, &[bucket, s])?;
         let lens_buf = to_buf_i32(&lens_data, &[bucket])?;
-        // Upload KV: from the whole-batch cache on a hit (no per-seq
-        // gather), otherwise assembled from the per-seq slabs.
-        let (k_buf, v_buf) = if cache_hit {
-            let cache = self.kv_cache.get(model).unwrap();
-            (to_buf_f32(&cache.k, &kv_dims)?, to_buf_f32(&cache.v, &kv_dims)?)
-        } else {
-            let mut k_data = vec![0f32; dims.layers * bucket * slab];
-            let mut v_data = vec![0f32; dims.layers * bucket * slab];
-            for (i, &id) in seq_ids.iter().enumerate() {
-                let st = self.seqs.get(&id).unwrap();
-                let ms = if model == "target" { &st.target } else { &st.draft };
-                for l in 0..dims.layers {
-                    let off = (l * bucket + i) * slab;
-                    k_data[off..off + slab].copy_from_slice(&ms.k[l]);
-                    v_data[off..off + slab].copy_from_slice(&ms.v[l]);
-                }
+        // Upload KV. Composition-keyed fast path: if some cached entry
+        // has this exact (bucket, composition) AND still holds every
+        // sequence's latest KV, its buffers upload verbatim (rollback
+        // only shrinks `len`; stale positions are masked). Otherwise the
+        // batch assembles row-by-row from wherever each sequence's latest
+        // KV lives — a cached entry's row or the host slab — with no
+        // whole-batch flush on the way.
+        let caches = self.kv_cache.entry(model.to_string()).or_default();
+        let exact = caches.entries.iter().position(|e| {
+            e.bucket == bucket
+                && e.seq_ids == seq_ids
+                && seq_ids
+                    .iter()
+                    .all(|id| caches.latest.get(id) == Some(&e.gen))
+        });
+        let (k_buf, v_buf) = match exact {
+            Some(idx) => {
+                let e = &caches.entries[idx];
+                (to_buf_f32(&e.k, &kv_dims)?, to_buf_f32(&e.v, &kv_dims)?)
             }
-            (to_buf_f32(&k_data, &kv_dims)?, to_buf_f32(&v_data, &kv_dims)?)
+            None => {
+                let mut k_data = vec![0f32; dims.layers * bucket * slab];
+                let mut v_data = vec![0f32; dims.layers * bucket * slab];
+                for (i, &id) in seq_ids.iter().enumerate() {
+                    let cached = caches.latest.get(&id).and_then(|gen| {
+                        caches.entries.iter().find(|e| e.gen == *gen).map(|e| {
+                            let row = e
+                                .seq_ids
+                                .iter()
+                                .position(|&s| s == id)
+                                .expect("latest entry contains its sequence");
+                            (e, row)
+                        })
+                    });
+                    match cached {
+                        Some((e, row)) => {
+                            for l in 0..dims.layers {
+                                let src = (l * e.bucket + row) * slab;
+                                let dst = (l * bucket + i) * slab;
+                                k_data[dst..dst + slab]
+                                    .copy_from_slice(&e.k[src..src + slab]);
+                                v_data[dst..dst + slab]
+                                    .copy_from_slice(&e.v[src..src + slab]);
+                            }
+                        }
+                        None => {
+                            let st = self.seqs.get(&id).unwrap();
+                            let ms = if model == "target" { &st.target } else { &st.draft };
+                            for l in 0..dims.layers {
+                                let off = (l * bucket + i) * slab;
+                                k_data[off..off + slab].copy_from_slice(&ms.k[l]);
+                                v_data[off..off + slab].copy_from_slice(&ms.v[l]);
+                            }
+                        }
+                    }
+                }
+                (to_buf_f32(&k_data, &kv_dims)?, to_buf_f32(&v_data, &kv_dims)?)
+            }
         };
 
         let params = if model == "target" {
@@ -312,22 +371,31 @@ impl HloBackend {
             .map_err(|e| anyhow::anyhow!("tuple3: {e:?}"))?;
 
         // Keep the whole-batch KV for the next same-composition call; the
-        // per-seq slabs are refreshed lazily by flush_kv_cache.
+        // per-seq slabs are refreshed lazily on entry eviction.
         let new_k: Vec<f32> = new_k
             .to_vec()
             .map_err(|e| anyhow::anyhow!("kv readback: {e:?}"))?;
         let new_v: Vec<f32> = new_v
             .to_vec()
             .map_err(|e| anyhow::anyhow!("kv readback: {e:?}"))?;
-        self.kv_cache.insert(
-            model.to_string(),
-            KvBatchCache {
+        {
+            let caches = self.kv_cache.get_mut(model).expect("entry created above");
+            let gen = caches.next_gen;
+            caches.next_gen += 1;
+            for &id in seq_ids {
+                caches.latest.insert(id, gen);
+            }
+            caches.entries.push(KvBatchCache {
                 seq_ids: seq_ids.to_vec(),
                 bucket,
                 k: new_k,
                 v: new_v,
-            },
-        );
+                gen,
+            });
+        }
+        while self.kv_cache[model].entries.len() > KV_CACHE_ENTRIES {
+            self.evict_kv_entry(model, 0);
+        }
         for (i, &id) in seq_ids.iter().enumerate() {
             let st = self.seqs.get_mut(&id).unwrap();
             let ms = if model == "target" {
@@ -559,6 +627,12 @@ impl SdBackend for HloBackend {
 
     fn release(&mut self, seq: SeqId) {
         self.seqs.remove(&seq);
+        // Orphan the sequence's cached rows: with no `latest` pointer the
+        // composition cache can neither exact-hit nor source them, so a
+        // later sequence reusing this id starts from its fresh slabs.
+        for caches in self.kv_cache.values_mut() {
+            caches.latest.remove(&seq);
+        }
     }
 
     fn reject_cost(&self, _gammas: &[usize]) -> f64 {

@@ -3,9 +3,27 @@
 //! capacity with a per-sequence growth reservation, and (c) an optional
 //! TPOT-derived batch cap (the §3.4 latency-SLO scenario where "large
 //! batch sizes are often not feasible").
+//!
+//! Admission is a pluggable [`AdmissionPolicy`]:
+//!
+//! - [`FifoAdmission`] — the original stateless FIFO loop, kept
+//!   **bit-compatible** with the pre-multi-tenant scheduler (the default;
+//!   property-tested against [`ClassAwareAdmission`] with one class in
+//!   `rust/tests/prop_scheduler.rs`).
+//! - [`ClassAwareAdmission`] — multi-tenant SLO-class admission: per-class
+//!   logical FIFO queues over the shared arrival-ordered
+//!   [`RequestQueue`], strict priority tiers with starvation aging,
+//!   deficit-weighted fairness within a tier, per-class running ceilings,
+//!   and (optionally) **mix-aware** admission that consults a
+//!   [`RegimeOracle`] — the control plane's measured-cost-anchored Eq. 4
+//!   pricing — to keep the running batch inside the speculative regime:
+//!   candidates are chosen to balance easy/hard α mixes (the PR-4 ragged
+//!   sweep's "admit mixes deliberately" finding) and admission pauses
+//!   when the priced post-admission speedup would fall below the floor.
 
-use crate::batching::{Request, RequestQueue};
+use crate::batching::{ClassId, Request, RequestQueue};
 use crate::kvcache::KvManager;
+use crate::workload::TenantClass;
 
 /// Scheduler policy knobs.
 #[derive(Debug, Clone)]
@@ -31,15 +49,489 @@ impl Default for SchedulerConfig {
     }
 }
 
-/// The admission scheduler (stateless policy over queue + cache state).
+/// Plain-data admission policy selection, so
+/// [`crate::engine::EngineConfig`] stays `Clone + Debug + Send`.
+#[derive(Debug, Clone, Default)]
+pub enum AdmissionPolicyConfig {
+    /// The pre-multi-tenant FIFO loop (bit-compatible baseline).
+    #[default]
+    Fifo,
+    /// Multi-tenant SLO-class admission.
+    ClassAware(ClassAwareConfig),
+}
+
+/// Knobs of [`ClassAwareAdmission`].
 #[derive(Debug, Clone)]
+pub struct ClassAwareConfig {
+    /// Starvation aging: every `aging_tau` seconds a queued request waits
+    /// promotes it by one priority tier, so low-priority classes are
+    /// delayed by bursts, never starved (`f64::INFINITY` disables).
+    pub aging_tau: f64,
+    /// Mix-aware regime test: with `Some(floor)` and a [`RegimeOracle`]
+    /// in the [`AdmissionContext`], candidates are picked to maximize the
+    /// priced post-admission speedup and admission pauses once even the
+    /// best choice would drop it below `floor`. `None` = α-blind.
+    pub mix_speedup_floor: Option<f64>,
+    /// SLO guard on the mix hold-back: a class head that has waited
+    /// longer than this (seconds) is admitted regardless of the regime
+    /// test — latency promises outrank throughput shaping.
+    pub mix_hold_max: f64,
+    /// The regime test never holds the running batch below this size
+    /// (an idle engine must always start serving).
+    pub min_batch: usize,
+}
+
+impl Default for ClassAwareConfig {
+    fn default() -> Self {
+        ClassAwareConfig {
+            aging_tau: 30.0,
+            mix_speedup_floor: None,
+            mix_hold_max: 10.0,
+            min_batch: 1,
+        }
+    }
+}
+
+impl ClassAwareConfig {
+    /// Mix-aware variant: regime-test admissions at the given speedup
+    /// floor (1.0 = pause admission once speculation stops paying).
+    pub fn mix_aware(floor: f64) -> ClassAwareConfig {
+        ClassAwareConfig {
+            mix_speedup_floor: Some(floor),
+            ..ClassAwareConfig::default()
+        }
+    }
+}
+
+/// What the admission policy may ask the control plane: the priced
+/// speculative-regime test (measured cost table re-anchoring the Eq. 4
+/// model — see `SpecController::predicted_speedup`). Implemented by
+/// [`crate::control::SpecController`]; a trait here so the scheduler
+/// layer stays consumable without the control plane.
+pub trait RegimeOracle {
+    /// Predicted best-γ speedup versus AR at `batch` with acceptance mix
+    /// `alpha` (`None` = caller has no estimate; the oracle falls back to
+    /// its own α̂/prior). 1.0 means speculation is not profitable.
+    fn predicted_speedup(&self, batch: usize, alpha: Option<f64>) -> f64;
+}
+
+/// One running sequence, as admission sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct RunningInfo {
+    pub class: ClassId,
+    /// Windowed per-sequence α̂ᵢ from the control plane, when tracked.
+    pub alpha: Option<f64>,
+}
+
+/// Everything an [`AdmissionPolicy`] may consult, borrowed from the
+/// engine for the duration of one admission call.
+pub struct AdmissionContext<'a> {
+    pub kv: &'a KvManager,
+    /// The running batch (class + per-sequence α̂ᵢ where known).
+    pub running: &'a [RunningInfo],
+    /// Global batch ceiling for this round (already SLO/controller
+    /// derived; policies must also respect `config.max_batch`).
+    pub ceiling: usize,
+    /// Engine clock; requests with `arrival > now` are not admissible.
+    pub now: f64,
+    /// Tenant table (`ClassId` indexes it; empty = classless deployment,
+    /// every class treated as neutral defaults).
+    pub tenants: &'a [TenantClass],
+    /// Per-class batch ceilings (same indexing), when the control plane
+    /// priced them from per-class TPOT SLOs.
+    pub class_ceilings: Option<&'a [usize]>,
+    /// The control plane's priced regime test (mix-aware admission).
+    pub oracle: Option<&'a dyn RegimeOracle>,
+}
+
+impl<'a> AdmissionContext<'a> {
+    /// A minimal context for classless callers (compat path).
+    pub fn simple(
+        kv: &'a KvManager,
+        running: &'a [RunningInfo],
+        ceiling: usize,
+        now: f64,
+    ) -> AdmissionContext<'a> {
+        AdmissionContext {
+            kv,
+            running,
+            ceiling,
+            now,
+            tenants: &[],
+            class_ceilings: None,
+            oracle: None,
+        }
+    }
+}
+
+/// An admission policy: pulls admissible requests off the shared queue.
+pub trait AdmissionPolicy: Send {
+    fn name(&self) -> &'static str;
+    /// Select and remove requests to admit this round. Must respect the
+    /// context's ceiling, `config.max_batch`, and KV capacity with the
+    /// configured reservation.
+    fn admit(
+        &mut self,
+        config: &SchedulerConfig,
+        queue: &mut RequestQueue,
+        ctx: &AdmissionContext,
+    ) -> Vec<Request>;
+}
+
+/// The original FIFO loop, verbatim: admission stops at the first request
+/// that doesn't fit (no head-of-line bypass — keeps latency fairness,
+/// same default as vLLM). Requests with `arrival > now` are not admitted
+/// (the queue is arrival-sorted).
+#[derive(Debug, Default, Clone)]
+pub struct FifoAdmission;
+
+impl AdmissionPolicy for FifoAdmission {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn admit(
+        &mut self,
+        config: &SchedulerConfig,
+        queue: &mut RequestQueue,
+        ctx: &AdmissionContext,
+    ) -> Vec<Request> {
+        let mut admitted = Vec::new();
+        let mut virtual_free = ctx.kv.free_blocks();
+        let bs = ctx.kv.config().block_size;
+        while ctx.running.len() + admitted.len() < ctx.ceiling.min(config.max_batch) {
+            let Some(head) = queue.peek() else { break };
+            if head.arrival > ctx.now {
+                break;
+            }
+            let need_tokens = head.prompt.len() + config.admit_reserve_tokens;
+            let need_blocks = need_tokens.div_ceil(bs);
+            if need_blocks > virtual_free {
+                break;
+            }
+            virtual_free -= need_blocks;
+            admitted.push(queue.pop().unwrap());
+        }
+        admitted
+    }
+}
+
+/// Neutral per-class attributes for classes beyond the tenant table
+/// (classless deployments, or requests tagged with an unknown class).
+fn class_attr(tenants: &[TenantClass], c: ClassId) -> (u32, f64, Option<usize>, Option<f64>) {
+    match tenants.get(c) {
+        Some(t) => (t.priority, t.weight.max(1e-12), t.max_running, t.alpha_hint),
+        None => (1, 1.0, None, None),
+    }
+}
+
+/// Multi-tenant SLO-class admission (see the module docs for the full
+/// decision order). Holds the per-class deficit credits across calls so
+/// weighted fairness is a long-run property, not a per-round one.
+#[derive(Debug)]
+pub struct ClassAwareAdmission {
+    cfg: ClassAwareConfig,
+    /// Deficit credits per class: admitting from class `c` costs
+    /// `1/weight(c)`, and the most-credited class wins within a priority
+    /// tier, so long-run admission shares are proportional to weights.
+    credits: Vec<f64>,
+}
+
+impl ClassAwareAdmission {
+    pub fn new(cfg: ClassAwareConfig) -> ClassAwareAdmission {
+        ClassAwareAdmission {
+            cfg,
+            credits: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &ClassAwareConfig {
+        &self.cfg
+    }
+}
+
+impl AdmissionPolicy for ClassAwareAdmission {
+    fn name(&self) -> &'static str {
+        if self.cfg.mix_speedup_floor.is_some() {
+            "class-aware+mix"
+        } else {
+            "class-aware"
+        }
+    }
+
+    fn admit(
+        &mut self,
+        config: &SchedulerConfig,
+        queue: &mut RequestQueue,
+        ctx: &AdmissionContext,
+    ) -> Vec<Request> {
+        let ceiling = ctx.ceiling.min(config.max_batch);
+        if ctx.running.len() >= ceiling {
+            return Vec::new();
+        }
+        let bs = ctx.kv.config().block_size;
+        let mut virtual_free = ctx.kv.free_blocks();
+
+        // Per-class logical queues: candidate positions in arrival order.
+        // The physical queue is arrival-sorted, so scanning until the
+        // first future arrival preserves FIFO order within every class.
+        let mut n_classes = ctx.tenants.len().max(1);
+        for r in ctx.running {
+            n_classes = n_classes.max(r.class + 1);
+        }
+        // Each candidate is snapshotted as (queue index, arrival,
+        // prompt_len) so every later head lookup is O(1) — the admission
+        // loop would otherwise re-walk the deque per eligibility check,
+        // which is quadratic exactly at overload.
+        let mut cands: Vec<Vec<(usize, f64, usize)>> = Vec::new();
+        for (idx, req) in queue.iter().enumerate() {
+            if req.arrival > ctx.now {
+                break;
+            }
+            n_classes = n_classes.max(req.class + 1);
+            if cands.len() < n_classes {
+                cands.resize_with(n_classes, Vec::new);
+            }
+            cands[req.class].push((idx, req.arrival, req.prompt.len()));
+        }
+        if cands.iter().all(Vec::is_empty) {
+            return Vec::new();
+        }
+        cands.resize_with(n_classes, Vec::new);
+        if self.credits.len() < n_classes {
+            self.credits.resize(n_classes, 0.0);
+        }
+
+        let mut running_per_class = vec![0usize; n_classes];
+        for r in ctx.running {
+            running_per_class[r.class] += 1;
+        }
+        // Mix estimate of the running batch: per-sequence α̂ᵢ where the
+        // control plane has one, the class α hint otherwise.
+        let mut alpha_sum = 0.0f64;
+        let mut alpha_n = 0usize;
+        for r in ctx.running {
+            let hint = class_attr(ctx.tenants, r.class).3;
+            if let Some(a) = r.alpha.or(hint) {
+                alpha_sum += a;
+                alpha_n += 1;
+            }
+        }
+
+        let mut cursor = vec![0usize; n_classes];
+        let mut picked_per_class = vec![0usize; n_classes];
+        let mut blocked = vec![false; n_classes]; // KV-blocked: no intra-class bypass
+        let mut picked: Vec<usize> = Vec::new(); // queue indices, pick order
+
+        loop {
+            if ctx.running.len() + picked.len() >= ceiling {
+                break;
+            }
+            // Eligible classes this iteration.
+            let mut eligible: Vec<ClassId> = Vec::new();
+            for c in 0..n_classes {
+                if blocked[c] || cursor[c] >= cands[c].len() {
+                    continue;
+                }
+                let (_, _, max_running, _) = class_attr(ctx.tenants, c);
+                let cap = max_running.unwrap_or(usize::MAX).min(
+                    ctx.class_ceilings
+                        .and_then(|cc| cc.get(c).copied())
+                        .unwrap_or(usize::MAX),
+                );
+                if running_per_class[c] + picked_per_class[c] >= cap {
+                    continue;
+                }
+                eligible.push(c);
+            }
+            if eligible.is_empty() {
+                break;
+            }
+
+            // Effective priority: the class tier plus one tier per
+            // `aging_tau` seconds its head has waited (bounded starvation).
+            let head = |c: ClassId| cands[c][cursor[c]];
+            let eff_prio = |c: ClassId| -> u64 {
+                let (prio, _, _, _) = class_attr(ctx.tenants, c);
+                let wait = (ctx.now - head(c).1).max(0.0);
+                let boost = if self.cfg.aging_tau.is_finite() && self.cfg.aging_tau > 0.0 {
+                    (wait / self.cfg.aging_tau) as u64
+                } else {
+                    0
+                };
+                prio as u64 + boost
+            };
+            let top = eligible.iter().map(|&c| eff_prio(c)).max().unwrap();
+            let mut tier: Vec<ClassId> = eligible
+                .iter()
+                .copied()
+                .filter(|&c| eff_prio(c) == top)
+                .collect();
+            // Deficit-weighted fairness within the tier: most credits
+            // first; ties go to the earliest head arrival, then class id.
+            tier.sort_by(|&a, &b| {
+                self.credits[b]
+                    .partial_cmp(&self.credits[a])
+                    .unwrap()
+                    .then(head(a).1.partial_cmp(&head(b).1).unwrap())
+                    .then(a.cmp(&b))
+            });
+            let mut chosen = tier[0];
+
+            // Mix-aware regime test: pick the tier candidate whose class
+            // α hint keeps the priced post-admission speedup highest, and
+            // pause admission once even the best falls below the floor.
+            // The pause (not the candidate choice) is overridden when the
+            // oldest tier head has waited past `mix_hold_max` — latency
+            // promises outrank throughput shaping; class starvation by
+            // the *selection* is bounded separately by priority aging,
+            // which lifts old heads into their own tier above this one.
+            if let (Some(floor), Some(oracle)) = (self.cfg.mix_speedup_floor, ctx.oracle) {
+                let batch_after = ctx.running.len() + picked.len() + 1;
+                if batch_after > self.cfg.min_batch {
+                    let mix_with = |hint: Option<f64>| -> Option<f64> {
+                        match hint {
+                            Some(a) if alpha_n > 0 => {
+                                Some((alpha_sum + a) / (alpha_n + 1) as f64)
+                            }
+                            Some(a) => Some(a),
+                            None if alpha_n > 0 => Some(alpha_sum / alpha_n as f64),
+                            None => None,
+                        }
+                    };
+                    let mut best = f64::MIN;
+                    let mut best_c = chosen;
+                    for &c in &tier {
+                        let hint = class_attr(ctx.tenants, c).3;
+                        let s = oracle.predicted_speedup(batch_after, mix_with(hint));
+                        if s > best {
+                            best = s;
+                            best_c = c;
+                        }
+                    }
+                    if best < floor {
+                        // Before pausing, look past the top tier: an
+                        // eligible lower-tier candidate that keeps the
+                        // batch in the band weakly dominates a pause —
+                        // the top-tier heads are served in neither case,
+                        // and aging/hold still bound their wait.
+                        let mut alt_best = f64::MIN;
+                        let mut alt_c = None;
+                        for &c in &eligible {
+                            if tier.contains(&c) {
+                                continue;
+                            }
+                            let hint = class_attr(ctx.tenants, c).3;
+                            let s = oracle.predicted_speedup(batch_after, mix_with(hint));
+                            if s > alt_best {
+                                alt_best = s;
+                                alt_c = Some(c);
+                            }
+                        }
+                        if let (Some(c), true) = (alt_c, alt_best >= floor) {
+                            chosen = c;
+                        } else {
+                            let (oldest_c, oldest_wait) = tier
+                                .iter()
+                                .map(|&c| (c, ctx.now - head(c).1))
+                                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                                .unwrap();
+                            if oldest_wait <= self.cfg.mix_hold_max {
+                                break; // hold the batch inside the speculative regime
+                            }
+                            chosen = oldest_c; // forced through: serve the oldest
+                        }
+                    } else {
+                        chosen = best_c;
+                    }
+                }
+            }
+
+            // KV capacity with the growth reservation; a non-fitting head
+            // blocks its class (no intra-class bypass) but not others.
+            let (queue_idx, _, prompt_len) = head(chosen);
+            let need_tokens = prompt_len + config.admit_reserve_tokens;
+            let need_blocks = need_tokens.div_ceil(bs);
+            if need_blocks > virtual_free {
+                blocked[chosen] = true;
+                continue;
+            }
+            virtual_free -= need_blocks;
+            let (_, weight, _, hint) = class_attr(ctx.tenants, chosen);
+            if let Some(a) = hint {
+                alpha_sum += a;
+                alpha_n += 1;
+            }
+            picked.push(queue_idx);
+            cursor[chosen] += 1;
+            picked_per_class[chosen] += 1;
+            self.credits[chosen] -= 1.0 / weight;
+        }
+
+        if picked.is_empty() {
+            return Vec::new();
+        }
+        // Keep credits bounded (DWRR-style deficit cap): pin the max at
+        // zero AND floor the deficit, so an idle class can bank at most
+        // `CREDIT_BANK_CAP` admissions of advantage over a busy one
+        // across quiet stretches — past imbalance is forgiven, not
+        // compounded. (Within one admit call credits run unclamped, so
+        // single-burst weighted shares still track weights exactly.)
+        const CREDIT_BANK_CAP: f64 = 16.0;
+        let max_credit = self.credits.iter().cloned().fold(f64::MIN, f64::max);
+        if max_credit.is_finite() {
+            for c in self.credits.iter_mut() {
+                *c = (*c - max_credit).max(-CREDIT_BANK_CAP);
+            }
+        }
+        // Remove the picked queue positions (descending index so earlier
+        // removals don't shift later ones), then restore pick order.
+        let mut order: Vec<(usize, usize)> =
+            picked.iter().copied().enumerate().map(|(k, idx)| (idx, k)).collect();
+        order.sort_by(|a, b| b.0.cmp(&a.0));
+        let mut admitted_by_rank: Vec<(usize, Request)> = order
+            .into_iter()
+            .map(|(idx, k)| (k, queue.remove_at(idx).expect("picked index valid")))
+            .collect();
+        admitted_by_rank.sort_by_key(|(k, _)| *k);
+        admitted_by_rank.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+/// The admission scheduler: config plus the pluggable policy.
 pub struct Scheduler {
     pub config: SchedulerConfig,
+    policy: Box<dyn AdmissionPolicy>,
+}
+
+impl std::fmt::Debug for Scheduler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Scheduler")
+            .field("config", &self.config)
+            .field("policy", &self.policy.name())
+            .finish()
+    }
 }
 
 impl Scheduler {
+    /// FIFO scheduler (the pre-multi-tenant default).
     pub fn new(config: SchedulerConfig) -> Scheduler {
-        Scheduler { config }
+        Scheduler::with_policy(config, &AdmissionPolicyConfig::Fifo)
+    }
+
+    /// Scheduler with an explicit admission policy.
+    pub fn with_policy(config: SchedulerConfig, policy: &AdmissionPolicyConfig) -> Scheduler {
+        let policy: Box<dyn AdmissionPolicy> = match policy {
+            AdmissionPolicyConfig::Fifo => Box::new(FifoAdmission),
+            AdmissionPolicyConfig::ClassAware(cfg) => {
+                Box::new(ClassAwareAdmission::new(cfg.clone()))
+            }
+        };
+        Scheduler { config, policy }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
     }
 
     /// Effective batch ceiling given the SLO estimator: `est_tpot(b)`
@@ -56,14 +548,25 @@ impl Scheduler {
     ///   infeasible SLO is an operator error we make progress under, not
     ///   a reason to stop serving.
     pub fn batch_ceiling<F: Fn(usize) -> f64>(&self, est_tpot: F) -> usize {
-        if self.config.max_batch == 0 {
+        Self::ceiling_for(&self.config, self.config.tpot_slo, est_tpot)
+    }
+
+    /// The same ceiling search for an arbitrary (e.g. per-tenant-class)
+    /// TPOT SLO — per-class ceilings share one contract with the global
+    /// one instead of re-deriving it.
+    pub fn ceiling_for<F: Fn(usize) -> f64>(
+        config: &SchedulerConfig,
+        tpot_slo: Option<f64>,
+        est_tpot: F,
+    ) -> usize {
+        if config.max_batch == 0 {
             return 0;
         }
-        match self.config.tpot_slo {
-            None => self.config.max_batch,
+        match tpot_slo {
+            None => config.max_batch,
             Some(slo) => {
                 let mut best = 1;
-                for b in 1..=self.config.max_batch {
+                for b in 1..=config.max_batch {
                     if est_tpot(b) <= slo {
                         best = b;
                     }
@@ -73,35 +576,31 @@ impl Scheduler {
         }
     }
 
-    /// Pull admissible requests off the queue. FIFO order; stops at the
-    /// first request that doesn't fit (no head-of-line bypass — keeps
-    /// latency fairness, same default as vLLM). Requests with
-    /// `arrival > now` are not admitted (the queue is arrival-sorted).
+    /// Pull admissible requests off the queue (compat entry point: a
+    /// classless context; `running` is the running-batch size). FIFO
+    /// callers lose nothing — the FIFO policy only reads the count.
     pub fn admit(
-        &self,
+        &mut self,
         queue: &mut RequestQueue,
         kv: &KvManager,
         running: usize,
         ceiling: usize,
         now: f64,
     ) -> Vec<Request> {
-        let mut admitted = Vec::new();
-        let mut virtual_free = kv.free_blocks();
-        let bs = kv.config().block_size;
-        while running + admitted.len() < ceiling.min(self.config.max_batch) {
-            let Some(head) = queue.peek() else { break };
-            if head.arrival > now {
-                break;
-            }
-            let need_tokens = head.prompt.len() + self.config.admit_reserve_tokens;
-            let need_blocks = need_tokens.div_ceil(bs);
-            if need_blocks > virtual_free {
-                break;
-            }
-            virtual_free -= need_blocks;
-            admitted.push(queue.pop().unwrap());
-        }
-        admitted
+        let infos = vec![
+            RunningInfo {
+                class: crate::batching::DEFAULT_CLASS,
+                alpha: None,
+            };
+            running
+        ];
+        let ctx = AdmissionContext::simple(kv, &infos, ceiling, now);
+        self.admit_with(queue, &ctx)
+    }
+
+    /// Policy-dispatched admission with the full context.
+    pub fn admit_with(&mut self, queue: &mut RequestQueue, ctx: &AdmissionContext) -> Vec<Request> {
+        self.policy.admit(&self.config, queue, ctx)
     }
 }
 
@@ -117,6 +616,14 @@ mod tests {
             prompt: vec![1; prompt_len],
             params: SamplingParams::default(),
             arrival: 0.0,
+            class: 0,
+        }
+    }
+
+    fn creq(id: u64, prompt_len: usize, class: usize, arrival: f64) -> Request {
+        Request {
+            arrival,
+            ..req(id, prompt_len).with_class(class)
         }
     }
 
@@ -127,13 +634,17 @@ mod tests {
         })
     }
 
+    fn sched(max_batch: usize, reserve: usize, slo: Option<f64>) -> Scheduler {
+        Scheduler::new(SchedulerConfig {
+            max_batch,
+            admit_reserve_tokens: reserve,
+            tpot_slo: slo,
+        })
+    }
+
     #[test]
     fn admits_up_to_batch_ceiling() {
-        let s = Scheduler::new(SchedulerConfig {
-            max_batch: 2,
-            admit_reserve_tokens: 0,
-            tpot_slo: None,
-        });
+        let mut s = sched(2, 0, None);
         let mut q = RequestQueue::new();
         for i in 0..5 {
             q.push(req(i, 8));
@@ -145,11 +656,7 @@ mod tests {
 
     #[test]
     fn respects_kv_capacity_with_reservation() {
-        let s = Scheduler::new(SchedulerConfig {
-            max_batch: 64,
-            admit_reserve_tokens: 16,
-            tpot_slo: None,
-        });
+        let mut s = sched(64, 16, None);
         let mut q = RequestQueue::new();
         // Each request: 16-token prompt + 16 reserve = 2 blocks; 3 blocks
         // total → only one admission.
@@ -162,11 +669,7 @@ mod tests {
 
     #[test]
     fn fifo_no_bypass() {
-        let s = Scheduler::new(SchedulerConfig {
-            max_batch: 8,
-            admit_reserve_tokens: 0,
-            tpot_slo: None,
-        });
+        let mut s = sched(8, 0, None);
         let mut q = RequestQueue::new();
         q.push(req(1, 1000)); // cannot fit in 4 blocks of 16
         q.push(req(2, 4)); // would fit, but must not bypass
@@ -177,27 +680,25 @@ mod tests {
 
     #[test]
     fn slo_caps_batch() {
-        let s = Scheduler::new(SchedulerConfig {
-            max_batch: 64,
-            admit_reserve_tokens: 0,
-            tpot_slo: Some(0.05),
-        });
+        let s = sched(64, 0, Some(0.05));
         // TPOT grows linearly: 0.01·b seconds/token → ceiling 5.
         let ceil = s.batch_ceiling(|b| 0.01 * b as f64);
         assert_eq!(ceil, 5);
         // No SLO → max batch.
         let s2 = Scheduler::new(SchedulerConfig::default());
         assert_eq!(s2.batch_ceiling(|_| 1.0), 64);
+        // ceiling_for with an override SLO matches a scheduler built with
+        // that SLO (per-class ceilings share the contract).
+        assert_eq!(
+            Scheduler::ceiling_for(&s.config, Some(0.02), |b| 0.01 * b as f64),
+            2
+        );
     }
 
     #[test]
     fn batch_ceiling_max_batch_zero_pauses_admissions() {
         for slo in [None, Some(0.05)] {
-            let s = Scheduler::new(SchedulerConfig {
-                max_batch: 0,
-                admit_reserve_tokens: 0,
-                tpot_slo: slo,
-            });
+            let mut s = sched(0, 0, slo);
             assert_eq!(s.batch_ceiling(|_| 0.0), 0, "slo={slo:?}");
             // And admit() honors the zero ceiling.
             let mut q = RequestQueue::new();
@@ -208,11 +709,7 @@ mod tests {
 
     #[test]
     fn batch_ceiling_max_batch_one() {
-        let s = Scheduler::new(SchedulerConfig {
-            max_batch: 1,
-            admit_reserve_tokens: 0,
-            tpot_slo: Some(0.05),
-        });
+        let s = sched(1, 0, Some(0.05));
         // b=1 meets the SLO → ceiling 1; and that is also the maximum.
         assert_eq!(s.batch_ceiling(|b| 0.01 * b as f64), 1);
         // b=1 misses the SLO → still 1 (degraded-SLO floor, documented).
@@ -221,26 +718,341 @@ mod tests {
 
     #[test]
     fn infeasible_slo_degrades_to_batch_one_not_zero() {
-        let s = Scheduler::new(SchedulerConfig {
-            max_batch: 64,
-            admit_reserve_tokens: 0,
-            tpot_slo: Some(1e-9), // no hardware meets this
-        });
+        let s = sched(64, 0, Some(1e-9)); // no hardware meets this
         assert_eq!(s.batch_ceiling(|b| 0.01 * b as f64), 1);
     }
 
     #[test]
     fn running_counts_against_ceiling() {
-        let s = Scheduler::new(SchedulerConfig {
-            max_batch: 4,
-            admit_reserve_tokens: 0,
-            tpot_slo: None,
-        });
+        let mut s = sched(4, 0, None);
         let mut q = RequestQueue::new();
         for i in 0..4 {
             q.push(req(i, 4));
         }
         let admitted = s.admit(&mut q, &kv(100), 3, usize::MAX, 0.0);
         assert_eq!(admitted.len(), 1);
+    }
+
+    // --- class-aware admission ---------------------------------------------
+
+    use crate::workload::TenantClass;
+
+    fn two_tenants() -> Vec<TenantClass> {
+        let mut hi = TenantClass::new("hi");
+        hi.priority = 2;
+        let mut lo = TenantClass::new("lo");
+        lo.priority = 1;
+        lo.weight = 1.0;
+        vec![hi, lo]
+    }
+
+    fn class_sched(cfg: ClassAwareConfig) -> Scheduler {
+        Scheduler::with_policy(
+            SchedulerConfig {
+                max_batch: 64,
+                admit_reserve_tokens: 0,
+                tpot_slo: None,
+            },
+            &AdmissionPolicyConfig::ClassAware(cfg),
+        )
+    }
+
+    #[test]
+    fn priority_tier_wins_over_arrival_order() {
+        let tenants = two_tenants();
+        let mut s = class_sched(ClassAwareConfig::default());
+        let mut q = RequestQueue::new();
+        q.push(creq(1, 4, 1, 0.0)); // low prio, arrived first
+        q.push(creq(2, 4, 0, 0.0)); // high prio
+        let kvm = kv(100);
+        let ctx = AdmissionContext {
+            kv: &kvm,
+            running: &[],
+            ceiling: 1,
+            now: 0.0,
+            tenants: &tenants,
+            class_ceilings: None,
+            oracle: None,
+        };
+        let admitted = s.admit_with(&mut q, &ctx);
+        assert_eq!(admitted.len(), 1);
+        assert_eq!(admitted[0].id, 2, "priority beats arrival order");
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.peek().unwrap().id, 1);
+    }
+
+    #[test]
+    fn fifo_preserved_within_class_and_aging_promotes() {
+        let tenants = two_tenants();
+        let mut s = class_sched(ClassAwareConfig {
+            aging_tau: 10.0,
+            ..ClassAwareConfig::default()
+        });
+        let kvm = kv(1000);
+        // Within a class, arrival order is preserved.
+        let mut q = RequestQueue::new();
+        q.push(creq(10, 4, 0, 0.0));
+        q.push(creq(11, 4, 0, 1.0));
+        q.push(creq(12, 4, 0, 2.0));
+        let ctx = AdmissionContext {
+            kv: &kvm,
+            running: &[],
+            ceiling: 3,
+            now: 5.0,
+            tenants: &tenants,
+            class_ceilings: None,
+            oracle: None,
+        };
+        let ids: Vec<u64> = s.admit_with(&mut q, &ctx).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![10, 11, 12]);
+        // Aging: a low-priority request 10+ seconds old outranks a fresh
+        // high-priority one (its tier is promoted by wait/tau).
+        let mut q = RequestQueue::new();
+        q.push(creq(20, 4, 1, 0.0)); // low prio, waited 15 s
+        q.push(creq(21, 4, 0, 15.0)); // high prio, fresh
+        let ctx = AdmissionContext {
+            kv: &kvm,
+            running: &[],
+            ceiling: 1,
+            now: 15.0,
+            tenants: &tenants,
+            class_ceilings: None,
+            oracle: None,
+        };
+        let admitted = s.admit_with(&mut q, &ctx);
+        assert_eq!(admitted[0].id, 20, "aging must bound starvation");
+    }
+
+    #[test]
+    fn weighted_fairness_tracks_weights_in_one_tier() {
+        let mut a = TenantClass::new("a");
+        a.weight = 3.0;
+        let mut b = TenantClass::new("b");
+        b.weight = 1.0;
+        let tenants = vec![a, b];
+        let mut s = class_sched(ClassAwareConfig::default());
+        let kvm = kv(100_000);
+        let mut q = RequestQueue::new();
+        for i in 0..200u64 {
+            q.push(creq(i, 4, (i % 2) as usize, 0.0));
+        }
+        let ctx = AdmissionContext {
+            kv: &kvm,
+            running: &[],
+            ceiling: 80,
+            now: 0.0,
+            tenants: &tenants,
+            class_ceilings: None,
+            oracle: None,
+        };
+        let admitted = s.admit_with(&mut q, &ctx);
+        assert_eq!(admitted.len(), 80);
+        let n_a = admitted.iter().filter(|r| r.class == 0).count();
+        let share = n_a as f64 / 80.0;
+        assert!(
+            (share - 0.75).abs() < 0.07,
+            "weight-3 class should take ~75% of admissions: {share}"
+        );
+    }
+
+    #[test]
+    fn per_class_ceilings_and_kv_block_one_class_only() {
+        let tenants = two_tenants();
+        let mut s = class_sched(ClassAwareConfig::default());
+        let kvm = kv(1000);
+        // Class 0 capped at 1 running; class 1 fills the rest.
+        let mut q = RequestQueue::new();
+        q.push(creq(1, 4, 0, 0.0));
+        q.push(creq(2, 4, 0, 0.0));
+        q.push(creq(3, 4, 1, 0.0));
+        let ceilings = [1usize, 64];
+        let ctx = AdmissionContext {
+            kv: &kvm,
+            running: &[],
+            ceiling: 10,
+            now: 0.0,
+            tenants: &tenants,
+            class_ceilings: Some(&ceilings),
+            oracle: None,
+        };
+        let ids: Vec<u64> = s.admit_with(&mut q, &ctx).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 3], "class cap holds back the second class-0 request");
+        // A giant head blocks only its own class; others keep admitting.
+        let mut s = class_sched(ClassAwareConfig::default());
+        let mut q = RequestQueue::new();
+        q.push(creq(1, 100_000, 0, 0.0)); // cannot fit
+        q.push(creq(2, 4, 0, 0.0)); // behind it: must NOT bypass
+        q.push(creq(3, 4, 1, 0.0)); // other class: admitted
+        let ctx = AdmissionContext {
+            kv: &kvm,
+            running: &[],
+            ceiling: 10,
+            now: 0.0,
+            tenants: &tenants,
+            class_ceilings: None,
+            oracle: None,
+        };
+        let ids: Vec<u64> = s.admit_with(&mut q, &ctx).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![3]);
+    }
+
+    /// Oracle stub: inside the batch band, predicted speedup scales with
+    /// the mix α (2·α); outside the band speculation loses.
+    struct BandOracle {
+        band: usize,
+    }
+
+    impl RegimeOracle for BandOracle {
+        fn predicted_speedup(&self, batch: usize, alpha: Option<f64>) -> f64 {
+            if batch <= self.band {
+                2.0 * alpha.unwrap_or(0.8)
+            } else {
+                0.9
+            }
+        }
+    }
+
+    #[test]
+    fn mix_aware_pauses_at_band_edge_and_prefers_easy_mixes() {
+        let mut easy = TenantClass::new("easy");
+        easy.alpha_hint = Some(0.9);
+        let mut hard = TenantClass::new("hard");
+        hard.alpha_hint = Some(0.3);
+        let tenants = vec![easy, hard];
+        let oracle = BandOracle { band: 4 };
+        let mut s = class_sched(ClassAwareConfig::mix_aware(1.0));
+        let kvm = kv(10_000);
+        let mut q = RequestQueue::new();
+        for i in 0..10u64 {
+            q.push(creq(i, 4, (i % 2) as usize, 0.0));
+        }
+        let ctx = AdmissionContext {
+            kv: &kvm,
+            running: &[],
+            ceiling: 64,
+            now: 0.0,
+            tenants: &tenants,
+            class_ceilings: None,
+            oracle: Some(&oracle),
+        };
+        let admitted = s.admit_with(&mut q, &ctx);
+        // The band caps the batch at 4 even though ceiling/KV allow more.
+        assert_eq!(admitted.len(), 4, "regime test must pause at the band edge");
+        // And the picks lean easy: hard admissions would sink the mix
+        // below the oracle's α floor, so the easy class dominates.
+        let n_easy = admitted.iter().filter(|r| r.class == 0).count();
+        assert!(n_easy >= 3, "mix-aware should prefer easy candidates: {n_easy}");
+        // The hold-max guard overrides the pause for SLO safety.
+        let mut s = class_sched(ClassAwareConfig {
+            mix_speedup_floor: Some(1.0),
+            mix_hold_max: 5.0,
+            ..ClassAwareConfig::default()
+        });
+        let mut q = RequestQueue::new();
+        for i in 0..6u64 {
+            q.push(creq(i, 4, 1, 0.0)); // all hard, waited 20 s
+        }
+        let ctx = AdmissionContext {
+            kv: &kvm,
+            running: &[],
+            ceiling: 64,
+            now: 20.0,
+            tenants: &tenants,
+            class_ceilings: None,
+            oracle: Some(&oracle),
+        };
+        let admitted = s.admit_with(&mut q, &ctx);
+        assert_eq!(admitted.len(), 6, "aged requests bypass the regime hold");
+    }
+
+    #[test]
+    fn mix_pause_considers_lower_tiers_before_holding() {
+        // A high-priority hard class whose heads price below the floor
+        // must not pause admission while a lower-tier easy class could
+        // keep the batch in the band: the fallback crosses tiers.
+        let mut hard = TenantClass::new("hard");
+        hard.priority = 2;
+        hard.alpha_hint = Some(0.3);
+        let mut easy = TenantClass::new("easy");
+        easy.priority = 1;
+        easy.alpha_hint = Some(0.9);
+        let tenants = vec![hard, easy];
+        let oracle = BandOracle { band: 10 };
+        let mut s = class_sched(ClassAwareConfig::mix_aware(1.0));
+        let kvm = kv(10_000);
+        let mut q = RequestQueue::new();
+        for i in 0..3u64 {
+            q.push(creq(i, 4, 0, 0.0)); // hard, fresh
+        }
+        for i in 3..6u64 {
+            q.push(creq(i, 4, 1, 0.0)); // easy
+        }
+        let ctx = AdmissionContext {
+            kv: &kvm,
+            running: &[],
+            ceiling: 6,
+            now: 0.0,
+            tenants: &tenants,
+            class_ceilings: None,
+            oracle: Some(&oracle),
+        };
+        let admitted = s.admit_with(&mut q, &ctx);
+        // No pause: everything is admitted, and the second pick already
+        // reaches across the tier to the easy class (2·mix ≥ 1 only with
+        // an easy candidate once a hard one is running).
+        assert_eq!(admitted.len(), 6, "cross-tier fallback must avoid the pause");
+        assert_eq!(admitted[0].class, 0, "priority still wins the first slot");
+        assert_eq!(admitted[1].class, 1, "band rescue comes from the lower tier");
+    }
+
+    #[test]
+    fn one_class_class_aware_equals_fifo() {
+        // The degeneracy contract, unit-level (the whole-engine property
+        // test lives in rust/tests/prop_scheduler.rs): one neutral class,
+        // identical admitted ids in identical order, for several shapes.
+        for (blocks, ceiling, n) in [(1000usize, usize::MAX, 12u64), (5, 3, 6), (2, 8, 5)] {
+            let mk_queue = || {
+                let mut q = RequestQueue::new();
+                for i in 0..n {
+                    q.push(req(i, 4 + (i as usize % 3) * 20));
+                }
+                q
+            };
+            let kvm = kv(blocks);
+            let mut fifo = sched(8, 4, None);
+            let mut qa = mk_queue();
+            let a = fifo.admit(&mut qa, &kvm, 1, ceiling, 0.0);
+            let mut cls = Scheduler::with_policy(
+                SchedulerConfig {
+                    max_batch: 8,
+                    admit_reserve_tokens: 4,
+                    tpot_slo: None,
+                },
+                &AdmissionPolicyConfig::ClassAware(ClassAwareConfig::default()),
+            );
+            let mut qb = mk_queue();
+            let running = [RunningInfo {
+                class: 0,
+                alpha: None,
+            }];
+            let ctx = AdmissionContext::simple(&kvm, &running, ceiling, 0.0);
+            let b = cls.admit_with(&mut qb, &ctx);
+            let ids = |v: &[Request]| v.iter().map(|r| r.id).collect::<Vec<_>>();
+            assert_eq!(ids(&a), ids(&b), "blocks={blocks} ceiling={ceiling}");
+            assert_eq!(qa.len(), qb.len());
+        }
+    }
+
+    #[test]
+    fn future_arrivals_not_admitted_by_either_policy() {
+        let kvm = kv(100);
+        let mut q = RequestQueue::new();
+        q.push(creq(1, 4, 0, 5.0));
+        let mut fifo = sched(8, 0, None);
+        assert!(fifo.admit(&mut q, &kvm, 0, 8, 1.0).is_empty());
+        let mut cls = class_sched(ClassAwareConfig::default());
+        let ctx = AdmissionContext::simple(&kvm, &[], 8, 1.0);
+        assert!(cls.admit_with(&mut q, &ctx).is_empty());
+        assert_eq!(q.len(), 1);
     }
 }

@@ -21,12 +21,13 @@
 //! vocab), so the server is only meaningful for the tiny-real-model and
 //! synthetic backends — which is exactly the repo's serving scope.
 
-use crate::batching::{Completion, Request, SamplingParams};
+use crate::batching::{ClassId, Completion, Request, SamplingParams, DEFAULT_CLASS};
 use crate::control::ControllerState;
 use crate::engine::{Engine, EngineConfig};
 use crate::spec::SdBackend;
 use crate::tokenizer;
 use crate::util::json::Json;
+use crate::workload::TenantClass;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -39,6 +40,58 @@ use std::thread::JoinHandle;
 struct Job {
     request: Request,
     respond: Sender<Completion>,
+}
+
+/// One tenant class's published serving stats (p50/p99 latencies, SLO
+/// attainment, and — with the adaptive controller — the priced per-class
+/// regime estimate at the current batch).
+#[derive(Debug, Clone, Default)]
+pub struct ClassStats {
+    pub name: String,
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub seq_rounds: u64,
+    pub preemptions: u64,
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    pub tpot_p50: f64,
+    pub tpot_p99: f64,
+    pub ttft_slo_attainment: Option<f64>,
+    pub tpot_slo_attainment: Option<f64>,
+    /// Controller-priced per-class estimate (γ, speedup vs AR) at the
+    /// current batch regime, from the class's α hint.
+    pub predicted_gamma: Option<usize>,
+    pub predicted_speedup: Option<f64>,
+}
+
+impl ClassStats {
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| match v {
+            Some(x) => x.into(),
+            None => Json::Null,
+        };
+        Json::from_pairs(vec![
+            ("name", self.name.as_str().into()),
+            ("requests_completed", self.requests_completed.into()),
+            ("tokens_generated", self.tokens_generated.into()),
+            ("seq_rounds", self.seq_rounds.into()),
+            ("preemptions", self.preemptions.into()),
+            ("ttft_p50", self.ttft_p50.into()),
+            ("ttft_p99", self.ttft_p99.into()),
+            ("tpot_p50", self.tpot_p50.into()),
+            ("tpot_p99", self.tpot_p99.into()),
+            ("ttft_slo_attainment", opt(self.ttft_slo_attainment)),
+            ("tpot_slo_attainment", opt(self.tpot_slo_attainment)),
+            (
+                "predicted_gamma",
+                match self.predicted_gamma {
+                    Some(g) => g.into(),
+                    None => Json::Null,
+                },
+            ),
+            ("predicted_speedup", opt(self.predicted_speedup)),
+        ])
+    }
 }
 
 /// Aggregate serving stats, published by the engine thread after every
@@ -55,6 +108,9 @@ pub struct ServerStats {
     pub gamma: usize,
     /// Adaptive-controller snapshot, when the engine runs one.
     pub controller: Option<ControllerState>,
+    /// Per-tenant-class stats (one entry per configured tenant; classless
+    /// deployments publish a single "default" entry once traffic flows).
+    pub classes: Vec<ClassStats>,
 }
 
 impl ServerStats {
@@ -71,6 +127,10 @@ impl ServerStats {
         if let Some(ctl) = &self.controller {
             pairs.push(("controller", ctl.to_json()));
         }
+        pairs.push((
+            "classes",
+            Json::Arr(self.classes.iter().map(ClassStats::to_json).collect()),
+        ));
         Json::from_pairs(pairs)
     }
 }
@@ -119,6 +179,9 @@ impl Server {
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let stats: SharedStats = Arc::new(Mutex::new(ServerStats::default()));
+        // The connection side resolves `"tenant"` names to class ids
+        // against the same table the engine accounts with.
+        let tenants: Arc<Vec<TenantClass>> = Arc::new(config.tenants.clone());
         let (job_tx, job_rx) = channel::<Job>();
 
         let engine_thread = {
@@ -146,7 +209,7 @@ impl Server {
             let shutdown = shutdown.clone();
             std::thread::Builder::new()
                 .name("moesd-accept".into())
-                .spawn(move || accept_loop(listener, job_tx, shutdown, stats))?
+                .spawn(move || accept_loop(listener, job_tx, shutdown, stats, tenants))?
         };
 
         Ok(Server {
@@ -182,6 +245,42 @@ impl Drop for Server {
 
 fn publish_stats<B: SdBackend>(engine: &Engine<B>, stats: &SharedStats) {
     let m = &engine.metrics;
+    // Per-class view: every configured tenant (even if idle so far) plus
+    // any extra classes traffic has touched.
+    let tenants = &engine.config.tenants;
+    let n_classes = tenants.len().max(m.class.len());
+    let estimates = engine.controller().map(|ctl| {
+        ctl.class_estimates(tenants, (m.mean_batch().round() as usize).max(1))
+    });
+    let mut classes = Vec::with_capacity(n_classes);
+    for i in 0..n_classes {
+        let name = tenants
+            .get(i)
+            .map_or_else(|| format!("class{i}"), |t| t.name.clone());
+        let mut cs = ClassStats {
+            name,
+            ..ClassStats::default()
+        };
+        if let Some(cm) = m.class.get(i) {
+            cs.requests_completed = cm.requests_completed;
+            cs.tokens_generated = cm.tokens_generated;
+            cs.seq_rounds = cm.seq_rounds;
+            cs.preemptions = cm.preemptions;
+            cs.ttft_p50 = cm.ttft.0.quantile(0.5);
+            cs.ttft_p99 = cm.ttft.0.quantile(0.99);
+            cs.tpot_p50 = cm.tpot.0.quantile(0.5);
+            cs.tpot_p99 = cm.tpot.0.quantile(0.99);
+            cs.ttft_slo_attainment = cm.ttft_attainment();
+            cs.tpot_slo_attainment = cm.tpot_attainment();
+        }
+        if let Some(ests) = &estimates {
+            if let Some(e) = ests.get(i) {
+                cs.predicted_gamma = Some(e.gamma);
+                cs.predicted_speedup = Some(e.speedup);
+            }
+        }
+        classes.push(cs);
+    }
     let snapshot = ServerStats {
         requests_completed: m.requests_completed,
         tokens_generated: m.tokens_generated,
@@ -191,6 +290,7 @@ fn publish_stats<B: SdBackend>(engine: &Engine<B>, stats: &SharedStats) {
         acceptance_rate: m.acceptance_rate(),
         gamma: engine.current_gamma(),
         controller: engine.controller_state(),
+        classes,
     };
     *stats.lock().unwrap() = snapshot;
 }
@@ -212,11 +312,18 @@ fn engine_loop<B: SdBackend>(
     const PUBLISH_EVERY_STEPS: usize = 16;
     let mut steps_since_publish = 0usize;
     while !shutdown.load(Ordering::SeqCst) {
-        // Drain new submissions.
+        // Drain new submissions, stamping arrival with the engine clock
+        // at receipt: TTFT / per-class SLO attainment, starvation aging,
+        // and the mix hold-max all measure wait from this moment. (The
+        // connection thread can't stamp it — the engine clock is virtual
+        // in synthetic mode — and a 0.0 arrival would measure every wait
+        // from server start.)
         let mut got_work = false;
         while let Ok(job) = jobs.try_recv() {
             pending.insert(job.request.id, job.respond);
-            engine.submit(job.request);
+            let mut request = job.request;
+            request.arrival = engine.clock();
+            engine.submit(request);
             got_work = true;
         }
         if engine.is_idle() {
@@ -254,6 +361,7 @@ fn accept_loop(
     jobs: Sender<Job>,
     shutdown: Arc<AtomicBool>,
     stats: SharedStats,
+    tenants: Arc<Vec<TenantClass>>,
 ) {
     let next_id = Arc::new(AtomicU64::new(1));
     loop {
@@ -265,10 +373,11 @@ fn accept_loop(
                 let jobs = jobs.clone();
                 let next_id = next_id.clone();
                 let stats = stats.clone();
+                let tenants = tenants.clone();
                 let _ = std::thread::Builder::new()
                     .name("moesd-conn".into())
                     .spawn(move || {
-                        let _ = handle_connection(stream, jobs, next_id, stats);
+                        let _ = handle_connection(stream, jobs, next_id, stats, tenants);
                     });
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -284,6 +393,7 @@ fn handle_connection(
     jobs: Sender<Job>,
     next_id: Arc<AtomicU64>,
     stats: SharedStats,
+    tenants: Arc<Vec<TenantClass>>,
 ) -> anyhow::Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -292,7 +402,7 @@ fn handle_connection(
         if line.trim().is_empty() {
             continue;
         }
-        let response = match serve_one(&line, &jobs, &next_id, &stats) {
+        let response = match serve_one(&line, &jobs, &next_id, &stats, &tenants) {
             Ok(resp) => resp,
             Err(e) => Json::from_pairs(vec![("error", format!("{e}").into())]),
         };
@@ -308,6 +418,7 @@ fn serve_one(
     jobs: &Sender<Job>,
     next_id: &AtomicU64,
     stats: &SharedStats,
+    tenants: &[TenantClass],
 ) -> anyhow::Result<Json> {
     let j = Json::parse(line)?;
     if j.get("stats").and_then(Json::as_bool) == Some(true) {
@@ -316,6 +427,29 @@ fn serve_one(
     let prompt_text = j.req_str("prompt")?;
     anyhow::ensure!(!prompt_text.is_empty(), "empty prompt");
     let client_id = j.get("id").and_then(Json::as_i64).unwrap_or(-1);
+    // Optional tenant tag: resolved by name against the configured table
+    // (unknown names are a client error, not silently class 0). Untagged
+    // requests on a multi-tenant server go to the tenant named "default"
+    // if one exists, else the *lowest-priority* class — anonymous traffic
+    // must never inherit the premium tier just because it was listed
+    // first, nor corrupt its SLO-attainment stats.
+    let class: ClassId = match j.get("tenant").and_then(Json::as_str) {
+        None => tenants
+            .iter()
+            .position(|t| t.name == "default")
+            .or_else(|| {
+                tenants
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(i, t)| (t.priority, *i))
+                    .map(|(i, _)| i)
+            })
+            .unwrap_or(DEFAULT_CLASS),
+        Some(name) => tenants
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown tenant `{name}`"))?,
+    };
     let id = next_id.fetch_add(1, Ordering::SeqCst);
     let request = Request {
         id,
@@ -329,6 +463,7 @@ fn serve_one(
             eos_token: Some(tokenizer::EOS),
         },
         arrival: 0.0,
+        class,
     };
     let (tx, rx) = channel();
     jobs.send(Job {
@@ -360,6 +495,9 @@ fn serve_one(
         ("rounds", (completion.rounds as usize).into()),
         ("gamma", snap.gamma.into()),
     ];
+    if let Some(t) = tenants.get(class) {
+        pairs.push(("tenant", t.name.as_str().into()));
+    }
     if let Some(ctl) = &snap.controller {
         pairs.push(("ctl_policy", ctl.policy.as_str().into()));
         pairs.push((
@@ -394,11 +532,37 @@ impl Client {
         max_new_tokens: usize,
         temperature: f64,
     ) -> anyhow::Result<Json> {
-        let req = Json::from_pairs(vec![
+        self.request(prompt, max_new_tokens, temperature, None)
+    }
+
+    /// [`Client::generate`] tagged with a tenant class name (must be one
+    /// of the server's configured `--tenants` classes).
+    pub fn generate_as(
+        &mut self,
+        tenant: &str,
+        prompt: &str,
+        max_new_tokens: usize,
+        temperature: f64,
+    ) -> anyhow::Result<Json> {
+        self.request(prompt, max_new_tokens, temperature, Some(tenant))
+    }
+
+    fn request(
+        &mut self,
+        prompt: &str,
+        max_new_tokens: usize,
+        temperature: f64,
+        tenant: Option<&str>,
+    ) -> anyhow::Result<Json> {
+        let mut pairs: Vec<(&str, Json)> = vec![
             ("prompt", prompt.into()),
             ("max_new_tokens", max_new_tokens.into()),
             ("temperature", temperature.into()),
-        ]);
+        ];
+        if let Some(t) = tenant {
+            pairs.push(("tenant", t.into()));
+        }
+        let req = Json::from_pairs(pairs);
         self.stream.write_all(req.to_string().as_bytes())?;
         self.stream.write_all(b"\n")?;
         self.stream.flush()?;

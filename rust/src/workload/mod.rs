@@ -12,7 +12,7 @@
 //!   temperature 0 is most predictable (σ up to 0.95), conversation at
 //!   temperature 1 least (σ down to 0.35) — exactly the paper's spread.
 
-use crate::batching::{Request, SamplingParams};
+use crate::batching::{ClassId, Request, SamplingParams, DEFAULT_CLASS};
 use crate::theory;
 use crate::util::rng::Rng;
 
@@ -149,6 +149,7 @@ impl WorkloadProfile {
                         eos_token: None,
                     },
                     arrival,
+                    class: DEFAULT_CLASS,
                 }
             })
             .collect()
@@ -239,12 +240,401 @@ impl TrafficRamp {
                         eos_token: None,
                     },
                     arrival: t,
+                    class: DEFAULT_CLASS,
                 });
                 id += 1;
             }
             phase_start += phase.duration;
         }
         out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-tenant SLO classes + trace-driven arrivals
+// ---------------------------------------------------------------------------
+
+/// One tenant/SLO class of a multi-tenant deployment: who the requests
+/// belong to, what latency they are owed, and how the admission scheduler
+/// should weigh them ([`crate::scheduler::ClassAwareAdmission`]). The
+/// class's index in the launcher's tenant table is its
+/// [`crate::batching::ClassId`].
+#[derive(Debug, Clone)]
+pub struct TenantClass {
+    pub name: String,
+    /// Admission priority tier (higher = served first; starvation aging
+    /// can promote lower tiers — see the scheduler's `aging_tau`).
+    pub priority: u32,
+    /// Weighted-fairness share *within* a priority tier.
+    pub weight: f64,
+    /// Fraction of trace arrivals assigned to this class (normalized over
+    /// the tenant table by [`ArrivalTrace::to_requests`]).
+    pub arrival_weight: f64,
+    /// Time-to-first-token SLO, seconds (None = no TTFT promise).
+    pub ttft_slo: Option<f64>,
+    /// Time-per-output-token SLO, seconds/token.
+    pub tpot_slo: Option<f64>,
+    /// Expected draft acceptance α for this class's workload — the
+    /// admission mix prior used before per-sequence α̂ᵢ measurements
+    /// exist (e.g. code tenants ≈ 0.9, open-chat tenants ≈ 0.5).
+    pub alpha_hint: Option<f64>,
+    /// Per-class cap on concurrently running sequences.
+    pub max_running: Option<usize>,
+    /// Output budget for requests generated into this class.
+    pub max_new_tokens: usize,
+    pub temperature: f64,
+}
+
+impl TenantClass {
+    /// A class with neutral defaults (priority 1, weight 1, no SLOs).
+    pub fn new(name: &str) -> TenantClass {
+        TenantClass {
+            name: name.to_string(),
+            priority: 1,
+            weight: 1.0,
+            arrival_weight: 1.0,
+            ttft_slo: None,
+            tpot_slo: None,
+            alpha_hint: None,
+            max_running: None,
+            max_new_tokens: 64,
+            temperature: 0.0,
+        }
+    }
+
+    /// The single implicit class of a classless deployment.
+    pub fn default_single() -> Vec<TenantClass> {
+        vec![TenantClass::new("default")]
+    }
+}
+
+/// Parse a `--tenants` spec: classes separated by `;`, each
+/// `name:key=value,key=value`. Keys: `prio`, `weight`, `share`
+/// (arrival weight), `ttft`, `tpot` (seconds), `alpha`, `max_run`,
+/// `max_new`, `temp`.
+///
+/// ```
+/// let ts = moesd::workload::parse_tenants(
+///     "chat:prio=2,weight=1,share=0.2,ttft=0.5,tpot=0.02,alpha=0.9;\
+///      bulk:prio=1,weight=3,share=0.8,alpha=0.5",
+/// )
+/// .unwrap();
+/// assert_eq!(ts.len(), 2);
+/// assert_eq!(ts[0].name, "chat");
+/// assert_eq!(ts[0].priority, 2);
+/// assert_eq!(ts[1].tpot_slo, None);
+/// ```
+pub fn parse_tenants(spec: &str) -> anyhow::Result<Vec<TenantClass>> {
+    let mut out = Vec::new();
+    for part in spec.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, rest) = match part.split_once(':') {
+            Some((n, r)) => (n.trim(), r.trim()),
+            None => (part, ""),
+        };
+        anyhow::ensure!(!name.is_empty(), "tenant class with empty name");
+        anyhow::ensure!(
+            out.iter().all(|t: &TenantClass| t.name != name),
+            "duplicate tenant class `{name}`"
+        );
+        let mut t = TenantClass::new(name);
+        for kv in rest.split(',') {
+            let kv = kv.trim();
+            if kv.is_empty() {
+                continue;
+            }
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("tenant `{name}`: expected key=value, got `{kv}`"))?;
+            let fval = || -> anyhow::Result<f64> {
+                v.parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("tenant `{name}`: bad number for {k}: `{v}`"))
+            };
+            match k.trim() {
+                "prio" => t.priority = fval()? as u32,
+                "weight" => t.weight = fval()?,
+                "share" => t.arrival_weight = fval()?,
+                "ttft" => t.ttft_slo = Some(fval()?),
+                "tpot" => t.tpot_slo = Some(fval()?),
+                "alpha" => t.alpha_hint = Some(fval()?),
+                "max_run" => t.max_running = Some(fval()? as usize),
+                "max_new" => t.max_new_tokens = fval()? as usize,
+                "temp" => t.temperature = fval()?,
+                other => anyhow::bail!("tenant `{name}`: unknown key `{other}`"),
+            }
+        }
+        anyhow::ensure!(t.weight > 0.0, "tenant `{name}`: weight must be positive");
+        anyhow::ensure!(
+            t.arrival_weight >= 0.0,
+            "tenant `{name}`: share must be non-negative"
+        );
+        anyhow::ensure!(t.max_new_tokens >= 1, "tenant `{name}`: max_new must be >= 1");
+        if let Some(a) = t.alpha_hint {
+            anyhow::ensure!((0.0..=1.0).contains(&a), "tenant `{name}`: alpha out of [0,1]");
+        }
+        out.push(t);
+    }
+    anyhow::ensure!(!out.is_empty(), "tenant spec is empty");
+    anyhow::ensure!(
+        out.iter().any(|t| t.arrival_weight > 0.0),
+        "at least one tenant class needs a positive share"
+    );
+    Ok(out)
+}
+
+/// Correlated prompt/output length model. Real production traces show
+/// positive prompt↔output correlation (long prompts beget long answers);
+/// independent draws understate the tail of total sequence length, which
+/// is exactly what KV capacity planning cares about. Draws are a joint
+/// lognormal: `z_out = ρ·z_in + √(1−ρ²)·ε`.
+#[derive(Debug, Clone, Copy)]
+pub struct LengthModel {
+    pub prompt_log_mean: f64,
+    pub prompt_log_std: f64,
+    pub output_log_mean: f64,
+    pub output_log_std: f64,
+    /// Correlation ρ between the log-lengths, in [-1, 1].
+    pub corr: f64,
+    pub prompt_clamp: (usize, usize),
+    pub output_clamp: (usize, usize),
+}
+
+impl LengthModel {
+    /// Production-shaped defaults: prompts centered near `prompt_mid`
+    /// tokens, outputs near `output_mid`, correlation 0.6.
+    pub fn production(prompt_mid: usize, output_mid: usize) -> LengthModel {
+        LengthModel {
+            prompt_log_mean: (prompt_mid.max(2) as f64).ln(),
+            prompt_log_std: 0.6,
+            output_log_mean: (output_mid.max(2) as f64).ln(),
+            output_log_std: 0.5,
+            corr: 0.6,
+            prompt_clamp: (4, prompt_mid.max(4) * 8),
+            output_clamp: (4, output_mid.max(4) * 8),
+        }
+    }
+
+    /// One correlated (prompt_len, output_len) draw.
+    pub fn sample(&self, rng: &mut Rng) -> (usize, usize) {
+        let z_in = rng.normal();
+        let eps = rng.normal();
+        let rho = self.corr.clamp(-1.0, 1.0);
+        let z_out = rho * z_in + (1.0 - rho * rho).sqrt() * eps;
+        let p = (self.prompt_log_mean + self.prompt_log_std * z_in).exp();
+        let o = (self.output_log_mean + self.output_log_std * z_out).exp();
+        (
+            (p as usize).clamp(self.prompt_clamp.0, self.prompt_clamp.1),
+            (o as usize).clamp(self.output_clamp.0, self.output_clamp.1),
+        )
+    }
+}
+
+/// One arrival in a workload trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// Arrival time, seconds from trace start.
+    pub t: f64,
+    pub prompt_len: usize,
+    pub output_len: usize,
+}
+
+/// A replayable arrival trace: timestamps plus per-request prompt/output
+/// lengths, parsed from CSV (production QPS traces) or generated by the
+/// bundled [`ArrivalTrace::synthetic_production`] shape. Traces are
+/// rate-rescalable so one trace file sweeps a whole load axis.
+#[derive(Debug, Clone)]
+pub struct ArrivalTrace {
+    events: Vec<TraceEvent>,
+}
+
+impl ArrivalTrace {
+    pub fn new(mut events: Vec<TraceEvent>) -> anyhow::Result<ArrivalTrace> {
+        for e in &events {
+            anyhow::ensure!(
+                e.t.is_finite() && e.t >= 0.0,
+                "trace event with invalid timestamp {e:?}"
+            );
+            anyhow::ensure!(
+                e.prompt_len >= 1 && e.output_len >= 1,
+                "trace event with empty prompt/output {e:?}"
+            );
+        }
+        events.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+        Ok(ArrivalTrace { events })
+    }
+
+    /// Parse the CSV trace format: `t,prompt_len,output_len` per line, an
+    /// optional header line, `#` comments and blank lines skipped.
+    pub fn parse_csv(text: &str) -> anyhow::Result<ArrivalTrace> {
+        let mut events = Vec::new();
+        let mut seen_data = false;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split(',').map(str::trim).collect();
+            anyhow::ensure!(
+                cols.len() == 3,
+                "trace line {}: expected 3 columns, got {}",
+                lineno + 1,
+                cols.len()
+            );
+            // The header may sit below comments/blank lines: the first
+            // non-skipped row whose first column is non-numeric is it.
+            if !seen_data && cols[0].parse::<f64>().is_err() {
+                seen_data = true;
+                continue;
+            }
+            seen_data = true;
+            let parse = |i: usize| -> anyhow::Result<f64> {
+                cols[i]
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("trace line {}: bad number `{}`", lineno + 1, cols[i]))
+            };
+            events.push(TraceEvent {
+                t: parse(0)?,
+                prompt_len: parse(1)? as usize,
+                output_len: parse(2)? as usize,
+            });
+        }
+        anyhow::ensure!(!events.is_empty(), "trace has no events");
+        ArrivalTrace::new(events)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<ArrivalTrace> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading trace {}: {e}", path.display()))?;
+        ArrivalTrace::parse_csv(&text)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("t,prompt_len,output_len\n");
+        for e in &self.events {
+            s.push_str(&format!("{:.6},{},{}\n", e.t, e.prompt_len, e.output_len));
+        }
+        s
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Timestamp of the last arrival (0 for an empty trace).
+    pub fn duration(&self) -> f64 {
+        self.events.last().map_or(0.0, |e| e.t)
+    }
+
+    /// Replay the trace `factor`× faster (timestamps divide by `factor`),
+    /// turning one recorded trace into a load axis: factor 2 doubles the
+    /// offered QPS with the identical burst structure.
+    pub fn rescale_rate(&self, factor: f64) -> ArrivalTrace {
+        assert!(factor > 0.0 && factor.is_finite(), "bad rate factor {factor}");
+        ArrivalTrace {
+            events: self
+                .events
+                .iter()
+                .map(|e| TraceEvent { t: e.t / factor, ..*e })
+                .collect(),
+        }
+    }
+
+    /// The bundled production-shaped synthetic trace: a Markov-modulated
+    /// Poisson process (calm/burst states, bursts ≈ 4× the calm rate)
+    /// with correlated prompt/output lengths from [`LengthModel`].
+    /// Deterministic in `seed`. Prompts are clamped to a serving-realistic
+    /// 256 tokens — unbounded lognormal tails make multi-second prefill
+    /// waves dominate every latency metric (measured in the python
+    /// replica during the multitenant experiment's design).
+    pub fn synthetic_production(
+        duration_s: f64,
+        base_rate: f64,
+        seed: u64,
+    ) -> ArrivalTrace {
+        assert!(duration_s > 0.0 && base_rate > 0.0);
+        let mut rng = Rng::new(seed, 0x7ace);
+        let lengths = LengthModel {
+            prompt_log_mean: (64.0f64).ln(),
+            prompt_log_std: 0.6,
+            output_log_mean: (48.0f64).ln(),
+            output_log_std: 0.5,
+            corr: 0.6,
+            prompt_clamp: (8, 256),
+            output_clamp: (4, 384),
+        };
+        let mut events = Vec::new();
+        let mut t = 0.0f64;
+        let mut bursting = false;
+        // State dwell times: calm ~20 s, burst ~5 s (exponential).
+        let mut state_end = rng.exponential(1.0 / 20.0);
+        while t < duration_s {
+            let rate = if bursting { 4.0 * base_rate } else { base_rate };
+            t += rng.exponential(rate);
+            while t > state_end {
+                bursting = !bursting;
+                state_end += rng.exponential(if bursting { 1.0 / 5.0 } else { 1.0 / 20.0 });
+            }
+            if t >= duration_s {
+                break;
+            }
+            let (p, o) = lengths.sample(&mut rng);
+            events.push(TraceEvent {
+                t,
+                prompt_len: p,
+                output_len: o,
+            });
+        }
+        ArrivalTrace::new(events).expect("synthetic trace is well-formed")
+    }
+
+    /// Materialize the trace as classed engine requests: each event is
+    /// assigned a tenant class by the classes' normalized
+    /// `arrival_weight`s (deterministic in `seed`), takes its prompt
+    /// length from the event, and caps its output budget at the event's
+    /// output length (correlated lengths survive into serving).
+    pub fn to_requests(
+        &self,
+        classes: &[TenantClass],
+        id0: u64,
+        seed: u64,
+    ) -> Vec<Request> {
+        assert!(!classes.is_empty(), "need at least one tenant class");
+        let weights: Vec<f64> = classes.iter().map(|c| c.arrival_weight).collect();
+        let mut rng = Rng::new(seed, 0x7e17);
+        self.events
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                let class: ClassId = if classes.len() == 1 {
+                    DEFAULT_CLASS
+                } else {
+                    rng.categorical(&weights)
+                };
+                let c = &classes[class];
+                Request {
+                    id: id0 + i as u64,
+                    prompt: (0..e.prompt_len as u32).map(|p| p % 251).collect(),
+                    params: SamplingParams {
+                        temperature: c.temperature,
+                        max_new_tokens: e.output_len.min(c.max_new_tokens.max(1)),
+                        eos_token: None,
+                    },
+                    arrival: e.t,
+                    class,
+                }
+            })
+            .collect()
     }
 }
 
@@ -390,5 +780,180 @@ mod tests {
             rate: 0.0,
             duration: 1.0,
         }]);
+    }
+
+    #[test]
+    fn tenant_spec_parses_and_validates() {
+        let ts = parse_tenants(
+            "chat:prio=2,weight=1,share=0.2,ttft=0.5,tpot=0.02,alpha=0.9,max_new=32;\
+             bulk:prio=1,weight=3,share=0.8,alpha=0.5,max_run=48",
+        )
+        .unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].name, "chat");
+        assert_eq!(ts[0].priority, 2);
+        assert_eq!(ts[0].ttft_slo, Some(0.5));
+        assert_eq!(ts[0].tpot_slo, Some(0.02));
+        assert_eq!(ts[0].alpha_hint, Some(0.9));
+        assert_eq!(ts[0].max_new_tokens, 32);
+        assert_eq!(ts[1].weight, 3.0);
+        assert_eq!(ts[1].max_running, Some(48));
+        assert_eq!(ts[1].ttft_slo, None);
+        // A bare name is a neutral class.
+        let one = parse_tenants("solo").unwrap();
+        assert_eq!(one[0].name, "solo");
+        assert_eq!(one[0].priority, 1);
+        // Rejections.
+        for bad in [
+            "",
+            "a:prio=2;a:prio=1",       // duplicate name
+            "a:bogus=1",               // unknown key
+            "a:weight=0",              // non-positive weight
+            "a:alpha=1.5",             // alpha out of range
+            "a:prio",                  // not key=value
+            "a:share=0;b:share=0",     // no positive share
+        ] {
+            assert!(parse_tenants(bad).is_err(), "should reject `{bad}`");
+        }
+    }
+
+    #[test]
+    fn length_model_correlation_is_positive() {
+        let m = LengthModel::production(96, 48);
+        let mut rng = Rng::seeded(3);
+        let draws: Vec<(usize, usize)> = (0..4000).map(|_| m.sample(&mut rng)).collect();
+        // Clamps respected.
+        for &(p, o) in &draws {
+            assert!(p >= m.prompt_clamp.0 && p <= m.prompt_clamp.1);
+            assert!(o >= m.output_clamp.0 && o <= m.output_clamp.1);
+        }
+        // Empirical log-length correlation lands near ρ = 0.6.
+        let xs: Vec<f64> = draws.iter().map(|&(p, _)| (p as f64).ln()).collect();
+        let ys: Vec<f64> = draws.iter().map(|&(_, o)| (o as f64).ln()).collect();
+        let n = xs.len() as f64;
+        let (mx, my) = (xs.iter().sum::<f64>() / n, ys.iter().sum::<f64>() / n);
+        let cov: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum::<f64>() / n;
+        let (vx, vy) = (
+            xs.iter().map(|x| (x - mx).powi(2)).sum::<f64>() / n,
+            ys.iter().map(|y| (y - my).powi(2)).sum::<f64>() / n,
+        );
+        let corr = cov / (vx.sqrt() * vy.sqrt());
+        assert!(
+            (corr - 0.6).abs() < 0.12,
+            "sample correlation {corr} should track ρ=0.6"
+        );
+        // Independent-draw control: ρ = 0 gives near-zero correlation.
+        let mut m0 = m;
+        m0.corr = 0.0;
+        let mut rng = Rng::seeded(4);
+        let d0: Vec<(f64, f64)> = (0..4000)
+            .map(|_| {
+                let (p, o) = m0.sample(&mut rng);
+                ((p as f64).ln(), (o as f64).ln())
+            })
+            .collect();
+        let mx = d0.iter().map(|d| d.0).sum::<f64>() / n;
+        let my = d0.iter().map(|d| d.1).sum::<f64>() / n;
+        let cov = d0.iter().map(|d| (d.0 - mx) * (d.1 - my)).sum::<f64>() / n;
+        let vx = d0.iter().map(|d| (d.0 - mx).powi(2)).sum::<f64>() / n;
+        let vy = d0.iter().map(|d| (d.1 - my).powi(2)).sum::<f64>() / n;
+        assert!((cov / (vx.sqrt() * vy.sqrt())).abs() < 0.1);
+    }
+
+    #[test]
+    fn trace_csv_roundtrip_and_rescale() {
+        let text = "t,prompt_len,output_len\n# comment\n0.5,10,20\n0.1,5,8\n";
+        let tr = ArrivalTrace::parse_csv(text).unwrap();
+        assert_eq!(tr.len(), 2);
+        // A header below comments/blank lines parses too; a non-numeric
+        // row after real data stays an error.
+        let led = "# generated\n\nt,prompt_len,output_len\n0.1,5,8\n";
+        assert_eq!(ArrivalTrace::parse_csv(led).unwrap().len(), 1);
+        assert!(ArrivalTrace::parse_csv("0.1,5,8\nt,prompt_len,output_len\n").is_err());
+        // Sorted by arrival regardless of file order.
+        assert_eq!(tr.events()[0].t, 0.1);
+        assert_eq!(tr.events()[1].prompt_len, 10);
+        assert!((tr.duration() - 0.5).abs() < 1e-12);
+        // Round-trips through the writer.
+        let back = ArrivalTrace::parse_csv(&tr.to_csv()).unwrap();
+        assert_eq!(back.events(), tr.events());
+        // Rate rescale halves timestamps at factor 2.
+        let fast = tr.rescale_rate(2.0);
+        assert!((fast.duration() - 0.25).abs() < 1e-12);
+        assert_eq!(fast.len(), tr.len());
+        // Rejections: bad column count, empty trace, zero lengths.
+        assert!(ArrivalTrace::parse_csv("1.0,5\n").is_err());
+        assert!(ArrivalTrace::parse_csv("# nothing\n").is_err());
+        assert!(ArrivalTrace::parse_csv("1.0,0,5\n").is_err());
+    }
+
+    #[test]
+    fn synthetic_trace_is_deterministic_bursty_and_rate_tracking() {
+        let a = ArrivalTrace::synthetic_production(120.0, 8.0, 7);
+        let b = ArrivalTrace::synthetic_production(120.0, 8.0, 7);
+        assert_eq!(a.events(), b.events());
+        // Mean rate sits between calm (8/s) and burst (32/s) and within
+        // a generous band of the state-weighted expectation (~12.8/s).
+        let rate = a.len() as f64 / 120.0;
+        assert!(rate > 8.0 && rate < 32.0, "rate {rate}");
+        // Bursts exist: some 1-second window holds >= 3x the calm rate.
+        let mut max_window = 0usize;
+        for start in 0..120 {
+            let lo = start as f64;
+            let n = a
+                .events()
+                .iter()
+                .filter(|e| e.t >= lo && e.t < lo + 1.0)
+                .count();
+            max_window = max_window.max(n);
+        }
+        assert!(max_window >= 24, "no burst found: peak {max_window}/s");
+        // Arrivals stay inside the window and sorted.
+        assert!(a.duration() < 120.0);
+        for w in a.events().windows(2) {
+            assert!(w[0].t <= w[1].t);
+        }
+    }
+
+    #[test]
+    fn trace_to_requests_assigns_classes_by_share() {
+        let tr = ArrivalTrace::synthetic_production(60.0, 20.0, 9);
+        let mut chat = TenantClass::new("chat");
+        chat.arrival_weight = 0.25;
+        chat.max_new_tokens = 16;
+        let mut bulk = TenantClass::new("bulk");
+        bulk.arrival_weight = 0.75;
+        bulk.max_new_tokens = 1 << 20;
+        let reqs = tr.to_requests(&[chat, bulk], 100, 5);
+        assert_eq!(reqs.len(), tr.len());
+        let n_chat = reqs.iter().filter(|r| r.class == 0).count();
+        let frac = n_chat as f64 / reqs.len() as f64;
+        assert!((frac - 0.25).abs() < 0.07, "chat share {frac}");
+        for (r, e) in reqs.iter().zip(tr.events()) {
+            assert_eq!(r.prompt.len(), e.prompt_len);
+            assert_eq!(r.arrival, e.t);
+            if r.class == 0 {
+                assert!(r.params.max_new_tokens <= 16);
+            } else {
+                // Budget follows the trace's correlated output length.
+                assert_eq!(r.params.max_new_tokens, e.output_len);
+            }
+        }
+        assert_eq!(reqs[0].id, 100);
+        // Single-class deployments tag everything DEFAULT_CLASS.
+        let solo = tr.to_requests(&TenantClass::default_single(), 0, 1);
+        assert!(solo.iter().all(|r| r.class == DEFAULT_CLASS));
+        // Deterministic in seed.
+        let tr2 = ArrivalTrace::synthetic_production(60.0, 20.0, 9);
+        let mut chat2 = TenantClass::new("chat");
+        chat2.arrival_weight = 0.25;
+        chat2.max_new_tokens = 16;
+        let mut bulk2 = TenantClass::new("bulk");
+        bulk2.arrival_weight = 0.75;
+        bulk2.max_new_tokens = 1 << 20;
+        let reqs2 = tr2.to_requests(&[chat2, bulk2], 100, 5);
+        for (x, y) in reqs.iter().zip(&reqs2) {
+            assert_eq!(x.class, y.class);
+        }
     }
 }

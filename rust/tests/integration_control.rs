@@ -43,6 +43,7 @@ fn engine(
             buckets: Buckets::pow2_up_to(max_batch.max(1)),
             seed,
             control,
+            ..Default::default()
         },
         backend,
     )
@@ -58,6 +59,7 @@ fn req(id: u64, max_new: usize, arrival: f64) -> Request {
             eos_token: None,
         },
         arrival,
+        class: 0,
     }
 }
 
@@ -214,6 +216,7 @@ fn controller_slo_ceiling_caps_admissions() {
                 buckets: Buckets::pow2_up_to(64),
                 seed: 11,
                 control: Some(ControlConfig::static_gamma(3)),
+                ..Default::default()
             },
             backend,
         );

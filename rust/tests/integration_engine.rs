@@ -31,6 +31,7 @@ fn engine_with(alpha: f64, gamma: usize, max_batch: usize, seed: u64) -> Engine<
             buckets: Buckets::pow2_up_to(max_batch),
             seed,
             control: None,
+            ..Default::default()
         },
         backend,
     )
@@ -313,6 +314,7 @@ fn injected_failures_roll_back_and_retry_losslessly() {
                 eos_token: None,
             },
             arrival: 0.0,
+            class: 0,
         });
     }
     // Drive manually, tolerating the injected errors.
@@ -371,6 +373,7 @@ fn tpot_slo_caps_batch_size() {
                     eos_token: None,
                 },
                 arrival: 0.0,
+                class: 0,
             });
         }
         let done = engine.run_to_completion(100_000).unwrap();

@@ -1,0 +1,98 @@
+//! End-to-end multi-tenant SLO-class serving claims (ISSUE 5 acceptance
+//! criteria), on a shortened production-shaped trace:
+//!
+//! - class-aware admission meets strictly more SLO targets than FIFO at
+//!   overload, while single-class deployments stay bit-compatible
+//!   (covered in `prop_scheduler.rs`);
+//! - mix-aware admission sustains the α-blind arm's measured speedup at
+//!   every load and clears it at the top load (the served-mix α lever).
+
+use moesd::experiments::multitenant;
+use moesd::workload::ArrivalTrace;
+
+fn sweep() -> multitenant::MultitenantOut {
+    // The exact bench-default trace: the shape claims need the full-length
+    // windows (shorter traces don't build enough backlog at the top load
+    // for the FIFO failure or the composition skew to separate — measured
+    // in the python replica during design).
+    let trace = ArrivalTrace::synthetic_production(
+        multitenant::TRACE_DURATION_S,
+        multitenant::TRACE_BASE_RATE,
+        42,
+    );
+    multitenant::run(&trace, &multitenant::default_loads(), 42).expect("sweep runs")
+}
+
+#[test]
+fn multitenant_sweep_meets_acceptance_criteria() {
+    let out = sweep();
+    if let Err(e) = multitenant::check_shape(&out) {
+        panic!("shape check failed: {e}");
+    }
+    let top = out.top_load();
+    // Spot-check the mechanisms behind the shape claims.
+    let fifo = out.arm(top, "fifo").unwrap();
+    let class = out.arm(top, "class").unwrap();
+    let mix = out.arm(top, "class+mix").unwrap();
+    // Chat TTFT: hopeless behind FIFO's backlog, held by priority.
+    assert!(
+        fifo.classes[0].ttft_attainment.unwrap_or(1.0) < 0.9,
+        "fifo should drop the chat TTFT SLO at overload: {:?}",
+        fifo.classes[0].ttft_attainment
+    );
+    assert!(
+        class.classes[0].ttft_attainment.unwrap_or(0.0) >= 0.9,
+        "class-aware should hold it: {:?}",
+        class.classes[0].ttft_attainment
+    );
+    // The mix arm's served composition leans on the easy bulk class
+    // (higher served-mix α), which is where its goodput edge comes from.
+    let served_easy = |arm: &multitenant::ArmStat| {
+        let code = arm.classes[1].tokens as f64;
+        let open = arm.classes[2].tokens as f64;
+        code / (code + open).max(1.0)
+    };
+    assert!(
+        served_easy(mix) > served_easy(class),
+        "mix-aware should serve an easier bulk mix at overload: {:.3} vs {:.3}",
+        served_easy(mix),
+        served_easy(class)
+    );
+    // Work conservation: every arm completed a meaningful share of the
+    // offered window load.
+    for r in &out.rows {
+        assert!(
+            r.requests_completed as usize >= r.requests_offered / 20,
+            "{}@{} completed too little: {}/{}",
+            r.policy,
+            r.load,
+            r.requests_completed,
+            r.requests_offered
+        );
+    }
+}
+
+#[test]
+fn light_load_arms_are_equivalent() {
+    // With no sustained backlog there is little to steer: the class-aware
+    // arms hold the chat SLO and their goodputs stay near-identical.
+    let trace = ArrivalTrace::synthetic_production(12.0, multitenant::TRACE_BASE_RATE, 42);
+    let out = multitenant::run(&trace, &[0.5], 42).expect("sweep runs");
+    let class = out.arm(0.5, "class").unwrap();
+    let mix = out.arm(0.5, "class+mix").unwrap();
+    for arm in [class, mix] {
+        assert!(
+            arm.classes[0].ttft_attainment.unwrap_or(0.0) >= 0.9,
+            "{}: light load must hold the chat TTFT SLO: {:?}",
+            arm.policy,
+            arm.classes[0].ttft_attainment
+        );
+    }
+    let rel = (mix.tok_s - class.tok_s).abs() / class.tok_s.max(1e-9);
+    assert!(
+        rel < 0.1,
+        "light-load goodput should be near-identical: {} vs {}",
+        mix.tok_s,
+        class.tok_s
+    );
+}

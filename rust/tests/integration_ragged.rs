@@ -32,6 +32,7 @@ fn req(id: u64, max_new: usize) -> Request {
             eos_token: None,
         },
         arrival: 0.0,
+        class: 0,
     }
 }
 

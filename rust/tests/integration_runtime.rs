@@ -117,6 +117,7 @@ fn sd_equals_ar_end_to_end_on_real_model() {
                     eos_token: None,
                 },
                 arrival: 0.0,
+                class: 0,
             });
         }
         let mut done = engine.run_to_completion(200).unwrap();
@@ -165,6 +166,7 @@ fn trained_draft_gets_useful_acceptance() {
                 eos_token: None,
             },
             arrival: 0.0,
+            class: 0,
         });
     }
     engine.run_to_completion(300).unwrap();

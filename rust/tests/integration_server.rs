@@ -39,6 +39,7 @@ fn config() -> EngineConfig {
         buckets: Buckets::pow2_up_to(16),
         seed: 1,
         control: None,
+        ..Default::default()
     }
 }
 
@@ -167,5 +168,48 @@ fn malformed_requests_get_error_responses() {
     // The connection (and server) still works after errors.
     let mut client = Client::connect(server.addr).unwrap();
     assert!(client.generate("INFO ", 4, 0.0).is_ok());
+    server.stop();
+}
+
+#[test]
+fn multi_tenant_requests_and_per_class_stats() {
+    use moesd::workload::parse_tenants;
+    let mut cfg = config();
+    cfg.tenants =
+        parse_tenants("chat:prio=2,ttft=100.0,tpot=100.0,alpha=0.9;bulk:alpha=0.5").unwrap();
+    cfg.admission = moesd::scheduler::AdmissionPolicyConfig::ClassAware(
+        moesd::scheduler::ClassAwareConfig::default(),
+    );
+    let server = Server::start("127.0.0.1:0", cfg, tiny_platform_backend(9)).unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+    // Tagged requests echo their tenant and land in its stats bucket.
+    let resp = client.generate_as("chat", "INFO tenant request", 8, 0.0).unwrap();
+    assert_eq!(resp.get("tenant").unwrap().as_str().unwrap(), "chat");
+    let resp = client.generate_as("bulk", "INFO other tenant", 8, 0.0).unwrap();
+    assert_eq!(resp.get("tenant").unwrap().as_str().unwrap(), "bulk");
+    // Untagged requests route to the lowest-priority class (never the
+    // premium tier just because it is listed first).
+    let resp = client.generate("INFO untagged", 8, 0.0).unwrap();
+    assert_eq!(resp.get("tenant").unwrap().as_str().unwrap(), "bulk");
+    // Unknown tenants are a client error, not silently class 0.
+    let err = client.generate_as("nope", "INFO x", 4, 0.0);
+    assert!(err.is_err(), "unknown tenant must be rejected");
+    // Per-class stats: both classes show completions; the generous SLOs
+    // on chat report full attainment.
+    let s = client.stats().unwrap();
+    let classes = s.req_arr("classes").unwrap();
+    assert_eq!(classes.len(), 2);
+    assert_eq!(classes[0].req_str("name").unwrap(), "chat");
+    assert_eq!(classes[1].req_str("name").unwrap(), "bulk");
+    assert!(classes[0].get("requests_completed").unwrap().as_usize().unwrap() >= 1);
+    assert!(classes[1].get("requests_completed").unwrap().as_usize().unwrap() >= 2);
+    assert_eq!(
+        classes[0].get("ttft_slo_attainment").unwrap().as_f64().unwrap(),
+        1.0
+    );
+    assert!(
+        classes[1].get("ttft_slo_attainment").unwrap().as_f64().is_none(),
+        "bulk has no SLO"
+    );
     server.stop();
 }

@@ -98,6 +98,7 @@ fn adaptive_controller_on_sharded_cost_model_stays_lossless() {
                 eos_token: None,
             },
             arrival: 0.0,
+            class: 0,
         });
     }
     let done = engine.run_to_completion(1000).unwrap();

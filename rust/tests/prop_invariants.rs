@@ -66,6 +66,7 @@ fn prop_engine_always_completes_correctly() {
                     eos_token: None,
                 },
                 arrival: 0.0,
+                class: 0,
             });
         }
         let done = match engine.run_to_completion(200_000) {
@@ -283,6 +284,7 @@ fn prop_engine_sparse_equals_dense_rows_backend() {
                         eos_token: None,
                     },
                     arrival: 0.0,
+                    class: 0,
                 });
             }
             let mut done = engine.run_to_completion(10_000).unwrap();
@@ -376,6 +378,7 @@ fn prop_engine_single_rank_sharding_is_transparent() {
                         eos_token: None,
                     },
                     arrival: 0.0,
+                    class: 0,
                 });
             }
             let mut done = engine.run_to_completion(10_000).unwrap();
@@ -464,6 +467,7 @@ fn prop_engine_uniform_overrides_are_transparent() {
                         eos_token: None,
                     },
                     arrival: 0.0,
+                    class: 0,
                 });
             }
             let mut done = engine
@@ -522,6 +526,7 @@ fn prop_ragged_rounds_stay_lossless() {
                     eos_token: None,
                 },
                 arrival: 0.0,
+                class: 0,
             });
         }
         let done = engine
@@ -610,6 +615,7 @@ fn prop_measured_sigma_in_eq5_range() {
                     eos_token: None,
                 },
                 arrival: 0.0,
+                class: 0,
             });
         }
         engine
