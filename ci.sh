@@ -83,6 +83,44 @@ PYEOF
         done
         echo "multitenant.json shape OK (grep fallback)"
     fi
+
+    # Continuous-batching smoke: replay the tiny bundled trace through
+    # all four pipeline arms (lockstep / +chunked / +draft-ahead / full)
+    # and validate the sweep JSON shape. The smoke path skips the
+    # calibrated margin checks (they need the full 120s synthetic trace —
+    # `moesd bench continuous` with no flags runs them).
+    echo "== continuous smoke (tiny bundled trace)"
+    MOESD_SMOKE=1 cargo run --release --bin moesd -- bench continuous --smoke
+    echo "== validate results/continuous.json shape"
+    if command -v python3 >/dev/null 2>&1; then
+        python3 - <<'PYEOF'
+import json
+with open("results/continuous.json") as f:
+    doc = json.load(f)
+assert doc["experiment"] == "continuous", doc.get("experiment")
+arms = doc["arms"]
+assert arms, "no arms in continuous.json"
+names = {a["arm"] for a in arms}
+assert {"lockstep", "+chunked", "+draft-ahead", "full"} <= names, names
+for a in arms:
+    for key in ("load", "arm", "completed", "tokens", "ttft_p99",
+                "tpot_mean", "goodput", "hidden_frac", "prefill_chunks"):
+        assert key in a, f"arm missing {key}: {a.keys()}"
+    assert a["tokens"] > 0, f"{a['arm']} committed no tokens"
+    if a["arm"] == "lockstep":
+        assert a["prefill_chunks"] == 0, a
+    else:
+        assert a["prefill_chunks"] > 0, f"{a['arm']} never chunked a prefill"
+print(f"continuous.json shape OK ({len(arms)} arms)")
+PYEOF
+    else
+        # Minimal fallback without python3: the load-bearing keys exist.
+        for key in '"experiment"' '"arms"' '"hidden_frac"' '"prefill_chunks"'; do
+            grep -q "$key" results/continuous.json || {
+                echo "continuous.json missing $key"; exit 1; }
+        done
+        echo "continuous.json shape OK (grep fallback)"
+    fi
 fi
 
 echo "CI gate passed."

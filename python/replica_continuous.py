@@ -1,0 +1,628 @@
+#!/usr/bin/env python3
+"""Python replica of the `moesd bench continuous` sweep (PR 7).
+
+Independently re-implements, from the Rust sources:
+
+  * the PCG-XSH-RR 64/32 RNG (`util/rng.rs`) — bit-exact,
+  * the MMPP prefill-heavy trace (`workload/mod.rs`
+    `synthetic_production_heavy`) — bit-exact arrival/length stream,
+  * the roofline pricing walk (`simulator/mod.rs` `forward_time_tokens`,
+    unsharded path) for qwen2-57B-A14B on 2×GPU-A and qwen2-0.5B on
+    1×GPU-A, plus the SyntheticLm backend prices (`spec/synthetic.rs`):
+    bulk prefill, batched chunk ops, uniform propose, packed verify,
+    reject rows,
+  * the lock-step round loop (`engine/mod.rs::step_lockstep`) and the
+    continuous pipeline (`engine/continuous.rs`): batched chunked
+    prefill with residual-charged registration, draft-ahead overlap
+    budgets, per-sequence boundaries with the 1/2 coalescing guard, and
+    the exact acceptance-RNG stream (`Rng(engine_seed ^ round_counter,
+    13)`, per-sequence Bernoulli(α) draws with an extra `below(63)` on
+    each failure).
+
+It replays the same (load × arm) grid as
+`rust/src/experiments/continuous.rs` and prints the cross-arm ratios the
+bench's `check_shape` margins are calibrated against. KV capacity is not
+modeled — the bench provisions 2^20 KV tokens for a ≤32 batch, so the
+cache never binds and no preemption occurs (asserted in the Rust run by
+`preemptions == 0` staying absent from counters).
+
+Run:  python3 python/replica_continuous.py            # default grid
+      python3 python/replica_continuous.py --seeds 42,7,11
+"""
+
+import argparse
+from collections import deque
+from functools import lru_cache
+
+M64 = (1 << 64) - 1
+M32 = (1 << 32) - 1
+PCG_MULT = 6364136223846793005
+
+
+class Rng:
+    """PCG-XSH-RR 64/32, two 32-bit draws per u64 (util/rng.rs)."""
+
+    def __init__(self, seed, stream):
+        self.state = 0
+        self.inc = ((stream << 1) | 1) & M64
+        self.next_u32()
+        self.state = (self.state + seed) & M64
+        self.next_u32()
+
+    def next_u32(self):
+        old = self.state
+        self.state = (old * PCG_MULT + self.inc) & M64
+        xorshifted = (((old >> 18) ^ old) >> 27) & M32
+        rot = (old >> 59) & 31
+        return ((xorshifted >> rot) | (xorshifted << (32 - rot))) & M32 if rot else xorshifted
+
+    def next_u64(self):
+        hi = self.next_u32()
+        lo = self.next_u32()
+        return ((hi << 32) | lo) & M64
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        while True:
+            x = self.next_u64()
+            m = x * n
+            low = m & M64
+            if low >= n:
+                return m >> 64
+            threshold = ((M64 + 1) - n) % n
+            if low >= threshold:
+                return m >> 64
+
+    def bernoulli(self, p):
+        return self.f64() < p
+
+    def normal(self):
+        import math
+
+        while True:
+            u1 = self.f64()
+            if u1 > 1e-300:
+                u2 = self.f64()
+                return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+    def exponential(self, rate):
+        import math
+
+        return -math.log(max(self.f64(), 1e-300)) / rate
+
+
+# ---------------------------------------------------------------------------
+# Trace (workload/mod.rs synthetic_production_heavy → synthetic_mmpp)
+# ---------------------------------------------------------------------------
+
+HEAVY = dict(plm=256.0, pls=0.6, olm=32.0, ols=0.5, corr=0.6,
+             pclamp=(32, 1024), oclamp=(4, 128))
+
+
+def sample_lengths(rng, m):
+    import math
+
+    z_in = rng.normal()
+    eps = rng.normal()
+    rho = m["corr"]
+    z_out = rho * z_in + (1.0 - rho * rho) ** 0.5 * eps
+    p = math.exp(math.log(m["plm"]) + m["pls"] * z_in)
+    o = math.exp(math.log(m["olm"]) + m["ols"] * z_out)
+    clamp = lambda v, lo, hi: min(max(int(v), lo), hi)
+    return clamp(p, *m["pclamp"]), clamp(o, *m["oclamp"])
+
+
+def synthetic_heavy(duration_s, base_rate, seed):
+    rng = Rng(seed, 0x7ACE)
+    events = []
+    t = 0.0
+    bursting = False
+    state_end = rng.exponential(1.0 / 20.0)
+    while t < duration_s:
+        rate = 4.0 * base_rate if bursting else base_rate
+        t += rng.exponential(rate)
+        while t > state_end:
+            bursting = not bursting
+            state_end += rng.exponential(1.0 / 5.0 if bursting else 1.0 / 20.0)
+        if t >= duration_s:
+            break
+        p, o = sample_lengths(rng, HEAVY)
+        events.append((t, p, o))
+    return events
+
+
+# ---------------------------------------------------------------------------
+# Roofline pricing (simulator/mod.rs, unsharded; hardware/mod.rs gpu_a)
+# ---------------------------------------------------------------------------
+
+EFF_C, EFF_M = 0.35, 0.80
+
+
+class Plat:
+    def __init__(self, n):
+        self.n = n
+        self.flops = 312e12 * n
+        self.bw = 2039e9 * n
+        self.ic = 300e9
+        self.lat = 10e-6
+
+    def op(self, flops, wbytes, abytes):
+        return max(flops / (self.flops * EFF_C),
+                   wbytes / (self.bw * EFF_M) + abytes / (self.bw * EFF_M))
+
+    def allreduce(self, nbytes):
+        if self.n <= 1:
+            return 0.0
+        return self.lat + 2.0 * (self.n - 1) / self.n * nbytes / self.ic
+
+
+class Arch:
+    def __init__(self, h, layers, heads, kv_heads, hd, vocab, moe=None, inter=None):
+        self.h, self.layers, self.heads, self.kv_heads, self.hd = h, layers, heads, kv_heads, hd
+        self.vocab, self.moe, self.inter = vocab, moe, inter
+        self.dt = 2.0
+        q = h * heads * hd
+        kv = 2 * h * kv_heads * hd
+        o = heads * hd * h
+        self.attn_params = q + kv + o
+        self.kv_bytes_tok = 2 * layers * kv_heads * hd * self.dt
+        self.step_overhead = 150e-6 + layers * 40e-6
+
+
+TARGET = Arch(3584, 28, 28, 4, 128, 151936, moe=(64, 8, 2560, 20480))
+DRAFT = Arch(896, 24, 14, 2, 64, 151936, inter=4864)
+TPLAT, DPLAT = Plat(2), Plat(1)
+
+
+def fwd(arch, plat, b, tokens, ctx):
+    assert b > 0 and tokens > 0
+    t = float(tokens)
+    dt, h, L = arch.dt, float(arch.h), float(arch.layers)
+    total = plat.op(0.0, 0.0, t * h * dt) + arch.step_overhead
+    attn_flops = t * (2.0 * arch.attn_params + 4.0 * arch.heads * arch.hd * ctx)
+    kv_read = b * ctx * arch.kv_bytes_tok / L
+    total += L * plat.op(attn_flops, arch.attn_params * dt, kv_read + 4.0 * t * h * dt)
+    if arch.moe:
+        E, K, ei, si = arch.moe
+        total += L * (plat.op(t * 2.0 * h * E, h * E * dt, t * h * dt)
+                      + plat.op(t * 6.0 * h * si, 3.0 * h * si * dt, 2.0 * t * h * dt))
+        n_act = E * (1.0 - ((E - K) / E) ** t)
+        load = t * K / max(n_act, 1e-9)
+        total += L * plat.op(n_act * load * 6.0 * h * ei,
+                             n_act * 3.0 * h * ei * dt,
+                             2.0 * t * K * h * dt)
+    else:
+        inter = arch.inter
+        total += L * plat.op(t * 6.0 * h * inter, 3.0 * h * inter * dt, 2.0 * t * h * dt)
+    total += L * 2.0 * plat.allreduce(t * h * dt)
+    total += plat.op(t * 2.0 * h * arch.vocab, arch.vocab * h * dt, t * arch.vocab * dt)
+    return total
+
+
+@lru_cache(maxsize=None)
+def tT(b, tokens, ctx):
+    return fwd(TARGET, TPLAT, b, tokens, ctx)
+
+
+@lru_cache(maxsize=None)
+def tD(b, tokens, ctx):
+    return fwd(DRAFT, DPLAT, b, tokens, ctx)
+
+
+CTX = 512  # SyntheticLm::ctx_for_pricing
+GAMMA = 4
+ALPHA = 0.9
+MAX_BATCH = 32
+SYNTH_VOCAB = 64
+
+
+def prefill_cost(prompt_lens):
+    maxp = max(p - 1 for p in prompt_lens)
+    if maxp == 0:
+        return 0.0
+    b = len(prompt_lens)
+    return tT(b, b * maxp, maxp) + tD(b, b * maxp, maxp)
+
+
+def chunk_op_cost(parts):  # [(tokens, ctx)] — SyntheticLm::prefill_chunks_cost
+    total = sum(tok for tok, _ in parts)
+    if total == 0:
+        return 0.0
+    b = len(parts)
+    cmax = max(c + tok for tok, c in parts)
+    return tT(b, total, cmax) + tD(b, total, cmax)
+
+
+def propose_cost(b):  # uniform γ: γ sequential single-token draft forwards
+    return GAMMA * tD(b, b, CTX)
+
+
+def verify_cost(b, rows):
+    return tT(b, rows, CTX)
+
+
+def reject_cost(rows):
+    return 40e-6 + rows * TARGET.vocab * 4.0 / TPLAT.bw
+
+
+# ---------------------------------------------------------------------------
+# Engines
+# ---------------------------------------------------------------------------
+
+
+class Seq:
+    __slots__ = ("rid", "plen", "need", "arrival", "gen", "first")
+
+    def __init__(self, rid, plen, need, arrival):
+        self.rid, self.plen, self.need, self.arrival = rid, plen, need, arrival
+        self.gen = 0
+        self.first = None
+
+
+def draw_accepts(rng, n):
+    """One propose call's acceptance draws for n sequences (γ=4 each):
+    per g a Bernoulli(α), plus a below(vocab-1) draw on each failure.
+    Accepted = leading success run (greedy verify)."""
+    accs = []
+    for _ in range(n):
+        acc, run = 0, True
+        for _ in range(GAMMA):
+            if rng.bernoulli(ALPHA):
+                if run:
+                    acc += 1
+            else:
+                run = False
+                rng.below(SYNTH_VOCAB - 1)
+        accs.append(acc)
+    return accs
+
+
+class Metrics:
+    def __init__(self):
+        self.tokens = 0
+        self.rounds = 0
+        self.batch_sum = 0
+        self.t_draft = self.t_hidden = self.t_verify = self.t_reject = self.t_prefill = 0.0
+        self.chunks = 0
+        self.done = []  # (arrival, first, finished, n_tokens)
+
+
+class Lockstep:
+    def __init__(self, reqs, seed):
+        self.queue = deque(reqs)
+        self.running = []
+        self.clock = 0.0
+        self.rc = 0
+        self.stream = seed
+        self.m = Metrics()
+
+    def idle(self):
+        return not self.queue and not self.running
+
+    def step(self):
+        if not self.running and self.queue and self.queue[0].arrival > self.clock:
+            self.clock = self.queue[0].arrival
+        admitted = []
+        while (self.queue and len(self.running) + len(admitted) < MAX_BATCH
+               and self.queue[0].arrival <= self.clock):
+            admitted.append(self.queue.popleft())
+        if admitted:
+            cost = prefill_cost([r.plen for r in admitted])
+            self.clock += cost
+            self.m.t_prefill += cost
+            self.running.extend(admitted)
+        if not self.running:
+            return
+        b = len(self.running)
+        self.m.rounds += 1
+        self.m.batch_sum += b
+        self.rc += 1
+        accs = draw_accepts(Rng((self.stream ^ self.rc) & M64, 13), b)
+        d, v, r = propose_cost(b), verify_cost(b, (GAMMA + 1) * b), reject_cost((GAMMA + 1) * b)
+        self.clock += d + v + r
+        self.m.t_draft += d
+        self.m.t_verify += v
+        self.m.t_reject += r
+        still = []
+        for s, acc in zip(self.running, accs):
+            if s.first is None:
+                s.first = self.clock
+            emit = min(acc + 1, s.need - s.gen)
+            s.gen += emit
+            self.m.tokens += emit
+            if s.gen >= s.need:
+                self.m.done.append((s.arrival, s.first, self.clock, s.need))
+            else:
+                still.append(s)
+        self.running = still
+
+
+def select_cohort(cands, t_floor, per_seq):
+    """(index, ready_at) candidates → (members, t_start). Port of
+    engine/continuous.rs::select_cohort."""
+    if not cands:
+        return [], t_floor
+    if not per_seq:
+        t = t_floor
+        for _, r in cands:
+            t = max(t, r)
+        return [i for i, _ in cands], t
+    cut = t_floor
+    if not any(r <= cut for _, r in cands):
+        cut = min(r for _, r in cands)
+    included = [(i, r) for i, r in cands if r <= cut]
+    if len(included) * 2 < len(cands):
+        included = list(cands)
+    t = t_floor
+    for _, r in included:
+        t = max(t, r)
+    return [i for i, _ in included], t
+
+
+class Continuous:
+    def __init__(self, reqs, seed, chunk, ahead, per_seq):
+        self.queue = deque(reqs)
+        self.running = []
+        self.phases = []  # dicts: state, ready_at, ahead / acc+gamma when drafted
+        self.prefilling = []  # [seq, done, paid]
+        self.clock = 0.0
+        self.free_d = self.free_t = 0.0
+        self.budget = 0.0
+        self.rc = 0
+        self.stream = seed
+        self.chunk, self.ahead, self.per_seq = chunk, ahead, per_seq
+        self.m = Metrics()
+
+    def idle(self):
+        return not self.queue and not self.running and not self.prefilling
+
+    def advance_serial(self, cost):
+        t_end = max(self.free_d, self.free_t) + cost
+        self.free_d = self.free_t = t_end
+        self.clock = max(self.clock, t_end)
+        return t_end
+
+    def step(self):
+        if not self.running and not self.prefilling:
+            if self.queue and self.queue[0].arrival > self.clock:
+                self.clock = self.queue[0].arrival
+            self.free_d = max(self.free_d, self.clock)
+            self.free_t = max(self.free_t, self.clock)
+        self.admit()
+        self.chunk_work()
+        if not self.running:
+            return
+        self.propose_op()
+        self.verify_commit_op()
+
+    def admit(self):
+        admitted = []
+        while (self.queue
+               and len(self.running) + len(self.prefilling) + len(admitted) < MAX_BATCH
+               and self.queue[0].arrival <= self.clock):
+            admitted.append(self.queue.popleft())
+        if not admitted:
+            return
+        if self.chunk is None:
+            cost = prefill_cost([r.plen for r in admitted])
+            t_end = self.advance_serial(cost)
+            self.m.t_prefill += cost
+            for r in admitted:
+                self.running.append(r)
+                self.phases.append({"st": "ready", "t": t_end, "ah": False})
+        else:
+            for r in admitted:
+                self.prefilling.append([r, 0, 0.0])
+
+    def register_ready(self):
+        ready = [e for e in self.prefilling if e[1] >= e[0].plen - 1]
+        if not ready:
+            return
+        self.prefilling = [e for e in self.prefilling if e[1] < e[0].plen - 1]
+        cost = prefill_cost([e[0].plen for e in ready])
+        paid = sum(e[2] for e in ready)
+        residual = max(cost - paid, 0.0)
+        if residual > 0.0:
+            self.advance_serial(residual)
+            self.m.t_prefill += residual
+        ready_at = max(self.free_d, self.free_t)
+        for e in ready:
+            self.running.append(e[0])
+            self.phases.append({"st": "ready", "t": ready_at, "ah": False})
+
+    def chunk_work(self):
+        if self.chunk is None:
+            return
+        ops = 0
+        while True:
+            self.register_ready()
+            draws = []
+            left = max(self.chunk, 1)
+            for e in self.prefilling:
+                if left == 0:
+                    break
+                take = min(left, e[0].plen - 1 - e[1])
+                draws.append((e, take))
+                left -= take
+            if not draws:
+                break
+            if ops >= 1 and self.running:
+                break
+            cost = chunk_op_cost([(take, e[1]) for e, take in draws])
+            total = sum(take for _, take in draws)
+            for e, take in draws:
+                e[1] += take
+                e[2] += cost * take / total
+            self.advance_serial(cost)
+            self.m.t_prefill += cost
+            self.m.chunks += len(draws)
+            ops += 1
+
+    def propose_op(self):
+        if not self.per_seq and any(p["st"] == "drafted" for p in self.phases):
+            return
+        cands = [(i, p["t"]) for i, p in enumerate(self.phases) if p["st"] == "ready"]
+        t_floor = self.free_d if self.ahead else max(self.free_d, self.free_t)
+        members, _ = select_cohort(cands, t_floor, self.per_seq)
+        if not members:
+            return
+        b = len(members)
+        self.rc += 1
+        ready_max = max(self.phases[i]["t"] for i in members)
+        t_start = max(t_floor, ready_max)
+        elig = ([k for k in range(b) if self.phases[members[k]]["ah"]]
+                if self.ahead else [])
+        if not elig or len(elig) == b:
+            accs = draw_accepts(Rng((self.stream ^ self.rc) & M64, 13), b)
+            cost = propose_cost(b)
+            hidden = min(cost, self.budget) if elig else 0.0
+            total_cost = cost
+        else:
+            rest = [k for k in range(b) if k not in elig]
+            accs = [0] * b
+            total_cost, hidden = 0.0, 0.0
+            for sub, overlapped in ((elig, True), (rest, False)):
+                sub_accs = draw_accepts(Rng((self.stream ^ self.rc) & M64, 13), len(sub))
+                self.rc += 1
+                cost = propose_cost(len(sub))
+                total_cost += cost
+                if overlapped:
+                    hidden = min(cost, self.budget)
+                for slot, a in zip(sub, sub_accs):
+                    accs[slot] = a
+        self.budget -= hidden
+        exposed = total_cost - hidden
+        self.m.t_draft += total_cost
+        self.m.t_hidden += hidden
+        t_end = t_start + exposed
+        self.free_d = max(self.free_d, t_end)
+        if not self.ahead:
+            self.free_t = max(self.free_t, t_end)
+            self.clock = max(self.clock, t_end)
+        for k, i in enumerate(members):
+            self.phases[i] = {"st": "drafted", "t": t_end, "acc": accs[k]}
+
+    def verify_commit_op(self):
+        cands = [(i, p["t"]) for i, p in enumerate(self.phases) if p["st"] == "drafted"]
+        if not cands:
+            return
+        t_floor = self.free_t if self.ahead else max(self.free_t, self.free_d)
+        members, t_start = select_cohort(cands, t_floor, self.per_seq)
+        if not members:
+            return
+        b = len(members)
+        v = verify_cost(b, (GAMMA + 1) * b)
+        r = reject_cost((GAMMA + 1) * b)
+        t_end = t_start + v + r
+        self.free_t = t_end
+        if not self.ahead:
+            self.free_d = max(self.free_d, t_end)
+        self.clock = max(self.clock, t_end)
+        self.budget = v
+        self.m.t_verify += v
+        self.m.t_reject += r
+        self.m.rounds += 1
+        self.m.batch_sum += b
+        finished = []
+        for i in members:
+            s = self.running[i]
+            acc = self.phases[i]["acc"]
+            if s.first is None:
+                s.first = self.clock
+            emit = min(acc + 1, s.need - s.gen)
+            s.gen += emit
+            self.m.tokens += emit
+            full = acc == GAMMA
+            self.phases[i] = {"st": "ready", "t": t_end, "ah": self.ahead and full}
+            if s.gen >= s.need:
+                finished.append(i)
+        for i in reversed(finished):
+            s = self.running.pop(i)
+            self.phases.pop(i)
+            self.m.done.append((s.arrival, s.first, self.clock, s.need))
+
+
+# ---------------------------------------------------------------------------
+# Sweep
+# ---------------------------------------------------------------------------
+
+
+def pct(xs, q):
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    import math
+
+    rank = min(max(int(math.ceil(q * len(xs))), 1), len(xs))
+    return xs[rank - 1]
+
+
+def run_arm(events, load, seed, arm, chunk):
+    scaled = [(t / load, p, o) for t, p, o in events]
+    horizon = max(scaled[-1][0], 1e-6)
+    reqs = [Seq(i, p, o, t) for i, (t, p, o) in enumerate(scaled)]
+    if arm == "lockstep":
+        e = Lockstep(reqs, seed)
+    else:
+        ahead = arm in ("+draft-ahead", "full")
+        per_seq = arm == "full"
+        e = Continuous(reqs, seed, chunk, ahead, per_seq)
+    guard = 0
+    while not e.idle() and e.clock < horizon:
+        e.step()
+        guard += 1
+        assert guard < 400_000, "step guard"
+    m = e.m
+    clock = max(e.clock, 1e-9)
+    ttfts = [f - a for a, f, _, _ in m.done]
+    tpots = [(fin - f) / (n - 1) if n > 1 else 0.0 for _, f, fin, n in m.done]
+    return dict(
+        arm=arm, load=load, completed=len(m.done), tokens=m.tokens, clock=clock,
+        goodput=m.tokens / clock,
+        ttft_mean=sum(ttfts) / len(ttfts) if ttfts else 0.0,
+        ttft_p99=pct(ttfts, 0.99),
+        tpot_mean=sum(tpots) / len(tpots) if tpots else 0.0,
+        tpot_p99=pct(tpots, 0.99),
+        hidden_frac=m.t_hidden / m.t_draft if m.t_draft > 0 else 0.0,
+        chunks=m.chunks,
+        prefill_s=m.t_prefill,
+    )
+
+
+ARMS = ["lockstep", "+chunked", "+draft-ahead", "full"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", default="42,7,11")
+    ap.add_argument("--loads", default="0.5,1.5,3.0")
+    ap.add_argument("--chunk", type=int, default=512)
+    args = ap.parse_args()
+    seeds = [int(s) for s in args.seeds.split(",")]
+    loads = [float(s) for s in args.loads.split(",")]
+
+    for seed in seeds:
+        events = synthetic_heavy(120.0, 4.0, seed)
+        print(f"\n=== seed {seed}: {len(events)} events, "
+              f"mean prompt {sum(p for _, p, _ in events) / len(events):.0f}, "
+              f"mean output {sum(o for _, _, o in events) / len(events):.1f} ===")
+        for load in loads:
+            rows = {arm: run_arm(events, load, seed, arm, args.chunk) for arm in ARMS}
+            base = rows["lockstep"]
+            print(f"  load {load}x  (offered {len(events)} in {120.0 / load:.0f}s)")
+            for arm in ARMS:
+                r = rows[arm]
+                rel = "" if arm == "lockstep" else (
+                    f"   [vs lockstep: ttft_p99 {r['ttft_p99'] / max(base['ttft_p99'], 1e-12):.3f}x"
+                    f" tpot {r['tpot_mean'] / max(base['tpot_mean'], 1e-12):.3f}x"
+                    f" goodput {r['goodput'] / max(base['goodput'], 1e-12):.3f}x]")
+                print(f"    {arm:>12}: done {r['completed']:>4} ttft p99 {r['ttft_p99']:8.3f}s"
+                      f" mean {r['ttft_mean']:7.3f}s tpot {r['tpot_mean']:.5f}s"
+                      f" goodput {r['goodput']:8.1f} tok/s hid {r['hidden_frac']:.2f}"
+                      f" prefill {r['prefill_s']:6.1f}s{rel}")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,7 +23,7 @@ use moesd::benchlib::{
     banner, bench_record_json, compare_to_baseline, repo_path, summarize, time_reps,
     write_json_report, write_report, Json,
 };
-use moesd::engine::{Engine, EngineConfig};
+use moesd::engine::{Engine, EngineConfig, PipelineConfig};
 use moesd::hardware::platform_2x_gpu_a;
 use moesd::kvcache::{KvConfig, KvManager};
 use moesd::sampling::{verify_chain, verify_chain_views, LogitsView};
@@ -42,8 +42,9 @@ fn dense_one_hot(tok: u32, vocab: usize) -> Vec<f64> {
 }
 
 /// Build a decode-steady-state engine at B=32, γ=4 on the synthetic
-/// backend (sparse or dense-rows reference) and the given vocab.
-fn steady_engine(vocab: usize, dense_rows: bool) -> Engine<SyntheticLm> {
+/// backend (sparse or dense-rows reference) and the given vocab, under
+/// the given pipeline mode (lock-step default or the continuous engine).
+fn steady_engine(vocab: usize, dense_rows: bool, pipeline: PipelineConfig) -> Engine<SyntheticLm> {
     let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
     let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
     let mut backend = SyntheticLm::new(target, draft, 0.9, 3).with_vocab(vocab);
@@ -62,6 +63,7 @@ fn steady_engine(vocab: usize, dense_rows: bool) -> Engine<SyntheticLm> {
                 admit_reserve_tokens: 1 << 12,
                 tpot_slo: None,
             },
+            pipeline,
             ..Default::default()
         },
         backend,
@@ -188,11 +190,12 @@ fn main() {
     // --- engine step at B=32, γ=4: sparse path vs dense-rows reference ------
     let mut engine_bench = |vocab: usize,
                             dense_rows: bool,
+                            pipeline: PipelineConfig,
                             warmup: usize,
                             n: usize,
                             name: &str|
      -> (f64, f64) {
-        let mut engine = steady_engine(vocab, dense_rows);
+        let mut engine = steady_engine(vocab, dense_rows, pipeline);
         let secs = time_reps(
             || {
                 engine.step().unwrap();
@@ -208,6 +211,7 @@ fn main() {
     let (wall64, sim64) = engine_bench(
         64,
         false,
+        PipelineConfig::default(),
         reps(20),
         reps(300),
         "engine_step_b32_gamma4 (wall)",
@@ -215,14 +219,27 @@ fn main() {
     let (wall_real, sim_real) = engine_bench(
         REAL_VOCAB,
         false,
+        PipelineConfig::default(),
         reps(20),
         reps(300),
         "engine_step_b32_gamma4_vocab151936 (wall)",
+    );
+    // Continuous pipeline (chunked prefill + draft-ahead + per-seq
+    // boundaries) at the same shapes: the event-driven step must hold
+    // the same coordinator budget as the lock-step round.
+    let (wall_cont, sim_cont) = engine_bench(
+        64,
+        false,
+        PipelineConfig::full(512),
+        reps(20),
+        reps(300),
+        "engine_step_continuous_full_b32 (wall)",
     );
     // Dense-rows reference (pre-sparse hot path), same shapes.
     let (dense64, _) = engine_bench(
         64,
         true,
+        PipelineConfig::default(),
         reps(20),
         reps(300),
         "engine_step_dense_rows_vocab64 (wall)",
@@ -230,6 +247,7 @@ fn main() {
     let (dense_real, _) = engine_bench(
         REAL_VOCAB,
         true,
+        PipelineConfig::default(),
         1,
         if smoke { 3 } else { 20 },
         "engine_step_dense_rows_vocab151936 (wall)",
@@ -254,6 +272,23 @@ fn main() {
         assert!(
             ratio < 0.05,
             "L3 overhead {:.2}% exceeds the 5% §Perf budget at vocab {vocab}",
+            ratio * 100.0
+        );
+    }
+    // The continuous engine's per-step bookkeeping (phase tracking,
+    // cohort selection, chunk draws) must fit the same budget.
+    {
+        let ratio = wall_cont / sim_cont;
+        lines.push(format!(
+            "  continuous full pipeline: simulated model step = {:.3}ms; coordinator \
+             wall/step = {:.3}ms ({:.2}% of model time)",
+            sim_cont * 1e3,
+            wall_cont * 1e3,
+            ratio * 100.0
+        ));
+        assert!(
+            ratio < 0.05,
+            "continuous-engine overhead {:.2}% exceeds the 5% §Perf budget",
             ratio * 100.0
         );
     }
@@ -329,6 +364,7 @@ fn main() {
                 ),
                 ("engine_step_wall_s_vocab64", Json::Num(wall64)),
                 ("engine_step_wall_s_vocab151936", Json::Num(wall_real)),
+                ("engine_step_continuous_wall_s", Json::Num(wall_cont)),
                 (
                     "engine_step_sparse_speedup_vocab64",
                     Json::Num(step_speedup_64),

@@ -72,6 +72,22 @@ pub struct Config {
     /// Arrival-trace CSV path (`t,prompt_len,output_len`) for the
     /// trace-replaying benches; empty = no trace.
     pub trace: String,
+    /// Continuous batching: replace the lock-step round with the
+    /// event-driven decode pipeline (chunked prefill + draft-ahead
+    /// overlap + per-sequence round boundaries). Synthetic mode only —
+    /// the pipeline's overlap pricing needs the virtual clock.
+    pub continuous: bool,
+    /// Per-op token budget for continuous-mode chunked prefill (each
+    /// chunk op draws up to this many prompt tokens across the prefill
+    /// queue). Only consulted when `continuous` is set. The default
+    /// (512) sits at the weight/compute roofline crossover of the
+    /// default MoE target, so chunk ops amortize expert weight reads
+    /// like a bulk prefill.
+    pub prefill_chunk: usize,
+    /// Server trace recorder: write every submitted request as a
+    /// `t,prompt_len,output_len` CSV row to this path on shutdown
+    /// (`--record-trace PATH`); empty = off.
+    pub record_trace: String,
 }
 
 impl Default for Config {
@@ -95,6 +111,9 @@ impl Default for Config {
             tenants: String::new(),
             mix_admission: false,
             trace: String::new(),
+            continuous: false,
+            prefill_chunk: 512,
+            record_trace: String::new(),
         }
     }
 }
@@ -137,6 +156,9 @@ impl Config {
                 .and_then(Json::as_bool)
                 .unwrap_or(false),
             trace: str_or("trace", ""),
+            continuous: j.get("continuous").and_then(Json::as_bool).unwrap_or(false),
+            prefill_chunk: usize_or("prefill_chunk", d.prefill_chunk),
+            record_trace: str_or("record_trace", ""),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -183,6 +205,16 @@ impl Config {
             !(self.mix_admission && !self.adaptive),
             "mix-aware admission needs the adaptive control plane's priced \
              regime oracle (use --adaptive)"
+        );
+        anyhow::ensure!(
+            self.prefill_chunk >= 1,
+            "prefill_chunk must be >= 1 (it is the chunk size in tokens, \
+             not an on/off switch — use `continuous` for that)"
+        );
+        anyhow::ensure!(
+            !(self.continuous && self.mode == Mode::Hlo),
+            "continuous batching requires synthetic mode (the pipeline's \
+             overlap pricing needs the virtual clock)"
         );
         Ok(())
     }
@@ -261,6 +293,11 @@ impl Config {
             gamma_overrides: std::collections::HashMap::new(),
             tenants,
             admission,
+            pipeline: if self.continuous {
+                crate::engine::PipelineConfig::full(self.prefill_chunk)
+            } else {
+                crate::engine::PipelineConfig::default()
+            },
         })
     }
 
@@ -290,6 +327,9 @@ impl Config {
             ("tenants", self.tenants.as_str().into()),
             ("mix_admission", self.mix_admission.into()),
             ("trace", self.trace.as_str().into()),
+            ("continuous", self.continuous.into()),
+            ("prefill_chunk", self.prefill_chunk.into()),
+            ("record_trace", self.record_trace.as_str().into()),
         ])
     }
 }
@@ -425,6 +465,46 @@ mod tests {
         assert!(Config {
             mix_admission: true,
             tenants: "a;b".into(),
+            ..Config::default()
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn continuous_knobs_round_trip_and_reach_the_engine() {
+        use crate::engine::PipelineConfig;
+        // Default: lock-step pipeline config, exactly.
+        let e = Config::default().engine_config().unwrap();
+        assert_eq!(e.pipeline, PipelineConfig::default());
+        assert!(!e.pipeline.continuous);
+        // Continuous maps to the full pipeline with the chunk knob.
+        let c = Config {
+            continuous: true,
+            prefill_chunk: 32,
+            record_trace: "/tmp/rec.csv".into(),
+            ..Config::default()
+        };
+        c.validate().unwrap();
+        let e = c.engine_config().unwrap();
+        assert_eq!(e.pipeline, PipelineConfig::full(32));
+        assert!(e.pipeline.continuous && e.pipeline.draft_ahead);
+        assert_eq!(e.pipeline.prefill_chunk, Some(32));
+        // Round-trips through JSON.
+        let c2 = Config::from_json(&c.to_json()).unwrap();
+        assert!(c2.continuous);
+        assert_eq!(c2.prefill_chunk, 32);
+        assert_eq!(c2.record_trace, "/tmp/rec.csv");
+        // Rejections: zero chunk, continuous on the wall-clock backend.
+        assert!(Config {
+            prefill_chunk: 0,
+            ..Config::default()
+        }
+        .validate()
+        .is_err());
+        assert!(Config {
+            continuous: true,
+            mode: Mode::Hlo,
             ..Config::default()
         }
         .validate()

@@ -1,0 +1,923 @@
+//! Continuous batching: the event-driven decode pipeline.
+//!
+//! The lock-step `Engine::step_lockstep` round has three built-in stalls:
+//! every sequence waits for the slowest γᵢ in its round, a long prompt's
+//! prefill blocks all running decodes for its full duration, and the
+//! draft model sits idle while the target verifies. This module replaces
+//! the synchronous round with an event-driven pipeline over **two virtual
+//! resource timelines** — the draft model (`free_draft`) and the target
+//! model (`free_target`) — while the engine clock remains the *commit
+//! frontier* (the time by which emitted tokens exist):
+//!
+//! ```text
+//!             ┌ admission ─► [chunked prefill queue] ─► Ready ┐
+//!             │                                               ▼
+//!   queue ────┤                                   propose op (draft lane)
+//!             │                                               │ Drafted
+//!             │                                               ▼
+//!             └───────────◄─ retire ◄─ commit ◄─ verify op (target lane)
+//! ```
+//!
+//! Three independently-gated mechanisms (see [`PipelineConfig`]):
+//!
+//! - **Chunked prefill** — admitted prompts enter a prefill queue and
+//!   are processed as batched chunk ops: each op draws up to
+//!   `prefill_chunk` prompt-body tokens across the queue front (spanning
+//!   prompts), at most one op per step while decode work exists, so a
+//!   prefill wave inserts bounded bubbles between decode rounds instead
+//!   of one long stall (the Sarathi/vLLM chunked-prefill idea). Drawing
+//!   the budget across prompts keeps the op wide enough that MoE expert
+//!   weight reads amortize like a bulk prefill. Virtual-clock backends
+//!   price each op via [`crate::spec::SdBackend::prefill_chunks_cost`];
+//!   the final registration call charges only the residual above what
+//!   the chunks already paid, so wall-clock backends (which measure at
+//!   `prefill`) stay correctly priced.
+//! - **Draft-ahead** — the next round's proposal for sequences whose
+//!   previous round was *fully accepted* overlaps the previous verify:
+//!   their draft context is already final when the verify launches, so a
+//!   real deployment drafts them on the idle draft model during
+//!   verification (SP-MoE / PEARL-style pipelining). Priced as overlap
+//!   accounting: each verify op grants an `ahead_budget` equal to its
+//!   duration, and the eligible share of the next propose op hides up to
+//!   that budget (total draft spend is metered in
+//!   `metrics.time_draft_hidden`), making round time `max(draft,
+//!   verify)` instead of the sum in the fully-accepted steady state.
+//! - **Per-sequence round boundaries** — propose/verify ops take ready
+//!   *cohorts* instead of the whole batch, so a fully-accepted sequence
+//!   re-enters proposal without waiting for stragglers. A coalescing
+//!   guard defers ops smaller than half the ready set to protect verify
+//!   batch efficiency in the memory-bound regime.
+//!
+//! With all three off (`PipelineConfig { continuous: true, ..off }`), the
+//! pipeline degenerates to the lock-step loop **bit-for-bit**: every op
+//! starts at the shared resource frontier (== the clock), membership is
+//! the whole batch, and the backend-call/RNG/accounting order is
+//! identical. `rust/tests/prop_continuous.rs` pins this equivalence on
+//! random workloads.
+
+use crate::batching::{Completion, Request};
+use crate::control::RoundObservation;
+use crate::kvcache::SeqId;
+use crate::sampling::verify_chain_views;
+use crate::spec::{LogitsView, SdBackend};
+use std::collections::VecDeque;
+
+use super::{Engine, RunningSeq};
+
+/// Continuous-batching knobs (all off by default = lock-step engine).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PipelineConfig {
+    /// Use the event-driven pipeline instead of the lock-step round loop.
+    pub continuous: bool,
+    /// Chunked prefill: per-op token budget. Each chunk op processes up
+    /// to this many prompt-body tokens drawn across the front of the
+    /// prefill queue, interleaved with decode ops. `None` = bulk
+    /// prefill at admission (the lock-step behavior). Budgets well
+    /// below the weight/compute roofline crossover (~512 tokens for the
+    /// default MoE target) re-read expert weights per op and waste
+    /// bandwidth.
+    pub prefill_chunk: Option<usize>,
+    /// Overlap the next proposal of fully-accepted sequences with the
+    /// current verify (cost-overlap accounting; see the module docs).
+    pub draft_ahead: bool,
+    /// Let ready cohorts start propose/verify ops without waiting for
+    /// the whole batch (per-sequence round boundaries). `false` =
+    /// batch-synchronized rounds.
+    pub per_seq_boundaries: bool,
+}
+
+impl PipelineConfig {
+    /// The lock-step engine (identical to `Default`).
+    pub fn lockstep() -> PipelineConfig {
+        PipelineConfig::default()
+    }
+
+    /// The full pipeline: chunked prefill at `chunk` tokens, draft-ahead
+    /// overlap, per-sequence round boundaries.
+    pub fn full(chunk: usize) -> PipelineConfig {
+        PipelineConfig {
+            continuous: true,
+            prefill_chunk: Some(chunk.max(1)),
+            draft_ahead: true,
+            per_seq_boundaries: true,
+        }
+    }
+}
+
+/// Where a running sequence stands in the propose→verify cycle. The
+/// table is index-aligned with `Engine::running` (preemption and
+/// retirement remove entries from both).
+#[derive(Debug)]
+pub(super) enum Phase {
+    /// Committed through `base`; eligible for the next propose op once
+    /// the draft lane reaches `ready_at`. `ahead` marks a sequence whose
+    /// previous round was fully accepted (draft-ahead eligible).
+    Ready { ready_at: f64, ahead: bool },
+    /// Proposal done (op finished at `ready_at`); awaiting verify.
+    Drafted {
+        ready_at: f64,
+        gamma: usize,
+        tokens: Vec<u32>,
+        probs: Vec<LogitsView>,
+    },
+}
+
+impl Phase {
+    fn ready_at(&self) -> f64 {
+        match self {
+            Phase::Ready { ready_at, .. } | Phase::Drafted { ready_at, .. } => *ready_at,
+        }
+    }
+}
+
+/// A request admitted under chunked prefill, not yet fully prefilled.
+#[derive(Debug)]
+pub(super) struct Prefilling {
+    pub(super) req: Request,
+    /// Prompt-body tokens already chunk-processed.
+    done: usize,
+    /// Virtual seconds already charged for those chunks (the final
+    /// `prefill` registration charges only the residual above this).
+    paid: f64,
+}
+
+/// Mutable pipeline state. Inert (empty/zero) on the lock-step path.
+#[derive(Debug, Default)]
+pub(super) struct PipelineState {
+    /// Draft-lane frontier: virtual time the draft model is busy until.
+    free_draft: f64,
+    /// Target-lane frontier: virtual time the target model is busy until.
+    free_target: f64,
+    /// Remaining verify-window seconds the next propose op may hide
+    /// under (set to the verify cost at each verify op; draft-ahead).
+    ahead_budget: f64,
+    /// Draft cost accumulated since the last controller observation
+    /// (flushed into `RoundObservation::t_draft` at the next verify op).
+    draft_cost_unreported: f64,
+    /// Draft tokens proposed since the last controller observation.
+    proposed_unreported: u64,
+    /// Chunked-prefill queue (FIFO; sequences here hold KV and count
+    /// against the admission ceiling).
+    pub(super) prefilling: VecDeque<Prefilling>,
+    /// Per-sequence phases, index-aligned with `Engine::running`.
+    pub(super) phases: Vec<Phase>,
+}
+
+/// Pick the cohort for an op from `(running index, ready_at)` candidates.
+/// Returns the chosen indices and the op start time.
+///
+/// Batch mode: everyone, starting when the last candidate is ready.
+/// Per-sequence mode: candidates already ready at the resource frontier
+/// `t_floor` (or, if none, the earliest-ready one), with a coalescing
+/// guard — a cohort smaller than half the candidate set waits for the
+/// stragglers instead, protecting op batch efficiency in the
+/// memory-bound regime.
+fn select_cohort(cands: &[(usize, f64)], t_floor: f64, per_seq: bool) -> (Vec<usize>, f64) {
+    if cands.is_empty() {
+        return (Vec::new(), t_floor);
+    }
+    if !per_seq {
+        let t = cands.iter().fold(t_floor, |acc, &(_, r)| acc.max(r));
+        return (cands.iter().map(|&(i, _)| i).collect(), t);
+    }
+    let mut cut = t_floor;
+    if !cands.iter().any(|&(_, r)| r <= cut) {
+        cut = cands
+            .iter()
+            .map(|&(_, r)| r)
+            .fold(f64::INFINITY, f64::min);
+    }
+    let mut included: Vec<(usize, f64)> =
+        cands.iter().copied().filter(|&(_, r)| r <= cut).collect();
+    if included.len() * 2 < cands.len() {
+        included = cands.to_vec();
+    }
+    let t = included.iter().fold(t_floor, |acc, &(_, r)| acc.max(r));
+    (included.into_iter().map(|(i, _)| i).collect(), t)
+}
+
+impl<B: SdBackend> Engine<B> {
+    /// One event of the continuous pipeline: admission, at most one
+    /// batched prefill chunk op (while decode work exists), at most one
+    /// propose op and one verify+commit op.
+    pub(super) fn step_continuous(&mut self) -> anyhow::Result<Vec<Completion>> {
+        let t0 = std::time::Instant::now();
+        let mut completions = Vec::new();
+
+        // Fast-forward to the next arrival when fully drained; the
+        // resource frontiers never lag the clock.
+        if self.running.is_empty() && self.pipeline.prefilling.is_empty() {
+            if let Some(head) = self.queue.peek() {
+                if head.arrival > self.clock {
+                    self.clock = head.arrival;
+                }
+            }
+            self.pipeline.free_draft = self.pipeline.free_draft.max(self.clock);
+            self.pipeline.free_target = self.pipeline.free_target.max(self.clock);
+        }
+
+        self.admit()?;
+        self.prefill_chunk_work()?;
+
+        if self.running.is_empty() {
+            self.metrics.time_overhead += t0.elapsed().as_secs_f64();
+            return Ok(completions);
+        }
+
+        self.propose_op()?;
+        self.verify_commit_op(&mut completions)?;
+
+        self.metrics.time_overhead += t0.elapsed().as_secs_f64();
+        Ok(completions)
+    }
+
+    /// Route admitted requests into the pipeline: bulk prefill (chunking
+    /// off — identical to the lock-step admission path) or the chunked
+    /// prefill queue.
+    pub(super) fn register_admitted_continuous(
+        &mut self,
+        admitted: Vec<Request>,
+    ) -> anyhow::Result<()> {
+        match self.config.pipeline.prefill_chunk {
+            None => {
+                let mut prefill_batch = Vec::with_capacity(admitted.len());
+                for req in &admitted {
+                    // Reserve the prompt; the scheduler pre-checked capacity.
+                    if self.kv.allocate(req.id, req.prompt.len()).is_none() {
+                        anyhow::bail!("KV allocation failed after admission check");
+                    }
+                    prefill_batch.push((req.id, req.prompt.clone()));
+                }
+                let cost = self.backend.prefill(&prefill_batch)?;
+                let t_start = self.pipeline.free_draft.max(self.pipeline.free_target);
+                let t_end = t_start + cost;
+                self.pipeline.free_draft = t_end;
+                self.pipeline.free_target = t_end;
+                self.clock = self.clock.max(t_end);
+                self.metrics.time_prefill += cost;
+                for req in admitted {
+                    let prompt_len = req.prompt.len();
+                    self.running.push(RunningSeq {
+                        id: req.id,
+                        stream: req.prompt,
+                        prompt_len,
+                        base: prompt_len - 1,
+                        params: req.params,
+                        arrival: req.arrival,
+                        first_token_at: None,
+                        rounds: 0,
+                        class: req.class,
+                    });
+                    self.pipeline.phases.push(Phase::Ready {
+                        ready_at: t_end,
+                        ahead: false,
+                    });
+                }
+            }
+            Some(_) => {
+                for req in admitted {
+                    // KV for the whole prompt is claimed up front (the
+                    // scheduler pre-checked it); chunking spreads the
+                    // *compute*, not the memory footprint.
+                    if self.kv.allocate(req.id, req.prompt.len()).is_none() {
+                        anyhow::bail!("KV allocation failed after admission check");
+                    }
+                    self.pipeline
+                        .prefilling
+                        .push_back(Prefilling { req, done: 0, paid: 0.0 });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Advance the chunked-prefill queue: at most one chunk *op* per
+    /// step while decode work exists (bounded TPOT bubble), otherwise
+    /// chunk until a sequence becomes decodable. Each op draws up to
+    /// `prefill_chunk` prompt-body tokens across the *front* of the
+    /// queue (spanning prompt boundaries), so a single packed forward
+    /// amortizes weight traffic over the whole cohort — a per-prompt
+    /// batch-1 chunk would re-read every MoE expert per chunk and
+    /// inflate prefill cost severalfold. Fully-chunked prompts are
+    /// registered with the backend in one batch, charging only the cost
+    /// residual the chunks didn't already pay.
+    fn prefill_chunk_work(&mut self) -> anyhow::Result<()> {
+        let Some(budget) = self.config.pipeline.prefill_chunk else {
+            return Ok(());
+        };
+        let mut ops_this_step = 0usize;
+        loop {
+            // Register anything already fully chunked (including
+            // zero-body prompts that never need an op).
+            self.register_chunked_ready()?;
+
+            // Draw this op's token budget from the queue front. The
+            // registration pass above drained every completed entry, so
+            // all remaining entries still need body work.
+            let mut draws: Vec<(usize, usize)> = Vec::new(); // (queue idx, take)
+            let mut parts: Vec<(usize, usize)> = Vec::new(); // (tokens, ctx)
+            let mut left = budget.max(1);
+            for (qi, pf) in self.pipeline.prefilling.iter().enumerate() {
+                if left == 0 {
+                    break;
+                }
+                let body = pf.req.prompt.len().saturating_sub(1);
+                let take = left.min(body - pf.done);
+                draws.push((qi, take));
+                parts.push((take, pf.done));
+                left -= take;
+            }
+            if draws.is_empty() {
+                break;
+            }
+            if ops_this_step >= 1 && !self.running.is_empty() {
+                break;
+            }
+
+            let cost = self.backend.prefill_chunks_cost(&parts);
+            let total: usize = draws.iter().map(|&(_, take)| take).sum();
+            for &(qi, take) in &draws {
+                let pf = &mut self.pipeline.prefilling[qi];
+                pf.done += take;
+                // Apportion the op cost by token share; the batched
+                // registration below pools `paid` again, so the split
+                // only matters if a member is preempted mid-prefill.
+                pf.paid += cost * take as f64 / total as f64;
+            }
+            let t_start = self.pipeline.free_draft.max(self.pipeline.free_target);
+            let t_end = t_start + cost;
+            self.pipeline.free_draft = t_end;
+            self.pipeline.free_target = t_end;
+            self.clock = self.clock.max(t_end);
+            self.metrics.time_prefill += cost;
+            self.metrics.prefill_chunks += draws.len() as u64;
+            ops_this_step += 1;
+        }
+        Ok(())
+    }
+
+    /// Drain every fully-chunked prompt from the prefill queue and
+    /// register the batch with the backend. Virtual-clock backends
+    /// already priced the work chunk-wise, so only the residual above
+    /// the pooled chunk payments (if any) is charged; wall-clock
+    /// backends measure everything here (their chunk costs are 0).
+    fn register_chunked_ready(&mut self) -> anyhow::Result<()> {
+        let mut ready: Vec<Prefilling> = Vec::new();
+        let mut qi = 0;
+        while qi < self.pipeline.prefilling.len() {
+            let body = self.pipeline.prefilling[qi]
+                .req
+                .prompt
+                .len()
+                .saturating_sub(1);
+            if self.pipeline.prefilling[qi].done >= body {
+                ready.push(
+                    self.pipeline
+                        .prefilling
+                        .remove(qi)
+                        .expect("index checked against len"),
+                );
+            } else {
+                qi += 1;
+            }
+        }
+        if ready.is_empty() {
+            return Ok(());
+        }
+        let batch: Vec<_> = ready
+            .iter()
+            .map(|pf| (pf.req.id, pf.req.prompt.clone()))
+            .collect();
+        let cost = self.backend.prefill(&batch)?;
+        let paid: f64 = ready.iter().map(|pf| pf.paid).sum();
+        let residual = (cost - paid).max(0.0);
+        if residual > 0.0 {
+            let t_start = self.pipeline.free_draft.max(self.pipeline.free_target);
+            let t_end = t_start + residual;
+            self.pipeline.free_draft = t_end;
+            self.pipeline.free_target = t_end;
+            self.clock = self.clock.max(t_end);
+            self.metrics.time_prefill += residual;
+        }
+        let ready_at = self.pipeline.free_target.max(self.pipeline.free_draft);
+        for pf in ready {
+            let prompt_len = pf.req.prompt.len();
+            self.running.push(RunningSeq {
+                id: pf.req.id,
+                stream: pf.req.prompt,
+                prompt_len,
+                base: prompt_len - 1,
+                params: pf.req.params,
+                arrival: pf.req.arrival,
+                first_token_at: None,
+                rounds: 0,
+                class: pf.req.class,
+            });
+            self.pipeline.phases.push(Phase::Ready {
+                ready_at,
+                ahead: false,
+            });
+        }
+        Ok(())
+    }
+
+    /// One draft-propose op over the ready cohort (if any): assign γᵢ,
+    /// reserve KV (class-aware preemption on pressure), run the draft,
+    /// and move the cohort to `Drafted`.
+    fn propose_op(&mut self) -> anyhow::Result<()> {
+        let per_seq = self.config.pipeline.per_seq_boundaries;
+        let ahead_on = self.config.pipeline.draft_ahead;
+
+        // Batch-synchronized boundaries: propose only at a clean round
+        // boundary (nobody mid-verify); mid-flight joins wait as Ready.
+        if !per_seq
+            && self
+                .pipeline
+                .phases
+                .iter()
+                .any(|p| matches!(p, Phase::Drafted { .. }))
+        {
+            return Ok(());
+        }
+
+        let cands: Vec<(usize, f64)> = self
+            .pipeline
+            .phases
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| matches!(p, Phase::Ready { .. }))
+            .map(|(i, p)| (i, p.ready_at()))
+            .collect();
+        let t_floor = if ahead_on {
+            self.pipeline.free_draft
+        } else {
+            self.pipeline.free_draft.max(self.pipeline.free_target)
+        };
+        let (mut members, _) = select_cohort(&cands, t_floor, per_seq);
+        if members.is_empty() {
+            return Ok(());
+        }
+
+        // γᵢ for the cohort: controller-owned when configured, else
+        // static overrides on top of the uniform config.gamma — the same
+        // precedence as the lock-step round.
+        self.scratch.seq_ids.clear();
+        for &i in &members {
+            self.scratch.seq_ids.push(self.running[i].id);
+        }
+        self.scratch.gammas.clear();
+        match self.controller.as_mut() {
+            Some(ctl) => ctl.gammas_for_round(&self.scratch.seq_ids, &mut self.scratch.gammas),
+            None if self.config.gamma_overrides.is_empty() => self
+                .scratch
+                .gammas
+                .extend(std::iter::repeat(self.config.gamma).take(members.len())),
+            None => {
+                for &i in &members {
+                    self.scratch.gammas.push(
+                        self.config
+                            .gamma_overrides
+                            .get(&self.running[i].id)
+                            .copied()
+                            .unwrap_or(self.config.gamma),
+                    );
+                }
+            }
+        }
+
+        // --- capacity reservation: γᵢ+1 tokens per cohort member -----------
+        // Same victim policy as the lock-step round: lowest-priority
+        // class first, least generated progress within it; only a
+        // strictly lower-priority victim spares the starved member.
+        let mut k = 0;
+        while k < members.len() {
+            let i = members[k];
+            let id = self.running[i].id;
+            if self.kv.append(id, self.scratch.gammas[k] + 1).is_some() {
+                k += 1;
+                continue;
+            }
+            let my_prio = self.class_priority(self.running[i].class);
+            let victim = self
+                .running
+                .iter()
+                .enumerate()
+                .filter(|(j, s)| *j != i && self.class_priority(s.class) < my_prio)
+                .min_by_key(|(j, s)| (self.class_priority(s.class), s.generated(), *j))
+                .map(|(j, _)| j);
+            let j = victim.unwrap_or(i);
+            self.preempt(j); // also drops phases[j]
+            if let Some(pos) = members.iter().position(|&m| m == j) {
+                members.remove(pos);
+                self.scratch.gammas.remove(pos);
+                self.scratch.seq_ids.remove(pos);
+                if pos < k {
+                    k -= 1;
+                }
+                // pos == k: the starved member itself went; the next
+                // member retries against the freed capacity.
+            }
+            for m in members.iter_mut() {
+                if *m > j {
+                    *m -= 1;
+                }
+            }
+        }
+        if members.is_empty() {
+            return Ok(());
+        }
+
+        let b_op = members.len();
+        let gamma_max = self.scratch.gammas.iter().copied().max().unwrap_or(0);
+        let total_gamma: usize = self.scratch.gammas.iter().sum();
+        self.round_counter += 1;
+
+        self.scratch.temps.clear();
+        for &i in &members {
+            self.scratch.temps.push(self.running[i].params.temperature);
+        }
+
+        // Op start: the cohort's last ready_at, floored by the draft
+        // lane (and the target lane too when draft-ahead is off — the
+        // serial regime where both models share one execution stream).
+        let ready_max = members
+            .iter()
+            .fold(f64::MIN, |acc, &i| acc.max(self.pipeline.phases[i].ready_at()));
+        let t_start = t_floor.max(ready_max);
+
+        let (mut tokens, mut probs): (Vec<Vec<u32>>, Vec<Vec<LogitsView>>);
+        let mut exposed = 0.0f64;
+        if gamma_max > 0 {
+            if self.scratch.pending.len() < b_op {
+                self.scratch.pending.resize_with(b_op, Vec::new);
+            }
+            for (k, &i) in members.iter().enumerate() {
+                let s = &self.running[i];
+                let dlen = self.backend.draft_len(s.id);
+                let buf = &mut self.scratch.pending[k];
+                buf.clear();
+                buf.extend_from_slice(&s.stream[dlen..=s.base]);
+            }
+
+            // Draft-ahead split: the eligible share (fully accepted last
+            // round, so its draft context was final during the previous
+            // verify) runs as its own op and hides under the verify
+            // window granted by `ahead_budget`.
+            let elig: Vec<usize> = if ahead_on {
+                (0..b_op)
+                    .filter(|&k| {
+                        self.scratch.gammas[k] > 0
+                            && matches!(
+                                self.pipeline.phases[members[k]],
+                                Phase::Ready { ahead: true, .. }
+                            )
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+
+            let mut total_cost = 0.0f64;
+            let mut hidden = 0.0f64;
+            if elig.is_empty() || elig.len() == b_op {
+                let out = match self.backend.propose(
+                    &self.scratch.seq_ids,
+                    &self.scratch.pending[..b_op],
+                    &self.scratch.gammas,
+                    &self.scratch.temps,
+                    self.round_counter,
+                ) {
+                    Ok(out) => out,
+                    Err(e) => {
+                        self.abort_members(&members);
+                        return Err(e.context("draft propose failed (cohort rolled back)"));
+                    }
+                };
+                total_cost = out.cost;
+                if !elig.is_empty() {
+                    hidden = out.cost.min(self.pipeline.ahead_budget);
+                }
+                tokens = out.tokens;
+                probs = out.probs;
+            } else {
+                // Mixed cohort: two draft ops, overlap-priced separately.
+                let rest: Vec<usize> = (0..b_op).filter(|k| !elig.contains(k)).collect();
+                tokens = vec![Vec::new(); b_op];
+                probs = vec![Vec::new(); b_op];
+                for (sub, overlapped) in [(&elig, true), (&rest, false)] {
+                    let ids: Vec<SeqId> =
+                        sub.iter().map(|&k| self.scratch.seq_ids[k]).collect();
+                    let pend: Vec<Vec<u32>> =
+                        sub.iter().map(|&k| self.scratch.pending[k].clone()).collect();
+                    let gam: Vec<usize> =
+                        sub.iter().map(|&k| self.scratch.gammas[k]).collect();
+                    let tmp: Vec<f64> =
+                        sub.iter().map(|&k| self.scratch.temps[k]).collect();
+                    let out = match self
+                        .backend
+                        .propose(&ids, &pend, &gam, &tmp, self.round_counter)
+                    {
+                        Ok(out) => out,
+                        Err(e) => {
+                            self.abort_members(&members);
+                            return Err(e.context("draft propose failed (cohort rolled back)"));
+                        }
+                    };
+                    self.round_counter += 1; // unique seed per sub-op
+                    total_cost += out.cost;
+                    if overlapped {
+                        hidden = out.cost.min(self.pipeline.ahead_budget);
+                    }
+                    for (slot, (t, p)) in sub
+                        .iter()
+                        .zip(out.tokens.into_iter().zip(out.probs.into_iter()))
+                    {
+                        tokens[*slot] = t;
+                        probs[*slot] = p;
+                    }
+                }
+            }
+            self.pipeline.ahead_budget -= hidden;
+            exposed = total_cost - hidden;
+            self.metrics.time_draft += total_cost;
+            self.metrics.time_draft_hidden += hidden;
+            self.metrics.draft_tokens_proposed += total_gamma as u64;
+            self.pipeline.draft_cost_unreported += total_cost;
+            self.pipeline.proposed_unreported += total_gamma as u64;
+        } else {
+            // AR cohort (all γᵢ = 0): no draft forwards — straight to
+            // the verify op with empty drafts, zero draft cost.
+            tokens = vec![Vec::new(); b_op];
+            probs = vec![Vec::new(); b_op];
+        }
+
+        let t_end = t_start + exposed;
+        self.pipeline.free_draft = self.pipeline.free_draft.max(t_end);
+        if !ahead_on {
+            // Serial regime: the models share one execution stream, so
+            // draft time also occupies the target lane and the commit
+            // frontier tracks it (exactly the lock-step clock rule).
+            self.pipeline.free_target = self.pipeline.free_target.max(t_end);
+            self.clock = self.clock.max(t_end);
+        }
+
+        for (k, &i) in members.iter().enumerate() {
+            self.pipeline.phases[i] = Phase::Drafted {
+                ready_at: t_end,
+                gamma: self.scratch.gammas[k],
+                tokens: std::mem::take(&mut tokens[k]),
+                probs: std::mem::take(&mut probs[k]),
+            };
+        }
+        Ok(())
+    }
+
+    /// One target verify + rejection-sample + commit op over the drafted
+    /// cohort (if any). Closes the control loop and retires finished
+    /// sequences.
+    fn verify_commit_op(&mut self, completions: &mut Vec<Completion>) -> anyhow::Result<()> {
+        let per_seq = self.config.pipeline.per_seq_boundaries;
+        let ahead_on = self.config.pipeline.draft_ahead;
+
+        let cands: Vec<(usize, f64)> = self
+            .pipeline
+            .phases
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| matches!(p, Phase::Drafted { .. }))
+            .map(|(i, p)| (i, p.ready_at()))
+            .collect();
+        if cands.is_empty() {
+            return Ok(());
+        }
+        let t_floor = if ahead_on {
+            self.pipeline.free_target
+        } else {
+            self.pipeline.free_target.max(self.pipeline.free_draft)
+        };
+        let (members, t_start) = select_cohort(&cands, t_floor, per_seq);
+        if members.is_empty() {
+            return Ok(());
+        }
+
+        // Assemble the op inputs; the drafts move out of their phases
+        // (they return to `Ready` after the commit).
+        self.scratch.seq_ids.clear();
+        self.scratch.gammas.clear();
+        self.scratch.temps.clear();
+        self.scratch.feeds.clear();
+        let mut drafts: Vec<Vec<u32>> = Vec::with_capacity(members.len());
+        let mut dprobs: Vec<Vec<LogitsView>> = Vec::with_capacity(members.len());
+        for &i in &members {
+            let s = &self.running[i];
+            self.scratch.seq_ids.push(s.id);
+            self.scratch.temps.push(s.params.temperature);
+            self.scratch.feeds.push(s.stream[s.base]);
+            match &mut self.pipeline.phases[i] {
+                Phase::Drafted { gamma, tokens, probs, .. } => {
+                    self.scratch.gammas.push(*gamma);
+                    drafts.push(std::mem::take(tokens));
+                    dprobs.push(std::mem::take(probs));
+                }
+                Phase::Ready { .. } => unreachable!("cohort members are Drafted"),
+            }
+        }
+
+        let verify = match self.backend.verify(
+            &self.scratch.seq_ids,
+            &self.scratch.feeds,
+            &drafts,
+            &self.scratch.temps,
+        ) {
+            Ok(v) => v,
+            Err(e) => {
+                // Roll the cohort back to its committed prefix and
+                // return it to Ready (drafts discarded); the next step
+                // retries the whole cycle for it.
+                self.abort_members(&members);
+                for &i in &members {
+                    self.pipeline.phases[i] = Phase::Ready {
+                        ready_at: t_start,
+                        ahead: false,
+                    };
+                }
+                return Err(e.context("target verify failed (cohort rolled back)"));
+            }
+        };
+        self.metrics.time_verify += verify.cost;
+        let rcost = self.backend.reject_cost(&self.scratch.gammas);
+        self.metrics.time_reject += rcost;
+
+        let t_end = t_start + verify.cost + rcost;
+        self.pipeline.free_target = t_end;
+        if !ahead_on {
+            self.pipeline.free_draft = self.pipeline.free_draft.max(t_end);
+        }
+        self.clock = self.clock.max(t_end);
+        // Each verify grants the next propose its overlap window.
+        self.pipeline.ahead_budget = verify.cost;
+
+        let b_op = members.len();
+        let total_gamma: usize = self.scratch.gammas.iter().sum();
+        self.metrics.rounds += 1;
+        self.metrics.batch_size_sum += b_op as u64;
+        for &i in &members {
+            let class = self.running[i].class;
+            self.metrics.class_mut(class).seq_rounds += 1;
+        }
+
+        self.scratch.finished.clear();
+        self.scratch.seq_samples.clear();
+        let mut round_accepted: u64 = 0;
+        let mut round_emitted: u64 = 0;
+        for (k, &i) in members.iter().enumerate() {
+            let gamma_k = self.scratch.gammas[k];
+            let seq = &mut self.running[i];
+            let outcome =
+                verify_chain_views(&drafts[k], &dprobs[k], &verify.probs[k], &mut self.rng);
+            self.metrics.draft_tokens_accepted += outcome.accepted as u64;
+            round_accepted += outcome.accepted as u64;
+            round_emitted += outcome.tokens.len() as u64;
+            self.scratch.seq_samples.push(crate::control::SeqRoundSample {
+                seq: seq.id,
+                gamma: gamma_k,
+                accepted: outcome.accepted,
+            });
+            seq.rounds += 1;
+
+            if seq.first_token_at.is_none() {
+                seq.first_token_at = Some(self.clock);
+            }
+
+            // Commit the emitted tokens.
+            seq.stream.extend_from_slice(&outcome.tokens);
+            seq.base += 1 + outcome.accepted;
+            self.metrics.tokens_generated += outcome.tokens.len() as u64;
+
+            // Roll both models back to the committed prefix; the fresh
+            // token (last emitted) is fed next round.
+            self.backend.rollback_target(seq.id, seq.base);
+            self.backend.rollback_draft(seq.id, seq.base);
+            self.kv.truncate(seq.id, seq.stream.len());
+
+            // Completion checks: EOS in the emitted tokens, or budget.
+            let len_with_emitted = seq.stream.len();
+            let mut done = false;
+            if let Some(eos) = seq.params.eos_token {
+                if let Some(pos) = outcome.tokens.iter().position(|&t| t == eos) {
+                    let cut = seq.stream.len() - outcome.tokens.len() + pos + 1;
+                    seq.stream.truncate(cut);
+                    done = true;
+                }
+            }
+            if seq.generated() >= seq.params.max_new_tokens {
+                seq.stream
+                    .truncate(seq.prompt_len + seq.params.max_new_tokens);
+                done = true;
+            }
+            let discarded = len_with_emitted - seq.stream.len();
+            self.metrics.tokens_generated -= discarded as u64;
+            let class = seq.class;
+            self.metrics.class_mut(class).tokens_generated +=
+                (outcome.tokens.len() - discarded) as u64;
+
+            // A fully-accepted round makes the sequence draft-ahead
+            // eligible: its next proposal overlaps the next verify.
+            let full = gamma_k > 0 && outcome.accepted == gamma_k;
+            self.pipeline.phases[i] = Phase::Ready {
+                ready_at: t_end,
+                ahead: ahead_on && full,
+            };
+            if done {
+                self.scratch.finished.push(i);
+            }
+        }
+
+        // Close the control loop (per-sequence samples + round-level
+        // observation; draft spend accumulated since the last verify is
+        // attributed here).
+        let t_draft_flush = self.pipeline.draft_cost_unreported;
+        let proposed_flush = self.pipeline.proposed_unreported;
+        self.pipeline.draft_cost_unreported = 0.0;
+        self.pipeline.proposed_unreported = 0;
+        if let Some(ctl) = self.controller.as_mut() {
+            ctl.observe_sequences(&self.scratch.seq_samples);
+            let rows = b_op + total_gamma;
+            let gamma_obs = ((rows + b_op / 2) / b_op).saturating_sub(1);
+            ctl.observe(RoundObservation {
+                round: self.round_counter,
+                batch: b_op,
+                gamma: gamma_obs,
+                proposed: proposed_flush,
+                accepted: round_accepted,
+                emitted: round_emitted,
+                t_draft: t_draft_flush,
+                t_verify: verify.cost,
+                t_reject: rcost,
+            });
+        }
+
+        // Retire finished sequences (descending index for stable removal
+        // from both `running` and the phase table).
+        for k in (0..self.scratch.finished.len()).rev() {
+            let i = self.scratch.finished[k];
+            self.pipeline.phases.remove(i);
+            let seq = self.running.remove(i);
+            self.backend.release(seq.id);
+            self.kv.release(seq.id);
+            if let Some(ctl) = self.controller.as_mut() {
+                ctl.release_sequence(seq.id);
+            }
+            self.metrics.requests_completed += 1;
+            let completion = Completion {
+                id: seq.id,
+                tokens: seq.stream[seq.prompt_len..].to_vec(),
+                arrival: seq.arrival,
+                first_token_at: seq.first_token_at.unwrap_or(self.clock),
+                finished_at: self.clock,
+                rounds: seq.rounds,
+                class: seq.class,
+            };
+            self.metrics.ttft.0.record(completion.ttft());
+            self.metrics.tpot.0.record(completion.tpot());
+            self.metrics
+                .e2e_latency
+                .0
+                .record(completion.finished_at - completion.arrival);
+            let (ttft, tpot) = (completion.ttft(), completion.tpot());
+            let cm = self.metrics.class_mut(seq.class);
+            cm.requests_completed += 1;
+            cm.ttft.0.record(ttft);
+            cm.tpot.0.record(tpot);
+            if let Some(t) = self.config.tenants.get(seq.class) {
+                if let Some(slo) = t.ttft_slo {
+                    cm.ttft_slo_total += 1;
+                    if ttft <= slo {
+                        cm.ttft_slo_met += 1;
+                    }
+                }
+                if let Some(slo) = t.tpot_slo {
+                    cm.tpot_slo_total += 1;
+                    if tpot <= slo {
+                        cm.tpot_slo_met += 1;
+                    }
+                }
+            }
+            completions.push(completion);
+        }
+        Ok(())
+    }
+
+    /// Roll an op cohort back to its committed prefix after a mid-op
+    /// backend failure (the continuous analogue of `abort_round`, scoped
+    /// to the failed op's members).
+    fn abort_members(&mut self, members: &[usize]) {
+        for &i in members {
+            let seq = &self.running[i];
+            self.backend.rollback_target(seq.id, seq.base);
+            self.backend.rollback_draft(seq.id, seq.base);
+            self.kv.truncate(seq.id, seq.stream.len());
+        }
+        self.counters.inc("round_failures");
+    }
+}

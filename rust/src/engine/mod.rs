@@ -28,6 +28,10 @@
 //! how every T_AR baseline in the experiments is measured, guaranteeing
 //! AR and SD share scheduler/batcher/sampler code paths.
 
+mod continuous;
+
+pub use continuous::PipelineConfig;
+
 use crate::batching::{Buckets, ClassId, Completion, Request, RequestQueue, SamplingParams};
 use crate::control::{
     ControlConfig, ControllerState, RoundObservation, SeqRoundSample, SpecController,
@@ -72,6 +76,12 @@ pub struct EngineConfig {
     /// Admission policy. The default [`AdmissionPolicyConfig::Fifo`]
     /// reproduces the pre-multi-tenant scheduler bit-for-bit.
     pub admission: AdmissionPolicyConfig,
+    /// Continuous-batching pipeline knobs (chunked prefill, draft-ahead
+    /// overlap, per-sequence round boundaries). The default is the
+    /// lock-step round loop; with `continuous: true` but every feature
+    /// disabled, the event-driven path reproduces lock-step bit-for-bit
+    /// (property-tested in `rust/tests/prop_continuous.rs`).
+    pub pipeline: PipelineConfig,
 }
 
 impl Default for EngineConfig {
@@ -89,6 +99,7 @@ impl Default for EngineConfig {
             gamma_overrides: std::collections::HashMap::new(),
             tenants: Vec::new(),
             admission: AdmissionPolicyConfig::Fifo,
+            pipeline: PipelineConfig::default(),
         }
     }
 }
@@ -152,6 +163,9 @@ pub struct Engine<B: SdBackend> {
     running: Vec<RunningSeq>,
     controller: Option<SpecController>,
     scratch: RoundScratch,
+    /// Continuous-pipeline state (resource timelines, chunked-prefill
+    /// queue, per-sequence phases). Inert on the lock-step path.
+    pipeline: continuous::PipelineState,
     pub metrics: EngineMetrics,
     pub counters: Counters,
     clock: f64,
@@ -175,6 +189,7 @@ impl<B: SdBackend> Engine<B> {
             running: Vec::new(),
             controller,
             scratch: RoundScratch::default(),
+            pipeline: continuous::PipelineState::default(),
             metrics: EngineMetrics::default(),
             counters: Counters::default(),
             clock: 0.0,
@@ -237,11 +252,23 @@ impl<B: SdBackend> Engine<B> {
 
     /// Whether any work remains.
     pub fn is_idle(&self) -> bool {
-        self.running.is_empty() && self.queue.is_empty()
+        self.running.is_empty() && self.queue.is_empty() && self.pipeline.prefilling.is_empty()
     }
 
-    /// One scheduling + decode round. Returns completions finished in it.
+    /// One scheduling step. On the default (lock-step) path this is one
+    /// full decode round; with [`PipelineConfig::continuous`] it is one
+    /// event of the pipelined loop (a prefill chunk, a propose op, a
+    /// verify+commit op, or some combination). Returns completions
+    /// finished in it.
     pub fn step(&mut self) -> anyhow::Result<Vec<Completion>> {
+        if self.config.pipeline.continuous {
+            return self.step_continuous();
+        }
+        self.step_lockstep()
+    }
+
+    /// One synchronous scheduling + decode round (the lock-step path).
+    fn step_lockstep(&mut self) -> anyhow::Result<Vec<Completion>> {
         let t0 = std::time::Instant::now();
         let mut completions = Vec::new();
 
@@ -577,6 +604,12 @@ impl<B: SdBackend> Engine<B> {
 
     /// Admit waiting requests whose arrival time has come.
     fn admit(&mut self) -> anyhow::Result<()> {
+        let ceiling = self.admission_ceiling();
+        self.admit_with_ceiling(ceiling)
+    }
+
+    /// Effective batch ceiling for this step's admission call.
+    fn admission_ceiling(&self) -> usize {
         // With a controller, the ceiling comes from its measured cost
         // table (γ-aware round economics). Otherwise the built-in SLO
         // estimator below applies (§3.4 latency-critical serving):
@@ -584,10 +617,9 @@ impl<B: SdBackend> Engine<B> {
         // time scales linearly with batch size in the compute-bound
         // direction.
         if let Some(ctl) = self.controller.as_ref() {
-            let ceiling = ctl.batch_ceiling(&self.scheduler);
-            return self.admit_with_ceiling(ceiling);
+            return ctl.batch_ceiling(&self.scheduler);
         }
-        let ceiling = match self.scheduler.config.tpot_slo {
+        match self.scheduler.config.tpot_slo {
             // No round economics observed yet: admit a small pilot batch
             // so the estimator has data before committing to a large one.
             Some(_) if self.metrics.rounds == 0 => 4.min(self.scheduler.config.max_batch),
@@ -601,11 +633,11 @@ impl<B: SdBackend> Engine<B> {
                 })
             }
             _ => self.scheduler.config.max_batch,
-        };
-        self.admit_with_ceiling(ceiling)
+        }
     }
 
-    fn admit_with_ceiling(&mut self, ceiling: usize) -> anyhow::Result<()> {
+    /// One policy-dispatched admission call against the current state.
+    fn admission_try(&mut self, ceiling: usize) -> Vec<Request> {
         // The per-class context (α̂ᵢ lookups, priced per-class ceilings,
         // the regime oracle) is only computed for the class-aware policy;
         // FIFO reads nothing but the running count, and its per-round
@@ -622,6 +654,15 @@ impl<B: SdBackend> Engine<B> {
                 } else {
                     None
                 },
+            });
+        }
+        // Chunk-prefilling sequences hold KV and a batch slot already:
+        // they count against the ceiling like running ones (lock-step
+        // never populates this queue).
+        for p in self.pipeline.prefilling.iter() {
+            self.scratch.run_infos.push(RunningInfo {
+                class: p.req.class,
+                alpha: None,
             });
         }
         // Per-class batch ceilings, priced from each class's TPOT SLO
@@ -652,9 +693,60 @@ impl<B: SdBackend> Engine<B> {
                 None
             },
         };
-        let admitted = self.scheduler.admit_with(&mut self.queue, &ctx);
+        self.scheduler.admit_with(&mut self.queue, &ctx)
+    }
+
+    /// Whether the class-aware policy asked for preemptive eviction on
+    /// admission pressure.
+    fn preempt_on_admission_enabled(&self) -> bool {
+        matches!(&self.config.admission,
+            AdmissionPolicyConfig::ClassAware(c) if c.preempt_on_admission)
+    }
+
+    /// Preempt-on-admission victim: the lowest-priority least-progress
+    /// running sequence strictly below the best waiting (arrival-due)
+    /// request's priority tier. `None` when no running sequence sits
+    /// strictly below that tier — in particular in one-class deployments,
+    /// so the knob is inert there and the class-aware ≡ FIFO degeneracy
+    /// holds with it enabled.
+    fn admission_eviction_victim(&self) -> Option<usize> {
+        let wait_prio = self
+            .queue
+            .iter()
+            .take_while(|r| r.arrival <= self.clock)
+            .map(|r| self.class_priority(r.class))
+            .max()?;
+        self.running
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| self.class_priority(s.class) < wait_prio)
+            .min_by_key(|(j, s)| (self.class_priority(s.class), s.generated(), *j))
+            .map(|(j, _)| j)
+    }
+
+    /// Select requests to admit this step: one policy call, plus (when
+    /// the class-aware policy enables it) at most one preemptive eviction
+    /// retry so a high-priority arrival is not stuck behind a full batch
+    /// of low-priority work until natural completion.
+    fn admission_select(&mut self, ceiling: usize) -> Vec<Request> {
+        let mut admitted = self.admission_try(ceiling);
+        if admitted.is_empty() && self.preempt_on_admission_enabled() {
+            if let Some(j) = self.admission_eviction_victim() {
+                self.preempt(j);
+                self.counters.inc("admission_evictions");
+                admitted = self.admission_try(ceiling);
+            }
+        }
+        admitted
+    }
+
+    fn admit_with_ceiling(&mut self, ceiling: usize) -> anyhow::Result<()> {
+        let admitted = self.admission_select(ceiling);
         if admitted.is_empty() {
             return Ok(());
+        }
+        if self.config.pipeline.continuous {
+            return self.register_admitted_continuous(admitted);
         }
 
         let mut prefill_batch = Vec::with_capacity(admitted.len());
@@ -687,7 +779,13 @@ impl<B: SdBackend> Engine<B> {
 
     /// Preempt the running sequence at index `i`: drop its progress,
     /// release all state, and requeue the original request at the front.
+    /// On the continuous path the per-sequence phase table is aligned
+    /// with `running`, so the victim's phase goes with it (the table is
+    /// empty on the lock-step path).
     fn preempt(&mut self, i: usize) {
+        if i < self.pipeline.phases.len() {
+            self.pipeline.phases.remove(i);
+        }
         let seq = self.running.remove(i);
         self.backend.release(seq.id);
         self.kv.release(seq.id);

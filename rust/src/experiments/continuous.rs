@@ -1,0 +1,595 @@
+//! Continuous-batching ablation sweep — trace-driven load × pipeline
+//! feature set (exercises the ROADMAP's "kill the synchronous round"
+//! item: chunked prefill + draft-ahead overlap + per-sequence round
+//! boundaries, each switched on cumulatively).
+//!
+//! ## Scenario
+//!
+//! A classless FIFO deployment (qwen2-57B + 0.5B draft on 2×GPU-A,
+//! virtual clock, static γ = 4, α = 0.9) replays the *prefill-heavy*
+//! bundled trace ([`ArrivalTrace::synthetic_production_heavy`]: the same
+//! calm/burst Markov modulation as the production shape, but prompts
+//! centered ≈256 tokens with tails to 1024). Long prompts are exactly
+//! where the lock-step engine's bulk prefill stalls every running
+//! sequence for whole-prompt forwards — the TTFT pathology continuous
+//! batching exists to fix.
+//!
+//! Each (load, arm) point replays the identical request sequence through
+//! the real engine and measures inside the trace window (steady-state
+//! under backlog at overload, same design as [`super::multitenant`]).
+//!
+//! ## Arms (cumulative feature sets)
+//!
+//! - `lockstep` — the synchronous round engine (`PipelineConfig`
+//!   default): bulk prefill at admission, global round barrier;
+//! - `+chunked` — continuous pipeline with chunked prefill only (serial
+//!   lanes, batch round boundaries): prompts stream in
+//!   [`PREFILL_CHUNK`]-token chunks between decode rounds;
+//! - `+draft-ahead` — chunked prefill plus the draft-ahead overlap:
+//!   fully-accepted sequences re-draft under the current verify window,
+//!   priced `max(draft, verify)` instead of `draft + verify`;
+//! - `full` — all three mechanisms (adds per-sequence round boundaries
+//!   with the 1/2 coalescing guard).
+//!
+//! `check_shape` pins the acceptance criteria: at the saturation knee
+//! the full pipeline's TTFT p99 is strictly below lock-step's (and
+//! ≤ 0.97×), at deep overload the full pipeline's goodput is ≥ 1.02×
+//! lock-step's, and TPOT/goodput stay ≥ 0.98× lock-step at every load.
+//! Every margin was calibrated against a from-scratch python replica of
+//! the roofline pricing + both engine loops
+//! (`python/replica_continuous.py`); see `check_shape` for the measured
+//! ratios behind each bound.
+
+use super::parallel_sweep;
+use crate::arch::presets;
+use crate::batching::{Completion, Request, SamplingParams, DEFAULT_CLASS};
+use crate::engine::{Engine, EngineConfig, PipelineConfig};
+use crate::hardware::{platform_2x_gpu_a, Platform};
+use crate::kvcache::KvConfig;
+use crate::scheduler::SchedulerConfig;
+use crate::simulator::ExecSim;
+use crate::spec::synthetic::SyntheticLm;
+use crate::util::csv::CsvTable;
+use crate::util::json::Json;
+use crate::workload::ArrivalTrace;
+
+/// Decode batch ceiling: inside the speculative band for this
+/// model/platform, so the sweep isolates *pipeline* effects.
+pub const MAX_BATCH: usize = 32;
+
+/// True draft acceptance (uniform; the sweep is classless).
+pub const ALPHA: f64 = 0.9;
+
+/// Static speculation depth (no controller: adaptive γ would confound
+/// the pipeline ablation).
+pub const GAMMA: usize = 4;
+
+/// Chunked-prefill per-op token budget for the continuous arms. 512
+/// sits at the weight/compute roofline crossover of the 57B MoE target
+/// (below it a chunk op re-reads all expert weights without enough
+/// compute to amortize them), so chunk ops price like bulk prefill
+/// while still bounding the decode bubble to ~1.5 rounds.
+pub const PREFILL_CHUNK: usize = 512;
+
+/// Trace shape: base duration and rate (before load rescaling).
+pub const TRACE_DURATION_S: f64 = 120.0;
+pub const TRACE_BASE_RATE: f64 = 4.0;
+
+/// Load sweep: trace-rate multipliers (light → saturation knee → deep
+/// overload). The middle point is the knee where the TTFT-tail margins
+/// are pinned ([`ContinuousOut::knee_load`]); the top point is where
+/// the goodput win is pinned.
+pub fn default_loads() -> Vec<f64> {
+    vec![0.5, 1.5, 3.0]
+}
+
+/// The four cumulative pipeline feature sets.
+pub fn arms() -> Vec<(&'static str, PipelineConfig)> {
+    vec![
+        ("lockstep", PipelineConfig::default()),
+        (
+            "+chunked",
+            PipelineConfig {
+                continuous: true,
+                prefill_chunk: Some(PREFILL_CHUNK),
+                draft_ahead: false,
+                per_seq_boundaries: false,
+            },
+        ),
+        (
+            "+draft-ahead",
+            PipelineConfig {
+                continuous: true,
+                prefill_chunk: Some(PREFILL_CHUNK),
+                draft_ahead: true,
+                per_seq_boundaries: false,
+            },
+        ),
+        ("full", PipelineConfig::full(PREFILL_CHUNK)),
+    ]
+}
+
+/// One (load, arm) measurement.
+#[derive(Debug, Clone)]
+pub struct ArmRow {
+    pub load: f64,
+    /// `lockstep`, `+chunked`, `+draft-ahead` or `full`.
+    pub arm: String,
+    pub requests_offered: usize,
+    pub requests_completed: u64,
+    pub tokens: u64,
+    /// Virtual clock at the end of the window run.
+    pub clock_s: f64,
+    pub ttft_mean: f64,
+    pub ttft_p99: f64,
+    pub tpot_mean: f64,
+    pub tpot_p99: f64,
+    /// Committed tokens per second of window clock — the serving-level
+    /// throughput a latency ablation must not regress.
+    pub goodput: f64,
+    pub mean_batch: f64,
+    /// Fraction of draft seconds hidden under verify windows
+    /// (`time_draft_hidden / time_draft`; zero without draft-ahead).
+    pub hidden_frac: f64,
+    pub prefill_chunks: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ContinuousOut {
+    pub rows: Vec<ArmRow>,
+    pub loads: Vec<f64>,
+}
+
+fn sims() -> (ExecSim, ExecSim) {
+    let platform = platform_2x_gpu_a();
+    let target = ExecSim::new(presets::qwen2_57b_a14b(), platform.clone());
+    let draft_platform = Platform::new(platform.gpu.clone(), 1, platform.interconnect_bw);
+    let draft = ExecSim::new(presets::qwen2_0_5b(), draft_platform);
+    (target, draft)
+}
+
+/// Materialize the (classless) request sequence for one load point.
+fn trace_requests(trace: &ArrivalTrace, seed: u64) -> Vec<Request> {
+    let _ = seed;
+    trace
+        .events()
+        .iter()
+        .enumerate()
+        .map(|(i, e)| Request {
+            id: i as u64,
+            prompt: (0..e.prompt_len as u32).map(|p| p % 251).collect(),
+            params: SamplingParams {
+                temperature: 0.0,
+                max_new_tokens: e.output_len,
+                eos_token: None,
+            },
+            arrival: e.t,
+            class: DEFAULT_CLASS,
+        })
+        .collect()
+}
+
+fn build_engine(pipeline: PipelineConfig, seed: u64) -> Engine<SyntheticLm> {
+    let (tsim, dsim) = sims();
+    let backend = SyntheticLm::new(tsim, dsim, ALPHA, seed);
+    let config = EngineConfig {
+        gamma: GAMMA,
+        kv: KvConfig {
+            num_blocks: 1 << 16,
+            block_size: 16,
+        },
+        scheduler: SchedulerConfig {
+            max_batch: MAX_BATCH,
+            admit_reserve_tokens: 32,
+            tpot_slo: None,
+        },
+        seed,
+        pipeline,
+        ..Default::default()
+    };
+    Engine::new(config, backend)
+}
+
+/// Replay one arm inside the trace window: submit everything, step until
+/// the clock passes `horizon` (or the engine drains), keeping every
+/// completion for exact latency quantiles.
+fn run_arm(
+    requests: &[Request],
+    pipeline: PipelineConfig,
+    seed: u64,
+    horizon: f64,
+) -> anyhow::Result<(Engine<SyntheticLm>, Vec<Completion>)> {
+    let mut engine = build_engine(pipeline, seed);
+    for r in requests {
+        engine.submit(r.clone());
+    }
+    let mut done = Vec::new();
+    let mut guard = 0usize;
+    while !engine.is_idle() && engine.clock() < horizon {
+        done.extend(engine.step()?);
+        guard += 1;
+        anyhow::ensure!(guard < 400_000, "window run exceeded the step guard");
+    }
+    anyhow::ensure!(
+        engine.metrics.tokens_generated > 0,
+        "arm committed no tokens inside the window"
+    );
+    Ok((engine, done))
+}
+
+/// Exact q-quantile over the sample set (the ⌈q·n⌉-th order statistic —
+/// the value the metrics `Histogram` would bucket). The engine's
+/// histograms quantize to ×2 geometric buckets, far too coarse for
+/// cross-arm ratio margins, so the sweep computes latency quantiles
+/// from the raw completions instead.
+fn pct(xs: &mut [f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let rank = ((q * xs.len() as f64).ceil() as usize).clamp(1, xs.len());
+    xs[rank - 1]
+}
+
+fn collect(
+    load: f64,
+    arm: &str,
+    offered: usize,
+    engine: &Engine<SyntheticLm>,
+    done: &[Completion],
+) -> ArmRow {
+    let m = &engine.metrics;
+    let clock = engine.clock().max(1e-9);
+    let mut ttfts: Vec<f64> = done.iter().map(Completion::ttft).collect();
+    let mut tpots: Vec<f64> = done.iter().map(Completion::tpot).collect();
+    let mean = |xs: &[f64]| {
+        if xs.is_empty() {
+            0.0
+        } else {
+            xs.iter().sum::<f64>() / xs.len() as f64
+        }
+    };
+    ArmRow {
+        load,
+        arm: arm.to_string(),
+        requests_offered: offered,
+        requests_completed: m.requests_completed,
+        tokens: m.tokens_generated,
+        clock_s: clock,
+        ttft_mean: mean(&ttfts),
+        ttft_p99: pct(&mut ttfts, 0.99),
+        tpot_mean: mean(&tpots),
+        tpot_p99: pct(&mut tpots, 0.99),
+        goodput: m.tokens_generated as f64 / clock,
+        mean_batch: m.mean_batch(),
+        hidden_frac: if m.time_draft > 0.0 {
+            m.time_draft_hidden / m.time_draft
+        } else {
+            0.0
+        },
+        prefill_chunks: m.prefill_chunks,
+    }
+}
+
+/// Run the full load × arm sweep over `trace` (each load fanned across
+/// worker threads; every arm builds its own seeded engine).
+pub fn run(trace: &ArrivalTrace, loads: &[f64], seed: u64) -> anyhow::Result<ContinuousOut> {
+    let per_load: Vec<anyhow::Result<Vec<ArmRow>>> = parallel_sweep(loads, |&load| {
+        let scaled = trace.rescale_rate(load);
+        let horizon = scaled.duration().max(1e-6);
+        let requests = trace_requests(&scaled, seed);
+        let offered = requests.len();
+        let mut rows = Vec::new();
+        for (name, pipeline) in arms() {
+            let (engine, done) = run_arm(&requests, pipeline, seed, horizon)?;
+            rows.push(collect(load, name, offered, &engine, &done));
+        }
+        Ok(rows)
+    });
+    let mut rows = Vec::new();
+    for r in per_load {
+        rows.extend(r?);
+    }
+    Ok(ContinuousOut {
+        rows,
+        loads: loads.to_vec(),
+    })
+}
+
+impl ContinuousOut {
+    pub fn arm(&self, load: f64, arm: &str) -> Option<&ArmRow> {
+        self.rows.iter().find(|r| r.load == load && r.arm == arm)
+    }
+
+    pub fn top_load(&self) -> f64 {
+        self.loads.iter().cloned().fold(f64::MIN, f64::max)
+    }
+
+    /// The saturation-knee load: the median of the sweep grid. The
+    /// default grid is (light, knee, deep-overload) by construction;
+    /// the TTFT-tail acceptance margins are calibrated at this point
+    /// because deep overload pins every arm's p99 to queue residence.
+    pub fn knee_load(&self) -> f64 {
+        let mut ls = self.loads.clone();
+        if ls.is_empty() {
+            return f64::MIN;
+        }
+        ls.sort_by(|a, b| a.partial_cmp(b).expect("loads are finite"));
+        ls[ls.len() / 2]
+    }
+}
+
+pub fn to_csv(out: &ContinuousOut) -> CsvTable {
+    let mut t = CsvTable::new(&[
+        "load",
+        "arm",
+        "offered",
+        "completed",
+        "tokens",
+        "clock_s",
+        "ttft_mean",
+        "ttft_p99",
+        "tpot_mean",
+        "tpot_p99",
+        "goodput",
+        "mean_batch",
+        "hidden_frac",
+        "prefill_chunks",
+    ]);
+    for r in &out.rows {
+        t.push_row(vec![
+            format!("{}", r.load),
+            r.arm.clone(),
+            r.requests_offered.to_string(),
+            r.requests_completed.to_string(),
+            r.tokens.to_string(),
+            format!("{:.6}", r.clock_s),
+            format!("{:.6}", r.ttft_mean),
+            format!("{:.6}", r.ttft_p99),
+            format!("{:.6}", r.tpot_mean),
+            format!("{:.6}", r.tpot_p99),
+            format!("{:.2}", r.goodput),
+            format!("{:.2}", r.mean_batch),
+            format!("{:.4}", r.hidden_frac),
+            r.prefill_chunks.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Per-arm stats JSON (the shape ci.sh's smoke gate validates).
+pub fn to_json(out: &ContinuousOut) -> Json {
+    let arms = out
+        .rows
+        .iter()
+        .map(|r| {
+            Json::from_pairs(vec![
+                ("load", r.load.into()),
+                ("arm", r.arm.as_str().into()),
+                ("offered", r.requests_offered.into()),
+                ("completed", r.requests_completed.into()),
+                ("tokens", r.tokens.into()),
+                ("ttft_mean", r.ttft_mean.into()),
+                ("ttft_p99", r.ttft_p99.into()),
+                ("tpot_mean", r.tpot_mean.into()),
+                ("tpot_p99", r.tpot_p99.into()),
+                ("goodput", r.goodput.into()),
+                ("mean_batch", r.mean_batch.into()),
+                ("hidden_frac", r.hidden_frac.into()),
+                ("prefill_chunks", r.prefill_chunks.into()),
+            ])
+        })
+        .collect();
+    Json::from_pairs(vec![
+        ("experiment", "continuous".into()),
+        ("max_batch", MAX_BATCH.into()),
+        ("gamma", GAMMA.into()),
+        ("prefill_chunk", PREFILL_CHUNK.into()),
+        ("loads", Json::Arr(out.loads.iter().map(|&l| l.into()).collect())),
+        ("arms", Json::Arr(arms)),
+    ])
+}
+
+/// The acceptance-criteria shape claims. Every margin below was
+/// calibrated against the python replica of the roofline pricing +
+/// pipeline accounting (`python/replica_continuous.py`) on the default
+/// trace/engine seed 42, with trace seeds 7 and 11 as robustness checks.
+///
+/// The TTFT-tail claims are pinned at the *knee* load (the saturation
+/// onset, middle of the default grid), not the deepest overload point:
+/// at 3× the window is so saturated that the p99 completed request's
+/// TTFT is pure queue residence for every arm (replica ratios 0.90–1.00
+/// across seeds — statistically flat), while at the knee the pipeline's
+/// extra capacity compounds through 1/(1−ρ) queueing into a clear tail
+/// win (replica full-vs-lockstep ratios 0.913 / 0.950 / 0.800 for seeds
+/// 42 / 7 / 11). Deep overload is instead where the throughput win is
+/// asserted (replica full goodput 1.051–1.061× lockstep).
+pub fn check_shape(out: &ContinuousOut) -> Result<(), String> {
+    let top = out.top_load();
+    let knee = out.knee_load();
+    for &load in &out.loads {
+        for arm in ["lockstep", "+chunked", "+draft-ahead", "full"] {
+            let r = out
+                .arm(load, arm)
+                .ok_or_else(|| format!("missing arm {arm} at load {load}"))?;
+            if r.tokens == 0 || r.goodput <= 0.0 {
+                return Err(format!("arm {arm}@{load} produced no work: {r:?}"));
+            }
+            // Chunked prefill actually engages on every continuous arm.
+            if arm == "lockstep" {
+                if r.prefill_chunks != 0 {
+                    return Err(format!("lockstep@{load} ran chunk ops: {r:?}"));
+                }
+            } else if r.prefill_chunks == 0 {
+                return Err(format!("{arm}@{load} never chunked a prefill"));
+            }
+        }
+        // A latency optimisation must not buy TTFT with throughput: every
+        // pipeline arm holds ≥ 0.98× lock-step goodput and TPOT at every
+        // load. Replica-measured worst ratios across loads and seeds:
+        // goodput 0.998× (seed 11 at the knee; ≥ 1.02× at deep overload),
+        // TPOT 0.84× (batched chunk ops stop bulk prefill from blocking
+        // decode, so TPOT *improves* roughly 2× under load).
+        let base = out.arm(load, "lockstep").unwrap();
+        for arm in ["+chunked", "+draft-ahead", "full"] {
+            let r = out.arm(load, arm).unwrap();
+            if r.goodput < 0.98 * base.goodput {
+                return Err(format!(
+                    "load {load}: {arm} goodput {:.1} under 0.98× lockstep {:.1}",
+                    r.goodput, base.goodput
+                ));
+            }
+            if r.tpot_mean > base.tpot_mean / 0.98 {
+                return Err(format!(
+                    "load {load}: {arm} TPOT {:.5} worse than lockstep {:.5}/0.98",
+                    r.tpot_mean, base.tpot_mean
+                ));
+            }
+        }
+    }
+    // At the saturation knee the full pipeline's TTFT p99 is strictly
+    // below lock-step's (replica ratios 0.80–0.95 across seeds; 0.913 on
+    // the bench seed — ≤ 0.97 asserted for headroom), and chunked
+    // prefill alone already improves the tail (replica 0.85–0.95; ≤ 0.98
+    // asserted).
+    let base = out.arm(knee, "lockstep").unwrap();
+    let full = out.arm(knee, "full").unwrap();
+    if full.ttft_p99 >= base.ttft_p99 {
+        return Err(format!(
+            "knee load {knee}: full TTFT p99 {:.3} not strictly below lockstep {:.3}",
+            full.ttft_p99, base.ttft_p99
+        ));
+    }
+    if full.ttft_p99 > 0.97 * base.ttft_p99 {
+        return Err(format!(
+            "knee load {knee}: full TTFT p99 {:.3} should clear 0.97× lockstep {:.3}",
+            full.ttft_p99, base.ttft_p99
+        ));
+    }
+    let chunked = out.arm(knee, "+chunked").unwrap();
+    if chunked.ttft_p99 > 0.98 * base.ttft_p99 {
+        return Err(format!(
+            "knee load {knee}: +chunked TTFT p99 {:.3} should clear 0.98× lockstep {:.3}",
+            chunked.ttft_p99, base.ttft_p99
+        ));
+    }
+    // At deep overload the pipeline converts its freed bubble time into
+    // throughput: replica full goodput 1.051× lockstep on the bench
+    // seed (1.05–1.06 across seeds); ≥ 1.02 asserted.
+    let base = out.arm(top, "lockstep").unwrap();
+    let full = out.arm(top, "full").unwrap();
+    if full.goodput < 1.02 * base.goodput {
+        return Err(format!(
+            "top load: full goodput {:.1} under 1.02× lockstep {:.1}",
+            full.goodput, base.goodput
+        ));
+    }
+    // Draft-ahead earns its keep: hidden draft time exists in the ahead
+    // arms (replica hidden_frac 0.50–0.55 at every load) and is absent
+    // elsewhere.
+    for arm in ["lockstep", "+chunked"] {
+        let r = out.arm(top, arm).unwrap();
+        if r.hidden_frac != 0.0 {
+            return Err(format!("{arm} hid draft time: {}", r.hidden_frac));
+        }
+    }
+    for arm in ["+draft-ahead", "full"] {
+        let r = out.arm(top, arm).unwrap();
+        if !(0.3..0.7).contains(&r.hidden_frac) {
+            return Err(format!(
+                "{arm} hidden draft fraction {:.2} outside the replica band (0.3, 0.7)",
+                r.hidden_frac
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arm_table_is_cumulative() {
+        let a = arms();
+        assert_eq!(a.len(), 4);
+        assert_eq!(a[0].0, "lockstep");
+        assert!(!a[0].1.continuous);
+        assert!(a[1].1.continuous && !a[1].1.draft_ahead);
+        assert!(a[2].1.draft_ahead && !a[2].1.per_seq_boundaries);
+        assert_eq!(a[3].1, PipelineConfig::full(PREFILL_CHUNK));
+        for (_, p) in &a[1..] {
+            assert_eq!(p.prefill_chunk, Some(PREFILL_CHUNK));
+        }
+    }
+
+    #[test]
+    fn csv_and_json_render() {
+        let row = ArmRow {
+            load: 3.0,
+            arm: "full".into(),
+            requests_offered: 100,
+            requests_completed: 80,
+            tokens: 2500,
+            clock_s: 40.0,
+            ttft_mean: 0.5,
+            ttft_p99: 2.0,
+            tpot_mean: 0.02,
+            tpot_p99: 0.04,
+            goodput: 62.5,
+            mean_batch: 24.0,
+            hidden_frac: 0.35,
+            prefill_chunks: 412,
+        };
+        let out = ContinuousOut {
+            rows: vec![row],
+            loads: vec![3.0],
+        };
+        let t = to_csv(&out);
+        assert_eq!(t.rows.len(), 1);
+        let parsed = CsvTable::parse(&t.to_string()).unwrap();
+        assert_eq!(parsed.column_str("arm").unwrap()[0], "full");
+        let j = to_json(&out);
+        let s = j.to_pretty();
+        assert!(s.contains("\"ttft_p99\""));
+        assert!(s.contains("\"prefill_chunks\""));
+        let back = Json::parse(&s).unwrap();
+        let arms_j = back.req_arr("arms").unwrap();
+        assert_eq!(arms_j.len(), 1);
+        assert_eq!(arms_j[0].req_str("arm").unwrap(), "full");
+        assert_eq!(out.top_load(), 3.0);
+        assert_eq!(out.knee_load(), 3.0);
+        let grid = ContinuousOut {
+            rows: vec![],
+            loads: vec![3.0, 0.5, 1.5],
+        };
+        assert_eq!(grid.knee_load(), 1.5);
+    }
+
+    #[test]
+    fn single_point_smoke_runs_all_arms() {
+        // One cheap point on a short heavy trace: every arm finishes the
+        // window with positive goodput, the continuous arms chunk
+        // prefills, and the ahead arms hide draft time. (The strict TTFT
+        // separation needs the full 120s trace; `moesd bench continuous`
+        // gates it via `check_shape`.)
+        let trace = ArrivalTrace::synthetic_production_heavy(10.0, 4.0, 11);
+        let out = run(&trace, &[2.0], 11).unwrap();
+        assert_eq!(out.rows.len(), 4);
+        for r in &out.rows {
+            assert!(r.goodput > 0.0, "{r:?}");
+            assert!(r.requests_completed > 0, "{r:?}");
+        }
+        let base = out.arm(2.0, "lockstep").unwrap();
+        assert_eq!(base.prefill_chunks, 0);
+        assert_eq!(base.hidden_frac, 0.0);
+        for arm in ["+chunked", "+draft-ahead", "full"] {
+            let r = out.arm(2.0, arm).unwrap();
+            assert!(r.prefill_chunks > 0, "{arm} never chunked a prefill");
+        }
+        for arm in ["+draft-ahead", "full"] {
+            let r = out.arm(2.0, arm).unwrap();
+            assert!(r.hidden_frac > 0.0, "{arm} hid no draft time");
+        }
+    }
+}

@@ -104,6 +104,13 @@ pub struct EngineMetrics {
     pub time_verify: f64,
     pub time_reject: f64,
     pub time_prefill: f64,
+    /// Draft time hidden under concurrent verify windows by the
+    /// continuous engine's draft-ahead overlap (a subset of
+    /// `time_draft`; zero on the lock-step path).
+    pub time_draft_hidden: f64,
+    /// Chunked-prefill ops executed by the continuous engine (zero when
+    /// chunking is off).
+    pub prefill_chunks: u64,
     /// Coordinator-side overhead (scheduling, sampling, bookkeeping).
     pub time_overhead: f64,
     /// Sum over rounds of the decode batch size (for mean batch size).
@@ -188,6 +195,13 @@ impl EngineMetrics {
     /// Total decode-path time (the paper's T_SD when γ>0, T_AR when γ=0).
     pub fn decode_time(&self) -> f64 {
         self.time_draft + self.time_verify + self.time_reject
+    }
+
+    /// Decode-path time on the critical path: total stage time minus the
+    /// draft seconds the continuous pipeline hid under verify windows.
+    /// Equals `decode_time()` on the lock-step path.
+    pub fn pipeline_decode_time(&self) -> f64 {
+        self.decode_time() - self.time_draft_hidden
     }
 
     pub fn total_time(&self) -> f64 {

@@ -640,6 +640,16 @@ impl SdBackend for HloBackend {
         // wall cost is captured by the engine's overhead timer.
         0.0
     }
+
+    fn prefill_chunk_cost(&self, _tokens: usize, _ctx: usize) -> f64 {
+        // Wall-clock backend: the real prefill is measured inside
+        // `prefill` when the sequence registers, so chunk steps carry no
+        // extra virtual price — the continuous engine's residual charge
+        // then equals the full measured cost. (Made explicit rather than
+        // relying on the trait default so the pricing contract is
+        // documented next to the measurement it interacts with.)
+        0.0
+    }
 }
 
 #[cfg(test)]

@@ -79,6 +79,15 @@ pub struct ClassAwareConfig {
     /// The regime test never holds the running batch below this size
     /// (an idle engine must always start serving).
     pub min_batch: usize,
+    /// Preemptive eviction on admission pressure: when admission comes
+    /// back empty while a strictly-higher-priority request is waiting
+    /// (arrival due), the engine preempts one running sequence from the
+    /// lowest priority tier (least generated progress first) and retries
+    /// admission once — so a high-priority arrival is not stuck behind a
+    /// full batch of low-priority work until natural completion. Inert
+    /// in one-class deployments (no strictly-lower victim exists), which
+    /// preserves the class-aware ≡ FIFO degeneracy.
+    pub preempt_on_admission: bool,
 }
 
 impl Default for ClassAwareConfig {
@@ -88,6 +97,7 @@ impl Default for ClassAwareConfig {
             mix_speedup_floor: None,
             mix_hold_max: 10.0,
             min_batch: 1,
+            preempt_on_admission: false,
         }
     }
 }
@@ -231,9 +241,11 @@ fn class_attr(tenants: &[TenantClass], c: ClassId) -> (u32, f64, Option<usize>, 
 #[derive(Debug)]
 pub struct ClassAwareAdmission {
     cfg: ClassAwareConfig,
-    /// Deficit credits per class: admitting from class `c` costs
-    /// `1/weight(c)`, and the most-credited class wins within a priority
-    /// tier, so long-run admission shares are proportional to weights.
+    /// Deficit credits per class: admitting from class `c` costs its
+    /// byte footprint (prompt + reservation, in REF_TOKENS units) over
+    /// `weight(c)`, and the most-credited class wins within a priority
+    /// tier, so long-run admission shares are proportional to weights
+    /// *in claimed KV bytes*, not request counts.
     credits: Vec<f64>,
 }
 
@@ -465,7 +477,16 @@ impl AdmissionPolicy for ClassAwareAdmission {
             picked.push(queue_idx);
             cursor[chosen] += 1;
             picked_per_class[chosen] += 1;
-            self.credits[chosen] -= 1.0 / weight;
+            // Weighted-fairness byte accounting: the deficit charge is
+            // proportional to the KV footprint the admission claims
+            // (prompt + growth reservation), not a flat per-request
+            // unit — a class sending 4× longer prompts burns its weight
+            // share 4× faster. Normalized by REF_TOKENS so the credit
+            // bank cap below keeps its "≈ CREDIT_BANK_CAP typical
+            // admissions of banked advantage" meaning.
+            const REF_TOKENS: f64 = 64.0;
+            let charge = (prompt_len + config.admit_reserve_tokens) as f64 / REF_TOKENS;
+            self.credits[chosen] -= charge / weight;
         }
 
         if picked.is_empty() {
@@ -852,6 +873,54 @@ mod tests {
         assert!(
             (share - 0.75).abs() < 0.07,
             "weight-3 class should take ~75% of admissions: {share}"
+        );
+    }
+
+    #[test]
+    fn byte_accounting_charges_long_prompts_more() {
+        // Equal weights, one tier; class 0 sends 15× longer prompts.
+        // Byte-accounted DWRR must equalize claimed *tokens*, so class 1
+        // wins far more admission slots than class 0.
+        let a = TenantClass::new("long");
+        let b = TenantClass::new("short");
+        let tenants = vec![a, b];
+        let mut s = class_sched(ClassAwareConfig::default());
+        let kvm = kv(100_000);
+        let mut q = RequestQueue::new();
+        for i in 0..300u64 {
+            let (class, len) = if i % 2 == 0 { (0, 60) } else { (1, 4) };
+            q.push(creq(i, len, class, 0.0));
+        }
+        let ctx = AdmissionContext {
+            kv: &kvm,
+            running: &[],
+            ceiling: 64,
+            now: 0.0,
+            tenants: &tenants,
+            class_ceilings: None,
+            oracle: None,
+        };
+        let admitted = s.admit_with(&mut q, &ctx);
+        assert_eq!(admitted.len(), 64);
+        let n_long = admitted.iter().filter(|r| r.class == 0).count();
+        let n_short = admitted.len() - n_long;
+        assert!(
+            n_short >= 5 * n_long.max(1),
+            "short prompts should dominate slots: long={n_long} short={n_short}"
+        );
+        // And the claimed-token totals are comparable (within one long
+        // prompt's worth of rounding).
+        let toks = |c: usize| -> usize {
+            admitted
+                .iter()
+                .filter(|r| r.class == c)
+                .map(|r| r.prompt.len())
+                .sum()
+        };
+        let (t_long, t_short) = (toks(0) as f64, toks(1) as f64);
+        assert!(
+            (t_long - t_short).abs() <= 60.0,
+            "byte shares should balance: long={t_long} short={t_short}"
         );
     }
 

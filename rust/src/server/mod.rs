@@ -27,7 +27,7 @@ use crate::engine::{Engine, EngineConfig};
 use crate::spec::SdBackend;
 use crate::tokenizer;
 use crate::util::json::Json;
-use crate::workload::TenantClass;
+use crate::workload::{ArrivalTrace, TenantClass, TraceEvent};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -137,6 +137,17 @@ impl ServerStats {
 
 type SharedStats = Arc<Mutex<ServerStats>>;
 
+/// Optional server behaviors beyond the engine config.
+#[derive(Debug, Clone, Default)]
+pub struct ServerOptions {
+    /// Record every submitted request as a trace event (arrival stamped
+    /// with the engine clock at submission, `output_len` = the request's
+    /// token budget) and write the [`ArrivalTrace`] CSV here on shutdown
+    /// — live traffic becomes a replayable `--trace` input for the
+    /// benches (`--record-trace PATH`).
+    pub record_trace: Option<std::path::PathBuf>,
+}
+
 /// Server handle: join/shutdown control.
 pub struct Server {
     pub addr: std::net::SocketAddr,
@@ -164,6 +175,20 @@ impl Server {
         bind_addr: &str,
         config: EngineConfig,
         make_backend: F,
+    ) -> anyhow::Result<Server>
+    where
+        B: SdBackend + 'static,
+        F: FnOnce() -> anyhow::Result<B> + Send + 'static,
+    {
+        Self::start_with_opts(bind_addr, config, make_backend, ServerOptions::default())
+    }
+
+    /// [`Server::start_with`] plus [`ServerOptions`] (trace recording).
+    pub fn start_with_opts<B, F>(
+        bind_addr: &str,
+        config: EngineConfig,
+        make_backend: F,
+        opts: ServerOptions,
     ) -> anyhow::Result<Server>
     where
         B: SdBackend + 'static,
@@ -201,7 +226,7 @@ impl Server {
                             return;
                         }
                     };
-                    engine_loop(config, backend, job_rx, shutdown, stats)
+                    engine_loop(config, backend, job_rx, shutdown, stats, opts)
                 })?
         };
 
@@ -301,9 +326,11 @@ fn engine_loop<B: SdBackend>(
     jobs: Receiver<Job>,
     shutdown: Arc<AtomicBool>,
     stats: SharedStats,
+    opts: ServerOptions,
 ) {
     let mut engine = Engine::new(config, backend);
     let mut pending: HashMap<u64, Sender<Completion>> = HashMap::new();
+    let mut recorded: Vec<TraceEvent> = Vec::new();
     publish_stats(&engine, &stats);
     // Snapshotting clones the controller state (history + per-bucket
     // vectors), so don't pay it on every decode round of a busy engine:
@@ -323,6 +350,13 @@ fn engine_loop<B: SdBackend>(
             pending.insert(job.request.id, job.respond);
             let mut request = job.request;
             request.arrival = engine.clock();
+            if opts.record_trace.is_some() {
+                recorded.push(TraceEvent {
+                    t: request.arrival,
+                    prompt_len: request.prompt.len().max(1),
+                    output_len: request.params.max_new_tokens.max(1),
+                });
+            }
             engine.submit(request);
             got_work = true;
         }
@@ -352,6 +386,27 @@ fn engine_loop<B: SdBackend>(
                     &format!("engine step failed: {e}"),
                 );
             }
+        }
+    }
+    // Flush the recorded trace on shutdown: a replayable CSV of what the
+    // deployment actually served (empty sessions write nothing).
+    if let Some(path) = &opts.record_trace {
+        if recorded.is_empty() {
+            return;
+        }
+        let flushed = ArrivalTrace::new(recorded)
+            .and_then(|t| std::fs::write(path, t.to_csv()).map_err(Into::into));
+        match flushed {
+            Ok(()) => crate::util::logging::log(
+                crate::util::logging::Level::Info,
+                "server",
+                &format!("recorded arrival trace to {}", path.display()),
+            ),
+            Err(e) => crate::util::logging::log(
+                crate::util::logging::Level::Error,
+                "server",
+                &format!("failed to record arrival trace: {e:#}"),
+            ),
         }
     }
 }

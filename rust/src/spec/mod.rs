@@ -86,6 +86,34 @@ pub trait SdBackend {
     /// the scheduler treats that as admission backpressure.
     fn prefill(&mut self, batch: &[(SeqId, Vec<u32>)]) -> anyhow::Result<f64>;
 
+    /// Price of prefilling `tokens` prompt tokens on top of `ctx`
+    /// already-processed ones for a *single* sequence, *without*
+    /// touching model state. The default (0.0) is correct for
+    /// wall-clock backends, which measure the real prefill inside
+    /// `prefill` itself; virtual-clock backends override it with
+    /// their roofline pricing.
+    fn prefill_chunk_cost(&self, tokens: usize, ctx: usize) -> f64 {
+        let _ = (tokens, ctx);
+        0.0
+    }
+
+    /// Price one *batched* chunked-prefill op: `parts[i]` is
+    /// `(tokens, ctx)` for the i-th sequence sharing the forward. This
+    /// is the op the continuous engine actually schedules — it draws a
+    /// token budget across the front of the prefill queue so weight
+    /// traffic (all experts, for a sparse-MoE target) amortizes over
+    /// the cohort exactly as it does in a lock-step bulk prefill. The
+    /// engine pays these op costs as it interleaves them with decode
+    /// and charges the final `prefill` registration only for the
+    /// residual above what the chunks already paid. Default: the
+    /// unamortized per-sequence sum (0.0 for wall-clock backends).
+    fn prefill_chunks_cost(&self, parts: &[(usize, usize)]) -> f64 {
+        parts
+            .iter()
+            .map(|&(tokens, ctx)| self.prefill_chunk_cost(tokens, ctx))
+            .sum()
+    }
+
     /// Draft-propose `gammas[i]` tokens for sequence `i` (ragged; a
     /// uniform round passes equal entries). `pending[i]` is the token
     /// backlog to feed into the draft context first (last prompt token,

@@ -210,6 +210,40 @@ impl SdBackend for SyntheticLm {
             + self.draft_sim.t_forward(b, max_prompt, max_prompt))
     }
 
+    fn prefill_chunk_cost(&self, tokens: usize, ctx: usize) -> f64 {
+        // One single-sequence chunked-prefill step: both models process
+        // `tokens` new prompt tokens on top of `ctx` committed ones at
+        // batch 1. Small batch-1 chunks are *weight-bound* for a sparse
+        // MoE (a 64-token chunk activates essentially every expert), so
+        // per-chunk pricing is an upper bound on the bulk price and the
+        // engine's residual charge at registration is zero.
+        if tokens == 0 {
+            return 0.0;
+        }
+        self.target_sim.t_forward(1, tokens, ctx + tokens)
+            + self.draft_sim.t_forward(1, tokens, ctx + tokens)
+    }
+
+    fn prefill_chunks_cost(&self, parts: &[(usize, usize)]) -> f64 {
+        // One batched chunk op: the cohort's new tokens share a single
+        // packed forward, so expert weights are read once per op — the
+        // same amortization a lock-step bulk prefill gets. Attention is
+        // priced at the deepest context in the cohort (conservative;
+        // attention is a small share of prefill for these shapes).
+        let total: usize = parts.iter().map(|&(tokens, _)| tokens).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let b = parts.len();
+        let ctx = parts
+            .iter()
+            .map(|&(tokens, ctx)| ctx + tokens)
+            .max()
+            .unwrap_or(0);
+        self.target_sim.t_forward_tokens(b, total, ctx)
+            + self.draft_sim.t_forward_tokens(b, total, ctx)
+    }
+
     fn propose(
         &mut self,
         seqs: &[SeqId],

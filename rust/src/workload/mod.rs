@@ -562,8 +562,6 @@ impl ArrivalTrace {
         base_rate: f64,
         seed: u64,
     ) -> ArrivalTrace {
-        assert!(duration_s > 0.0 && base_rate > 0.0);
-        let mut rng = Rng::new(seed, 0x7ace);
         let lengths = LengthModel {
             prompt_log_mean: (64.0f64).ln(),
             prompt_log_std: 0.6,
@@ -573,6 +571,46 @@ impl ArrivalTrace {
             prompt_clamp: (8, 256),
             output_clamp: (4, 384),
         };
+        ArrivalTrace::synthetic_mmpp(duration_s, base_rate, seed, lengths)
+    }
+
+    /// Prefill-heavy variant of [`ArrivalTrace::synthetic_production`]:
+    /// the identical Markov-modulated arrival process (same burst
+    /// structure at the same seed), but prompts centered ≈4× longer
+    /// (256 tokens, tail to 1024) with modest outputs. This is the
+    /// workload where bulk prefill stalls decode for whole-prompt
+    /// forwards — the regime chunked prefill exists for — and it drives
+    /// the `bench continuous` TTFT comparison.
+    pub fn synthetic_production_heavy(
+        duration_s: f64,
+        base_rate: f64,
+        seed: u64,
+    ) -> ArrivalTrace {
+        let lengths = LengthModel {
+            prompt_log_mean: (256.0f64).ln(),
+            prompt_log_std: 0.6,
+            output_log_mean: (32.0f64).ln(),
+            output_log_std: 0.5,
+            corr: 0.6,
+            prompt_clamp: (32, 1024),
+            output_clamp: (4, 128),
+        };
+        ArrivalTrace::synthetic_mmpp(duration_s, base_rate, seed, lengths)
+    }
+
+    /// Shared Markov-modulated Poisson generator behind the synthetic
+    /// trace shapes (calm/burst states, bursts ≈ 4× the calm rate).
+    /// Length draws interleave with arrival draws on one RNG stream, so
+    /// two shapes with the same seed share burst *timing* only when their
+    /// length models are identical.
+    fn synthetic_mmpp(
+        duration_s: f64,
+        base_rate: f64,
+        seed: u64,
+        lengths: LengthModel,
+    ) -> ArrivalTrace {
+        assert!(duration_s > 0.0 && base_rate > 0.0);
+        let mut rng = Rng::new(seed, 0x7ace);
         let mut events = Vec::new();
         let mut t = 0.0f64;
         let mut bursting = false;
@@ -913,6 +951,34 @@ mod tests {
         for w in a.events().windows(2) {
             assert!(w[0].t <= w[1].t);
         }
+    }
+
+    #[test]
+    fn heavy_trace_is_prefill_heavy_and_deterministic() {
+        let heavy = ArrivalTrace::synthetic_production_heavy(120.0, 4.0, 7);
+        let again = ArrivalTrace::synthetic_production_heavy(120.0, 4.0, 7);
+        assert_eq!(heavy.events(), again.events());
+        let base = ArrivalTrace::synthetic_production(120.0, 4.0, 7);
+        let mean_prompt = |t: &ArrivalTrace| {
+            t.events().iter().map(|e| e.prompt_len).sum::<usize>() as f64 / t.len() as f64
+        };
+        // ≈4× longer prompts than the base shape, inside the clamps.
+        assert!(
+            mean_prompt(&heavy) > 2.5 * mean_prompt(&base),
+            "heavy {} vs base {}",
+            mean_prompt(&heavy),
+            mean_prompt(&base)
+        );
+        for e in heavy.events() {
+            assert!((32..=1024).contains(&e.prompt_len));
+            assert!((4..=128).contains(&e.output_len));
+        }
+        // Prefill work dominates decode work: total prompt tokens exceed
+        // total output tokens (the regime chunked prefill targets).
+        let (p, o) = heavy.events().iter().fold((0usize, 0usize), |(p, o), e| {
+            (p + e.prompt_len, o + e.output_len)
+        });
+        assert!(p > 3 * o, "prompt tokens {p} vs output tokens {o}");
     }
 
     #[test]

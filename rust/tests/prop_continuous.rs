@@ -1,0 +1,323 @@
+//! Property tests for the continuous-batching pipeline (PR 7):
+//!
+//! 1. **Degenerate parity** — the continuous engine with every feature
+//!    off (no chunking, no draft-ahead, batch round boundaries) replays
+//!    the lock-step `Engine::step` bit-for-bit: same tokens, same
+//!    virtual clock, same rounds, same preemptions, same per-stage time
+//!    accounting, across random workloads.
+//! 2. **Losslessness under the full pipeline** — chunked prefill +
+//!    draft-ahead + per-sequence boundaries still emit exactly the
+//!    deterministic token chains.
+//! 3. **Preempt-on-admission** — a high-priority arrival that cannot be
+//!    admitted evicts a strictly-lower-tier running sequence (and the
+//!    knob is off by default).
+
+use moesd::arch::presets;
+use moesd::batching::{Request, SamplingParams};
+use moesd::engine::{Engine, EngineConfig, PipelineConfig};
+use moesd::hardware::platform_2x_gpu_a;
+use moesd::kvcache::KvConfig;
+use moesd::scheduler::{AdmissionPolicyConfig, ClassAwareConfig, SchedulerConfig};
+use moesd::simulator::ExecSim;
+use moesd::spec::synthetic::SyntheticLm;
+use moesd::testkit::{ensure, Gen, Runner};
+use moesd::workload::TenantClass;
+
+/// A random open-loop workload: staggered arrivals, random lengths.
+struct Workload {
+    alpha: f64,
+    gamma: usize,
+    max_batch: usize,
+    blocks: usize,
+    seed: u64,
+    specs: Vec<(usize, usize, f64)>, // (prompt_len, max_new, arrival)
+}
+
+fn gen_workload(g: &mut Gen) -> Workload {
+    let n_req = g.usize_in(1, 8);
+    let mut t = 0.0;
+    let specs = (0..n_req)
+        .map(|_| {
+            t += g.f64_in(0.0, 0.05);
+            (g.usize_in(2, 12), g.usize_in(1, 24), t)
+        })
+        .collect();
+    Workload {
+        alpha: g.f64_in(0.4, 0.95),
+        gamma: g.usize_in(0, 5),
+        max_batch: g.usize_in(1, 6),
+        blocks: g.usize_in(16, 64),
+        seed: g.u64_in(0, 1 << 20),
+        specs,
+    }
+}
+
+fn build(w: &Workload, pipeline: PipelineConfig) -> Engine<SyntheticLm> {
+    let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+    let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+    let mut e = Engine::new(
+        EngineConfig {
+            gamma: w.gamma,
+            kv: KvConfig {
+                num_blocks: w.blocks,
+                block_size: 4,
+            },
+            scheduler: SchedulerConfig {
+                max_batch: w.max_batch,
+                admit_reserve_tokens: 4,
+                tpot_slo: None,
+            },
+            seed: w.seed,
+            pipeline,
+            ..Default::default()
+        },
+        SyntheticLm::new(target, draft, w.alpha, w.seed),
+    );
+    for (i, &(prompt_len, max_new, arrival)) in w.specs.iter().enumerate() {
+        e.submit(Request {
+            id: i as u64,
+            prompt: (0..prompt_len as u32).collect(),
+            params: SamplingParams {
+                temperature: 0.0,
+                max_new_tokens: max_new,
+                eos_token: None,
+            },
+            arrival,
+            class: 0,
+        });
+    }
+    e
+}
+
+/// Everything the parity claim compares: per-request outcomes, virtual
+/// clock, round/preemption counts, and the stage-time accounting.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    completions: Vec<(u64, Vec<u32>, f64, f64)>, // (id, tokens, ttft, finished_at)
+    rounds: u64,
+    clock: f64,
+    preemptions: u64,
+    time_draft: f64,
+    time_verify: f64,
+    time_reject: f64,
+    time_prefill: f64,
+}
+
+fn run_fingerprint(w: &Workload, pipeline: PipelineConfig) -> Result<Fingerprint, String> {
+    let mut e = build(w, pipeline);
+    let mut done = e
+        .run_to_completion(20_000)
+        .map_err(|err| format!("run failed: {err}"))?;
+    done.sort_by_key(|c| c.id);
+    Ok(Fingerprint {
+        completions: done
+            .into_iter()
+            .map(|c| (c.id, c.tokens, c.ttft(), c.finished_at))
+            .collect(),
+        rounds: e.metrics.rounds,
+        clock: e.clock(),
+        preemptions: e.counters.get("preemptions"),
+        time_draft: e.metrics.time_draft,
+        time_verify: e.metrics.time_verify,
+        time_reject: e.metrics.time_reject,
+        time_prefill: e.metrics.time_prefill,
+    })
+}
+
+/// The degenerate continuous configuration: the pipeline dispatcher on,
+/// every mechanism off.
+fn degenerate() -> PipelineConfig {
+    PipelineConfig {
+        continuous: true,
+        prefill_chunk: None,
+        draft_ahead: false,
+        per_seq_boundaries: false,
+    }
+}
+
+#[test]
+fn prop_degenerate_continuous_reproduces_lockstep_bit_for_bit() {
+    let mut runner = Runner::new("continuous_degenerate_parity");
+    runner.run(12, |g| {
+        let w = gen_workload(g);
+        let lockstep = run_fingerprint(&w, PipelineConfig::default())?;
+        let cont = run_fingerprint(&w, degenerate())?;
+        ensure(
+            lockstep == cont,
+            format!(
+                "degenerate continuous diverged from lock-step:\n  lockstep: rounds {} \
+                 clock {} preempt {} draft {} verify {} prefill {}\n  continuous: rounds {} \
+                 clock {} preempt {} draft {} verify {} prefill {}",
+                lockstep.rounds,
+                lockstep.clock,
+                lockstep.preemptions,
+                lockstep.time_draft,
+                lockstep.time_verify,
+                lockstep.time_prefill,
+                cont.rounds,
+                cont.clock,
+                cont.preemptions,
+                cont.time_draft,
+                cont.time_verify,
+                cont.time_prefill,
+            ),
+        )
+    });
+}
+
+#[test]
+fn prop_full_pipeline_stays_lossless() {
+    let mut runner = Runner::new("continuous_full_lossless");
+    runner.run(12, |g| {
+        let w = gen_workload(g);
+        let chunk = g.usize_in(1, 16);
+        let mut e = build(&w, PipelineConfig::full(chunk));
+        let done = e
+            .run_to_completion(40_000)
+            .map_err(|err| format!("run failed: {err}"))?;
+        if done.len() != w.specs.len() {
+            return Err(format!("{} of {} completed", done.len(), w.specs.len()));
+        }
+        for c in &done {
+            let (prompt_len, max_new, _) = w.specs[c.id as usize];
+            if c.tokens.len() != max_new {
+                return Err(format!(
+                    "seq {}: {} tokens != {max_new}",
+                    c.id,
+                    c.tokens.len()
+                ));
+            }
+            let expect = e.backend().expected_chain(c.id, prompt_len, max_new);
+            if c.tokens != expect {
+                return Err(format!(
+                    "seq {}: wrong tokens (losslessness broken by the pipeline)",
+                    c.id
+                ));
+            }
+        }
+        if let Err(err) = e.kv().check_invariants() {
+            return Err(format!("KV invariant: {err}"));
+        }
+        // Accounting sanity: hidden draft time is a subset of draft time,
+        // and the critical-path decode time never exceeds the stage sum.
+        let m = &e.metrics;
+        if m.time_draft_hidden > m.time_draft + 1e-12 {
+            return Err(format!(
+                "hidden draft {} exceeds total draft {}",
+                m.time_draft_hidden, m.time_draft
+            ));
+        }
+        if m.pipeline_decode_time() > m.decode_time() + 1e-12 {
+            return Err("pipeline decode time exceeds stage sum".into());
+        }
+        ensure(true, "")
+    });
+}
+
+fn two_tier_engine(preempt_on_admission: bool) -> Engine<SyntheticLm> {
+    let bulk = TenantClass::new("bulk"); // priority 1
+    let mut hi = TenantClass::new("hi");
+    hi.priority = 2;
+    let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+    let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+    Engine::new(
+        EngineConfig {
+            gamma: 2,
+            kv: KvConfig {
+                // Two bulk sequences reserve 2×8 blocks; a third admission
+                // needs 8 more and only 2 remain → admission stalls until
+                // something is evicted or finishes.
+                num_blocks: 18,
+                block_size: 4,
+            },
+            scheduler: SchedulerConfig {
+                max_batch: 8,
+                admit_reserve_tokens: 24,
+                tpot_slo: None,
+            },
+            seed: 7,
+            tenants: vec![bulk, hi],
+            admission: AdmissionPolicyConfig::ClassAware(ClassAwareConfig {
+                preempt_on_admission,
+                ..ClassAwareConfig::default()
+            }),
+            ..Default::default()
+        },
+        SyntheticLm::new(target, draft, 0.9, 7),
+    )
+}
+
+fn two_tier_workload(e: &mut Engine<SyntheticLm>) {
+    // Two long-running bulk sequences arrive first and claim the KV…
+    for id in 0..2u64 {
+        e.submit(Request {
+            id,
+            prompt: (0..8).collect(),
+            params: SamplingParams {
+                temperature: 0.0,
+                max_new_tokens: 24,
+                eos_token: None,
+            },
+            arrival: 0.0,
+            class: 0,
+        });
+    }
+    // …then a high-priority request lands behind the full cache.
+    e.submit(Request {
+        id: 2,
+        prompt: (0..8).collect(),
+        params: SamplingParams {
+            temperature: 0.0,
+            max_new_tokens: 8,
+            eos_token: None,
+        },
+        arrival: 1e-3,
+        class: 1,
+    });
+}
+
+#[test]
+fn preemptive_eviction_on_admission_frees_room_for_high_priority() {
+    let mut e = two_tier_engine(true);
+    two_tier_workload(&mut e);
+    let done = e.run_to_completion(20_000).unwrap();
+    assert_eq!(done.len(), 3, "all requests complete despite the eviction");
+    assert!(
+        e.counters.get("admission_evictions") >= 1,
+        "the high-priority arrival must evict a bulk sequence"
+    );
+    assert!(e.counters.get("preemptions") >= 1);
+    // Losslessness survives the evict/restore cycle.
+    for c in &done {
+        let max_new = if c.id == 2 { 8 } else { 24 };
+        assert_eq!(c.tokens, e.backend().expected_chain(c.id, 8, max_new));
+    }
+    // The high-priority request starts decoding before the bulk work
+    // drains: its first token precedes at least one bulk completion.
+    let hi = done.iter().find(|c| c.id == 2).unwrap();
+    let bulk_last = done
+        .iter()
+        .filter(|c| c.id != 2)
+        .map(|c| c.finished_at)
+        .fold(f64::MIN, f64::max);
+    assert!(
+        hi.arrival + hi.ttft() < bulk_last,
+        "hi TTFT {} should beat the last bulk completion {}",
+        hi.arrival + hi.ttft(),
+        bulk_last
+    );
+}
+
+#[test]
+fn admission_eviction_is_off_by_default() {
+    assert!(!ClassAwareConfig::default().preempt_on_admission);
+    let mut e = two_tier_engine(false);
+    two_tier_workload(&mut e);
+    let done = e.run_to_completion(20_000).unwrap();
+    assert_eq!(done.len(), 3);
+    assert_eq!(
+        e.counters.get("admission_evictions"),
+        0,
+        "no admission-time eviction without the knob"
+    );
+}
