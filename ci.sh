@@ -121,6 +121,49 @@ PYEOF
         done
         echo "continuous.json shape OK (grep fallback)"
     fi
+
+    # Verify-budget smoke: one memory-bound point through the (γ, budget)
+    # sweep. The smoke grid skips the replica-calibrated margin claims
+    # (full `moesd bench budget` runs them) but still enforces the exact
+    # budget=E off-switch identity at every point via check_shape — the
+    # bench exits non-zero if any capped arm diverges bit-wise from its
+    # unbudgeted twin.
+    echo "== budget smoke (off-switch identity gate)"
+    MOESD_SMOKE=1 cargo run --release --bin moesd -- bench budget --smoke
+    echo "== validate results/budget.json shape"
+    if command -v python3 >/dev/null 2>&1; then
+        python3 - <<'PYEOF'
+import json
+with open("results/budget.json") as f:
+    doc = json.load(f)
+assert doc["smoke"] is True, doc.get("smoke")
+assert doc["sensitivity"] > 0, doc.get("sensitivity")
+points = doc["points"]
+assert points, "no points in budget.json"
+for p in points:
+    for key in ("alpha", "k", "batch", "fabric", "devices",
+                "best_off_tok_s", "best_off_gamma", "best_budgeted_tok_s",
+                "best_budgeted_gamma", "best_budget", "budget_edge",
+                "identity_ok"):
+        assert key in p, f"point missing {key}: {sorted(p.keys())}"
+    assert p["identity_ok"] is True, f"off-switch identity failed: {p}"
+    assert p["best_off_tok_s"] > 0, p
+    assert p["best_budgeted_tok_s"] > 0, p
+    assert 1 <= p["best_budget"] < 64, f"sub-coverage budget expected: {p}"
+print(f"budget.json shape OK ({len(points)} points)")
+PYEOF
+    else
+        # Minimal fallback without python3: the load-bearing keys exist
+        # and no point reported a broken off-switch identity.
+        for key in '"sensitivity"' '"points"' '"budget_edge"' '"identity_ok"'; do
+            grep -q "$key" results/budget.json || {
+                echo "budget.json missing $key"; exit 1; }
+        done
+        if grep -q '"identity_ok": *false' results/budget.json; then
+            echo "budget.json reports a broken off-switch identity"; exit 1
+        fi
+        echo "budget.json shape OK (grep fallback)"
+    fi
 fi
 
 echo "CI gate passed."

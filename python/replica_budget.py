@@ -1,0 +1,207 @@
+#!/usr/bin/env python3
+"""Python replica of the `moesd bench budget` sweep (PR 8).
+
+Independently re-implements, from the Rust sources, the expected-value
+round model of the expert-budgeted speculative decoding trade:
+
+  * the roofline pricing walk (`simulator/mod.rs`
+    `forward_time_tokens_budgeted`, unsharded path) for qwen2-57B-A14B
+    on 2xGPU-A and qwen2-0.5B on 1xGPU-A, with the routed-expert arm
+    capped at the verify budget: `n_act = min(N(t), budget)` (Eq. 8
+    capped), per-expert load recomputed against the capped count
+    (Eq. 10), dispatch traffic unchanged;
+  * the SyntheticLm round prices (`spec/synthetic.rs`): uniform propose
+    (gamma sequential draft forwards), packed budgeted verify, reject
+    rows at CTX = 512;
+  * the acceptance-vs-budget degradation curve
+    (`theory::budgeted_alpha`): alpha_eff = alpha * cov**sensitivity,
+    cov = min(1, budget / N(t)) at verify width t = B*(gamma+1);
+  * the expected emitted tokens per sequence per round,
+    sum_{j=0..gamma} alpha_eff^j = (1 - alpha_eff^(gamma+1)) /
+    (1 - alpha_eff).
+
+It sweeps the same (alpha, K, B, budget, gamma) grid as
+`rust/src/experiments/budget.rs` and prints, per point, the best
+unbudgeted arm, the best budgeted arm, and their ratio — the margins
+the bench's `check_shape` and `rust/tests/integration_budget.rs` pin
+are calibrated against these numbers (the Rust runs measure the real
+engine with stochastic acceptance, so pinned margins sit well below
+the expected-value ratios printed here).
+
+Run:  python3 python/replica_budget.py
+      python3 python/replica_budget.py --sens 0.25 --full
+"""
+
+import argparse
+from functools import lru_cache
+
+# ---------------------------------------------------------------------------
+# Roofline pricing (simulator/mod.rs, unsharded; hardware/mod.rs gpu_a)
+# ---------------------------------------------------------------------------
+
+EFF_C, EFF_M = 0.35, 0.80
+
+
+class Plat:
+    def __init__(self, n):
+        self.n = n
+        self.flops = 312e12 * n
+        self.bw = 2039e9 * n
+        self.ic = 300e9
+        self.lat = 10e-6
+
+    def op(self, flops, wbytes, abytes):
+        return max(flops / (self.flops * EFF_C),
+                   wbytes / (self.bw * EFF_M) + abytes / (self.bw * EFF_M))
+
+    def allreduce(self, nbytes):
+        if self.n <= 1:
+            return 0.0
+        return self.lat + 2.0 * (self.n - 1) / self.n * nbytes / self.ic
+
+
+class Arch:
+    def __init__(self, h, layers, heads, kv_heads, hd, vocab, moe=None, inter=None):
+        self.h, self.layers, self.heads, self.kv_heads, self.hd = h, layers, heads, kv_heads, hd
+        self.vocab, self.moe, self.inter = vocab, moe, inter
+        self.dt = 2.0
+        q = h * heads * hd
+        kv = 2 * h * kv_heads * hd
+        o = heads * hd * h
+        self.attn_params = q + kv + o
+        self.kv_bytes_tok = 2 * layers * kv_heads * hd * self.dt
+        self.step_overhead = 150e-6 + layers * 40e-6
+
+    def with_topk(self, k):
+        e, _, ei, si = self.moe
+        return Arch(self.h, self.layers, self.heads, self.kv_heads, self.hd,
+                    self.vocab, moe=(e, k, ei, si))
+
+
+TARGET = Arch(3584, 28, 28, 4, 128, 151936, moe=(64, 8, 2560, 20480))
+DRAFT = Arch(896, 24, 14, 2, 64, 151936, inter=4864)
+TPLAT, DPLAT = Plat(2), Plat(1)
+CTX = 512  # SyntheticLm::ctx_for_pricing
+
+
+def n_active(e, k, t):
+    """Eq. 8: expected activated experts for t tokens through one gate."""
+    return e * (1.0 - ((e - k) / e) ** t)
+
+
+def fwd(arch, plat, b, tokens, ctx, budget=None):
+    """forward_time_tokens_budgeted: one forward, optionally expert-capped."""
+    assert b > 0 and tokens > 0
+    t = float(tokens)
+    dt, h, L = arch.dt, float(arch.h), float(arch.layers)
+    total = plat.op(0.0, 0.0, t * h * dt) + arch.step_overhead
+    attn_flops = t * (2.0 * arch.attn_params + 4.0 * arch.heads * arch.hd * ctx)
+    kv_read = b * ctx * arch.kv_bytes_tok / L
+    total += L * plat.op(attn_flops, arch.attn_params * dt, kv_read + 4.0 * t * h * dt)
+    if arch.moe:
+        E, K, ei, si = arch.moe
+        total += L * (plat.op(t * 2.0 * h * E, h * E * dt, t * h * dt)
+                      + plat.op(t * 6.0 * h * si, 3.0 * h * si * dt, 2.0 * t * h * dt))
+        n_act = n_active(E, K, t)
+        if budget is not None:
+            n_act = min(n_act, float(budget))
+        load = t * K / max(n_act, 1e-9)
+        total += L * plat.op(n_act * load * 6.0 * h * ei,
+                             n_act * 3.0 * h * ei * dt,
+                             2.0 * t * K * h * dt)
+    else:
+        inter = arch.inter
+        total += L * plat.op(t * 6.0 * h * inter, 3.0 * h * inter * dt, 2.0 * t * h * dt)
+    total += L * 2.0 * plat.allreduce(t * h * dt)
+    total += plat.op(t * 2.0 * h * arch.vocab, arch.vocab * h * dt, t * arch.vocab * dt)
+    return total
+
+
+@lru_cache(maxsize=None)
+def tT(k, b, tokens, budget):
+    return fwd(TARGET.with_topk(k), TPLAT, b, tokens, CTX, budget)
+
+
+@lru_cache(maxsize=None)
+def tD(b, tokens):
+    return fwd(DRAFT, DPLAT, b, tokens, CTX)
+
+
+def reject_cost(rows):
+    return 40e-6 + rows * TARGET.vocab * 4.0 / TPLAT.bw
+
+
+# ---------------------------------------------------------------------------
+# Expected-value round model (engine/mod.rs lock-step round, uniform alpha)
+# ---------------------------------------------------------------------------
+
+
+def alpha_eff(alpha, k, t, budget, sens):
+    """theory::budgeted_alpha at verify width t: alpha * cov**sens."""
+    if budget is None:
+        return alpha
+    n = n_active(64, k, t)
+    if budget >= n:
+        return alpha
+    return alpha * (budget / n) ** sens
+
+
+def goodput(alpha, k, b, gamma, budget, sens):
+    """Expected committed tokens per second of one steady-state round."""
+    rows = b * (gamma + 1)
+    a = alpha_eff(alpha, k, rows, budget, sens)
+    # Expected emitted per sequence: accepted prefix + bonus token.
+    emitted = sum(a ** j for j in range(gamma + 1))
+    t_draft = gamma * tD(b, b) if gamma > 0 else 0.0
+    t_verify = tT(k, b, rows, budget)
+    t = t_draft + t_verify + reject_cost(rows)
+    return b * emitted / t
+
+
+def sweep(alphas, ks, batches, budgets, gammas, sens):
+    print(f"{'alpha':>6} {'K':>3} {'B':>5} | {'AR tok/s':>9} | "
+          f"{'best off':>9} {'g':>2} {'spd':>6} | "
+          f"{'best budgeted':>13} {'g':>2} {'bud':>4} {'spd':>6} | {'ratio':>6}")
+    for alpha in alphas:
+        for k in ks:
+            for b in batches:
+                ar = goodput(alpha, k, b, 0, None, sens)
+                best_off = max((goodput(alpha, k, b, g, None, sens), g)
+                               for g in gammas if g > 0)
+                best_bud = max((goodput(alpha, k, b, g, bud, sens), g, bud)
+                               for g in gammas if g > 0
+                               for bud in budgets if bud is not None)
+                ratio = best_bud[0] / best_off[0]
+                print(f"{alpha:>6.2f} {k:>3} {b:>5} | {ar:>9.1f} | "
+                      f"{best_off[0]:>9.1f} {best_off[1]:>2} {best_off[0] / ar:>6.3f} | "
+                      f"{best_bud[0]:>13.1f} {best_bud[1]:>2} {best_bud[2]:>4} "
+                      f"{best_bud[0] / ar:>6.3f} | {ratio:>6.3f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sens", type=float, default=0.25,
+                    help="acceptance-vs-budget curve exponent (bench default)")
+    ap.add_argument("--full", action="store_true",
+                    help="wider grid (all sensitivities, more batches)")
+    args = ap.parse_args()
+    budgets = [8, 16, 32, 48, 64]
+    gammas = list(range(0, 9))
+    if args.full:
+        for sens in (0.0, 0.15, 0.25, 0.35, 0.5, 1.0):
+            print(f"\n=== sensitivity {sens} ===")
+            sweep([0.8, 0.9], [4, 8], [1, 2, 4, 8, 16, 32, 64, 256], budgets,
+                  gammas, sens)
+    else:
+        print(f"=== sensitivity {args.sens} (bench grid) ===")
+        sweep([0.9], [8], [4, 16, 64], budgets, gammas, args.sens)
+        print("\nbit-identity spot check: budget=64 == unbudgeted, exactly")
+        for (b, g) in [(4, 3), (16, 4), (64, 2)]:
+            off = goodput(0.9, 8, b, g, None, args.sens)
+            cap = goodput(0.9, 8, b, g, 64, args.sens)
+            flag = "OK" if off == cap else "MISMATCH"
+            print(f"  B={b:<3} gamma={g}: off {off:.6f} capped {cap:.6f}  {flag}")
+
+
+if __name__ == "__main__":
+    main()

@@ -88,6 +88,15 @@ pub struct Config {
     /// `t,prompt_len,output_len` CSV row to this path on shutdown
     /// (`--record-trace PATH`); empty = off.
     pub record_trace: String,
+    /// Static verify-expert budget: cap the experts the MoE target
+    /// activates during *verify* forwards at this count (0 = off, the
+    /// unbudgeted paper path). Cheaper verify, degraded acceptance for
+    /// tokens routed outside the cap — the (γ, budget) trade.
+    pub verify_budget: usize,
+    /// Let the adaptive controller pick the verify budget jointly with γ
+    /// from its measured acceptance-vs-budget curve. Requires `adaptive`;
+    /// mutually exclusive with a static `verify_budget`.
+    pub adaptive_budget: bool,
 }
 
 impl Default for Config {
@@ -114,6 +123,8 @@ impl Default for Config {
             continuous: false,
             prefill_chunk: 512,
             record_trace: String::new(),
+            verify_budget: 0,
+            adaptive_budget: false,
         }
     }
 }
@@ -159,6 +170,11 @@ impl Config {
             continuous: j.get("continuous").and_then(Json::as_bool).unwrap_or(false),
             prefill_chunk: usize_or("prefill_chunk", d.prefill_chunk),
             record_trace: str_or("record_trace", ""),
+            verify_budget: usize_or("verify_budget", d.verify_budget),
+            adaptive_budget: j
+                .get("adaptive_budget")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -216,6 +232,32 @@ impl Config {
             "continuous batching requires synthetic mode (the pipeline's \
              overlap pricing needs the virtual clock)"
         );
+        anyhow::ensure!(
+            !(self.adaptive_budget && !self.adaptive),
+            "adaptive verify budgeting needs the adaptive control plane \
+             (use --adaptive-budget, which implies --adaptive, or set both \
+             in the config file)"
+        );
+        anyhow::ensure!(
+            !(self.adaptive_budget && self.verify_budget > 0),
+            "pick one budget owner: a static --verify-budget or the \
+             controller's --adaptive-budget, not both"
+        );
+        if self.verify_budget > 0 || self.adaptive_budget {
+            anyhow::ensure!(
+                self.mode == Mode::Synthetic,
+                "verify budgeting requires synthetic mode (the HLO backend \
+                 has no budgeted gate)"
+            );
+            let target = crate::arch::presets::by_name(&self.model)?;
+            let platform = crate::hardware::platform_by_name(&self.platform)?;
+            anyhow::ensure!(
+                ExecSim::new(target, platform).moe_dims().is_some(),
+                "verify budgeting caps *expert* activation — the target \
+                 `{}` is dense",
+                self.model
+            );
+        }
         Ok(())
     }
 
@@ -252,6 +294,24 @@ impl Config {
         // the draft are priced on the full deployment platform (the same
         // ExecSim construction `serve` uses for the synthetic backend).
         let tsim = ExecSim::new(target, platform.clone());
+        // Adaptive budgeting: the controller explores a small grid of
+        // expert caps spanning the sparse regime — E/8 up to 3E/4 — and
+        // keeps the unbudgeted arm as the always-present candidate. The
+        // grid being non-empty is what makes the controller *own* the
+        // budget (see `SpecController::owns_budget`).
+        let budget_grid: Vec<usize> = if self.adaptive_budget {
+            let (e, _k) = tsim.moe_dims().ok_or_else(|| {
+                anyhow::anyhow!("adaptive verify budgeting needs a MoE target")
+            })?;
+            let mut grid: Vec<usize> = [e / 8, e / 4, e / 2, e * 3 / 4]
+                .into_iter()
+                .filter(|&b| b >= 1)
+                .collect();
+            grid.dedup();
+            grid
+        } else {
+            Vec::new()
+        };
         let dsim = ExecSim::new(draft, platform);
         Ok(Some(ControlConfig {
             alpha_prior: alpha,
@@ -260,6 +320,7 @@ impl Config {
             // batch, so the controller tracks windows even without ragged
             // rounds.
             track_seq_alpha: self.ragged || self.mix_admission,
+            budget_grid,
             ..ControlConfig::model_guided(CostModelSpec::roofline(tsim, dsim))
         }))
     }
@@ -330,6 +391,8 @@ impl Config {
             ("continuous", self.continuous.into()),
             ("prefill_chunk", self.prefill_chunk.into()),
             ("record_trace", self.record_trace.as_str().into()),
+            ("verify_budget", self.verify_budget.into()),
+            ("adaptive_budget", self.adaptive_budget.into()),
         ])
     }
 }
@@ -505,6 +568,59 @@ mod tests {
         assert!(Config {
             continuous: true,
             mode: Mode::Hlo,
+            ..Config::default()
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn budget_knobs_round_trip_and_drive_the_controller_grid() {
+        // Static budget round-trips; the controller grid stays empty
+        // (the backend owns a fixed cap, the controller never moves it).
+        let c = Config {
+            verify_budget: 16,
+            adaptive: true,
+            ..Config::default()
+        };
+        c.validate().unwrap();
+        let c2 = Config::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.verify_budget, 16);
+        assert!(!c2.adaptive_budget);
+        let ctl = c.engine_config().unwrap().control.unwrap();
+        assert!(ctl.budget_grid.is_empty());
+        // Adaptive budgeting derives the sparse-regime grid from the
+        // target's expert count (E = 64 for the default MoE preset).
+        let a = Config {
+            adaptive: true,
+            adaptive_budget: true,
+            ..Config::default()
+        };
+        a.validate().unwrap();
+        let ctl = a.engine_config().unwrap().control.unwrap();
+        assert_eq!(ctl.budget_grid, vec![8, 16, 32, 48]);
+        let a2 = Config::from_json(&a.to_json()).unwrap();
+        assert!(a2.adaptive_budget);
+        // Rejections: adaptive_budget without adaptive, both owners at
+        // once, budgeting a dense target.
+        assert!(Config {
+            adaptive_budget: true,
+            ..Config::default()
+        }
+        .validate()
+        .is_err());
+        assert!(Config {
+            adaptive: true,
+            adaptive_budget: true,
+            verify_budget: 8,
+            ..Config::default()
+        }
+        .validate()
+        .is_err());
+        assert!(Config {
+            verify_budget: 8,
+            model: "qwen2-0.5b".into(),
+            draft: "qwen2-0.5b".into(),
             ..Config::default()
         }
         .validate()

@@ -105,6 +105,15 @@ pub trait CostModel: Send {
         let hi = self.t_target(b, s_lo + 1);
         lo + (hi - lo) * rem as f64 / b as f64
     }
+
+    /// Packed verify price under a verify-expert budget (`None` =
+    /// unbudgeted; the default ignores the budget, which is correct for
+    /// cost models without a MoE gate to cap). [`CostModelSpec`]
+    /// overrides it with the Eq. 8/10 capped surfaces.
+    fn t_target_tokens_budgeted(&self, b: usize, tokens: usize, budget: Option<usize>) -> f64 {
+        let _ = budget;
+        self.t_target_tokens(b, tokens)
+    }
 }
 
 /// Plain-data cost model description (keeps [`ControlConfig`] `Clone`).
@@ -188,6 +197,17 @@ impl CostModelSpec {
             CostModelSpec::Roofline { target, .. } => target.sharding(),
         }
     }
+
+    /// The target's MoE gate shape `(E, K)`, if it has one — the inputs
+    /// the budget coverage curve ([`theory::budget_coverage`]) needs.
+    /// `None` for dense targets, where a verify-expert budget is
+    /// meaningless and the policy treats every budget as transparent.
+    pub fn moe_dims(&self) -> Option<(usize, usize)> {
+        match self {
+            CostModelSpec::Perf { k, e, .. } => Some((*e, *k)),
+            CostModelSpec::Roofline { target, .. } => target.moe_dims(),
+        }
+    }
 }
 
 impl CostModel for CostModelSpec {
@@ -241,6 +261,22 @@ impl CostModel for CostModelSpec {
                 .t_target_sharded(params, tokens, 1, *k, *e, sharding),
             CostModelSpec::Roofline { target, ctx, .. } => {
                 target.t_forward_tokens(b.max(1), tokens, *ctx)
+            }
+        }
+    }
+
+    fn t_target_tokens_budgeted(&self, b: usize, tokens: usize, budget: Option<usize>) -> f64 {
+        match self {
+            CostModelSpec::Perf {
+                ridge_point,
+                params,
+                k,
+                e,
+                sharding,
+            } => PerfModel::with_ridge_point(*ridge_point)
+                .t_target_sharded_budgeted(params, tokens, 1, *k, *e, sharding, budget),
+            CostModelSpec::Roofline { target, ctx, .. } => {
+                target.t_forward_tokens_budgeted(b.max(1), tokens, *ctx, budget)
             }
         }
     }
@@ -304,6 +340,16 @@ pub struct ControlConfig {
     /// α̂ᵢ through the engine without requiring ragged rounds; scalar
     /// deployments that don't need either keep the map empty (default).
     pub track_seq_alpha: bool,
+    /// Candidate verify-expert budgets the model-guided policy may pick
+    /// jointly with γ. **Empty (the default) disables the budget axis
+    /// entirely** — the controller never touches the backend's budget and
+    /// every decision is bit-identical to the unbudgeted controller.
+    pub budget_grid: Vec<usize>,
+    /// Exponent of the acceptance-degradation prior `α_eff = α·cov^sens`
+    /// used to price budget candidates before the measured
+    /// acceptance-vs-budget curve has samples (see
+    /// [`theory::budgeted_alpha`]). Ignored while `budget_grid` is empty.
+    pub budget_sensitivity: f64,
 }
 
 impl Default for ControlConfig {
@@ -321,6 +367,8 @@ impl Default for ControlConfig {
             seq_window_rounds: 8,
             ragged_min_spread: 0.25,
             track_seq_alpha: false,
+            budget_grid: Vec::new(),
+            budget_sensitivity: 1.0,
         }
     }
 }
@@ -374,6 +422,14 @@ impl ControlConfig {
             self.ragged_min_spread >= 0.0,
             "ragged_min_spread must be non-negative"
         );
+        anyhow::ensure!(
+            self.budget_grid.iter().all(|&b| b >= 1),
+            "budget_grid entries must be >= 1"
+        );
+        anyhow::ensure!(
+            self.budget_sensitivity.is_finite() && self.budget_sensitivity >= 0.0,
+            "budget_sensitivity must be finite and non-negative"
+        );
         Ok(())
     }
 
@@ -399,6 +455,13 @@ impl ControlConfig {
             seq_window_rounds: self.seq_window_rounds.max(1),
             ragged_min_spread: self.ragged_min_spread.max(0.0),
             track_seq_alpha: self.track_seq_alpha,
+            budget_grid: self.budget_grid.iter().copied().filter(|&b| b >= 1).collect(),
+            budget_sensitivity: if self.budget_sensitivity.is_finite() && self.budget_sensitivity >= 0.0
+            {
+                self.budget_sensitivity
+            } else {
+                ControlConfig::default().budget_sensitivity
+            },
         }
     }
 }
@@ -421,6 +484,11 @@ pub struct RoundObservation {
     pub t_draft: f64,
     pub t_verify: f64,
     pub t_reject: f64,
+    /// Verify-expert budget the round's target forward ran under
+    /// (`None` = unbudgeted — the backend's [`crate::spec::SdBackend::verify_budget`]
+    /// at verify time). Budgeted rounds feed a separate cost column and
+    /// the acceptance-vs-budget curve so the unbudgeted table stays pure.
+    pub budget: Option<usize>,
 }
 
 /// One sequence's acceptance outcome in one decode round — the
@@ -514,11 +582,22 @@ pub fn bucket_of(batch: usize) -> usize {
     batch.max(1).next_power_of_two()
 }
 
+/// Sentinel key for the unbudgeted arm of the acceptance-vs-budget curve.
+const NO_BUDGET_KEY: usize = usize::MAX;
+
 /// Measured per-stage costs keyed by (batch bucket, verify width).
 #[derive(Debug, Clone, Default)]
 pub struct CostTable {
-    /// (bucket, s = γ+1) → target forward time for the round.
+    /// (bucket, s = γ+1) → target forward time for the round
+    /// (**unbudgeted** rounds only — budget off-switch purity).
     verify: BTreeMap<(usize, usize), Ewma>,
+    /// (bucket, s, budget) → target forward time for budgeted rounds.
+    budget_verify: BTreeMap<(usize, usize, usize), Ewma>,
+    /// Online acceptance-vs-budget curve: budget key
+    /// ([`NO_BUDGET_KEY`] for unbudgeted rounds) → per-round
+    /// accepted/proposed ratio EWMA. The unbudgeted arm is the baseline
+    /// the budgeted arms' degradation ratios are measured against.
+    accept_by_budget: BTreeMap<usize, Ewma>,
     /// bucket → per-forward draft time.
     draft: BTreeMap<usize, Ewma>,
     /// Rejection cost per verified row (B·(γ+1) rows per round).
@@ -532,10 +611,28 @@ impl CostTable {
 
     pub fn observe(&mut self, obs: &RoundObservation) {
         let bucket = bucket_of(obs.batch);
-        self.verify
-            .entry((bucket, obs.gamma + 1))
-            .or_default()
-            .update(obs.t_verify);
+        match obs.budget {
+            // Budgeted verify forwards are a different cost surface;
+            // routing them into the plain table would corrupt the
+            // unbudgeted anchors the off-switch guarantees depend on.
+            Some(bud) => self
+                .budget_verify
+                .entry((bucket, obs.gamma + 1, bud))
+                .or_default()
+                .update(obs.t_verify),
+            None => self
+                .verify
+                .entry((bucket, obs.gamma + 1))
+                .or_default()
+                .update(obs.t_verify),
+        }
+        if obs.gamma > 0 && obs.proposed > 0 {
+            let key = obs.budget.unwrap_or(NO_BUDGET_KEY);
+            self.accept_by_budget
+                .entry(key)
+                .or_default()
+                .update((obs.accepted as f64 / obs.proposed as f64).clamp(0.0, 1.0));
+        }
         if obs.gamma > 0 && obs.t_draft > 0.0 {
             self.draft
                 .entry(bucket)
@@ -546,6 +643,44 @@ impl CostTable {
         if rows > 0.0 && obs.t_reject > 0.0 {
             self.reject_per_row.update(obs.t_reject / rows);
         }
+    }
+
+    /// Measured verify time of budgeted rounds at exactly
+    /// (bucket, s, budget), if any have been observed.
+    pub fn budget_verify_time(&self, bucket: usize, s: usize, budget: usize) -> Option<f64> {
+        self.budget_verify
+            .get(&(bucket, s, budget))
+            .and_then(|e| e.get())
+    }
+
+    /// Smoothed per-round acceptance ratio at a budget arm (`None` = the
+    /// unbudgeted baseline arm).
+    pub fn accept_rate(&self, budget: Option<usize>) -> Option<f64> {
+        self.accept_by_budget
+            .get(&budget.unwrap_or(NO_BUDGET_KEY))
+            .and_then(|e| e.get())
+    }
+
+    /// Measured acceptance degradation of a budget arm relative to the
+    /// unbudgeted baseline: `accept_rate(budget) / accept_rate(None)`,
+    /// clamped to [0, 1]. `None` until both arms have samples — callers
+    /// fall back to the model prior (`α·cov^sens`).
+    pub fn measured_budget_alpha_ratio(&self, budget: usize) -> Option<f64> {
+        let base = self.accept_rate(None)?;
+        let at = self.accept_rate(Some(budget))?;
+        (base > 0.0).then(|| (at / base).clamp(0.0, 1.0))
+    }
+
+    /// The measured acceptance-vs-budget curve for reporting:
+    /// `(budget, rate)` pairs, unbudgeted arm as `None`.
+    pub fn accept_curve(&self) -> Vec<(Option<usize>, f64)> {
+        self.accept_by_budget
+            .iter()
+            .filter_map(|(&k, e)| {
+                e.get()
+                    .map(|r| ((k != NO_BUDGET_KEY).then_some(k), r))
+            })
+            .collect()
     }
 
     pub fn verify_time(&self, bucket: usize, s: usize) -> Option<f64> {
@@ -607,6 +742,9 @@ impl CostTable {
 pub struct ControllerState {
     pub policy: String,
     pub gamma: usize,
+    /// Verify-expert budget currently applied by the controller (`None`
+    /// when the budget axis is off or the joint argmax picked unbudgeted).
+    pub budget: Option<usize>,
     pub alpha_hat: Option<f64>,
     pub sigma_hat: Option<f64>,
     pub intervals: u64,
@@ -618,6 +756,8 @@ pub struct ControllerState {
     pub tracked_sequences: usize,
     /// Measured target efficiency per batch bucket (§3.1, online).
     pub target_efficiency: Vec<(usize, f64)>,
+    /// Online acceptance-vs-budget curve (`None` = unbudgeted arm).
+    pub accept_by_budget: Vec<(Option<usize>, f64)>,
     /// Bounded (round, new γ) switch log.
     pub history: Vec<(u64, usize)>,
 }
@@ -631,6 +771,13 @@ impl ControllerState {
         Json::from_pairs(vec![
             ("policy", self.policy.as_str().into()),
             ("gamma", self.gamma.into()),
+            (
+                "verify_budget",
+                match self.budget {
+                    Some(b) => b.into(),
+                    None => Json::Null,
+                },
+            ),
             ("alpha_hat", opt(self.alpha_hat)),
             ("sigma_hat", opt(self.sigma_hat)),
             ("intervals", self.intervals.into()),
@@ -645,6 +792,26 @@ impl ControllerState {
                         .iter()
                         .map(|(b, te)| {
                             Json::from_pairs(vec![("bucket", (*b).into()), ("teff", (*te).into())])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "accept_by_budget",
+                Json::Arr(
+                    self.accept_by_budget
+                        .iter()
+                        .map(|(bud, rate)| {
+                            Json::from_pairs(vec![
+                                (
+                                    "budget",
+                                    match bud {
+                                        Some(b) => (*b).into(),
+                                        None => Json::Null,
+                                    },
+                                ),
+                                ("rate", (*rate).into()),
+                            ])
                         })
                         .collect(),
                 ),
@@ -681,6 +848,10 @@ pub struct SpecController {
     cfg: ControlConfig,
     policy: Box<dyn GammaPolicy>,
     gamma: usize,
+    /// Verify-expert budget the controller currently wants applied. Stays
+    /// `None` forever while `cfg.budget_grid` is empty (the controller
+    /// then never overrides a statically-configured backend budget).
+    budget: Option<usize>,
     bootstrapped: bool,
     alpha_hat: Option<f64>,
     sigma_hat: Option<f64>,
@@ -726,6 +897,7 @@ impl SpecController {
             cfg,
             policy,
             gamma: gamma0,
+            budget: None,
             bootstrapped: false,
             alpha_hat: None,
             sigma_hat: None,
@@ -817,10 +989,14 @@ impl SpecController {
             alpha: self.alpha_hat,
             sigma: self.sigma_hat,
             current_gamma: g0,
+            current_budget: self.budget,
             regime_shift: false,
             costs: &self.costs,
         };
-        self.policy.gamma_for_sequences(&est, &alphas, out);
+        let bud = self.policy.gamma_budget_for_sequences(&est, &alphas, out);
+        if self.owns_budget() {
+            self.budget = bud;
+        }
         self.alpha_scratch = alphas;
         debug_assert_eq!(out.len(), b, "policy must fill one γ per sequence");
         for g in out.iter_mut() {
@@ -876,6 +1052,22 @@ impl SpecController {
         self.gamma
     }
 
+    /// Verify-expert budget the controller currently wants the backend to
+    /// run (`None` = unbudgeted). Meaningful only when the controller
+    /// [owns the budget axis](SpecController::owns_budget).
+    pub fn verify_budget(&self) -> Option<usize> {
+        self.budget
+    }
+
+    /// Whether the controller owns the verify-budget axis (a non-empty
+    /// `budget_grid`). When it does, the engine pushes
+    /// [`SpecController::verify_budget`] into the backend before every
+    /// round; when it doesn't, any statically-configured backend budget
+    /// (`--verify-budget`) is left untouched.
+    pub fn owns_budget(&self) -> bool {
+        !self.cfg.budget_grid.is_empty()
+    }
+
     pub fn alpha_hat(&self) -> Option<f64> {
         self.alpha_hat
     }
@@ -891,6 +1083,16 @@ impl SpecController {
     /// Record one decode round; on interval boundaries, refresh the
     /// estimates and consult the policy.
     pub fn observe(&mut self, obs: RoundObservation) {
+        // The engine's round clock is the controller's only notion of
+        // time (interval boundaries, switch history, probe cadence); a
+        // backwards-running clock means the engine is feeding rounds out
+        // of order and every windowed estimate silently mixes epochs.
+        debug_assert!(
+            obs.round >= self.last_round,
+            "RoundObservation clock must be monotone: got round {} after {}",
+            obs.round,
+            self.last_round
+        );
         self.last_batch = obs.batch.max(1);
         self.last_round = obs.round;
         self.costs.observe(&obs);
@@ -945,6 +1147,7 @@ impl SpecController {
             alpha: self.alpha_hat,
             sigma: self.sigma_hat,
             current_gamma: self.gamma,
+            current_budget: self.budget,
             regime_shift,
             costs: &self.costs,
         };
@@ -953,6 +1156,9 @@ impl SpecController {
             DecisionKind::Probe => self.probes += 1,
             DecisionKind::Switch if decision.gamma != self.gamma => self.switches += 1,
             _ => {}
+        }
+        if self.owns_budget() {
+            self.budget = decision.budget;
         }
         if decision.gamma != self.gamma {
             self.gamma = decision.gamma;
@@ -1065,6 +1271,7 @@ impl SpecController {
             alpha: self.alpha_hat,
             sigma: self.sigma_hat,
             current_gamma: self.gamma,
+            current_budget: self.budget,
             regime_shift: false,
             costs: &self.costs,
         };
@@ -1080,6 +1287,7 @@ impl SpecController {
             alpha: self.alpha_hat,
             sigma: self.sigma_hat,
             current_gamma: self.gamma,
+            current_budget: self.budget,
             regime_shift: false,
             costs: &self.costs,
         };
@@ -1104,6 +1312,7 @@ impl SpecController {
         ControllerState {
             policy: self.policy.name().to_string(),
             gamma: self.gamma,
+            budget: self.budget,
             alpha_hat: self.alpha_hat,
             sigma_hat: self.sigma_hat,
             intervals: self.intervals,
@@ -1112,6 +1321,7 @@ impl SpecController {
             ragged_rounds: self.ragged_rounds,
             tracked_sequences: self.seq_windows.len(),
             target_efficiency: self.costs.target_efficiency_by_bucket(),
+            accept_by_budget: self.costs.accept_curve(),
             history: self.history.clone(),
         }
     }
@@ -1193,10 +1403,14 @@ mod tests {
         batch: usize,
         rounds: usize,
     ) {
+        // Resume the controller's own round clock so successive calls
+        // keep the observation stream monotone (the clock invariant the
+        // controller asserts on).
+        let start = ctl.last_round + 1;
         for r in 0..rounds {
             let (accepted, emitted) = sim_round(rng, alpha, gamma, batch);
             ctl.observe(RoundObservation {
-                round: r as u64,
+                round: start + r as u64,
                 batch,
                 gamma,
                 proposed: (batch * gamma) as u64,
@@ -1205,6 +1419,7 @@ mod tests {
                 t_draft: 0.001 * gamma as f64,
                 t_verify: 0.01,
                 t_reject: 1e-4,
+                budget: None,
             });
         }
     }
@@ -1239,6 +1454,7 @@ mod tests {
             t_draft: 0.004,
             t_verify,
             t_reject: 1e-4,
+            budget: None,
         };
         for _ in 0..5 {
             t.observe(&mk(0, 0.010)); // AR rounds: s = 1
@@ -1483,6 +1699,7 @@ mod tests {
                 t_draft: 0.001 * gamma as f64,
                 t_verify: 0.01,
                 t_reject: 1e-4,
+                budget: None,
             };
             a.observe(obs);
             b.observe(obs);
@@ -1594,5 +1811,130 @@ mod tests {
         assert!(j.contains("\"gamma\""));
         assert!(j.contains("\"alpha_hat\""));
         assert!(j.contains("\"target_efficiency\""));
+        assert!(j.contains("\"verify_budget\""));
+        assert!(j.contains("\"accept_by_budget\""));
+    }
+
+    #[test]
+    fn cost_table_budget_column_stays_separate() {
+        // Budgeted rounds must not pollute the unbudgeted verify anchors,
+        // and the acceptance curve must expose a measured degradation
+        // ratio once both arms have samples.
+        let mut t = CostTable::default();
+        let mk = |budget: Option<usize>, accepted: u64, t_verify: f64| RoundObservation {
+            round: 0,
+            batch: 16,
+            gamma: 3,
+            proposed: 48,
+            accepted,
+            emitted: accepted + 16,
+            t_draft: 0.004,
+            t_verify,
+            t_reject: 1e-4,
+            budget,
+        };
+        for _ in 0..5 {
+            t.observe(&mk(None, 40, 0.012));
+            t.observe(&mk(Some(16), 24, 0.008));
+        }
+        // Unbudgeted rounds land in the plain table only.
+        assert!(t.verify_time(16, 4).is_some());
+        assert!((t.verify_time(16, 4).unwrap() - 0.012).abs() < 1e-9);
+        // Budgeted rounds land in the budget column only.
+        assert!((t.budget_verify_time(16, 4, 16).unwrap() - 0.008).abs() < 1e-9);
+        assert!(t.budget_verify_time(16, 4, 32).is_none());
+        // Acceptance curve: both arms, ratio = (24/48)/(40/48) = 0.6.
+        let base = t.accept_rate(None).unwrap();
+        let capped = t.accept_rate(Some(16)).unwrap();
+        assert!((base - 40.0 / 48.0).abs() < 1e-9);
+        assert!((capped - 24.0 / 48.0).abs() < 1e-9);
+        let ratio = t.measured_budget_alpha_ratio(16).unwrap();
+        assert!((ratio - 0.6).abs() < 1e-9, "ratio={ratio}");
+        assert!(t.measured_budget_alpha_ratio(32).is_none());
+        let curve = t.accept_curve();
+        assert_eq!(curve.len(), 2);
+        assert_eq!(curve[0].0, Some(16));
+        assert_eq!(curve[1].0, None);
+    }
+
+    #[test]
+    fn empty_budget_grid_keeps_controller_budget_off() {
+        // The budget off-switch at controller level: without a grid the
+        // controller never owns the axis, reports None forever, and its
+        // sanitized config preserves the empty grid.
+        let mut ctl = SpecController::new(ControlConfig::model_guided(roofline_spec()));
+        assert!(!ctl.owns_budget());
+        assert_eq!(ctl.verify_budget(), None);
+        let g = ctl.gamma_for_round(8);
+        assert!(g >= 1);
+        let mut rng = Rng::seeded(11);
+        observe_rounds(&mut ctl, &mut rng, 0.9, g, 8, 200);
+        assert_eq!(ctl.verify_budget(), None, "no grid ⇒ budget never set");
+        assert_eq!(ctl.state().budget, None);
+    }
+
+    #[test]
+    fn budget_grid_makes_controller_own_and_pick_a_budget() {
+        // With a grid and a measured acceptance curve showing *no*
+        // degradation, a capped verify is strictly cheaper at a
+        // memory-bound batch, so the joint consult must select a budget.
+        let cfg = ControlConfig {
+            budget_grid: vec![16, 32],
+            budget_sensitivity: 1.0,
+            ..ControlConfig::model_guided(roofline_spec())
+        };
+        cfg.validate().unwrap();
+        let mut ctl = SpecController::new(cfg);
+        assert!(ctl.owns_budget());
+        let g = ctl.gamma_for_round(8);
+        assert!(g >= 1, "SD regime expected at B=8");
+        // Feed rounds alternating budget arms with identical acceptance:
+        // the measured ratio pins the degradation prior to 1.0.
+        let mut round = 1u64;
+        for _ in 0..200 {
+            for bud in [None, Some(16), Some(32)] {
+                ctl.observe(RoundObservation {
+                    round,
+                    batch: 8,
+                    gamma: g,
+                    proposed: (8 * g) as u64,
+                    accepted: (7 * g) as u64,
+                    emitted: (7 * g + 8) as u64,
+                    t_draft: 0.001 * g as f64,
+                    t_verify: if bud.is_some() { 0.008 } else { 0.012 },
+                    t_reject: 1e-4,
+                    budget: bud,
+                });
+                round += 1;
+            }
+        }
+        let picked = ctl.verify_budget();
+        assert!(
+            picked.is_some(),
+            "measured-equal acceptance + cheaper capped verify must pick a budget"
+        );
+        assert!([16, 32].contains(&picked.unwrap()), "{picked:?}");
+        assert_eq!(ctl.state().budget, picked);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "monotone")]
+    fn observe_rejects_backwards_round_clock() {
+        let mut ctl = SpecController::new(ControlConfig::static_gamma(2));
+        let obs = |round: u64| RoundObservation {
+            round,
+            batch: 4,
+            gamma: 2,
+            proposed: 8,
+            accepted: 6,
+            emitted: 10,
+            t_draft: 1e-3,
+            t_verify: 1e-2,
+            t_reject: 1e-4,
+            budget: None,
+        };
+        ctl.observe(obs(5));
+        ctl.observe(obs(3)); // clock ran backwards: must trip the invariant
     }
 }

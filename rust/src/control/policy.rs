@@ -22,6 +22,9 @@ pub struct Estimates<'a> {
     pub sigma: Option<f64>,
     /// γ currently in effect.
     pub current_gamma: usize,
+    /// Verify-expert budget currently in effect (`None` = unbudgeted —
+    /// always `None` when the controller's budget axis is off).
+    pub current_budget: Option<usize>,
     /// The batch bucket just changed (load shift): the decision should be
     /// taken fresh, without hysteresis/dwell damping — those guards exist
     /// to absorb estimator noise, not real regime changes.
@@ -46,6 +49,10 @@ pub enum DecisionKind {
 pub struct GammaDecision {
     pub gamma: usize,
     pub kind: DecisionKind,
+    /// Verify-expert budget to run alongside `gamma` (`None` =
+    /// unbudgeted). Policies without a budget grid echo the estimate's
+    /// current budget back, so the controller's choice is a fixed point.
+    pub budget: Option<usize>,
 }
 
 /// A γ-selection policy consulted once per control interval.
@@ -96,7 +103,8 @@ pub trait GammaPolicy: Send {
     /// let costs = CostTable::default();
     /// let est = Estimates {
     ///     batch: 8, alpha: Some(0.8), sigma: None,
-    ///     current_gamma: 3, regime_shift: false, costs: &costs,
+    ///     current_gamma: 3, current_budget: None,
+    ///     regime_shift: false, costs: &costs,
     /// };
     /// let mut out = Vec::new();
     /// // An easy (α̂=0.98) and a hard (α̂=0.3) sequence in the same round:
@@ -111,6 +119,23 @@ pub trait GammaPolicy: Send {
     fn gamma_for_sequences(&self, est: &Estimates, seq_alphas: &[f64], out: &mut Vec<usize>) {
         out.extend(std::iter::repeat(est.current_gamma).take(seq_alphas.len()));
     }
+
+    /// Joint (γ⃗, budget) refinement for ragged rounds: fill `out` exactly
+    /// like [`GammaPolicy::gamma_for_sequences`] and return the
+    /// verify-expert budget the round should run under. The default —
+    /// and the exact behavior of every policy whose budget grid is empty
+    /// — delegates to `gamma_for_sequences` and echoes the current
+    /// budget, so the controller's budget is a fixed point (bit-identical
+    /// off-switch).
+    fn gamma_budget_for_sequences(
+        &self,
+        est: &Estimates,
+        seq_alphas: &[f64],
+        out: &mut Vec<usize>,
+    ) -> Option<usize> {
+        self.gamma_for_sequences(est, seq_alphas, out);
+        est.current_budget
+    }
 }
 
 /// Fixed γ — the baseline against which adaptation is measured.
@@ -123,10 +148,11 @@ impl GammaPolicy for StaticPolicy {
         "static"
     }
 
-    fn decide(&mut self, _est: &Estimates) -> GammaDecision {
+    fn decide(&mut self, est: &Estimates) -> GammaDecision {
         GammaDecision {
             gamma: self.gamma,
             kind: DecisionKind::Hold,
+            budget: est.current_budget,
         }
     }
 }
@@ -140,6 +166,13 @@ pub struct ModelGuidedPolicy {
     min_dwell: usize,
     probe_every: usize,
     alpha_prior: f64,
+    /// Candidate verify-expert budgets for the joint (γ, budget) argmax.
+    /// Empty ⇒ the budget axis is off and every decision is bit-identical
+    /// to the unbudgeted policy.
+    budget_grid: Vec<usize>,
+    /// Acceptance-degradation prior exponent (`α_eff = α·cov^sens`) used
+    /// until the measured acceptance-vs-budget curve has both arms.
+    budget_sensitivity: f64,
     intervals_since_switch: usize,
     intervals_at_ar: usize,
     probing: bool,
@@ -155,7 +188,8 @@ impl ModelGuidedPolicy {
             min_dwell: cfg.min_dwell_intervals,
             probe_every: cfg.probe_every_intervals,
             alpha_prior: cfg.alpha_prior,
-            // Large initial dwell so the bootstrap decision is unhindered.
+            budget_grid: cfg.budget_grid.clone(),
+            budget_sensitivity: cfg.budget_sensitivity,
             intervals_since_switch: usize::MAX / 2,
             intervals_at_ar: 0,
             probing: false,
@@ -253,6 +287,162 @@ impl ModelGuidedPolicy {
             .map(|g| self.score(batch, g, alpha, costs))
             .collect()
     }
+
+    /// Multiplicative acceptance-degradation factor for pricing a budget
+    /// candidate at a verify width of `rows` total tokens. The **measured**
+    /// acceptance-vs-budget ratio wins once the cost table has both arms
+    /// (the online curve); before that the coverage prior
+    /// `cov^budget_sensitivity` from the Eq. 8 activation curve applies.
+    /// `None` budgets — and dense targets, where a budget caps nothing —
+    /// are exactly transparent (factor 1).
+    fn budget_alpha_factor(&self, rows: usize, budget: Option<usize>, costs: &CostTable) -> f64 {
+        let bud = match budget {
+            Some(b) => b,
+            None => return 1.0,
+        };
+        if let Some(ratio) = costs.measured_budget_alpha_ratio(bud) {
+            return ratio;
+        }
+        match self.cost.moe_dims() {
+            Some((e, k)) => {
+                let cov = theory::budget_coverage(e, k, rows as u64, Some(bud));
+                if cov >= 1.0 {
+                    1.0
+                } else {
+                    cov.powf(self.budget_sensitivity)
+                }
+            }
+            None => 1.0,
+        }
+    }
+
+    /// [`ModelGuidedPolicy::score`] under a verify-expert budget: the
+    /// verify term is priced on the capped cost surface and α is degraded
+    /// by the acceptance-vs-budget curve. `budget = None` delegates to
+    /// the unbudgeted score verbatim (bit-identical off-switch).
+    pub fn score_budgeted(
+        &self,
+        batch: usize,
+        gamma: usize,
+        alpha: f64,
+        costs: &CostTable,
+        budget: Option<usize>,
+    ) -> f64 {
+        if budget.is_none() {
+            return self.score(batch, gamma, alpha, costs);
+        }
+        let rows = batch.max(1) * (gamma + 1);
+        let factor = self.budget_alpha_factor(rows, budget, costs);
+        let a_eff = (alpha * factor).clamp(0.0, 1.0);
+        let round_len = theory::expected_round_length(a_eff, gamma);
+        round_len
+            / self
+                .round_cost_budgeted(batch, gamma, costs, budget)
+                .max(1e-300)
+    }
+
+    /// [`ModelGuidedPolicy::round_cost`] with the verify term on the
+    /// budgeted surface. A measured budgeted entry at exactly this
+    /// (bucket, s, budget) wins outright; otherwise the budgeted model
+    /// price is re-anchored by the *unbudgeted* measured ratio (the only
+    /// anchor available before budgeted rounds have run).
+    fn round_cost_budgeted(
+        &self,
+        batch: usize,
+        gamma: usize,
+        costs: &CostTable,
+        budget: Option<usize>,
+    ) -> f64 {
+        let bud = match budget {
+            Some(b) => b,
+            None => return self.round_cost(batch, gamma, costs),
+        };
+        let b = batch.max(1);
+        let bucket = bucket_of(b);
+        let model_verify = self
+            .cost
+            .t_target_tokens_budgeted(b, b * (gamma + 1), budget);
+        let verify = match costs.budget_verify_time(bucket, gamma + 1, bud) {
+            Some(measured) => measured,
+            None => match costs.verify_nearest(bucket, gamma + 1) {
+                Some((s_obs, measured)) => {
+                    let model_at_obs = self.cost.t_target(b, s_obs);
+                    if model_at_obs > 0.0 {
+                        model_verify * (measured / model_at_obs)
+                    } else {
+                        model_verify
+                    }
+                }
+                None => model_verify,
+            },
+        };
+        let draft1 = match costs.draft_per_forward(bucket) {
+            Some(measured) => measured,
+            None => self.cost.t_draft(b),
+        };
+        let reject = match costs.reject_per_row() {
+            Some(per_row) => per_row * (b * (gamma + 1)) as f64,
+            None => self.cost.t_reject(b, gamma),
+        };
+        gamma as f64 * draft1 + verify + reject
+    }
+
+    /// [`ModelGuidedPolicy::ragged_round_cost`] with the packed verify on
+    /// the budgeted surface (same anchoring rules as
+    /// [`ModelGuidedPolicy::round_cost_budgeted`]).
+    fn ragged_round_cost_budgeted(
+        &self,
+        batch: usize,
+        groups: &[(usize, usize)],
+        costs: &CostTable,
+        budget: Option<usize>,
+    ) -> f64 {
+        let bud = match budget {
+            Some(b) => b,
+            None => return self.ragged_round_cost(batch, groups, costs),
+        };
+        let b = batch.max(1);
+        let bucket = bucket_of(b);
+        let tokens: usize = groups.iter().map(|&(c, g)| c * (g + 1)).sum();
+        let model_verify = self.cost.t_target_tokens_budgeted(b, tokens, budget);
+        let s_mean = (tokens + b / 2) / b;
+        let verify = match costs.budget_verify_time(bucket, s_mean, bud) {
+            Some(measured) => measured,
+            None => match costs.verify_nearest(bucket, s_mean) {
+                Some((s_obs, measured)) => {
+                    let model_at_obs = self.cost.t_target(b, s_obs);
+                    if model_at_obs > 0.0 {
+                        model_verify * (measured / model_at_obs)
+                    } else {
+                        model_verify
+                    }
+                }
+                None => model_verify,
+            },
+        };
+        let draft_ratio = match (costs.draft_per_forward(bucket), self.cost.t_draft(b)) {
+            (Some(measured), model) if model > 0.0 => measured / model,
+            _ => 1.0,
+        };
+        let gamma_top = groups.iter().map(|&(_, g)| g).max().unwrap_or(0);
+        let mut draft = 0.0;
+        for step in 0..gamma_top {
+            let bg: usize = groups
+                .iter()
+                .filter(|&&(_, g)| g > step)
+                .map(|&(c, _)| c)
+                .sum();
+            draft += self.cost.t_draft(bg.max(1)) * draft_ratio;
+        }
+        let reject = match costs.reject_per_row() {
+            Some(per_row) => per_row * tokens as f64,
+            None => {
+                let mean_gamma = ((tokens + b / 2) / b).saturating_sub(1);
+                self.cost.t_reject(b, mean_gamma)
+            }
+        };
+        draft + verify + reject
+    }
 }
 
 impl GammaPolicy for ModelGuidedPolicy {
@@ -276,8 +466,37 @@ impl GammaPolicy for ModelGuidedPolicy {
     fn decide(&mut self, est: &Estimates) -> GammaDecision {
         let alpha = est.alpha.unwrap_or(self.alpha_prior);
         let scores = self.scores(est.batch, alpha, est.costs);
-        let best = argmax(&scores);
+        // Best speculative candidate over the joint (γ ≥ 1, budget) grid.
+        // The unbudgeted arm seeds the running best and budgeted arms
+        // must beat it *strictly*, so an empty grid reproduces the
+        // unbudgeted argmax bit-for-bit.
+        let mut spec_g = 1 + argmax(&scores[1..]);
+        let mut spec_budget: Option<usize> = None;
+        let mut spec_score = scores[spec_g];
+        for &bud in &self.budget_grid {
+            for g in 1..=self.gamma_max {
+                let s = self.score_budgeted(est.batch, g, alpha, est.costs, Some(bud));
+                if s > spec_score {
+                    spec_score = s;
+                    spec_g = g;
+                    spec_budget = Some(bud);
+                }
+            }
+        }
+        // γ = 0 never carries a budget: an AR round verifies one token
+        // per sequence and the cap would only distort the baseline.
+        let (best, best_budget, best_score) = if spec_score > scores[0] {
+            (spec_g, spec_budget, spec_score)
+        } else {
+            (0, None, scores[0])
+        };
         let cur = est.current_gamma.min(self.gamma_max);
+        let cur_budget = if cur == 0 { None } else { est.current_budget };
+        let cur_score = if cur_budget.is_none() {
+            scores[cur]
+        } else {
+            self.score_budgeted(est.batch, cur, alpha, est.costs, cur_budget)
+        };
 
         // A probe interval just ended, or the load regime shifted:
         // re-decide unguarded so a failed probe drops straight back to AR
@@ -288,26 +507,31 @@ impl GammaPolicy for ModelGuidedPolicy {
             if best > 0 {
                 self.intervals_at_ar = 0;
             }
-            let kind = if best == cur {
+            let kind = if best == cur && best_budget == cur_budget {
                 DecisionKind::Hold
             } else {
                 DecisionKind::Switch
             };
-            return GammaDecision { gamma: best, kind };
+            return GammaDecision {
+                gamma: best,
+                kind,
+                budget: best_budget,
+            };
         }
 
         if cur == 0 {
             self.intervals_at_ar += 1;
             // The AR fallback produces no acceptance signal, so α̂ goes
             // stale; periodically spend one interval on the best
-            // speculative γ to refresh it (and to notice regime shifts).
+            // speculative (γ, budget) to refresh it (and to notice
+            // regime shifts).
             if self.probe_every > 0 && best == 0 && self.intervals_at_ar >= self.probe_every {
                 self.intervals_at_ar = 0;
                 self.probing = true;
-                let spec = 1 + argmax(&scores[1..]);
                 return GammaDecision {
-                    gamma: spec,
+                    gamma: spec_g,
                     kind: DecisionKind::Probe,
+                    budget: spec_budget,
                 };
             }
         } else {
@@ -315,10 +539,11 @@ impl GammaPolicy for ModelGuidedPolicy {
         }
 
         self.intervals_since_switch = self.intervals_since_switch.saturating_add(1);
-        if best == cur {
+        if best == cur && best_budget == cur_budget {
             return GammaDecision {
                 gamma: cur,
                 kind: DecisionKind::Hold,
+                budget: cur_budget,
             };
         }
         // Dwell: don't even consider switching right after a switch.
@@ -326,19 +551,22 @@ impl GammaPolicy for ModelGuidedPolicy {
             return GammaDecision {
                 gamma: cur,
                 kind: DecisionKind::Hold,
+                budget: cur_budget,
             };
         }
         // Hysteresis: the candidate must beat the incumbent by a margin.
-        if scores[best] < scores[cur] * (1.0 + self.hysteresis) {
+        if best_score < cur_score * (1.0 + self.hysteresis) {
             return GammaDecision {
                 gamma: cur,
                 kind: DecisionKind::Hold,
+                budget: cur_budget,
             };
         }
         self.intervals_since_switch = 0;
         GammaDecision {
             gamma: best,
             kind: DecisionKind::Switch,
+            budget: best_budget,
         }
     }
 
@@ -355,15 +583,47 @@ impl GammaPolicy for ModelGuidedPolicy {
     /// over-drafts easy sequences because it ignores that the round time
     /// is shared.
     fn gamma_for_sequences(&self, est: &Estimates, seq_alphas: &[f64], out: &mut Vec<usize>) {
+        self.water_fill_joint(est, seq_alphas, out, &[]);
+    }
+
+    /// Joint (γ⃗, budget) ragged refinement: the same shared-round-time
+    /// water-fill, crossed with the budget grid. The unbudgeted arm runs
+    /// first and budgeted arms must win strictly, so an empty grid is
+    /// bit-identical to [`ModelGuidedPolicy::gamma_for_sequences`].
+    fn gamma_budget_for_sequences(
+        &self,
+        est: &Estimates,
+        seq_alphas: &[f64],
+        out: &mut Vec<usize>,
+    ) -> Option<usize> {
+        self.water_fill_joint(est, seq_alphas, out, &self.budget_grid)
+    }
+}
+
+impl ModelGuidedPolicy {
+    /// Shared implementation of the ragged water-fill, optionally crossed
+    /// with a verify-expert budget grid. Candidate assignments come from
+    /// the **raw** α̂ᵢ for every budget arm — a budget rescales all α by
+    /// the same coverage factor, which preserves the water-level order,
+    /// so one candidate set serves the whole grid. Returns the winning
+    /// budget (`est.current_budget` on the uniform early-outs).
+    fn water_fill_joint(
+        &self,
+        est: &Estimates,
+        seq_alphas: &[f64],
+        out: &mut Vec<usize>,
+        grid: &[usize],
+    ) -> Option<usize> {
         let n = seq_alphas.len();
         if n == 0 {
-            return;
+            return est.current_budget;
         }
         // All-equal α̂ is the uniform special case: reproduce the scalar
-        // path's held γ exactly (bit-for-bit — no model evaluation).
+        // path's held (γ, budget) exactly (bit-for-bit — no model
+        // evaluation; the scalar consult already priced uniform rounds).
         if seq_alphas.windows(2).all(|w| w[0] == w[1]) {
             out.extend(std::iter::repeat(est.current_gamma).take(n));
-            return;
+            return est.current_budget;
         }
         // Distinct-α̂ groups (the controller quantizes to a 0.01 grid, so
         // there are at most ~100; exact match is intentional).
@@ -385,26 +645,43 @@ impl GammaPolicy for ModelGuidedPolicy {
         // `SpecController::gammas_for_round`).
         let floor = if est.current_gamma >= 1 { 1 } else { 0 };
         let group_alphas: Vec<f64> = groups.iter().map(|&(a, _)| a).collect();
+        let cands = crate::perfmodel::water_fill_assignments(&group_alphas, self.gamma_max);
         let mut assignment: Vec<(usize, usize)> = Vec::with_capacity(groups.len());
         let mut best: Vec<usize> = Vec::new();
+        let mut best_budget: Option<usize> = None;
         let mut best_score = f64::MIN;
-        for mut cand in crate::perfmodel::water_fill_assignments(&group_alphas, self.gamma_max) {
-            for g in cand.iter_mut() {
-                *g = (*g).max(floor);
-            }
-            assignment.clear();
-            let mut toks = 0.0;
-            for ((a, c), &g) in groups.iter().zip(cand.iter()) {
-                assignment.push((*c, g));
-                toks += *c as f64 * theory::expected_round_length(*a, g);
-            }
-            let s = toks
-                / self
-                    .ragged_round_cost(est.batch, &assignment, est.costs)
-                    .max(1e-300);
-            if s > best_score {
-                best_score = s;
-                best = cand;
+        let mut budgets: Vec<Option<usize>> = Vec::with_capacity(grid.len() + 1);
+        budgets.push(None);
+        budgets.extend(grid.iter().map(|&b| Some(b)));
+        for &bud in &budgets {
+            for cand0 in &cands {
+                let mut cand = cand0.clone();
+                for g in cand.iter_mut() {
+                    *g = (*g).max(floor);
+                }
+                assignment.clear();
+                let mut tokens = 0usize;
+                for ((_, c), &g) in groups.iter().zip(cand.iter()) {
+                    assignment.push((*c, g));
+                    tokens += *c * (g + 1);
+                }
+                let factor = self.budget_alpha_factor(tokens, bud, est.costs);
+                let mut toks = 0.0;
+                for ((a, c), &g) in groups.iter().zip(cand.iter()) {
+                    // factor ≥ 1 short-circuits to the raw α so the
+                    // unbudgeted arm's arithmetic is untouched.
+                    let a_eff = if factor >= 1.0 { *a } else { (*a * factor).min(1.0) };
+                    toks += *c as f64 * theory::expected_round_length(a_eff, g);
+                }
+                let s = toks
+                    / self
+                        .ragged_round_cost_budgeted(est.batch, &assignment, est.costs, bud)
+                        .max(1e-300);
+                if s > best_score {
+                    best_score = s;
+                    best = cand;
+                    best_budget = bud;
+                }
             }
         }
         // Expand the winning per-group depths back to per-sequence order.
@@ -412,6 +689,7 @@ impl GammaPolicy for ModelGuidedPolicy {
             let gi = groups.iter().position(|&(ga, _)| ga == a).unwrap();
             out.push(best[gi]);
         }
+        best_budget
     }
 }
 
@@ -466,6 +744,7 @@ mod tests {
             alpha: Some(alpha),
             sigma: None,
             current_gamma: cur,
+            current_budget: None,
             regime_shift: false,
             costs,
         }
@@ -604,6 +883,7 @@ mod tests {
             alpha: Some(0.7),
             sigma: None,
             current_gamma: cur,
+            current_budget: None,
             regime_shift: false,
             costs: &costs,
         };
@@ -633,6 +913,7 @@ mod tests {
             alpha: Some(0.8),
             sigma: None,
             current_gamma: 5,
+            current_budget: None,
             regime_shift: false,
             costs: &costs,
         };
@@ -669,6 +950,7 @@ mod tests {
             alpha: Some(0.775),
             sigma: None,
             current_gamma: 3,
+            current_budget: None,
             regime_shift: false,
             costs: &costs,
         };
@@ -769,6 +1051,7 @@ mod tests {
             t_draft: 0.0,
             t_verify: 10.0 * model_verify,
             t_reject: 0.0,
+            budget: None,
         });
         let grounded = p.score(16, 3, 0.9, &costs);
         assert!(
@@ -787,5 +1070,195 @@ mod tests {
                 assert!(s.is_finite() && s > 0.0, "score(B={b}, γ={g}) = {s}");
             }
         }
+    }
+
+    fn policy_with_grid(
+        cost: CostModelSpec,
+        grid: Vec<usize>,
+        sensitivity: f64,
+    ) -> ModelGuidedPolicy {
+        let cfg = ControlConfig {
+            hysteresis: 0.0,
+            min_dwell_intervals: 0,
+            probe_every_intervals: 0,
+            budget_grid: grid,
+            budget_sensitivity: sensitivity,
+            ..ControlConfig::model_guided(cost.clone())
+        };
+        ModelGuidedPolicy::new(cost, &cfg)
+    }
+
+    #[test]
+    fn score_budgeted_none_is_bit_identical() {
+        // The scalar off-switch at the policy layer: budget `None` — and
+        // any budget that caps nothing (≥ E) with no measured curve —
+        // scores exactly the unbudgeted Eq. 4 value.
+        let p = policy_with_grid(roofline_spec(), vec![16, 64], 1.0);
+        let costs = CostTable::default();
+        for b in [1usize, 8, 48] {
+            for g in 0..=8usize {
+                let plain = p.score(b, g, 0.85, &costs);
+                assert_eq!(p.score_budgeted(b, g, 0.85, &costs, None), plain);
+                assert_eq!(p.score_budgeted(b, g, 0.85, &costs, Some(64)), plain);
+            }
+        }
+    }
+
+    #[test]
+    fn joint_decide_with_transparent_budget_keeps_unbudgeted_arm() {
+        // A grid whose only entry is ≥ E scores every candidate exactly
+        // equal to the unbudgeted arm; the strict-improvement rule must
+        // then keep budget = None and reproduce the plain γ decision.
+        let mut plain = policy(roofline_spec(), 0.0, 0);
+        let mut gridded = policy_with_grid(roofline_spec(), vec![64], 1.0);
+        let costs = CostTable::default();
+        for b in [4usize, 8, 48, 4096] {
+            let d0 = plain.decide(&est(b, 0.85, 3, &costs));
+            let d1 = gridded.decide(&est(b, 0.85, 3, &costs));
+            assert_eq!(d0.gamma, d1.gamma, "B={b}");
+            assert_eq!(d1.budget, None, "ties must stay unbudgeted (B={b})");
+        }
+    }
+
+    #[test]
+    fn joint_decide_picks_budget_when_measured_curve_is_flat() {
+        // Feed the cost table a measured acceptance curve with *no*
+        // degradation and a strictly cheaper budgeted verify: the joint
+        // argmax must take the budget (cheaper verify, same α).
+        let mut p = policy_with_grid(roofline_spec(), vec![16], 1.0);
+        let mut costs = CostTable::default();
+        let model_verify = p.cost.t_target(8, 4);
+        for r in 0..10u64 {
+            for bud in [None, Some(16)] {
+                costs.observe(&super::super::RoundObservation {
+                    round: r,
+                    batch: 8,
+                    gamma: 3,
+                    proposed: 24,
+                    accepted: 20,
+                    emitted: 28,
+                    t_draft: 0.0,
+                    t_verify: if bud.is_some() {
+                        0.5 * model_verify
+                    } else {
+                        model_verify
+                    },
+                    t_reject: 0.0,
+                    budget: bud,
+                });
+            }
+        }
+        assert_eq!(costs.measured_budget_alpha_ratio(16), Some(1.0));
+        let d = p.decide(&est(8, 0.85, 3, &costs));
+        assert!(d.gamma >= 1, "SD regime expected at B=8");
+        assert_eq!(d.budget, Some(16), "flat curve + cheap verify must cap");
+    }
+
+    #[test]
+    fn joint_decide_rejects_budget_when_degradation_is_harsh() {
+        // A measured curve showing severe acceptance collapse at the
+        // capped arm must keep the policy unbudgeted even though the
+        // capped verify is cheaper.
+        let mut p = policy_with_grid(roofline_spec(), vec![8], 1.0);
+        let mut costs = CostTable::default();
+        for r in 0..10u64 {
+            for (bud, accepted) in [(None, 22u64), (Some(8), 2u64)] {
+                costs.observe(&super::super::RoundObservation {
+                    round: r,
+                    batch: 8,
+                    gamma: 3,
+                    proposed: 24,
+                    accepted,
+                    emitted: accepted + 8,
+                    t_draft: 0.0,
+                    t_verify: 0.0,
+                    t_reject: 0.0,
+                    budget: bud,
+                });
+            }
+        }
+        let ratio = costs.measured_budget_alpha_ratio(8).unwrap();
+        assert!(ratio < 0.15, "ratio={ratio}");
+        let d = p.decide(&est(8, 0.9, 3, &costs));
+        assert_eq!(d.budget, None, "collapsed acceptance must stay unbudgeted");
+    }
+
+    #[test]
+    fn gamma_budget_for_sequences_empty_grid_degenerates_exactly() {
+        // Satellite: the joint water-fill with the budget axis disabled
+        // is the PR-4 ragged water-fill, bit-for-bit — same depths, and
+        // the returned budget echoes the current one.
+        let p = policy(roofline_spec(), 0.05, 0);
+        let transparent = policy_with_grid(roofline_spec(), vec![64], 1.0);
+        let costs = CostTable::default();
+        let est = Estimates {
+            batch: 16,
+            alpha: Some(0.7),
+            sigma: None,
+            current_gamma: 3,
+            current_budget: None,
+            regime_shift: false,
+            costs: &costs,
+        };
+        let alphas: Vec<f64> = (0..16).map(|i| if i % 2 == 0 { 0.9 } else { 0.5 }).collect();
+        let mut plain = Vec::new();
+        p.gamma_for_sequences(&est, &alphas, &mut plain);
+        let mut joint = Vec::new();
+        let bud = p.gamma_budget_for_sequences(&est, &alphas, &mut joint);
+        assert_eq!(plain, joint, "empty grid must degenerate exactly");
+        assert_eq!(bud, None);
+        // A transparent (≥ E) grid ties every candidate: strict
+        // improvement keeps the unbudgeted arm and the same depths.
+        let mut tied = Vec::new();
+        let bud_t = transparent.gamma_budget_for_sequences(&est, &alphas, &mut tied);
+        assert_eq!(plain, tied);
+        assert_eq!(bud_t, None);
+    }
+
+    #[test]
+    fn gamma_budget_for_sequences_joint_never_loses() {
+        // The budget-blind water-fill assignment is in the joint
+        // candidate set, so the joint winner's goodput can never be
+        // below the decoupled (assignment-then-budget) score.
+        let p = policy_with_grid(roofline_spec(), vec![8, 16, 32, 48], 0.35);
+        let costs = CostTable::default();
+        let est = Estimates {
+            batch: 16,
+            alpha: Some(0.7),
+            sigma: None,
+            current_gamma: 3,
+            current_budget: None,
+            regime_shift: false,
+            costs: &costs,
+        };
+        let alphas: Vec<f64> = (0..16).map(|i| if i % 2 == 0 { 0.9 } else { 0.5 }).collect();
+        let mut blind = Vec::new();
+        p.gamma_for_sequences(&est, &alphas, &mut blind);
+        let mut joint = Vec::new();
+        let jbud = p.gamma_budget_for_sequences(&est, &alphas, &mut joint);
+        let goodput = |gammas: &[usize], bud: Option<usize>| -> f64 {
+            let groups: Vec<(usize, usize)> = gammas.iter().map(|&g| (1, g)).collect();
+            let tokens: usize = gammas.iter().map(|&g| g + 1).sum();
+            let factor = p.budget_alpha_factor(tokens, bud, &costs);
+            let toks: f64 = alphas
+                .iter()
+                .zip(gammas)
+                .map(|(&a, &g)| {
+                    let a_eff = if factor >= 1.0 { a } else { (a * factor).min(1.0) };
+                    theory::expected_round_length(a_eff, g)
+                })
+                .sum();
+            toks / p.ragged_round_cost_budgeted(16, &groups, &costs, bud)
+        };
+        let joint_score = goodput(&joint, jbud);
+        // Decoupled: keep the blind assignment, then pick its best budget.
+        let mut decoupled = goodput(&blind, None);
+        for &b in &[8usize, 16, 32, 48] {
+            decoupled = decoupled.max(goodput(&blind, Some(b)));
+        }
+        assert!(
+            joint_score >= decoupled - 1e-12,
+            "joint {joint_score} < decoupled {decoupled}"
+        );
     }
 }

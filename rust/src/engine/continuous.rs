@@ -467,7 +467,15 @@ impl<B: SdBackend> Engine<B> {
         }
         self.scratch.gammas.clear();
         match self.controller.as_mut() {
-            Some(ctl) => ctl.gammas_for_round(&self.scratch.seq_ids, &mut self.scratch.gammas),
+            Some(ctl) => {
+                ctl.gammas_for_round(&self.scratch.seq_ids, &mut self.scratch.gammas);
+                // The controller owns the verify-expert budget when its
+                // grid is configured: push the joint (γ⃗, budget) decision
+                // into the backend before this round's ops are priced.
+                if ctl.owns_budget() {
+                    self.backend.set_verify_budget(ctl.verify_budget());
+                }
+            }
             None if self.config.gamma_overrides.is_empty() => self
                 .scratch
                 .gammas
@@ -854,6 +862,7 @@ impl<B: SdBackend> Engine<B> {
                 t_draft: t_draft_flush,
                 t_verify: verify.cost,
                 t_reject: rcost,
+                budget: self.backend.verify_budget(),
             });
         }
 

@@ -250,6 +250,12 @@ impl<B: SdBackend> Engine<B> {
         self.controller.as_ref().map(|c| c.state())
     }
 
+    /// The verify-expert budget currently in effect on the backend
+    /// (`None` when unbudgeted — the paper's full-gate path).
+    pub fn verify_budget(&self) -> Option<usize> {
+        self.backend.verify_budget()
+    }
+
     /// Whether any work remains.
     pub fn is_idle(&self) -> bool {
         self.running.is_empty() && self.queue.is_empty() && self.pipeline.prefilling.is_empty()
@@ -316,6 +322,17 @@ impl<B: SdBackend> Engine<B> {
                             .unwrap_or(self.config.gamma),
                     );
                 }
+            }
+        }
+
+        // The controller owns the verify-expert budget when its grid is
+        // configured: push the joint (γ⃗, budget) decision into the
+        // backend before this round's forwards. Without a grid the
+        // backend's statically-configured budget (`--verify-budget`) is
+        // left untouched.
+        if let Some(ctl) = self.controller.as_ref() {
+            if ctl.owns_budget() {
+                self.backend.set_verify_budget(ctl.verify_budget());
             }
         }
 
@@ -533,6 +550,7 @@ impl<B: SdBackend> Engine<B> {
                 t_draft: round_draft_cost,
                 t_verify: verify.cost,
                 t_reject: rcost,
+                budget: self.backend.verify_budget(),
             });
         }
 

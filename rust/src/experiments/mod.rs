@@ -13,6 +13,7 @@
 
 pub mod ablations;
 pub mod adaptive;
+pub mod budget;
 pub mod continuous;
 pub mod fig1;
 pub mod fig2;

@@ -155,6 +155,7 @@ pub fn oracle_gammas(k: usize, batch: usize, alpha_hi: f64, alpha_lo: f64) -> (u
         alpha: Some(0.5 * (alpha_hi + alpha_lo)),
         sigma: None,
         current_gamma: 0,
+        current_budget: None,
         regime_shift: false,
         costs: &costs,
     };

@@ -32,6 +32,7 @@ fn main() {
         "mix-admission",
         "smoke",
         "continuous",
+        "adaptive-budget",
     ]);
     if args.flag("verbose") {
         logging::set_level(logging::Level::Debug);
@@ -62,10 +63,12 @@ fn print_help() {
          serve     --mode synthetic|hlo --port N --gamma N [--adaptive] [--ragged]\n\
                    [--tenants SPEC] [--mix-admission] [--config file.json]\n\
                    [--continuous] [--prefill-chunk N] [--record-trace PATH]\n\
+                   [--verify-budget N] [--adaptive-budget]\n\
          bench     <fig1|fig2|fig3|fig4|fig5|fig6|table1|table2|table3|adaptive|vocab|\n\
-                    sharding|ragged|multitenant|continuous>\n\
+                    sharding|ragged|multitenant|continuous|budget>\n\
                    multitenant: [--trace file.csv] [--loads 0.5,1.5,3] [--smoke]\n\
                    continuous:  [--trace file.csv] [--loads 0.5,1.5,3] [--smoke]\n\
+                   budget:      [--smoke]\n\
          fit       --gamma N --alpha X\n\
          selfcheck --artifacts DIR\n\
          list\n\
@@ -117,6 +120,13 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
         cfg.adaptive = true;
         cfg.mix_admission = true;
     }
+    cfg.verify_budget = args.usize_or("verify-budget", cfg.verify_budget)?;
+    if args.flag("adaptive-budget") {
+        // Joint (γ, budget) control is a control-plane refinement, so
+        // the flag implies the adaptive controller.
+        cfg.adaptive = true;
+        cfg.adaptive_budget = true;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -154,6 +164,11 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             cfg.prefill_chunk
         );
     }
+    if cfg.verify_budget > 0 {
+        println!("verify-expert budget: static cap {} experts", cfg.verify_budget);
+    } else if cfg.adaptive_budget {
+        println!("verify-expert budget: controller-owned (joint γ/budget selection)");
+    }
     let opts = moesd::server::ServerOptions {
         record_trace: (!cfg.record_trace.is_empty())
             .then(|| std::path::PathBuf::from(&cfg.record_trace)),
@@ -182,7 +197,16 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             );
             let tsim = ExecSim::new(target, platform.clone());
             let dsim = ExecSim::new(draft, platform);
-            let backend = SyntheticLm::new(tsim, dsim, alpha, cfg.seed);
+            let mut backend = SyntheticLm::new(tsim, dsim, alpha, cfg.seed);
+            if cfg.verify_budget > 0 || cfg.adaptive_budget {
+                // Budgeted verify degrades acceptance for tokens routed
+                // past the cap; the calibratable curve models that.
+                backend = backend.with_budget_alpha_curve(1.0);
+            }
+            if cfg.verify_budget > 0 {
+                use moesd::spec::SdBackend;
+                backend.set_verify_budget(Some(cfg.verify_budget));
+            }
             moesd::server::Server::start_with_opts(&bind, engine_cfg, move || Ok(backend), opts)?
         }
     };
@@ -200,7 +224,7 @@ fn bench(args: &Args) -> anyhow::Result<()> {
         .ok_or_else(|| {
             anyhow::anyhow!(
                 "bench needs an experiment id (fig1..fig6, table1..3, adaptive, vocab, \
-                 sharding, ragged, multitenant, continuous)"
+                 sharding, ragged, multitenant, continuous, budget)"
             )
         })?;
     use moesd::experiments::*;
@@ -519,6 +543,33 @@ fn bench(args: &Args) -> anyhow::Result<()> {
                      calibrated to the default trace + loads)"
                 );
             }
+        }
+        "budget" => {
+            let smoke = args.flag("smoke");
+            let out = budget::run(smoke, 42)?;
+            for r in &out.rows {
+                println!(
+                    "α={:.2} K={} B={:>3} budget {:>8}: {:>8.1} tok/s (speedup {:.3}, γ={})",
+                    r.alpha,
+                    r.k,
+                    r.batch,
+                    r.budget
+                        .map(|b| b.to_string())
+                        .unwrap_or_else(|| "off".into()),
+                    r.tok_s,
+                    r.speedup,
+                    r.gamma,
+                );
+            }
+            moesd::benchlib::write_report("budget_sweep.csv", &budget::to_csv(&out).to_string())?;
+            moesd::benchlib::write_json_report("budget.json", &budget::to_json(&out))?;
+            if let Err(e) = budget::check_shape(&out) {
+                anyhow::bail!("budget sweep shape check failed: {e}");
+            }
+            println!(
+                "shape check passed: budget ≥ E is bit-identical to the unbudgeted \
+                 path; a sub-coverage budget strictly wins in the memory-bound regime"
+            );
         }
         "vocab" => {
             let out = vocab_scale::run(&vocab_scale::VOCABS, 4, 0.9, 42)?;

@@ -301,6 +301,34 @@ impl PerfModel {
         p.bias + p.k1 * self.ramp(p, t) + p.k2 * n + p.k3 * self.ramp(p, load)
     }
 
+    /// Expert-budgeted target forward time: Alg. 1's cost surface with
+    /// the activated-expert count capped at `min(N(t), budget)` (the
+    /// MoE-Spec verify budget) and the per-expert load T̄_exp recomputed
+    /// against the capped count (`t·K/min(N, budget)` — fewer experts
+    /// each absorb more tokens, per Eq. 10's load identity
+    /// `T̄_exp = t·K/N`). An uncapped call — `budget = None` *or* any
+    /// budget ≥ N(t), hence any budget ≥ E — takes the unbudgeted code
+    /// path verbatim, so it is bit-for-bit [`PerfModel::t_target`].
+    pub fn t_target_budgeted(
+        &self,
+        p: &PerfParams,
+        b: usize,
+        s: usize,
+        k: usize,
+        e: usize,
+        budget: Option<usize>,
+    ) -> f64 {
+        let n_unc = theory::expected_active_experts(e, k, (b * s) as u64);
+        let capped = budget.map_or(false, |bud| (bud as f64) < n_unc);
+        if !capped {
+            return self.t_target(p, b, s, k, e);
+        }
+        let t = (b * s) as f64;
+        let n = budget.expect("capped implies Some") as f64;
+        let load = t * k as f64 / n.max(1e-9);
+        p.bias + p.k1 * self.ramp(p, t) + p.k2 * n + p.k3 * self.ramp(p, load)
+    }
+
     /// EP-sharded target forward time: Alg. 1's cost surface re-derived
     /// for `spec.devices()` data-parallel ranks holding `E/d` experts each
     /// (see the module docs for the term-by-term mapping).
@@ -321,6 +349,41 @@ impl PerfModel {
         let rho = k as f64 / e as f64;
         let n_rank = theory::ep_active_experts_per_device(e, k, (b * s) as u64, spec.devices());
         let load = theory::expert_load(t, rho);
+        p.bias
+            + p.k1 * self.ramp(p, t / d)
+            + p.k2 * n_rank * spec.imbalance
+            + p.k3 * self.ramp(p, load) * spec.imbalance
+            + spec.comm_time(t)
+    }
+
+    /// Expert-budgeted EP-sharded target forward time: the budget caps
+    /// the *global* activation before the per-rank `N/d` split (the
+    /// all-to-all still reaches every rank; each just hosts fewer hot
+    /// experts). Uncapped calls (`budget = None` or ≥ N(t)) take the
+    /// unbudgeted sharded path verbatim.
+    pub fn t_target_sharded_budgeted(
+        &self,
+        p: &PerfParams,
+        b: usize,
+        s: usize,
+        k: usize,
+        e: usize,
+        spec: &ShardingSpec,
+        budget: Option<usize>,
+    ) -> f64 {
+        if !spec.is_sharded() {
+            return self.t_target_budgeted(p, b, s, k, e, budget);
+        }
+        let n_unc = theory::expected_active_experts(e, k, (b * s) as u64);
+        let capped = budget.map_or(false, |bud| (bud as f64) < n_unc);
+        if !capped {
+            return self.t_target_sharded(p, b, s, k, e, spec);
+        }
+        let d = spec.devices() as f64;
+        let t = (b * s) as f64;
+        let n = budget.expect("capped implies Some") as f64;
+        let n_rank = n / d;
+        let load = t * k as f64 / n.max(1e-9);
         p.bias
             + p.k1 * self.ramp(p, t / d)
             + p.k2 * n_rank * spec.imbalance
@@ -415,6 +478,19 @@ impl PerfModel {
         self.t_target(p, tokens, 1, k, e)
     }
 
+    /// Expert-budgeted packed verify price
+    /// ([`PerfModel::t_target_budgeted`] in token form).
+    pub fn t_target_tokens_budgeted(
+        &self,
+        p: &PerfParams,
+        tokens: usize,
+        k: usize,
+        e: usize,
+        budget: Option<usize>,
+    ) -> f64 {
+        self.t_target_budgeted(p, tokens, 1, k, e, budget)
+    }
+
     /// Time of one ragged round: the draft runs `max γᵢ` sequential
     /// forwards over the shrinking set of sequences still drafting
     /// ([`ragged_draft_schedule`]), the target verifies the packed
@@ -424,6 +500,29 @@ impl PerfModel {
     pub fn ragged_round_time(&self, p: &PerfParams, gammas: &[usize], k: usize, e: usize) -> f64 {
         let rows = ragged_verify_tokens(gammas);
         let verify = self.t_target_tokens(p, rows, k, e);
+        let draft: f64 = ragged_draft_schedule(gammas)
+            .iter()
+            .map(|&bg| self.t_draft(p, bg))
+            .sum();
+        let reject = p.reject_bias + p.reject_k * rows as f64;
+        draft + verify + reject
+    }
+
+    /// Expert-budgeted ragged round time: only the packed verify forward
+    /// runs under the budget — drafting and rejection sampling never
+    /// touch the target's gate. `budget = None` mirrors
+    /// [`PerfModel::ragged_round_time`] term for term (same summation
+    /// order), so it is bit-for-bit identical.
+    pub fn ragged_round_time_budgeted(
+        &self,
+        p: &PerfParams,
+        gammas: &[usize],
+        k: usize,
+        e: usize,
+        budget: Option<usize>,
+    ) -> f64 {
+        let rows = ragged_verify_tokens(gammas);
+        let verify = self.t_target_tokens_budgeted(p, rows, k, e, budget);
         let draft: f64 = ragged_draft_schedule(gammas)
             .iter()
             .map(|&bg| self.t_draft(p, bg))
@@ -466,6 +565,43 @@ impl PerfModel {
         assert_eq!(gammas.len(), alphas.len(), "gammas/alphas length mismatch");
         assert!(!gammas.is_empty(), "ragged goodput needs at least one sequence");
         theory::ragged_round_tokens(alphas, gammas) / self.ragged_round_time(p, gammas, k, e)
+    }
+
+    /// Expert-budgeted ragged goodput — the (γ⃗, budget) objective the
+    /// joint water-fill maximizes. Two budget effects compose:
+    /// the packed verify gets cheaper
+    /// ([`PerfModel::ragged_round_time_budgeted`]) while every
+    /// sequence's acceptance degrades by the coverage curve
+    /// (`α_eff = α·coverage^sensitivity`,
+    /// [`theory::budgeted_alpha`], with coverage evaluated at this
+    /// round's verify width `Σ(γᵢ+1)`). Full coverage — `budget = None`
+    /// or ≥ N(t) — short-circuits to the raw α vector, making the
+    /// off-switch bit-exact against [`PerfModel::ragged_goodput`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn ragged_goodput_budgeted(
+        &self,
+        p: &PerfParams,
+        gammas: &[usize],
+        alphas: &[f64],
+        k: usize,
+        e: usize,
+        budget: Option<usize>,
+        sensitivity: f64,
+    ) -> f64 {
+        assert_eq!(gammas.len(), alphas.len(), "gammas/alphas length mismatch");
+        assert!(!gammas.is_empty(), "ragged goodput needs at least one sequence");
+        let rows = ragged_verify_tokens(gammas);
+        let cov = theory::budget_coverage(e, k, rows as u64, budget);
+        let tokens = if cov >= 1.0 {
+            theory::ragged_round_tokens(alphas, gammas)
+        } else {
+            let eff: Vec<f64> = alphas
+                .iter()
+                .map(|&a| theory::budgeted_alpha(a.clamp(0.0, 1.0), cov, sensitivity))
+                .collect();
+            theory::ragged_round_tokens(&eff, gammas)
+        };
+        tokens / self.ragged_round_time_budgeted(p, gammas, k, e, budget)
     }
 
     /// Closed-form argmax of the per-sequence Eq. 4: the water-filling
@@ -521,6 +657,50 @@ impl PerfModel {
             }
         }
         best
+    }
+
+    /// Joint (γ⃗, budget) argmax over the budgeted per-sequence Eq. 4:
+    /// the PR-4 water-fill candidate set (one source:
+    /// [`water_fill_assignments`], generated from the *raw* α vector —
+    /// the budget rescales every sequence's α by the same coverage
+    /// factor, which preserves the water-level order) crossed with
+    /// `{None} ∪ budgets`, scored by
+    /// [`PerfModel::ragged_goodput_budgeted`]. `None` is scored first
+    /// and improvements are strict, so with an **empty** budget grid the
+    /// scan degenerates to [`PerfModel::argmax_gamma_ragged`] exactly —
+    /// same candidates, same scores, same tie-breaks (pinned in
+    /// `rust/tests/integration_budget.rs`). Because the budget-blind
+    /// water-fill assignment is itself in the candidate set, the joint
+    /// optimum can never lose to picking γ⃗ first and sweeping budgets
+    /// after (decoupled selection).
+    #[allow(clippy::too_many_arguments)]
+    pub fn argmax_gamma_budget_ragged(
+        &self,
+        p: &PerfParams,
+        alphas: &[f64],
+        gamma_max: usize,
+        k: usize,
+        e: usize,
+        budgets: &[usize],
+        sensitivity: f64,
+    ) -> (Vec<usize>, Option<usize>) {
+        assert!(!alphas.is_empty(), "argmax needs at least one sequence");
+        let mut grid: Vec<Option<usize>> = vec![None];
+        grid.extend(budgets.iter().map(|&b| Some(b)));
+        let mut best: Vec<usize> = Vec::new();
+        let mut best_budget: Option<usize> = None;
+        let mut best_score = f64::MIN;
+        for &bud in &grid {
+            for cand in water_fill_assignments(alphas, gamma_max) {
+                let s = self.ragged_goodput_budgeted(p, &cand, alphas, k, e, bud, sensitivity);
+                if s > best_score {
+                    best_score = s;
+                    best = cand;
+                    best_budget = bud;
+                }
+            }
+        }
+        (best, best_budget)
     }
 
     /// Residual vector for the Alg. 1 line-13 least-squares objective.
@@ -847,6 +1027,113 @@ mod tests {
                 })
                 .unwrap();
             assert_eq!(assignment[0], scalar_best, "α={alpha} B={batch}");
+        }
+    }
+
+    #[test]
+    fn budget_off_switch_is_bit_identical() {
+        use crate::hardware::{ShardingSpec, Topology};
+        let m = model();
+        let p = demo_params();
+        let arch = presets::qwen2_57b_a14b();
+        let spec = ShardingSpec::for_arch(Topology::nvlink(4), &arch);
+        for (b, s) in [(1usize, 1usize), (16, 4), (256, 5)] {
+            let want = m.t_target(&p, b, s, 8, 64);
+            assert_eq!(m.t_target_budgeted(&p, b, s, 8, 64, None), want);
+            assert_eq!(m.t_target_budgeted(&p, b, s, 8, 64, Some(64)), want);
+            assert_eq!(m.t_target_budgeted(&p, b, s, 8, 64, Some(999)), want);
+            let want_sh = m.t_target_sharded(&p, b, s, 8, 64, &spec);
+            assert_eq!(
+                m.t_target_sharded_budgeted(&p, b, s, 8, 64, &spec, None),
+                want_sh
+            );
+            assert_eq!(
+                m.t_target_sharded_budgeted(&p, b, s, 8, 64, &spec, Some(64)),
+                want_sh
+            );
+        }
+        let gammas = [5usize, 2, 3, 0, 5, 1];
+        let alphas = [0.9, 0.5, 0.7, 0.3, 0.95, 0.6];
+        assert_eq!(
+            m.ragged_round_time_budgeted(&p, &gammas, 8, 64, None),
+            m.ragged_round_time(&p, &gammas, 8, 64)
+        );
+        assert_eq!(
+            m.ragged_goodput_budgeted(&p, &gammas, &alphas, 8, 64, None, 0.5),
+            m.ragged_goodput(&p, &gammas, &alphas, 8, 64)
+        );
+        assert_eq!(
+            m.ragged_goodput_budgeted(&p, &gammas, &alphas, 8, 64, Some(64), 0.5),
+            m.ragged_goodput(&p, &gammas, &alphas, 8, 64)
+        );
+    }
+
+    #[test]
+    fn tight_budget_cuts_verify_price_and_alpha() {
+        let m = model();
+        let p = demo_params();
+        // t = 28 tokens activates N ≈ 62.5 of 64 experts; a budget of 24
+        // must strictly cut the k2 term's price.
+        let full = m.t_target_tokens(&p, 28, 8, 64);
+        let b24 = m.t_target_tokens_budgeted(&p, 28, 8, 64, Some(24));
+        let b12 = m.t_target_tokens_budgeted(&p, 28, 8, 64, Some(12));
+        assert!(b24 < full, "budget must cheapen the verify: {b24} vs {full}");
+        assert!(b12 < b24, "tighter budget is cheaper: {b12} vs {b24}");
+        // The acceptance side pays: goodput under a tight budget with a
+        // harsh sensitivity can lose to unbudgeted.
+        let gammas = vec![6usize; 4];
+        let alphas = vec![0.9f64; 4];
+        let g_none = m.ragged_goodput_budgeted(&p, &gammas, &alphas, 8, 64, None, 1.0);
+        let g_tight = m.ragged_goodput_budgeted(&p, &gammas, &alphas, 8, 64, Some(4), 4.0);
+        assert!(
+            g_tight < g_none,
+            "harsh degradation should not pay: {g_tight} vs {g_none}"
+        );
+    }
+
+    #[test]
+    fn joint_argmax_empty_grid_degenerates_exactly() {
+        let m = model();
+        let p = demo_params();
+        let cases: Vec<Vec<f64>> = vec![
+            (0..16).map(|i| if i % 2 == 0 { 0.95 } else { 0.5 }).collect(),
+            vec![0.85; 8],
+            vec![0.3, 0.6, 0.9, 0.99],
+            vec![0.7],
+        ];
+        for alphas in &cases {
+            let plain = m.argmax_gamma_ragged(&p, alphas, 8, 8, 64);
+            let (joint, bud) = m.argmax_gamma_budget_ragged(&p, alphas, 8, 8, 64, &[], 0.5);
+            assert_eq!(joint, plain, "empty grid must reproduce PR-4 water-fill");
+            assert_eq!(bud, None);
+        }
+    }
+
+    #[test]
+    fn joint_argmax_never_loses_to_decoupled_selection() {
+        let m = model();
+        let p = demo_params();
+        let sens = 0.35;
+        let budgets = [8usize, 16, 24, 32, 48];
+        for alphas in [
+            (0..8).map(|i| if i % 2 == 0 { 0.95 } else { 0.55 }).collect::<Vec<f64>>(),
+            vec![0.9; 4],
+            vec![0.4, 0.8, 0.95, 0.99, 0.6, 0.7],
+        ] {
+            let (joint, jbud) = m.argmax_gamma_budget_ragged(&p, &alphas, 8, 8, 64, &budgets, sens);
+            let joint_score =
+                m.ragged_goodput_budgeted(&p, &joint, &alphas, 8, 64, jbud, sens);
+            // Decoupled: pick γ⃗ budget-blind, then sweep budgets over it.
+            let blind = m.argmax_gamma_ragged(&p, &alphas, 8, 8, 64);
+            let mut decoupled = m.ragged_goodput_budgeted(&p, &blind, &alphas, 8, 64, None, sens);
+            for &b in &budgets {
+                let s = m.ragged_goodput_budgeted(&p, &blind, &alphas, 8, 64, Some(b), sens);
+                decoupled = decoupled.max(s);
+            }
+            assert!(
+                joint_score >= decoupled - 1e-12,
+                "joint ({joint_score}) must not lose to decoupled ({decoupled})"
+            );
         }
     }
 

@@ -106,6 +106,8 @@ pub struct ServerStats {
     pub acceptance_rate: f64,
     /// γ currently in effect (controller-owned when one is configured).
     pub gamma: usize,
+    /// Verify-expert budget in effect on the backend (`None` = unbudgeted).
+    pub verify_budget: Option<usize>,
     /// Adaptive-controller snapshot, when the engine runs one.
     pub controller: Option<ControllerState>,
     /// Per-tenant-class stats (one entry per configured tenant; classless
@@ -123,6 +125,10 @@ impl ServerStats {
             ("tokens_per_second", self.tokens_per_second.into()),
             ("acceptance_rate", self.acceptance_rate.into()),
             ("gamma", self.gamma.into()),
+            (
+                "verify_budget",
+                self.verify_budget.map_or(Json::Null, Json::from),
+            ),
         ];
         if let Some(ctl) = &self.controller {
             pairs.push(("controller", ctl.to_json()));
@@ -314,6 +320,7 @@ fn publish_stats<B: SdBackend>(engine: &Engine<B>, stats: &SharedStats) {
         tokens_per_second: m.tokens_per_second(),
         acceptance_rate: m.acceptance_rate(),
         gamma: engine.current_gamma(),
+        verify_budget: engine.verify_budget(),
         controller: engine.controller_state(),
         classes,
     };

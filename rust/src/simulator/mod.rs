@@ -105,16 +105,22 @@ pub struct ExecSim {
     /// [`ShardingSpec::single`] keeps the original single-group path.
     sharding: ShardingSpec,
     /// Memoized rng-free forward prices keyed by (b, total new tokens,
-    /// ctx) — the cost surface depends on batch and width only through
-    /// the token total, so uniform (`t_forward`) and ragged
-    /// (`t_forward_ragged`) calls share entries. An engine run prices
-    /// thousands of rounds over a handful of distinct shapes, and the
-    /// figure sweeps re-ask the same points per grid cell — re-walking
-    /// the roofline each call was measurable coordinator overhead.
-    /// Interior mutability keeps the pricing API `&self`; the builder
-    /// methods clear the cache because prices depend on their settings.
-    price_cache: RefCell<HashMap<(usize, usize, usize), f64>>,
+    /// ctx, expert budget) — the cost surface depends on batch and width
+    /// only through the token total, so uniform (`t_forward`) and ragged
+    /// (`t_forward_ragged`) calls share entries, and budgeted/unbudgeted
+    /// prices share the map (`NO_BUDGET` = `usize::MAX` is the
+    /// unbudgeted column). An engine run prices thousands of rounds over
+    /// a handful of distinct shapes, and the figure sweeps re-ask the
+    /// same points per grid cell — re-walking the roofline each call was
+    /// measurable coordinator overhead. Interior mutability keeps the
+    /// pricing API `&self`; the builder methods clear the cache because
+    /// prices depend on their settings.
+    price_cache: RefCell<HashMap<(usize, usize, usize, usize), f64>>,
 }
+
+/// Cache-key sentinel for "no expert budget" (a real budget of
+/// `usize::MAX` is indistinguishable from unbudgeted anyway: N(t) ≤ E).
+const NO_BUDGET: usize = usize::MAX;
 
 impl ExecSim {
     pub fn new(arch: ModelArch, platform: Platform) -> ExecSim {
@@ -167,17 +173,32 @@ impl ExecSim {
         &self.sharding
     }
 
-    /// Number of activated experts for `t` tokens through one gate.
-    fn activated_experts(&self, t: u64, rng: Option<&mut Rng>) -> f64 {
+    /// `(E, K)` of the routed-expert gate, or `None` for dense archs —
+    /// what budget-curve consumers (acceptance degradation, candidate
+    /// grids) need from the target model.
+    pub fn moe_dims(&self) -> Option<(usize, usize)> {
+        match &self.arch.ffn {
+            Ffn::Moe { experts, topk, .. } => Some((*experts, *topk)),
+            Ffn::Dense { .. } => None,
+        }
+    }
+
+    /// Number of activated experts for `t` tokens through one gate,
+    /// optionally capped at a verify-time expert budget (`min(N(t),
+    /// budget)`, the MoE-Spec knob). `budget = None` is the uncapped
+    /// value bit-for-bit: `min` against `+∞` returns the finite operand
+    /// unchanged, and any budget ≥ E is likewise a no-op since N(t) ≤ E.
+    fn activated_experts(&self, t: u64, rng: Option<&mut Rng>, budget: Option<usize>) -> f64 {
+        let cap = budget.map(|b| b as f64).unwrap_or(f64::INFINITY);
         match &self.arch.ffn {
             Ffn::Dense { .. } => 1.0,
             Ffn::Moe { experts, topk, .. } => match (self.activation, rng) {
                 (ActivationMode::Expected, _) | (ActivationMode::Sampled, None) => {
-                    theory::expected_active_experts(*experts, *topk, t)
+                    theory::expected_active_experts(*experts, *topk, t).min(cap)
                 }
                 (ActivationMode::Sampled, Some(rng)) => {
                     let router = routing::Router::balanced(*experts, *topk);
-                    router.route(t, rng).activated as f64
+                    (router.route(t, rng).activated as f64).min(cap)
                 }
             },
         }
@@ -217,13 +238,33 @@ impl ExecSim {
         b: usize,
         tokens: usize,
         ctx: usize,
+        rng: Option<&mut Rng>,
+    ) -> TimeBreakdown {
+        self.forward_time_tokens_budgeted(b, tokens, ctx, rng, None)
+    }
+
+    /// Expert-budgeted form of [`ExecSim::forward_time_tokens`]: the
+    /// routed-expert arm runs at most `budget` experts (`min(N(t),
+    /// budget)`, Eq. 8 capped), with per-expert load recomputed against
+    /// the capped count — fewer experts each absorb more tokens, so the
+    /// budget trades weight traffic for per-expert compute. Dispatch
+    /// traffic is unchanged (every token is still routed, to a smaller
+    /// expert set). `budget = None` and any budget ≥ E take the
+    /// *identical* arithmetic path, bit-for-bit (property-tested in
+    /// `rust/tests/prop_invariants.rs`).
+    pub fn forward_time_tokens_budgeted(
+        &self,
+        b: usize,
+        tokens: usize,
+        ctx: usize,
         mut rng: Option<&mut Rng>,
+        budget: Option<usize>,
     ) -> TimeBreakdown {
         assert!(b > 0 && tokens > 0);
         if self.sharding.is_sharded() {
             // The EP-sharded walk lives in its own function; the d = 1
             // path below stays byte-identical to the pre-sharding pricing.
-            return self.forward_time_ep(b, tokens, ctx, rng);
+            return self.forward_time_ep(b, tokens, ctx, rng, budget);
         }
         let a = &self.arch;
         let p = &self.platform;
@@ -275,9 +316,11 @@ impl ExecSim {
                         });
 
                 // Routed experts: the §3.2 effect. Weight traffic scales
-                // with the *activated* expert count N(t); compute scales
-                // with per-expert load T̄_exp (tile-quantized per expert).
-                let n_act = self.activated_experts(tokens as u64, rng.as_deref_mut());
+                // with the *activated* expert count N(t) — capped at the
+                // verify-expert budget when one is set; compute scales
+                // with per-expert load T̄_exp (tile-quantized per expert),
+                // recomputed against the capped count below.
+                let n_act = self.activated_experts(tokens as u64, rng.as_deref_mut(), budget);
                 let expert_w = n_act * a.bytes_per_expert();
                 let load = t * *topk as f64 / n_act.max(1e-9);
                 let expert_flops = n_act * self.q(load) * 6.0 * h * *expert_inter as f64;
@@ -317,6 +360,7 @@ impl ExecSim {
         tokens: usize,
         ctx: usize,
         mut rng: Option<&mut Rng>,
+        budget: Option<usize>,
     ) -> TimeBreakdown {
         let a = &self.arch;
         let p = &self.platform;
@@ -379,8 +423,9 @@ impl ExecSim {
                 // mode divides the sampled global draw the same way) —
                 // while the per-expert load T̄_exp = t·K/N(t) is
                 // d-invariant, so the arithmetic-intensity structure of
-                // §3.2 survives sharding.
-                let n_act = self.activated_experts(tokens as u64, rng.as_deref_mut());
+                // §3.2 survives sharding. A verify-expert budget caps the
+                // *global* activation before the per-rank split.
+                let n_act = self.activated_experts(tokens as u64, rng.as_deref_mut(), budget);
                 let n_rank = n_act / d;
                 let expert_w = n_rank * a.bytes_per_expert();
                 let load = t * *topk as f64 / n_act.max(1e-9);
@@ -420,13 +465,48 @@ impl ExecSim {
     /// (shares the cache with the uniform entry point: the surface only
     /// depends on the total).
     pub fn t_forward_tokens(&self, b: usize, tokens: usize, ctx: usize) -> f64 {
-        let key = (b, tokens, ctx);
+        self.t_forward_tokens_budgeted(b, tokens, ctx, None)
+    }
+
+    /// Memoized expert-budgeted forward price (see
+    /// [`ExecSim::forward_time_tokens_budgeted`]). Budgeted and
+    /// unbudgeted prices share one cache, keyed by the budget (the
+    /// `NO_BUDGET` sentinel for `None`), and one arithmetic path — so
+    /// `budget = None` is the unbudgeted price bit-for-bit.
+    pub fn t_forward_tokens_budgeted(
+        &self,
+        b: usize,
+        tokens: usize,
+        ctx: usize,
+        budget: Option<usize>,
+    ) -> f64 {
+        let key = (b, tokens, ctx, budget.unwrap_or(NO_BUDGET));
         if let Some(&t) = self.price_cache.borrow().get(&key) {
             return t;
         }
-        let t = self.forward_time_tokens(b, tokens, ctx, None).total();
+        let t = self
+            .forward_time_tokens_budgeted(b, tokens, ctx, None, budget)
+            .total();
         self.price_cache.borrow_mut().insert(key, t);
         t
+    }
+
+    /// Expert-budgeted uniform verify price: `t_forward(b, s, ctx)` with
+    /// the routed-expert arm capped at `budget` experts.
+    pub fn t_forward_budgeted(&self, b: usize, s: usize, ctx: usize, budget: Option<usize>) -> f64 {
+        self.t_forward_tokens_budgeted(b, b * s, ctx, budget)
+    }
+
+    /// Expert-budgeted ragged verify price (packed, like
+    /// [`ExecSim::t_forward_ragged`]).
+    pub fn t_forward_ragged_budgeted(
+        &self,
+        widths: &[usize],
+        ctx: usize,
+        budget: Option<usize>,
+    ) -> f64 {
+        assert!(!widths.is_empty(), "ragged forward needs at least one sequence");
+        self.t_forward_tokens_budgeted(widths.len(), widths.iter().sum(), ctx, budget)
     }
 
     /// Price a ragged verify pass: sequence `i` contributes `widths[i]`
@@ -457,6 +537,22 @@ impl ExecSim {
     /// Target efficiency T_T(B,1)/T_T(B,γ) at context `ctx` (§3.1).
     pub fn target_efficiency(&self, b: usize, gamma: usize, ctx: usize) -> f64 {
         theory::target_efficiency(self.t_forward(b, 1, ctx), self.t_forward(b, gamma + 1, ctx))
+    }
+
+    /// Budgeted target efficiency: the AR decode numerator stays
+    /// unbudgeted (the baseline never runs a capped gate), only the
+    /// verify denominator is budget-priced.
+    pub fn target_efficiency_budgeted(
+        &self,
+        b: usize,
+        gamma: usize,
+        ctx: usize,
+        budget: Option<usize>,
+    ) -> f64 {
+        theory::target_efficiency(
+            self.t_forward(b, 1, ctx),
+            self.t_forward_budgeted(b, gamma + 1, ctx, budget),
+        )
     }
 }
 
@@ -844,6 +940,70 @@ mod tests {
             b.target_efficiency(batch, 3, 512) > a.target_efficiency(batch, 3, 512),
             "GPU-B should hold efficiency at B={batch}"
         );
+    }
+
+    #[test]
+    fn budget_off_switch_prices_bit_identical() {
+        use crate::hardware::{ShardingSpec, Topology};
+        // budget=None and budget ≥ E must be the unbudgeted price
+        // bit-for-bit, for MoE and dense archs, tiled, and EP-sharded.
+        let arch = presets::qwen2_57b_a14b();
+        let e = 64; // qwen2_57b_a14b expert count
+        let sims = [
+            qwen_sim(),
+            dense_sim(),
+            qwen_sim().with_tile_effects(true),
+            qwen_sim().with_sharding(ShardingSpec::for_arch(Topology::nvlink(4), &arch)),
+        ];
+        for sim in &sims {
+            for (b, s) in [(1usize, 1usize), (4, 4), (16, 5), (128, 3)] {
+                let want = sim.t_forward(b, s, 512);
+                assert_eq!(sim.t_forward_budgeted(b, s, 512, None), want);
+                assert_eq!(sim.t_forward_budgeted(b, s, 512, Some(e)), want);
+                assert_eq!(sim.t_forward_budgeted(b, s, 512, Some(e + 100)), want);
+            }
+        }
+    }
+
+    #[test]
+    fn tight_budget_cheapens_the_verify() {
+        // At a small batch the verify is expert-weight-bound (§3.2), so
+        // capping the activated experts must strictly cut the price, and
+        // tighter caps cut more.
+        let sim = qwen_sim();
+        let (b, s) = (4usize, 7usize); // t = 28 → N(t) ≈ 62.5 of 64
+        let full = sim.t_forward(b, s, 512);
+        let b32 = sim.t_forward_budgeted(b, s, 512, Some(32));
+        let b16 = sim.t_forward_budgeted(b, s, 512, Some(16));
+        assert!(b32 < full, "budget 32 must cut the verify: {b32} vs {full}");
+        assert!(b16 < b32, "tighter budget cuts more: {b16} vs {b32}");
+        // The expert arm specifically shrinks; dense arms are untouched.
+        let tf = sim.forward_time_tokens_budgeted(b, b * s, 512, None, None);
+        let tb = sim.forward_time_tokens_budgeted(b, b * s, 512, None, Some(16));
+        assert!(tb.ffn_experts < tf.ffn_experts);
+        assert_eq!(tb.attn, tf.attn);
+        assert_eq!(tb.ffn_dense, tf.ffn_dense);
+        assert_eq!(tb.head, tf.head);
+    }
+
+    #[test]
+    fn budgeted_ragged_uniform_matches_scalar() {
+        let sim = qwen_sim();
+        let widths = vec![4usize; 8];
+        assert_eq!(
+            sim.t_forward_ragged_budgeted(&widths, 512, Some(24)),
+            sim.t_forward_budgeted(8, 4, 512, Some(24))
+        );
+        assert_eq!(
+            sim.t_forward_ragged_budgeted(&widths, 512, None),
+            sim.t_forward_ragged(&widths, 512)
+        );
+    }
+
+    #[test]
+    fn moe_dims_reports_gate_shape() {
+        assert_eq!(qwen_sim().moe_dims(), Some((64, 8)));
+        assert_eq!(dense_sim().moe_dims(), None);
     }
 
     #[test]

@@ -163,6 +163,25 @@ pub trait SdBackend {
     /// this from their simulator or measure it; the engine adds it to the
     /// clock.
     fn reject_cost(&self, gammas: &[usize]) -> f64;
+
+    /// Cap the experts activated during *verify* forwards at `budget`
+    /// (`None` = unbudgeted, the default). The MoE-Spec trade: a capped
+    /// gate loads fewer expert weights (cheaper verify) but degrades
+    /// acceptance for tokens whose top-K routing falls outside the
+    /// budget. Backends without a budget notion ignore the call — the
+    /// engine may invoke it every round with the controller's current
+    /// choice.
+    fn set_verify_budget(&mut self, budget: Option<usize>) {
+        let _ = budget;
+    }
+
+    /// The verify-expert budget currently in effect (`None` when off or
+    /// unsupported). The engine stamps this into each
+    /// `RoundObservation` so the controller's measured table can grow a
+    /// budget dimension.
+    fn verify_budget(&self) -> Option<usize> {
+        None
+    }
 }
 
 #[cfg(test)]

@@ -73,6 +73,18 @@ pub struct SyntheticLm {
     /// Byte-compatible with the pre-sparse backend — reference mode for
     /// the equivalence property tests and the micro-bench dense baseline.
     dense_rows: bool,
+    /// Verify-time expert budget (`None` = unbudgeted): verify forwards
+    /// are priced with the routed-expert arm capped at this many
+    /// experts, and draft acceptance degrades by the coverage curve
+    /// below. Draft, prefill and rejection pricing never see the budget.
+    verify_budget: Option<usize>,
+    /// Acceptance-vs-budget curve exponent: the effective α of every
+    /// sequence is `α · coverage^sensitivity` with
+    /// `coverage = min(1, budget / N(Σ(γᵢ+1)))`
+    /// ([`crate::theory::budgeted_alpha`]). The default 1.0 is the
+    /// linear prior; [`SyntheticLm::with_budget_alpha_curve`] calibrates
+    /// it (MoE-Spec-style mild degradation sits well below 1).
+    budget_sensitivity: f64,
 }
 
 impl SyntheticLm {
@@ -90,6 +102,8 @@ impl SyntheticLm {
             ctx_for_pricing: 512,
             noise_rng: None,
             dense_rows: false,
+            verify_budget: None,
+            budget_sensitivity: 1.0,
         }
     }
 
@@ -134,9 +148,42 @@ impl SyntheticLm {
         self
     }
 
+    /// Calibrate the acceptance-vs-budget degradation curve: under a
+    /// verify budget, every sequence's effective α becomes
+    /// `α · coverage^sensitivity` where coverage is the budget's share
+    /// of the expectedly-activated experts at the round's verify width.
+    /// `sensitivity = 0` models budget-oblivious acceptance (free
+    /// lunch); larger values punish under-coverage harder. Without a
+    /// budget set the curve is inert, whatever the sensitivity.
+    pub fn with_budget_alpha_curve(mut self, sensitivity: f64) -> Self {
+        assert!(
+            sensitivity >= 0.0 && sensitivity.is_finite(),
+            "budget sensitivity must be finite and non-negative: {sensitivity}"
+        );
+        self.budget_sensitivity = sensitivity;
+        self
+    }
+
     /// The acceptance probability in effect for one sequence.
     pub fn alpha_for(&self, seq: SeqId) -> f64 {
         self.seq_alpha.get(&seq).copied().unwrap_or(self.alpha)
+    }
+
+    /// Acceptance degradation factor for a round drafting `gammas`:
+    /// `coverage^sensitivity` at verify width `Σ(γᵢ+1)`. Exactly 1.0 —
+    /// and bit-transparent to the α draw — when no budget is set, the
+    /// budget covers N(t), or the target is dense.
+    fn budget_alpha_factor(&self, gammas: &[usize]) -> f64 {
+        let (bud, (e, k)) = match (self.verify_budget, self.target_sim.moe_dims()) {
+            (Some(b), Some(dims)) => (b, dims),
+            _ => return 1.0,
+        };
+        let t = crate::perfmodel::ragged_verify_tokens(gammas) as u64;
+        let cov = crate::theory::budget_coverage(e, k, t, Some(bud));
+        if cov >= 1.0 {
+            return 1.0;
+        }
+        cov.powf(self.budget_sensitivity)
     }
 
     /// The ground-truth continuation this backend will deterministically
@@ -170,11 +217,18 @@ impl SyntheticLm {
     /// Price one (possibly ragged) verify forward: `b` sequences, `tokens`
     /// packed new tokens (Σ(γᵢ+1)). Uniform rounds pass `tokens = b·(γ+1)`
     /// and price bit-identically to the pre-ragged backend.
+    /// Verify forwards run under the backend's verify budget (`None`
+    /// takes the identical unbudgeted arithmetic, so prices — and the
+    /// noisy path's RNG draw sequence — are bit-for-bit the pre-budget
+    /// backend's).
     fn price_target_tokens(&mut self, b: usize, tokens: usize) -> f64 {
         let ctx = self.ctx_for_pricing;
+        let budget = self.verify_budget;
         match (&mut self.noise_rng, &self.noisy_target_sim) {
-            (Some(rng), Some(sim)) => sim.forward_time_tokens(b, tokens, ctx, Some(rng)).total(),
-            _ => self.target_sim.t_forward_tokens(b, tokens, ctx),
+            (Some(rng), Some(sim)) => sim
+                .forward_time_tokens_budgeted(b, tokens, ctx, Some(rng), budget)
+                .total(),
+            _ => self.target_sim.t_forward_tokens_budgeted(b, tokens, ctx, budget),
         }
     }
 }
@@ -257,10 +311,15 @@ impl SdBackend for SyntheticLm {
         let mut rng = Rng::new(self.stream ^ seed, 13);
         let mut tokens = Vec::with_capacity(seqs.len());
         let mut probs = Vec::with_capacity(seqs.len());
+        // Acceptance-vs-budget degradation, shared by the whole round
+        // (coverage depends on the round's packed verify width). 1.0 —
+        // and `α · 1.0 = α` exactly, same Bernoulli threshold, same RNG
+        // draw count — whenever the budget axis is off.
+        let budget_factor = self.budget_alpha_factor(gammas);
         for (i, &seq) in seqs.iter().enumerate() {
             let gamma = gammas[i];
             anyhow::ensure!(!pending[i].is_empty() || gamma == 0, "no pending feed");
-            let alpha = self.alpha_for(seq);
+            let alpha = self.alpha_for(seq) * budget_factor;
             let base = self.state(seq).target_len; // committed stream length
             let mut toks = Vec::with_capacity(gamma);
             let mut rows = Vec::with_capacity(gamma);
@@ -377,6 +436,14 @@ impl SdBackend for SyntheticLm {
         // reproduce t_reject(b, γ) exactly.
         self.target_sim
             .t_reject_rows(crate::perfmodel::ragged_verify_tokens(gammas))
+    }
+
+    fn set_verify_budget(&mut self, budget: Option<usize>) {
+        self.verify_budget = budget;
+    }
+
+    fn verify_budget(&self) -> Option<usize> {
+        self.verify_budget
     }
 }
 
@@ -615,6 +682,94 @@ mod tests {
         for (got, want) in p.tokens[1].iter().zip(b.expected_chain(2, 2, 4)) {
             assert_ne!(*got, want);
         }
+    }
+
+    #[test]
+    fn budget_off_switch_is_bit_transparent() {
+        // budget=None (default) and budget ≥ E must produce the exact
+        // same proposed tokens (same RNG stream) and verify prices as
+        // the pre-budget backend.
+        let run = |budget: Option<usize>| {
+            let mut b = backend(0.7).with_budget_alpha_curve(2.0);
+            if let Some(bud) = budget {
+                b.set_verify_budget(Some(bud));
+            }
+            b.prefill(&[(1, vec![1, 2]), (2, vec![1, 2])]).unwrap();
+            let p = b
+                .propose(&[1, 2], &[vec![2], vec![2]], &[5, 2], &[0.0; 2], 11)
+                .unwrap();
+            let v = b
+                .verify(&[1, 2], &[2, 2], &[p.tokens[0].clone(), p.tokens[1].clone()], &[0.0; 2])
+                .unwrap();
+            (p.tokens, p.cost, v.cost)
+        };
+        let base = run(None);
+        assert_eq!(run(Some(64)), base, "budget = E must be a no-op");
+        assert_eq!(run(Some(1000)), base, "budget > E must be a no-op");
+    }
+
+    #[test]
+    fn tight_budget_cheapens_verify_and_degrades_acceptance() {
+        let mk = |budget: Option<usize>| {
+            let mut b = backend(0.9).with_budget_alpha_curve(1.0);
+            b.set_verify_budget(budget);
+            b
+        };
+        // Verify price drops under the cap (γ=6, B=4 → 28 packed tokens,
+        // N ≈ 62.5 of 64 experts; budget 16 cuts the weight traffic 4×).
+        let mut full = mk(None);
+        let mut capped = mk(Some(16));
+        for b in [&mut full, &mut capped] {
+            b.prefill(&[(1, vec![1, 2]), (2, vec![1, 2]), (3, vec![1, 2]), (4, vec![1, 2])])
+                .unwrap();
+        }
+        let drafts = vec![vec![0u32; 6], vec![0; 6], vec![0; 6], vec![0; 6]];
+        let vf = full
+            .verify(&[1, 2, 3, 4], &[2; 4], &drafts, &[0.0; 4])
+            .unwrap()
+            .cost;
+        let vc = capped
+            .verify(&[1, 2, 3, 4], &[2; 4], &drafts, &[0.0; 4])
+            .unwrap()
+            .cost;
+        assert!(vc < vf, "capped verify {vc} must undercut {vf}");
+        // Acceptance degrades: empirical match rate under budget 16 at
+        // coverage 16/62.5 ≈ 0.256 should land near α·0.256 ≈ 0.23.
+        let count_matches = |budget: Option<usize>| {
+            let mut hits = 0usize;
+            let mut total = 0usize;
+            for s in 0..150u64 {
+                let mut b = mk(budget);
+                b.prefill(&[(s, vec![1, 2]), (s + 1000, vec![1, 2]), (s + 2000, vec![1, 2]), (s + 3000, vec![1, 2])])
+                    .unwrap();
+                let seqs = [s, s + 1000, s + 2000, s + 3000];
+                let p = b
+                    .propose(&seqs, &[vec![2], vec![2], vec![2], vec![2]], &[6; 4], &[0.0; 4], s)
+                    .unwrap();
+                for (i, &seq) in seqs.iter().enumerate() {
+                    let want = b.expected_chain(seq, 2, 6);
+                    hits += p.tokens[i].iter().zip(&want).filter(|(a, b)| a == b).count();
+                    total += 6;
+                }
+            }
+            hits as f64 / total as f64
+        };
+        let rate_full = count_matches(None);
+        let rate_capped = count_matches(Some(16));
+        assert!(
+            rate_full - rate_capped > 0.4,
+            "budget 16 should visibly degrade acceptance: {rate_full} vs {rate_capped}"
+        );
+        // Sensitivity 0 restores budget-oblivious acceptance while still
+        // taking the cheaper verify.
+        let mut zero = backend(0.9).with_budget_alpha_curve(0.0);
+        zero.set_verify_budget(Some(16));
+        zero.prefill(&[(7, vec![1, 2])]).unwrap();
+        let p = zero.propose(&[7], &[vec![2]], &[6], &[0.0], 7).unwrap();
+        let mut plain = backend(0.9);
+        plain.prefill(&[(7, vec![1, 2])]).unwrap();
+        let q = plain.propose(&[7], &[vec![2]], &[6], &[0.0], 7).unwrap();
+        assert_eq!(p.tokens, q.tokens, "sensitivity 0 must not touch the draw");
     }
 
     #[test]

@@ -180,6 +180,57 @@ pub fn ep_active_experts_per_device(e: usize, k: usize, t: u64, d: usize) -> f64
     expected_active_experts(e, k, t) / d as f64
 }
 
+/// Expert-budgeted N(t): the expected activation of Eq. 8 capped at a
+/// verify-time expert budget, `min(N(t), budget)` (the MoE-Spec knob —
+/// see PAPERS.md). `budget = None` **is** Eq. 8, bit-for-bit, and any
+/// budget ≥ E is a no-op because N(t) ≤ E always (IEEE `min` against a
+/// larger bound returns the original value exactly; property-tested in
+/// `rust/tests/prop_invariants.rs`).
+///
+/// ```
+/// use moesd::theory::{budgeted_active_experts, expected_active_experts};
+/// let n = expected_active_experts(64, 8, 28);
+/// assert_eq!(budgeted_active_experts(64, 8, 28, None), n);
+/// assert_eq!(budgeted_active_experts(64, 8, 28, Some(64)), n);
+/// assert_eq!(budgeted_active_experts(64, 8, 28, Some(16)), 16.0);
+/// ```
+pub fn budgeted_active_experts(e: usize, k: usize, t: u64, budget: Option<usize>) -> f64 {
+    let n = expected_active_experts(e, k, t);
+    match budget {
+        Some(b) => n.min(b as f64),
+        None => n,
+    }
+}
+
+/// Coverage fraction of a verify-expert budget at verify width `t`:
+/// `min(1, budget / N(t))` — the share of the expectedly-activated
+/// experts the budgeted verify actually runs. `None` (and any budget
+/// ≥ N(t)) is full coverage, exactly 1.
+pub fn budget_coverage(e: usize, k: usize, t: u64, budget: Option<usize>) -> f64 {
+    let n = expected_active_experts(e, k, t);
+    match budget {
+        Some(b) if (b as f64) < n => b as f64 / n,
+        _ => 1.0,
+    }
+}
+
+/// Acceptance degradation under an expert budget: α_eff =
+/// α · coverage^sensitivity. A draft token whose top-K experts fall
+/// outside the budget verifies against a degraded target distribution
+/// and is (more often) rejected; `sensitivity` calibrates how sharply
+/// acceptance tracks coverage (MoE-Spec reports mild degradation —
+/// sensitivity well below 1 — because hot experts are shared across
+/// tokens). Full coverage returns α **exactly** (the off-switch
+/// contract: `coverage = 1` short-circuits before any float op).
+pub fn budgeted_alpha(alpha: f64, coverage: f64, sensitivity: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&alpha), "alpha out of [0,1]: {alpha}");
+    assert!(sensitivity >= 0.0, "sensitivity must be non-negative");
+    if coverage >= 1.0 {
+        return alpha;
+    }
+    alpha * coverage.clamp(0.0, 1.0).powf(sensitivity)
+}
+
 /// Fraction of dispatched tokens that must cross the EP fabric under
 /// uniform routing: `(d − 1)/d` (a token's expert lives on its own rank
 /// with probability `1/d`). Zero for a single rank.

@@ -11,6 +11,7 @@ use moesd::scheduler::SchedulerConfig;
 use moesd::simulator::routing::Router;
 use moesd::simulator::ExecSim;
 use moesd::spec::synthetic::SyntheticLm;
+use moesd::spec::SdBackend;
 use moesd::testkit::{ensure, Runner};
 use moesd::theory;
 use moesd::util::rng::Rng;
@@ -593,6 +594,183 @@ fn prop_speedup_bounded_by_round_length() {
         ensure(
             s > 0.0 && s <= bound + 1e-9,
             format!("speedup {s} outside (0, {bound}]"),
+        )
+    });
+}
+
+/// The budget off-switch tentpole guarantee, forward level: `budget =
+/// None` and any budget ≥ E (the whole expert pool, so `min(N(t), b)` is
+/// a no-op) price every (model, batch, verify width, context) point
+/// **bit-for-bit** identically to the unbudgeted path — across MoE and
+/// dense targets, tile effects, uniform and ragged widths, and EP-sharded
+/// simulators. On a dense target *any* budget is transparent (there is no
+/// expert gate to cap).
+#[test]
+fn prop_budget_off_switch_prices_bit_identical() {
+    let mut runner = Runner::new("budget_off_identity");
+    runner.run(120, |g| {
+        let moe = g.usize_in(0, 1) == 0;
+        let arch = if moe {
+            presets::qwen2_57b_a14b()
+        } else {
+            presets::opt_30b()
+        };
+        let b = g.usize_in(1, 512);
+        let s = g.usize_in(1, 9);
+        let ctx = g.usize_in(16, 2048);
+        let tiles = g.usize_in(0, 1) == 1;
+        let sharded = g.usize_in(0, 1) == 1;
+        let mut sim = ExecSim::new(arch.clone(), platform_2x_gpu_a()).with_tile_effects(tiles);
+        if sharded {
+            sim = sim.with_sharding(ShardingSpec::for_arch(Topology::nvlink(4), &arch));
+        }
+        // Any budget covering the whole pool is the off switch; on a
+        // dense arch even a tiny budget must be transparent.
+        let big = match sim.moe_dims() {
+            Some((e, _)) => e + g.usize_in(0, 512),
+            None => g.usize_in(1, 512),
+        };
+        let off = sim.t_forward_tokens_budgeted(b, b * s, ctx, None);
+        let capped = sim.t_forward_tokens_budgeted(b, b * s, ctx, Some(big));
+        if off.to_bits() != capped.to_bits() {
+            return Err(format!(
+                "budget={big} diverged from None: b={b} s={s} ctx={ctx} moe={moe} \
+                 sharded={sharded}: {capped} vs {off}"
+            ));
+        }
+        // The plain (never-budgeted) entry points agree with budget=None.
+        if sim.t_forward_tokens(b, b * s, ctx).to_bits() != off.to_bits()
+            || sim.t_forward(b, s, ctx).to_bits() != off.to_bits()
+        {
+            return Err(format!(
+                "budget=None diverged from the unbudgeted path: b={b} s={s} ctx={ctx}"
+            ));
+        }
+        // Per-component breakdowns agree too (the rng-free expected path).
+        let want = sim.forward_time_tokens_budgeted(b, b * s, ctx, None, None);
+        let got = sim.forward_time_tokens_budgeted(b, b * s, ctx, None, Some(big));
+        if got != want {
+            return Err(format!(
+                "breakdown diverged under budget={big}: b={b} s={s} ctx={ctx} moe={moe}"
+            ));
+        }
+        // Ragged widths: same packed pricing, same off switch.
+        let widths: Vec<usize> = (0..b.min(16))
+            .map(|_| g.usize_in(1, 9))
+            .collect();
+        let r_off = sim.t_forward_ragged_budgeted(&widths, ctx, None);
+        let r_cap = sim.t_forward_ragged_budgeted(&widths, ctx, Some(big));
+        ensure(
+            r_off.to_bits() == r_cap.to_bits()
+                && r_off.to_bits() == sim.t_forward_ragged(&widths, ctx).to_bits(),
+            format!("ragged budget off-switch diverged (moe={moe}, sharded={sharded})"),
+        )
+    });
+}
+
+/// A sub-pool budget on a MoE target must actually change the price once
+/// the verify width activates more experts than the budget — the axis is
+/// not vacuous — and can only make the forward cheaper (weight traffic
+/// shrinks; FLOPs are unchanged).
+#[test]
+fn prop_budget_caps_are_monotone_nonvacuous() {
+    let mut runner = Runner::new("budget_monotone");
+    runner.run(80, |g| {
+        let arch = presets::qwen2_57b_a14b();
+        let sim = ExecSim::new(arch.clone(), platform_2x_gpu_a());
+        let (e, k) = sim.moe_dims().expect("qwen2-57B-A14B is MoE");
+        let b = g.usize_in(1, 64);
+        let s = g.usize_in(2, 9);
+        let ctx = g.usize_in(16, 2048);
+        let tokens = b * s;
+        let off = sim.t_forward_tokens_budgeted(b, tokens, ctx, None);
+        let mut prev = off;
+        for bud in [e * 3 / 4, e / 2, e / 4, e / 8] {
+            let t = sim.t_forward_tokens_budgeted(b, tokens, ctx, Some(bud));
+            if t > prev + 1e-15 {
+                return Err(format!(
+                    "price rose as budget tightened to {bud}: {t} > {prev} (b={b} s={s})"
+                ));
+            }
+            prev = t;
+        }
+        // Non-vacuity: once N(t) clearly exceeds the tightest budget
+        // *and* the expert FFN is still memory-bound (the cap trims
+        // weight bytes only — at very large widths the op goes
+        // compute-bound and the budget legitimately stops biting),
+        // the cap must strictly lower the price.
+        let n_unc = theory::expected_active_experts(e, k, tokens as u64);
+        let tight = e / 8;
+        if n_unc > tight as f64 + 1.0 && tokens <= 256 {
+            let t = sim.t_forward_tokens_budgeted(b, tokens, ctx, Some(tight));
+            if t >= off {
+                return Err(format!(
+                    "budget={tight} did not bite at tokens={tokens} (N(t)={n_unc:.1})"
+                ));
+            }
+        }
+        ensure(true, "")
+    });
+}
+
+/// Whole-engine budget off-switch: a backend carrying the acceptance
+/// degradation curve with the budget set to the full pool (or wider)
+/// serves byte-identically to the plain backend — same completions,
+/// rounds, and virtual clock. The curve only alters behaviour when the
+/// budget actually undercuts expected activation.
+#[test]
+fn prop_engine_verify_budget_off_switch_is_transparent() {
+    let mut runner = Runner::new("budget_engine_identity");
+    runner.run(12, |g| {
+        let alpha = g.f64_in(0.0, 1.0);
+        let gamma = g.usize_in(0, 5);
+        let n_reqs = g.usize_in(1, 8);
+        let seed = g.u64_in(0, 1 << 20);
+        let sens = g.f64_in(0.05, 1.0);
+        let big = 64 + g.usize_in(0, 64); // ≥ E for qwen2-57B-A14B
+        let run = |budgeted: bool| -> Result<(Vec<(u64, Vec<u32>)>, u64, f64), String> {
+            let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+            let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+            let mut backend = SyntheticLm::new(target, draft, alpha, seed);
+            if budgeted {
+                backend = backend.with_budget_alpha_curve(sens);
+                backend.set_verify_budget(Some(big));
+            }
+            let mut engine = Engine::new(
+                EngineConfig {
+                    gamma,
+                    ..Default::default()
+                },
+                backend,
+            );
+            for id in 0..n_reqs as u64 {
+                engine.submit(Request {
+                    id,
+                    prompt: (0..8u32).collect(),
+                    params: SamplingParams {
+                        temperature: 0.0,
+                        max_new_tokens: 12,
+                        eos_token: None,
+                    },
+                    arrival: 0.0,
+                    class: 0,
+                });
+            }
+            let mut done = engine
+                .run_to_completion(50_000)
+                .map_err(|e| format!("{e}"))?;
+            done.sort_by_key(|c| c.id);
+            Ok((
+                done.into_iter().map(|c| (c.id, c.tokens)).collect(),
+                engine.metrics.rounds,
+                engine.clock(),
+            ))
+        };
+        let plain = run(false)?;
+        let capped = run(true)?;
+        ensure(
+            plain == capped,
+            format!("whole-pool budget {big} not transparent (α={alpha}, γ={gamma}, sens={sens})"),
         )
     });
 }
