@@ -97,6 +97,12 @@ pub struct Config {
     /// from its measured acceptance-vs-budget curve. Requires `adaptive`;
     /// mutually exclusive with a static `verify_budget`.
     pub adaptive_budget: bool,
+    /// Distributed serving: run the backend as a coordinator over
+    /// `dist_workers` verify EP-rank workers plus one draft worker
+    /// (`dist::DistBackend` on the in-process loopback transport).
+    /// 0 = single-process (the default). Bit-identical output either
+    /// way — the conformance suite pins it.
+    pub dist_workers: usize,
 }
 
 impl Default for Config {
@@ -125,6 +131,7 @@ impl Default for Config {
             record_trace: String::new(),
             verify_budget: 0,
             adaptive_budget: false,
+            dist_workers: 0,
         }
     }
 }
@@ -175,6 +182,7 @@ impl Config {
                 .get("adaptive_budget")
                 .and_then(Json::as_bool)
                 .unwrap_or(false),
+            dist_workers: usize_or("dist_workers", d.dist_workers),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -242,6 +250,16 @@ impl Config {
             !(self.adaptive_budget && self.verify_budget > 0),
             "pick one budget owner: a static --verify-budget or the \
              controller's --adaptive-budget, not both"
+        );
+        anyhow::ensure!(
+            self.dist_workers <= 64,
+            "dist_workers {} unreasonably large (max 64 verify ranks)",
+            self.dist_workers
+        );
+        anyhow::ensure!(
+            !(self.dist_workers > 0 && self.mode == Mode::Hlo),
+            "distributed serving requires synthetic mode (the HLO backend \
+             serves one host; socket workers are the planned lift)"
         );
         if self.verify_budget > 0 || self.adaptive_budget {
             anyhow::ensure!(
@@ -393,6 +411,7 @@ impl Config {
             ("record_trace", self.record_trace.as_str().into()),
             ("verify_budget", self.verify_budget.into()),
             ("adaptive_budget", self.adaptive_budget.into()),
+            ("dist_workers", self.dist_workers.into()),
         ])
     }
 }
@@ -621,6 +640,37 @@ mod tests {
             verify_budget: 8,
             model: "qwen2-0.5b".into(),
             draft: "qwen2-0.5b".into(),
+            ..Config::default()
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn dist_workers_round_trips_and_validates() {
+        // Default stays single-process.
+        assert_eq!(Config::default().dist_workers, 0);
+        // Round-trips through JSON.
+        let c = Config {
+            dist_workers: 2,
+            ..Config::default()
+        };
+        c.validate().unwrap();
+        let c2 = Config::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.dist_workers, 2);
+        // Missing key falls back to the default.
+        let j = Json::parse(r#"{"gamma": 2}"#).unwrap();
+        assert_eq!(Config::from_json(&j).unwrap().dist_workers, 0);
+        // Rejections: absurd rank counts, distributed HLO serving.
+        assert!(Config {
+            dist_workers: 65,
+            ..Config::default()
+        }
+        .validate()
+        .is_err());
+        assert!(Config {
+            dist_workers: 2,
+            mode: Mode::Hlo,
             ..Config::default()
         }
         .validate()

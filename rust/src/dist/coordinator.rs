@@ -1,0 +1,853 @@
+//! Coordinator side of the distributed engine.
+//!
+//! [`DistBackend`] implements [`SdBackend`] by dispatching each backend
+//! op over a [`Transport`] to worker threads, so the *unmodified*
+//! `Engine` — scheduler, control plane, KV bookkeeping, both the
+//! lock-step and continuous pipelines — drives a distributed fleet
+//! simply by being instantiated as `Engine<DistBackend<SyntheticLm>>`.
+//! Bit-exactness with the single-process engine is by construction:
+//!
+//! * every worker holds a *full* backend replica built by the same
+//!   factory, so any cost/token computed anywhere equals the
+//!   single-process value (roles only partition which state mutations
+//!   apply where);
+//! * verify is fanned across `d` EP ranks and per-rank costs combine as
+//!   `max + fabric hop`, where the loopback fabric's hop is exactly
+//!   `0.0` — so `max` over bit-identical values plus zero preserves the
+//!   single-process clock bit-for-bit;
+//! * all RNG (rejection sampling) stays on the coordinator inside the
+//!   engine, consuming [`LogitsView`] rows that round-trip the wire
+//!   codec losslessly (`f64` travels as raw bits).
+//!
+//! Robustness is part of the op contract: every round trip carries a
+//! per-op deadline and bounded retries; worker death (detected by the
+//! endpoint liveness flag, no joins) triggers a respawn that rebuilds
+//! the replica by replaying the coordinator's op log — event-sourced
+//! recovery, valid because the backend contract is deterministic. Op ids
+//! make retries idempotent (workers replay cached responses; the
+//! coordinator discards stale duplicates).
+
+use std::collections::{HashMap, VecDeque};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::hardware::ShardingSpec;
+use crate::spec::{ProposeOut, SdBackend, SeqId, VerifyOut};
+use crate::util::json::Json;
+
+use super::transport::{
+    FaultPlan, FaultyTransport, InProcTransport, Transport, TransportError, WorkerEndpoint,
+};
+use super::wire::{Frame, StateOp, Subject};
+use super::worker::{run_worker, Role, WorkerOptions};
+
+/// Pending draft-side state ops are normally drained by the next
+/// propose; AR-only phases (γ=0) never propose, so verify flushes the
+/// queue with an explicit [`Subject::AdmitEvict`] once it exceeds this.
+const STATE_OP_FLUSH_THRESHOLD: usize = 64;
+
+/// How verify-rank costs combine across the worker fabric.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DistFabric {
+    /// In-process loopback: zero communication cost, so the distributed
+    /// clock is bit-identical to single-process. The conformance suite
+    /// pins this.
+    Loopback,
+    /// Price the rank fan-out on a real fabric via
+    /// [`ShardingSpec::comm_time`] — the simulator's topology axis and
+    /// the worker topology agree by sharing the same pricing.
+    Sharded(ShardingSpec),
+}
+
+impl DistFabric {
+    pub fn hop_cost(&self, tokens: f64) -> f64 {
+        match self {
+            DistFabric::Loopback => 0.0,
+            DistFabric::Sharded(spec) => spec.comm_time(tokens),
+        }
+    }
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    /// Verify EP ranks (worker count is `1 + verify_ranks`).
+    pub verify_ranks: usize,
+    /// Per-attempt deadline for one op round trip.
+    pub deadline: Duration,
+    /// Retries per op before escalating to a respawn.
+    pub max_retries: u32,
+    pub fabric: DistFabric,
+    /// Fault injection (tests only): wraps the transport.
+    pub faults: Option<FaultPlan>,
+    /// Fault injection (tests only): `(role, rank, ops)` — that worker
+    /// exits after executing `ops` compute ops. Respawned workers never
+    /// inherit a death sentence.
+    pub die_after: Vec<(Role, u32, u64)>,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            verify_ranks: 1,
+            deadline: Duration::from_secs(5),
+            max_retries: 2,
+            fabric: DistFabric::Loopback,
+            faults: None,
+            die_after: Vec::new(),
+        }
+    }
+}
+
+impl DistConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (1..=64).contains(&self.verify_ranks),
+            "dist: verify_ranks must be in 1..=64, got {}",
+            self.verify_ranks
+        );
+        anyhow::ensure!(
+            !self.deadline.is_zero(),
+            "dist: per-op deadline must be non-zero"
+        );
+        Ok(())
+    }
+}
+
+/// Coordinator-side view of one worker, refreshed on every op.
+#[derive(Debug, Clone)]
+pub struct WorkerHealth {
+    pub role: Role,
+    pub rank: u32,
+    pub alive: bool,
+    pub queue_depth: usize,
+    /// Compute ops dispatched to this worker (incl. replayed ones).
+    pub ops: u64,
+    pub retries: u64,
+    pub respawns: u64,
+    /// Last heartbeat nonce acknowledged (0 = never pinged).
+    pub heartbeat: u64,
+}
+
+impl WorkerHealth {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            (
+                "role",
+                match self.role {
+                    Role::Draft => "draft".into(),
+                    Role::Verify => "verify".into(),
+                },
+            ),
+            ("rank", (self.rank as usize).into()),
+            ("alive", self.alive.into()),
+            ("queue_depth", self.queue_depth.into()),
+            ("ops", (self.ops as usize).into()),
+            ("retries", (self.retries as usize).into()),
+            ("respawns", (self.respawns as usize).into()),
+            ("heartbeat", (self.heartbeat as usize).into()),
+        ])
+    }
+}
+
+/// Snapshot surfaced through `ServerStats` (the `"dist"` key).
+#[derive(Debug, Clone)]
+pub struct DistStatus {
+    pub workers: Vec<WorkerHealth>,
+    pub retries: u64,
+    pub respawns: u64,
+    pub stale_discarded: u64,
+    pub wire_errors: u64,
+}
+
+impl DistStatus {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            (
+                "workers",
+                Json::Arr(self.workers.iter().map(WorkerHealth::to_json).collect()),
+            ),
+            ("retries", (self.retries as usize).into()),
+            ("respawns", (self.respawns as usize).into()),
+            ("stale_discarded", (self.stale_discarded as usize).into()),
+            ("wire_errors", (self.wire_errors as usize).into()),
+        ])
+    }
+}
+
+/// One completed op as remembered for worker recovery. Verify ranks all
+/// receive identical subjects, so one entry covers the whole rank fan.
+struct LoggedOp {
+    to_draft: Option<Subject>,
+    to_verify: Option<Subject>,
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    retries: u64,
+    respawns: u64,
+    stale_discarded: u64,
+    wire_errors: u64,
+}
+
+/// The coordinator-resident backend. See the module docs for the
+/// design; the field order matters only for `transport`, which must
+/// drop first so worker threads see hangup and exit before anything
+/// else is torn down.
+pub struct DistBackend<B: SdBackend + Send + 'static> {
+    transport: Box<dyn Transport>,
+    cfg: DistConfig,
+    /// Local replica used for pure pricing queries (`reject_cost`,
+    /// `prefill_chunk_cost`, `vocab`) that need no worker round trip.
+    pricer: B,
+    factory: Box<dyn Fn() -> anyhow::Result<B> + Send>,
+    handles: Vec<Option<JoinHandle<()>>>,
+    health: Vec<WorkerHealth>,
+    /// Event log of every completed state-bearing op, replayed into
+    /// fresh replicas on respawn. Grows for the life of the backend;
+    /// compaction (snapshot + truncate) is a known follow-up.
+    oplog: Vec<LoggedOp>,
+    pending_draft: Vec<StateOp>,
+    pending_verify: Vec<StateOp>,
+    /// Coordinator-authoritative (target_len, draft_len) per sequence,
+    /// mirrored from worker responses.
+    lens: HashMap<SeqId, (usize, usize)>,
+    /// Frames received while waiting for a different op (e.g. responses
+    /// to the outer op arriving during a respawn replay).
+    stash: VecDeque<(usize, Frame)>,
+    next_op: u64,
+    budget: Option<usize>,
+    counters: Counters,
+}
+
+impl<B: SdBackend + Send + 'static> DistBackend<B> {
+    /// Spawn `1 + verify_ranks` worker threads, each with its own
+    /// replica from `factory`, plus a local pricing replica.
+    pub fn launch<F>(cfg: DistConfig, factory: F) -> anyhow::Result<Self>
+    where
+        F: Fn() -> anyhow::Result<B> + Send + 'static,
+    {
+        cfg.validate()?;
+        let n = 1 + cfg.verify_ranks;
+        let (inproc, endpoints) = InProcTransport::new(n);
+        let transport: Box<dyn Transport> = match &cfg.faults {
+            Some(plan) => Box::new(FaultyTransport::new(inproc, plan.clone())),
+            None => Box::new(inproc),
+        };
+        let mut handles = Vec::with_capacity(n);
+        let mut health = Vec::with_capacity(n);
+        for ep in endpoints {
+            let w = ep.index();
+            let (role, rank) = Self::slot(w);
+            let die = cfg
+                .die_after
+                .iter()
+                .find(|(r, k, _)| *r == role && *k == rank)
+                .map(|(_, _, ops)| *ops);
+            let backend = factory()?;
+            handles.push(Some(Self::spawn(role, rank, backend, ep, die)));
+            health.push(WorkerHealth {
+                role,
+                rank,
+                alive: true,
+                queue_depth: 0,
+                ops: 0,
+                retries: 0,
+                respawns: 0,
+                heartbeat: 0,
+            });
+        }
+        let pricer = factory()?;
+        Ok(DistBackend {
+            transport,
+            cfg,
+            pricer,
+            factory: Box::new(factory),
+            handles,
+            health,
+            oplog: Vec::new(),
+            pending_draft: Vec::new(),
+            pending_verify: Vec::new(),
+            lens: HashMap::new(),
+            stash: VecDeque::new(),
+            next_op: 1,
+            budget: None,
+            counters: Counters::default(),
+        })
+    }
+
+    /// Worker slot layout: 0 is the draft worker, `1..=d` are verify
+    /// EP ranks `0..d`.
+    fn slot(w: usize) -> (Role, u32) {
+        if w == 0 {
+            (Role::Draft, 0)
+        } else {
+            (Role::Verify, (w - 1) as u32)
+        }
+    }
+
+    fn spawn(
+        role: Role,
+        rank: u32,
+        backend: B,
+        ep: WorkerEndpoint,
+        die_after_ops: Option<u64>,
+    ) -> JoinHandle<()> {
+        std::thread::spawn(move || {
+            run_worker(role, rank, backend, ep, WorkerOptions { die_after_ops })
+        })
+    }
+
+    fn verify_workers(&self) -> std::ops::RangeInclusive<usize> {
+        1..=self.cfg.verify_ranks
+    }
+
+    /// Liveness ping: round-trips a heartbeat through every worker and
+    /// records the acknowledged nonce in the health table.
+    pub fn ping(&mut self) -> anyhow::Result<()> {
+        let nonce = self.next_op;
+        let targets: Vec<usize> = (0..self.transport.workers()).collect();
+        let subjects: Vec<Subject> = targets
+            .iter()
+            .map(|_| Subject::Heartbeat { nonce })
+            .collect();
+        let resps = self.rpc(&targets, subjects)?;
+        for (i, resp) in resps.into_iter().enumerate() {
+            if let Subject::HeartbeatAck { nonce } = resp {
+                self.health[targets[i]].heartbeat = nonce;
+            }
+        }
+        Ok(())
+    }
+
+    /// Health/robustness snapshot for `ServerStats`.
+    pub fn status(&self) -> DistStatus {
+        let mut workers = self.health.clone();
+        for (w, h) in workers.iter_mut().enumerate() {
+            h.alive = self.transport.is_attached(w);
+            h.queue_depth = self.transport.queue_depth(w);
+        }
+        DistStatus {
+            workers,
+            retries: self.counters.retries,
+            respawns: self.counters.respawns,
+            stale_discarded: self.counters.stale_discarded,
+            wire_errors: self.counters.wire_errors,
+        }
+    }
+
+    /// Dispatch `subjects[i]` to `targets[i]` under one op id and wait
+    /// for every response, enforcing the per-op deadline, bounded
+    /// retries, respawn-on-death, and stale-duplicate discard.
+    fn rpc(&mut self, targets: &[usize], subjects: Vec<Subject>) -> anyhow::Result<Vec<Subject>> {
+        debug_assert_eq!(targets.len(), subjects.len());
+        let op = self.next_op;
+        self.next_op += 1;
+
+        let mut results: Vec<Option<Subject>> = vec![None; targets.len()];
+        let mut attempts: Vec<u32> = vec![0; targets.len()];
+        let mut respawned: Vec<bool> = vec![false; targets.len()];
+
+        for (i, &w) in targets.iter().enumerate() {
+            self.send_or_respawn(w, op, &subjects[i], &mut respawned[i])?;
+        }
+
+        while results.iter().any(Option::is_none) {
+            // Drain the stash first: frames for this op that arrived
+            // while a respawn replay owned the receive loop.
+            let mut matched = None;
+            while let Some((w, frame)) = self.stash.pop_front() {
+                if frame.op == op {
+                    matched = Some((w, frame));
+                    break;
+                }
+                self.counters.stale_discarded += 1;
+            }
+            let (w, frame) = match matched {
+                Some(hit) => hit,
+                None => match self.transport.recv_timeout(self.cfg.deadline) {
+                    Ok(got) => got,
+                    Err(TransportError::Timeout) => {
+                        self.handle_timeout(op, targets, &subjects, &results, &mut attempts, &mut respawned)?;
+                        continue;
+                    }
+                    Err(TransportError::Wire(_)) => {
+                        self.counters.wire_errors += 1;
+                        continue;
+                    }
+                    Err(TransportError::Closed) => {
+                        anyhow::bail!("dist: coordinator upstream channel closed")
+                    }
+                },
+            };
+            let slot = targets
+                .iter()
+                .position(|&t| t == w)
+                .filter(|&i| results[i].is_none());
+            match slot {
+                Some(i) if frame.op == op => {
+                    if let Subject::ErrorResp { message } = &frame.subject {
+                        // Deterministic backend failure: remember the op
+                        // (replicas that executed it must replay it on
+                        // respawn) and surface the error — no retry.
+                        self.log_op(targets, &subjects);
+                        anyhow::bail!("dist: worker {w} failed op {op}: {message}");
+                    }
+                    results[i] = Some(frame.subject);
+                    self.health[w].ops += u64::from(subjects[i].is_compute());
+                }
+                _ => {
+                    // Wrong op id, unexpected worker, or a duplicate of
+                    // an already-satisfied slot (e.g. the late copy of a
+                    // delayed-then-retried response).
+                    self.counters.stale_discarded += 1;
+                }
+            }
+        }
+
+        self.log_op(targets, &subjects);
+        Ok(results.into_iter().map(Option::unwrap).collect())
+    }
+
+    /// One deadline expiry: for every unsatisfied target, either retry,
+    /// respawn a dead/wedged worker, or give up.
+    #[allow(clippy::too_many_arguments)]
+    fn handle_timeout(
+        &mut self,
+        op: u64,
+        targets: &[usize],
+        subjects: &[Subject],
+        results: &[Option<Subject>],
+        attempts: &mut [u32],
+        respawned: &mut [bool],
+    ) -> anyhow::Result<()> {
+        for (i, &w) in targets.iter().enumerate() {
+            if results[i].is_some() {
+                continue;
+            }
+            if !self.transport.is_attached(w) {
+                // Worker died mid-op: respawn (replaying the log), then
+                // re-dispatch this op. A second death on the same op is
+                // a hard failure.
+                anyhow::ensure!(
+                    !respawned[i],
+                    "dist: worker {w} died twice during op {op}"
+                );
+                self.respawn(w)?;
+                respawned[i] = true;
+                attempts[i] = 0;
+                self.send(w, op, &subjects[i])?;
+            } else if attempts[i] < self.cfg.max_retries {
+                attempts[i] += 1;
+                self.counters.retries += 1;
+                self.health[w].retries += 1;
+                self.send(w, op, &subjects[i])?;
+            } else if !respawned[i] {
+                // Retries exhausted against a live worker: treat it as
+                // wedged. Reattach orphans the old endpoint (its queue
+                // channel closes, so the zombie thread exits on its next
+                // recv) and the replica is rebuilt from the log.
+                self.respawn(w)?;
+                respawned[i] = true;
+                attempts[i] = 0;
+                self.send(w, op, &subjects[i])?;
+            } else {
+                anyhow::bail!(
+                    "dist: op {op} to worker {w} exceeded per-op deadline \
+                     ({:?} x {} retries, 1 respawn)",
+                    self.cfg.deadline,
+                    self.cfg.max_retries
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn send(&mut self, w: usize, op: u64, subject: &Subject) -> anyhow::Result<()> {
+        let frame = Frame {
+            op,
+            subject: subject.clone(),
+        };
+        match self.transport.send(w, &frame) {
+            Ok(()) => Ok(()),
+            Err(TransportError::Closed) => anyhow::bail!("dist: worker {w} channel closed"),
+            Err(e) => anyhow::bail!("dist: send to worker {w} failed: {e}"),
+        }
+    }
+
+    fn send_or_respawn(
+        &mut self,
+        w: usize,
+        op: u64,
+        subject: &Subject,
+        respawned: &mut bool,
+    ) -> anyhow::Result<()> {
+        let frame = Frame {
+            op,
+            subject: subject.clone(),
+        };
+        match self.transport.send(w, &frame) {
+            Ok(()) => Ok(()),
+            Err(TransportError::Closed) => {
+                self.respawn(w)?;
+                *respawned = true;
+                self.send(w, op, subject)
+            }
+            Err(e) => anyhow::bail!("dist: send to worker {w} failed: {e}"),
+        }
+    }
+
+    /// Remember a completed state-bearing op for replica recovery.
+    /// Verify ranks receive identical subjects, so the first verify
+    /// target's subject stands for the whole fan.
+    fn log_op(&mut self, targets: &[usize], subjects: &[Subject]) {
+        let mut to_draft = None;
+        let mut to_verify = None;
+        for (i, &w) in targets.iter().enumerate() {
+            let state_bearing = subjects[i].is_compute()
+                || matches!(subjects[i], Subject::AdmitEvict { .. });
+            if !state_bearing {
+                continue;
+            }
+            if w == 0 {
+                to_draft = Some(subjects[i].clone());
+            } else if to_verify.is_none() {
+                to_verify = Some(subjects[i].clone());
+            }
+        }
+        if to_draft.is_some() || to_verify.is_some() {
+            self.oplog.push(LoggedOp { to_draft, to_verify });
+        }
+    }
+
+    /// Replace a dead or wedged worker: detach the old thread handle
+    /// (never join — it may be wedged), reattach the transport slot,
+    /// build a fresh replica, and replay the op log so its state
+    /// reconverges with its peers. Determinism of the backend contract
+    /// makes the replayed replica bit-identical to the lost one.
+    fn respawn(&mut self, w: usize) -> anyhow::Result<()> {
+        self.counters.respawns += 1;
+        self.health[w].respawns += 1;
+        drop(self.handles[w].take());
+        let ep = self.transport.reattach(w);
+        let (role, rank) = Self::slot(w);
+        let backend = (self.factory)()?;
+        self.handles[w] = Some(Self::spawn(role, rank, backend, ep, None));
+        self.replay(w, role)
+    }
+
+    fn replay(&mut self, w: usize, role: Role) -> anyhow::Result<()> {
+        // Clone the routed subjects up front: replay sends through the
+        // same transport and must not alias the log.
+        let subjects: Vec<Subject> = self
+            .oplog
+            .iter()
+            .filter_map(|entry| match role {
+                Role::Draft => entry.to_draft.clone(),
+                Role::Verify => entry.to_verify.clone(),
+            })
+            .collect();
+        for subject in subjects {
+            let op = self.next_op;
+            self.next_op += 1;
+            self.send(w, op, &subject)?;
+            self.health[w].ops += u64::from(subject.is_compute());
+            // Await this replay step's response; stash anything else
+            // (e.g. outer-op responses from other workers) for the
+            // interrupted rpc to consume.
+            let mut attempts = 0u32;
+            loop {
+                match self.transport.recv_timeout(self.cfg.deadline) {
+                    Ok((from, frame)) if from == w && frame.op == op => {
+                        // ErrorResp included: if the original op failed
+                        // deterministically, the replay fails the same
+                        // way and state still reconverges.
+                        break;
+                    }
+                    Ok(other) => {
+                        self.stash.push_back(other);
+                    }
+                    Err(TransportError::Timeout) => {
+                        anyhow::ensure!(
+                            attempts < self.cfg.max_retries,
+                            "dist: replay op {op} to worker {w} timed out"
+                        );
+                        attempts += 1;
+                        self.counters.retries += 1;
+                        self.send(w, op, &subject)?;
+                    }
+                    Err(TransportError::Wire(_)) => {
+                        self.counters.wire_errors += 1;
+                    }
+                    Err(TransportError::Closed) => {
+                        anyhow::bail!("dist: upstream closed during replay")
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn drain_draft_ops(&mut self) -> Vec<StateOp> {
+        std::mem::take(&mut self.pending_draft)
+    }
+
+    fn drain_verify_ops(&mut self) -> Vec<StateOp> {
+        std::mem::take(&mut self.pending_verify)
+    }
+
+    fn lens_mut(&mut self, seq: SeqId) -> &mut (usize, usize) {
+        self.lens.get_mut(&seq).expect("unknown sequence")
+    }
+}
+
+impl<B: SdBackend + Send + 'static> SdBackend for DistBackend<B> {
+    fn vocab(&self) -> usize {
+        self.pricer.vocab()
+    }
+
+    fn prefill(&mut self, batch: &[(SeqId, Vec<u32>)]) -> anyhow::Result<f64> {
+        // Every replica needs the new sequences registered; piggyback
+        // each role's pending state ops on its copy.
+        let draft_subject = Subject::PrefillChunk {
+            state_ops: self.drain_draft_ops(),
+            batch: batch.to_vec(),
+        };
+        let verify_subject = Subject::PrefillChunk {
+            state_ops: self.drain_verify_ops(),
+            batch: batch.to_vec(),
+        };
+        let mut targets = vec![0usize];
+        let mut subjects = vec![draft_subject];
+        for w in self.verify_workers() {
+            targets.push(w);
+            subjects.push(verify_subject.clone());
+        }
+        let resps = self.rpc(&targets, subjects)?;
+        let mut cost = f64::NEG_INFINITY;
+        let mut lens_from_verify: Option<(Vec<u64>, Vec<u64>)> = None;
+        let mut draft_lens_from_draft: Option<Vec<u64>> = None;
+        for (i, resp) in resps.into_iter().enumerate() {
+            match resp {
+                Subject::PrefillDone {
+                    target_lens,
+                    draft_lens,
+                    cost: c,
+                } => {
+                    cost = cost.max(c);
+                    if targets[i] == 0 {
+                        draft_lens_from_draft = Some(draft_lens);
+                    } else if lens_from_verify.is_none() {
+                        lens_from_verify = Some((target_lens, draft_lens));
+                    }
+                }
+                other => anyhow::bail!("dist: unexpected prefill response {other:?}"),
+            }
+        }
+        let (target_lens, _) =
+            lens_from_verify.ok_or_else(|| anyhow::anyhow!("dist: no verify prefill response"))?;
+        let draft_lens = draft_lens_from_draft
+            .ok_or_else(|| anyhow::anyhow!("dist: no draft prefill response"))?;
+        for (i, (seq, _)) in batch.iter().enumerate() {
+            self.lens
+                .insert(*seq, (target_lens[i] as usize, draft_lens[i] as usize));
+        }
+        Ok(cost)
+    }
+
+    fn prefill_chunk_cost(&self, tokens: usize, ctx: usize) -> f64 {
+        self.pricer.prefill_chunk_cost(tokens, ctx)
+    }
+
+    fn prefill_chunks_cost(&self, parts: &[(usize, usize)]) -> f64 {
+        self.pricer.prefill_chunks_cost(parts)
+    }
+
+    fn propose(
+        &mut self,
+        seqs: &[SeqId],
+        pending: &[Vec<u32>],
+        gammas: &[usize],
+        temps: &[f64],
+        seed: u64,
+    ) -> anyhow::Result<ProposeOut> {
+        let subject = Subject::ProposeReq {
+            state_ops: self.drain_draft_ops(),
+            seqs: seqs.to_vec(),
+            pending: pending.to_vec(),
+            gammas: gammas.iter().map(|&g| g as u32).collect(),
+            temps: temps.to_vec(),
+            seed,
+        };
+        let resps = self.rpc(&[0], vec![subject])?;
+        match resps.into_iter().next() {
+            Some(Subject::ProposeResp {
+                tokens,
+                probs,
+                draft_lens,
+                cost,
+            }) => {
+                for (i, seq) in seqs.iter().enumerate() {
+                    self.lens_mut(*seq).1 = draft_lens[i] as usize;
+                }
+                Ok(ProposeOut {
+                    tokens,
+                    probs,
+                    cost,
+                })
+            }
+            other => anyhow::bail!("dist: unexpected propose response {other:?}"),
+        }
+    }
+
+    fn verify(
+        &mut self,
+        seqs: &[SeqId],
+        feed: &[u32],
+        drafts: &[Vec<u32>],
+        temps: &[f64],
+    ) -> anyhow::Result<VerifyOut> {
+        // AR-only phases never propose, so the draft-side queue is
+        // flushed here once it builds up (stays bounded either way).
+        if self.pending_draft.len() >= STATE_OP_FLUSH_THRESHOLD {
+            let subject = Subject::AdmitEvict {
+                state_ops: self.drain_draft_ops(),
+            };
+            self.rpc(&[0], vec![subject])?;
+        }
+        let subject = Subject::VerifyReq {
+            state_ops: self.drain_verify_ops(),
+            seqs: seqs.to_vec(),
+            feed: feed.to_vec(),
+            drafts: drafts.to_vec(),
+            temps: temps.to_vec(),
+            budget: self.budget.map(|b| b as u64),
+        };
+        let targets: Vec<usize> = self.verify_workers().collect();
+        let subjects: Vec<Subject> = targets.iter().map(|_| subject.clone()).collect();
+        let resps = self.rpc(&targets, subjects)?;
+        // Per-rank costs combine as max (ranks run concurrently) plus
+        // the fabric hop for the fan-out of this round's token payload.
+        // Replicas are bit-identical so max() returns the exact
+        // single-process cost; Loopback's hop is exactly 0.0.
+        let mut out: Option<VerifyOut> = None;
+        let mut max_cost = f64::NEG_INFINITY;
+        for resp in resps {
+            match resp {
+                Subject::VerifyResp {
+                    probs,
+                    target_lens,
+                    cost,
+                } => {
+                    max_cost = max_cost.max(cost);
+                    if out.is_none() {
+                        for (i, seq) in seqs.iter().enumerate() {
+                            self.lens_mut(*seq).0 = target_lens[i] as usize;
+                        }
+                        out = Some(VerifyOut { probs, cost });
+                    }
+                }
+                other => anyhow::bail!("dist: unexpected verify response {other:?}"),
+            }
+        }
+        let mut out = out.ok_or_else(|| anyhow::anyhow!("dist: no verify response"))?;
+        let round_tokens: f64 = drafts.iter().map(|d| (d.len() + 1) as f64).sum();
+        out.cost = max_cost + self.cfg.fabric.hop_cost(round_tokens);
+        Ok(out)
+    }
+
+    fn rollback_target(&mut self, seq: SeqId, len: usize) {
+        if let Some(l) = self.lens.get_mut(&seq) {
+            l.0 = len;
+        }
+        self.pending_verify.push(StateOp::RollbackTarget {
+            seq,
+            len: len as u64,
+        });
+        // The draft replica never runs verify, so its committed base
+        // only moves when the coordinator pushes it.
+        self.pending_draft.push(StateOp::SyncBase {
+            seq,
+            len: len as u64,
+        });
+    }
+
+    fn rollback_draft(&mut self, seq: SeqId, len: usize) {
+        if let Some(l) = self.lens.get_mut(&seq) {
+            l.1 = l.1.min(len);
+        }
+        self.pending_draft.push(StateOp::RollbackDraft {
+            seq,
+            len: len as u64,
+        });
+    }
+
+    fn target_len(&self, seq: SeqId) -> usize {
+        self.lens.get(&seq).expect("unknown sequence").0
+    }
+
+    fn draft_len(&self, seq: SeqId) -> usize {
+        self.lens.get(&seq).expect("unknown sequence").1
+    }
+
+    fn release(&mut self, seq: SeqId) {
+        self.lens.remove(&seq);
+        self.pending_draft.push(StateOp::Release { seq });
+        self.pending_verify.push(StateOp::Release { seq });
+    }
+
+    fn reject_cost(&self, gammas: &[usize]) -> f64 {
+        self.pricer.reject_cost(gammas)
+    }
+
+    fn set_verify_budget(&mut self, budget: Option<usize>) {
+        self.budget = budget;
+        self.pricer.set_verify_budget(budget);
+    }
+
+    fn verify_budget(&self) -> Option<usize> {
+        self.budget
+    }
+
+    fn dist_status(&self) -> Option<DistStatus> {
+        Some(self.status())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::Topology;
+
+    #[test]
+    fn loopback_hop_is_exactly_zero() {
+        assert_eq!(DistFabric::Loopback.hop_cost(1e9).to_bits(), 0.0f64.to_bits());
+    }
+
+    #[test]
+    fn sharded_hop_matches_comm_time() {
+        let spec = ShardingSpec::new(Topology::nvlink(4));
+        let fabric = DistFabric::Sharded(spec.clone());
+        for tokens in [1.0, 16.0, 4096.0] {
+            assert_eq!(
+                fabric.hop_cost(tokens).to_bits(),
+                spec.comm_time(tokens).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(DistConfig::default().validate().is_ok());
+        let bad = DistConfig {
+            verify_ranks: 0,
+            ..DistConfig::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = DistConfig {
+            verify_ranks: 65,
+            ..DistConfig::default()
+        };
+        assert!(bad.validate().is_err());
+    }
+}

@@ -1,0 +1,39 @@
+//! Message-passing coordinator/worker distributed engine.
+//!
+//! The structural split the ROADMAP's rack-scale items build on: the
+//! coordinator keeps the scheduler, control plane, KV bookkeeping, and
+//! all rejection-sampling RNG; draft and verify work executes on worker
+//! threads behind a [`transport::Transport`]. The protocol
+//! ([`wire::Frame`]/[`wire::Subject`]) is length-prefix encoded even
+//! in-process, so lifting to sockets changes the transport impl and
+//! nothing else.
+//!
+//! Module map:
+//!
+//! | module | what lives there |
+//! |---|---|
+//! | [`wire`] | frame/subject enums, hand-rolled codec, typed `WireError` |
+//! | [`transport`] | `Transport` trait, in-process channels, fault injection |
+//! | [`worker`] | worker thread loop: role-filtered state ops, idempotent replay |
+//! | [`coordinator`] | `DistBackend` (an `SdBackend`), deadlines/retry/respawn, health |
+//!
+//! Entry point: [`DistBackend::launch`] with a backend factory, then
+//! hand the result to `Engine::new` or `Server::start_with_opts` like
+//! any other backend. `--dist-workers N` on `moesd serve` does exactly
+//! that with `N` verify ranks.
+//!
+//! The conformance suite (`rust/tests/prop_distributed.rs`) pins the
+//! load-bearing property: a distributed engine on the loopback fabric
+//! is bit-for-bit the single-process engine — same tokens, same clock,
+//! same metrics — for any worker count, under faults included
+//! (`rust/tests/fault_injection.rs`).
+
+pub mod coordinator;
+pub mod transport;
+pub mod wire;
+pub mod worker;
+
+pub use coordinator::{DistBackend, DistConfig, DistFabric, DistStatus, WorkerHealth};
+pub use transport::{FaultPlan, FaultyTransport, InProcTransport, Transport, TransportError};
+pub use wire::{Frame, StateOp, Subject, WireError, WorkerStats};
+pub use worker::{Role, WorkerOptions};

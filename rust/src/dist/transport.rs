@@ -1,0 +1,407 @@
+//! Transports carry [`Frame`]s between the coordinator and its workers.
+//!
+//! The coordinator is written against the [`Transport`] trait so the
+//! in-process channel implementation here and a future socket
+//! implementation are interchangeable. Even in-process, every frame is
+//! round-tripped through the wire codec — the channels carry encoded
+//! bytes, not `Frame` values — so the codec is exercised on every op and
+//! nothing can accidentally depend on sharing memory with a worker.
+//!
+//! [`FaultyTransport`] wraps any transport and injects deterministic,
+//! counter-based faults (dropped requests, dropped/delayed responses)
+//! for the fault-injection test suite. Faults are counted per compute
+//! frame, not wall-clock timed, so failing runs replay exactly.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::wire::{Frame, WireError};
+
+/// Transport-level failure, distinct from protocol-level errors carried
+/// inside frames ([`super::wire::Subject::ErrorResp`]).
+#[derive(Debug)]
+pub enum TransportError {
+    /// The peer's channel is gone (worker thread exited or panicked).
+    Closed,
+    /// No frame arrived within the deadline.
+    Timeout,
+    /// A frame failed to decode.
+    Wire(WireError),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Closed => write!(f, "transport closed"),
+            TransportError::Timeout => write!(f, "transport timeout"),
+            TransportError::Wire(e) => write!(f, "wire error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Coordinator-side view of the worker fabric.
+///
+/// `send` is addressed (coordinator → worker `w`); `recv_timeout` drains
+/// a single shared upstream queue and reports which worker a frame came
+/// from, because responses from fanned-out ranks arrive in any order.
+pub trait Transport: Send {
+    /// Send a frame to worker `w`. `Closed` means the worker is dead.
+    fn send(&mut self, w: usize, frame: &Frame) -> Result<(), TransportError>;
+    /// Wait up to `timeout` for any worker's next frame.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<(usize, Frame), TransportError>;
+    /// Number of worker slots (fixed at construction).
+    fn workers(&self) -> usize;
+    /// Frames sent to worker `w` not yet consumed by it.
+    fn queue_depth(&self, w: usize) -> usize;
+    /// Whether worker `w`'s endpoint is still held by a live thread.
+    fn is_attached(&self, w: usize) -> bool;
+    /// Replace worker `w`'s channel pair, returning a fresh endpoint for
+    /// a respawned worker thread. Frames queued to the dead worker are
+    /// dropped (the coordinator re-drives state via its op log).
+    fn reattach(&mut self, w: usize) -> WorkerEndpoint;
+}
+
+struct Link {
+    tx: Sender<Vec<u8>>,
+    depth: Arc<AtomicUsize>,
+    alive: Arc<AtomicBool>,
+}
+
+/// Channel-pair transport: one downstream byte channel per worker, one
+/// shared upstream channel. The coordinator keeps an upstream sender
+/// clone so `recv_timeout` reports `Timeout` (not `Closed`) even when
+/// every worker has exited.
+pub struct InProcTransport {
+    links: Vec<Link>,
+    up_rx: Receiver<(usize, Vec<u8>)>,
+    up_tx: Sender<(usize, Vec<u8>)>,
+}
+
+/// Worker-side half of one link. Dropping it (worker return *or* panic)
+/// flips the shared liveness flag, which is how the coordinator detects
+/// death without joining the thread.
+pub struct WorkerEndpoint {
+    idx: usize,
+    rx: Receiver<Vec<u8>>,
+    up: Sender<(usize, Vec<u8>)>,
+    depth: Arc<AtomicUsize>,
+    alive: Arc<AtomicBool>,
+}
+
+impl InProcTransport {
+    /// Build a transport with `n` worker slots, returning the worker
+    /// endpoints to hand to worker threads (index order).
+    pub fn new(n: usize) -> (Self, Vec<WorkerEndpoint>) {
+        let (up_tx, up_rx) = channel();
+        let mut links = Vec::with_capacity(n);
+        let mut endpoints = Vec::with_capacity(n);
+        for idx in 0..n {
+            let (tx, rx) = channel();
+            let depth = Arc::new(AtomicUsize::new(0));
+            let alive = Arc::new(AtomicBool::new(true));
+            links.push(Link {
+                tx,
+                depth: Arc::clone(&depth),
+                alive: Arc::clone(&alive),
+            });
+            endpoints.push(WorkerEndpoint {
+                idx,
+                rx,
+                up: up_tx.clone(),
+                depth,
+                alive,
+            });
+        }
+        (
+            InProcTransport {
+                links,
+                up_rx,
+                up_tx,
+            },
+            endpoints,
+        )
+    }
+}
+
+impl Transport for InProcTransport {
+    fn send(&mut self, w: usize, frame: &Frame) -> Result<(), TransportError> {
+        let link = &self.links[w];
+        if !link.alive.load(Ordering::SeqCst) {
+            return Err(TransportError::Closed);
+        }
+        let bytes = frame.encode();
+        link.depth.fetch_add(1, Ordering::SeqCst);
+        link.tx.send(bytes).map_err(|_| {
+            link.depth.fetch_sub(1, Ordering::SeqCst);
+            TransportError::Closed
+        })
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<(usize, Frame), TransportError> {
+        match self.up_rx.recv_timeout(timeout) {
+            Ok((w, bytes)) => Frame::decode(&bytes)
+                .map(|f| (w, f))
+                .map_err(TransportError::Wire),
+            Err(RecvTimeoutError::Timeout) => Err(TransportError::Timeout),
+            // Unreachable while self.up_tx is held, but map it anyway.
+            Err(RecvTimeoutError::Disconnected) => Err(TransportError::Closed),
+        }
+    }
+
+    fn workers(&self) -> usize {
+        self.links.len()
+    }
+
+    fn queue_depth(&self, w: usize) -> usize {
+        self.links[w].depth.load(Ordering::SeqCst)
+    }
+
+    fn is_attached(&self, w: usize) -> bool {
+        self.links[w].alive.load(Ordering::SeqCst)
+    }
+
+    fn reattach(&mut self, w: usize) -> WorkerEndpoint {
+        let (tx, rx) = channel();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let alive = Arc::new(AtomicBool::new(true));
+        self.links[w] = Link {
+            tx,
+            depth: Arc::clone(&depth),
+            alive: Arc::clone(&alive),
+        };
+        WorkerEndpoint {
+            idx: w,
+            rx,
+            up: self.up_tx.clone(),
+            depth,
+            alive,
+        }
+    }
+}
+
+impl WorkerEndpoint {
+    /// This endpoint's worker index (what the coordinator addresses).
+    pub fn index(&self) -> usize {
+        self.idx
+    }
+
+    /// Block for the next decodable frame. `None` means the coordinator
+    /// hung up — the worker should exit. Undecodable frames are skipped
+    /// (the coordinator's retry path re-sends; the worker cannot reply
+    /// to a frame it cannot parse).
+    pub fn recv(&self) -> Option<Frame> {
+        loop {
+            let bytes = self.rx.recv().ok()?;
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            if let Ok(frame) = Frame::decode(&bytes) {
+                return Some(frame);
+            }
+        }
+    }
+
+    /// Send a frame upstream. Returns false if the coordinator is gone.
+    pub fn send(&self, frame: &Frame) -> bool {
+        self.up.send((self.idx, frame.encode())).is_ok()
+    }
+}
+
+impl Drop for WorkerEndpoint {
+    fn drop(&mut self) {
+        // Runs on worker return and on worker panic alike: the liveness
+        // flag is the coordinator's death signal.
+        self.alive.store(false, Ordering::SeqCst);
+    }
+}
+
+/// Deterministic fault plan for [`FaultyTransport`]. Counters tick once
+/// per *compute* frame (propose/verify/prefill) so control traffic and
+/// retransmits of dropped frames don't shift the schedule chaotically;
+/// `None` disables that fault.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Silently drop every Nth compute request (worker never sees it).
+    pub drop_req_every: Option<u64>,
+    /// Drop every Nth compute response (coordinator times out; the
+    /// worker has executed and cached the op, so the retry exercises
+    /// the idempotency path).
+    pub drop_resp_every: Option<u64>,
+    /// Delay every Nth compute response past the deadline: the
+    /// coordinator times out and retries, then the held response is
+    /// delivered *before* the retry's — exercising late-duplicate
+    /// discard on whichever copy loses the race.
+    pub delay_resp_every: Option<u64>,
+}
+
+/// Wraps a transport and injects the faults described by a [`FaultPlan`].
+pub struct FaultyTransport<T: Transport> {
+    inner: T,
+    plan: FaultPlan,
+    sent_reqs: u64,
+    recvd: u64,
+    held: VecDeque<(usize, Frame)>,
+}
+
+impl<T: Transport> FaultyTransport<T> {
+    pub fn new(inner: T, plan: FaultPlan) -> Self {
+        FaultyTransport {
+            inner,
+            plan,
+            sent_reqs: 0,
+            recvd: 0,
+            held: VecDeque::new(),
+        }
+    }
+
+    fn nth(count: u64, every: Option<u64>) -> bool {
+        matches!(every, Some(n) if n > 0 && count % n == 0)
+    }
+}
+
+impl<T: Transport> Transport for FaultyTransport<T> {
+    fn send(&mut self, w: usize, frame: &Frame) -> Result<(), TransportError> {
+        if frame.subject.is_compute() {
+            self.sent_reqs += 1;
+            if Self::nth(self.sent_reqs, self.plan.drop_req_every) {
+                // Lost on the wire: report success, deliver nothing.
+                return Ok(());
+            }
+        }
+        self.inner.send(w, frame)
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<(usize, Frame), TransportError> {
+        // Held (delayed) responses are delivered ahead of fresh traffic:
+        // by the time the coordinator listens again it has already timed
+        // out and retried, so this frame arrives as a late duplicate.
+        if let Some(held) = self.held.pop_front() {
+            return Ok(held);
+        }
+        let (w, frame) = self.inner.recv_timeout(timeout)?;
+        // Response-side faults key off compute responses only; acks and
+        // heartbeats pass through untouched.
+        let computeish = matches!(
+            frame.subject,
+            super::wire::Subject::ProposeResp { .. }
+                | super::wire::Subject::VerifyResp { .. }
+                | super::wire::Subject::PrefillDone { .. }
+                | super::wire::Subject::ErrorResp { .. }
+        );
+        if computeish {
+            self.recvd += 1;
+            if Self::nth(self.recvd, self.plan.drop_resp_every) {
+                return Err(TransportError::Timeout);
+            }
+            if Self::nth(self.recvd, self.plan.delay_resp_every) {
+                self.held.push_back((w, frame));
+                return Err(TransportError::Timeout);
+            }
+        }
+        Ok((w, frame))
+    }
+
+    fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+
+    fn queue_depth(&self, w: usize) -> usize {
+        self.inner.queue_depth(w)
+    }
+
+    fn is_attached(&self, w: usize) -> bool {
+        self.inner.is_attached(w)
+    }
+
+    fn reattach(&mut self, w: usize) -> WorkerEndpoint {
+        self.inner.reattach(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::wire::Subject;
+    use super::*;
+
+    #[test]
+    fn frames_roundtrip_through_channels() {
+        let (mut t, eps) = InProcTransport::new(2);
+        let f = Frame {
+            op: 5,
+            subject: Subject::Heartbeat { nonce: 1 },
+        };
+        t.send(1, &f).unwrap();
+        assert_eq!(t.queue_depth(1), 1);
+        let got = eps[1].recv().unwrap();
+        assert_eq!(got, f);
+        assert_eq!(t.queue_depth(1), 0);
+        assert!(eps[1].send(&Frame {
+            op: 5,
+            subject: Subject::HeartbeatAck { nonce: 1 },
+        }));
+        let (w, resp) = t.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(w, 1);
+        assert!(matches!(resp.subject, Subject::HeartbeatAck { nonce: 1 }));
+    }
+
+    #[test]
+    fn dropping_endpoint_detaches() {
+        let (mut t, eps) = InProcTransport::new(1);
+        assert!(t.is_attached(0));
+        drop(eps);
+        assert!(!t.is_attached(0));
+        let err = t
+            .send(
+                0,
+                &Frame {
+                    op: 1,
+                    subject: Subject::StatsPull,
+                },
+            )
+            .unwrap_err();
+        assert!(matches!(err, TransportError::Closed));
+        // Reattach yields a live endpoint on the same slot.
+        let ep = t.reattach(0);
+        assert!(t.is_attached(0));
+        assert_eq!(ep.index(), 0);
+    }
+
+    #[test]
+    fn recv_times_out_rather_than_closing() {
+        let (mut t, _eps) = InProcTransport::new(1);
+        let err = t.recv_timeout(Duration::from_millis(10)).unwrap_err();
+        assert!(matches!(err, TransportError::Timeout));
+    }
+
+    #[test]
+    fn faulty_transport_drops_every_nth_request() {
+        let (inner, eps) = InProcTransport::new(1);
+        let mut t = FaultyTransport::new(
+            inner,
+            FaultPlan {
+                drop_req_every: Some(2),
+                ..FaultPlan::default()
+            },
+        );
+        let compute = Frame {
+            op: 1,
+            subject: Subject::ProposeReq {
+                state_ops: vec![],
+                seqs: vec![],
+                pending: vec![],
+                gammas: vec![],
+                temps: vec![],
+                seed: 0,
+            },
+        };
+        for _ in 0..4 {
+            t.send(0, &compute).unwrap();
+        }
+        // 1st and 3rd delivered, 2nd and 4th dropped.
+        assert_eq!(t.queue_depth(0), 2);
+        drop(eps);
+    }
+}

@@ -1,0 +1,805 @@
+//! Wire protocol for the coordinator/worker engine.
+//!
+//! Every message between the coordinator and a worker is a [`Frame`]: an
+//! op id (the coordinator's idempotency key — retransmits reuse it, the
+//! response echoes it) plus a [`Subject`] payload. Frames cross the
+//! transport as length-prefixed bytes produced by a hand-rolled codec in
+//! the `benchlib::Json` spirit — no serde, no external dependency — so
+//! the exact same encoding lifts from the in-process channel transport to
+//! sockets unchanged.
+//!
+//! ## Encoding
+//!
+//! ```text
+//! frame    := len:u32le body              (len = body length in bytes)
+//! body     := version:u8 tag:u8 op:u64le payload
+//! u32/u64  := little-endian
+//! f64      := IEEE-754 bits as u64le      (bit-exact round-trip)
+//! bool     := u8 (0|1)
+//! option T := u8 (0|1) [T]
+//! vec T    := count:u32le T*
+//! string   := len:u32le utf-8 bytes
+//! ```
+//!
+//! Malformed input decodes to a typed [`WireError`] — never a panic: the
+//! decoder bounds-checks every read ([`WireError::Truncated`]), rejects
+//! frames whose declared length exceeds [`MAX_FRAME_BYTES`]
+//! ([`WireError::Oversized`]) before allocating, and rejects unknown
+//! tags/versions and non-canonical scalars. The golden-byte tests in
+//! `rust/tests/codec_wire.rs` pin one encoding per variant so the format
+//! cannot drift silently between releases (a socket peer from an older
+//! build must either interoperate or fail loudly on the version byte).
+
+use crate::sampling::LogitsView;
+
+/// Protocol version stamped into every frame body.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Hard ceiling on one frame's body size. Propose/verify frames carry
+/// per-token rows, so real frames sit in the kilobytes; anything claiming
+/// more than this is a corrupt or hostile length prefix and is rejected
+/// before any allocation happens.
+pub const MAX_FRAME_BYTES: usize = 16 << 20;
+
+/// Typed codec failure. Every decoder path returns one of these; the
+/// codec never panics on untrusted bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// The buffer ended before a read completed.
+    Truncated { need: usize, have: usize },
+    /// The length prefix claims a body larger than [`MAX_FRAME_BYTES`].
+    Oversized { len: usize, max: usize },
+    /// Version byte from an incompatible peer.
+    BadVersion(u8),
+    /// Unknown discriminant for the named enum.
+    BadTag { what: &'static str, tag: u8 },
+    /// Bytes left over after a complete decode (framing desync).
+    Trailing { extra: usize },
+    /// A scalar failed validation (non-0/1 bool, invalid UTF-8, …).
+    BadValue(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            WireError::Oversized { len, max } => {
+                write!(f, "oversized frame: {len} bytes exceeds cap {max}")
+            }
+            WireError::BadVersion(v) => write!(f, "unsupported wire version {v}"),
+            WireError::BadTag { what, tag } => write!(f, "unknown {what} tag {tag}"),
+            WireError::Trailing { extra } => write!(f, "{extra} trailing bytes after frame"),
+            WireError::BadValue(what) => write!(f, "malformed {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+type Result<T> = std::result::Result<T, WireError>;
+
+/// A state mutation the coordinator forwards to a worker ahead of its
+/// next op. Rollbacks and releases are cheap bookkeeping, so they ride as
+/// a prefix on the next compute frame instead of paying a round trip
+/// each ([`Subject::AdmitEvict`] carries them standalone when an explicit
+/// flush is needed). All four are idempotent — a retransmitted frame may
+/// re-apply them against unchanged state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StateOp {
+    /// Roll the target KV back to `len` tokens (verify workers).
+    RollbackTarget { seq: u64, len: u64 },
+    /// Clamp the draft KV to at most `len` tokens (draft worker).
+    RollbackDraft { seq: u64, len: u64 },
+    /// Sync the committed-stream base to `len` (draft worker: its local
+    /// replica never runs verify, so the coordinator pushes the
+    /// authoritative base its next propose must continue from).
+    SyncBase { seq: u64, len: u64 },
+    /// Drop all state for a finished sequence (both roles).
+    Release { seq: u64 },
+}
+
+/// Per-worker stats returned by [`Subject::StatsPull`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerStats {
+    /// 0 = draft, 1 = verify.
+    pub role: u8,
+    /// Verify EP rank (0 for the draft worker).
+    pub rank: u32,
+    pub vocab: u64,
+    /// Compute ops (propose/verify/prefill) executed since spawn.
+    pub ops_executed: u64,
+    /// Sequences currently registered on the worker's backend.
+    pub seqs_live: u64,
+}
+
+/// The message payload. Requests flow coordinator → worker; each has a
+/// paired response flowing back with the same op id.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Subject {
+    /// Draft worker: apply `state_ops`, then propose `gammas[i]` tokens
+    /// per sequence (the [`crate::spec::SdBackend::propose`] contract).
+    ProposeReq {
+        state_ops: Vec<StateOp>,
+        seqs: Vec<u64>,
+        pending: Vec<Vec<u32>>,
+        gammas: Vec<u32>,
+        temps: Vec<f64>,
+        seed: u64,
+    },
+    /// `draft_lens[i]` is the worker's post-op draft context length for
+    /// `seqs[i]` — the authoritative value the coordinator mirrors.
+    ProposeResp {
+        tokens: Vec<Vec<u32>>,
+        probs: Vec<Vec<LogitsView>>,
+        draft_lens: Vec<u64>,
+        cost: f64,
+    },
+    /// Verify workers (broadcast to every EP rank): apply `state_ops`,
+    /// set the verify-expert `budget`, then run the target forward.
+    VerifyReq {
+        state_ops: Vec<StateOp>,
+        seqs: Vec<u64>,
+        feed: Vec<u32>,
+        drafts: Vec<Vec<u32>>,
+        temps: Vec<f64>,
+        budget: Option<u64>,
+    },
+    VerifyResp {
+        probs: Vec<Vec<LogitsView>>,
+        target_lens: Vec<u64>,
+        cost: f64,
+    },
+    /// Prompt registration, broadcast to every worker (each replica needs
+    /// the sequence). Named after the chunked-prefill op it will carry
+    /// when the continuous pipeline splits prompts across frames.
+    PrefillChunk {
+        state_ops: Vec<StateOp>,
+        batch: Vec<(u64, Vec<u32>)>,
+    },
+    PrefillDone {
+        target_lens: Vec<u64>,
+        draft_lens: Vec<u64>,
+        cost: f64,
+    },
+    /// Standalone state-op flush (admissions/evictions between rounds
+    /// with no compute frame to ride on).
+    AdmitEvict { state_ops: Vec<StateOp> },
+    AdmitEvictAck,
+    StatsPull,
+    StatsResp(WorkerStats),
+    /// Liveness ping; the ack echoes the nonce.
+    Heartbeat { nonce: u64 },
+    HeartbeatAck { nonce: u64 },
+    /// The worker's backend rejected the op (deterministic failure — the
+    /// coordinator propagates it instead of retrying).
+    ErrorResp { message: String },
+}
+
+impl Subject {
+    fn tag(&self) -> u8 {
+        match self {
+            Subject::ProposeReq { .. } => 0,
+            Subject::ProposeResp { .. } => 1,
+            Subject::VerifyReq { .. } => 2,
+            Subject::VerifyResp { .. } => 3,
+            Subject::PrefillChunk { .. } => 4,
+            Subject::PrefillDone { .. } => 5,
+            Subject::AdmitEvict { .. } => 6,
+            Subject::AdmitEvictAck => 7,
+            Subject::StatsPull => 8,
+            Subject::StatsResp(_) => 9,
+            Subject::Heartbeat { .. } => 10,
+            Subject::HeartbeatAck { .. } => 11,
+            Subject::ErrorResp { .. } => 12,
+        }
+    }
+
+    /// Compute ops mutate worker model state and get retried/replayed;
+    /// everything else is control traffic.
+    pub fn is_compute(&self) -> bool {
+        matches!(
+            self,
+            Subject::ProposeReq { .. } | Subject::VerifyReq { .. } | Subject::PrefillChunk { .. }
+        )
+    }
+}
+
+/// One wire message: op id + payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    /// Coordinator-assigned, strictly increasing per coordinator.
+    /// Responses echo the request's op; a retransmit reuses it, which is
+    /// how workers deduplicate and coordinators discard stale replies.
+    pub op: u64,
+    pub subject: Subject,
+}
+
+// --- encoder -------------------------------------------------------------
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn count(&mut self, n: usize) {
+        debug_assert!(n <= u32::MAX as usize);
+        self.u32(n as u32);
+    }
+    fn str(&mut self, s: &str) {
+        self.count(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn vec_u32(&mut self, v: &[u32]) {
+        self.count(v.len());
+        for &x in v {
+            self.u32(x);
+        }
+    }
+    fn vec_u64(&mut self, v: &[u64]) {
+        self.count(v.len());
+        for &x in v {
+            self.u64(x);
+        }
+    }
+    fn vec_f64(&mut self, v: &[f64]) {
+        self.count(v.len());
+        for &x in v {
+            self.f64(x);
+        }
+    }
+    fn vec_vec_u32(&mut self, v: &[Vec<u32>]) {
+        self.count(v.len());
+        for row in v {
+            self.vec_u32(row);
+        }
+    }
+
+    fn state_ops(&mut self, ops: &[StateOp]) {
+        self.count(ops.len());
+        for op in ops {
+            match op {
+                StateOp::RollbackTarget { seq, len } => {
+                    self.u8(0);
+                    self.u64(*seq);
+                    self.u64(*len);
+                }
+                StateOp::RollbackDraft { seq, len } => {
+                    self.u8(1);
+                    self.u64(*seq);
+                    self.u64(*len);
+                }
+                StateOp::SyncBase { seq, len } => {
+                    self.u8(2);
+                    self.u64(*seq);
+                    self.u64(*len);
+                }
+                StateOp::Release { seq } => {
+                    self.u8(3);
+                    self.u64(*seq);
+                }
+            }
+        }
+    }
+
+    fn logits(&mut self, v: &LogitsView) {
+        match v {
+            LogitsView::OneHot { token, vocab } => {
+                self.u8(0);
+                self.u32(*token);
+                self.u32(*vocab);
+            }
+            LogitsView::TopK { entries, vocab } => {
+                self.u8(1);
+                self.u32(*vocab);
+                self.count(entries.len());
+                for &(t, p) in entries {
+                    self.u32(t);
+                    self.f64(p);
+                }
+            }
+            LogitsView::Dense(row) => {
+                self.u8(2);
+                self.vec_f64(row);
+            }
+        }
+    }
+
+    fn probs(&mut self, probs: &[Vec<LogitsView>]) {
+        self.count(probs.len());
+        for rows in probs {
+            self.count(rows.len());
+            for r in rows {
+                self.logits(r);
+            }
+        }
+    }
+}
+
+// --- decoder -------------------------------------------------------------
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let have = self.buf.len() - self.pos;
+        if n > have {
+            return Err(WireError::Truncated { need: n, have });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    /// A declared element count, capacity-capped by the bytes actually
+    /// present so a hostile count can't trigger a huge allocation (the
+    /// reads themselves will hit `Truncated` first).
+    fn count(&mut self, min_elem_bytes: usize) -> Result<(usize, usize)> {
+        let n = self.u32()? as usize;
+        let cap = n.min(self.remaining() / min_elem_bytes.max(1) + 1);
+        Ok((n, cap))
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| WireError::BadValue("utf-8 string"))
+    }
+    fn vec_u32(&mut self) -> Result<Vec<u32>> {
+        let (n, cap) = self.count(4)?;
+        let mut v = Vec::with_capacity(cap);
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+    fn vec_u64(&mut self) -> Result<Vec<u64>> {
+        let (n, cap) = self.count(8)?;
+        let mut v = Vec::with_capacity(cap);
+        for _ in 0..n {
+            v.push(self.u64()?);
+        }
+        Ok(v)
+    }
+    fn vec_f64(&mut self) -> Result<Vec<f64>> {
+        let (n, cap) = self.count(8)?;
+        let mut v = Vec::with_capacity(cap);
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+    fn vec_vec_u32(&mut self) -> Result<Vec<Vec<u32>>> {
+        let (n, cap) = self.count(4)?;
+        let mut v = Vec::with_capacity(cap);
+        for _ in 0..n {
+            v.push(self.vec_u32()?);
+        }
+        Ok(v)
+    }
+    fn opt_u64(&mut self) -> Result<Option<u64>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u64()?)),
+            _ => Err(WireError::BadValue("option tag")),
+        }
+    }
+
+    fn state_ops(&mut self) -> Result<Vec<StateOp>> {
+        let (n, cap) = self.count(9)?;
+        let mut v = Vec::with_capacity(cap);
+        for _ in 0..n {
+            let tag = self.u8()?;
+            v.push(match tag {
+                0 => StateOp::RollbackTarget {
+                    seq: self.u64()?,
+                    len: self.u64()?,
+                },
+                1 => StateOp::RollbackDraft {
+                    seq: self.u64()?,
+                    len: self.u64()?,
+                },
+                2 => StateOp::SyncBase {
+                    seq: self.u64()?,
+                    len: self.u64()?,
+                },
+                3 => StateOp::Release { seq: self.u64()? },
+                t => return Err(WireError::BadTag { what: "state op", tag: t }),
+            });
+        }
+        Ok(v)
+    }
+
+    fn logits(&mut self) -> Result<LogitsView> {
+        match self.u8()? {
+            0 => Ok(LogitsView::OneHot {
+                token: self.u32()?,
+                vocab: self.u32()?,
+            }),
+            1 => {
+                let vocab = self.u32()?;
+                let (n, cap) = self.count(12)?;
+                let mut entries = Vec::with_capacity(cap);
+                for _ in 0..n {
+                    let t = self.u32()?;
+                    let p = self.f64()?;
+                    entries.push((t, p));
+                }
+                Ok(LogitsView::TopK { entries, vocab })
+            }
+            2 => Ok(LogitsView::Dense(self.vec_f64()?)),
+            t => Err(WireError::BadTag { what: "logits view", tag: t }),
+        }
+    }
+
+    fn probs(&mut self) -> Result<Vec<Vec<LogitsView>>> {
+        let (n, cap) = self.count(4)?;
+        let mut v = Vec::with_capacity(cap);
+        for _ in 0..n {
+            let (m, mcap) = self.count(9)?;
+            let mut rows = Vec::with_capacity(mcap);
+            for _ in 0..m {
+                rows.push(self.logits()?);
+            }
+            v.push(rows);
+        }
+        Ok(v)
+    }
+}
+
+impl Frame {
+    /// Encode to a length-prefixed byte string (the exact bytes a socket
+    /// transport would write).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc {
+            buf: Vec::with_capacity(64),
+        };
+        // Length prefix placeholder, patched below.
+        e.u32(0);
+        e.u8(WIRE_VERSION);
+        e.u8(self.subject.tag());
+        e.u64(self.op);
+        match &self.subject {
+            Subject::ProposeReq {
+                state_ops,
+                seqs,
+                pending,
+                gammas,
+                temps,
+                seed,
+            } => {
+                e.state_ops(state_ops);
+                e.vec_u64(seqs);
+                e.vec_vec_u32(pending);
+                e.vec_u32(gammas);
+                e.vec_f64(temps);
+                e.u64(*seed);
+            }
+            Subject::ProposeResp {
+                tokens,
+                probs,
+                draft_lens,
+                cost,
+            } => {
+                e.vec_vec_u32(tokens);
+                e.probs(probs);
+                e.vec_u64(draft_lens);
+                e.f64(*cost);
+            }
+            Subject::VerifyReq {
+                state_ops,
+                seqs,
+                feed,
+                drafts,
+                temps,
+                budget,
+            } => {
+                e.state_ops(state_ops);
+                e.vec_u64(seqs);
+                e.vec_u32(feed);
+                e.vec_vec_u32(drafts);
+                e.vec_f64(temps);
+                match budget {
+                    None => e.u8(0),
+                    Some(b) => {
+                        e.u8(1);
+                        e.u64(*b);
+                    }
+                }
+            }
+            Subject::VerifyResp {
+                probs,
+                target_lens,
+                cost,
+            } => {
+                e.probs(probs);
+                e.vec_u64(target_lens);
+                e.f64(*cost);
+            }
+            Subject::PrefillChunk { state_ops, batch } => {
+                e.state_ops(state_ops);
+                e.count(batch.len());
+                for (seq, prompt) in batch {
+                    e.u64(*seq);
+                    e.vec_u32(prompt);
+                }
+            }
+            Subject::PrefillDone {
+                target_lens,
+                draft_lens,
+                cost,
+            } => {
+                e.vec_u64(target_lens);
+                e.vec_u64(draft_lens);
+                e.f64(*cost);
+            }
+            Subject::AdmitEvict { state_ops } => e.state_ops(state_ops),
+            Subject::AdmitEvictAck | Subject::StatsPull => {}
+            Subject::StatsResp(s) => {
+                e.u8(s.role);
+                e.u32(s.rank);
+                e.u64(s.vocab);
+                e.u64(s.ops_executed);
+                e.u64(s.seqs_live);
+            }
+            Subject::Heartbeat { nonce } | Subject::HeartbeatAck { nonce } => e.u64(*nonce),
+            Subject::ErrorResp { message } => e.str(message),
+        }
+        let body_len = (e.buf.len() - 4) as u32;
+        e.buf[0..4].copy_from_slice(&body_len.to_le_bytes());
+        e.buf
+    }
+
+    /// Decode exactly one length-prefixed frame. The buffer must contain
+    /// the frame and nothing else (discrete-message transports); trailing
+    /// bytes are a framing error, short bodies are `Truncated`.
+    pub fn decode(bytes: &[u8]) -> Result<Frame> {
+        let mut d = Dec { buf: bytes, pos: 0 };
+        let len = d.u32()? as usize;
+        if len > MAX_FRAME_BYTES {
+            return Err(WireError::Oversized {
+                len,
+                max: MAX_FRAME_BYTES,
+            });
+        }
+        if bytes.len() - 4 < len {
+            return Err(WireError::Truncated {
+                need: len,
+                have: bytes.len() - 4,
+            });
+        }
+        if bytes.len() - 4 > len {
+            return Err(WireError::Trailing {
+                extra: bytes.len() - 4 - len,
+            });
+        }
+        let version = d.u8()?;
+        if version != WIRE_VERSION {
+            return Err(WireError::BadVersion(version));
+        }
+        let tag = d.u8()?;
+        let op = d.u64()?;
+        let subject = match tag {
+            0 => Subject::ProposeReq {
+                state_ops: d.state_ops()?,
+                seqs: d.vec_u64()?,
+                pending: d.vec_vec_u32()?,
+                gammas: d.vec_u32()?,
+                temps: d.vec_f64()?,
+                seed: d.u64()?,
+            },
+            1 => Subject::ProposeResp {
+                tokens: d.vec_vec_u32()?,
+                probs: d.probs()?,
+                draft_lens: d.vec_u64()?,
+                cost: d.f64()?,
+            },
+            2 => Subject::VerifyReq {
+                state_ops: d.state_ops()?,
+                seqs: d.vec_u64()?,
+                feed: d.vec_u32()?,
+                drafts: d.vec_vec_u32()?,
+                temps: d.vec_f64()?,
+                budget: d.opt_u64()?,
+            },
+            3 => Subject::VerifyResp {
+                probs: d.probs()?,
+                target_lens: d.vec_u64()?,
+                cost: d.f64()?,
+            },
+            4 => {
+                let state_ops = d.state_ops()?;
+                let (n, cap) = d.count(12)?;
+                let mut batch = Vec::with_capacity(cap);
+                for _ in 0..n {
+                    let seq = d.u64()?;
+                    let prompt = d.vec_u32()?;
+                    batch.push((seq, prompt));
+                }
+                Subject::PrefillChunk { state_ops, batch }
+            }
+            5 => Subject::PrefillDone {
+                target_lens: d.vec_u64()?,
+                draft_lens: d.vec_u64()?,
+                cost: d.f64()?,
+            },
+            6 => Subject::AdmitEvict {
+                state_ops: d.state_ops()?,
+            },
+            7 => Subject::AdmitEvictAck,
+            8 => Subject::StatsPull,
+            9 => Subject::StatsResp(WorkerStats {
+                role: d.u8()?,
+                rank: d.u32()?,
+                vocab: d.u64()?,
+                ops_executed: d.u64()?,
+                seqs_live: d.u64()?,
+            }),
+            10 => Subject::Heartbeat { nonce: d.u64()? },
+            11 => Subject::HeartbeatAck { nonce: d.u64()? },
+            12 => Subject::ErrorResp { message: d.str()? },
+            t => return Err(WireError::BadTag { what: "subject", tag: t }),
+        };
+        if d.remaining() != 0 {
+            return Err(WireError::Trailing {
+                extra: d.remaining(),
+            });
+        }
+        Ok(Frame { op, subject })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt(f: Frame) {
+        let bytes = f.encode();
+        let back = Frame::decode(&bytes).expect("decode");
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn roundtrip_basic_frames() {
+        rt(Frame {
+            op: 7,
+            subject: Subject::Heartbeat { nonce: 99 },
+        });
+        rt(Frame {
+            op: 8,
+            subject: Subject::AdmitEvictAck,
+        });
+        rt(Frame {
+            op: 1,
+            subject: Subject::ProposeReq {
+                state_ops: vec![
+                    StateOp::SyncBase { seq: 3, len: 10 },
+                    StateOp::Release { seq: 4 },
+                ],
+                seqs: vec![3, 5],
+                pending: vec![vec![1, 2], vec![]],
+                gammas: vec![4, 0],
+                temps: vec![0.0, 0.7],
+                seed: 42,
+            },
+        });
+        rt(Frame {
+            op: 2,
+            subject: Subject::VerifyResp {
+                probs: vec![vec![
+                    LogitsView::OneHot { token: 5, vocab: 64 },
+                    LogitsView::TopK {
+                        entries: vec![(1, 0.5), (9, 0.5)],
+                        vocab: 64,
+                    },
+                    LogitsView::Dense(vec![0.25; 4]),
+                ]],
+                target_lens: vec![11],
+                cost: 1.5e-3,
+            },
+        });
+    }
+
+    #[test]
+    fn truncation_is_typed_not_a_panic() {
+        let bytes = Frame {
+            op: 1,
+            subject: Subject::Heartbeat { nonce: 5 },
+        }
+        .encode();
+        for cut in 0..bytes.len() {
+            let err = Frame::decode(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(err, WireError::Truncated { .. }),
+                "cut at {cut}: {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_and_trailing_rejected() {
+        let mut bytes = ((MAX_FRAME_BYTES + 1) as u32).to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[0u8; 16]);
+        assert!(matches!(
+            Frame::decode(&bytes),
+            Err(WireError::Oversized { .. })
+        ));
+        let mut ok = Frame {
+            op: 1,
+            subject: Subject::StatsPull,
+        }
+        .encode();
+        ok.push(0xFF);
+        assert!(matches!(
+            Frame::decode(&ok),
+            Err(WireError::Trailing { extra: 1 })
+        ));
+    }
+
+    #[test]
+    fn bad_version_and_tag_rejected() {
+        let mut bytes = Frame {
+            op: 1,
+            subject: Subject::StatsPull,
+        }
+        .encode();
+        bytes[4] = 99; // version byte
+        assert_eq!(Frame::decode(&bytes), Err(WireError::BadVersion(99)));
+        bytes[4] = WIRE_VERSION;
+        bytes[5] = 200; // subject tag
+        assert_eq!(
+            Frame::decode(&bytes),
+            Err(WireError::BadTag {
+                what: "subject",
+                tag: 200
+            })
+        );
+    }
+
+    #[test]
+    fn f64_bits_roundtrip_exactly() {
+        for v in [0.0, -0.0, 1.5e-9, f64::MAX, f64::MIN_POSITIVE, 0.1 + 0.2] {
+            rt(Frame {
+                op: 0,
+                subject: Subject::PrefillDone {
+                    target_lens: vec![],
+                    draft_lens: vec![],
+                    cost: v,
+                },
+            });
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Worker thread: wraps an [`SdBackend`] replica and serves frames.
+//!
+//! Every worker holds a *full* backend replica (draft and target
+//! simulators both) built from the same factory as its peers, so any
+//! cost or token it computes is bit-identical to what the single-process
+//! engine would have computed. Roles differ only in which ops the
+//! coordinator routes to them and which [`StateOp`]s they apply:
+//!
+//! * the **draft** worker serves propose and applies
+//!   `RollbackDraft`/`SyncBase`/`Release`;
+//! * each **verify** rank serves verify and applies
+//!   `RollbackTarget`/`Release`.
+//!
+//! This strict routing is what keeps each replica's state consistent
+//! with the subset of the computation it actually runs — e.g. a draft
+//! replica never executes verify, so the coordinator pushes the
+//! committed base forward with `SyncBase` instead.
+//!
+//! Retransmit safety: the worker remembers its last `(op, response)`
+//! pair and replays the cached response verbatim when the same op id
+//! arrives again, so a retried frame never re-executes a compute op
+//! (state ops are idempotent, compute ops are not).
+
+use crate::spec::SdBackend;
+
+use super::transport::WorkerEndpoint;
+use super::wire::{Frame, StateOp, Subject, WorkerStats};
+
+/// Which half of the speculative loop this worker serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Draft,
+    Verify,
+}
+
+impl Role {
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Role::Draft => 0,
+            Role::Verify => 1,
+        }
+    }
+}
+
+/// Spawn-time knobs, mostly for fault injection.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerOptions {
+    /// Exit (simulating a crash) after this many *compute* ops have
+    /// executed. Responses for the final op are still sent — the death
+    /// is detected by the coordinator via the endpoint liveness flag.
+    pub die_after_ops: Option<u64>,
+}
+
+/// Serve frames until the coordinator hangs up (or `die_after_ops`
+/// fires). Runs on its own thread; the endpoint's `Drop` marks the
+/// worker dead for the coordinator on any exit path, panics included.
+pub fn run_worker<B: SdBackend>(
+    role: Role,
+    rank: u32,
+    mut backend: B,
+    ep: WorkerEndpoint,
+    opts: WorkerOptions,
+) {
+    let mut ops_executed: u64 = 0;
+    let mut seqs_live: u64 = 0;
+    let mut last: Option<(u64, Frame)> = None;
+
+    while let Some(frame) = ep.recv() {
+        // Retransmit of the op we just answered: replay the cached
+        // response instead of re-executing.
+        if let Some((op, resp)) = &last {
+            if *op == frame.op {
+                if !ep.send(resp) {
+                    return;
+                }
+                continue;
+            }
+        }
+
+        let is_compute = frame.subject.is_compute();
+        let resp_subject = serve(role, &mut backend, &mut seqs_live, frame.subject);
+        if is_compute {
+            ops_executed += 1;
+        }
+        let resp_subject = match resp_subject {
+            Subject::StatsPull => Subject::StatsResp(WorkerStats {
+                role: role.as_u8(),
+                rank,
+                vocab: backend.vocab() as u64,
+                ops_executed,
+                seqs_live,
+            }),
+            s => s,
+        };
+        let resp = Frame {
+            op: frame.op,
+            subject: resp_subject,
+        };
+        if !ep.send(&resp) {
+            return;
+        }
+        last = Some((frame.op, resp));
+
+        if let Some(limit) = opts.die_after_ops {
+            if ops_executed >= limit {
+                // Simulated crash: the endpoint drops here and the
+                // coordinator sees the slot detach.
+                return;
+            }
+        }
+    }
+}
+
+/// Apply the state ops this role owns, skip the rest. All owned ops are
+/// idempotent against already-updated state (rollbacks set/clamp,
+/// release tolerates absent sequences), which is what makes retried
+/// frames safe to re-apply.
+fn apply_state_ops<B: SdBackend>(role: Role, backend: &mut B, seqs_live: &mut u64, ops: &[StateOp]) {
+    for op in ops {
+        match (role, op) {
+            (Role::Verify, StateOp::RollbackTarget { seq, len }) => {
+                backend.rollback_target(*seq, *len as usize);
+            }
+            (Role::Draft, StateOp::RollbackDraft { seq, len }) => {
+                backend.rollback_draft(*seq, *len as usize);
+            }
+            (Role::Draft, StateOp::SyncBase { seq, len }) => {
+                backend.sync_target_base(*seq, *len as usize);
+            }
+            (_, StateOp::Release { seq }) => {
+                backend.release(*seq);
+                *seqs_live = seqs_live.saturating_sub(1);
+            }
+            _ => {}
+        }
+    }
+}
+
+fn serve<B: SdBackend>(
+    role: Role,
+    backend: &mut B,
+    seqs_live: &mut u64,
+    subject: Subject,
+) -> Subject {
+    match subject {
+        Subject::ProposeReq {
+            state_ops,
+            seqs,
+            pending,
+            gammas,
+            temps,
+            seed,
+        } => {
+            apply_state_ops(role, backend, seqs_live, &state_ops);
+            let gammas: Vec<usize> = gammas.iter().map(|&g| g as usize).collect();
+            match backend.propose(&seqs, &pending, &gammas, &temps, seed) {
+                Ok(out) => Subject::ProposeResp {
+                    tokens: out.tokens,
+                    probs: out.probs,
+                    draft_lens: seqs.iter().map(|&s| backend.draft_len(s) as u64).collect(),
+                    cost: out.cost,
+                },
+                Err(e) => Subject::ErrorResp {
+                    message: format!("propose: {e:#}"),
+                },
+            }
+        }
+        Subject::VerifyReq {
+            state_ops,
+            seqs,
+            feed,
+            drafts,
+            temps,
+            budget,
+        } => {
+            apply_state_ops(role, backend, seqs_live, &state_ops);
+            backend.set_verify_budget(budget.map(|b| b as usize));
+            match backend.verify(&seqs, &feed, &drafts, &temps) {
+                Ok(out) => Subject::VerifyResp {
+                    probs: out.probs,
+                    target_lens: seqs.iter().map(|&s| backend.target_len(s) as u64).collect(),
+                    cost: out.cost,
+                },
+                Err(e) => Subject::ErrorResp {
+                    message: format!("verify: {e:#}"),
+                },
+            }
+        }
+        Subject::PrefillChunk { state_ops, batch } => {
+            apply_state_ops(role, backend, seqs_live, &state_ops);
+            let batch: Vec<(u64, Vec<u32>)> = batch;
+            match backend.prefill(&batch) {
+                Ok(cost) => {
+                    *seqs_live += batch.len() as u64;
+                    Subject::PrefillDone {
+                        target_lens: batch
+                            .iter()
+                            .map(|(s, _)| backend.target_len(*s) as u64)
+                            .collect(),
+                        draft_lens: batch
+                            .iter()
+                            .map(|(s, _)| backend.draft_len(*s) as u64)
+                            .collect(),
+                        cost,
+                    }
+                }
+                Err(e) => Subject::ErrorResp {
+                    message: format!("prefill: {e:#}"),
+                },
+            }
+        }
+        Subject::AdmitEvict { state_ops } => {
+            apply_state_ops(role, backend, seqs_live, &state_ops);
+            Subject::AdmitEvictAck
+        }
+        Subject::Heartbeat { nonce } => Subject::HeartbeatAck { nonce },
+        // Filled in by the caller with live counters.
+        Subject::StatsPull => Subject::StatsPull,
+        // Responses / unknown-direction frames: echo an error so the
+        // coordinator sees misrouting instead of a hang.
+        other => Subject::ErrorResp {
+            message: format!("unexpected frame for worker: tag {:?}", other),
+        },
+    }
+}

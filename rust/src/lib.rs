@@ -30,6 +30,7 @@ pub mod batching;
 pub mod benchlib;
 pub mod config;
 pub mod control;
+pub mod dist;
 pub mod engine;
 pub mod experiments;
 pub mod fit;

@@ -63,7 +63,7 @@ fn print_help() {
          serve     --mode synthetic|hlo --port N --gamma N [--adaptive] [--ragged]\n\
                    [--tenants SPEC] [--mix-admission] [--config file.json]\n\
                    [--continuous] [--prefill-chunk N] [--record-trace PATH]\n\
-                   [--verify-budget N] [--adaptive-budget]\n\
+                   [--verify-budget N] [--adaptive-budget] [--dist-workers N]\n\
          bench     <fig1|fig2|fig3|fig4|fig5|fig6|table1|table2|table3|adaptive|vocab|\n\
                     sharding|ragged|multitenant|continuous|budget>\n\
                    multitenant: [--trace file.csv] [--loads 0.5,1.5,3] [--smoke]\n\
@@ -121,6 +121,7 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
         cfg.mix_admission = true;
     }
     cfg.verify_budget = args.usize_or("verify-budget", cfg.verify_budget)?;
+    cfg.dist_workers = args.usize_or("dist-workers", cfg.dist_workers)?;
     if args.flag("adaptive-budget") {
         // Joint (γ, budget) control is a control-plane refinement, so
         // the flag implies the adaptive controller.
@@ -197,17 +198,64 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             );
             let tsim = ExecSim::new(target, platform.clone());
             let dsim = ExecSim::new(draft, platform);
-            let mut backend = SyntheticLm::new(tsim, dsim, alpha, cfg.seed);
-            if cfg.verify_budget > 0 || cfg.adaptive_budget {
-                // Budgeted verify degrades acceptance for tokens routed
-                // past the cap; the calibratable curve models that.
-                backend = backend.with_budget_alpha_curve(1.0);
+            if cfg.dist_workers > 0 {
+                // Distributed serving: the engine drives a coordinator
+                // backend whose workers each hold a full SyntheticLm
+                // replica (bit-identical to single-process; the
+                // conformance suite pins it).
+                println!(
+                    "distributed serving: coordinator + 1 draft worker + {} verify rank{} \
+                     (in-process loopback transport)",
+                    cfg.dist_workers,
+                    if cfg.dist_workers == 1 { "" } else { "s" }
+                );
+                let verify_ranks = cfg.dist_workers;
+                let budget_curve = cfg.verify_budget > 0 || cfg.adaptive_budget;
+                let static_budget = cfg.verify_budget;
+                let seed = cfg.seed;
+                moesd::server::Server::start_with_opts(
+                    &bind,
+                    engine_cfg,
+                    move || {
+                        let factory = move || -> anyhow::Result<SyntheticLm> {
+                            let mut b =
+                                SyntheticLm::new(tsim.clone(), dsim.clone(), alpha, seed);
+                            if budget_curve {
+                                b = b.with_budget_alpha_curve(1.0);
+                            }
+                            Ok(b)
+                        };
+                        let dist_cfg = moesd::dist::DistConfig {
+                            verify_ranks,
+                            ..Default::default()
+                        };
+                        let mut backend = moesd::dist::DistBackend::launch(dist_cfg, factory)?;
+                        if static_budget > 0 {
+                            use moesd::spec::SdBackend;
+                            backend.set_verify_budget(Some(static_budget));
+                        }
+                        Ok(backend)
+                    },
+                    opts,
+                )?
+            } else {
+                let mut backend = SyntheticLm::new(tsim, dsim, alpha, cfg.seed);
+                if cfg.verify_budget > 0 || cfg.adaptive_budget {
+                    // Budgeted verify degrades acceptance for tokens routed
+                    // past the cap; the calibratable curve models that.
+                    backend = backend.with_budget_alpha_curve(1.0);
+                }
+                if cfg.verify_budget > 0 {
+                    use moesd::spec::SdBackend;
+                    backend.set_verify_budget(Some(cfg.verify_budget));
+                }
+                moesd::server::Server::start_with_opts(
+                    &bind,
+                    engine_cfg,
+                    move || Ok(backend),
+                    opts,
+                )?
             }
-            if cfg.verify_budget > 0 {
-                use moesd::spec::SdBackend;
-                backend.set_verify_budget(Some(cfg.verify_budget));
-            }
-            moesd::server::Server::start_with_opts(&bind, engine_cfg, move || Ok(backend), opts)?
         }
     };
     println!("listening on {} — newline-delimited JSON; Ctrl-C to stop", server.addr);

@@ -113,6 +113,9 @@ pub struct ServerStats {
     /// Per-tenant-class stats (one entry per configured tenant; classless
     /// deployments publish a single "default" entry once traffic flows).
     pub classes: Vec<ClassStats>,
+    /// Worker-fleet health when serving through the distributed
+    /// coordinator (`--dist-workers`); `None` for single-process.
+    pub dist: Option<crate::dist::DistStatus>,
 }
 
 impl ServerStats {
@@ -137,6 +140,9 @@ impl ServerStats {
             "classes",
             Json::Arr(self.classes.iter().map(ClassStats::to_json).collect()),
         ));
+        if let Some(dist) = &self.dist {
+            pairs.push(("dist", dist.to_json()));
+        }
         Json::from_pairs(pairs)
     }
 }
@@ -323,6 +329,7 @@ fn publish_stats<B: SdBackend>(engine: &Engine<B>, stats: &SharedStats) {
         verify_budget: engine.verify_budget(),
         controller: engine.controller_state(),
         classes,
+        dist: engine.backend().dist_status(),
     };
     *stats.lock().unwrap() = snapshot;
 }

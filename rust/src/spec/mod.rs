@@ -182,6 +182,24 @@ pub trait SdBackend {
     fn verify_budget(&self) -> Option<usize> {
         None
     }
+
+    /// Force the committed (target) context length to exactly `len`
+    /// without touching draft state. Only the distributed draft worker
+    /// uses this: its replica never executes verify, so the coordinator
+    /// pushes the authoritative base its next propose continues from
+    /// (`dist::wire::StateOp::SyncBase`). Unknown sequences are ignored.
+    /// Single-process backends never see this call — the default is a
+    /// no-op.
+    fn sync_target_base(&mut self, seq: SeqId, len: usize) {
+        let _ = (seq, len);
+    }
+
+    /// Worker-fleet health snapshot when this backend is a distributed
+    /// coordinator (`dist::DistBackend`); `None` for single-process
+    /// backends. Surfaced through `ServerStats` as the `"dist"` key.
+    fn dist_status(&self) -> Option<crate::dist::DistStatus> {
+        None
+    }
 }
 
 #[cfg(test)]

@@ -419,6 +419,18 @@ impl SdBackend for SyntheticLm {
         st.draft_len = st.draft_len.min(len);
     }
 
+    fn sync_target_base(&mut self, seq: SeqId, len: usize) {
+        // Distributed draft replicas never run verify, so the
+        // coordinator sets the committed base directly; unlike
+        // `rollback_target` this may move the base *forward* (the
+        // replica is catching up to verifies it didn't execute).
+        // Tolerates unknown sequences: a replayed SyncBase can land
+        // after the sequence's Release on a rebuilt replica.
+        if let Some(st) = self.seqs.get_mut(&seq) {
+            st.target_len = len;
+        }
+    }
+
     fn target_len(&self, seq: SeqId) -> usize {
         self.state(seq).target_len
     }

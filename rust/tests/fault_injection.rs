@@ -1,0 +1,379 @@
+//! Fault-injection suite for the distributed engine (PR 9):
+//!
+//! [`FaultyTransport`] drops/delays frames on a deterministic counter
+//! schedule and `die_after` kills workers mid-run; every scenario must
+//! end with output bit-identical to the clean single-process engine —
+//! faults may cost retries, respawns, and wall-clock, but never a token,
+//! a virtual-clock tick, or a metric:
+//!
+//! * dropped **requests** → the coordinator times out and retransmits;
+//! * dropped **responses** → the retransmit hits the worker's response
+//!   cache (idempotent ops, never re-executed);
+//! * delayed **responses** → the late copy and the retry's copy race,
+//!   and whichever loses is discarded as a stale duplicate;
+//! * worker **death** → respawn + op-log replay reconverges the replica;
+//! * total blackout → a typed error within bounded time, never a hang.
+
+use moesd::arch::presets;
+use moesd::batching::{Request, SamplingParams};
+use moesd::dist::{DistBackend, DistConfig, FaultPlan, Role};
+use moesd::engine::{Engine, EngineConfig, PipelineConfig};
+use moesd::hardware::platform_2x_gpu_a;
+use moesd::kvcache::KvConfig;
+use moesd::scheduler::SchedulerConfig;
+use moesd::simulator::ExecSim;
+use moesd::spec::synthetic::SyntheticLm;
+use moesd::spec::SdBackend;
+use moesd::testkit::{ensure, Gen, Runner};
+use std::collections::HashMap;
+use std::time::Duration;
+
+struct Workload {
+    alpha: f64,
+    gamma: usize,
+    max_batch: usize,
+    blocks: usize,
+    seed: u64,
+    specs: Vec<(usize, usize, f64)>, // (prompt_len, max_new, arrival)
+}
+
+/// A fixed mid-size workload: enough rounds that every fault cadence
+/// fires several times, small enough to keep the suite fast.
+fn workload(seed: u64) -> Workload {
+    Workload {
+        alpha: 0.85,
+        gamma: 3,
+        max_batch: 4,
+        blocks: 48,
+        seed,
+        specs: vec![(6, 14, 0.0), (4, 12, 0.01), (9, 16, 0.02), (3, 10, 0.03)],
+    }
+}
+
+fn synthetic(w: &Workload) -> SyntheticLm {
+    let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+    let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+    SyntheticLm::new(target, draft, w.alpha, w.seed)
+}
+
+fn engine_config(w: &Workload) -> EngineConfig {
+    EngineConfig {
+        gamma: w.gamma,
+        kv: KvConfig {
+            num_blocks: w.blocks,
+            block_size: 4,
+        },
+        scheduler: SchedulerConfig {
+            max_batch: w.max_batch,
+            admit_reserve_tokens: 4,
+            tpot_slo: None,
+        },
+        seed: w.seed,
+        pipeline: PipelineConfig::default(),
+        gamma_overrides: HashMap::new(),
+        ..Default::default()
+    }
+}
+
+fn submit_all<B: SdBackend>(e: &mut Engine<B>, w: &Workload) {
+    for (i, &(prompt_len, max_new, arrival)) in w.specs.iter().enumerate() {
+        e.submit(Request {
+            id: i as u64,
+            prompt: (0..prompt_len as u32).collect(),
+            params: SamplingParams {
+                temperature: 0.0,
+                max_new_tokens: max_new,
+                eos_token: None,
+            },
+            arrival,
+            class: 0,
+        });
+    }
+}
+
+/// Distributed backend with the given robustness/fault knobs. The
+/// deadline is short: synthetic timeouts are immediate, and a dropped
+/// request only costs one deadline before the retransmit.
+fn faulty_backend(w: &Workload, ranks: usize, cfg_patch: DistConfig) -> DistBackend<SyntheticLm> {
+    let (alpha, seed) = (w.alpha, w.seed);
+    let factory = move || -> anyhow::Result<SyntheticLm> {
+        let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+        let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+        Ok(SyntheticLm::new(target, draft, alpha, seed))
+    };
+    DistBackend::launch(
+        DistConfig {
+            verify_ranks: ranks,
+            ..cfg_patch
+        },
+        factory,
+    )
+    .expect("dist launch")
+}
+
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    completions: Vec<(u64, Vec<u32>, f64, f64)>,
+    rounds: u64,
+    clock: f64,
+    time_draft: f64,
+    time_verify: f64,
+    time_reject: f64,
+    time_prefill: f64,
+}
+
+fn fingerprint<B: SdBackend>(e: &mut Engine<B>) -> Result<Fingerprint, String> {
+    let mut done = e
+        .run_to_completion(40_000)
+        .map_err(|err| format!("run failed: {err}"))?;
+    done.sort_by_key(|c| c.id);
+    Ok(Fingerprint {
+        completions: done
+            .into_iter()
+            .map(|c| (c.id, c.tokens, c.ttft(), c.finished_at))
+            .collect(),
+        rounds: e.metrics.rounds,
+        clock: e.clock(),
+        time_draft: e.metrics.time_draft,
+        time_verify: e.metrics.time_verify,
+        time_reject: e.metrics.time_reject,
+        time_prefill: e.metrics.time_prefill,
+    })
+}
+
+fn clean_fingerprint(w: &Workload) -> Fingerprint {
+    let mut e = Engine::new(engine_config(w), synthetic(w));
+    submit_all(&mut e, w);
+    fingerprint(&mut e).expect("clean run")
+}
+
+/// Run the workload through a faulted distributed engine and require
+/// bit-exact parity with the clean single-process run, plus whatever
+/// robustness counters the scenario must have exercised. Returns the
+/// end-of-run `DistStatus` for scenario-specific assertions.
+fn check_faulted_parity(
+    w: &Workload,
+    ranks: usize,
+    cfg: DistConfig,
+    what: &str,
+) -> Result<moesd::dist::DistStatus, String> {
+    let clean = clean_fingerprint(w);
+    let mut e = Engine::new(engine_config(w), faulty_backend(w, ranks, cfg));
+    submit_all(&mut e, w);
+    let faulted = fingerprint(&mut e)?;
+    if clean != faulted {
+        return Err(format!(
+            "{what}: faulted run diverged\n  clean:   rounds {} clock {}\n  faulted: rounds {} clock {}",
+            clean.rounds, clean.clock, faulted.rounds, faulted.clock
+        ));
+    }
+    // Lossless against the oracle, not merely self-consistent.
+    let reference = synthetic(w);
+    for (id, tokens, _, _) in &faulted.completions {
+        let (prompt_len, max_new, _) = w.specs[*id as usize];
+        if *tokens != reference.expected_chain(*id, prompt_len, max_new) {
+            return Err(format!("{what}: seq {id} tokens diverge from oracle chain"));
+        }
+    }
+    Ok(e.backend().dist_status().expect("dist status"))
+}
+
+fn fault_cfg(plan: FaultPlan) -> DistConfig {
+    DistConfig {
+        deadline: Duration::from_millis(40),
+        faults: Some(plan),
+        ..DistConfig::default()
+    }
+}
+
+#[test]
+fn dropped_requests_are_retransmitted_losslessly() {
+    let status = check_faulted_parity(
+        &workload(7001),
+        1,
+        fault_cfg(FaultPlan {
+            drop_req_every: Some(5),
+            ..FaultPlan::default()
+        }),
+        "drop_req_every=5",
+    )
+    .unwrap();
+    assert!(status.retries > 0, "no retries recorded: {status:?}");
+    assert_eq!(status.respawns, 0, "drops must not escalate to respawns");
+}
+
+#[test]
+fn dropped_responses_hit_the_idempotent_response_cache() {
+    // The worker executed the op and cached the response; the retry must
+    // replay the cache, not re-execute (re-execution would corrupt
+    // non-idempotent compute state and break parity).
+    let status = check_faulted_parity(
+        &workload(7002),
+        2,
+        fault_cfg(FaultPlan {
+            drop_resp_every: Some(6),
+            ..FaultPlan::default()
+        }),
+        "drop_resp_every=6",
+    )
+    .unwrap();
+    assert!(status.retries > 0, "no retries recorded: {status:?}");
+}
+
+#[test]
+fn delayed_responses_are_discarded_as_stale_duplicates() {
+    // The held original and the retry's copy race; exactly one is
+    // consumed and the loser must be discarded by op-id/slot matching.
+    let status = check_faulted_parity(
+        &workload(7003),
+        2,
+        fault_cfg(FaultPlan {
+            delay_resp_every: Some(5),
+            ..FaultPlan::default()
+        }),
+        "delay_resp_every=5",
+    )
+    .unwrap();
+    assert!(status.retries > 0, "no retries recorded: {status:?}");
+    assert!(
+        status.stale_discarded > 0,
+        "no stale duplicates discarded: {status:?}"
+    );
+}
+
+#[test]
+fn draft_worker_death_respawns_and_replays_losslessly() {
+    let status = check_faulted_parity(
+        &workload(7004),
+        1,
+        DistConfig {
+            deadline: Duration::from_millis(500),
+            die_after: vec![(Role::Draft, 0, 5)],
+            ..DistConfig::default()
+        },
+        "draft dies after 5 ops",
+    )
+    .unwrap();
+    assert!(status.respawns >= 1, "no respawn recorded: {status:?}");
+    assert!(
+        status.workers.iter().all(|h| h.alive),
+        "fleet not fully alive after recovery: {status:?}"
+    );
+    assert!(status.workers[0].respawns >= 1, "draft slot not respawned");
+}
+
+#[test]
+fn verify_rank_death_respawns_and_replays_losslessly() {
+    let status = check_faulted_parity(
+        &workload(7005),
+        2,
+        DistConfig {
+            deadline: Duration::from_millis(500),
+            die_after: vec![(Role::Verify, 1, 4)],
+            ..DistConfig::default()
+        },
+        "verify rank 1 dies after 4 ops",
+    )
+    .unwrap();
+    assert!(status.respawns >= 1, "no respawn recorded: {status:?}");
+    assert!(status.workers.iter().all(|h| h.alive));
+    // Slot 2 is verify rank 1.
+    assert!(status.workers[2].respawns >= 1, "rank-1 slot not respawned");
+}
+
+#[test]
+fn combined_chaos_still_bit_exact() {
+    // Everything at once: dropped requests, delayed responses, and a
+    // mid-run draft-worker crash. Output must still be bit-exact.
+    let status = check_faulted_parity(
+        &workload(7006),
+        2,
+        DistConfig {
+            deadline: Duration::from_millis(60),
+            faults: Some(FaultPlan {
+                drop_req_every: Some(9),
+                delay_resp_every: Some(7),
+                ..FaultPlan::default()
+            }),
+            die_after: vec![(Role::Draft, 0, 6)],
+            ..DistConfig::default()
+        },
+        "chaos (drop+delay+death)",
+    )
+    .unwrap();
+    assert!(status.retries > 0, "chaos run recorded no retries: {status:?}");
+    assert!(status.respawns >= 1, "chaos run recorded no respawn: {status:?}");
+}
+
+#[test]
+fn prop_random_fault_cadence_never_loses_tokens() {
+    // Parity must hold for *any* fault cadence, not just the pinned
+    // ones. Cases stay few because each dropped request costs one
+    // deadline of wall-clock.
+    let mut runner = Runner::new("fault_cadence_parity");
+    runner.run(5, |g| {
+        let w = workload(g.u64_in(0, 1 << 20));
+        let plan = FaultPlan {
+            drop_req_every: Some(g.u64_in(4, 9)),
+            drop_resp_every: Some(g.u64_in(5, 11)),
+            delay_resp_every: Some(g.u64_in(6, 13)),
+        };
+        let status = check_faulted_parity(
+            &w,
+            g.usize_in(1, 2),
+            fault_cfg(plan.clone()),
+            &format!("random cadence {plan:?}"),
+        )?;
+        ensure(
+            status.retries > 0,
+            format!("cadence {plan:?} exercised nothing"),
+        )
+    });
+}
+
+#[test]
+fn total_blackout_fails_bounded_not_hung() {
+    // Every compute request dropped forever: retries and the one
+    // wedged-worker respawn must exhaust within bounded time and surface
+    // a typed error — never a hang, never a panic.
+    let w = workload(7007);
+    let start = std::time::Instant::now();
+    let mut e = Engine::new(
+        engine_config(&w),
+        faulty_backend(
+            &w,
+            1,
+            DistConfig {
+                deadline: Duration::from_millis(20),
+                max_retries: 1,
+                faults: Some(FaultPlan {
+                    drop_req_every: Some(1),
+                    ..FaultPlan::default()
+                }),
+                ..DistConfig::default()
+            },
+        ),
+    );
+    submit_all(&mut e, &w);
+    let err = e.run_to_completion(40_000).expect_err("blackout must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("dist:"), "untyped blackout error: {msg}");
+    assert!(
+        start.elapsed() < Duration::from_secs(10),
+        "blackout took {:?} — the failure ladder is unbounded",
+        start.elapsed()
+    );
+}
+
+#[test]
+fn heartbeats_drive_the_health_table() {
+    let w = workload(7008);
+    let mut backend = faulty_backend(&w, 2, DistConfig::default());
+    backend.ping().expect("ping");
+    let status = backend.dist_status().unwrap();
+    assert_eq!(status.workers.len(), 3);
+    assert!(
+        status.workers.iter().all(|h| h.heartbeat > 0),
+        "heartbeat nonces not recorded: {status:?}"
+    );
+}

@@ -1,0 +1,435 @@
+//! Distributed-engine conformance properties (PR 9):
+//!
+//! 1. **Single-rank parity** — `Engine<DistBackend<SyntheticLm>>` with
+//!    one verify rank on the loopback fabric reproduces the
+//!    single-process `Engine<SyntheticLm>` bit-for-bit: same tokens,
+//!    same virtual clock, same rounds/preemptions, same per-stage time
+//!    accounting, across random workloads.
+//! 2. **Rank-count invariance** — the same holds for d ∈ {2, 4} verify
+//!    ranks (replicated verify + max-combined costs + 0.0 loopback hop
+//!    is exactly the single-rank arithmetic).
+//! 3. **Pipeline composition** — parity survives the full continuous
+//!    pipeline (chunked prefill, draft-ahead, per-seq boundaries),
+//!    ragged per-sequence γ overrides, and a static verify budget.
+//! 4. **Sharded fabric** — a non-loopback fabric keeps tokens identical
+//!    and only moves the clock (forward), by pricing the verify fan-out
+//!    hop with `ShardingSpec::comm_time`.
+//!
+//! Mirrors the PR-7 features-off ≡ lock-step suite: same workload
+//! generator, same fingerprint.
+
+use moesd::arch::presets;
+use moesd::batching::{Request, SamplingParams};
+use moesd::dist::{DistBackend, DistConfig, DistFabric};
+use moesd::engine::{Engine, EngineConfig, PipelineConfig};
+use moesd::hardware::{platform_2x_gpu_a, ShardingSpec, Topology};
+use moesd::kvcache::KvConfig;
+use moesd::scheduler::SchedulerConfig;
+use moesd::simulator::ExecSim;
+use moesd::spec::synthetic::SyntheticLm;
+use moesd::spec::SdBackend;
+use moesd::testkit::{ensure, Gen, Runner};
+use std::collections::HashMap;
+
+/// A random open-loop workload: staggered arrivals, random lengths.
+struct Workload {
+    alpha: f64,
+    gamma: usize,
+    max_batch: usize,
+    blocks: usize,
+    seed: u64,
+    specs: Vec<(usize, usize, f64)>, // (prompt_len, max_new, arrival)
+}
+
+fn gen_workload(g: &mut Gen) -> Workload {
+    let n_req = g.usize_in(1, 8);
+    let mut t = 0.0;
+    let specs = (0..n_req)
+        .map(|_| {
+            t += g.f64_in(0.0, 0.05);
+            (g.usize_in(2, 12), g.usize_in(1, 24), t)
+        })
+        .collect();
+    Workload {
+        alpha: g.f64_in(0.4, 0.95),
+        gamma: g.usize_in(0, 5),
+        max_batch: g.usize_in(1, 6),
+        blocks: g.usize_in(16, 64),
+        seed: g.u64_in(0, 1 << 20),
+        specs,
+    }
+}
+
+fn synthetic(w: &Workload) -> SyntheticLm {
+    let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+    let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+    SyntheticLm::new(target, draft, w.alpha, w.seed)
+}
+
+fn engine_config(
+    w: &Workload,
+    pipeline: PipelineConfig,
+    overrides: HashMap<u64, usize>,
+) -> EngineConfig {
+    EngineConfig {
+        gamma: w.gamma,
+        kv: KvConfig {
+            num_blocks: w.blocks,
+            block_size: 4,
+        },
+        scheduler: SchedulerConfig {
+            max_batch: w.max_batch,
+            admit_reserve_tokens: 4,
+            tpot_slo: None,
+        },
+        seed: w.seed,
+        pipeline,
+        gamma_overrides: overrides,
+        ..Default::default()
+    }
+}
+
+fn submit_all<B: SdBackend>(e: &mut Engine<B>, w: &Workload) {
+    for (i, &(prompt_len, max_new, arrival)) in w.specs.iter().enumerate() {
+        e.submit(Request {
+            id: i as u64,
+            prompt: (0..prompt_len as u32).collect(),
+            params: SamplingParams {
+                temperature: 0.0,
+                max_new_tokens: max_new,
+                eos_token: None,
+            },
+            arrival,
+            class: 0,
+        });
+    }
+}
+
+fn dist_backend(w: &Workload, ranks: usize, fabric: DistFabric) -> DistBackend<SyntheticLm> {
+    let (alpha, seed) = (w.alpha, w.seed);
+    let factory = move || -> anyhow::Result<SyntheticLm> {
+        let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+        let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+        Ok(SyntheticLm::new(target, draft, alpha, seed))
+    };
+    DistBackend::launch(
+        DistConfig {
+            verify_ranks: ranks,
+            fabric,
+            ..Default::default()
+        },
+        factory,
+    )
+    .expect("dist launch")
+}
+
+/// Everything the parity claim compares: per-request outcomes, virtual
+/// clock, round/preemption counts, and the stage-time accounting.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    completions: Vec<(u64, Vec<u32>, f64, f64)>, // (id, tokens, ttft, finished_at)
+    rounds: u64,
+    clock: f64,
+    preemptions: u64,
+    time_draft: f64,
+    time_verify: f64,
+    time_reject: f64,
+    time_prefill: f64,
+}
+
+fn fingerprint<B: SdBackend>(e: &mut Engine<B>) -> Result<Fingerprint, String> {
+    let mut done = e
+        .run_to_completion(40_000)
+        .map_err(|err| format!("run failed: {err}"))?;
+    done.sort_by_key(|c| c.id);
+    Ok(Fingerprint {
+        completions: done
+            .into_iter()
+            .map(|c| (c.id, c.tokens, c.ttft(), c.finished_at))
+            .collect(),
+        rounds: e.metrics.rounds,
+        clock: e.clock(),
+        preemptions: e.counters.get("preemptions"),
+        time_draft: e.metrics.time_draft,
+        time_verify: e.metrics.time_verify,
+        time_reject: e.metrics.time_reject,
+        time_prefill: e.metrics.time_prefill,
+    })
+}
+
+fn diverged(what: &str, single: &Fingerprint, dist: &Fingerprint) -> String {
+    format!(
+        "{what} diverged from single-process:\n  single: rounds {} clock {} preempt {} \
+         draft {} verify {} reject {} prefill {}\n  dist:   rounds {} clock {} preempt {} \
+         draft {} verify {} reject {} prefill {}",
+        single.rounds,
+        single.clock,
+        single.preemptions,
+        single.time_draft,
+        single.time_verify,
+        single.time_reject,
+        single.time_prefill,
+        dist.rounds,
+        dist.clock,
+        dist.preemptions,
+        dist.time_draft,
+        dist.time_verify,
+        dist.time_reject,
+        dist.time_prefill,
+    )
+}
+
+/// Run the same workload single-process and distributed; both
+/// fingerprints must be identical (bit-for-bit: `PartialEq` on `f64`).
+fn check_parity(
+    w: &Workload,
+    pipeline: PipelineConfig,
+    overrides: HashMap<u64, usize>,
+    ranks: usize,
+    what: &str,
+) -> Result<(), String> {
+    let mut single = Engine::new(
+        engine_config(w, pipeline.clone(), overrides.clone()),
+        synthetic(w),
+    );
+    submit_all(&mut single, w);
+    let fp_single = fingerprint(&mut single)?;
+
+    let mut dist = Engine::new(
+        engine_config(w, pipeline, overrides),
+        dist_backend(w, ranks, DistFabric::Loopback),
+    );
+    submit_all(&mut dist, w);
+    let fp_dist = fingerprint(&mut dist)?;
+
+    if fp_single != fp_dist {
+        return Err(diverged(what, &fp_single, &fp_dist));
+    }
+    // Losslessness doubly pinned: the distributed tokens are the
+    // deterministic oracle chains, not merely "the same mistake twice".
+    let reference = synthetic(w);
+    for (i, (id, tokens, _, _)) in fp_dist.completions.iter().enumerate() {
+        let (prompt_len, max_new, _) = w.specs[*id as usize];
+        if tokens.len() != max_new {
+            return Err(format!("seq {i}: {} tokens != {max_new}", tokens.len()));
+        }
+        if *tokens != reference.expected_chain(*id, prompt_len, max_new) {
+            return Err(format!("seq {id}: dist tokens diverge from oracle chain"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_dist_single_rank_reproduces_lockstep_bit_for_bit() {
+    let mut runner = Runner::new("dist_single_rank_parity");
+    runner.run(10, |g| {
+        let w = gen_workload(g);
+        check_parity(
+            &w,
+            PipelineConfig::default(),
+            HashMap::new(),
+            1,
+            "dist(d=1, lockstep)",
+        )?;
+        ensure(true, "")
+    });
+}
+
+#[test]
+fn prop_dist_multi_rank_loopback_is_rank_count_invariant() {
+    let mut runner = Runner::new("dist_multi_rank_parity");
+    runner.run(8, |g| {
+        let w = gen_workload(g);
+        let d = *g.pick(&[2usize, 4]);
+        check_parity(
+            &w,
+            PipelineConfig::default(),
+            HashMap::new(),
+            d,
+            "dist(d>1, lockstep)",
+        )?;
+        ensure(true, "")
+    });
+}
+
+#[test]
+fn prop_dist_parity_survives_the_continuous_pipeline() {
+    let mut runner = Runner::new("dist_continuous_parity");
+    runner.run(8, |g| {
+        let w = gen_workload(g);
+        let chunk = g.usize_in(1, 16);
+        let d = g.usize_in(1, 3);
+        check_parity(
+            &w,
+            PipelineConfig::full(chunk),
+            HashMap::new(),
+            d,
+            "dist(full continuous pipeline)",
+        )?;
+        ensure(true, "")
+    });
+}
+
+#[test]
+fn prop_dist_parity_survives_ragged_gamma_overrides() {
+    let mut runner = Runner::new("dist_ragged_parity");
+    runner.run(8, |g| {
+        let w = gen_workload(g);
+        // Ragged γ⃗: a random per-sequence depth for every request.
+        let overrides: HashMap<u64, usize> = (0..w.specs.len() as u64)
+            .map(|id| (id, g.usize_in(0, 6)))
+            .collect();
+        let d = g.usize_in(1, 2);
+        check_parity(
+            &w,
+            PipelineConfig::default(),
+            overrides,
+            d,
+            "dist(ragged gamma overrides)",
+        )?;
+        ensure(true, "")
+    });
+}
+
+#[test]
+fn dist_parity_with_static_verify_budget() {
+    // Budgeted verify changes both cost and acceptance; the budget value
+    // travels inside each VerifyReq frame, so the distributed run must
+    // still match bit-for-bit.
+    let w = Workload {
+        alpha: 0.85,
+        gamma: 4,
+        max_batch: 4,
+        blocks: 48,
+        seed: 1234,
+        specs: vec![(6, 16, 0.0), (4, 12, 0.01), (9, 20, 0.02)],
+    };
+    let mut single = Engine::new(
+        engine_config(&w, PipelineConfig::default(), HashMap::new()),
+        {
+            let mut b = synthetic(&w).with_budget_alpha_curve(1.0);
+            b.set_verify_budget(Some(16));
+            b
+        },
+    );
+    submit_all(&mut single, &w);
+    let fp_single = fingerprint(&mut single).unwrap();
+
+    let (alpha, seed) = (w.alpha, w.seed);
+    let factory = move || -> anyhow::Result<SyntheticLm> {
+        let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+        let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+        Ok(SyntheticLm::new(target, draft, alpha, seed).with_budget_alpha_curve(1.0))
+    };
+    let mut backend = DistBackend::launch(
+        DistConfig {
+            verify_ranks: 2,
+            ..Default::default()
+        },
+        factory,
+    )
+    .unwrap();
+    backend.set_verify_budget(Some(16));
+    let mut dist = Engine::new(
+        engine_config(&w, PipelineConfig::default(), HashMap::new()),
+        backend,
+    );
+    submit_all(&mut dist, &w);
+    let fp_dist = fingerprint(&mut dist).unwrap();
+    assert_eq!(
+        fp_single, fp_dist,
+        "budgeted distributed run diverged from single-process"
+    );
+}
+
+#[test]
+fn prop_sharded_fabric_prices_the_hop_without_touching_tokens() {
+    let mut runner = Runner::new("dist_sharded_fabric");
+    runner.run(6, |g| {
+        let w = gen_workload(g);
+        let spec = ShardingSpec::new(Topology::nvlink(4));
+        let mut loopback = Engine::new(
+            engine_config(&w, PipelineConfig::default(), HashMap::new()),
+            dist_backend(&w, 2, DistFabric::Loopback),
+        );
+        submit_all(&mut loopback, &w);
+        let fp_loop = fingerprint(&mut loopback)?;
+        let mut sharded = Engine::new(
+            engine_config(&w, PipelineConfig::default(), HashMap::new()),
+            dist_backend(&w, 2, DistFabric::Sharded(spec)),
+        );
+        submit_all(&mut sharded, &w);
+        let fp_shard = fingerprint(&mut sharded)?;
+        // Tokens and round structure are fabric-invariant…
+        let tokens = |fp: &Fingerprint| {
+            fp.completions
+                .iter()
+                .map(|(id, t, _, _)| (*id, t.clone()))
+                .collect::<Vec<_>>()
+        };
+        ensure(
+            tokens(&fp_loop) == tokens(&fp_shard),
+            "sharded fabric changed tokens (it must only price communication)",
+        )?;
+        ensure(
+            fp_loop.rounds == fp_shard.rounds,
+            format!(
+                "sharded fabric changed round count: {} vs {}",
+                fp_loop.rounds, fp_shard.rounds
+            ),
+        )?;
+        // …but the clock only moves forward (hop cost ≥ 0, and > 0 as
+        // soon as at least one verify happened).
+        ensure(
+            fp_shard.clock >= fp_loop.clock,
+            format!(
+                "sharded clock {} behind loopback {}",
+                fp_shard.clock, fp_loop.clock
+            ),
+        )?;
+        if fp_loop.time_verify > 0.0 {
+            ensure(
+                fp_shard.clock > fp_loop.clock,
+                "verify rounds ran but the fabric hop priced nothing",
+            )?;
+        }
+        ensure(true, "")
+    });
+}
+
+#[test]
+fn dist_status_reports_the_fleet() {
+    let w = Workload {
+        alpha: 0.9,
+        gamma: 3,
+        max_batch: 4,
+        blocks: 32,
+        seed: 99,
+        specs: vec![(5, 10, 0.0), (7, 8, 0.01)],
+    };
+    let mut e = Engine::new(
+        engine_config(&w, PipelineConfig::default(), HashMap::new()),
+        dist_backend(&w, 2, DistFabric::Loopback),
+    );
+    submit_all(&mut e, &w);
+    e.run_to_completion(40_000).unwrap();
+    let status = e.backend().dist_status().expect("dist backend has status");
+    assert_eq!(status.workers.len(), 3, "1 draft + 2 verify ranks");
+    assert!(status.workers.iter().all(|h| h.alive));
+    assert_eq!(status.workers[0].rank, 0);
+    assert!(
+        status.workers.iter().all(|h| h.ops > 0),
+        "every worker executed compute ops: {status:?}"
+    );
+    assert_eq!(status.respawns, 0);
+    assert_eq!(status.retries, 0);
+    // Single-process backends report no fleet.
+    assert!(synthetic(&w).dist_status().is_none());
+    // The JSON surface carries the health table (ServerStats embeds this
+    // verbatim under the "dist" key).
+    let json = status.to_json().to_string();
+    for key in ["workers", "alive", "queue_depth", "respawns", "stale_discarded"] {
+        assert!(json.contains(key), "status JSON missing {key}: {json}");
+    }
+}
