@@ -165,17 +165,25 @@ PYEOF
         echo "budget.json shape OK (grep fallback)"
     fi
 
+    # Distributed coordinator overhead smoke: single-process vs the
+    # pipelined loopback coordinator at B in {8,32,128}, gating the
+    # <=5% per-round overhead budget at B=32 (same baseline rules as
+    # micro_hotpath: smoke never writes BENCH_dist_overhead.json).
+    echo "== dist_overhead smoke (MOESD_SMOKE=1, release bench)"
+    MOESD_SMOKE=1 cargo bench --bench dist_overhead
+
     # Distributed-serving smoke: boot the coordinator/worker engine
-    # (1 draft worker + 2 verify ranks, in-process loopback transport),
-    # replay a few rows of the bundled tiny trace through the TCP
-    # front-end, and validate the `"dist"` fleet table in the stats
-    # surface. The bit-exactness and fault-injection claims live in
-    # `cargo test` (prop_distributed / fault_injection); this gate pins
-    # the serve wiring end-to-end.
+    # (2 striped draft replicas + 2 verify ranks, in-process loopback
+    # transport, pipelining on), replay a few rows of the bundled tiny
+    # trace through the TCP front-end, and validate the `"dist"` fleet
+    # table in the stats surface — including the PR-10 pipelining and
+    # op-log compaction counters. The bit-exactness and fault-injection
+    # claims live in `cargo test` (prop_distributed / fault_injection);
+    # this gate pins the serve wiring end-to-end.
     DIST_PORT=7461
-    echo "== distributed serve smoke (--dist-workers 2, port $DIST_PORT)"
+    echo "== distributed serve smoke (--dist-workers 2 --draft-workers 2, port $DIST_PORT)"
     cargo run --release --bin moesd -- serve --mode synthetic \
-        --port "$DIST_PORT" --dist-workers 2 --max-batch 4 &
+        --port "$DIST_PORT" --dist-workers 2 --draft-workers 2 --max-batch 4 &
     DIST_PID=$!
     trap 'kill "$DIST_PID" 2>/dev/null || true' EXIT
     for _ in $(seq 1 100); do
@@ -220,18 +228,22 @@ stats = json.loads(f.readline())
 s.close()
 dist = stats["dist"]
 workers = dist["workers"]
-assert len(workers) == 3, f"want 1 draft + 2 verify ranks, got {len(workers)}"
-assert workers[0]["role"] == "draft", workers[0]
-assert [w["role"] for w in workers[1:]] == ["verify", "verify"], workers
+assert len(workers) == 4, f"want 2 draft + 2 verify ranks, got {len(workers)}"
+assert [w["role"] for w in workers] == ["draft", "draft", "verify", "verify"], workers
+assert [w["rank"] for w in workers] == [0, 1, 0, 1], workers
 for w in workers:
     for key in ("role", "rank", "alive", "queue_depth", "ops",
                 "retries", "respawns", "heartbeat"):
         assert key in w, f"worker missing {key}: {sorted(w.keys())}"
     assert w["alive"] is True, f"dead worker in a clean run: {w}"
     assert w["ops"] > 0, f"worker served no compute ops: {w}"
-for key in ("retries", "respawns", "stale_discarded", "wire_errors"):
+for key in ("retries", "respawns", "stale_discarded", "wire_errors",
+            "in_flight", "pipelined", "oplog_len", "snapshots",
+            "compacted_ops", "replayed_ops"):
     assert key in dist, f"dist missing {key}: {sorted(dist.keys())}"
 assert dist["respawns"] == 0, f"clean loopback run respawned: {dist}"
+assert dist["pipelined"] > 0, f"nothing completed in flight: {dist}"
+assert dist["replayed_ops"] == 0, f"clean run replayed ops: {dist}"
 print(f"dist stats shape OK ({done} requests, {len(workers)} workers)")
 PYEOF
     else
@@ -241,7 +253,8 @@ PYEOF
         printf '{"stats": true}\n' >&3
         read -r STATS_LINE <&3
         exec 3>&- 3<&- || true
-        for key in '"dist"' '"workers"' '"alive"' '"respawns"' '"stale_discarded"'; do
+        for key in '"dist"' '"workers"' '"alive"' '"respawns"' '"stale_discarded"' \
+                   '"in_flight"' '"pipelined"' '"oplog_len"' '"snapshots"'; do
             case "$STATS_LINE" in
                 *"$key"*) ;;
                 *) echo "dist stats missing $key"; exit 1 ;;

@@ -1,0 +1,280 @@
+//! Coordinator overhead of the distributed engine (PR 10).
+//!
+//! Runs the same decode-steady-state workload through the single-process
+//! engine and through `DistBackend` on the in-process loopback transport
+//! (1 draft + 2 verify ranks, pipelining on) at B ∈ {8, 32, 128}, and
+//! prices what the message-passing coordinator adds per round: frame
+//! encode/decode, channel hops, op-log append, in-flight bookkeeping.
+//! Both runs execute bit-identical rounds (that is the conformance
+//! suite's invariant), so the wall-clock delta is pure dist machinery.
+//!
+//! Assertion this bench gates every run: at B=32 the *whole* distributed
+//! coordinator step — single-process scheduling plus all wire overhead —
+//! stays under 5% of the simulated model step, the same §Perf budget
+//! `micro_hotpath` holds for the local engine.
+//!
+//! Also reported (not gated): the drain-after-every-op (serial) round
+//! time at B=32, i.e. what pipelining buys, and a striped-draft
+//! (`draft_ranks=2`) round for the scale-out path.
+//!
+//! Output: `results/dist_overhead.{txt,json}`; full runs seed/refresh
+//! the tracked `BENCH_dist_overhead.json` baseline (same rules as
+//! `micro_hotpath`: smoke runs never write it).
+
+use moesd::arch::presets;
+use moesd::batching::{Request, SamplingParams};
+use moesd::benchlib::{
+    banner, bench_record_json, compare_to_baseline, repo_path, summarize, time_reps,
+    write_json_report, write_report, Json,
+};
+use moesd::dist::{DistBackend, DistConfig};
+use moesd::engine::{Engine, EngineConfig};
+use moesd::hardware::platform_2x_gpu_a;
+use moesd::kvcache::KvConfig;
+use moesd::scheduler::SchedulerConfig;
+use moesd::simulator::ExecSim;
+use moesd::spec::synthetic::SyntheticLm;
+use moesd::spec::SdBackend;
+use moesd::util::stats;
+
+fn synthetic() -> SyntheticLm {
+    let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
+    let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
+    SyntheticLm::new(target, draft, 0.9, 3)
+}
+
+fn dist(verify_ranks: usize, draft_ranks: usize, pipeline: bool) -> DistBackend<SyntheticLm> {
+    DistBackend::launch(
+        DistConfig {
+            verify_ranks,
+            draft_ranks,
+            pipeline,
+            ..Default::default()
+        },
+        move || -> anyhow::Result<SyntheticLm> { Ok(synthetic()) },
+    )
+    .expect("dist launch")
+}
+
+/// Decode-steady-state engine at the given batch, γ=4: B sequences that
+/// never finish, prefilled and one round in.
+fn steady<B: SdBackend>(backend: B, batch: usize) -> Engine<B> {
+    let mut engine = Engine::new(
+        EngineConfig {
+            gamma: 4,
+            kv: KvConfig {
+                num_blocks: 1 << 14,
+                block_size: 16,
+            },
+            scheduler: SchedulerConfig {
+                max_batch: batch,
+                admit_reserve_tokens: 1 << 12,
+                tpot_slo: None,
+            },
+            ..Default::default()
+        },
+        backend,
+    );
+    for id in 0..batch as u64 {
+        engine.submit(Request {
+            id,
+            prompt: (0..16u32).collect(),
+            params: SamplingParams {
+                temperature: 0.0,
+                max_new_tokens: 1 << 20, // never finishes during the bench
+                eos_token: None,
+            },
+            arrival: 0.0,
+            class: 0,
+        });
+    }
+    engine.step().unwrap(); // prefill + first round
+    engine
+}
+
+fn main() {
+    banner("dist_overhead", "distributed coordinator cost per round");
+    let smoke = std::env::var("MOESD_SMOKE").map_or(false, |v| v != "0" && !v.is_empty());
+    let scale: usize = if smoke { 20 } else { 1 };
+    let reps = |n: usize| (n / scale).max(3);
+
+    let mut lines: Vec<String> = Vec::new();
+    let mut records: Vec<Json> = Vec::new();
+    fn push(lines: &mut Vec<String>, records: &mut Vec<Json>, name: &str, secs: &[f64]) -> f64 {
+        lines.push(summarize(name, secs));
+        records.push(bench_record_json(name, secs));
+        stats::mean(secs)
+    }
+
+    // --- single-process vs dist(loopback, pipelined) at each batch ----------
+    // Returns (single wall, dist wall, simulated model step).
+    let mut pair = |lines: &mut Vec<String>,
+                    records: &mut Vec<Json>,
+                    batch: usize,
+                    warmup: usize,
+                    n: usize|
+     -> (f64, f64, f64) {
+        let mut sp = steady(synthetic(), batch);
+        let sp_secs = time_reps(
+            || {
+                sp.step().unwrap();
+            },
+            warmup,
+            n,
+        );
+        let sp_wall = push(lines, records, &format!("engine_step_single_b{batch}"), &sp_secs);
+        let sim_step = sp.metrics.decode_time() / sp.metrics.rounds as f64;
+
+        let mut de = steady(dist(2, 1, true), batch);
+        let d_secs = time_reps(
+            || {
+                de.step().unwrap();
+            },
+            warmup,
+            n,
+        );
+        let d_wall = push(lines, records, &format!("engine_step_dist_b{batch}"), &d_secs);
+        (sp_wall, d_wall, sim_step)
+    };
+
+    let (sp8, d8, sim8) = pair(&mut lines, &mut records, 8, reps(20), reps(300));
+    let (sp32, d32, sim32) = pair(&mut lines, &mut records, 32, reps(20), reps(300));
+    let (sp128, d128, sim128) = pair(&mut lines, &mut records, 128, reps(10), reps(100));
+
+    for (batch, sp, d, sim) in [
+        (8usize, sp8, d8, sim8),
+        (32, sp32, d32, sim32),
+        (128, sp128, d128, sim128),
+    ] {
+        let added = (d - sp).max(0.0);
+        lines.push(format!(
+            "  B={batch}: single {:.3}ms, dist {:.3}ms (+{:.3}ms wire) per round; \
+             model step {:.3}ms; dist coordinator = {:.2}% of model time",
+            sp * 1e3,
+            d * 1e3,
+            added * 1e3,
+            sim * 1e3,
+            d / sim * 100.0
+        ));
+    }
+
+    // §Perf gate: at B=32 the full distributed coordinator round — local
+    // scheduling plus encode/hop/decode/op-log — fits the same 5% budget
+    // the local engine holds.
+    let dist_ratio = d32 / sim32;
+    assert!(
+        dist_ratio < 0.05,
+        "dist coordinator at B=32 is {:.2}% of the simulated model step \
+         (budget: 5%); single-process was {:.2}%",
+        dist_ratio * 100.0,
+        sp32 / sim32 * 100.0
+    );
+
+    // --- context points at B=32 (reported, not gated) -----------------------
+    // Serial coordinator: drain every op before the next — what the
+    // pipelined in-flight window replaces.
+    let serial32 = {
+        let mut e = steady(dist(2, 1, false), 32);
+        let secs = time_reps(
+            || {
+                e.step().unwrap();
+            },
+            reps(20),
+            reps(300),
+        );
+        push(&mut lines, &mut records, "engine_step_dist_serial_b32", &secs)
+    };
+    // Striped drafting: propose sharded across 2 draft replicas.
+    let striped32 = {
+        let mut e = steady(dist(2, 2, true), 32);
+        let secs = time_reps(
+            || {
+                e.step().unwrap();
+            },
+            reps(20),
+            reps(300),
+        );
+        push(
+            &mut lines,
+            &mut records,
+            "engine_step_dist_draft2_b32",
+            &secs,
+        )
+    };
+    lines.push(format!(
+        "  B=32 context: serial (no pipelining) {:.3}ms vs pipelined {:.3}ms \
+         ({:.2}x); striped draft_ranks=2 {:.3}ms",
+        serial32 * 1e3,
+        d32 * 1e3,
+        serial32 / d32,
+        striped32 * 1e3
+    ));
+
+    // --- reports ------------------------------------------------------------
+    let report = lines.join("\n");
+    println!("{report}");
+    write_report("dist_overhead.txt", &report).unwrap();
+
+    let json = Json::from_pairs(vec![
+        ("schema", Json::Num(1.0)),
+        ("bench", Json::Str("dist_overhead".into())),
+        ("populated", Json::Bool(true)),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "summary",
+            Json::from_pairs(vec![
+                ("single_step_wall_s_b8", Json::Num(sp8)),
+                ("single_step_wall_s_b32", Json::Num(sp32)),
+                ("single_step_wall_s_b128", Json::Num(sp128)),
+                ("dist_step_wall_s_b8", Json::Num(d8)),
+                ("dist_step_wall_s_b32", Json::Num(d32)),
+                ("dist_step_wall_s_b128", Json::Num(d128)),
+                ("dist_serial_step_wall_s_b32", Json::Num(serial32)),
+                ("dist_draft2_step_wall_s_b32", Json::Num(striped32)),
+                ("dist_pct_of_model_step_b32", Json::Num(dist_ratio * 100.0)),
+            ]),
+        ),
+        ("metrics", Json::Arr(records)),
+    ]);
+    write_json_report("dist_overhead.json", &json).unwrap();
+
+    // Perf-regression harness, same rules as micro_hotpath: compare
+    // before maintenance; smoke uses 3x-wider bands and never writes the
+    // baseline; MOESD_SKIP_BASELINE=1 opts out on foreign machines.
+    let baseline = repo_path("BENCH_dist_overhead.json");
+    let skip_cmp =
+        std::env::var("MOESD_SKIP_BASELINE").map_or(false, |v| v != "0" && !v.is_empty());
+    if !skip_cmp {
+        if let Ok(base) = Json::parse_file(&baseline) {
+            let (warn, fail) = if smoke { (0.15, 0.45) } else { (0.05, 0.15) };
+            let report = compare_to_baseline(&json, &base, warn, fail);
+            println!("{}", report.summary());
+            for w in &report.warnings {
+                println!("  perf WARN: {w}");
+            }
+            for f in &report.failures {
+                println!("  perf FAIL: {f}");
+            }
+            assert!(
+                report.failures.is_empty(),
+                "dist_overhead regressed >{:.0}% vs BENCH_dist_overhead.json on {} metric(s) \
+                 (MOESD_WRITE_BASELINE=1 rebaselines after an intentional change; \
+                 MOESD_SKIP_BASELINE=1 skips on foreign machines): {:?}",
+                fail * 100.0,
+                report.failures.len(),
+                report.failures
+            );
+        }
+    }
+
+    let force = std::env::var("MOESD_WRITE_BASELINE").map_or(false, |v| v != "0" && !v.is_empty());
+    let unpopulated = Json::parse_file(&baseline)
+        .ok()
+        .and_then(|j| j.get("populated").and_then(Json::as_bool))
+        != Some(true);
+    if !smoke && (force || unpopulated) {
+        std::fs::write(&baseline, json.to_pretty()).unwrap();
+        println!("perf baseline written to {}", baseline.display());
+    }
+    println!("dist_overhead: done");
+}

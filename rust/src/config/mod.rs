@@ -103,6 +103,11 @@ pub struct Config {
     /// 0 = single-process (the default). Bit-identical output either
     /// way — the conformance suite pins it.
     pub dist_workers: usize,
+    /// Draft replicas the distributed propose path stripes across
+    /// (per-sequence home ranks, costs combined as `max + hop` like the
+    /// verify fan). 1 (the default) is byte-identical to the
+    /// single-process draft; only meaningful with `dist_workers > 0`.
+    pub draft_workers: usize,
 }
 
 impl Default for Config {
@@ -132,6 +137,7 @@ impl Default for Config {
             verify_budget: 0,
             adaptive_budget: false,
             dist_workers: 0,
+            draft_workers: 1,
         }
     }
 }
@@ -183,6 +189,7 @@ impl Config {
                 .and_then(Json::as_bool)
                 .unwrap_or(false),
             dist_workers: usize_or("dist_workers", d.dist_workers),
+            draft_workers: usize_or("draft_workers", d.draft_workers),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -260,6 +267,16 @@ impl Config {
             !(self.dist_workers > 0 && self.mode == Mode::Hlo),
             "distributed serving requires synthetic mode (the HLO backend \
              serves one host; socket workers are the planned lift)"
+        );
+        anyhow::ensure!(
+            (1..=16).contains(&self.draft_workers),
+            "draft_workers {} out of range (1..=16 draft replicas)",
+            self.draft_workers
+        );
+        anyhow::ensure!(
+            !(self.draft_workers > 1 && self.dist_workers == 0),
+            "draft_workers > 1 stripes the distributed propose path; it \
+             needs --dist-workers N (single-process has one draft)"
         );
         if self.verify_budget > 0 || self.adaptive_budget {
             anyhow::ensure!(
@@ -412,6 +429,7 @@ impl Config {
             ("verify_budget", self.verify_budget.into()),
             ("adaptive_budget", self.adaptive_budget.into()),
             ("dist_workers", self.dist_workers.into()),
+            ("draft_workers", self.draft_workers.into()),
         ])
     }
 }
@@ -675,6 +693,37 @@ mod tests {
         }
         .validate()
         .is_err());
+    }
+
+    #[test]
+    fn draft_workers_round_trips_and_validates() {
+        // Default is one draft replica (the bit-exact configuration).
+        assert_eq!(Config::default().draft_workers, 1);
+        let c = Config {
+            dist_workers: 2,
+            draft_workers: 2,
+            ..Config::default()
+        };
+        c.validate().unwrap();
+        let c2 = Config::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.draft_workers, 2);
+        // Missing key falls back to the default.
+        let j = Json::parse(r#"{"gamma": 2}"#).unwrap();
+        assert_eq!(Config::from_json(&j).unwrap().draft_workers, 1);
+        // Rejections: zero/absurd replica counts, striping without the
+        // distributed engine.
+        for (dist, draft) in [(2, 0), (2, 17), (0, 2)] {
+            assert!(
+                Config {
+                    dist_workers: dist,
+                    draft_workers: draft,
+                    ..Config::default()
+                }
+                .validate()
+                .is_err(),
+                "dist={dist} draft={draft} should be rejected"
+            );
+        }
     }
 
     #[test]

@@ -15,36 +15,83 @@
 //!   `max + fabric hop`, where the loopback fabric's hop is exactly
 //!   `0.0` — so `max` over bit-identical values plus zero preserves the
 //!   single-process clock bit-for-bit;
+//! * propose is striped across `draft_ranks` replicas by home rank
+//!   `seq % N` with a per-rank seed derivative; rank 0 receives the
+//!   verbatim engine seed, so `N = 1` (the default) is byte-identical
+//!   to the single-process propose call;
 //! * all RNG (rejection sampling) stays on the coordinator inside the
 //!   engine, consuming [`LogitsView`] rows that round-trip the wire
 //!   codec losslessly (`f64` travels as raw bits).
 //!
+//! Hot-path shape (the PR-10 overhaul):
+//!
+//! * **Zero-copy requests** — each op is encoded exactly once, straight
+//!   from engine-native slices into a pooled buffer, and the resulting
+//!   `Arc<Vec<u8>>` is shared by the wire send, any retransmit, and the
+//!   op log. No `Subject` is materialized and no batch is cloned on
+//!   the request path.
+//! * **Pipelining** — ops that do not produce a result the engine is
+//!   waiting for (verify fan stragglers past the first response,
+//!   prefill fan stragglers, admit/evict flushes) stay *in flight* and
+//!   complete out of order, matched by op id, while the engine's next
+//!   op is already on the wire. This is how the next round's propose
+//!   overlaps the current verify fan: the engine prices the pair as
+//!   `max(draft, verify)` (see `engine/continuous.rs`) and the
+//!   transport no longer serializes them. Because every op is still
+//!   *dispatched* in program order over FIFO links and replicas are
+//!   deterministic, pipelining changes no computed value — `pipeline:
+//!   false` (drain after every op) is bit-identical and the
+//!   conformance suite pins it.
+//! * **Op-log compaction** — the recovery log is periodically replaced
+//!   by a state snapshot synthesized from the coordinator's committed
+//!   token mirror, so respawn replay is `O(live state + window)` rather
+//!   than `O(lifetime ops)` and coordinator memory stays bounded.
+//!
 //! Robustness is part of the op contract: every round trip carries a
 //! per-op deadline and bounded retries; worker death (detected by the
 //! endpoint liveness flag, no joins) triggers a respawn that rebuilds
-//! the replica by replaying the coordinator's op log — event-sourced
-//! recovery, valid because the backend contract is deterministic. Op ids
-//! make retries idempotent (workers replay cached responses; the
-//! coordinator discards stale duplicates).
+//! the replica by replaying snapshot + log — event-sourced recovery,
+//! valid because the backend contract is deterministic. Op ids make
+//! retries idempotent (workers replay cached responses from a
+//! [`REPLAY_RING`]-deep ring; the coordinator discards stale
+//! duplicates). Failures of in-flight ops cannot surface mid-engine
+//! -step, so they are deferred and raised at the next backend call.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::hardware::ShardingSpec;
-use crate::spec::{ProposeOut, SdBackend, SeqId, VerifyOut};
+use crate::kvcache::SeqId;
+use crate::spec::{LogitsView, ProposeOut, SdBackend, VerifyOut};
 use crate::util::json::Json;
 
 use super::transport::{
     FaultPlan, FaultyTransport, InProcTransport, Transport, TransportError, WorkerEndpoint,
 };
-use super::wire::{Frame, StateOp, Subject};
-use super::worker::{run_worker, Role, WorkerOptions};
+use super::wire::{self, Frame, StateOp, Subject};
+use super::worker::{run_worker, Role, WorkerOptions, REPLAY_RING};
 
 /// Pending draft-side state ops are normally drained by the next
 /// propose; AR-only phases (γ=0) never propose, so verify flushes the
 /// queue with an explicit [`Subject::AdmitEvict`] once it exceeds this.
 const STATE_OP_FLUSH_THRESHOLD: usize = 64;
+
+/// Sequences per synthesized `PrefillChunk` when compaction snapshots
+/// live state (keeps each snapshot frame well under `MAX_FRAME_BYTES`).
+const SNAPSHOT_CHUNK: usize = 256;
+
+/// Retired request buffers kept for reuse by the encoder pool.
+const POOL_CAP: usize = 64;
+
+/// Per-rank derivative of the engine's propose seed. Rank 0 is the
+/// *identity* — a single draft rank sees exactly the single-process
+/// seed, which is what makes `draft_ranks = 1` bit-exact. Higher ranks
+/// decorrelate with a splitmix-style odd multiplier.
+pub fn stripe_seed(seed: u64, rank: usize) -> u64 {
+    seed ^ (rank as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
 
 /// How verify-rank costs combine across the worker fabric.
 #[derive(Debug, Clone, PartialEq)]
@@ -71,8 +118,22 @@ impl DistFabric {
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct DistConfig {
-    /// Verify EP ranks (worker count is `1 + verify_ranks`).
+    /// Verify EP ranks (worker count is `draft_ranks + verify_ranks`).
     pub verify_ranks: usize,
+    /// Draft replicas the propose path stripes across (`--draft-workers`).
+    /// `1` (the default) is byte-identical to the single-process draft.
+    pub draft_ranks: usize,
+    /// Allow out-of-order completion of non-result-bearing ops. `false`
+    /// drains after every op (bit-identical; useful for debugging).
+    pub pipeline: bool,
+    /// In-flight op cap before the coordinator stops and drains. Must
+    /// stay within the workers' [`REPLAY_RING`] so a retransmit of any
+    /// outstanding op still hits the dedup ring instead of re-executing.
+    pub max_in_flight: usize,
+    /// Compact the recovery log (snapshot + truncate) once it holds
+    /// this many ops. `0` disables compaction (the log then grows for
+    /// the backend's lifetime, as in PR 9).
+    pub oplog_window: usize,
     /// Per-attempt deadline for one op round trip.
     pub deadline: Duration,
     /// Retries per op before escalating to a respawn.
@@ -90,6 +151,10 @@ impl Default for DistConfig {
     fn default() -> Self {
         DistConfig {
             verify_ranks: 1,
+            draft_ranks: 1,
+            pipeline: true,
+            max_in_flight: 8,
+            oplog_window: 512,
             deadline: Duration::from_secs(5),
             max_retries: 2,
             fabric: DistFabric::Loopback,
@@ -105,6 +170,17 @@ impl DistConfig {
             (1..=64).contains(&self.verify_ranks),
             "dist: verify_ranks must be in 1..=64, got {}",
             self.verify_ranks
+        );
+        anyhow::ensure!(
+            (1..=16).contains(&self.draft_ranks),
+            "dist: draft_ranks must be in 1..=16, got {}",
+            self.draft_ranks
+        );
+        anyhow::ensure!(
+            (1..=REPLAY_RING).contains(&self.max_in_flight),
+            "dist: max_in_flight must be in 1..={REPLAY_RING} \
+             (the worker retransmit-dedup ring), got {}",
+            self.max_in_flight
         );
         anyhow::ensure!(
             !self.deadline.is_zero(),
@@ -158,6 +234,18 @@ pub struct DistStatus {
     pub respawns: u64,
     pub stale_discarded: u64,
     pub wire_errors: u64,
+    /// Ops currently awaiting out-of-order completion.
+    pub in_flight: usize,
+    /// Responses consumed out-of-band (while a later op was current).
+    pub pipelined: u64,
+    /// Recovery-log length (ops since the last snapshot).
+    pub oplog_len: usize,
+    /// Compactions performed.
+    pub snapshots: u64,
+    /// Ops retired from the log by compaction over the lifetime.
+    pub compacted_ops: u64,
+    /// Frames re-sent into respawned replicas (replay volume).
+    pub replayed_ops: u64,
 }
 
 impl DistStatus {
@@ -171,15 +259,52 @@ impl DistStatus {
             ("respawns", (self.respawns as usize).into()),
             ("stale_discarded", (self.stale_discarded as usize).into()),
             ("wire_errors", (self.wire_errors as usize).into()),
+            ("in_flight", self.in_flight.into()),
+            ("pipelined", (self.pipelined as usize).into()),
+            ("oplog_len", self.oplog_len.into()),
+            ("snapshots", (self.snapshots as usize).into()),
+            ("compacted_ops", (self.compacted_ops as usize).into()),
+            ("replayed_ops", (self.replayed_ops as usize).into()),
         ])
     }
 }
 
-/// One completed op as remembered for worker recovery. Verify ranks all
-/// receive identical subjects, so one entry covers the whole rank fan.
+/// One completed op as remembered for worker recovery: the encoded
+/// request bytes themselves, per draft rank (stripes differ) and once
+/// for the verify fan (ranks receive identical frames). The `Arc`s are
+/// the very buffers that went over the wire — logging costs no copy.
 struct LoggedOp {
-    to_draft: Option<Subject>,
-    to_verify: Option<Subject>,
+    draft: Vec<Option<Arc<Vec<u8>>>>,
+    verify: Option<Arc<Vec<u8>>>,
+}
+
+/// One dispatched-but-unanswered target of an in-flight op.
+struct PendTarget {
+    w: usize,
+    frame: Arc<Vec<u8>>,
+    attempts: u32,
+}
+
+/// An op whose remaining targets complete out of order. Invariant: the
+/// op's [`LoggedOp`] entry is already in the log (registration happens
+/// after logging), so a respawn's replay always covers it.
+struct Pending {
+    targets: Vec<PendTarget>,
+}
+
+/// Coordinator-side mirror of one sequence's committed token stream,
+/// maintained so compaction can synthesize prefill snapshots. The dirty
+/// flags mark "a compute op has run whose state rollback has not yet
+/// been issued" — compaction only cuts at fully-clean points, where
+/// replica state is a pure function of the mirror.
+struct SeqMirror {
+    /// Committed tokens (`content.len() == target_len` at clean points).
+    /// Token *values* only matter to content-addressed backends; the
+    /// synthetic backend's state is length-determined and the
+    /// conformance suite pins the reconstruction.
+    content: Vec<u32>,
+    draft_dirty: bool,
+    target_dirty: bool,
 }
 
 #[derive(Debug, Default)]
@@ -188,6 +313,22 @@ struct Counters {
     respawns: u64,
     stale_discarded: u64,
     wire_errors: u64,
+    pipelined: u64,
+    snapshots: u64,
+    compacted_ops: u64,
+    replayed_ops: u64,
+}
+
+/// Completion requirement of one dispatch fan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Quorum {
+    /// Every target's response carries needed data (propose stripes,
+    /// heartbeats).
+    All,
+    /// Replicas are bit-identical, so the first response *is* the
+    /// result (`max` over equal costs); the rest are acks that may
+    /// trail as in-flight stragglers.
+    First,
 }
 
 /// The coordinator-resident backend. See the module docs for the
@@ -203,32 +344,42 @@ pub struct DistBackend<B: SdBackend + Send + 'static> {
     factory: Box<dyn Fn() -> anyhow::Result<B> + Send>,
     handles: Vec<Option<JoinHandle<()>>>,
     health: Vec<WorkerHealth>,
-    /// Event log of every completed state-bearing op, replayed into
-    /// fresh replicas on respawn. Grows for the life of the backend;
-    /// compaction (snapshot + truncate) is a known follow-up.
+    /// Recovery log since the last snapshot; bounded by `oplog_window`
+    /// (plus the in-progress round) when compaction is enabled.
     oplog: Vec<LoggedOp>,
+    /// Synthesized state snapshot replayed before `oplog` on respawn.
+    snapshot: Vec<LoggedOp>,
+    /// Out-of-order completions keyed by op id.
+    in_flight: HashMap<u64, Pending>,
     pending_draft: Vec<StateOp>,
     pending_verify: Vec<StateOp>,
     /// Coordinator-authoritative (target_len, draft_len) per sequence,
     /// mirrored from worker responses.
     lens: HashMap<SeqId, (usize, usize)>,
+    /// Committed-stream mirror feeding compaction snapshots.
+    mirror: HashMap<SeqId, SeqMirror>,
     /// Frames received while waiting for a different op (e.g. responses
     /// to the outer op arriving during a respawn replay).
     stash: VecDeque<(usize, Frame)>,
+    /// Failure of an in-flight op, surfaced at the next backend call.
+    deferred_error: Option<String>,
+    /// Retired request buffers for encoder reuse (refilled when
+    /// compaction retires log entries whose `Arc` became unique).
+    pool: Vec<Vec<u8>>,
     next_op: u64,
     budget: Option<usize>,
     counters: Counters,
 }
 
 impl<B: SdBackend + Send + 'static> DistBackend<B> {
-    /// Spawn `1 + verify_ranks` worker threads, each with its own
-    /// replica from `factory`, plus a local pricing replica.
+    /// Spawn `draft_ranks + verify_ranks` worker threads, each with its
+    /// own replica from `factory`, plus a local pricing replica.
     pub fn launch<F>(cfg: DistConfig, factory: F) -> anyhow::Result<Self>
     where
         F: Fn() -> anyhow::Result<B> + Send + 'static,
     {
         cfg.validate()?;
-        let n = 1 + cfg.verify_ranks;
+        let n = cfg.draft_ranks + cfg.verify_ranks;
         let (inproc, endpoints) = InProcTransport::new(n);
         let transport: Box<dyn Transport> = match &cfg.faults {
             Some(plan) => Box::new(FaultyTransport::new(inproc, plan.clone())),
@@ -238,7 +389,7 @@ impl<B: SdBackend + Send + 'static> DistBackend<B> {
         let mut health = Vec::with_capacity(n);
         for ep in endpoints {
             let w = ep.index();
-            let (role, rank) = Self::slot(w);
+            let (role, rank) = Self::slot_of(cfg.draft_ranks, w);
             let die = cfg
                 .die_after
                 .iter()
@@ -266,24 +417,33 @@ impl<B: SdBackend + Send + 'static> DistBackend<B> {
             handles,
             health,
             oplog: Vec::new(),
+            snapshot: Vec::new(),
+            in_flight: HashMap::new(),
             pending_draft: Vec::new(),
             pending_verify: Vec::new(),
             lens: HashMap::new(),
+            mirror: HashMap::new(),
             stash: VecDeque::new(),
+            deferred_error: None,
+            pool: Vec::new(),
             next_op: 1,
             budget: None,
             counters: Counters::default(),
         })
     }
 
-    /// Worker slot layout: 0 is the draft worker, `1..=d` are verify
-    /// EP ranks `0..d`.
-    fn slot(w: usize) -> (Role, u32) {
-        if w == 0 {
-            (Role::Draft, 0)
+    /// Worker slot layout: `0..draft_ranks` are draft ranks, the rest
+    /// are verify EP ranks.
+    fn slot_of(draft_ranks: usize, w: usize) -> (Role, u32) {
+        if w < draft_ranks {
+            (Role::Draft, w as u32)
         } else {
-            (Role::Verify, (w - 1) as u32)
+            (Role::Verify, (w - draft_ranks) as u32)
         }
+    }
+
+    fn slot(&self, w: usize) -> (Role, u32) {
+        Self::slot_of(self.cfg.draft_ranks, w)
     }
 
     fn spawn(
@@ -298,22 +458,55 @@ impl<B: SdBackend + Send + 'static> DistBackend<B> {
         })
     }
 
-    fn verify_workers(&self) -> std::ops::RangeInclusive<usize> {
-        1..=self.cfg.verify_ranks
+    fn draft_workers(&self) -> std::ops::Range<usize> {
+        0..self.cfg.draft_ranks
+    }
+
+    fn verify_workers(&self) -> std::ops::Range<usize> {
+        self.cfg.draft_ranks..self.cfg.draft_ranks + self.cfg.verify_ranks
+    }
+
+    fn alloc_op(&mut self) -> u64 {
+        let op = self.next_op;
+        self.next_op += 1;
+        op
+    }
+
+    /// Grab a retired request buffer (or a fresh one) for the encoder.
+    fn take_buf(&mut self) -> Vec<u8> {
+        self.pool.pop().unwrap_or_default()
+    }
+
+    /// Return a retired log entry's buffers to the pool where the `Arc`
+    /// is no longer shared.
+    fn recycle_entry(&mut self, entry: LoggedOp) {
+        for arc in entry.draft.into_iter().flatten().chain(entry.verify) {
+            if self.pool.len() >= POOL_CAP {
+                return;
+            }
+            if let Ok(mut buf) = Arc::try_unwrap(arc) {
+                buf.clear();
+                self.pool.push(buf);
+            }
+        }
     }
 
     /// Liveness ping: round-trips a heartbeat through every worker and
     /// records the acknowledged nonce in the health table.
     pub fn ping(&mut self) -> anyhow::Result<()> {
-        let nonce = self.next_op;
+        let op = self.alloc_op();
         let targets: Vec<usize> = (0..self.transport.workers()).collect();
-        let subjects: Vec<Subject> = targets
-            .iter()
-            .map(|_| Subject::Heartbeat { nonce })
-            .collect();
-        let resps = self.rpc(&targets, subjects)?;
+        let arc = Arc::new(
+            Frame {
+                op,
+                subject: Subject::Heartbeat { nonce: op },
+            }
+            .encode(),
+        );
+        let frames: Vec<Arc<Vec<u8>>> = targets.iter().map(|_| Arc::clone(&arc)).collect();
+        let resps = self.rpc_frames(op, &targets, frames, Quorum::All, None)?;
         for (i, resp) in resps.into_iter().enumerate() {
-            if let Subject::HeartbeatAck { nonce } = resp {
+            if let Some(Subject::HeartbeatAck { nonce }) = resp {
                 self.health[targets[i]].heartbeat = nonce;
             }
         }
@@ -333,90 +526,236 @@ impl<B: SdBackend + Send + 'static> DistBackend<B> {
             respawns: self.counters.respawns,
             stale_discarded: self.counters.stale_discarded,
             wire_errors: self.counters.wire_errors,
+            in_flight: self.in_flight.len(),
+            pipelined: self.counters.pipelined,
+            oplog_len: self.oplog.len(),
+            snapshots: self.counters.snapshots,
+            compacted_ops: self.counters.compacted_ops,
+            replayed_ops: self.counters.replayed_ops,
         }
     }
 
-    /// Dispatch `subjects[i]` to `targets[i]` under one op id and wait
-    /// for every response, enforcing the per-op deadline, bounded
-    /// retries, respawn-on-death, and stale-duplicate discard.
-    fn rpc(&mut self, targets: &[usize], subjects: Vec<Subject>) -> anyhow::Result<Vec<Subject>> {
-        debug_assert_eq!(targets.len(), subjects.len());
-        let op = self.next_op;
-        self.next_op += 1;
+    /// Raise a failure recorded for an op that completed out-of-band.
+    fn fail_deferred(&mut self) -> anyhow::Result<()> {
+        if let Some(msg) = self.deferred_error.take() {
+            anyhow::bail!("dist: deferred in-flight failure: {msg}");
+        }
+        Ok(())
+    }
 
+    /// Stop issuing new ops once the in-flight window is full — the
+    /// cap keeps every outstanding op inside the workers' retransmit
+    /// rings, which is what makes retries of them idempotent.
+    fn backpressure(&mut self) -> anyhow::Result<()> {
+        if self.in_flight.len() >= self.cfg.max_in_flight {
+            self.drain_in_flight()?;
+        }
+        Ok(())
+    }
+
+    /// Pull the next frame: stashed first, then the wire. `None` means
+    /// the deadline expired with nothing to read.
+    fn next_frame(&mut self) -> anyhow::Result<Option<(usize, Frame)>> {
+        if let Some(hit) = self.stash.pop_front() {
+            return Ok(Some(hit));
+        }
+        loop {
+            match self.transport.recv_timeout(self.cfg.deadline) {
+                Ok(got) => return Ok(Some(got)),
+                Err(TransportError::Timeout) => return Ok(None),
+                Err(TransportError::Wire(_)) => {
+                    self.counters.wire_errors += 1;
+                }
+                Err(TransportError::Closed) => {
+                    anyhow::bail!("dist: coordinator upstream channel closed")
+                }
+            }
+        }
+    }
+
+    /// Route a frame that does not belong to the current blocking op:
+    /// either it completes an in-flight straggler or it is a stale
+    /// duplicate. Errors from in-flight ops cannot unwind the engine
+    /// mid-step, so they are deferred to the next backend call.
+    fn route_other(&mut self, w: usize, frame: Frame) {
+        let completed = match self.in_flight.get_mut(&frame.op) {
+            None => false,
+            Some(pend) => match pend.targets.iter().position(|t| t.w == w) {
+                None => false,
+                Some(pos) => {
+                    pend.targets.swap_remove(pos);
+                    if pend.targets.is_empty() {
+                        self.in_flight.remove(&frame.op);
+                    }
+                    true
+                }
+            },
+        };
+        if !completed {
+            self.counters.stale_discarded += 1;
+            return;
+        }
+        self.counters.pipelined += 1;
+        if let Subject::ErrorResp { message } = frame.subject {
+            let op = frame.op;
+            self.deferred_error
+                .get_or_insert_with(|| format!("worker {w} failed op {op}: {message}"));
+        }
+    }
+
+    /// Block until every in-flight op has completed (or escalated
+    /// through the retry/respawn ladder).
+    fn drain_in_flight(&mut self) -> anyhow::Result<()> {
+        while !self.in_flight.is_empty() {
+            match self.next_frame()? {
+                Some((w, frame)) => self.route_other(w, frame),
+                None => self.sweep_in_flight()?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Deadline sweep over in-flight stragglers: retransmit live slow
+    /// workers (bounded), respawn dead or wedged ones. Respawn replay
+    /// covers in-flight ops — they are logged before registration — so
+    /// a respawn simply removes the worker from every pending fan.
+    fn sweep_in_flight(&mut self) -> anyhow::Result<()> {
+        let lagging: Vec<(u64, usize, u32)> = self
+            .in_flight
+            .iter()
+            .flat_map(|(&op, p)| p.targets.iter().map(move |t| (op, t.w, t.attempts)))
+            .collect();
+        let mut respawned: Vec<usize> = Vec::new();
+        for (op, w, attempts) in lagging {
+            if respawned.contains(&w) {
+                continue;
+            }
+            // A respawn above may have already cleared this entry.
+            let still_pending = self
+                .in_flight
+                .get(&op)
+                .is_some_and(|p| p.targets.iter().any(|t| t.w == w));
+            if !still_pending {
+                continue;
+            }
+            if !self.transport.is_attached(w) || attempts >= self.cfg.max_retries {
+                self.respawn(w)?;
+                respawned.push(w);
+            } else {
+                let bytes = {
+                    let pend = self.in_flight.get_mut(&op).expect("checked above");
+                    let t = pend
+                        .targets
+                        .iter_mut()
+                        .find(|t| t.w == w)
+                        .expect("checked above");
+                    t.attempts += 1;
+                    Arc::clone(&t.frame)
+                };
+                self.counters.retries += 1;
+                self.health[w].retries += 1;
+                self.send_raw(w, &bytes)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Dispatch `frames[i]` to `targets[i]` under one op id and wait
+    /// for the quorum, enforcing the per-op deadline, bounded retries,
+    /// respawn-on-death, and stale-duplicate discard. Unanswered
+    /// targets past the quorum are registered in flight (after `entry`
+    /// lands in the log, so recovery always covers them); with
+    /// `pipeline: false` they are drained before returning, which is
+    /// exactly the PR-9 serial behaviour.
+    fn rpc_frames(
+        &mut self,
+        op: u64,
+        targets: &[usize],
+        frames: Vec<Arc<Vec<u8>>>,
+        quorum: Quorum,
+        mut entry: Option<LoggedOp>,
+    ) -> anyhow::Result<Vec<Option<Subject>>> {
+        debug_assert_eq!(targets.len(), frames.len());
         let mut results: Vec<Option<Subject>> = vec![None; targets.len()];
         let mut attempts: Vec<u32> = vec![0; targets.len()];
         let mut respawned: Vec<bool> = vec![false; targets.len()];
 
         for (i, &w) in targets.iter().enumerate() {
-            self.send_or_respawn(w, op, &subjects[i], &mut respawned[i])?;
+            self.dispatch_or_respawn(w, &frames[i], &mut respawned[i])?;
         }
 
-        while results.iter().any(Option::is_none) {
-            // Drain the stash first: frames for this op that arrived
-            // while a respawn replay owned the receive loop.
-            let mut matched = None;
-            while let Some((w, frame)) = self.stash.pop_front() {
-                if frame.op == op {
-                    matched = Some((w, frame));
-                    break;
+        let need = match quorum {
+            Quorum::All => targets.len(),
+            Quorum::First => 1,
+        };
+        let mut have = 0usize;
+        while have < need {
+            match self.next_frame()? {
+                None => {
+                    self.sweep_current(op, targets, &frames, &results, &mut attempts, &mut respawned)?;
+                    self.sweep_in_flight()?;
                 }
-                self.counters.stale_discarded += 1;
-            }
-            let (w, frame) = match matched {
-                Some(hit) => hit,
-                None => match self.transport.recv_timeout(self.cfg.deadline) {
-                    Ok(got) => got,
-                    Err(TransportError::Timeout) => {
-                        self.handle_timeout(op, targets, &subjects, &results, &mut attempts, &mut respawned)?;
-                        continue;
+                Some((w, frame)) if frame.op == op => {
+                    let slot = targets
+                        .iter()
+                        .position(|&t| t == w)
+                        .filter(|&i| results[i].is_none());
+                    match slot {
+                        Some(i) => {
+                            if let Subject::ErrorResp { message } = &frame.subject {
+                                // Deterministic backend failure: remember
+                                // the op (replicas that executed it must
+                                // replay it on respawn) and surface the
+                                // error — no retry.
+                                if let Some(e) = entry.take() {
+                                    self.oplog.push(e);
+                                }
+                                anyhow::bail!("dist: worker {w} failed op {op}: {message}");
+                            }
+                            results[i] = Some(frame.subject);
+                            have += 1;
+                        }
+                        None => self.counters.stale_discarded += 1,
                     }
-                    Err(TransportError::Wire(_)) => {
-                        self.counters.wire_errors += 1;
-                        continue;
-                    }
-                    Err(TransportError::Closed) => {
-                        anyhow::bail!("dist: coordinator upstream channel closed")
-                    }
-                },
-            };
-            let slot = targets
-                .iter()
-                .position(|&t| t == w)
-                .filter(|&i| results[i].is_none());
-            match slot {
-                Some(i) if frame.op == op => {
-                    if let Subject::ErrorResp { message } = &frame.subject {
-                        // Deterministic backend failure: remember the op
-                        // (replicas that executed it must replay it on
-                        // respawn) and surface the error — no retry.
-                        self.log_op(targets, &subjects);
-                        anyhow::bail!("dist: worker {w} failed op {op}: {message}");
-                    }
-                    results[i] = Some(frame.subject);
-                    self.health[w].ops += u64::from(subjects[i].is_compute());
                 }
-                _ => {
-                    // Wrong op id, unexpected worker, or a duplicate of
-                    // an already-satisfied slot (e.g. the late copy of a
-                    // delayed-then-retried response).
-                    self.counters.stale_discarded += 1;
-                }
+                Some((w, frame)) => self.route_other(w, frame),
             }
         }
 
-        self.log_op(targets, &subjects);
-        Ok(results.into_iter().map(Option::unwrap).collect())
+        // Log first, then register stragglers: the in-flight invariant
+        // is that recovery replay always covers a pending op.
+        if let Some(e) = entry.take() {
+            self.oplog.push(e);
+        }
+        let stragglers: Vec<PendTarget> = targets
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| results[i].is_none())
+            .map(|(i, &w)| PendTarget {
+                w,
+                frame: Arc::clone(&frames[i]),
+                attempts: attempts[i],
+            })
+            .collect();
+        if !stragglers.is_empty() {
+            self.in_flight.insert(op, Pending { targets: stragglers });
+        }
+        if !self.cfg.pipeline {
+            self.drain_in_flight()?;
+        }
+        Ok(results)
     }
 
-    /// One deadline expiry: for every unsatisfied target, either retry,
-    /// respawn a dead/wedged worker, or give up.
+    /// One deadline expiry for the current blocking op: for every
+    /// unsatisfied target, either retry, respawn a dead/wedged worker,
+    /// or give up. The current op is *not yet logged*, so after a
+    /// respawn (which replays only logged ops) it is re-sent explicitly.
     #[allow(clippy::too_many_arguments)]
-    fn handle_timeout(
+    fn sweep_current(
         &mut self,
         op: u64,
         targets: &[usize],
-        subjects: &[Subject],
+        frames: &[Arc<Vec<u8>>],
         results: &[Option<Subject>],
         attempts: &mut [u32],
         respawned: &mut [bool],
@@ -429,28 +768,25 @@ impl<B: SdBackend + Send + 'static> DistBackend<B> {
                 // Worker died mid-op: respawn (replaying the log), then
                 // re-dispatch this op. A second death on the same op is
                 // a hard failure.
-                anyhow::ensure!(
-                    !respawned[i],
-                    "dist: worker {w} died twice during op {op}"
-                );
+                anyhow::ensure!(!respawned[i], "dist: worker {w} died twice during op {op}");
                 self.respawn(w)?;
                 respawned[i] = true;
                 attempts[i] = 0;
-                self.send(w, op, &subjects[i])?;
+                self.send_raw(w, &frames[i])?;
             } else if attempts[i] < self.cfg.max_retries {
                 attempts[i] += 1;
                 self.counters.retries += 1;
                 self.health[w].retries += 1;
-                self.send(w, op, &subjects[i])?;
+                self.send_raw(w, &frames[i])?;
             } else if !respawned[i] {
                 // Retries exhausted against a live worker: treat it as
                 // wedged. Reattach orphans the old endpoint (its queue
                 // channel closes, so the zombie thread exits on its next
-                // recv) and the replica is rebuilt from the log.
+                // recv) and the replica is rebuilt from snapshot + log.
                 self.respawn(w)?;
                 respawned[i] = true;
                 attempts[i] = 0;
-                self.send(w, op, &subjects[i])?;
+                self.send_raw(w, &frames[i])?;
             } else {
                 anyhow::bail!(
                     "dist: op {op} to worker {w} exceeded per-op deadline \
@@ -463,95 +799,206 @@ impl<B: SdBackend + Send + 'static> DistBackend<B> {
         Ok(())
     }
 
-    fn send(&mut self, w: usize, op: u64, subject: &Subject) -> anyhow::Result<()> {
-        let frame = Frame {
-            op,
-            subject: subject.clone(),
-        };
-        match self.transport.send(w, &frame) {
+    fn send_raw(&mut self, w: usize, bytes: &[u8]) -> anyhow::Result<()> {
+        match self.transport.send_bytes(w, bytes) {
             Ok(()) => Ok(()),
             Err(TransportError::Closed) => anyhow::bail!("dist: worker {w} channel closed"),
             Err(e) => anyhow::bail!("dist: send to worker {w} failed: {e}"),
         }
     }
 
-    fn send_or_respawn(
+    /// First dispatch of an op to one worker; a closed slot (death
+    /// noticed at send time) respawns and re-sends. Compute dispatches
+    /// are counted here — once per op per worker, retransmits excluded.
+    fn dispatch_or_respawn(
         &mut self,
         w: usize,
-        op: u64,
-        subject: &Subject,
+        bytes: &Arc<Vec<u8>>,
         respawned: &mut bool,
     ) -> anyhow::Result<()> {
-        let frame = Frame {
-            op,
-            subject: subject.clone(),
-        };
-        match self.transport.send(w, &frame) {
-            Ok(()) => Ok(()),
+        match self.transport.send_bytes(w, bytes) {
+            Ok(()) => {}
             Err(TransportError::Closed) => {
                 self.respawn(w)?;
                 *respawned = true;
-                self.send(w, op, subject)
+                self.send_raw(w, bytes)?;
             }
             Err(e) => anyhow::bail!("dist: send to worker {w} failed: {e}"),
         }
+        self.health[w].ops += u64::from(wire::peek_is_compute(bytes));
+        Ok(())
     }
 
-    /// Remember a completed state-bearing op for replica recovery.
-    /// Verify ranks receive identical subjects, so the first verify
-    /// target's subject stands for the whole fan.
-    fn log_op(&mut self, targets: &[usize], subjects: &[Subject]) {
-        let mut to_draft = None;
-        let mut to_verify = None;
-        for (i, &w) in targets.iter().enumerate() {
-            let state_bearing = subjects[i].is_compute()
-                || matches!(subjects[i], Subject::AdmitEvict { .. });
-            if !state_bearing {
-                continue;
-            }
-            if w == 0 {
-                to_draft = Some(subjects[i].clone());
-            } else if to_verify.is_none() {
-                to_verify = Some(subjects[i].clone());
-            }
+    /// Fire an `AdmitEvict` carrying `ops` at every rank of one role,
+    /// without waiting: the frame is logged and the acks complete in
+    /// flight (FIFO links guarantee the state ops land before any later
+    /// compute op).
+    fn flush_role_ops(&mut self, role: Role, ops: Vec<StateOp>) -> anyhow::Result<()> {
+        if ops.is_empty() {
+            return Ok(());
         }
-        if to_draft.is_some() || to_verify.is_some() {
-            self.oplog.push(LoggedOp { to_draft, to_verify });
+        let op = self.alloc_op();
+        let mut buf = self.take_buf();
+        wire::encode_admit_evict(&mut buf, op, &ops);
+        let arc = Arc::new(buf);
+        let targets: Vec<usize> = match role {
+            Role::Draft => self.draft_workers().collect(),
+            Role::Verify => self.verify_workers().collect(),
+        };
+        let mut pend = Vec::with_capacity(targets.len());
+        for &w in &targets {
+            let mut respawned = false;
+            self.dispatch_or_respawn(w, &arc, &mut respawned)?;
+            pend.push(PendTarget {
+                w,
+                frame: Arc::clone(&arc),
+                attempts: 0,
+            });
         }
+        let dr = self.cfg.draft_ranks;
+        let entry = match role {
+            Role::Draft => LoggedOp {
+                draft: (0..dr).map(|_| Some(Arc::clone(&arc))).collect(),
+                verify: None,
+            },
+            Role::Verify => LoggedOp {
+                draft: vec![None; dr],
+                verify: Some(Arc::clone(&arc)),
+            },
+        };
+        self.oplog.push(entry);
+        self.in_flight.insert(op, Pending { targets: pend });
+        if !self.cfg.pipeline {
+            self.drain_in_flight()?;
+        }
+        Ok(())
+    }
+
+    /// Compact the recovery log when it exceeds the configured window
+    /// and the mirror is at a clean cut (no compute op's rollback still
+    /// outstanding). Pending state-op queues are flushed to the fleet
+    /// first so the snapshot base and the log tail stay order-consistent
+    /// (a post-snapshot replay must never roll back a sequence the
+    /// snapshot no longer contains).
+    fn maybe_compact(&mut self) -> anyhow::Result<()> {
+        if self.cfg.oplog_window == 0 || self.oplog.len() < self.cfg.oplog_window {
+            return Ok(());
+        }
+        if self
+            .mirror
+            .values()
+            .any(|m| m.draft_dirty || m.target_dirty)
+        {
+            return Ok(());
+        }
+        let draft_ops = std::mem::take(&mut self.pending_draft);
+        self.flush_role_ops(Role::Draft, draft_ops)?;
+        let verify_ops = std::mem::take(&mut self.pending_verify);
+        self.flush_role_ops(Role::Verify, verify_ops)?;
+        self.drain_in_flight()?;
+        self.compact()
+    }
+
+    /// Replace snapshot + log with a fresh snapshot synthesized from
+    /// the committed-stream mirror: chunked `PrefillChunk` frames that
+    /// re-admit every live sequence (the placeholder tail token is the
+    /// not-yet-processed "next input", superseded by the next verify's
+    /// feed), plus one draft-side `AdmitEvict` clamping draft lengths
+    /// below the committed base where rollbacks had shortened them.
+    fn compact(&mut self) -> anyhow::Result<()> {
+        let dr = self.cfg.draft_ranks;
+        let mut entries: Vec<LoggedOp> = Vec::new();
+        let mut live: Vec<SeqId> = self.mirror.keys().copied().collect();
+        live.sort_unstable();
+        let mut batch: Vec<(u64, Vec<u32>)> = Vec::new();
+        for chunk in live.chunks(SNAPSHOT_CHUNK) {
+            batch.clear();
+            for &seq in chunk {
+                let mut prompt = self.mirror[&seq].content.clone();
+                prompt.push(0);
+                batch.push((seq, prompt));
+            }
+            let mut buf = self.take_buf();
+            wire::encode_prefill_chunk(&mut buf, 0, &[], &batch);
+            let arc = Arc::new(buf);
+            entries.push(LoggedOp {
+                draft: (0..dr).map(|_| Some(Arc::clone(&arc))).collect(),
+                verify: Some(arc),
+            });
+        }
+        let clamps: Vec<StateOp> = live
+            .iter()
+            .map(|&seq| StateOp::RollbackDraft {
+                seq,
+                len: self.lens[&seq].1 as u64,
+            })
+            .collect();
+        if !clamps.is_empty() {
+            let mut buf = self.take_buf();
+            wire::encode_admit_evict(&mut buf, 0, &clamps);
+            let arc = Arc::new(buf);
+            entries.push(LoggedOp {
+                draft: (0..dr).map(|_| Some(Arc::clone(&arc))).collect(),
+                verify: None,
+            });
+        }
+        self.counters.compacted_ops += self.oplog.len() as u64;
+        self.counters.snapshots += 1;
+        for entry in std::mem::take(&mut self.oplog) {
+            self.recycle_entry(entry);
+        }
+        for entry in std::mem::take(&mut self.snapshot) {
+            self.recycle_entry(entry);
+        }
+        self.snapshot = entries;
+        Ok(())
     }
 
     /// Replace a dead or wedged worker: detach the old thread handle
     /// (never join — it may be wedged), reattach the transport slot,
-    /// build a fresh replica, and replay the op log so its state
+    /// build a fresh replica, and replay snapshot + log so its state
     /// reconverges with its peers. Determinism of the backend contract
-    /// makes the replayed replica bit-identical to the lost one.
+    /// makes the replayed replica bit-identical to the lost one. Any
+    /// in-flight entries for this worker are dropped — the replay
+    /// covers them (they are logged by construction).
     fn respawn(&mut self, w: usize) -> anyhow::Result<()> {
         self.counters.respawns += 1;
         self.health[w].respawns += 1;
         drop(self.handles[w].take());
         let ep = self.transport.reattach(w);
-        let (role, rank) = Self::slot(w);
+        let (role, rank) = self.slot(w);
         let backend = (self.factory)()?;
         self.handles[w] = Some(Self::spawn(role, rank, backend, ep, None));
-        self.replay(w, role)
+        self.in_flight.retain(|_, pend| {
+            pend.targets.retain(|t| t.w != w);
+            !pend.targets.is_empty()
+        });
+        self.replay(w, role, rank)
     }
 
-    fn replay(&mut self, w: usize, role: Role) -> anyhow::Result<()> {
-        // Clone the routed subjects up front: replay sends through the
-        // same transport and must not alias the log.
-        let subjects: Vec<Subject> = self
-            .oplog
+    /// Re-send this worker's slice of snapshot + log into the fresh
+    /// replica under fresh op ids (a replayed op must not collide with
+    /// the retransmit-dedup ring), awaiting each response so the
+    /// rebuild is strictly ordered.
+    fn replay(&mut self, w: usize, role: Role, rank: u32) -> anyhow::Result<()> {
+        let frames: Vec<Arc<Vec<u8>>> = self
+            .snapshot
             .iter()
+            .chain(self.oplog.iter())
             .filter_map(|entry| match role {
-                Role::Draft => entry.to_draft.clone(),
-                Role::Verify => entry.to_verify.clone(),
+                Role::Draft => entry.draft.get(rank as usize).and_then(Clone::clone),
+                Role::Verify => entry.verify.clone(),
             })
             .collect();
-        for subject in subjects {
-            let op = self.next_op;
-            self.next_op += 1;
-            self.send(w, op, &subject)?;
-            self.health[w].ops += u64::from(subject.is_compute());
+        let mut patch_buf: Vec<u8> = self.take_buf();
+        for arc in frames {
+            let op = self.alloc_op();
+            patch_buf.clear();
+            patch_buf.extend_from_slice(&arc);
+            wire::patch_op(&mut patch_buf, op);
+            self.counters.replayed_ops += 1;
+            self.health[w].ops += u64::from(wire::peek_is_compute(&patch_buf));
+            self.send_raw(w, &patch_buf)?;
             // Await this replay step's response; stash anything else
             // (e.g. outer-op responses from other workers) for the
             // interrupted rpc to consume.
@@ -574,7 +1021,7 @@ impl<B: SdBackend + Send + 'static> DistBackend<B> {
                         );
                         attempts += 1;
                         self.counters.retries += 1;
-                        self.send(w, op, &subject)?;
+                        self.send_raw(w, &patch_buf)?;
                     }
                     Err(TransportError::Wire(_)) => {
                         self.counters.wire_errors += 1;
@@ -584,6 +1031,10 @@ impl<B: SdBackend + Send + 'static> DistBackend<B> {
                     }
                 }
             }
+        }
+        patch_buf.clear();
+        if self.pool.len() < POOL_CAP {
+            self.pool.push(patch_buf);
         }
         Ok(())
     }
@@ -607,52 +1058,61 @@ impl<B: SdBackend + Send + 'static> SdBackend for DistBackend<B> {
     }
 
     fn prefill(&mut self, batch: &[(SeqId, Vec<u32>)]) -> anyhow::Result<f64> {
+        self.fail_deferred()?;
+        self.maybe_compact()?;
+        self.backpressure()?;
         // Every replica needs the new sequences registered; piggyback
-        // each role's pending state ops on its copy.
-        let draft_subject = Subject::PrefillChunk {
-            state_ops: self.drain_draft_ops(),
-            batch: batch.to_vec(),
-        };
-        let verify_subject = Subject::PrefillChunk {
-            state_ops: self.drain_verify_ops(),
-            batch: batch.to_vec(),
-        };
-        let mut targets = vec![0usize];
-        let mut subjects = vec![draft_subject];
+        // each role's pending state ops on its copy. Full replicas all
+        // return the same `PrefillDone` (both length tables and the
+        // cost), so the first response is the result.
+        let draft_ops = self.drain_draft_ops();
+        let verify_ops = self.drain_verify_ops();
+        let op = self.alloc_op();
+        let mut dbuf = self.take_buf();
+        wire::encode_prefill_chunk(&mut dbuf, op, &draft_ops, batch);
+        let darc = Arc::new(dbuf);
+        let mut vbuf = self.take_buf();
+        wire::encode_prefill_chunk(&mut vbuf, op, &verify_ops, batch);
+        let varc = Arc::new(vbuf);
+        let mut targets: Vec<usize> = Vec::new();
+        let mut frames: Vec<Arc<Vec<u8>>> = Vec::new();
+        for w in self.draft_workers() {
+            targets.push(w);
+            frames.push(Arc::clone(&darc));
+        }
         for w in self.verify_workers() {
             targets.push(w);
-            subjects.push(verify_subject.clone());
+            frames.push(Arc::clone(&varc));
         }
-        let resps = self.rpc(&targets, subjects)?;
-        let mut cost = f64::NEG_INFINITY;
-        let mut lens_from_verify: Option<(Vec<u64>, Vec<u64>)> = None;
-        let mut draft_lens_from_draft: Option<Vec<u64>> = None;
-        for (i, resp) in resps.into_iter().enumerate() {
-            match resp {
-                Subject::PrefillDone {
-                    target_lens,
-                    draft_lens,
-                    cost: c,
-                } => {
-                    cost = cost.max(c);
-                    if targets[i] == 0 {
-                        draft_lens_from_draft = Some(draft_lens);
-                    } else if lens_from_verify.is_none() {
-                        lens_from_verify = Some((target_lens, draft_lens));
-                    }
+        let entry = LoggedOp {
+            draft: (0..self.cfg.draft_ranks)
+                .map(|_| Some(Arc::clone(&darc)))
+                .collect(),
+            verify: Some(varc),
+        };
+        let resps = self.rpc_frames(op, &targets, frames, Quorum::First, Some(entry))?;
+        match resps.into_iter().flatten().next() {
+            Some(Subject::PrefillDone {
+                target_lens,
+                draft_lens,
+                cost,
+            }) => {
+                for (i, (seq, prompt)) in batch.iter().enumerate() {
+                    self.lens
+                        .insert(*seq, (target_lens[i] as usize, draft_lens[i] as usize));
+                    self.mirror.insert(
+                        *seq,
+                        SeqMirror {
+                            content: prompt[..prompt.len().saturating_sub(1)].to_vec(),
+                            draft_dirty: false,
+                            target_dirty: false,
+                        },
+                    );
                 }
-                other => anyhow::bail!("dist: unexpected prefill response {other:?}"),
+                Ok(cost)
             }
+            other => anyhow::bail!("dist: unexpected prefill response {other:?}"),
         }
-        let (target_lens, _) =
-            lens_from_verify.ok_or_else(|| anyhow::anyhow!("dist: no verify prefill response"))?;
-        let draft_lens = draft_lens_from_draft
-            .ok_or_else(|| anyhow::anyhow!("dist: no draft prefill response"))?;
-        for (i, (seq, _)) in batch.iter().enumerate() {
-            self.lens
-                .insert(*seq, (target_lens[i] as usize, draft_lens[i] as usize));
-        }
-        Ok(cost)
     }
 
     fn prefill_chunk_cost(&self, tokens: usize, ctx: usize) -> f64 {
@@ -671,33 +1131,128 @@ impl<B: SdBackend + Send + 'static> SdBackend for DistBackend<B> {
         temps: &[f64],
         seed: u64,
     ) -> anyhow::Result<ProposeOut> {
-        let subject = Subject::ProposeReq {
-            state_ops: self.drain_draft_ops(),
-            seqs: seqs.to_vec(),
-            pending: pending.to_vec(),
-            gammas: gammas.iter().map(|&g| g as u32).collect(),
-            temps: temps.to_vec(),
-            seed,
-        };
-        let resps = self.rpc(&[0], vec![subject])?;
-        match resps.into_iter().next() {
-            Some(Subject::ProposeResp {
-                tokens,
-                probs,
-                draft_lens,
-                cost,
-            }) => {
-                for (i, seq) in seqs.iter().enumerate() {
-                    self.lens_mut(*seq).1 = draft_lens[i] as usize;
+        self.fail_deferred()?;
+        self.maybe_compact()?;
+        self.backpressure()?;
+        for (i, seq) in seqs.iter().enumerate() {
+            if gammas[i] > 0 {
+                if let Some(m) = self.mirror.get_mut(seq) {
+                    m.draft_dirty = true;
                 }
-                Ok(ProposeOut {
+            }
+        }
+        let state_ops = self.drain_draft_ops();
+        let dr = self.cfg.draft_ranks;
+        let op = self.alloc_op();
+
+        if dr == 1 {
+            // Single draft rank: verbatim seed, verbatim frame, cost
+            // passed through untouched — byte-identical to PR 9 and to
+            // the single-process call.
+            let mut buf = self.take_buf();
+            wire::encode_propose_req(
+                &mut buf, op, &state_ops, seqs, pending, gammas, temps, seed, None,
+            );
+            let arc = Arc::new(buf);
+            let entry = LoggedOp {
+                draft: vec![Some(Arc::clone(&arc))],
+                verify: None,
+            };
+            let resps = self.rpc_frames(op, &[0], vec![arc], Quorum::All, Some(entry))?;
+            return match resps.into_iter().flatten().next() {
+                Some(Subject::ProposeResp {
                     tokens,
                     probs,
+                    draft_lens,
                     cost,
-                })
-            }
-            other => anyhow::bail!("dist: unexpected propose response {other:?}"),
+                }) => {
+                    for (i, seq) in seqs.iter().enumerate() {
+                        self.lens_mut(*seq).1 = draft_lens[i] as usize;
+                    }
+                    Ok(ProposeOut {
+                        tokens,
+                        probs,
+                        cost,
+                    })
+                }
+                other => anyhow::bail!("dist: unexpected propose response {other:?}"),
+            };
         }
+
+        // Striped scale-out: home rank `seq % dr` (stable across a
+        // sequence's lifetime, so each rank's draft KV stays warm for
+        // its stripe). Every rank is always in the fan — empty stripes
+        // still carry the state-op broadcast — and per-rank costs
+        // combine as `max + hop`, mirroring the verify fan.
+        let mut stripes: Vec<Vec<usize>> = vec![Vec::new(); dr];
+        for (i, seq) in seqs.iter().enumerate() {
+            stripes[(*seq % dr as u64) as usize].push(i);
+        }
+        let targets: Vec<usize> = (0..dr).collect();
+        let mut frames: Vec<Arc<Vec<u8>>> = Vec::with_capacity(dr);
+        let mut entry_draft: Vec<Option<Arc<Vec<u8>>>> = Vec::with_capacity(dr);
+        for (r, stripe) in stripes.iter().enumerate() {
+            let mut buf = self.take_buf();
+            wire::encode_propose_req(
+                &mut buf,
+                op,
+                &state_ops,
+                seqs,
+                pending,
+                gammas,
+                temps,
+                stripe_seed(seed, r),
+                Some(stripe),
+            );
+            let arc = Arc::new(buf);
+            entry_draft.push(Some(Arc::clone(&arc)));
+            frames.push(arc);
+        }
+        let entry = LoggedOp {
+            draft: entry_draft,
+            verify: None,
+        };
+        let resps = self.rpc_frames(op, &targets, frames, Quorum::All, Some(entry))?;
+
+        let b = seqs.len();
+        let mut tokens: Vec<Vec<u32>> = vec![Vec::new(); b];
+        let mut probs: Vec<Vec<LogitsView>> = vec![Vec::new(); b];
+        let mut max_cost = f64::NEG_INFINITY;
+        for (r, resp) in resps.into_iter().enumerate() {
+            match resp {
+                Some(Subject::ProposeResp {
+                    tokens: t,
+                    probs: p,
+                    draft_lens,
+                    cost,
+                }) => {
+                    let stripe = &stripes[r];
+                    anyhow::ensure!(
+                        t.len() == stripe.len(),
+                        "dist: draft rank {r} returned {} rows for a {}-seq stripe",
+                        t.len(),
+                        stripe.len()
+                    );
+                    max_cost = max_cost.max(cost);
+                    for (k, row) in t.into_iter().enumerate() {
+                        tokens[stripe[k]] = row;
+                    }
+                    for (k, row) in p.into_iter().enumerate() {
+                        probs[stripe[k]] = row;
+                    }
+                    for (k, &dl) in draft_lens.iter().enumerate() {
+                        self.lens_mut(seqs[stripe[k]]).1 = dl as usize;
+                    }
+                }
+                other => anyhow::bail!("dist: unexpected propose response {other:?}"),
+            }
+        }
+        let total_gamma: usize = gammas.iter().sum();
+        Ok(ProposeOut {
+            tokens,
+            probs,
+            cost: max_cost + self.cfg.fabric.hop_cost(total_gamma as f64),
+        })
     }
 
     fn verify(
@@ -707,58 +1262,79 @@ impl<B: SdBackend + Send + 'static> SdBackend for DistBackend<B> {
         drafts: &[Vec<u32>],
         temps: &[f64],
     ) -> anyhow::Result<VerifyOut> {
+        self.fail_deferred()?;
+        self.maybe_compact()?;
+        self.backpressure()?;
         // AR-only phases never propose, so the draft-side queue is
         // flushed here once it builds up (stays bounded either way).
         if self.pending_draft.len() >= STATE_OP_FLUSH_THRESHOLD {
-            let subject = Subject::AdmitEvict {
-                state_ops: self.drain_draft_ops(),
-            };
-            self.rpc(&[0], vec![subject])?;
+            let ops = self.drain_draft_ops();
+            self.flush_role_ops(Role::Draft, ops)?;
         }
-        let subject = Subject::VerifyReq {
-            state_ops: self.drain_verify_ops(),
-            seqs: seqs.to_vec(),
-            feed: feed.to_vec(),
-            drafts: drafts.to_vec(),
-            temps: temps.to_vec(),
-            budget: self.budget.map(|b| b as u64),
-        };
+        for (i, seq) in seqs.iter().enumerate() {
+            if let Some(m) = self.mirror.get_mut(seq) {
+                m.content.push(feed[i]);
+                m.content.extend_from_slice(&drafts[i]);
+                m.target_dirty = true;
+            }
+        }
+        let state_ops = self.drain_verify_ops();
+        let op = self.alloc_op();
+        let mut buf = self.take_buf();
+        wire::encode_verify_req(
+            &mut buf,
+            op,
+            &state_ops,
+            seqs,
+            feed,
+            drafts,
+            temps,
+            self.budget.map(|b| b as u64),
+        );
+        let arc = Arc::new(buf);
         let targets: Vec<usize> = self.verify_workers().collect();
-        let subjects: Vec<Subject> = targets.iter().map(|_| subject.clone()).collect();
-        let resps = self.rpc(&targets, subjects)?;
-        // Per-rank costs combine as max (ranks run concurrently) plus
-        // the fabric hop for the fan-out of this round's token payload.
-        // Replicas are bit-identical so max() returns the exact
-        // single-process cost; Loopback's hop is exactly 0.0.
-        let mut out: Option<VerifyOut> = None;
-        let mut max_cost = f64::NEG_INFINITY;
-        for resp in resps {
+        let frames: Vec<Arc<Vec<u8>>> = targets.iter().map(|_| Arc::clone(&arc)).collect();
+        let entry = LoggedOp {
+            draft: vec![None; self.cfg.draft_ranks],
+            verify: Some(arc),
+        };
+        // First responder wins: replicas are bit-identical, so the
+        // earliest VerifyResp *is* `max` over the fan, and the
+        // remaining ranks complete in flight — this is the overlap that
+        // lets the next propose ride alongside the verify fan tail.
+        let resps = self.rpc_frames(op, &targets, frames, Quorum::First, Some(entry))?;
+        let mut out = None;
+        for resp in resps.into_iter().flatten() {
             match resp {
                 Subject::VerifyResp {
                     probs,
                     target_lens,
                     cost,
                 } => {
-                    max_cost = max_cost.max(cost);
-                    if out.is_none() {
-                        for (i, seq) in seqs.iter().enumerate() {
-                            self.lens_mut(*seq).0 = target_lens[i] as usize;
-                        }
-                        out = Some(VerifyOut { probs, cost });
+                    for (i, seq) in seqs.iter().enumerate() {
+                        self.lens_mut(*seq).0 = target_lens[i] as usize;
                     }
+                    out = Some(VerifyOut { probs, cost });
                 }
                 other => anyhow::bail!("dist: unexpected verify response {other:?}"),
             }
         }
         let mut out = out.ok_or_else(|| anyhow::anyhow!("dist: no verify response"))?;
+        // Per-rank costs combine as max (ranks run concurrently) plus
+        // the fabric hop for the fan-out of this round's token payload;
+        // Loopback's hop is exactly 0.0.
         let round_tokens: f64 = drafts.iter().map(|d| (d.len() + 1) as f64).sum();
-        out.cost = max_cost + self.cfg.fabric.hop_cost(round_tokens);
+        out.cost += self.cfg.fabric.hop_cost(round_tokens);
         Ok(out)
     }
 
     fn rollback_target(&mut self, seq: SeqId, len: usize) {
         if let Some(l) = self.lens.get_mut(&seq) {
             l.0 = len;
+        }
+        if let Some(m) = self.mirror.get_mut(&seq) {
+            m.content.truncate(len);
+            m.target_dirty = false;
         }
         self.pending_verify.push(StateOp::RollbackTarget {
             seq,
@@ -776,6 +1352,9 @@ impl<B: SdBackend + Send + 'static> SdBackend for DistBackend<B> {
         if let Some(l) = self.lens.get_mut(&seq) {
             l.1 = l.1.min(len);
         }
+        if let Some(m) = self.mirror.get_mut(&seq) {
+            m.draft_dirty = false;
+        }
         self.pending_draft.push(StateOp::RollbackDraft {
             seq,
             len: len as u64,
@@ -792,6 +1371,7 @@ impl<B: SdBackend + Send + 'static> SdBackend for DistBackend<B> {
 
     fn release(&mut self, seq: SeqId) {
         self.lens.remove(&seq);
+        self.mirror.remove(&seq);
         self.pending_draft.push(StateOp::Release { seq });
         self.pending_verify.push(StateOp::Release { seq });
     }
@@ -839,15 +1419,58 @@ mod tests {
     #[test]
     fn config_validation() {
         assert!(DistConfig::default().validate().is_ok());
-        let bad = DistConfig {
-            verify_ranks: 0,
+        for bad in [
+            DistConfig {
+                verify_ranks: 0,
+                ..DistConfig::default()
+            },
+            DistConfig {
+                verify_ranks: 65,
+                ..DistConfig::default()
+            },
+            DistConfig {
+                draft_ranks: 0,
+                ..DistConfig::default()
+            },
+            DistConfig {
+                draft_ranks: 17,
+                ..DistConfig::default()
+            },
+            DistConfig {
+                max_in_flight: 0,
+                ..DistConfig::default()
+            },
+            DistConfig {
+                max_in_flight: REPLAY_RING + 1,
+                ..DistConfig::default()
+            },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} should be rejected");
+        }
+        // Compaction off (window 0) is a valid configuration.
+        assert!(DistConfig {
+            oplog_window: 0,
             ..DistConfig::default()
-        };
-        assert!(bad.validate().is_err());
-        let bad = DistConfig {
-            verify_ranks: 65,
-            ..DistConfig::default()
-        };
-        assert!(bad.validate().is_err());
+        }
+        .validate()
+        .is_ok());
+    }
+
+    #[test]
+    fn stripe_seed_rank0_is_identity() {
+        for seed in [0u64, 1, 42, u64::MAX, 0x9E37_79B9_7F4A_7C15] {
+            assert_eq!(stripe_seed(seed, 0), seed);
+            assert_ne!(stripe_seed(seed, 1), stripe_seed(seed, 2));
+        }
+    }
+
+    #[test]
+    fn slot_layout_draft_then_verify() {
+        type DB = DistBackend<crate::spec::synthetic::SyntheticLm>;
+        assert_eq!(DB::slot_of(2, 0), (Role::Draft, 0));
+        assert_eq!(DB::slot_of(2, 1), (Role::Draft, 1));
+        assert_eq!(DB::slot_of(2, 2), (Role::Verify, 0));
+        assert_eq!(DB::slot_of(2, 3), (Role::Verify, 1));
+        assert_eq!(DB::slot_of(1, 1), (Role::Verify, 0));
     }
 }

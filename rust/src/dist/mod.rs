@@ -12,28 +12,37 @@
 //!
 //! | module | what lives there |
 //! |---|---|
-//! | [`wire`] | frame/subject enums, hand-rolled codec, typed `WireError` |
-//! | [`transport`] | `Transport` trait, in-process channels, fault injection |
-//! | [`worker`] | worker thread loop: role-filtered state ops, idempotent replay |
-//! | [`coordinator`] | `DistBackend` (an `SdBackend`), deadlines/retry/respawn, health |
+//! | [`wire`] | frame/subject enums, hand-rolled codec, borrowed-slice encoders, pooled decode |
+//! | [`transport`] | `Transport` trait (byte-addressed), in-process channels, fault injection |
+//! | [`worker`] | worker thread loop: role-filtered state ops, retransmit-dedup ring |
+//! | [`coordinator`] | `DistBackend` (an `SdBackend`): pipelined in-flight ops, op-log compaction, draft striping |
 //!
 //! Entry point: [`DistBackend::launch`] with a backend factory, then
 //! hand the result to `Engine::new` or `Server::start_with_opts` like
 //! any other backend. `--dist-workers N` on `moesd serve` does exactly
-//! that with `N` verify ranks.
+//! that with `N` verify ranks; `--draft-workers M` adds `M − 1` extra
+//! draft replicas that the propose path stripes across.
+//!
+//! The hot path is zero-copy end to end: requests encode once from
+//! engine-native slices into an `Arc`-shared buffer that serves the
+//! wire, the recovery log, and any retransmit; workers decode into
+//! pooled scratch. Non-result-bearing completions (verify fan
+//! stragglers, admit/evict acks) finish *in flight*, out of order,
+//! overlapping the next round's op — see [`coordinator`] for why this
+//! changes no computed bit.
 //!
 //! The conformance suite (`rust/tests/prop_distributed.rs`) pins the
 //! load-bearing property: a distributed engine on the loopback fabric
 //! is bit-for-bit the single-process engine — same tokens, same clock,
-//! same metrics — for any worker count, under faults included
-//! (`rust/tests/fault_injection.rs`).
+//! same metrics — for any worker count, with pipelining and compaction
+//! on, under faults included (`rust/tests/fault_injection.rs`).
 
 pub mod coordinator;
 pub mod transport;
 pub mod wire;
 pub mod worker;
 
-pub use coordinator::{DistBackend, DistConfig, DistFabric, DistStatus, WorkerHealth};
+pub use coordinator::{stripe_seed, DistBackend, DistConfig, DistFabric, DistStatus, WorkerHealth};
 pub use transport::{FaultPlan, FaultyTransport, InProcTransport, Transport, TransportError};
 pub use wire::{Frame, StateOp, Subject, WireError, WorkerStats};
-pub use worker::{Role, WorkerOptions};
+pub use worker::{Role, WorkerOptions, REPLAY_RING};

@@ -50,8 +50,15 @@ impl std::error::Error for TransportError {}
 /// a single shared upstream queue and reports which worker a frame came
 /// from, because responses from fanned-out ranks arrive in any order.
 pub trait Transport: Send {
-    /// Send a frame to worker `w`. `Closed` means the worker is dead.
-    fn send(&mut self, w: usize, frame: &Frame) -> Result<(), TransportError>;
+    /// Send pre-encoded frame bytes to worker `w` — the zero-copy hot
+    /// path: the coordinator encodes once per op fan and the same
+    /// buffer serves every rank, the op log, and any retransmit.
+    /// `Closed` means the worker is dead.
+    fn send_bytes(&mut self, w: usize, bytes: &[u8]) -> Result<(), TransportError>;
+    /// Convenience wrapper for control traffic (encodes per call).
+    fn send(&mut self, w: usize, frame: &Frame) -> Result<(), TransportError> {
+        self.send_bytes(w, &frame.encode())
+    }
     /// Wait up to `timeout` for any worker's next frame.
     fn recv_timeout(&mut self, timeout: Duration) -> Result<(usize, Frame), TransportError>;
     /// Number of worker slots (fixed at construction).
@@ -129,14 +136,15 @@ impl InProcTransport {
 }
 
 impl Transport for InProcTransport {
-    fn send(&mut self, w: usize, frame: &Frame) -> Result<(), TransportError> {
+    fn send_bytes(&mut self, w: usize, bytes: &[u8]) -> Result<(), TransportError> {
         let link = &self.links[w];
         if !link.alive.load(Ordering::SeqCst) {
             return Err(TransportError::Closed);
         }
-        let bytes = frame.encode();
+        // The single copy a socket write would also pay; the channel
+        // owns its message like the kernel owns a send buffer.
         link.depth.fetch_add(1, Ordering::SeqCst);
-        link.tx.send(bytes).map_err(|_| {
+        link.tx.send(bytes.to_vec()).map_err(|_| {
             link.depth.fetch_sub(1, Ordering::SeqCst);
             TransportError::Closed
         })
@@ -190,23 +198,36 @@ impl WorkerEndpoint {
         self.idx
     }
 
-    /// Block for the next decodable frame. `None` means the coordinator
-    /// hung up — the worker should exit. Undecodable frames are skipped
-    /// (the coordinator's retry path re-sends; the worker cannot reply
-    /// to a frame it cannot parse).
+    /// Block for the next raw frame bytes. `None` means the coordinator
+    /// hung up — the worker should exit. The worker's serve loop decodes
+    /// into pooled scratch from here.
+    pub fn recv_bytes(&self) -> Option<Vec<u8>> {
+        let bytes = self.rx.recv().ok()?;
+        self.depth.fetch_sub(1, Ordering::SeqCst);
+        Some(bytes)
+    }
+
+    /// Block for the next decodable frame. Undecodable frames are
+    /// skipped (the coordinator's retry path re-sends; the worker cannot
+    /// reply to a frame it cannot parse).
     pub fn recv(&self) -> Option<Frame> {
         loop {
-            let bytes = self.rx.recv().ok()?;
-            self.depth.fetch_sub(1, Ordering::SeqCst);
+            let bytes = self.recv_bytes()?;
             if let Ok(frame) = Frame::decode(&bytes) {
                 return Some(frame);
             }
         }
     }
 
+    /// Send pre-encoded frame bytes upstream, taking ownership (the
+    /// channel is the wire). Returns false if the coordinator is gone.
+    pub fn send_bytes(&self, bytes: Vec<u8>) -> bool {
+        self.up.send((self.idx, bytes)).is_ok()
+    }
+
     /// Send a frame upstream. Returns false if the coordinator is gone.
     pub fn send(&self, frame: &Frame) -> bool {
-        self.up.send((self.idx, frame.encode())).is_ok()
+        self.send_bytes(frame.encode())
     }
 }
 
@@ -263,15 +284,17 @@ impl<T: Transport> FaultyTransport<T> {
 }
 
 impl<T: Transport> Transport for FaultyTransport<T> {
-    fn send(&mut self, w: usize, frame: &Frame) -> Result<(), TransportError> {
-        if frame.subject.is_compute() {
+    fn send_bytes(&mut self, w: usize, bytes: &[u8]) -> Result<(), TransportError> {
+        // Classification peeks the tag byte: the zero-copy path never
+        // materializes a `Subject` on the send side.
+        if super::wire::peek_is_compute(bytes) {
             self.sent_reqs += 1;
             if Self::nth(self.sent_reqs, self.plan.drop_req_every) {
                 // Lost on the wire: report success, deliver nothing.
                 return Ok(());
             }
         }
-        self.inner.send(w, frame)
+        self.inner.send_bytes(w, bytes)
     }
 
     fn recv_timeout(&mut self, timeout: Duration) -> Result<(usize, Frame), TransportError> {

@@ -35,6 +35,24 @@ use crate::sampling::LogitsView;
 /// Protocol version stamped into every frame body.
 pub const WIRE_VERSION: u8 = 1;
 
+/// Byte offset of the subject tag inside an encoded frame
+/// (`[len u32][version u8][tag u8][op u64]...`). Lets the transport
+/// layer classify frames without decoding them.
+pub const TAG_OFFSET: usize = 5;
+
+/// Byte offset of the op id inside an encoded frame. Replay re-sends
+/// logged request bytes with a fresh op id patched in place here.
+pub const OP_ID_OFFSET: usize = 6;
+
+/// Request tags the zero-copy paths key off (they equal what
+/// `Subject::tag()` assigns to the matching variants).
+pub const TAG_PROPOSE_REQ: u8 = 0;
+pub const TAG_VERIFY_REQ: u8 = 2;
+pub const TAG_PREFILL_CHUNK: u8 = 4;
+pub const TAG_ADMIT_EVICT: u8 = 6;
+pub const TAG_STATS_PULL: u8 = 8;
+pub const TAG_HEARTBEAT: u8 = 10;
+
 /// Hard ceiling on one frame's body size. Propose/verify frames carry
 /// per-token rows, so real frames sit in the kilobytes; anything claiming
 /// more than this is a corrupt or hostile length prefix and is rejected
@@ -223,6 +241,19 @@ struct Enc {
 }
 
 impl Enc {
+    /// Frame preamble: length-prefix placeholder (patched by
+    /// [`Enc::finish`]), version, tag, op id.
+    fn header(&mut self, tag: u8, op: u64) {
+        self.u32(0);
+        self.u8(WIRE_VERSION);
+        self.u8(tag);
+        self.u64(op);
+    }
+    /// Patch the length prefix once the body is complete.
+    fn finish(&mut self) {
+        let body_len = (self.buf.len() - 4) as u32;
+        self.buf[0..4].copy_from_slice(&body_len.to_le_bytes());
+    }
     fn u8(&mut self, v: u8) {
         self.buf.push(v);
     }
@@ -378,29 +409,59 @@ impl<'a> Dec<'a> {
         let b = self.take(n)?;
         String::from_utf8(b.to_vec()).map_err(|_| WireError::BadValue("utf-8 string"))
     }
-    fn vec_u32(&mut self) -> Result<Vec<u32>> {
+    fn vec_u32_into(&mut self, out: &mut Vec<u32>) -> Result<()> {
         let (n, cap) = self.count(4)?;
-        let mut v = Vec::with_capacity(cap);
+        out.clear();
+        out.reserve(cap);
         for _ in 0..n {
-            v.push(self.u32()?);
+            out.push(self.u32()?);
         }
+        Ok(())
+    }
+    fn vec_u32(&mut self) -> Result<Vec<u32>> {
+        let mut v = Vec::new();
+        self.vec_u32_into(&mut v)?;
         Ok(v)
+    }
+    fn vec_u64_into(&mut self, out: &mut Vec<u64>) -> Result<()> {
+        let (n, cap) = self.count(8)?;
+        out.clear();
+        out.reserve(cap);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(())
     }
     fn vec_u64(&mut self) -> Result<Vec<u64>> {
-        let (n, cap) = self.count(8)?;
-        let mut v = Vec::with_capacity(cap);
-        for _ in 0..n {
-            v.push(self.u64()?);
-        }
+        let mut v = Vec::new();
+        self.vec_u64_into(&mut v)?;
         Ok(v)
     }
-    fn vec_f64(&mut self) -> Result<Vec<f64>> {
+    fn vec_f64_into(&mut self, out: &mut Vec<f64>) -> Result<()> {
         let (n, cap) = self.count(8)?;
-        let mut v = Vec::with_capacity(cap);
+        out.clear();
+        out.reserve(cap);
         for _ in 0..n {
-            v.push(self.f64()?);
+            out.push(self.f64()?);
         }
+        Ok(())
+    }
+    fn vec_f64(&mut self) -> Result<Vec<f64>> {
+        let mut v = Vec::new();
+        self.vec_f64_into(&mut v)?;
         Ok(v)
+    }
+    /// Count-capped row decode into a pooled `Vec<Vec<u32>>`: rows
+    /// beyond the returned count keep their capacity for later frames.
+    fn rows_into(&mut self, rows: &mut Vec<Vec<u32>>) -> Result<usize> {
+        let (n, _cap) = self.count(4)?;
+        for i in 0..n {
+            if i == rows.len() {
+                rows.push(Vec::new());
+            }
+            self.vec_u32_into(&mut rows[i])?;
+        }
+        Ok(n)
     }
     fn vec_vec_u32(&mut self) -> Result<Vec<Vec<u32>>> {
         let (n, cap) = self.count(4)?;
@@ -418,12 +479,13 @@ impl<'a> Dec<'a> {
         }
     }
 
-    fn state_ops(&mut self) -> Result<Vec<StateOp>> {
+    fn state_ops_into(&mut self, out: &mut Vec<StateOp>) -> Result<()> {
         let (n, cap) = self.count(9)?;
-        let mut v = Vec::with_capacity(cap);
+        out.clear();
+        out.reserve(cap);
         for _ in 0..n {
             let tag = self.u8()?;
-            v.push(match tag {
+            out.push(match tag {
                 0 => StateOp::RollbackTarget {
                     seq: self.u64()?,
                     len: self.u64()?,
@@ -440,6 +502,12 @@ impl<'a> Dec<'a> {
                 t => return Err(WireError::BadTag { what: "state op", tag: t }),
             });
         }
+        Ok(())
+    }
+
+    fn state_ops(&mut self) -> Result<Vec<StateOp>> {
+        let mut v = Vec::new();
+        self.state_ops_into(&mut v)?;
         Ok(v)
     }
 
@@ -487,11 +555,7 @@ impl Frame {
         let mut e = Enc {
             buf: Vec::with_capacity(64),
         };
-        // Length prefix placeholder, patched below.
-        e.u32(0);
-        e.u8(WIRE_VERSION);
-        e.u8(self.subject.tag());
-        e.u64(self.op);
+        e.header(self.subject.tag(), self.op);
         match &self.subject {
             Subject::ProposeReq {
                 state_ops,
@@ -578,8 +642,7 @@ impl Frame {
             Subject::Heartbeat { nonce } | Subject::HeartbeatAck { nonce } => e.u64(*nonce),
             Subject::ErrorResp { message } => e.str(message),
         }
-        let body_len = (e.buf.len() - 4) as u32;
-        e.buf[0..4].copy_from_slice(&body_len.to_le_bytes());
+        e.finish();
         e.buf
     }
 
@@ -680,6 +743,328 @@ impl Frame {
         }
         Ok(Frame { op, subject })
     }
+}
+
+// --- zero-copy request path ----------------------------------------------
+//
+// The coordinator's hot loop never materializes a `Subject` for requests:
+// the functions below encode a complete frame straight from engine-native
+// slices into a caller-owned buffer (whose ownership then transfers to
+// the op log — one encode, one buffer, shared by the wire and the log),
+// and workers decode requests into a pooled [`ReqScratch`] instead of
+// allocating fresh Vecs per frame. Byte output is identical to
+// `Frame::encode` of the equivalent `Subject` — pinned by tests below and
+// by the golden bytes in `rust/tests/codec_wire.rs`.
+
+/// Patch the op id of an already-encoded frame in place. Replay re-sends
+/// logged request bytes under fresh op ids (a replayed op must not match
+/// the worker's retransmit-dedup ring).
+pub fn patch_op(bytes: &mut [u8], op: u64) {
+    bytes[OP_ID_OFFSET..OP_ID_OFFSET + 8].copy_from_slice(&op.to_le_bytes());
+}
+
+/// Validate the frame preamble and return `(op, tag)` without touching
+/// the payload — the worker's dispatch peek.
+pub fn peek_header(bytes: &[u8]) -> Result<(u64, u8)> {
+    let mut d = Dec { buf: bytes, pos: 0 };
+    let len = d.u32()? as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(WireError::Oversized {
+            len,
+            max: MAX_FRAME_BYTES,
+        });
+    }
+    if bytes.len() - 4 < len {
+        return Err(WireError::Truncated {
+            need: len,
+            have: bytes.len() - 4,
+        });
+    }
+    if bytes.len() - 4 > len {
+        return Err(WireError::Trailing {
+            extra: bytes.len() - 4 - len,
+        });
+    }
+    let version = d.u8()?;
+    if version != WIRE_VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let tag = d.u8()?;
+    let op = d.u64()?;
+    Ok((op, tag))
+}
+
+/// Tag-level compute classification for raw frame bytes — the byte-path
+/// twin of [`Subject::is_compute`], used by fault injection on the send
+/// side where no `Subject` exists.
+pub fn peek_is_compute(bytes: &[u8]) -> bool {
+    matches!(
+        bytes.get(TAG_OFFSET),
+        Some(&TAG_PROPOSE_REQ) | Some(&TAG_VERIFY_REQ) | Some(&TAG_PREFILL_CHUNK)
+    )
+}
+
+/// Encode a `ProposeReq` frame from borrowed engine slices into `buf`
+/// (cleared first). `gammas` stays `usize` (the engine's native type);
+/// the wire carries `u32` exactly as `Subject::ProposeReq` does. When
+/// `idx` is `Some`, only the listed row positions are encoded — the
+/// draft-stripe gather without copying any row.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_propose_req(
+    buf: &mut Vec<u8>,
+    op: u64,
+    state_ops: &[StateOp],
+    seqs: &[u64],
+    pending: &[Vec<u32>],
+    gammas: &[usize],
+    temps: &[f64],
+    seed: u64,
+    idx: Option<&[usize]>,
+) {
+    let mut e = Enc {
+        buf: std::mem::take(buf),
+    };
+    e.buf.clear();
+    e.header(TAG_PROPOSE_REQ, op);
+    e.state_ops(state_ops);
+    match idx {
+        None => {
+            e.vec_u64(seqs);
+            e.vec_vec_u32(pending);
+            e.count(gammas.len());
+            for &g in gammas {
+                e.u32(g as u32);
+            }
+            e.vec_f64(temps);
+        }
+        Some(ix) => {
+            e.count(ix.len());
+            for &i in ix {
+                e.u64(seqs[i]);
+            }
+            e.count(ix.len());
+            for &i in ix {
+                e.vec_u32(&pending[i]);
+            }
+            e.count(ix.len());
+            for &i in ix {
+                e.u32(gammas[i] as u32);
+            }
+            e.count(ix.len());
+            for &i in ix {
+                e.f64(temps[i]);
+            }
+        }
+    }
+    e.u64(seed);
+    e.finish();
+    *buf = e.buf;
+}
+
+/// Encode a `VerifyReq` frame from borrowed engine slices into `buf`.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_verify_req(
+    buf: &mut Vec<u8>,
+    op: u64,
+    state_ops: &[StateOp],
+    seqs: &[u64],
+    feed: &[u32],
+    drafts: &[Vec<u32>],
+    temps: &[f64],
+    budget: Option<u64>,
+) {
+    let mut e = Enc {
+        buf: std::mem::take(buf),
+    };
+    e.buf.clear();
+    e.header(TAG_VERIFY_REQ, op);
+    e.state_ops(state_ops);
+    e.vec_u64(seqs);
+    e.vec_u32(feed);
+    e.vec_vec_u32(drafts);
+    e.vec_f64(temps);
+    match budget {
+        None => e.u8(0),
+        Some(b) => {
+            e.u8(1);
+            e.u64(b);
+        }
+    }
+    e.finish();
+    *buf = e.buf;
+}
+
+/// Encode a `PrefillChunk` frame from the borrowed batch into `buf`.
+pub fn encode_prefill_chunk(
+    buf: &mut Vec<u8>,
+    op: u64,
+    state_ops: &[StateOp],
+    batch: &[(u64, Vec<u32>)],
+) {
+    let mut e = Enc {
+        buf: std::mem::take(buf),
+    };
+    e.buf.clear();
+    e.header(TAG_PREFILL_CHUNK, op);
+    e.state_ops(state_ops);
+    e.count(batch.len());
+    for (seq, prompt) in batch {
+        e.u64(*seq);
+        e.vec_u32(prompt);
+    }
+    e.finish();
+    *buf = e.buf;
+}
+
+/// Encode an `AdmitEvict` flush from the borrowed state-op queue.
+pub fn encode_admit_evict(buf: &mut Vec<u8>, op: u64, state_ops: &[StateOp]) {
+    let mut e = Enc {
+        buf: std::mem::take(buf),
+    };
+    e.buf.clear();
+    e.header(TAG_ADMIT_EVICT, op);
+    e.state_ops(state_ops);
+    e.finish();
+    *buf = e.buf;
+}
+
+/// Encode a `ProposeResp` from the backend's borrowed outputs (worker
+/// response path — the ring buffer owns `buf` afterwards).
+pub fn encode_propose_resp(
+    buf: &mut Vec<u8>,
+    op: u64,
+    tokens: &[Vec<u32>],
+    probs: &[Vec<LogitsView>],
+    draft_lens: &[u64],
+    cost: f64,
+) {
+    let mut e = Enc {
+        buf: std::mem::take(buf),
+    };
+    e.buf.clear();
+    e.header(1, op);
+    e.vec_vec_u32(tokens);
+    e.probs(probs);
+    e.vec_u64(draft_lens);
+    e.f64(cost);
+    e.finish();
+    *buf = e.buf;
+}
+
+/// Encode a `VerifyResp` from the backend's borrowed outputs.
+pub fn encode_verify_resp(
+    buf: &mut Vec<u8>,
+    op: u64,
+    probs: &[Vec<LogitsView>],
+    target_lens: &[u64],
+    cost: f64,
+) {
+    let mut e = Enc {
+        buf: std::mem::take(buf),
+    };
+    e.buf.clear();
+    e.header(3, op);
+    e.probs(probs);
+    e.vec_u64(target_lens);
+    e.f64(cost);
+    e.finish();
+    *buf = e.buf;
+}
+
+/// Encode a `PrefillDone` from borrowed length tables.
+pub fn encode_prefill_done(
+    buf: &mut Vec<u8>,
+    op: u64,
+    target_lens: &[u64],
+    draft_lens: &[u64],
+    cost: f64,
+) {
+    let mut e = Enc {
+        buf: std::mem::take(buf),
+    };
+    e.buf.clear();
+    e.header(5, op);
+    e.vec_u64(target_lens);
+    e.vec_u64(draft_lens);
+    e.f64(cost);
+    e.finish();
+    *buf = e.buf;
+}
+
+/// Pooled request-decode scratch for the worker hot path: decoding a
+/// propose/verify frame refills these buffers in place (count-capped
+/// reads, inner row Vecs reused), so steady-state serving allocates
+/// nothing on the request side. Only `rows[..n]` is live after a
+/// decode; spare rows keep their capacity for later frames.
+#[derive(Debug, Default)]
+pub struct ReqScratch {
+    pub state_ops: Vec<StateOp>,
+    pub seqs: Vec<u64>,
+    /// `pending` rows for propose, `drafts` rows for verify.
+    pub rows: Vec<Vec<u32>>,
+    /// Live row count in `rows`.
+    pub n: usize,
+    pub gammas: Vec<usize>,
+    pub temps: Vec<f64>,
+    pub feed: Vec<u32>,
+    pub seed: u64,
+    pub budget: Option<u64>,
+}
+
+/// Header validation shared by the scratch decoders: identical checks to
+/// [`Frame::decode`], plus a tag match.
+fn req_body(bytes: &[u8], want: u8) -> Result<Dec<'_>> {
+    let (_, tag) = peek_header(bytes)?;
+    if tag != want {
+        return Err(WireError::BadTag {
+            what: "request",
+            tag,
+        });
+    }
+    Ok(Dec {
+        buf: bytes,
+        pos: OP_ID_OFFSET + 8,
+    })
+}
+
+/// Decode a `ProposeReq` body into pooled scratch. Field semantics match
+/// [`Frame::decode`] exactly (including the trailing-bytes check).
+pub fn decode_propose_req(bytes: &[u8], s: &mut ReqScratch) -> Result<()> {
+    let mut d = req_body(bytes, TAG_PROPOSE_REQ)?;
+    d.state_ops_into(&mut s.state_ops)?;
+    d.vec_u64_into(&mut s.seqs)?;
+    s.n = d.rows_into(&mut s.rows)?;
+    let (n, cap) = d.count(4)?;
+    s.gammas.clear();
+    s.gammas.reserve(cap);
+    for _ in 0..n {
+        s.gammas.push(d.u32()? as usize);
+    }
+    d.vec_f64_into(&mut s.temps)?;
+    s.seed = d.u64()?;
+    if d.remaining() != 0 {
+        return Err(WireError::Trailing {
+            extra: d.remaining(),
+        });
+    }
+    Ok(())
+}
+
+/// Decode a `VerifyReq` body into pooled scratch (`rows` = drafts).
+pub fn decode_verify_req(bytes: &[u8], s: &mut ReqScratch) -> Result<()> {
+    let mut d = req_body(bytes, TAG_VERIFY_REQ)?;
+    d.state_ops_into(&mut s.state_ops)?;
+    d.vec_u64_into(&mut s.seqs)?;
+    d.vec_u32_into(&mut s.feed)?;
+    s.n = d.rows_into(&mut s.rows)?;
+    d.vec_f64_into(&mut s.temps)?;
+    s.budget = d.opt_u64()?;
+    if d.remaining() != 0 {
+        return Err(WireError::Trailing {
+            extra: d.remaining(),
+        });
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -787,6 +1172,228 @@ mod tests {
                 tag: 200
             })
         );
+    }
+
+    #[test]
+    fn borrowed_encoders_match_frame_encode() {
+        let state_ops = vec![
+            StateOp::SyncBase { seq: 3, len: 10 },
+            StateOp::Release { seq: 4 },
+        ];
+        let seqs: Vec<u64> = vec![3, 5];
+        let pending = vec![vec![1u32, 2], vec![]];
+        let gammas_us: Vec<usize> = vec![4, 0];
+        let temps = vec![0.0, 0.7];
+
+        let golden = Frame {
+            op: 9,
+            subject: Subject::ProposeReq {
+                state_ops: state_ops.clone(),
+                seqs: seqs.clone(),
+                pending: pending.clone(),
+                gammas: vec![4, 0],
+                temps: temps.clone(),
+                seed: 42,
+            },
+        }
+        .encode();
+        let mut buf = Vec::new();
+        encode_propose_req(
+            &mut buf, 9, &state_ops, &seqs, &pending, &gammas_us, &temps, 42, None,
+        );
+        assert_eq!(buf, golden);
+        // The indexed (stripe) gather with the identity index is
+        // byte-identical too.
+        encode_propose_req(
+            &mut buf,
+            9,
+            &state_ops,
+            &seqs,
+            &pending,
+            &gammas_us,
+            &temps,
+            42,
+            Some(&[0, 1]),
+        );
+        assert_eq!(buf, golden);
+        // A strict-subset stripe equals encoding the gathered rows.
+        let sub = Frame {
+            op: 9,
+            subject: Subject::ProposeReq {
+                state_ops: state_ops.clone(),
+                seqs: vec![5],
+                pending: vec![vec![]],
+                gammas: vec![0],
+                temps: vec![0.7],
+                seed: 42,
+            },
+        }
+        .encode();
+        encode_propose_req(
+            &mut buf, 9, &state_ops, &seqs, &pending, &gammas_us, &temps, 42, Some(&[1]),
+        );
+        assert_eq!(buf, sub);
+
+        let golden = Frame {
+            op: 11,
+            subject: Subject::VerifyReq {
+                state_ops: state_ops.clone(),
+                seqs: seqs.clone(),
+                feed: vec![7, 8],
+                drafts: pending.clone(),
+                temps: temps.clone(),
+                budget: Some(16),
+            },
+        }
+        .encode();
+        encode_verify_req(
+            &mut buf,
+            11,
+            &state_ops,
+            &seqs,
+            &[7, 8],
+            &pending,
+            &temps,
+            Some(16),
+        );
+        assert_eq!(buf, golden);
+
+        let batch = vec![(3u64, vec![1u32, 2, 3]), (5, vec![9])];
+        let golden = Frame {
+            op: 12,
+            subject: Subject::PrefillChunk {
+                state_ops: state_ops.clone(),
+                batch: batch.clone(),
+            },
+        }
+        .encode();
+        encode_prefill_chunk(&mut buf, 12, &state_ops, &batch);
+        assert_eq!(buf, golden);
+
+        let golden = Frame {
+            op: 13,
+            subject: Subject::AdmitEvict {
+                state_ops: state_ops.clone(),
+            },
+        }
+        .encode();
+        encode_admit_evict(&mut buf, 13, &state_ops);
+        assert_eq!(buf, golden);
+
+        let probs = vec![vec![LogitsView::OneHot { token: 5, vocab: 64 }]];
+        let golden = Frame {
+            op: 14,
+            subject: Subject::ProposeResp {
+                tokens: vec![vec![5]],
+                probs: probs.clone(),
+                draft_lens: vec![10],
+                cost: 1.5,
+            },
+        }
+        .encode();
+        encode_propose_resp(&mut buf, 14, &[vec![5]], &probs, &[10], 1.5);
+        assert_eq!(buf, golden);
+
+        let golden = Frame {
+            op: 15,
+            subject: Subject::VerifyResp {
+                probs: probs.clone(),
+                target_lens: vec![11],
+                cost: 0.5,
+            },
+        }
+        .encode();
+        encode_verify_resp(&mut buf, 15, &probs, &[11], 0.5);
+        assert_eq!(buf, golden);
+
+        let golden = Frame {
+            op: 16,
+            subject: Subject::PrefillDone {
+                target_lens: vec![4],
+                draft_lens: vec![4],
+                cost: 2.0,
+            },
+        }
+        .encode();
+        encode_prefill_done(&mut buf, 16, &[4], &[4], 2.0);
+        assert_eq!(buf, golden);
+    }
+
+    #[test]
+    fn scratch_decode_matches_frame_decode_and_pools_rows() {
+        let frame = Frame {
+            op: 21,
+            subject: Subject::ProposeReq {
+                state_ops: vec![StateOp::RollbackDraft { seq: 1, len: 2 }],
+                seqs: vec![1, 2, 3],
+                pending: vec![vec![10, 11], vec![12], vec![]],
+                gammas: vec![2, 1, 0],
+                temps: vec![0.0, 0.0, 1.0],
+                seed: 77,
+            },
+        };
+        let bytes = frame.encode();
+        let mut s = ReqScratch::default();
+        decode_propose_req(&bytes, &mut s).unwrap();
+        assert_eq!(s.seqs, vec![1, 2, 3]);
+        assert_eq!(s.n, 3);
+        assert_eq!(&s.rows[..s.n], &[vec![10, 11], vec![12], vec![]]);
+        assert_eq!(s.gammas, vec![2, 1, 0]);
+        assert_eq!(s.seed, 77);
+
+        // A smaller follow-up frame reuses the pooled rows: live count
+        // shrinks, spare rows keep their capacity.
+        let frame2 = Frame {
+            op: 22,
+            subject: Subject::VerifyReq {
+                state_ops: vec![],
+                seqs: vec![9],
+                feed: vec![5],
+                drafts: vec![vec![6, 7, 8]],
+                temps: vec![0.0],
+                budget: None,
+            },
+        };
+        decode_verify_req(&frame2.encode(), &mut s).unwrap();
+        assert_eq!(s.n, 1);
+        assert_eq!(&s.rows[..s.n], &[vec![6, 7, 8]]);
+        assert_eq!(s.feed, vec![5]);
+        assert_eq!(s.budget, None);
+        assert!(s.rows.len() >= 3, "spare rows stay pooled");
+
+        // Truncated bytes give typed errors, never panics.
+        for cut in 0..bytes.len() {
+            assert!(decode_propose_req(&bytes[..cut], &mut s).is_err());
+        }
+    }
+
+    #[test]
+    fn peek_and_patch_op() {
+        let mut bytes = Frame {
+            op: 40,
+            subject: Subject::VerifyReq {
+                state_ops: vec![],
+                seqs: vec![1],
+                feed: vec![2],
+                drafts: vec![vec![3]],
+                temps: vec![0.0],
+                budget: None,
+            },
+        }
+        .encode();
+        assert_eq!(peek_header(&bytes).unwrap(), (40, TAG_VERIFY_REQ));
+        assert!(peek_is_compute(&bytes));
+        patch_op(&mut bytes, 99);
+        let back = Frame::decode(&bytes).unwrap();
+        assert_eq!(back.op, 99);
+        let hb = Frame {
+            op: 1,
+            subject: Subject::Heartbeat { nonce: 7 },
+        }
+        .encode();
+        assert_eq!(peek_header(&hb).unwrap(), (1, TAG_HEARTBEAT));
+        assert!(!peek_is_compute(&hb));
+        assert!(peek_header(&[1, 2, 3]).is_err());
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! engine would have computed. Roles differ only in which ops the
 //! coordinator routes to them and which [`StateOp`]s they apply:
 //!
-//! * the **draft** worker serves propose and applies
+//! * each **draft** rank serves its propose stripe and applies
 //!   `RollbackDraft`/`SyncBase`/`Release`;
 //! * each **verify** rank serves verify and applies
 //!   `RollbackTarget`/`Release`.
@@ -16,15 +16,29 @@
 //! replica never executes verify, so the coordinator pushes the
 //! committed base forward with `SyncBase` instead.
 //!
-//! Retransmit safety: the worker remembers its last `(op, response)`
-//! pair and replays the cached response verbatim when the same op id
-//! arrives again, so a retried frame never re-executes a compute op
-//! (state ops are idempotent, compute ops are not).
+//! Hot path: requests arrive as raw bytes and decode into a pooled
+//! [`wire::ReqScratch`] (no per-frame Vec churn); responses encode
+//! straight from the backend's borrowed outputs into a buffer recycled
+//! from the retransmit ring.
+//!
+//! Retransmit safety: the worker keeps a ring of its last
+//! [`REPLAY_RING`] `(op, response bytes)` pairs and replays the cached
+//! response verbatim when a known op id arrives again, so a retried
+//! frame never re-executes a compute op (state ops are idempotent,
+//! compute ops are not). The ring must cover the coordinator's pipeline
+//! window — `DistConfig::max_in_flight` is validated against it.
+
+use std::collections::VecDeque;
 
 use crate::spec::SdBackend;
 
 use super::transport::WorkerEndpoint;
-use super::wire::{Frame, StateOp, Subject, WorkerStats};
+use super::wire::{self, Frame, StateOp, Subject, WorkerStats};
+
+/// Retransmit-dedup ring depth. Must be at least the coordinator's
+/// maximum in-flight window plus slack for retries of already-answered
+/// ops ([`super::DistConfig`] validates `max_in_flight` against this).
+pub const REPLAY_RING: usize = 32;
 
 /// Which half of the speculative loop this worker serves.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,52 +77,131 @@ pub fn run_worker<B: SdBackend>(
 ) {
     let mut ops_executed: u64 = 0;
     let mut seqs_live: u64 = 0;
-    let mut last: Option<(u64, Frame)> = None;
+    let mut ring: VecDeque<(u64, Vec<u8>)> = VecDeque::with_capacity(REPLAY_RING);
+    let mut scratch = wire::ReqScratch::default();
+    let mut lens_buf: Vec<u64> = Vec::new();
 
-    while let Some(frame) = ep.recv() {
-        // Retransmit of the op we just answered: replay the cached
+    while let Some(bytes) = ep.recv_bytes() {
+        // Undecodable preambles are skipped, as before: the worker
+        // cannot reply to a frame it cannot parse; the coordinator's
+        // retry path re-sends.
+        let Ok((op, tag)) = wire::peek_header(&bytes) else {
+            continue;
+        };
+        // Retransmit of an op still in the ring: replay the cached
         // response instead of re-executing.
-        if let Some((op, resp)) = &last {
-            if *op == frame.op {
-                if !ep.send(resp) {
-                    return;
-                }
-                continue;
+        if let Some((_, resp)) = ring.iter().find(|(o, _)| *o == op) {
+            if !ep.send_bytes(resp.clone()) {
+                return;
             }
+            continue;
         }
 
-        let is_compute = frame.subject.is_compute();
-        let resp_subject = serve(role, &mut backend, &mut seqs_live, frame.subject);
+        // The response buffer is recycled from the ring's evicted slot:
+        // steady-state serving allocates only for payload growth.
+        let mut out = match ring.len() >= REPLAY_RING {
+            true => ring.pop_front().map(|(_, b)| b).unwrap_or_default(),
+            false => Vec::new(),
+        };
+        out.clear();
+
+        let is_compute = matches!(
+            tag,
+            wire::TAG_PROPOSE_REQ | wire::TAG_VERIFY_REQ | wire::TAG_PREFILL_CHUNK
+        );
+        let served = match tag {
+            wire::TAG_PROPOSE_REQ => match wire::decode_propose_req(&bytes, &mut scratch) {
+                Err(_) => None,
+                Ok(()) => {
+                    apply_state_ops(role, &mut backend, &mut seqs_live, &scratch.state_ops);
+                    match backend.propose(
+                        &scratch.seqs,
+                        &scratch.rows[..scratch.n],
+                        &scratch.gammas,
+                        &scratch.temps,
+                        scratch.seed,
+                    ) {
+                        Ok(o) => {
+                            lens_buf.clear();
+                            lens_buf
+                                .extend(scratch.seqs.iter().map(|&s| backend.draft_len(s) as u64));
+                            wire::encode_propose_resp(
+                                &mut out, op, &o.tokens, &o.probs, &lens_buf, o.cost,
+                            );
+                            Some(())
+                        }
+                        Err(e) => {
+                            error_resp(&mut out, op, &format!("propose: {e:#}"));
+                            Some(())
+                        }
+                    }
+                }
+            },
+            wire::TAG_VERIFY_REQ => match wire::decode_verify_req(&bytes, &mut scratch) {
+                Err(_) => None,
+                Ok(()) => {
+                    apply_state_ops(role, &mut backend, &mut seqs_live, &scratch.state_ops);
+                    backend.set_verify_budget(scratch.budget.map(|b| b as usize));
+                    match backend.verify(
+                        &scratch.seqs,
+                        &scratch.feed,
+                        &scratch.rows[..scratch.n],
+                        &scratch.temps,
+                    ) {
+                        Ok(o) => {
+                            lens_buf.clear();
+                            lens_buf
+                                .extend(scratch.seqs.iter().map(|&s| backend.target_len(s) as u64));
+                            wire::encode_verify_resp(&mut out, op, &o.probs, &lens_buf, o.cost);
+                            Some(())
+                        }
+                        Err(e) => {
+                            error_resp(&mut out, op, &format!("verify: {e:#}"));
+                            Some(())
+                        }
+                    }
+                }
+            },
+            // Control / cold ops go through the typed decoder.
+            _ => match Frame::decode(&bytes) {
+                Err(_) => None,
+                Ok(frame) => {
+                    serve_cold(
+                        role, rank, &mut backend, &mut seqs_live, ops_executed, frame, &mut out,
+                    );
+                    Some(())
+                }
+            },
+        };
+        if served.is_none() {
+            continue;
+        }
         if is_compute {
             ops_executed += 1;
         }
-        let resp_subject = match resp_subject {
-            Subject::StatsPull => Subject::StatsResp(WorkerStats {
-                role: role.as_u8(),
-                rank,
-                vocab: backend.vocab() as u64,
-                ops_executed,
-                seqs_live,
-            }),
-            s => s,
-        };
-        let resp = Frame {
-            op: frame.op,
-            subject: resp_subject,
-        };
-        if !ep.send(&resp) {
+        if !ep.send_bytes(out.clone()) {
             return;
         }
-        last = Some((frame.op, resp));
+        ring.push_back((op, out));
 
         if let Some(limit) = opts.die_after_ops {
-            if ops_executed >= limit {
+            if is_compute && ops_executed >= limit {
                 // Simulated crash: the endpoint drops here and the
                 // coordinator sees the slot detach.
                 return;
             }
         }
     }
+}
+
+fn error_resp(out: &mut Vec<u8>, op: u64, message: &str) {
+    *out = Frame {
+        op,
+        subject: Subject::ErrorResp {
+            message: message.to_string(),
+        },
+    }
+    .encode();
 }
 
 /// Apply the state ops this role owns, skip the rest. All owned ops are
@@ -136,90 +229,71 @@ fn apply_state_ops<B: SdBackend>(role: Role, backend: &mut B, seqs_live: &mut u6
     }
 }
 
-fn serve<B: SdBackend>(
+/// Cold-path ops (prefill, admit/evict, stats, heartbeat, misroutes):
+/// typed decode, response encoded into `out`.
+fn serve_cold<B: SdBackend>(
     role: Role,
+    rank: u32,
     backend: &mut B,
     seqs_live: &mut u64,
-    subject: Subject,
-) -> Subject {
-    match subject {
-        Subject::ProposeReq {
-            state_ops,
-            seqs,
-            pending,
-            gammas,
-            temps,
-            seed,
-        } => {
-            apply_state_ops(role, backend, seqs_live, &state_ops);
-            let gammas: Vec<usize> = gammas.iter().map(|&g| g as usize).collect();
-            match backend.propose(&seqs, &pending, &gammas, &temps, seed) {
-                Ok(out) => Subject::ProposeResp {
-                    tokens: out.tokens,
-                    probs: out.probs,
-                    draft_lens: seqs.iter().map(|&s| backend.draft_len(s) as u64).collect(),
-                    cost: out.cost,
-                },
-                Err(e) => Subject::ErrorResp {
-                    message: format!("propose: {e:#}"),
-                },
-            }
-        }
-        Subject::VerifyReq {
-            state_ops,
-            seqs,
-            feed,
-            drafts,
-            temps,
-            budget,
-        } => {
-            apply_state_ops(role, backend, seqs_live, &state_ops);
-            backend.set_verify_budget(budget.map(|b| b as usize));
-            match backend.verify(&seqs, &feed, &drafts, &temps) {
-                Ok(out) => Subject::VerifyResp {
-                    probs: out.probs,
-                    target_lens: seqs.iter().map(|&s| backend.target_len(s) as u64).collect(),
-                    cost: out.cost,
-                },
-                Err(e) => Subject::ErrorResp {
-                    message: format!("verify: {e:#}"),
-                },
-            }
-        }
+    ops_executed: u64,
+    frame: Frame,
+    out: &mut Vec<u8>,
+) {
+    let op = frame.op;
+    match frame.subject {
         Subject::PrefillChunk { state_ops, batch } => {
             apply_state_ops(role, backend, seqs_live, &state_ops);
-            let batch: Vec<(u64, Vec<u32>)> = batch;
             match backend.prefill(&batch) {
                 Ok(cost) => {
                     *seqs_live += batch.len() as u64;
-                    Subject::PrefillDone {
-                        target_lens: batch
-                            .iter()
-                            .map(|(s, _)| backend.target_len(*s) as u64)
-                            .collect(),
-                        draft_lens: batch
-                            .iter()
-                            .map(|(s, _)| backend.draft_len(*s) as u64)
-                            .collect(),
-                        cost,
-                    }
+                    let target_lens: Vec<u64> = batch
+                        .iter()
+                        .map(|(s, _)| backend.target_len(*s) as u64)
+                        .collect();
+                    let draft_lens: Vec<u64> = batch
+                        .iter()
+                        .map(|(s, _)| backend.draft_len(*s) as u64)
+                        .collect();
+                    wire::encode_prefill_done(out, op, &target_lens, &draft_lens, cost);
                 }
-                Err(e) => Subject::ErrorResp {
-                    message: format!("prefill: {e:#}"),
-                },
+                Err(e) => error_resp(out, op, &format!("prefill: {e:#}")),
             }
         }
         Subject::AdmitEvict { state_ops } => {
             apply_state_ops(role, backend, seqs_live, &state_ops);
-            Subject::AdmitEvictAck
+            *out = Frame {
+                op,
+                subject: Subject::AdmitEvictAck,
+            }
+            .encode();
         }
-        Subject::Heartbeat { nonce } => Subject::HeartbeatAck { nonce },
-        // Filled in by the caller with live counters.
-        Subject::StatsPull => Subject::StatsPull,
+        Subject::Heartbeat { nonce } => {
+            *out = Frame {
+                op,
+                subject: Subject::HeartbeatAck { nonce },
+            }
+            .encode();
+        }
+        Subject::StatsPull => {
+            *out = Frame {
+                op,
+                subject: Subject::StatsResp(WorkerStats {
+                    role: role.as_u8(),
+                    rank,
+                    vocab: backend.vocab() as u64,
+                    ops_executed,
+                    seqs_live: *seqs_live,
+                }),
+            }
+            .encode();
+        }
         // Responses / unknown-direction frames: echo an error so the
         // coordinator sees misrouting instead of a hang.
-        other => Subject::ErrorResp {
-            message: format!("unexpected frame for worker: tag {:?}", other),
-        },
+        other => error_resp(
+            out,
+            op,
+            &format!("unexpected frame for worker: tag {other:?}"),
+        ),
     }
 }

@@ -64,6 +64,7 @@ fn print_help() {
                    [--tenants SPEC] [--mix-admission] [--config file.json]\n\
                    [--continuous] [--prefill-chunk N] [--record-trace PATH]\n\
                    [--verify-budget N] [--adaptive-budget] [--dist-workers N]\n\
+                   [--draft-workers N]\n\
          bench     <fig1|fig2|fig3|fig4|fig5|fig6|table1|table2|table3|adaptive|vocab|\n\
                     sharding|ragged|multitenant|continuous|budget>\n\
                    multitenant: [--trace file.csv] [--loads 0.5,1.5,3] [--smoke]\n\
@@ -122,6 +123,7 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
     }
     cfg.verify_budget = args.usize_or("verify-budget", cfg.verify_budget)?;
     cfg.dist_workers = args.usize_or("dist-workers", cfg.dist_workers)?;
+    cfg.draft_workers = args.usize_or("draft-workers", cfg.draft_workers)?;
     if args.flag("adaptive-budget") {
         // Joint (γ, budget) control is a control-plane refinement, so
         // the flag implies the adaptive controller.
@@ -204,12 +206,15 @@ fn serve(args: &Args) -> anyhow::Result<()> {
                 // replica (bit-identical to single-process; the
                 // conformance suite pins it).
                 println!(
-                    "distributed serving: coordinator + 1 draft worker + {} verify rank{} \
-                     (in-process loopback transport)",
+                    "distributed serving: coordinator + {} draft rank{} + {} verify rank{} \
+                     (in-process loopback transport, pipelined)",
+                    cfg.draft_workers,
+                    if cfg.draft_workers == 1 { "" } else { "s" },
                     cfg.dist_workers,
                     if cfg.dist_workers == 1 { "" } else { "s" }
                 );
                 let verify_ranks = cfg.dist_workers;
+                let draft_ranks = cfg.draft_workers;
                 let budget_curve = cfg.verify_budget > 0 || cfg.adaptive_budget;
                 let static_budget = cfg.verify_budget;
                 let seed = cfg.seed;
@@ -227,6 +232,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
                         };
                         let dist_cfg = moesd::dist::DistConfig {
                             verify_ranks,
+                            draft_ranks,
                             ..Default::default()
                         };
                         let mut backend = moesd::dist::DistBackend::launch(dist_cfg, factory)?;

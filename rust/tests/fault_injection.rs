@@ -281,6 +281,84 @@ fn verify_rank_death_respawns_and_replays_losslessly() {
     assert!(status.workers[2].respawns >= 1, "rank-1 slot not respawned");
 }
 
+/// PR 10: death mid-pipeline with a tiny op-log window. By the time the
+/// worker dies the log has been compacted several times, so the respawn
+/// must rebuild the replica from the snapshot plus the O(window) log
+/// tail — not from the full op history — and still land bit-exact with
+/// zero token loss (check_faulted_parity pins both).
+#[test]
+fn death_mid_pipeline_replays_from_snapshot_not_history() {
+    let status = check_faulted_parity(
+        &workload(7010),
+        2,
+        DistConfig {
+            deadline: Duration::from_millis(500),
+            oplog_window: 4,
+            die_after: vec![(Role::Verify, 0, 17)],
+            ..DistConfig::default()
+        },
+        "verify rank 0 dies mid-pipeline, window=4",
+    )
+    .unwrap();
+    assert!(status.respawns >= 1, "no respawn recorded: {status:?}");
+    assert!(
+        status.snapshots >= 1,
+        "window=4 never snapshotted before the death: {status:?}"
+    );
+    // Bounded replay: per respawn, at most the snapshot (one synthesized
+    // prefill chunk per 256 live seqs + the draft-side clamp) plus the
+    // window and the few ops logged since the last cut — far below the
+    // 17+ ops the dead worker had executed.
+    assert!(
+        status.replayed_ops <= status.respawns * 16,
+        "replay was not O(window): {status:?}"
+    );
+    assert!(status.workers.iter().all(|h| h.alive));
+}
+
+/// Same ladder with draft replicas striped: the dying worker is one of
+/// two draft ranks, so its replay path exercises the per-rank stripe
+/// frames kept in the compacted log.
+#[test]
+fn striped_draft_death_respawns_losslessly() {
+    let w = workload(7011);
+    let clean = clean_fingerprint(&w);
+    let mut e = Engine::new(
+        engine_config(&w),
+        faulty_backend(
+            &w,
+            1,
+            DistConfig {
+                deadline: Duration::from_millis(500),
+                draft_ranks: 2,
+                oplog_window: 6,
+                die_after: vec![(Role::Draft, 1, 5)],
+                ..DistConfig::default()
+            },
+        ),
+    );
+    submit_all(&mut e, &w);
+    let faulted = fingerprint(&mut e).unwrap();
+    // Striped drafting re-prices the clock, so only the tokens are
+    // comparable against the clean run — and they must match exactly.
+    let tokens = |fp: &Fingerprint| {
+        fp.completions
+            .iter()
+            .map(|(id, t, _, _)| (*id, t.clone()))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(
+        tokens(&clean),
+        tokens(&faulted),
+        "striped-draft death lost or corrupted tokens"
+    );
+    let status = e.backend().dist_status().unwrap();
+    assert!(status.respawns >= 1, "no respawn recorded: {status:?}");
+    // Slot 1 is draft rank 1.
+    assert!(status.workers[1].respawns >= 1, "rank-1 draft not respawned");
+    assert!(status.workers.iter().all(|h| h.alive));
+}
+
 #[test]
 fn combined_chaos_still_bit_exact() {
     // Everything at once: dropped requests, delayed responses, and a

@@ -15,6 +15,18 @@
 //!    and only moves the clock (forward), by pricing the verify fan-out
 //!    hop with `ShardingSpec::comm_time`.
 //!
+//! PR 10 adds the hot-path overhaul properties:
+//!
+//! 5. **Pipelining is pure latency** — overlapped in-flight ops produce
+//!    a run bit-for-bit identical to draining after every op (serial),
+//!    for every verify-rank count × draft-replica count.
+//! 6. **Compaction is invisible** — a tiny op-log window forces many
+//!    snapshot+truncate cycles and still reproduces the single-process
+//!    run exactly, while bounding the log.
+//! 7. **Draft scale-out is lossless** — striped propose across N draft
+//!    replicas may re-price the clock (max-combined stripe costs) but
+//!    the emitted tokens are still the deterministic oracle chains.
+//!
 //! Mirrors the PR-7 features-off ≡ lock-step suite: same workload
 //! generator, same fingerprint.
 
@@ -105,22 +117,25 @@ fn submit_all<B: SdBackend>(e: &mut Engine<B>, w: &Workload) {
     }
 }
 
-fn dist_backend(w: &Workload, ranks: usize, fabric: DistFabric) -> DistBackend<SyntheticLm> {
+fn dist_backend_with(w: &Workload, cfg: DistConfig) -> DistBackend<SyntheticLm> {
     let (alpha, seed) = (w.alpha, w.seed);
     let factory = move || -> anyhow::Result<SyntheticLm> {
         let target = ExecSim::new(presets::qwen2_57b_a14b(), platform_2x_gpu_a());
         let draft = ExecSim::new(presets::qwen2_0_5b(), platform_2x_gpu_a());
         Ok(SyntheticLm::new(target, draft, alpha, seed))
     };
-    DistBackend::launch(
+    DistBackend::launch(cfg, factory).expect("dist launch")
+}
+
+fn dist_backend(w: &Workload, ranks: usize, fabric: DistFabric) -> DistBackend<SyntheticLm> {
+    dist_backend_with(
+        w,
         DistConfig {
             verify_ranks: ranks,
             fabric,
             ..Default::default()
         },
-        factory,
     )
-    .expect("dist launch")
 }
 
 /// Everything the parity claim compares: per-request outcomes, virtual
@@ -159,8 +174,8 @@ fn fingerprint<B: SdBackend>(e: &mut Engine<B>) -> Result<Fingerprint, String> {
 
 fn diverged(what: &str, single: &Fingerprint, dist: &Fingerprint) -> String {
     format!(
-        "{what} diverged from single-process:\n  single: rounds {} clock {} preempt {} \
-         draft {} verify {} reject {} prefill {}\n  dist:   rounds {} clock {} preempt {} \
+        "{what} diverged:\n  expected: rounds {} clock {} preempt {} \
+         draft {} verify {} reject {} prefill {}\n  actual:   rounds {} clock {} preempt {} \
          draft {} verify {} reject {} prefill {}",
         single.rounds,
         single.clock,
@@ -395,6 +410,164 @@ fn prop_sharded_fabric_prices_the_hop_without_touching_tokens() {
             )?;
         }
         ensure(true, "")
+    });
+}
+
+/// Pipelining must be a pure wall-clock optimisation: multiple in-flight
+/// ops, out-of-order straggler completion, and overlapped admit/evict
+/// acks change no computed value. Every (verify ranks, draft replicas)
+/// cell of the grid must be bit-for-bit identical to the serial
+/// (drain-after-every-op) coordinator, which PR 9 already pinned to the
+/// single-process engine.
+#[test]
+fn prop_dist_pipelined_equals_serial_bit_for_bit() {
+    let mut runner = Runner::new("dist_pipelined_vs_serial");
+    runner.run(3, |g| {
+        let w = gen_workload(g);
+        for d in 1..=4usize {
+            for dw in [1usize, 2] {
+                let cfg = |pipeline: bool| DistConfig {
+                    verify_ranks: d,
+                    draft_ranks: dw,
+                    pipeline,
+                    ..Default::default()
+                };
+                let mut serial = Engine::new(
+                    engine_config(&w, PipelineConfig::default(), HashMap::new()),
+                    dist_backend_with(&w, cfg(false)),
+                );
+                submit_all(&mut serial, &w);
+                let fp_serial = fingerprint(&mut serial)?;
+                let mut piped = Engine::new(
+                    engine_config(&w, PipelineConfig::default(), HashMap::new()),
+                    dist_backend_with(&w, cfg(true)),
+                );
+                submit_all(&mut piped, &w);
+                let fp_piped = fingerprint(&mut piped)?;
+                if fp_serial != fp_piped {
+                    return Err(diverged(
+                        &format!("pipelined(d={d}, draft={dw}) vs serial"),
+                        &fp_serial,
+                        &fp_piped,
+                    ));
+                }
+            }
+        }
+        ensure(true, "")
+    });
+}
+
+/// Op-log compaction must be invisible to the computation. A window of 4
+/// forces a snapshot+truncate cycle every couple of rounds; the run must
+/// still be bit-for-bit the single-process run, the status counters must
+/// show compaction actually fired, and the surviving log must stay
+/// bounded by the window (plus the few ops logged since the last cut).
+#[test]
+fn dist_compaction_is_bit_invisible_and_bounds_the_log() {
+    let w = Workload {
+        alpha: 0.8,
+        gamma: 3,
+        max_batch: 4,
+        blocks: 48,
+        seed: 4242,
+        specs: vec![(6, 20, 0.0), (4, 16, 0.01), (9, 24, 0.02), (5, 12, 0.03)],
+    };
+    let mut single = Engine::new(
+        engine_config(&w, PipelineConfig::default(), HashMap::new()),
+        synthetic(&w),
+    );
+    submit_all(&mut single, &w);
+    let fp_single = fingerprint(&mut single).unwrap();
+
+    let mut dist = Engine::new(
+        engine_config(&w, PipelineConfig::default(), HashMap::new()),
+        dist_backend_with(
+            &w,
+            DistConfig {
+                verify_ranks: 2,
+                oplog_window: 4,
+                ..Default::default()
+            },
+        ),
+    );
+    submit_all(&mut dist, &w);
+    let fp_dist = fingerprint(&mut dist).unwrap();
+    assert_eq!(fp_single, fp_dist, "compaction changed computed state");
+
+    let status = dist.backend().dist_status().unwrap();
+    assert!(
+        status.snapshots > 0,
+        "window=4 never triggered a snapshot: {status:?}"
+    );
+    assert!(
+        status.compacted_ops > 0,
+        "snapshot retired no log entries: {status:?}"
+    );
+    // The log is checked against the window at every compute-op entry,
+    // and at most one round's worth of ops (propose + verify + state-op
+    // flushes) lands between checks.
+    assert!(
+        status.oplog_len <= 12,
+        "op log unbounded despite window=4: {status:?}"
+    );
+    // With 2 verify ranks on a first-response quorum, every verify op
+    // leaves a straggler to complete in flight.
+    assert!(
+        status.pipelined > 0,
+        "no op completed in flight: {status:?}"
+    );
+}
+
+/// Draft scale-out: striped propose across two draft replicas re-prices
+/// the round (max over stripe costs; each stripe draws its own RNG
+/// stream) so the clock may differ from single-process — but rejection
+/// sampling is lossless at temperature 0, so the emitted tokens must
+/// still be exactly the deterministic oracle chains.
+#[test]
+fn prop_dist_draft_scaleout_keeps_tokens_lossless() {
+    let mut runner = Runner::new("dist_draft_scaleout");
+    runner.run(6, |g| {
+        let w = gen_workload(g);
+        let d = g.usize_in(1, 2);
+        let mut e = Engine::new(
+            engine_config(&w, PipelineConfig::default(), HashMap::new()),
+            dist_backend_with(
+                &w,
+                DistConfig {
+                    verify_ranks: d,
+                    draft_ranks: 2,
+                    ..Default::default()
+                },
+            ),
+        );
+        submit_all(&mut e, &w);
+        let fp = fingerprint(&mut e)?;
+        ensure(
+            fp.completions.len() == w.specs.len(),
+            format!(
+                "lost requests: {} of {} completed",
+                fp.completions.len(),
+                w.specs.len()
+            ),
+        )?;
+        let reference = synthetic(&w);
+        for (id, tokens, _, _) in &fp.completions {
+            let (prompt_len, max_new, _) = w.specs[*id as usize];
+            ensure(
+                tokens.len() == max_new,
+                format!("seq {id}: {} tokens != {max_new}", tokens.len()),
+            )?;
+            ensure(
+                *tokens == reference.expected_chain(*id, prompt_len, max_new),
+                format!("seq {id}: striped-draft tokens diverge from oracle chain"),
+            )?;
+        }
+        let status = e.backend().dist_status().expect("dist status");
+        ensure(
+            status.workers.len() == 2 + d,
+            format!("fleet is {} workers, want {}", status.workers.len(), 2 + d),
+        )?;
+        ensure(status.respawns == 0, "scale-out run recorded respawns")
     });
 }
 
